@@ -1,0 +1,85 @@
+//! E1 — the paper's headline result (Figure 8): the rotating-root
+//! broadcast timing application (Fig. 7) on the 48-process grid
+//! (16 procs × {SDSC-SP, ANL-SP, ANL-O2K}), comparing the MPICH binomial
+//! tree, MagPIe-style machine/site 2-level trees, and the multilevel
+//! approach across message sizes.
+//!
+//! ```sh
+//! cargo run --release --example fig8_grid_broadcast [-- --xla]
+//! ```
+//!
+//! With `--xla` the MPI_Reduce-free broadcast path is unchanged, but the
+//! run also verifies the PJRT combiner wiring by executing one reduce per
+//! size through the AOT-compiled Pallas kernels.
+
+use gridcollect::coordinator::experiment;
+use gridcollect::coordinator::timing_app;
+use gridcollect::netsim::{Combiner, ReduceOp};
+use gridcollect::runtime::{Runtime, XlaCombiner};
+use gridcollect::tree::Strategy;
+use gridcollect::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    let use_xla = std::env::args().any(|a| a == "--xla");
+    let sizes = timing_app::default_sizes();
+
+    let xla = if use_xla {
+        let rt = Runtime::open_default()?;
+        println!("PJRT platform: {}", rt.platform());
+        Some(rt)
+    } else {
+        None
+    };
+    let xla_combiner = match &xla {
+        Some(rt) => Some(XlaCombiner::open_default(rt)?),
+        None => None,
+    };
+    let combiner: &dyn Combiner = match &xla_combiner {
+        Some(c) => c,
+        None => experiment::native(),
+    };
+
+    println!("E1 / Figure 8 — rotating-root MPI_Bcast, 48 procs, 2 sites, 3 machines\n");
+    let (table, pts) = experiment::fig8_table(&sizes, combiner)?;
+    print!("{}", table.to_markdown());
+
+    // The paper's qualitative claims, checked programmatically:
+    println!("\nshape checks:");
+    for &bytes in &sizes {
+        let at = |s: Strategy| {
+            pts.iter().find(|p| p.bytes == bytes && p.strategy == s).unwrap().total_us
+        };
+        let ok = at(Strategy::Multilevel) <= at(Strategy::TwoLevelSite) + 1e-6
+            && at(Strategy::TwoLevelSite) < at(Strategy::Unaware)
+            && at(Strategy::TwoLevelMachine) < at(Strategy::Unaware);
+        println!(
+            "  {:>9}: multilevel {:>11} vs binomial {:>11} ({:.2}x)  [{}]",
+            fmt::bytes(bytes),
+            fmt::time_us(at(Strategy::Multilevel)),
+            fmt::time_us(at(Strategy::Unaware)),
+            at(Strategy::Unaware) / at(Strategy::Multilevel),
+            if ok { "ordering OK" } else { "ORDERING VIOLATION" },
+        );
+    }
+
+    // Exercise the reduce path through the selected combiner.
+    let comm = experiment::paper_comm();
+    let contributions: Vec<Vec<f32>> =
+        (0..comm.size()).map(|r| vec![r as f32; 16384]).collect();
+    let engine = gridcollect::collectives::CollectiveEngine::new(
+        &comm,
+        experiment::paper_params(),
+        Strategy::Multilevel,
+    )
+    .with_combiner(combiner);
+    let out = engine.reduce(0, ReduceOp::Sum, &contributions)?;
+    let expect = (0..comm.size()).map(|r| r as f32).sum::<f32>();
+    assert!((out.data[0][0] - expect).abs() < 1e-3);
+    println!(
+        "\nreduce(sum) through {} combiner verified: {} elements, WAN msgs {}",
+        combiner.name(),
+        16384,
+        out.sim.wan_messages()
+    );
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! E6 — the RSL front-end tour (Figures 5 and 6): parse the paper's own
+//! job scripts, show how `GLOBUS_LAN_ID` changes the derived clustering,
+//! and demonstrate the `GLOBUS_SITE_ID` 4-level extension plus
+//! communicator splitting with clustering propagation (§3.1).
+//!
+//! ```sh
+//! cargo run --release --example rsl_tour
+//! ```
+
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::model::presets;
+use gridcollect::topology::{rsl, Communicator};
+use gridcollect::tree::Strategy;
+use gridcollect::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    // --- Figure 6: with GLOBUS_LAN_ID ---
+    println!("=== Figure 6 script (GLOBUS_LAN_ID groups the NCSA O2Ks) ===");
+    let fig6 = rsl::topology_from_script(rsl::FIG6_SCRIPT)?;
+    describe(&fig6);
+
+    // --- Figure 5: same script, no LAN ids ---
+    println!("\n=== Figure 5 script (no GLOBUS_LAN_ID: machine-only clustering) ===");
+    let fig5_src = rsl::FIG6_SCRIPT.replace("(GLOBUS_LAN_ID NCSAlan)", "");
+    let fig5 = rsl::topology_from_script(&fig5_src)?;
+    describe(&fig5);
+
+    // The observable difference: broadcast cost from an SDSC root.
+    let data = vec![1.0f32; 16384];
+    for (name, spec) in [("fig5", &fig5), ("fig6", &fig6)] {
+        let comm = Communicator::world(spec);
+        let engine =
+            CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        let out = engine.bcast(0, &data)?;
+        println!(
+            "{name}: multilevel bcast {} — WAN msgs {} (LAN knowledge saves a WAN message)",
+            fmt::time_us(out.sim.makespan_us),
+            out.sim.wan_messages()
+        );
+    }
+
+    // --- 4-level extension ---
+    println!("\n=== GLOBUS_SITE_ID extension: 4-level clustering ===");
+    let deep = rsl::topology_from_script(
+        r#"
+        ( &(resourceManagerContact="sp.sdsc.edu") (count=4)
+          (environment=(GLOBUS_DUROC_SUBJOB_INDEX 0)
+                       (GLOBUS_LAN_ID sdsclan)(GLOBUS_SITE_ID sdsc)) )
+        ( &(resourceManagerContact="sp.anl.gov") (count=4)
+          (environment=(GLOBUS_DUROC_SUBJOB_INDEX 1)
+                       (GLOBUS_LAN_ID mcslan)(GLOBUS_SITE_ID anl)) )
+        ( &(resourceManagerContact="o2k.anl.gov") (count=4)
+          (environment=(GLOBUS_DUROC_SUBJOB_INDEX 2)
+                       (GLOBUS_LAN_ID mcslan)(GLOBUS_SITE_ID anl)) )
+        ( &(resourceManagerContact="x.anl.gov") (count=4)
+          (environment=(GLOBUS_DUROC_SUBJOB_INDEX 3)
+                       (GLOBUS_LAN_ID cslan)(GLOBUS_SITE_ID anl)) )
+        "#,
+    )?;
+    describe(&deep);
+
+    // --- Comm split with clustering propagation (§3.1) ---
+    println!("\n=== MPI_Comm_split propagates the multilevel clustering ===");
+    let comm = Communicator::world(&fig6);
+    let split = comm.split(|r| (Some((r % 2) as i64), r as i64))?;
+    for (i, sub) in split.iter().enumerate() {
+        println!(
+            "  color {i}: {} ranks, {} levels, site clusters {:?}",
+            sub.size(),
+            sub.clustering().n_levels(),
+            sub.clustering().clusters_at(1)
+        );
+        // Collectives work on the derived communicator directly.
+        let engine = CollectiveEngine::new(sub, presets::paper_grid(), Strategy::Multilevel);
+        let out = engine.bcast(0, &data)?;
+        println!(
+            "    multilevel bcast on sub-communicator: {} (WAN msgs {})",
+            fmt::time_us(out.sim.makespan_us),
+            out.sim.wan_messages()
+        );
+    }
+    Ok(())
+}
+
+fn describe(spec: &gridcollect::topology::TopologySpec) {
+    println!(
+        "  {} machines, {} processes, {} clustering levels",
+        spec.machines().len(),
+        spec.n_procs(),
+        spec.n_levels()
+    );
+    for m in spec.machines() {
+        println!(
+            "    ranks {:>2}..{:<2} {} (path: {})",
+            m.first_rank,
+            m.first_rank + m.procs,
+            m.name,
+            m.path.join(" / ")
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! E3–E5 — tree-shape explorer: renders the binomial trees of Fig. 2, the
+//! two 2-level trees of Fig. 3, and the multilevel tree of Fig. 4, with
+//! per-link-class message accounting for each strategy.
+//!
+//! ```sh
+//! cargo run --release --example tree_explorer
+//! ```
+
+use gridcollect::coordinator::experiment;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::{Strategy, TreeShape};
+
+fn main() -> anyhow::Result<()> {
+    // --- Fig. 2: binomial trees B0..B3 ---
+    println!("=== Figure 2: binomial trees B0..B3 ===");
+    for k in 0..=3u32 {
+        let n = 1usize << k;
+        let ids: Vec<usize> = (0..n).collect();
+        let t = TreeShape::Binomial.build(n, &ids, 0)?;
+        println!("B{k} ({n} nodes):");
+        print!("{}", t.render(|r| format!("{r}")));
+    }
+
+    // --- Figs. 3a/3b/4: strategy trees on the Fig. 1 topology ---
+    println!("\n=== Figures 3a, 3b, 4: strategy trees on the Fig. 1 grid ===");
+    let spec = TopologySpec::paper_fig1();
+    print!("{}", experiment::render_strategy_trees(&spec, 0)?);
+
+    // --- message accounting (E4/E5): WAN/LAN crossings per strategy ---
+    println!("=== per-link-class accounting for a 64 KiB broadcast ===");
+    let comm = Communicator::world(&spec);
+    for s in Strategy::ALL {
+        println!("--- {} ---", s.name());
+        print!("{}", experiment::message_accounting(&comm, s, 65536)?.to_markdown());
+    }
+
+    // --- postal-model shapes (§6): flat vs fibonacci vs binomial ---
+    println!("\n=== §6: postal-optimal shapes flatten as λ grows ===");
+    let ids: Vec<usize> = (0..12).collect();
+    for (label, shape) in [
+        ("binomial (λ=1)", TreeShape::Binomial),
+        ("fibonacci λ=2", TreeShape::Fibonacci(2)),
+        ("fibonacci λ=4", TreeShape::Fibonacci(4)),
+        ("flat (λ→∞)", TreeShape::Flat),
+    ] {
+        let t = shape.build(12, &ids, 0)?;
+        println!(
+            "{label:<16} root fan-out {:>2}, height {}",
+            t.children(0).len(),
+            t.height()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,135 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README).
+
+Run once via ``make artifacts``; the Rust binary is self-contained
+afterwards. Also writes ``artifacts/manifest.tsv`` describing every
+artifact (whitespace-separated, trivially parseable without a JSON
+library):
+
+    name  file  kind  op  args...  in  <shapes>  out  <shapes>
+
+Shapes are ``f32[AxB]``-style strings, comma-separated per argument.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+#: payload chunk length (f32 elements) for the combiner artifacts; the
+#: Rust combiner pads/chunks arbitrary payloads to this size. 16384 f32
+#: = 64 KiB per buffer = comfortably VMEM-resident at (8,128) tiling.
+COMBINE_N = 16384
+#: fused tree-node fan-in for the k-way combine artifact.
+COMBINE_K = 8
+
+OPS = ("sum", "max", "min", "prod")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(s) -> str:
+    return f"f32[{'x'.join(str(d) for d in s.shape)}]"
+
+
+def lower_entry(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)
+
+
+def build_artifacts():
+    """Yield (name, kind, meta, fn, example_args, out_shapes)."""
+    n = COMBINE_N
+    f32 = jnp.float32
+    for op in OPS:
+        yield (
+            f"combine2_{op}_{n}",
+            "combine2",
+            {"op": op, "n": n},
+            model.combine2_fn(op, n),
+            (jax.ShapeDtypeStruct((n,), f32), jax.ShapeDtypeStruct((n,), f32)),
+            [(n,)],
+        )
+    yield (
+        f"combine{COMBINE_K}_sum_{n}",
+        "combine_k",
+        {"op": "sum", "n": n, "k": COMBINE_K},
+        model.combine_k_fn("sum", COMBINE_K, n),
+        (jax.ShapeDtypeStruct((COMBINE_K, n), f32),),
+        [(n,)],
+    )
+    p = model.mlp_padded_n()
+    d_in, d_h, d_out = model.MLP_SIZES
+    b = model.MLP_BATCH
+    yield (
+        "mlp_train_step",
+        "train_step",
+        {"params": p, "batch": b, "d_in": d_in, "d_h": d_h, "d_out": d_out},
+        model.train_step_fn(),
+        (
+            jax.ShapeDtypeStruct((p,), f32),
+            jax.ShapeDtypeStruct((b, d_in), f32),
+            jax.ShapeDtypeStruct((b, d_out), f32),
+        ),
+        [(p,), ()],
+    )
+    yield (
+        "mlp_sgd_step",
+        "sgd_step",
+        {"params": p},
+        model.sgd_step_fn(),
+        (
+            jax.ShapeDtypeStruct((p,), f32),
+            jax.ShapeDtypeStruct((p,), f32),
+            jax.ShapeDtypeStruct((), f32),
+        ),
+        [(p,)],
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="only build artifacts whose name contains this")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, kind, meta, fn, example_args, out_shapes in build_artifacts():
+        if args.only and args.only not in name:
+            continue
+        text = lower_entry(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        ins = ",".join(_shape_str(s) for s in example_args)
+        outs = ",".join(f"f32[{'x'.join(str(d) for d in s)}]" for s in out_shapes)
+        meta_str = ";".join(f"{k}={v}" for k, v in sorted(meta.items()))
+        manifest_lines.append(f"{name}\t{name}.hlo.txt\t{kind}\t{meta_str}\t{ins}\t{outs}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# name\tfile\tkind\tmeta\tinputs\toutputs\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest} ({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""L1 — Pallas reduction-combine kernels.
+
+The compute hot-spot of the collective stack: the elementwise combine
+executed at every interior node of an `MPI_Reduce` tree, plus the fused
+k-way variant (one kernel invocation per tree node instead of k-1
+accumulator re-reads) and the `axpy` SGD-update kernel used by the
+training example.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): buffers are viewed as
+`(rows, 128)` — the VPU lane width — and tiled in `(block_rows, 128)`
+VMEM blocks via `BlockSpec`. On CPU the kernels run under
+``interpret=True`` (Mosaic custom-calls cannot execute on the CPU PJRT
+plugin); the *structure* (one HBM pass, aligned tiles) is what carries
+to real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128  # TPU VPU lane width; all kernels tile the last dim to this.
+
+OPS = {
+    "sum": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "prod": jnp.multiply,
+}
+
+REDUCERS = {
+    "sum": jnp.sum,
+    "max": jnp.max,
+    "min": jnp.min,
+    "prod": jnp.prod,
+}
+
+
+def _check_n(n: int, block_rows: int) -> int:
+    """Validate n against the tiling; return the row count."""
+    if n % LANE != 0:
+        raise ValueError(f"n={n} must be a multiple of {LANE}")
+    rows = n // LANE
+    if rows % block_rows != 0:
+        raise ValueError(f"rows={rows} must be a multiple of block_rows={block_rows}")
+    return rows
+
+
+def combine2(op: str, n: int, block_rows: int = 8):
+    """Pairwise combine: f(x[n], y[n]) -> op(x, y) elementwise.
+
+    Grid over row-blocks of a (rows, LANE) view; each block is combined
+    entirely in VMEM.
+    """
+    fn = OPS[op]
+    rows = _check_n(n, block_rows)
+
+    def kernel(x_ref, y_ref, o_ref):
+        o_ref[...] = fn(x_ref[...], y_ref[...])
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=True,
+    )
+
+    def apply(x, y):
+        x2 = x.reshape(rows, LANE)
+        y2 = y.reshape(rows, LANE)
+        return call(x2, y2).reshape(n)
+
+    return apply
+
+
+def combine_k(op: str, k: int, n: int, block_rows: int = 8):
+    """Fused k-way combine: f(xs[k, n]) -> op over axis 0.
+
+    One kernel invocation streams all k child buffers through VMEM once —
+    the HBM analogue of the paper's minimize-slowest-channel rule.
+    """
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    reducer = REDUCERS[op]
+    rows = _check_n(n, block_rows)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = reducer(x_ref[...], axis=0)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((k, block_rows, LANE), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=True,
+    )
+
+    def apply(xs):
+        xs3 = xs.reshape(k, rows, LANE)
+        return call(xs3).reshape(n)
+
+    return apply
+
+
+def axpy(n: int, block_rows: int = 8):
+    """SGD update kernel: f(p[n], g[n], lr[1,1]) -> p - lr * g.
+
+    `lr` arrives as a (1, 1) scalar block in SMEM-style placement.
+    """
+    rows = _check_n(n, block_rows)
+
+    def kernel(p_ref, g_ref, lr_ref, o_ref):
+        o_ref[...] = p_ref[...] - lr_ref[0, 0] * g_ref[...]
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=True,
+    )
+
+    def apply(p, g, lr):
+        p2 = p.reshape(rows, LANE)
+        g2 = g.reshape(rows, LANE)
+        lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+        return call(p2, g2, lr2).reshape(n)
+
+    return apply
+
+
+@functools.lru_cache(maxsize=None)
+def combine2_jit(op: str, n: int, block_rows: int = 8):
+    """Jitted, cached combine2 (used by tests and aot)."""
+    return jax.jit(combine2(op, n, block_rows))
+
+
+@functools.lru_cache(maxsize=None)
+def combine_k_jit(op: str, k: int, n: int, block_rows: int = 8):
+    return jax.jit(combine_k(op, k, n, block_rows))
+
+
+@functools.lru_cache(maxsize=None)
+def axpy_jit(n: int, block_rows: int = 8):
+    return jax.jit(axpy(n, block_rows))

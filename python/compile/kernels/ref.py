@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in `combine.py` is checked against these references by
+`python/tests/test_kernels.py` (hypothesis sweeps shapes and operators);
+this is the CORE correctness signal for the compute layer.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+OPS = {
+    "sum": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "prod": jnp.multiply,
+}
+
+REDUCERS = {
+    "sum": jnp.sum,
+    "max": jnp.max,
+    "min": jnp.min,
+    "prod": jnp.prod,
+}
+
+
+def ref_combine2(op: str, x, y):
+    """Elementwise op(x, y)."""
+    return OPS[op](x, y)
+
+
+def ref_combine_k(op: str, xs):
+    """Reduce over axis 0 of xs[k, n]."""
+    return REDUCERS[op](xs, axis=0)
+
+
+def ref_axpy(p, g, lr):
+    """p - lr * g."""
+    return p - jnp.float32(lr) * g

@@ -1,0 +1,136 @@
+"""L2 — JAX compute graphs, AOT-lowered to HLO for the Rust runtime.
+
+Three graph families, all calling the L1 Pallas kernels where the compute
+is hot:
+
+- ``combine2_fn`` / ``combine_k_fn`` — the MPI_Reduce payload combine
+  (wraps `kernels.combine`), executed by `rust/src/runtime/combiner.rs`
+  at every interior node of a reduction tree.
+- ``train_step_fn`` — fwd+bwd+loss of the data-parallel MLP used by the
+  end-to-end example (`examples/grid_training.rs`). Parameters travel as
+  one flat, 128-aligned f32 vector so the Rust side can allreduce them
+  with the combine kernels.
+- ``sgd_step_fn`` — the parameter update, running the Pallas ``axpy``
+  kernel.
+
+Python never runs at request time: `aot.py` lowers these once into
+`artifacts/*.hlo.txt`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import combine as K
+
+# ----------------------------------------------------------------------
+# Reduce-combine graphs (wrap L1 kernels 1:1)
+# ----------------------------------------------------------------------
+
+
+def combine2_fn(op: str, n: int, block_rows: int = 8):
+    """(x[n], y[n]) -> (op(x, y),)"""
+    k = K.combine2(op, n, block_rows)
+
+    def fn(x, y):
+        return (k(x, y),)
+
+    return fn
+
+
+def combine_k_fn(op: str, k: int, n: int, block_rows: int = 8):
+    """(xs[k, n],) -> (op over axis 0,)"""
+    kk = K.combine_k(op, k, n, block_rows)
+
+    def fn(xs):
+        return (kk(xs),)
+
+    return fn
+
+
+# ----------------------------------------------------------------------
+# MLP for the end-to-end data-parallel training example
+# ----------------------------------------------------------------------
+
+#: (input dim, hidden dim, classes) — compact enough for CPU-interpret
+#: execution, large enough that the allreduced gradient payload (~80 KiB)
+#: exercises multi-chunk combining.
+MLP_SIZES = (64, 256, 10)
+MLP_BATCH = 32
+
+
+def mlp_n_params(sizes=MLP_SIZES) -> int:
+    d_in, d_h, d_out = sizes
+    return d_in * d_h + d_h + d_h * d_out + d_out
+
+
+def mlp_padded_n(sizes=MLP_SIZES) -> int:
+    """Flat parameter vector length, padded to a multiple of 1024 so the
+    Pallas kernels' (8, 128) tiling applies cleanly."""
+    n = mlp_n_params(sizes)
+    return (n + 1023) // 1024 * 1024
+
+
+def _unflatten(flat, sizes=MLP_SIZES):
+    d_in, d_h, d_out = sizes
+    i = 0
+    w1 = flat[i : i + d_in * d_h].reshape(d_in, d_h)
+    i += d_in * d_h
+    b1 = flat[i : i + d_h]
+    i += d_h
+    w2 = flat[i : i + d_h * d_out].reshape(d_h, d_out)
+    i += d_h * d_out
+    b2 = flat[i : i + d_out]
+    return w1, b1, w2, b2
+
+
+def mlp_loss(flat, x, y_onehot, sizes=MLP_SIZES):
+    """Softmax cross-entropy of a 2-layer tanh MLP.
+
+    flat: [padded_n] f32, x: [batch, d_in], y_onehot: [batch, d_out].
+    """
+    w1, b1, w2, b2 = _unflatten(flat, sizes)
+    h = jnp.tanh(x @ w1 + b1)
+    logits = h @ w2 + b2
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def train_step_fn(sizes=MLP_SIZES, batch=MLP_BATCH):
+    """(flat[p], x[batch,d_in], y[batch,d_out]) -> (grads[p], loss[])"""
+    padded = mlp_padded_n(sizes)
+
+    def fn(flat, x, y_onehot):
+        loss, grads = jax.value_and_grad(mlp_loss)(flat, x, y_onehot, sizes)
+        # padding region has zero gradient by construction
+        return grads.reshape(padded), loss
+
+    return fn
+
+
+def sgd_step_fn(sizes=MLP_SIZES, block_rows: int = 8):
+    """(flat[p], grads[p], lr[]) -> (flat - lr*grads,) via the Pallas axpy."""
+    padded = mlp_padded_n(sizes)
+    ax = K.axpy(padded, block_rows)
+
+    def fn(flat, grads, lr):
+        return (ax(flat, grads, lr),)
+
+    return fn
+
+
+def mlp_init(seed: int, sizes=MLP_SIZES):
+    """Glorot-ish init, returned as the padded flat vector (host-side
+    convenience for tests; the Rust driver uses its own deterministic
+    init with the same scheme)."""
+    d_in, d_h, d_out = sizes
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (d_in, d_h), jnp.float32) * jnp.sqrt(2.0 / d_in)
+    w2 = jax.random.normal(k2, (d_h, d_out), jnp.float32) * jnp.sqrt(2.0 / d_h)
+    flat = jnp.concatenate(
+        [w1.reshape(-1), jnp.zeros(d_h), w2.reshape(-1), jnp.zeros(d_out)]
+    )
+    pad = mlp_padded_n(sizes) - flat.shape[0]
+    return jnp.concatenate([flat, jnp.zeros(pad)]).astype(jnp.float32)

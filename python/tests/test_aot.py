@@ -1,0 +1,75 @@
+"""AOT lowering smoke tests: every artifact lowers to parseable HLO text
+with the expected entry computation signature."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_all_artifacts_lower():
+    built = list(aot.build_artifacts())
+    names = [b[0] for b in built]
+    assert "combine2_sum_16384" in names
+    assert "mlp_train_step" in names
+    assert "mlp_sgd_step" in names
+    assert f"combine{aot.COMBINE_K}_sum_{aot.COMBINE_N}" in names
+    assert len(names) == len(set(names))
+
+
+def test_combine2_hlo_text_structure():
+    _, _, _, fn, args, _ = next(
+        b for b in aot.build_artifacts() if b[0] == "combine2_sum_16384"
+    )
+    text = aot.lower_entry(fn, args)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # two f32[16384] params in some order
+    assert text.count("f32[16384]") >= 3  # 2 inputs + output path
+    # return_tuple=True: root is a tuple
+    assert "(f32[16384]" in text
+
+
+def test_train_step_hlo_has_expected_shapes():
+    _, _, _, fn, args, _ = next(b for b in aot.build_artifacts() if b[0] == "mlp_train_step")
+    text = aot.lower_entry(fn, args)
+    p = model.mlp_padded_n()
+    b, d_in = model.MLP_BATCH, model.MLP_SIZES[0]
+    assert f"f32[{p}]" in text
+    assert f"f32[{b},{d_in}]" in text
+
+
+def test_lowered_combine_executes_same_as_eager():
+    """Round-trip the stablehlo -> XlaComputation conversion and execute
+    through jax's own client to make sure the converted module is valid."""
+    from jax._src.lib import xla_client as xc
+
+    n = 1024
+    fn = model.combine2_fn("sum", n)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n,), jnp.float32), jax.ShapeDtypeStruct((n,), jnp.float32)
+    )
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text()
+    assert "HloModule" in text and "f32[1024]" in text
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n,)).astype(np.float32)
+    y = rng.normal(size=(n,)).astype(np.float32)
+    (eager,) = fn(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(eager), x + y, rtol=1e-6)
+
+
+def test_manifest_shape_strings():
+    for name, file, kind, meta, args, outs in [
+        (b[0], f"{b[0]}.hlo.txt", b[1], b[2], b[4], b[5]) for b in aot.build_artifacts()
+    ]:
+        assert file.endswith(".hlo.txt")
+        assert kind in ("combine2", "combine_k", "train_step", "sgd_step")
+        for s in args:
+            assert hasattr(s, "shape")
+        assert isinstance(meta, dict) and meta

@@ -1,0 +1,127 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (multiples of the tiling), operators, fan-ins and
+value ranges; fixed cases pin the exact configurations the AOT artifacts
+use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import combine as K
+from compile.kernels import ref
+
+OPS = ["sum", "max", "min", "prod"]
+
+# shapes: n = rows * 128 with rows a multiple of block_rows
+rows_strategy = st.sampled_from([8, 16, 24, 32, 64])
+op_strategy = st.sampled_from(OPS)
+
+
+def rand(shape, seed, lo=-4.0, hi=4.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=rows_strategy, op=op_strategy, seed=st.integers(0, 2**31 - 1))
+def test_combine2_matches_ref(rows, op, seed):
+    n = rows * K.LANE
+    x = rand((n,), seed)
+    y = rand((n,), seed + 1)
+    got = K.combine2(op, n)(x, y)
+    want = ref.ref_combine2(op, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.sampled_from([8, 16, 32]),
+    op=op_strategy,
+    k=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_combine_k_matches_ref(rows, op, k, seed):
+    n = rows * K.LANE
+    # keep prod values near 1 to avoid over/underflow across k factors
+    lo, hi = (0.5, 1.5) if op == "prod" else (-4.0, 4.0)
+    xs = rand((k, n), seed, lo, hi)
+    got = K.combine_k(op, k, n)(xs)
+    want = ref.ref_combine_k(op, xs)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=rows_strategy,
+    seed=st.integers(0, 2**31 - 1),
+    lr=st.floats(1e-4, 1.0, allow_nan=False),
+)
+def test_axpy_matches_ref(rows, seed, lr):
+    n = rows * K.LANE
+    p = rand((n,), seed)
+    g = rand((n,), seed + 7)
+    got = K.axpy(n)(p, g, lr)
+    want = ref.ref_axpy(p, g, lr)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_combine2_artifact_shape(op):
+    """The exact configuration the AOT artifacts are built with."""
+    n = 16384
+    x = rand((n,), 1)
+    y = rand((n,), 2)
+    got = K.combine2_jit(op, n)(x, y)
+    np.testing.assert_allclose(got, ref.ref_combine2(op, x, y), rtol=1e-6)
+
+
+def test_combine_k_artifact_shape():
+    n, k = 16384, 8
+    xs = rand((k, n), 3)
+    got = K.combine_k_jit("sum", k, n)(xs)
+    np.testing.assert_allclose(got, ref.ref_combine_k("sum", xs), rtol=1e-5, atol=1e-5)
+
+
+def test_block_rows_variants_agree():
+    n = 4096
+    x = rand((n,), 11)
+    y = rand((n,), 12)
+    base = K.combine2("sum", n, block_rows=8)(x, y)
+    for br in [4, 16, 32]:
+        other = K.combine2("sum", n, block_rows=br)(x, y)
+        np.testing.assert_array_equal(base, other)
+
+
+def test_invalid_shapes_rejected():
+    with pytest.raises(ValueError):
+        K.combine2("sum", 1000)  # not a multiple of 128
+    with pytest.raises(ValueError):
+        K.combine2("sum", 128 * 6, block_rows=4)  # rows=6 not divisible by 4
+    with pytest.raises(ValueError):
+        K.combine_k("sum", 0, 1024)
+    with pytest.raises(KeyError):
+        K.combine2("xor", 1024)
+
+
+def test_special_values_propagate():
+    n = 1024
+    x = jnp.zeros((n,), jnp.float32).at[0].set(jnp.inf).at[1].set(-jnp.inf)
+    y = jnp.ones((n,), jnp.float32)
+    got = K.combine2("sum", n)(x, y)
+    assert np.isposinf(got[0]) and np.isneginf(got[1])
+    got_max = K.combine2("max", n)(x, y)
+    assert np.isposinf(got_max[0]) and got_max[1] == 1.0
+
+
+def test_combine2_jit_and_eager_agree():
+    """jit-compiled and eager kernel invocations are bitwise identical."""
+    n = 1024
+    x = rand((n,), 5)
+    y = rand((n,), 6)
+    eager = K.combine2("sum", n)(x, y)
+    jitted = jax.jit(K.combine2("sum", n))(x, y)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))

@@ -1,0 +1,106 @@
+"""L2 model correctness: shapes, gradients, training dynamics, and the
+combine wrappers that the AOT artifacts lower."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def synth_batch(seed, batch=model.MLP_BATCH, sizes=model.MLP_SIZES):
+    """Synthetic classification task: label = argmax of a fixed random
+    linear projection of the input (learnable by the MLP)."""
+    d_in, _, d_out = sizes
+    rng = np.random.default_rng(seed)
+    proj = np.random.default_rng(123).normal(size=(d_in, d_out))
+    x = rng.normal(size=(batch, d_in)).astype(np.float32)
+    labels = np.argmax(x @ proj, axis=1)
+    y = np.eye(d_out, dtype=np.float32)[labels]
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_param_padding_is_lane_aligned():
+    n = model.mlp_n_params()
+    p = model.mlp_padded_n()
+    assert p >= n
+    assert p % 1024 == 0
+    assert model.mlp_init(0).shape == (p,)
+
+
+def test_train_step_shapes_and_finite():
+    flat = model.mlp_init(0)
+    x, y = synth_batch(0)
+    grads, loss = model.train_step_fn()(flat, x, y)
+    assert grads.shape == flat.shape
+    assert loss.shape == ()
+    assert np.isfinite(loss)
+    assert np.all(np.isfinite(grads))
+    # padding region must carry zero gradient
+    n = model.mlp_n_params()
+    np.testing.assert_array_equal(grads[n:], 0.0)
+
+
+def test_initial_loss_near_uniform():
+    flat = model.mlp_init(0)
+    x, y = synth_batch(1)
+    _, loss = model.train_step_fn()(flat, x, y)
+    # log(10) ~ 2.30 for 10-way uniform predictions
+    assert abs(float(loss) - np.log(10)) < 0.5
+
+
+def test_sgd_training_reduces_loss():
+    step = jax.jit(model.train_step_fn())
+    sgd = jax.jit(model.sgd_step_fn())
+    flat = model.mlp_init(0)
+    losses = []
+    for i in range(60):
+        x, y = synth_batch(i % 8)
+        grads, loss = step(flat, x, y)
+        losses.append(float(loss))
+        (flat,) = sgd(flat, grads, jnp.float32(0.1))
+    assert losses[-1] < losses[0] * 0.5, f"no learning: {losses[0]:.3f} -> {losses[-1]:.3f}"
+
+
+def test_sgd_step_matches_manual_update():
+    flat = model.mlp_init(1)
+    x, y = synth_batch(2)
+    grads, _ = model.train_step_fn()(flat, x, y)
+    (updated,) = model.sgd_step_fn()(flat, grads, jnp.float32(0.05))
+    np.testing.assert_allclose(updated, flat - 0.05 * grads, rtol=1e-6, atol=1e-7)
+
+
+def test_gradient_against_finite_differences():
+    flat = model.mlp_init(3)
+    x, y = synth_batch(3)
+    grads, loss0 = model.train_step_fn()(flat, x, y)
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    for idx in rng.integers(0, model.mlp_n_params(), size=5):
+        bumped = flat.at[idx].add(eps)
+        loss1 = model.mlp_loss(bumped, x, y)
+        fd = (float(loss1) - float(loss0)) / eps
+        assert abs(fd - float(grads[idx])) < 5e-2, f"idx {idx}: fd={fd} grad={grads[idx]}"
+
+
+def test_combine_fns_wrap_kernels():
+    n = 2048
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    (got,) = model.combine2_fn("max", n)(x, y)
+    np.testing.assert_allclose(got, ref.ref_combine2("max", x, y), rtol=1e-6)
+    xs = jnp.stack([x, y, x])
+    (got_k,) = model.combine_k_fn("sum", 3, n)(xs)
+    np.testing.assert_allclose(got_k, ref.ref_combine_k("sum", xs), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sizes", [(32, 64, 4), (64, 256, 10)])
+def test_unflatten_roundtrip(sizes):
+    n = model.mlp_n_params(sizes)
+    flat = jnp.arange(model.mlp_padded_n(sizes), dtype=jnp.float32)
+    w1, b1, w2, b2 = model._unflatten(flat, sizes)
+    reflat = jnp.concatenate([w1.reshape(-1), b1, w2.reshape(-1), b2])
+    np.testing.assert_array_equal(reflat, flat[:n])

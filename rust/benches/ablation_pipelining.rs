@@ -1,0 +1,73 @@
+//! Bench E9d — van de Geijn segmentation/pipelining ablation (§5/§6):
+//! broadcast time vs segment count across message sizes, the PLogP-style
+//! tuned optimum, and segmentation composed with each strategy.
+//!
+//! Run: `cargo bench --bench ablation_pipelining`
+
+use gridcollect::benchkit::{save_report, section};
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::coordinator::experiment;
+use gridcollect::tree::Strategy;
+use gridcollect::util::fmt::{self, Table};
+
+fn main() {
+    let comm = experiment::paper_comm();
+    let params = experiment::paper_params();
+
+    section("E9d — segment-count sweep (multilevel bcast, paper grid)");
+    let mut t = Table::new(&["msg size", "S=1", "S=4", "S=16", "S=64", "tuned S", "tuned time"]);
+    for bytes in [16384usize, 262144, 1 << 20, 4 << 20] {
+        let data = vec![0.5f32; bytes / 4];
+        let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
+        let at = |s: usize| e.bcast_segmented(0, &data, s).unwrap().sim.makespan_us;
+        let (best_s, best_us) =
+            e.tune_bcast_segments(0, &data, &[1, 2, 4, 8, 16, 32, 64, 128]).unwrap();
+        t.row(&[
+            fmt::bytes(bytes),
+            fmt::time_us(at(1)),
+            fmt::time_us(at(4)),
+            fmt::time_us(at(16)),
+            fmt::time_us(at(64)),
+            best_s.to_string(),
+            fmt::time_us(best_us),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    save_report("pipelining_sweep", &t);
+
+    section("E9e — segmentation x strategy (1 MiB)");
+    let data = vec![0.5f32; (1 << 20) / 4];
+    let mut t = Table::new(&["strategy", "plain", "tuned segmented", "gain"]);
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, params.clone(), s);
+        let plain = e.bcast(0, &data).unwrap().sim.makespan_us;
+        let (_, tuned) =
+            e.tune_bcast_segments(0, &data, &[1, 4, 16, 64]).unwrap();
+        t.row(&[
+            s.name().to_string(),
+            fmt::time_us(plain),
+            fmt::time_us(tuned),
+            format!("{:.2}x", plain / tuned),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    save_report("pipelining_by_strategy", &t);
+
+    section("E9f — PLogP-style parameter fitting (model::fit)");
+    use gridcollect::model::fit;
+    let c = gridcollect::topology::TopologySpec::paper_fig1().clustering();
+    let fitted =
+        fit::calibrate(&c, &params, &[1024, 8192, 65536, 524288]).unwrap();
+    let mut t = Table::new(&["sep level", "fitted const (lat+o)", "fitted bandwidth", "true bandwidth"]);
+    for (sep, l) in fitted {
+        let truth = params.at_sep(sep);
+        t.row(&[
+            gridcollect::model::sep_name(sep, c.n_levels()).to_string(),
+            fmt::time_us(l.latency_us),
+            format!("{:.2} MB/s", l.bandwidth_mb_s),
+            format!("{:.2} MB/s", truth.bandwidth_mb_s),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    save_report("plogp_fit", &t);
+}

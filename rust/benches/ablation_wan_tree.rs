@@ -1,0 +1,63 @@
+//! Bench E9 — §6 ablation: the tree shape used at the WAN level (flat —
+//! the paper's choice — vs binomial, chain, generalized Fibonacci) across
+//! message sizes and site counts. Quantifies the §6 observation that the
+//! optimal shape depends on the latency/bandwidth regime: flat wins while
+//! latency dominates, pipelined/binomial shapes win once the root's
+//! uplink serializes large payloads.
+//!
+//! Run: `cargo bench --bench ablation_wan_tree`
+
+use gridcollect::benchkit::{save_report, section};
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::coordinator::experiment;
+use gridcollect::model::presets;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::{LevelPolicy, Strategy, TreeShape};
+use gridcollect::util::fmt::{self, Table};
+
+fn main() {
+    for (sites, bytes) in [(8usize, 1024usize), (8, 65536), (8, 1 << 20), (16, 65536)] {
+        section(&format!("E9 — WAN shape ablation: {sites} sites, {}", fmt::bytes(bytes)));
+        let t = experiment::wan_shape_ablation(sites, bytes).unwrap();
+        print!("{}", t.to_markdown());
+        save_report(&format!("ablation_wan_{sites}sites_{bytes}"), &t);
+    }
+
+    section("E9b — λ sweep for the Fibonacci WAN stage (16 sites, 64 KiB)");
+    let spec = TopologySpec::uniform(16, 1, 4).unwrap();
+    let comm = Communicator::world(&spec);
+    let params = presets::paper_grid();
+    let data = vec![0.5f32; 16384];
+    let mut t = Table::new(&["λ", "makespan"]);
+    for lambda in [1u32, 2, 3, 4, 6, 8, 12, 16] {
+        let policy =
+            LevelPolicy { shapes: vec![TreeShape::Fibonacci(lambda), TreeShape::Binomial] };
+        let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
+            .with_policy(policy);
+        let out = e.bcast(0, &data).unwrap();
+        t.row(&[lambda.to_string(), fmt::time_us(out.sim.makespan_us)]);
+    }
+    print!("{}", t.to_markdown());
+    save_report("ablation_lambda_sweep", &t);
+
+    section("E9c — paper policy (flat WAN) vs prototype policy (all binomial)");
+    let mut t2 = Table::new(&["msg size", "flat WAN (paper §3.2)", "all binomial ([19] prototype)"]);
+    for bytes in [1024usize, 16384, 262144, 1 << 20] {
+        let data = vec![0.5f32; bytes / 4];
+        let flat = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
+            .with_policy(LevelPolicy::paper())
+            .bcast(0, &data)
+            .unwrap()
+            .sim
+            .makespan_us;
+        let bino = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
+            .with_policy(LevelPolicy::all_binomial())
+            .bcast(0, &data)
+            .unwrap()
+            .sim
+            .makespan_us;
+        t2.row(&[fmt::bytes(bytes), fmt::time_us(flat), fmt::time_us(bino)]);
+    }
+    print!("{}", t2.to_markdown());
+    save_report("ablation_policy", &t2);
+}

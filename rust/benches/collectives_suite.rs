@@ -1,0 +1,54 @@
+//! Bench E8 — all five implemented collectives (§3: Bcast, Reduce,
+//! Barrier, Gather, Scatter) under the four strategies, at small and
+//! large payloads, with wall-clock timings of the full simulate+verify
+//! path.
+//!
+//! Run: `cargo bench --bench collectives_suite`
+
+use gridcollect::benchkit::{save_report, section, Bench};
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::coordinator::experiment;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::tree::Strategy;
+use gridcollect::util::fmt;
+
+fn main() {
+    for bytes in [4096usize, 262144] {
+        section(&format!("E8 — five ops x four strategies at {}", fmt::bytes(bytes)));
+        let t = experiment::collectives_suite_table(bytes, experiment::native()).unwrap();
+        print!("{}", t.to_markdown());
+        save_report(&format!("collectives_suite_{bytes}"), &t);
+    }
+
+    section("wall-clock of one collective simulation (48 ranks, 64 KiB)");
+    let comm = experiment::paper_comm();
+    let params = experiment::paper_params();
+    let n = comm.size();
+    let bench = Bench::default();
+    let engine = CollectiveEngine::new(&comm, params, Strategy::Multilevel);
+    let data = vec![1.0f32; 16384];
+    let contributions: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 16384]).collect();
+    let segs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 512]).collect();
+    bench.run("sim-wall/bcast", || {
+        std::hint::black_box(engine.bcast(0, &data).unwrap().sim.makespan_us);
+    });
+    bench.run("sim-wall/reduce", || {
+        std::hint::black_box(
+            engine.reduce(0, ReduceOp::Sum, &contributions).unwrap().sim.makespan_us,
+        );
+    });
+    bench.run("sim-wall/barrier", || {
+        std::hint::black_box(engine.barrier().unwrap().makespan_us);
+    });
+    bench.run("sim-wall/gather", || {
+        std::hint::black_box(engine.gather(0, &segs).unwrap().sim.makespan_us);
+    });
+    bench.run("sim-wall/scatter", || {
+        std::hint::black_box(engine.scatter(0, &segs).unwrap().sim.makespan_us);
+    });
+    bench.run("sim-wall/allreduce", || {
+        std::hint::black_box(
+            engine.allreduce(ReduceOp::Sum, &contributions).unwrap().sim.makespan_us,
+        );
+    });
+}

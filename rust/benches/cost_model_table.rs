@@ -1,0 +1,53 @@
+//! Bench E2 — regenerates the §4 analytic-vs-simulated cost comparison
+//! across (P, C) and message-size regimes, and verifies the asymptotic
+//! log2(C) saving in the latency-dominated regime.
+//!
+//! Run: `cargo bench --bench cost_model_table`
+
+use gridcollect::benchkit::{save_report, section};
+use gridcollect::coordinator::experiment;
+use gridcollect::util::fmt;
+
+fn main() {
+    for bytes in [1024usize, 16384, 262144] {
+        section(&format!("E2 — §4 model vs simulator at {}", fmt::bytes(bytes)));
+        let t = experiment::cost_model_table(bytes).unwrap();
+        print!("{}", t.to_markdown());
+        save_report(&format!("cost_model_{bytes}"), &t);
+    }
+
+    section("asymptotic check (1 KiB, latency-dominated)");
+    // In the latency-dominated regime the simulated speedup must approach
+    // log2(C) from below; at 16 clusters it should exceed half of it.
+    use gridcollect::analytic::TwoTier;
+    use gridcollect::collectives::CollectiveEngine;
+    use gridcollect::model::presets;
+    use gridcollect::topology::{Communicator, TopologySpec};
+    use gridcollect::tree::Strategy;
+    let params = presets::paper_grid();
+    let tt = TwoTier { slow: params.per_sep[0], fast: params.per_sep[2] };
+    let mut all_ok = true;
+    for (p, c) in [(32usize, 4usize), (64, 8), (128, 16)] {
+        let comm = Communicator::world(&TopologySpec::uniform(c, 1, p / c).unwrap());
+        let data = vec![0.0f32; 256];
+        let b = CollectiveEngine::new(&comm, params.clone(), Strategy::Unaware)
+            .bcast(0, &data)
+            .unwrap()
+            .sim
+            .makespan_us;
+        let m = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
+            .bcast(0, &data)
+            .unwrap()
+            .sim
+            .makespan_us;
+        let speedup = b / m;
+        let bound = tt.asymptotic_speedup(c);
+        let ok = speedup > bound * 0.5 && speedup <= bound * 1.05;
+        all_ok &= ok;
+        println!(
+            "P={p:<4} C={c:<3} speedup {speedup:.2}x vs log2(C)={bound:.2}  [{}]",
+            if ok { "OK" } else { "OUT OF BAND" }
+        );
+    }
+    println!("asymptotic shape: {}", if all_ok { "OK" } else { "VIOLATED" });
+}

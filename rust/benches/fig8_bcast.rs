@@ -1,0 +1,64 @@
+//! Bench E1 — regenerates Figure 8 (rotating-root broadcast, 4 strategies
+//! × message sizes on the 48-process paper grid) and measures the
+//! wall-clock cost of the simulation machinery itself (the L3 hot path).
+//!
+//! Run: `cargo bench --bench fig8_bcast`
+
+use gridcollect::benchkit::{save_report, section, Bench};
+use gridcollect::coordinator::{experiment, timing_app};
+use gridcollect::tree::Strategy;
+use gridcollect::util::fmt;
+
+fn main() {
+    section("E1 / Figure 8 — virtual-time reproduction");
+    let sizes = timing_app::default_sizes();
+    let (table, pts) = experiment::fig8_table(&sizes, experiment::native()).unwrap();
+    print!("{}", table.to_markdown());
+    save_report("fig8", &table);
+
+    // Qualitative shape assertions (who wins, by how much).
+    let at = |bytes: usize, s: Strategy| {
+        pts.iter().find(|p| p.bytes == bytes && p.strategy == s).unwrap().total_us
+    };
+    let mut ok = true;
+    for &b in &sizes {
+        ok &= at(b, Strategy::Multilevel) <= at(b, Strategy::TwoLevelSite) + 1e-6;
+        ok &= at(b, Strategy::TwoLevelSite) < at(b, Strategy::Unaware);
+        ok &= at(b, Strategy::TwoLevelMachine) < at(b, Strategy::Unaware);
+    }
+    let b = 1 << 20;
+    println!(
+        "\nshape: multilevel vs binomial at {} = {:.2}x  [{}]",
+        fmt::bytes(b),
+        at(b, Strategy::Unaware) / at(b, Strategy::Multilevel),
+        if ok { "OK" } else { "VIOLATED" }
+    );
+
+    // Wall-clock of the simulator machinery (L3 §Perf target).
+    section("simulation machinery wall-clock (64 KiB bcast, 48 ranks)");
+    let comm = experiment::paper_comm();
+    let params = experiment::paper_params();
+    let bench = Bench::default();
+    for s in Strategy::ALL {
+        let data = vec![1.0f32; 16384];
+        let engine =
+            gridcollect::collectives::CollectiveEngine::new(&comm, params.clone(), s);
+        bench.run(&format!("bcast/sim-wall/{}", s.name()), || {
+            let out = engine.bcast(0, &data).unwrap();
+            std::hint::black_box(out.sim.makespan_us);
+        });
+    }
+
+    section("full rotation wall-clock (Fig. 7 app, one size)");
+    bench.run("fig7-rotation/multilevel/64KiB", || {
+        let p = timing_app::run_point(
+            &comm,
+            &params,
+            Strategy::Multilevel,
+            65536,
+            experiment::native(),
+        )
+        .unwrap();
+        std::hint::black_box(p.total_us);
+    });
+}

@@ -1,0 +1,75 @@
+//! Bench E12b — the L1/L2 compute hot path: PJRT combiner throughput
+//! (the AOT-compiled Pallas combine kernels) vs the native Rust combiner,
+//! across payload sizes, plus the MLP train-step latency. Prints the
+//! calibrated `combine_us_per_byte` for the simulator.
+//!
+//! Skips (with a notice) when `make artifacts` has not been run.
+//!
+//! Run: `cargo bench --bench runtime_combiner`
+
+use gridcollect::benchkit::{section, Bench};
+use gridcollect::netsim::{Combiner, NativeCombiner, ReduceOp};
+use gridcollect::runtime::{artifacts::default_dir, calibrate_us_per_byte, MlpRuntime, Runtime, XlaCombiner};
+use gridcollect::util::fmt;
+
+fn main() {
+    let dir = default_dir();
+    if !dir.join("manifest.tsv").is_file() {
+        println!("artifacts not built (run `make artifacts`); skipping runtime benches");
+        return;
+    }
+    let rt = Runtime::open(dir).unwrap();
+    println!("PJRT platform: {}", rt.platform());
+    let xla = XlaCombiner::open_default(&rt).unwrap();
+    let native = NativeCombiner;
+    let bench = Bench::default();
+
+    section("combine throughput: PJRT(Pallas AOT) vs native Rust");
+    for elems in [16384usize, 65536, 262144] {
+        let bytes = elems * 4;
+        let src: Vec<f32> = (0..elems).map(|i| (i % 97) as f32).collect();
+        let mut acc_a = vec![1.0f32; elems];
+        let r = bench.run(&format!("combine/xla/{}", fmt::bytes(bytes)), || {
+            xla.combine(ReduceOp::Sum, &mut acc_a, &src);
+        });
+        println!("    -> {}", fmt::rate(bytes, r.median_us));
+        let mut acc_b = vec![1.0f32; elems];
+        let r = bench.run(&format!("combine/native/{}", fmt::bytes(bytes)), || {
+            native.combine(ReduceOp::Sum, &mut acc_b, &src);
+        });
+        println!("    -> {}", fmt::rate(bytes, r.median_us));
+    }
+
+    section("per-op PJRT combine (64 KiB)");
+    let elems = 16384;
+    let src: Vec<f32> = (0..elems).map(|i| 1.0 + (i % 7) as f32 * 0.1).collect();
+    for op in ReduceOp::ALL {
+        let mut acc = vec![1.0f32; elems];
+        bench.run(&format!("combine/xla/{}", op.name()), || {
+            acc.iter_mut().for_each(|v| *v = 1.0); // keep prod bounded
+            xla.combine(op, &mut acc, &src);
+        });
+    }
+
+    section("calibration");
+    let us_per_byte = calibrate_us_per_byte(&xla, 30);
+    println!(
+        "PJRT combine: {:.6} us/byte ({:.0} MB/s) — simulator default is 0.002 us/byte",
+        us_per_byte,
+        1.0 / us_per_byte
+    );
+
+    section("MLP train-step + sgd-step latency (L2 graphs via PJRT)");
+    let mlp = MlpRuntime::open(&rt).unwrap();
+    let p = mlp.init_params(0);
+    let (x, y) = mlp.synth_batch(0);
+    let mut grads = vec![0.0f32; mlp.dims.params];
+    bench.run("mlp/train_step", || {
+        let (g, loss) = mlp.train_step(&p, &x, &y).unwrap();
+        grads.copy_from_slice(&g);
+        std::hint::black_box(loss);
+    });
+    bench.run("mlp/sgd_step", || {
+        std::hint::black_box(mlp.sgd_step(&p, &grads, 0.1).unwrap().len());
+    });
+}

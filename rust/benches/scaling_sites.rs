@@ -1,0 +1,141 @@
+//! Bench E10 — scaling studies: site-count scaling at fixed process
+//! count, root-placement sensitivity (the binomial tree is "acutely
+//! sensitive to the distribution of the processes and the root" — §4),
+//! and depth scaling on the 4-level topology.
+//!
+//! Run: `cargo bench --bench scaling_sites`
+
+use gridcollect::benchkit::{save_report, section};
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::coordinator::experiment;
+use gridcollect::model::presets;
+use gridcollect::topology::{Communicator, GroupNode, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::fmt::{self, Table};
+
+fn main() {
+    section("E10a — site-count scaling (64 procs, 64 KiB)");
+    let t = experiment::site_scaling_table(65536).unwrap();
+    print!("{}", t.to_markdown());
+    save_report("scaling_sites", &t);
+
+    section("E10b — root sensitivity (paper grid, 64 KiB)");
+    let t = experiment::root_sensitivity_table(65536).unwrap();
+    print!("{}", t.to_markdown());
+    save_report("root_sensitivity", &t);
+
+    section("E10c — hierarchy depth: 3-level vs 4-level clustering");
+    // Same 24 processes; once as 2 sites x 2 machines x 6, once as
+    // 2 sites x 2 LANs x 2 machines x 3 with a campus tier between.
+    // Deliberately NOT power-of-two per level: with aligned blocks the
+    // binomial tree is accidentally hierarchical and everything ties.
+    let three = TopologySpec::uniform(2, 2, 6).unwrap();
+    let four = TopologySpec::new(
+        "deep",
+        GroupNode::group(
+            "grid",
+            (0..2)
+                .map(|s| {
+                    GroupNode::group(
+                        format!("site{s}"),
+                        (0..2)
+                            .map(|l| {
+                                GroupNode::group(
+                                    format!("s{s}lan{l}"),
+                                    (0..2)
+                                        .map(|m| {
+                                            GroupNode::machine(format!("s{s}l{l}m{m}"), 3)
+                                        })
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        ),
+    )
+    .unwrap();
+    let mut t = Table::new(&["topology", "strategy", "makespan", "WAN msgs", "msgs by level"]);
+    let data = vec![0.5f32; 16384];
+    // rotation-summed over all roots (Fig. 7 methodology)
+    let rotation = |comm: &Communicator,
+                    params: &gridcollect::model::NetworkParams,
+                    s: Strategy,
+                    data: &[f32]|
+     -> (f64, u64) {
+        let e = CollectiveEngine::new(comm, params.clone(), s);
+        let mut us = 0.0;
+        let mut wan = 0;
+        for root in 0..comm.size() {
+            let out = e.bcast(root, data).unwrap();
+            us += out.sim.makespan_us;
+            wan += out.sim.wan_messages();
+        }
+        (us, wan)
+    };
+    for (name, spec, params) in [
+        ("3-level", &three, presets::paper_grid()),
+        ("4-level", &four, presets::deep_grid()),
+    ] {
+        let comm = Communicator::world(spec);
+        for s in [Strategy::Unaware, Strategy::TwoLevelSite, Strategy::Multilevel] {
+            let (us, wan) = rotation(&comm, &params, s, &data);
+            let one = CollectiveEngine::new(&comm, params.clone(), s)
+                .bcast(0, &data)
+                .unwrap();
+            t.row(&[
+                name.to_string(),
+                s.name().to_string(),
+                fmt::time_us(us),
+                wan.to_string(),
+                format!("{:?}", one.sim.msgs_by_sep),
+            ]);
+        }
+    }
+    print!("{}", t.to_markdown());
+    save_report("scaling_depth", &t);
+
+    section("E10d — the deeper hierarchy pays: 4-level multilevel vs 2-level view");
+    // On the 4-level topology, compare full multilevel against the best
+    // 2-level approximation (site view) as message size grows
+    // (rotation-summed over all roots).
+    let comm = Communicator::world(&four);
+    let params = presets::deep_grid();
+    let mut t = Table::new(&["msg size", "2-level (site)", "multilevel (4-level)", "gain"]);
+    for bytes in [4096usize, 65536, 1 << 20] {
+        let data = vec![0.5f32; bytes / 4];
+        let (two, _) = rotation(&comm, &params, Strategy::TwoLevelSite, &data);
+        let (multi, _) = rotation(&comm, &params, Strategy::Multilevel, &data);
+        t.row(&[
+            fmt::bytes(bytes),
+            fmt::time_us(two),
+            fmt::time_us(multi),
+            format!("{:.2}x", two / multi),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    save_report("scaling_depth_gain", &t);
+
+    section("E10e — machines per site: where multilevel beats 2-level-site");
+    // With many machines per site, the site-level binomial (machine-
+    // unaware) chains LAN transfers on the critical path; the multilevel
+    // tree crosses the LAN once per machine with intra-machine fan-out.
+    let mut t = Table::new(&["machines/site", "2-level (site)", "multilevel", "gain"]);
+    for machines in [2usize, 4, 8] {
+        let spec = TopologySpec::uniform(2, machines, 24 / machines).unwrap();
+        let comm = Communicator::world(&spec);
+        let params = presets::paper_grid();
+        let data = vec![0.5f32; 65536 / 4];
+        let (two, _) = rotation(&comm, &params, Strategy::TwoLevelSite, &data);
+        let (multi, _) = rotation(&comm, &params, Strategy::Multilevel, &data);
+        t.row(&[
+            machines.to_string(),
+            fmt::time_us(two),
+            fmt::time_us(multi),
+            format!("{:.2}x", two / multi),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    save_report("machines_per_site", &t);
+}

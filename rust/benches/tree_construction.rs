@@ -1,0 +1,54 @@
+//! Bench E12a — wall-clock cost of tree construction (the §3.2 design
+//! requires every rank to rebuild the tree at each collective call, so
+//! construction is on the L3 hot path) and of program compilation.
+//!
+//! Run: `cargo bench --bench tree_construction`
+
+use gridcollect::benchkit::{section, Bench};
+use gridcollect::collectives::programs;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::{build_strategy_tree, LevelPolicy, Strategy, TreeShape};
+
+fn main() {
+    let bench = Bench::default();
+
+    section("tree construction wall-clock");
+    for (sites, machines, procs) in [(2usize, 2usize, 12usize), (8, 4, 8), (16, 8, 8)] {
+        let spec = TopologySpec::uniform(sites, machines, procs).unwrap();
+        let comm = Communicator::world(&spec);
+        let n = comm.size();
+        for s in Strategy::ALL {
+            bench.run(&format!("build/{}x{}x{} (n={n})/{}", sites, machines, procs, s.name()), || {
+                let t =
+                    build_strategy_tree(&comm, 0, s, &LevelPolicy::paper()).unwrap();
+                std::hint::black_box(t.n_members());
+            });
+        }
+    }
+
+    section("single-shape builders (1024 ranks)");
+    let ids: Vec<usize> = (0..1024).collect();
+    for shape in
+        [TreeShape::Binomial, TreeShape::Flat, TreeShape::Chain, TreeShape::Fibonacci(3)]
+    {
+        bench.run(&format!("shape/{}/1024", shape.name()), || {
+            let t = shape.build(1024, &ids, 0).unwrap();
+            std::hint::black_box(t.n_members());
+        });
+    }
+
+    section("program compilation (tree -> simulator IR), 512 ranks");
+    let spec = TopologySpec::uniform(8, 8, 8).unwrap();
+    let comm = Communicator::world(&spec);
+    let tree = build_strategy_tree(&comm, 0, Strategy::Multilevel, &LevelPolicy::paper()).unwrap();
+    bench.run("program/bcast/512", || {
+        std::hint::black_box(programs::bcast(&tree, 1).unwrap().total_actions());
+    });
+    bench.run("program/reduce/512", || {
+        std::hint::black_box(programs::reduce(&tree, ReduceOp::Sum, 1).unwrap().total_actions());
+    });
+    bench.run("program/scatter/512", || {
+        std::hint::black_box(programs::scatter(&tree, 1).unwrap().total_actions());
+    });
+}

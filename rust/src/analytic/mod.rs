@@ -1,0 +1,149 @@
+//! The paper's §4 closed-form broadcast cost model, used to cross-check
+//! the simulator and to regenerate the asymptotic comparison (experiment
+//! E2 in DESIGN.md).
+//!
+//! For `P` processes spread evenly over `C` clusters, message of `N`
+//! bytes, inter-cluster link `(l_s, b_s)` and intra-cluster link
+//! `(l_f, b_f)`:
+//!
+//! ```text
+//! binomial   : log2(C)·(l_s + N/b_s) + log2(P/C)·(l_f + N/b_f)
+//! multilevel :          (l_s + N/b_s) + log2(P/C)·(l_f + N/b_f)
+//! ```
+//!
+//! The model charges the longest dependency path, assuming inter-cluster
+//! cost dominates — exactly the paper's conservative accounting.
+
+use crate::model::LinkParams;
+
+/// Two-tier analytic network: slow inter-cluster, fast intra-cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct TwoTier {
+    pub slow: LinkParams,
+    pub fast: LinkParams,
+}
+
+impl TwoTier {
+    /// Longest-path cost of the binomial-tree broadcast (§4): at least
+    /// `log2 C` inter-cluster hops plus `log2 (P/C)` intra-cluster hops.
+    pub fn binomial_bcast_us(&self, p: usize, c: usize, bytes: usize) -> f64 {
+        assert!(p >= c && c >= 1, "need P >= C >= 1");
+        let log_c = (c as f64).log2();
+        let log_pc = ((p / c) as f64).log2();
+        log_c * self.slow.p2p_us(bytes) + log_pc * self.fast.p2p_us(bytes)
+    }
+
+    /// Longest-path cost of the multilevel broadcast (§4): one
+    /// inter-cluster hop plus `log2 (P/C)` intra-cluster hops.
+    pub fn multilevel_bcast_us(&self, p: usize, c: usize, bytes: usize) -> f64 {
+        assert!(p >= c && c >= 1, "need P >= C >= 1");
+        let log_pc = ((p / c) as f64).log2();
+        let slow = if c > 1 { self.slow.p2p_us(bytes) } else { 0.0 };
+        slow + log_pc * self.fast.p2p_us(bytes)
+    }
+
+    /// Predicted speedup of multilevel over binomial.
+    pub fn speedup(&self, p: usize, c: usize, bytes: usize) -> f64 {
+        self.binomial_bcast_us(p, c, bytes) / self.multilevel_bcast_us(p, c, bytes)
+    }
+
+    /// The asymptotic claim of §1: when inter-cluster cost dominates, the
+    /// saving approaches `log2 C`.
+    pub fn asymptotic_speedup(&self, c: usize) -> f64 {
+        (c as f64).log2()
+    }
+}
+
+/// Message-count predictions (exact, not asymptotic) for a P-rank world
+/// split evenly into C clusters, broadcast from rank 0.
+pub mod counts {
+    /// Inter-cluster messages used by the binomial tree. With blocks of
+    /// `P/C` consecutive ranks per cluster and the MPICH relative-rank
+    /// tree, an edge (parent rel `r`, child rel `r + 2^j`) crosses a
+    /// cluster boundary iff the two rels fall in different blocks.
+    pub fn binomial_intercluster(p: usize, c: usize) -> usize {
+        assert!(c >= 1 && p % c == 0);
+        let block = p / c;
+        let mut count = 0;
+        for r in 1..p {
+            let parent = r & (r - 1);
+            if parent / block != r / block {
+                count += 1;
+            }
+        }
+        count
+    }
+
+    /// The multilevel tree uses exactly `C - 1` inter-cluster messages.
+    pub fn multilevel_intercluster(c: usize) -> usize {
+        c - 1
+    }
+
+    /// A *flat* inter-cluster stage also uses `C - 1`, but all from the
+    /// root; a binomial inter-cluster stage uses `C - 1` spread over
+    /// `log2 C` rounds.
+    pub fn flat_intercluster(c: usize) -> usize {
+        c - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiers() -> TwoTier {
+        TwoTier {
+            slow: LinkParams::new(30_000.0, 2.0),
+            fast: LinkParams::new(30.0, 150.0),
+        }
+    }
+
+    #[test]
+    fn multilevel_beats_binomial_when_slow_dominates() {
+        let t = tiers();
+        // P=64 over C=8 clusters, 1 KiB.
+        let b = t.binomial_bcast_us(64, 8, 1024);
+        let m = t.multilevel_bcast_us(64, 8, 1024);
+        assert!(m < b);
+        // Saving approaches log2(8)=3 because slow >> fast here.
+        let s = t.speedup(64, 8, 1024);
+        assert!(s > 2.5 && s <= 3.0 + 1e-9, "speedup {s}");
+    }
+
+    #[test]
+    fn single_cluster_no_slow_term() {
+        let t = tiers();
+        assert_eq!(t.multilevel_bcast_us(16, 1, 1024), t.binomial_bcast_us(16, 1, 1024));
+    }
+
+    #[test]
+    fn speedup_grows_with_cluster_count() {
+        let t = tiers();
+        let s2 = t.speedup(64, 2, 1024);
+        let s4 = t.speedup(64, 4, 1024);
+        let s8 = t.speedup(64, 8, 1024);
+        assert!(s2 < s4 && s4 < s8);
+    }
+
+    #[test]
+    fn binomial_intercluster_counts() {
+        // P=8, C=2: blocks {0..4},{4..8}. Edges crossing: (0,4) at least,
+        // and per §4 >= log2(C)=1. Exact: rels 4,5,6,7 have parents
+        // 0,4,4,6 -> only (0,4) crosses. == 1? parent(5)=4 same block,
+        // parent(6)=4 same, parent(7)=6 same. So 1 crossing.
+        assert_eq!(counts::binomial_intercluster(8, 2), 1);
+        // P=8, C=4: blocks of 2. rels: 1->0 same, 2->0 cross, 3->2 same,
+        // 4->0 cross, 5->4 same, 6->4 cross, 7->6 same => 3 crossings.
+        assert_eq!(counts::binomial_intercluster(8, 4), 3);
+        assert_eq!(counts::multilevel_intercluster(4), 3);
+    }
+
+    #[test]
+    fn binomial_crossings_at_least_log_c() {
+        for (p, c) in [(16, 2), (16, 4), (64, 8), (256, 16)] {
+            let cnt = counts::binomial_intercluster(p, c);
+            let log_c = (c as f64).log2() as usize;
+            assert!(cnt >= log_c, "P={p} C={c}: {cnt} < log2(C)={log_c}");
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Micro-benchmark harness (no `criterion` in the offline vendor set):
+//! warm-up, adaptive iteration, robust statistics, and a uniform report
+//! format shared by all `rust/benches/*` targets.
+//!
+//! Benches are declared with `harness = false` in Cargo.toml and call
+//! [`Bench::run`] / [`section`] directly; `cargo bench` executes them.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Configuration for one measured case.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 500,
+            target: Duration::from_millis(300),
+        }
+    }
+}
+
+/// Result of one measured case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub mad_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} med {:>12} mean ±{:>9} mad  ({} iters)",
+            self.name,
+            crate::util::fmt::time_us(self.median_us),
+            crate::util::fmt::time_us(self.mean_us),
+            crate::util::fmt::time_us(self.mad_us),
+            self.iters
+        )
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, min_iters: 5, max_iters: 50, target: Duration::from_millis(100) }
+    }
+
+    /// Measure `f` (called repeatedly); returns robust timing stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Summary::new();
+        let started = Instant::now();
+        let mut iters = 0usize;
+        while iters < self.min_iters
+            || (started.elapsed() < self.target && iters < self.max_iters)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64() * 1e6);
+            iters += 1;
+        }
+        let mut s = samples;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_us: s.mean(),
+            median_us: s.median(),
+            mad_us: s.mad(),
+            min_us: s.min(),
+            max_us: s.max(),
+        };
+        println!("{}", r.line());
+        r
+    }
+}
+
+/// Print a section header (groups cases in `cargo bench` output).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Write a results table to `target/bench-reports/<name>.{md,csv}` so
+/// EXPERIMENTS.md can reference regenerated tables.
+pub fn save_report(name: &str, table: &crate::util::fmt::Table) {
+    let dir = std::path::Path::new("target/bench-reports");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let _ = std::fs::write(dir.join(format!("{name}.md")), table.to_markdown());
+    let _ = std::fs::write(dir.join(format!("{name}.csv")), table.to_csv());
+    println!("[saved target/bench-reports/{name}.{{md,csv}}]");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_us >= 0.0);
+        assert!(r.min_us <= r.median_us && r.median_us <= r.max_us);
+    }
+
+    #[test]
+    fn respects_min_iters() {
+        let b = Bench { warmup_iters: 0, min_iters: 7, max_iters: 7, target: Duration::ZERO };
+        let r = b.run("bounded", || std::thread::sleep(Duration::from_micros(10)));
+        assert_eq!(r.iters, 7);
+    }
+}

@@ -1,0 +1,167 @@
+//! Minimal CLI argument parser (no `clap` in the offline vendor set):
+//! `--key value` / `--key=value` flags, bare `--switch`es, positionals.
+
+use crate::error::{Error, Result};
+use std::collections::{HashMap, HashSet};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+/// Flags that take a value (everything else beginning `--` is a switch).
+pub const VALUE_FLAGS: &[&str] = &[
+    "sizes", "size", "steps", "lr", "strategy", "root", "spec", "sites", "machines", "procs",
+    "out", "artifacts", "seed", "shape", "params",
+];
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args> {
+        let mut a = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if VALUE_FLAGS.contains(&stripped) {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| Error::Cli(format!("--{stripped} needs a value")))?;
+                    a.flags.insert(stripped.to_string(), v);
+                } else {
+                    a.switches.insert(stripped.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| Error::Cli(format!("--{key}: '{v}' is not an integer")))
+            }
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| Error::Cli(format!("--{key}: '{v}' is not a float"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.contains(switch)
+    }
+
+    /// Parse a single `--size` value with `k`/`m` suffix support.
+    pub fn get_size(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => parse_size(v),
+        }
+    }
+
+    /// Parse `--sizes 1024,4096,...` (supports `k`/`m` suffixes).
+    pub fn sizes(&self, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get("sizes") {
+            None => Ok(default.to_vec()),
+            Some(v) => v.split(',').map(parse_size).collect(),
+        }
+    }
+
+    /// Parse a strategy name.
+    pub fn strategy(&self, default: crate::tree::Strategy) -> Result<crate::tree::Strategy> {
+        use crate::tree::Strategy::*;
+        match self.get("strategy") {
+            None => Ok(default),
+            Some("unaware") | Some("mpich-binomial") | Some("binomial") => Ok(Unaware),
+            Some("machine") | Some("magpie-machine") => Ok(TwoLevelMachine),
+            Some("site") | Some("magpie-site") => Ok(TwoLevelSite),
+            Some("multilevel") => Ok(Multilevel),
+            Some(other) => Err(Error::Cli(format!(
+                "unknown strategy '{other}' (use unaware|machine|site|multilevel)"
+            ))),
+        }
+    }
+}
+
+/// `"64k"` -> 65536, `"2m"` -> 2097152, plain integers pass through.
+pub fn parse_size(s: &str) -> Result<usize> {
+    let s = s.trim().to_lowercase();
+    let (num, mult) = if let Some(p) = s.strip_suffix('m') {
+        (p, 1024 * 1024)
+    } else if let Some(p) = s.strip_suffix('k') {
+        (p, 1024)
+    } else {
+        (s.as_str(), 1)
+    };
+    num.parse::<usize>()
+        .map(|v| v * mult)
+        .map_err(|_| Error::Cli(format!("bad size '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        let a = args("fig8 --sizes 1k,64k --xla --root=5");
+        assert_eq!(a.positional, vec!["fig8"]);
+        assert_eq!(a.get("sizes"), Some("1k,64k"));
+        assert!(a.has("xla"));
+        assert_eq!(a.get_usize("root", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn sizes_parsing() {
+        assert_eq!(parse_size("1024").unwrap(), 1024);
+        assert_eq!(parse_size("64k").unwrap(), 65536);
+        assert_eq!(parse_size("2M").unwrap(), 2 * 1024 * 1024);
+        assert!(parse_size("x").is_err());
+        let a = args("--sizes 1k,2k");
+        assert_eq!(a.sizes(&[]).unwrap(), vec![1024, 2048]);
+        let b = args("");
+        assert_eq!(b.sizes(&[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn strategy_names() {
+        use crate::tree::Strategy;
+        assert_eq!(args("--strategy site").strategy(Strategy::Unaware).unwrap(),
+            Strategy::TwoLevelSite);
+        assert_eq!(args("").strategy(Strategy::Multilevel).unwrap(), Strategy::Multilevel);
+        assert!(args("--strategy bogus").strategy(Strategy::Unaware).is_err());
+    }
+
+    #[test]
+    fn missing_value_flag_errors() {
+        assert!(Args::parse(vec!["--sizes".to_string()]).is_err());
+    }
+
+    #[test]
+    fn numeric_parsing_errors() {
+        assert!(args("--steps nope").get_usize("steps", 1).is_err());
+        assert!(args("--lr nope").get_f32("lr", 0.1).is_err());
+        assert_eq!(args("").get_usize("steps", 9).unwrap(), 9);
+    }
+}

@@ -1,0 +1,326 @@
+//! Extended collectives — the paper's §6 future work ("we plan to upgrade
+//! MPICH-G2's remaining MPI collective operations in a similar manner"):
+//! Allgather, Reduce-scatter, and personalized All-to-all, each built
+//! multilevel-topology-aware from the same tree machinery, plus the
+//! van de Geijn **segmented (pipelined) broadcast** with a PLogP-style
+//! empirical segment-size tuner (§6's second plan).
+//!
+//! All of these compile to the same simulator IR as the core five: the
+//! payload's rank-keyed segment map is expressive enough for
+//! per-destination routing (`SendPart::Ranks` filters by key).
+
+use crate::error::Result;
+use crate::netsim::{Merge, Program, ReduceOp, SendPart};
+use crate::topology::Rank;
+use crate::tree::Tree;
+
+/// Allgather: every rank contributes a segment; every rank ends with all
+/// segments. Implemented as gather-up + broadcast-down over the same tree
+/// (each boundary crossed once per direction).
+/// Initial payloads: rank `r` holds `{r: segment}`.
+pub fn allgather(tree: &Tree, tag: u64) -> Result<Program> {
+    let n = tree.capacity();
+    let mut p = Program::new(n);
+    // up phase: union-gather toward the root
+    for r in tree.preorder() {
+        for &c in tree.children(r) {
+            p.recv(r, c, tag, Merge::Union);
+        }
+        if let Some(parent) = tree.parent(r) {
+            p.send(r, parent, tag, SendPart::All);
+        }
+    }
+    // down phase: broadcast the assembled map
+    for r in tree.preorder() {
+        if let Some(parent) = tree.parent(r) {
+            p.recv(r, parent, tag + 1, Merge::Replace);
+        }
+        for &c in tree.children(r) {
+            p.send(r, c, tag + 1, SendPart::All);
+        }
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Reduce-scatter: elementwise reduction of per-rank segment maps up the
+/// tree, then each rank receives (only) its own reduced segment on the
+/// way down.
+/// Initial payloads: rank `r` holds `{q: contribution_r_for_q}` for all q.
+pub fn reduce_scatter(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
+    let n = tree.capacity();
+    let mut p = Program::new(n);
+    // up phase: combine full maps
+    for r in tree.preorder() {
+        for &c in tree.children(r) {
+            p.recv(r, c, tag, Merge::Combine(op));
+        }
+        if let Some(parent) = tree.parent(r) {
+            p.send(r, parent, tag, SendPart::All);
+        }
+    }
+    // down phase: route each subtree's segments to it
+    for r in tree.preorder() {
+        if let Some(parent) = tree.parent(r) {
+            p.recv(r, parent, tag + 1, Merge::Replace);
+        }
+        for &c in tree.children(r) {
+            p.send(r, c, tag + 1, SendPart::Ranks(tree.subtree(c)));
+        }
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Composite key for all-to-all payload segments: `src * n + dst`.
+#[inline]
+pub fn a2a_key(n: usize, src: Rank, dst: Rank) -> usize {
+    src * n + dst
+}
+
+/// Personalized all-to-all over a tree: every rank `r` holds segments
+/// `{a2a_key(n, r, q): data}` for all destinations `q`. The tree is used
+/// in both directions: gather every outgoing segment to the root (each
+/// boundary crossed once upward), then scatter by destination (once
+/// downward). Compared with the naive direct exchange this trades WAN
+/// crossings (2·(sites-1) vs O(n²/sites)) for root concentration —
+/// the same trade the paper's broadcast makes.
+pub fn alltoall(tree: &Tree, tag: u64) -> Result<Program> {
+    let n = tree.capacity();
+    let mut p = Program::new(n);
+    let mut in_subtree: Vec<Vec<bool>> = vec![vec![false; n]; n];
+    for r in 0..n {
+        if tree.contains(r) {
+            for m in tree.subtree(r) {
+                in_subtree[r][m] = true;
+            }
+        }
+    }
+    // Up phase: node r forwards segments whose destination lies OUTSIDE
+    // its subtree; segments routable within the subtree stay (they are
+    // delivered on the way down).
+    for r in tree.preorder() {
+        for &c in tree.children(r) {
+            p.recv(r, c, tag, Merge::Union);
+        }
+        if let Some(parent) = tree.parent(r) {
+            let forward: Vec<usize> = (0..n)
+                .flat_map(|s| (0..n).map(move |d| (s, d)))
+                .filter(|&(_, d)| !in_subtree[r][d])
+                .map(|(s, d)| a2a_key(n, s, d))
+                .collect();
+            p.send(r, parent, tag, SendPart::Ranks(forward));
+        }
+    }
+    // Down phase: node r sends child c exactly the segments c does not
+    // already hold — destination inside c's subtree, source outside it —
+    // so the Union merge never sees a duplicate key.
+    for r in tree.preorder() {
+        if let Some(parent) = tree.parent(r) {
+            p.recv(r, parent, tag + 1, Merge::Union);
+        }
+        for &c in tree.children(r) {
+            let keys: Vec<usize> = (0..n)
+                .flat_map(|s| (0..n).map(move |d| (s, d)))
+                .filter(|&(s, d)| in_subtree[c][d] && !in_subtree[c][s])
+                .map(|(s, d)| a2a_key(n, s, d))
+                .collect();
+            p.send(r, c, tag + 1, SendPart::Ranks(keys));
+        }
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Segmented, pipelined broadcast (van de Geijn; §5/§6): the message is
+/// split into `n_segments` chunks keyed `0..n_segments`; a rank forwards
+/// chunk `i` to its children before receiving chunk `i+1`, so chunks
+/// stream down the tree concurrently. With S segments over a depth-D
+/// path the critical path is ~ (D + S - 1) single-segment hops instead
+/// of D full-message hops.
+/// Initial payloads: root holds `{i: chunk_i}`.
+pub fn bcast_segmented(tree: &Tree, n_segments: usize, tag: u64) -> Result<Program> {
+    assert!(n_segments >= 1);
+    let n = tree.capacity();
+    let mut p = Program::new(n);
+    for r in tree.preorder() {
+        for i in 0..n_segments {
+            if let Some(parent) = tree.parent(r) {
+                p.recv(r, parent, tag + i as u64, Merge::Union);
+            }
+            for &c in tree.children(r) {
+                p.send(r, c, tag + i as u64, SendPart::Ranks(vec![i]));
+            }
+        }
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use crate::netsim::{run, NativeCombiner, Payload, SimConfig};
+    use crate::topology::{Communicator, TopologySpec};
+    use crate::tree::{build_strategy_tree, LevelPolicy, Strategy};
+
+    fn tree_for(comm: &Communicator, root: usize) -> Tree {
+        build_strategy_tree(comm, root, Strategy::Multilevel, &LevelPolicy::paper()).unwrap()
+    }
+
+    #[test]
+    fn allgather_everyone_gets_everything() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let n = comm.size();
+        let t = tree_for(&comm, 0);
+        let p = allgather(&t, 100).unwrap();
+        let init: Vec<Payload> =
+            (0..n).map(|r| Payload::single(r, vec![r as f32; 4])).collect();
+        let cfg = SimConfig::new(presets::paper_grid());
+        let out = run(comm.clustering(), &p, init, &cfg, &NativeCombiner).unwrap();
+        for r in 0..n {
+            assert_eq!(out.payloads[r].len(), n, "rank {r}");
+            for q in 0..n {
+                assert_eq!(out.payloads[r].get(&q).unwrap(), vec![q as f32; 4]);
+            }
+        }
+        // one WAN crossing per direction
+        assert_eq!(out.msgs_by_sep[0], 2);
+    }
+
+    #[test]
+    fn reduce_scatter_delivers_reduced_own_segment() {
+        let comm = Communicator::world(&TopologySpec::uniform(2, 2, 3).unwrap());
+        let n = comm.size();
+        let t = tree_for(&comm, 0);
+        let p = reduce_scatter(&t, ReduceOp::Sum, 200).unwrap();
+        // rank r contributes value (r+1) to every destination's segment
+        let init: Vec<Payload> = (0..n)
+            .map(|r| {
+                let mut pl = Payload::empty();
+                for q in 0..n {
+                    pl.union(Payload::single(q, vec![(r + 1) as f32; 2])).unwrap();
+                }
+                pl
+            })
+            .collect();
+        let cfg = SimConfig::new(presets::paper_grid());
+        let out = run(comm.clustering(), &p, init, &cfg, &NativeCombiner).unwrap();
+        let total: f32 = (1..=n).map(|v| v as f32).sum();
+        for r in 0..n {
+            assert_eq!(out.payloads[r].get(&r).unwrap(), vec![total; 2], "rank {r}");
+        }
+        // root keeps everything; leaves hold only their own segment
+        let leaf = (0..n).find(|&r| t.children(r).is_empty() && r != 0).unwrap();
+        assert_eq!(out.payloads[leaf].len(), 1);
+    }
+
+    #[test]
+    fn alltoall_full_personalized_exchange() {
+        let comm = Communicator::world(&TopologySpec::uniform(2, 2, 2).unwrap());
+        let n = comm.size();
+        let t = tree_for(&comm, 0);
+        let p = alltoall(&t, 300).unwrap();
+        let init: Vec<Payload> = (0..n)
+            .map(|src| {
+                let mut pl = Payload::empty();
+                for dst in 0..n {
+                    pl.union(Payload::single(
+                        a2a_key(n, src, dst),
+                        vec![(src * 100 + dst) as f32],
+                    ))
+                    .unwrap();
+                }
+                pl
+            })
+            .collect();
+        let cfg = SimConfig::new(presets::paper_grid());
+        let out = run(comm.clustering(), &p, init, &cfg, &NativeCombiner).unwrap();
+        for dst in 0..n {
+            for src in 0..n {
+                let key = a2a_key(n, src, dst);
+                assert_eq!(
+                    out.payloads[dst].get(&key).unwrap(),
+                    &[(src * 100 + dst) as f32],
+                    "src {src} dst {dst}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_wan_crossings_bounded_by_tree() {
+        // The hierarchical alltoall crosses the WAN once per direction,
+        // versus n²-ish for a naive direct exchange.
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let t = tree_for(&comm, 0);
+        let n = comm.size();
+        let p = alltoall(&t, 300).unwrap();
+        let init: Vec<Payload> = (0..n)
+            .map(|src| {
+                let mut pl = Payload::empty();
+                for dst in 0..n {
+                    pl.union(Payload::single(a2a_key(n, src, dst), vec![1.0])).unwrap();
+                }
+                pl
+            })
+            .collect();
+        let cfg = SimConfig::new(presets::paper_grid());
+        let out = run(comm.clustering(), &p, init, &cfg, &NativeCombiner).unwrap();
+        assert_eq!(out.msgs_by_sep[0], 2, "one WAN message per direction");
+    }
+
+    #[test]
+    fn segmented_bcast_reassembles_and_pipelines() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let n = comm.size();
+        let data: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+        let t = tree_for(&comm, 0);
+        let cfg = SimConfig::new(presets::paper_grid());
+
+        let run_with_segments = |s: usize| {
+            let p = bcast_segmented(&t, s, 500).unwrap();
+            let chunk = data.len() / s;
+            let mut root_payload = Payload::empty();
+            for i in 0..s {
+                root_payload
+                    .union(Payload::single(i, data[i * chunk..(i + 1) * chunk].to_vec()))
+                    .unwrap();
+            }
+            let mut init = vec![Payload::empty(); n];
+            init[0] = root_payload;
+            run(comm.clustering(), &p, init, &cfg, &NativeCombiner).unwrap()
+        };
+
+        let unsegmented = run_with_segments(1);
+        let segmented = run_with_segments(8);
+        // reassembly at every rank
+        for r in 0..n {
+            let mut got = Vec::new();
+            for i in 0..8 {
+                got.extend_from_slice(&segmented.payloads[r].get(&i).unwrap());
+            }
+            assert_eq!(got, data, "rank {r}");
+        }
+        // pipelining shortens the critical path on multi-hop trees
+        assert!(
+            segmented.makespan_us < unsegmented.makespan_us,
+            "segmented {} !< unsegmented {}",
+            segmented.makespan_us,
+            unsegmented.makespan_us
+        );
+    }
+
+    #[test]
+    fn programs_validate_on_all_strategies() {
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        for s in Strategy::ALL {
+            let t = build_strategy_tree(&comm, 3, s, &LevelPolicy::paper()).unwrap();
+            allgather(&t, 1).unwrap();
+            reduce_scatter(&t, ReduceOp::Max, 10).unwrap();
+            alltoall(&t, 20).unwrap();
+            bcast_segmented(&t, 4, 40).unwrap();
+        }
+    }
+}

@@ -1,0 +1,511 @@
+//! The five multilevel topology-aware collective operations (MPI_Bcast,
+//! MPI_Reduce, MPI_Barrier, MPI_Gather, MPI_Scatter — §3) over a simulated
+//! grid, under any of the four strategies of Fig. 8.
+
+pub mod extended;
+pub mod programs;
+pub mod verify;
+
+use crate::error::{Error, Result};
+use crate::model::NetworkParams;
+use crate::netsim::{
+    run, Combiner, NativeCombiner, Payload, Program, ReduceOp, SimConfig, SimResult,
+};
+use crate::topology::{Communicator, Rank};
+use crate::tree::{build_strategy_tree, LevelPolicy, Strategy, Tree};
+use std::cell::Cell;
+
+/// Outcome of a data-carrying collective: simulator metrics plus the
+/// delivered data.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub sim: SimResult,
+    /// Per-rank result (meaning depends on the operation; see each method).
+    pub data: Vec<Vec<f32>>,
+}
+
+/// High-level executor binding a communicator, a cost model, a combiner
+/// and a strategy. Each call builds the strategy's tree for the requested
+/// root (deterministically, as §3.2 prescribes), compiles the program,
+/// and runs the simulator with real payloads.
+pub struct CollectiveEngine<'a> {
+    comm: &'a Communicator,
+    cfg: SimConfig,
+    combiner: &'a dyn Combiner,
+    strategy: Strategy,
+    policy: LevelPolicy,
+    next_tag: Cell<u64>,
+}
+
+impl<'a> CollectiveEngine<'a> {
+    pub fn new(comm: &'a Communicator, params: NetworkParams, strategy: Strategy) -> Self {
+        static NATIVE: NativeCombiner = NativeCombiner;
+        CollectiveEngine {
+            comm,
+            cfg: SimConfig::new(params),
+            combiner: &NATIVE,
+            strategy,
+            policy: LevelPolicy::paper(),
+            next_tag: Cell::new(1),
+        }
+    }
+
+    pub fn with_combiner(mut self, combiner: &'a dyn Combiner) -> Self {
+        self.combiner = combiner;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: LevelPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.cfg = self.cfg.with_trace();
+        self
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    pub fn comm(&self) -> &Communicator {
+        self.comm
+    }
+
+    fn take_tag(&self, span: u64) -> u64 {
+        let t = self.next_tag.get();
+        self.next_tag.set(t + span);
+        t
+    }
+
+    fn tree_for(&self, root: Rank) -> Result<Tree> {
+        if root >= self.comm.size() {
+            return Err(Error::Comm(format!(
+                "root {root} out of range for {}-rank communicator",
+                self.comm.size()
+            )));
+        }
+        build_strategy_tree(self.comm, root, self.strategy, &self.policy)
+    }
+
+    fn execute(&self, prog: &Program, init: Vec<Payload>) -> Result<SimResult> {
+        run(self.comm.clustering(), prog, init, &self.cfg, self.combiner)
+    }
+
+    /// MPI_Bcast: `data` flows from `root` to every rank.
+    /// `Outcome::data[r]` = the buffer received at rank `r`.
+    pub fn bcast(&self, root: Rank, data: &[f32]) -> Result<Outcome> {
+        let sim = self.bcast_sim(root, data)?;
+        let data = (0..self.comm.size())
+            .map(|r| sim.payloads[r].get_cloned(&root).unwrap_or_default())
+            .collect();
+        Ok(Outcome { sim, data })
+    }
+
+    /// MPI_Bcast, measurement path: identical simulation, but skips
+    /// materializing per-rank owned copies of the delivered data (which
+    /// dominates wall-clock for large payloads — see EXPERIMENTS.md
+    /// §Perf). Delivered payloads remain inspectable (shared) in
+    /// `SimResult::payloads`.
+    pub fn bcast_sim(&self, root: Rank, data: &[f32]) -> Result<SimResult> {
+        let tree = self.tree_for(root)?;
+        let prog = programs::bcast(&tree, self.take_tag(16))?;
+        let mut init = vec![Payload::empty(); self.comm.size()];
+        init[root] = Payload::single(root, data.to_vec());
+        self.execute(&prog, init)
+    }
+
+    /// MPI_Reduce: elementwise `op` over every rank's contribution, result
+    /// at `root`. `Outcome::data[root]` = the reduced vector (non-roots
+    /// hold their partials; MPI leaves them undefined).
+    pub fn reduce(&self, root: Rank, op: ReduceOp, contributions: &[Vec<f32>]) -> Result<Outcome> {
+        self.check_contribs(contributions)?;
+        let tree = self.tree_for(root)?;
+        let prog = programs::reduce(&tree, op, self.take_tag(16))?;
+        let init: Vec<Payload> = contributions
+            .iter()
+            .map(|c| Payload::single(0, c.clone()))
+            .collect();
+        let sim = self.execute(&prog, init)?;
+        let data = (0..self.comm.size())
+            .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
+            .collect();
+        Ok(Outcome { sim, data })
+    }
+
+    /// MPI_Barrier rooted at rank 0 (fan-in/fan-out).
+    pub fn barrier(&self) -> Result<SimResult> {
+        let tree = self.tree_for(0)?;
+        let prog = programs::barrier(&tree, self.take_tag(16))?;
+        self.execute(&prog, vec![Payload::empty(); self.comm.size()])
+    }
+
+    /// MPI_Gather: rank `r`'s segment `contributions[r]` ends at `root`.
+    /// `Outcome::data` = the per-rank segments as assembled at the root
+    /// (rank order).
+    pub fn gather(&self, root: Rank, contributions: &[Vec<f32>]) -> Result<Outcome> {
+        if contributions.len() != self.comm.size() {
+            return Err(Error::Comm(format!(
+                "gather: {} contributions for {} ranks",
+                contributions.len(),
+                self.comm.size()
+            )));
+        }
+        let tree = self.tree_for(root)?;
+        let prog = programs::gather(&tree, self.take_tag(16))?;
+        let init: Vec<Payload> = contributions
+            .iter()
+            .enumerate()
+            .map(|(r, c)| Payload::single(r, c.clone()))
+            .collect();
+        let sim = self.execute(&prog, init)?;
+        let root_payload = &sim.payloads[root];
+        if root_payload.len() != self.comm.size() {
+            return Err(Error::Verify(format!(
+                "gather root holds {} segments, expected {}",
+                root_payload.len(),
+                self.comm.size()
+            )));
+        }
+        let data = (0..self.comm.size())
+            .map(|r| root_payload.get_cloned(&r).expect("validated above"))
+            .collect();
+        Ok(Outcome { sim, data })
+    }
+
+    /// MPI_Scatter: `segments[r]` travels from `root` to rank `r`.
+    /// `Outcome::data[r]` = the segment received at rank `r`.
+    pub fn scatter(&self, root: Rank, segments: &[Vec<f32>]) -> Result<Outcome> {
+        if segments.len() != self.comm.size() {
+            return Err(Error::Comm(format!(
+                "scatter: {} segments for {} ranks",
+                segments.len(),
+                self.comm.size()
+            )));
+        }
+        let tree = self.tree_for(root)?;
+        let prog = programs::scatter(&tree, self.take_tag(16))?;
+        let mut root_payload = Payload::empty();
+        for (r, s) in segments.iter().enumerate() {
+            root_payload.union(Payload::single(r, s.clone())).map_err(Error::Sim)?;
+        }
+        let mut init = vec![Payload::empty(); self.comm.size()];
+        init[root] = root_payload;
+        let sim = self.execute(&prog, init)?;
+        let data = (0..self.comm.size())
+            .map(|r| sim.payloads[r].get_cloned(&r).unwrap_or_default())
+            .collect();
+        Ok(Outcome { sim, data })
+    }
+
+    /// All-reduce (reduce to rank 0, broadcast back): every rank ends with
+    /// the full reduction. Used by the data-parallel training driver.
+    pub fn allreduce(&self, op: ReduceOp, contributions: &[Vec<f32>]) -> Result<Outcome> {
+        self.check_contribs(contributions)?;
+        let tree = self.tree_for(0)?;
+        let prog = programs::allreduce(&tree, &tree, op, self.take_tag(32))?;
+        let init: Vec<Payload> =
+            contributions.iter().map(|c| Payload::single(0, c.clone())).collect();
+        let sim = self.execute(&prog, init)?;
+        let data = (0..self.comm.size())
+            .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
+            .collect();
+        Ok(Outcome { sim, data })
+    }
+
+    /// Allgather (§6 extension): every rank contributes `contributions[r]`
+    /// and ends with every segment. `Outcome::data[r]` = concatenation in
+    /// rank order as assembled at rank `r`.
+    pub fn allgather(&self, contributions: &[Vec<f32>]) -> Result<Outcome> {
+        if contributions.len() != self.comm.size() {
+            return Err(Error::Comm(format!(
+                "allgather: {} contributions for {} ranks",
+                contributions.len(),
+                self.comm.size()
+            )));
+        }
+        let tree = self.tree_for(0)?;
+        let prog = extended::allgather(&tree, self.take_tag(16))?;
+        let init: Vec<Payload> = contributions
+            .iter()
+            .enumerate()
+            .map(|(r, c)| Payload::single(r, c.clone()))
+            .collect();
+        let sim = self.execute(&prog, init)?;
+        let mut data = Vec::with_capacity(self.comm.size());
+        for r in 0..self.comm.size() {
+            let segs = &sim.payloads[r];
+            if segs.len() != self.comm.size() {
+                return Err(Error::Verify(format!(
+                    "allgather: rank {r} holds {} segments, expected {}",
+                    segs.len(),
+                    self.comm.size()
+                )));
+            }
+            let mut flat = Vec::new();
+            for q in 0..self.comm.size() {
+                flat.extend_from_slice(segs.get(&q).expect("validated above"));
+            }
+            data.push(flat);
+        }
+        Ok(Outcome { sim, data })
+    }
+
+    /// Reduce-scatter (§6 extension): `contributions[r][q]` is rank `r`'s
+    /// contribution to destination `q`'s segment; rank `r` receives the
+    /// elementwise `op` over all ranks' segment `r`.
+    pub fn reduce_scatter(
+        &self,
+        op: ReduceOp,
+        contributions: &[Vec<Vec<f32>>],
+    ) -> Result<Outcome> {
+        let n = self.comm.size();
+        if contributions.len() != n || contributions.iter().any(|c| c.len() != n) {
+            return Err(Error::Comm("reduce_scatter: need n x n segment matrix".into()));
+        }
+        let tree = self.tree_for(0)?;
+        let prog = extended::reduce_scatter(&tree, op, self.take_tag(16))?;
+        let init: Vec<Payload> = contributions
+            .iter()
+            .map(|per_dst| {
+                let mut pl = Payload::empty();
+                for (q, seg) in per_dst.iter().enumerate() {
+                    pl.union(Payload::single(q, seg.clone())).expect("distinct keys");
+                }
+                pl
+            })
+            .collect();
+        let sim = self.execute(&prog, init)?;
+        let data = (0..n)
+            .map(|r| sim.payloads[r].get_cloned(&r).unwrap_or_default())
+            .collect();
+        Ok(Outcome { sim, data })
+    }
+
+    /// Personalized all-to-all (§6 extension): `sends[r][q]` travels from
+    /// rank `r` to rank `q`. `Outcome::data[r]` = concatenation of what
+    /// `r` received, in source order.
+    pub fn alltoall(&self, sends: &[Vec<Vec<f32>>]) -> Result<Outcome> {
+        let n = self.comm.size();
+        if sends.len() != n || sends.iter().any(|s| s.len() != n) {
+            return Err(Error::Comm("alltoall: need n x n segment matrix".into()));
+        }
+        let tree = self.tree_for(0)?;
+        let prog = extended::alltoall(&tree, self.take_tag(16))?;
+        let init: Vec<Payload> = sends
+            .iter()
+            .enumerate()
+            .map(|(src, per_dst)| {
+                let mut pl = Payload::empty();
+                for (dst, seg) in per_dst.iter().enumerate() {
+                    pl.union(Payload::single(extended::a2a_key(n, src, dst), seg.clone()))
+                        .expect("distinct keys");
+                }
+                pl
+            })
+            .collect();
+        let sim = self.execute(&prog, init)?;
+        let mut data = Vec::with_capacity(n);
+        for dst in 0..n {
+            let mut flat = Vec::new();
+            for src in 0..n {
+                let key = extended::a2a_key(n, src, dst);
+                let seg = sim.payloads[dst].get(&key).ok_or_else(|| {
+                    Error::Verify(format!("alltoall: segment {src}->{dst} missing"))
+                })?;
+                flat.extend_from_slice(seg);
+            }
+            data.push(flat);
+        }
+        Ok(Outcome { sim, data })
+    }
+
+    /// Segmented (pipelined) broadcast — van de Geijn (§5/§6). Splits
+    /// `data` into `n_segments` chunks streamed down the tree.
+    pub fn bcast_segmented(
+        &self,
+        root: Rank,
+        data: &[f32],
+        n_segments: usize,
+    ) -> Result<Outcome> {
+        let tree = self.tree_for(root)?;
+        let segs = n_segments.clamp(1, data.len().max(1));
+        let prog = extended::bcast_segmented(&tree, segs, self.take_tag(segs as u64 + 4))?;
+        let mut root_payload = Payload::empty();
+        let chunk = data.len().div_ceil(segs);
+        for i in 0..segs {
+            let lo = (i * chunk).min(data.len());
+            let hi = ((i + 1) * chunk).min(data.len());
+            root_payload
+                .union(Payload::single(i, data[lo..hi].to_vec()))
+                .map_err(Error::Sim)?;
+        }
+        let mut init = vec![Payload::empty(); self.comm.size()];
+        init[root] = root_payload;
+        let sim = self.execute(&prog, init)?;
+        let data = (0..self.comm.size())
+            .map(|r| {
+                let mut flat = Vec::new();
+                for i in 0..segs {
+                    if let Some(s) = sim.payloads[r].get(&i) {
+                        flat.extend_from_slice(s);
+                    }
+                }
+                flat
+            })
+            .collect();
+        Ok(Outcome { sim, data })
+    }
+
+    /// Empirical segment-size tuning (Kielmann's PLogP plan, §6): sweep
+    /// candidate segment counts and return `(best_n_segments, best_us)`.
+    pub fn tune_bcast_segments(
+        &self,
+        root: Rank,
+        data: &[f32],
+        candidates: &[usize],
+    ) -> Result<(usize, f64)> {
+        let mut best = (1usize, f64::INFINITY);
+        for &s in candidates {
+            let out = self.bcast_segmented(root, data, s)?;
+            if out.sim.makespan_us < best.1 {
+                best = (s, out.sim.makespan_us);
+            }
+        }
+        Ok(best)
+    }
+
+    fn check_contribs(&self, contributions: &[Vec<f32>]) -> Result<()> {
+        if contributions.len() != self.comm.size() {
+            return Err(Error::Comm(format!(
+                "{} contributions for {} ranks",
+                contributions.len(),
+                self.comm.size()
+            )));
+        }
+        let len = contributions[0].len();
+        if contributions.iter().any(|c| c.len() != len) {
+            return Err(Error::Comm("ragged contributions".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use crate::topology::TopologySpec;
+
+    fn engine(strategy: Strategy, comm: &Communicator) -> CollectiveEngine<'_> {
+        CollectiveEngine::new(comm, presets::paper_grid(), strategy)
+    }
+
+    #[test]
+    fn bcast_all_strategies_deliver_identically() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        for s in Strategy::ALL {
+            let out = engine(s, &comm).bcast(3, &data).unwrap();
+            for r in 0..comm.size() {
+                assert_eq!(out.data[r], data, "{} rank {r}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn multilevel_bcast_fewer_wan_messages_and_faster() {
+        let spec = TopologySpec::paper_experiment();
+        let comm = Communicator::world(&spec);
+        let data = vec![1.0f32; 4096];
+        let un = engine(Strategy::Unaware, &comm).bcast(0, &data).unwrap();
+        let ml = engine(Strategy::Multilevel, &comm).bcast(0, &data).unwrap();
+        assert!(ml.sim.wan_messages() < un.sim.wan_messages());
+        assert_eq!(ml.sim.wan_messages(), 1);
+        assert!(ml.sim.makespan_us < un.sim.makespan_us);
+    }
+
+    #[test]
+    fn reduce_matches_reference() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let contributions: Vec<Vec<f32>> =
+            (0..comm.size()).map(|r| vec![r as f32, 2.0 * r as f32]).collect();
+        let expect = verify::ref_reduce(&contributions, ReduceOp::Sum);
+        for s in Strategy::ALL {
+            let out = engine(s, &comm).reduce(5, ReduceOp::Sum, &contributions).unwrap();
+            assert!(
+                verify::close(&out.data[5], &expect, 1e-4, 1e-6),
+                "{}: {:?} vs {expect:?}",
+                s.name(),
+                out.data[5]
+            );
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let segments: Vec<Vec<f32>> =
+            (0..comm.size()).map(|r| vec![r as f32; 3]).collect();
+        for s in Strategy::ALL {
+            let e = engine(s, &comm);
+            let sc = e.scatter(2, &segments).unwrap();
+            assert_eq!(sc.data, segments, "{} scatter", s.name());
+            let ga = e.gather(2, &segments).unwrap();
+            assert_eq!(ga.data, segments, "{} gather", s.name());
+        }
+    }
+
+    #[test]
+    fn barrier_runs_and_counts_messages() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        for s in Strategy::ALL {
+            let sim = engine(s, &comm).barrier().unwrap();
+            assert_eq!(sim.msgs_by_sep.iter().sum::<u64>(), 2 * (comm.size() as u64 - 1));
+        }
+    }
+
+    #[test]
+    fn allreduce_delivers_total_everywhere() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let contributions: Vec<Vec<f32>> =
+            (0..comm.size()).map(|_| vec![1.0f32; 8]).collect();
+        let out = engine(Strategy::Multilevel, &comm)
+            .allreduce(ReduceOp::Sum, &contributions)
+            .unwrap();
+        for r in 0..comm.size() {
+            assert_eq!(out.data[r], vec![20.0f32; 8], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn input_validation() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let e = engine(Strategy::Multilevel, &comm);
+        assert!(e.bcast(99, &[1.0]).is_err());
+        assert!(e.reduce(0, ReduceOp::Sum, &[vec![1.0]]).is_err()); // wrong count
+        let mut ragged: Vec<Vec<f32>> = (0..comm.size()).map(|_| vec![1.0]).collect();
+        ragged[3] = vec![1.0, 2.0];
+        assert!(e.reduce(0, ReduceOp::Sum, &ragged).is_err());
+        assert!(e.gather(0, &[vec![]]).is_err());
+        assert!(e.scatter(0, &[vec![]]).is_err());
+    }
+
+    #[test]
+    fn tags_do_not_collide_across_calls() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let e = engine(Strategy::Multilevel, &comm);
+        for i in 0..5 {
+            let out = e.bcast(i, &[i as f32]).unwrap();
+            assert_eq!(out.data[10][0], i as f32);
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Compilation of the five MPI collective operations into simulator
+//! [`Program`]s, given a communication [`Tree`].
+//!
+//! Every builder is strategy-agnostic: the tree fully determines the
+//! messaging. Per-rank action order encodes the MPICH-style dataflow
+//! (receive from parent before forwarding; combine children in child
+//! order) so that execution is deterministic.
+
+use crate::error::Result;
+use crate::netsim::{Merge, Program, ReduceOp, SendPart};
+use crate::tree::Tree;
+
+/// Broadcast (MPI_Bcast): root's payload flows down the tree.
+/// Initial payloads: root holds the data; everyone else empty.
+pub fn bcast(tree: &Tree, tag: u64) -> Result<Program> {
+    let n = tree.capacity();
+    let mut p = Program::new(n);
+    for r in tree.preorder() {
+        if let Some(parent) = tree.parent(r) {
+            p.recv(r, parent, tag, Merge::Replace);
+        }
+        for &c in tree.children(r) {
+            p.send(r, c, tag, SendPart::All);
+        }
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Reduction (MPI_Reduce): partial values combine up the tree; the root
+/// finishes with `op` applied across every rank's contribution.
+/// Initial payloads: every rank holds its contribution under segment key 0.
+pub fn reduce(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
+    let n = tree.capacity();
+    let mut p = Program::new(n);
+    for r in tree.preorder() {
+        // Combine children in child order (deterministic fp fold).
+        for &c in tree.children(r) {
+            p.recv(r, c, tag, Merge::Combine(op));
+        }
+        if let Some(parent) = tree.parent(r) {
+            p.send(r, parent, tag, SendPart::All);
+        }
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Barrier (MPI_Barrier): zero-byte fan-in to the root, then fan-out.
+/// No rank's fan-out receive can complete before every rank has entered
+/// the fan-in phase.
+pub fn barrier(tree: &Tree, tag: u64) -> Result<Program> {
+    let n = tree.capacity();
+    let tag_up = tag;
+    let tag_down = tag + 1;
+    let mut p = Program::new(n);
+    for r in tree.preorder() {
+        for &c in tree.children(r) {
+            p.recv(r, c, tag_up, Merge::Discard);
+        }
+        if let Some(parent) = tree.parent(r) {
+            p.send(r, parent, tag_up, SendPart::Empty);
+            p.recv(r, parent, tag_down, Merge::Discard);
+        }
+        for &c in tree.children(r) {
+            p.send(r, c, tag_down, SendPart::Empty);
+        }
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Gather (MPI_Gather): per-rank segments merge (disjoint union) up the
+/// tree; the root finishes holding every rank's segment.
+/// Initial payloads: rank `r` holds its segment under key `r`.
+pub fn gather(tree: &Tree, tag: u64) -> Result<Program> {
+    let n = tree.capacity();
+    let mut p = Program::new(n);
+    for r in tree.preorder() {
+        for &c in tree.children(r) {
+            p.recv(r, c, tag, Merge::Union);
+        }
+        if let Some(parent) = tree.parent(r) {
+            p.send(r, parent, tag, SendPart::All);
+        }
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Scatter (MPI_Scatter): the root starts with every rank's segment; each
+/// edge carries exactly the segments of the child's subtree.
+/// Initial payloads: root holds all segments under their owners' keys.
+pub fn scatter(tree: &Tree, tag: u64) -> Result<Program> {
+    let n = tree.capacity();
+    let mut p = Program::new(n);
+    for r in tree.preorder() {
+        if let Some(parent) = tree.parent(r) {
+            p.recv(r, parent, tag, Merge::Replace);
+        }
+        for &c in tree.children(r) {
+            p.send(r, c, tag, SendPart::Ranks(tree.subtree(c)));
+        }
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// All-reduce composition: reduce to the tree root, then broadcast back
+/// down (the MPICH-G2 implementation composes exactly these two phases).
+pub fn allreduce(reduce_tree: &Tree, bcast_tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
+    let mut p = reduce(reduce_tree, op, tag)?;
+    p.then(bcast(bcast_tree, tag + 8)?)?;
+    p.validate()?;
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use crate::netsim::{run, NativeCombiner, Payload, SimConfig};
+    use crate::topology::{Clustering, Rank, TopologySpec};
+    use crate::tree::shapes::TreeShape;
+
+    fn line4() -> (Tree, Clustering) {
+        let ids: Vec<Rank> = (0..4).collect();
+        (TreeShape::Chain.build(4, &ids, 0).unwrap(), Clustering::flat(4))
+    }
+
+    fn sim(
+        tree_clustering: &Clustering,
+        prog: &Program,
+        init: Vec<Payload>,
+    ) -> crate::netsim::SimResult {
+        let cfg = SimConfig::new(presets::uniform_lan(tree_clustering.n_levels()));
+        run(tree_clustering, prog, init, &cfg, &NativeCombiner).unwrap()
+    }
+
+    #[test]
+    fn bcast_delivers_to_all() {
+        let (t, c) = line4();
+        let p = bcast(&t, 100).unwrap();
+        let mut init = vec![Payload::empty(); 4];
+        init[0] = Payload::single(0, vec![3.5, 4.5]);
+        let r = sim(&c, &p, init);
+        for rank in 0..4 {
+            assert_eq!(r.payloads[rank].get(&0).unwrap(), vec![3.5, 4.5], "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn reduce_sums_at_root() {
+        let ids: Vec<Rank> = (0..6).collect();
+        let t = TreeShape::Binomial.build(6, &ids, 2).unwrap();
+        let c = Clustering::flat(6);
+        let p = reduce(&t, ReduceOp::Sum, 100).unwrap();
+        let init: Vec<Payload> =
+            (0..6).map(|r| Payload::single(0, vec![r as f32, 1.0])).collect();
+        let r = sim(&c, &p, init);
+        assert_eq!(r.payloads[2].get(&0).unwrap(), vec![15.0, 6.0]);
+        assert_eq!(r.combines, 5, "n-1 combines for n ranks");
+    }
+
+    #[test]
+    fn reduce_max_min_prod() {
+        let ids: Vec<Rank> = (0..4).collect();
+        let t = TreeShape::Flat.build(4, &ids, 0).unwrap();
+        let c = Clustering::flat(4);
+        for (op, expect) in [
+            (ReduceOp::Max, 4.0f32),
+            (ReduceOp::Min, 1.0),
+            (ReduceOp::Prod, 24.0),
+        ] {
+            let p = reduce(&t, op, 7).unwrap();
+            let init: Vec<Payload> =
+                (0..4).map(|r| Payload::single(0, vec![(r + 1) as f32])).collect();
+            let r = sim(&c, &p, init);
+            assert_eq!(r.payloads[0].get(&0).unwrap(), vec![expect], "{op:?}");
+        }
+    }
+
+    #[test]
+    fn gather_collects_everything_at_root() {
+        let ids: Vec<Rank> = (0..5).collect();
+        let t = TreeShape::Binomial.build(5, &ids, 1).unwrap();
+        let c = Clustering::flat(5);
+        let p = gather(&t, 3).unwrap();
+        let init: Vec<Payload> =
+            (0..5).map(|r| Payload::single(r, vec![r as f32; r + 1])).collect();
+        let r = sim(&c, &p, init);
+        let root_payload = &r.payloads[1];
+        assert_eq!(root_payload.len(), 5);
+        for rank in 0..5 {
+            assert_eq!(root_payload.get(&rank).unwrap(), vec![rank as f32; rank + 1]);
+        }
+    }
+
+    #[test]
+    fn scatter_delivers_own_segment() {
+        let ids: Vec<Rank> = (0..6).collect();
+        let t = TreeShape::Binomial.build(6, &ids, 0).unwrap();
+        let c = Clustering::flat(6);
+        let p = scatter(&t, 9).unwrap();
+        let mut root_payload = Payload::empty();
+        for rank in 0..6 {
+            root_payload.union(Payload::single(rank, vec![rank as f32 * 10.0])).unwrap();
+        }
+        let mut init = vec![Payload::empty(); 6];
+        init[0] = root_payload;
+        let r = sim(&c, &p, init);
+        for rank in 1..6 {
+            assert_eq!(
+                r.payloads[rank].get(&rank).unwrap(),
+                vec![rank as f32 * 10.0],
+                "rank {rank}"
+            );
+        }
+    }
+
+    #[test]
+    fn scatter_sends_only_subtree_bytes() {
+        // Chain 0->1->2->3: edge (0,1) carries segments {1,2,3}; edge (2,3)
+        // carries only {3}. Total bytes on the wire = 3+2+1 segments.
+        let (t, c) = line4();
+        let p = scatter(&t, 9).unwrap();
+        let mut root_payload = Payload::empty();
+        for rank in 0..4 {
+            root_payload.union(Payload::single(rank, vec![0.0; 10])).unwrap(); // 40 B each
+        }
+        let mut init = vec![Payload::empty(); 4];
+        init[0] = root_payload;
+        let r = sim(&c, &p, init);
+        assert_eq!(r.bytes_by_sep.iter().sum::<u64>(), (3 + 2 + 1) * 40);
+    }
+
+    #[test]
+    fn barrier_blocks_until_all_enter() {
+        let ids: Vec<Rank> = (0..8).collect();
+        let t = TreeShape::Binomial.build(8, &ids, 0).unwrap();
+        let c = Clustering::flat(8);
+        let p = barrier(&t, 50).unwrap();
+        let r = sim(&c, &p, vec![Payload::empty(); 8]);
+        // Every rank finishes after the slowest leaf's fan-in could reach
+        // the root: makespan >= 2 * height * min-latency.
+        assert!(r.makespan_us > 0.0);
+        assert_eq!(r.bytes_by_sep.iter().sum::<u64>(), 0, "barrier moves no payload bytes");
+        // fan-in + fan-out over 7 edges each.
+        assert_eq!(r.msgs_by_sep.iter().sum::<u64>(), 14);
+    }
+
+    #[test]
+    fn allreduce_everyone_gets_total() {
+        let ids: Vec<Rank> = (0..5).collect();
+        let t = TreeShape::Binomial.build(5, &ids, 0).unwrap();
+        let c = Clustering::flat(5);
+        let p = allreduce(&t, &t, ReduceOp::Sum, 1000).unwrap();
+        let init: Vec<Payload> =
+            (0..5).map(|r| Payload::single(0, vec![r as f32 + 1.0])).collect();
+        let r = sim(&c, &p, init);
+        for rank in 0..5 {
+            assert_eq!(r.payloads[rank].get(&0).unwrap(), vec![15.0], "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn programs_validate_on_multilevel_trees() {
+        let spec = TopologySpec::paper_experiment();
+        let c = spec.clustering();
+        let t = crate::tree::build_multilevel(&c, 5, &crate::tree::LevelPolicy::paper()).unwrap();
+        for prog in [
+            bcast(&t, 1).unwrap(),
+            reduce(&t, ReduceOp::Sum, 20).unwrap(),
+            barrier(&t, 40).unwrap(),
+            gather(&t, 60).unwrap(),
+            scatter(&t, 80).unwrap(),
+        ] {
+            prog.validate().unwrap();
+        }
+    }
+}

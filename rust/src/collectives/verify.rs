@@ -1,0 +1,63 @@
+//! Reference (serial) semantics for the collectives, used by tests,
+//! property checks, and the examples to verify simulated outcomes.
+
+use crate::netsim::ReduceOp;
+
+/// Serial reduction in ascending-rank order over equal-length vectors.
+pub fn ref_reduce(contributions: &[Vec<f32>], op: ReduceOp) -> Vec<f32> {
+    assert!(!contributions.is_empty());
+    let mut acc = contributions[0].clone();
+    for c in &contributions[1..] {
+        assert_eq!(c.len(), acc.len(), "ragged contributions");
+        for (a, b) in acc.iter_mut().zip(c) {
+            *a = op.apply(*a, *b);
+        }
+    }
+    acc
+}
+
+/// Gather reference: just the input, cloned (identity on per-rank data).
+pub fn ref_gather(contributions: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    contributions.to_vec()
+}
+
+/// Relative+absolute tolerance comparison for float reductions whose
+/// combine order differs from the serial order (tree folds reassociate).
+pub fn close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+/// Tolerance suitable for a tree reduction of `n` values of magnitude
+/// `scale`: the reassociation error of f32 sums grows ~ log2(n) ulps.
+pub fn sum_tolerance(n: usize, scale: f32) -> f32 {
+    let log_n = (n.max(2) as f32).log2();
+    scale * log_n * f32::EPSILON * 8.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ref_reduce_all_ops() {
+        let xs = vec![vec![1.0, 4.0], vec![2.0, 3.0], vec![3.0, 2.0]];
+        assert_eq!(ref_reduce(&xs, ReduceOp::Sum), vec![6.0, 9.0]);
+        assert_eq!(ref_reduce(&xs, ReduceOp::Max), vec![3.0, 4.0]);
+        assert_eq!(ref_reduce(&xs, ReduceOp::Min), vec![1.0, 2.0]);
+        assert_eq!(ref_reduce(&xs, ReduceOp::Prod), vec![6.0, 24.0]);
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(&[1.0], &[1.0 + 1e-7], 1e-6, 0.0));
+        assert!(!close(&[1.0], &[1.1], 1e-6, 1e-6));
+        assert!(!close(&[1.0], &[1.0, 2.0], 1.0, 1.0));
+    }
+
+    #[test]
+    fn sum_tolerance_grows_slowly() {
+        assert!(sum_tolerance(1024, 1.0) < 1e-4);
+        assert!(sum_tolerance(2, 1.0) > 0.0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Experiment configuration files: a TOML-lite `key = value` format with
+//! `[section]` headers (no external crates offline — see DESIGN.md §2),
+//! used to load custom network parameter sets for the simulator so
+//! deployments can run the benches against their own calibrations (e.g.
+//! the output of `gridcollect calibrate` / `model::fit`).
+//!
+//! Format:
+//!
+//! ```toml
+//! # paper_grid.net
+//! combine_us_per_byte = 0.002
+//!
+//! [level.1]             # sep level 1 = WAN (slowest)
+//! latency_us = 30000
+//! bandwidth_mb_s = 2.0
+//! send_overhead_us = 60
+//! recv_overhead_us = 60
+//! overlapped = false
+//!
+//! [level.2]
+//! latency_us = 500
+//! bandwidth_mb_s = 10
+//! ```
+
+use crate::error::{Error, Result};
+use crate::model::{LinkParams, NetworkParams};
+use std::collections::BTreeMap;
+
+/// Parsed file: top-level keys + per-section key/value maps.
+#[derive(Clone, Debug, Default)]
+pub struct Ini {
+    pub top: BTreeMap<String, String>,
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+/// Parse the TOML-lite text.
+pub fn parse(src: &str) -> Result<Ini> {
+    let mut ini = Ini::default();
+    let mut current: Option<String> = None;
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim().to_string();
+            if name.is_empty() {
+                return Err(Error::Config(format!("line {}: empty section name", lineno + 1)));
+            }
+            ini.sections.entry(name.clone()).or_default();
+            current = Some(name);
+        } else if let Some((k, v)) = line.split_once('=') {
+            let (k, v) = (k.trim().to_string(), v.trim().trim_matches('"').to_string());
+            if k.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            match &current {
+                Some(sec) => {
+                    ini.sections.get_mut(sec).unwrap().insert(k, v);
+                }
+                None => {
+                    ini.top.insert(k, v);
+                }
+            }
+        } else {
+            return Err(Error::Config(format!("line {}: expected `key = value` or `[section]`, got '{line}'", lineno + 1)));
+        }
+    }
+    Ok(ini)
+}
+
+fn get_f64(map: &BTreeMap<String, String>, key: &str, ctx: &str) -> Result<f64> {
+    map.get(key)
+        .ok_or_else(|| Error::Config(format!("{ctx}: missing '{key}'")))?
+        .parse()
+        .map_err(|_| Error::Config(format!("{ctx}: '{key}' is not a number")))
+}
+
+fn get_f64_or(map: &BTreeMap<String, String>, key: &str, default: f64, ctx: &str) -> Result<f64> {
+    match map.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            v.parse().map_err(|_| Error::Config(format!("{ctx}: '{key}' is not a number")))
+        }
+    }
+}
+
+/// Build [`NetworkParams`] from a parsed file: `[level.N]` sections for
+/// N = 1..D (must be contiguous from 1), optional top-level
+/// `combine_us_per_byte`.
+pub fn network_params(ini: &Ini) -> Result<NetworkParams> {
+    let mut levels = Vec::new();
+    for n in 1.. {
+        let name = format!("level.{n}");
+        let Some(sec) = ini.sections.get(&name) else { break };
+        let ctx = format!("[{name}]");
+        let mut lp = LinkParams::new(
+            get_f64(sec, "latency_us", &ctx)?,
+            get_f64(sec, "bandwidth_mb_s", &ctx)?,
+        )
+        .with_overheads(
+            get_f64_or(sec, "send_overhead_us", 1.0, &ctx)?,
+            get_f64_or(sec, "recv_overhead_us", 1.0, &ctx)?,
+        );
+        if sec.get("overlapped").map(String::as_str) == Some("true") {
+            lp = lp.overlapped();
+        }
+        levels.push(lp);
+    }
+    if levels.is_empty() {
+        return Err(Error::Config("no [level.N] sections (need at least [level.1])".into()));
+    }
+    // reject gaps / extra levels beyond the contiguous prefix
+    for name in ini.sections.keys() {
+        if let Some(idx) = name.strip_prefix("level.") {
+            let idx: usize = idx
+                .parse()
+                .map_err(|_| Error::Config(format!("bad section [{name}]")))?;
+            if idx == 0 || idx > levels.len() {
+                return Err(Error::Config(format!(
+                    "[{name}] out of order: levels must be contiguous from 1"
+                )));
+            }
+        }
+    }
+    let mut params = NetworkParams::new(levels);
+    if let Some(v) = ini.top.get("combine_us_per_byte") {
+        params = params.with_combine_us_per_byte(
+            v.parse().map_err(|_| Error::Config("combine_us_per_byte not a number".into()))?,
+        );
+    }
+    Ok(params)
+}
+
+/// Load network params from a file path.
+pub fn network_params_from_file(path: &str) -> Result<NetworkParams> {
+    let src = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+    network_params(&parse(&src)?)
+}
+
+/// Serialize params back to the file format (round-trips through
+/// [`network_params`]; used by `gridcollect calibrate --out`).
+pub fn render_network_params(p: &NetworkParams) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("combine_us_per_byte = {}\n", p.combine_us_per_byte));
+    for (i, l) in p.per_sep.iter().enumerate() {
+        out.push_str(&format!(
+            "\n[level.{}]\nlatency_us = {}\nbandwidth_mb_s = {}\nsend_overhead_us = {}\nrecv_overhead_us = {}\noverlapped = {}\n",
+            i + 1,
+            l.latency_us,
+            l.bandwidth_mb_s,
+            l.send_overhead_us,
+            l.recv_overhead_us,
+            !l.sender_serializes
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+
+    const SAMPLE: &str = r#"
+        # a grid
+        combine_us_per_byte = 0.01
+
+        [level.1]
+        latency_us = 30000   # WAN
+        bandwidth_mb_s = 2.0
+        send_overhead_us = 60
+        recv_overhead_us = 60
+
+        [level.2]
+        latency_us = 500
+        bandwidth_mb_s = 10
+    "#;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let ini = parse(SAMPLE).unwrap();
+        assert_eq!(ini.top["combine_us_per_byte"], "0.01");
+        assert_eq!(ini.sections["level.1"]["latency_us"], "30000");
+        assert_eq!(ini.sections.len(), 2);
+    }
+
+    #[test]
+    fn builds_network_params() {
+        let p = network_params(&parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(p.n_levels(), 2);
+        assert_eq!(p.at_sep(1).latency_us, 30000.0);
+        assert_eq!(p.at_sep(1).send_overhead_us, 60.0);
+        assert_eq!(p.at_sep(2).bandwidth_mb_s, 10.0);
+        assert_eq!(p.at_sep(2).send_overhead_us, 1.0); // default
+        assert!((p.combine_us_per_byte - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("just words\n").is_err());
+        assert!(parse("[]\n").is_err());
+        assert!(parse("= 3\n").is_err());
+        assert!(network_params(&parse("x = 1\n").unwrap()).is_err()); // no levels
+        let gap = "[level.1]\nlatency_us=1\nbandwidth_mb_s=1\n[level.3]\nlatency_us=1\nbandwidth_mb_s=1\n";
+        assert!(network_params(&parse(gap).unwrap()).is_err());
+        let bad = "[level.1]\nlatency_us=abc\nbandwidth_mb_s=1\n";
+        assert!(network_params(&parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn round_trips_presets() {
+        for p in [presets::paper_grid(), presets::deep_grid(), presets::cluster_of_smps()] {
+            let text = render_network_params(&p);
+            let back = network_params(&parse(&text).unwrap()).unwrap();
+            assert_eq!(back.n_levels(), p.n_levels());
+            for sep in 1..=p.n_levels() {
+                assert_eq!(back.at_sep(sep), p.at_sep(sep), "sep {sep}");
+            }
+            assert!((back.combine_us_per_byte - p.combine_us_per_byte).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn overlapped_flag_parses() {
+        let src = "[level.1]\nlatency_us=1\nbandwidth_mb_s=1\noverlapped = true\n";
+        let p = network_params(&parse(src).unwrap()).unwrap();
+        assert!(!p.at_sep(1).sender_serializes);
+    }
+}

@@ -1,0 +1,298 @@
+//! Experiment drivers: parameterized sweeps behind every table/figure in
+//! DESIGN.md §6, shared by the benches, the examples and the CLI.
+
+use crate::analytic::TwoTier;
+use crate::collectives::CollectiveEngine;
+use crate::coordinator::timing_app::{self, TimingPoint};
+use crate::error::Result;
+use crate::model::{presets, NetworkParams};
+use crate::netsim::{Combiner, NativeCombiner, ReduceOp};
+use crate::topology::{Communicator, TopologySpec};
+use crate::tree::{build_strategy_tree, LevelPolicy, Strategy, TreeShape};
+use crate::util::fmt::{self, Table};
+
+/// E1 — Fig. 8: the full rotation timing for the paper's 48-process
+/// grid, one row per (size, strategy).
+pub fn fig8_table(sizes: &[usize], combiner: &dyn Combiner) -> Result<(Table, Vec<TimingPoint>)> {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let params = presets::paper_grid();
+    let pts = timing_app::fig8_sweep(&comm, &params, sizes, &Strategy::ALL, combiner)?;
+    let mut t = Table::new(&["msg size", "strategy", "rotation total", "mean bcast", "WAN msgs"]);
+    for p in &pts {
+        t.row(&[
+            fmt::bytes(p.bytes),
+            p.strategy.name().to_string(),
+            fmt::time_us(p.total_us),
+            fmt::time_us(p.mean_bcast_us),
+            p.wan_msgs.to_string(),
+        ]);
+    }
+    Ok((t, pts))
+}
+
+/// E2 — §4 cost model: predicted vs simulated binomial/multilevel
+/// broadcast times for P processes over C clusters.
+///
+/// The §4 closed form charges a *single* slow term for the multilevel
+/// tree; that is exact in the latency-dominated postal regime the paper
+/// invokes (Bar-Noy & Kipnis), i.e. small messages — use `bytes` ≲ a few
+/// KiB. For bandwidth-dominated messages the flat WAN stage serializes on
+/// the root's uplink and the optimal WAN shape flattens out (§6;
+/// `wan_shape_ablation` quantifies exactly this).
+pub fn cost_model_table(bytes: usize) -> Result<Table> {
+    let params = presets::paper_grid();
+    let tt = TwoTier { slow: params.per_sep[0], fast: params.per_sep[2] };
+    let mut t = Table::new(&[
+        "P", "C", "analytic binomial", "analytic multilevel", "sim binomial", "sim multilevel",
+        "sim speedup", "asymptote log2(C)",
+    ]);
+    for (p, c) in [(16, 2), (32, 4), (64, 8), (128, 16)] {
+        let spec = TopologySpec::uniform(c, 1, p / c)?;
+        let comm = Communicator::world(&spec);
+        let data = vec![0.0f32; bytes / 4];
+        let sim_b = CollectiveEngine::new(&comm, params.clone(), Strategy::Unaware)
+            .bcast(0, &data)?
+            .sim
+            .makespan_us;
+        let sim_m = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
+            .bcast(0, &data)?
+            .sim
+            .makespan_us;
+        t.row(&[
+            p.to_string(),
+            c.to_string(),
+            fmt::time_us(tt.binomial_bcast_us(p, c, bytes)),
+            fmt::time_us(tt.multilevel_bcast_us(p, c, bytes)),
+            fmt::time_us(sim_b),
+            fmt::time_us(sim_m),
+            format!("{:.2}x", sim_b / sim_m),
+            format!("{:.2}", tt.asymptotic_speedup(c)),
+        ]);
+    }
+    Ok(t)
+}
+
+/// E8 — all five collectives under every strategy on the paper grid.
+pub fn collectives_suite_table(bytes: usize, combiner: &dyn Combiner) -> Result<Table> {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let params = presets::paper_grid();
+    let n = comm.size();
+    let elems = bytes / 4;
+    let mut t = Table::new(&["op", "strategy", "makespan", "WAN msgs", "total msgs"]);
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, params.clone(), s).with_combiner(combiner);
+        let data = vec![1.0f32; elems];
+        let contributions: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; elems]).collect();
+        let seg: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; elems / n.max(1) + 1]).collect();
+        let rows: Vec<(&str, crate::netsim::SimResult)> = vec![
+            ("bcast", e.bcast(0, &data)?.sim),
+            ("reduce", e.reduce(0, ReduceOp::Sum, &contributions)?.sim),
+            ("barrier", e.barrier()?),
+            ("gather", e.gather(0, &seg)?.sim),
+            ("scatter", e.scatter(0, &seg)?.sim),
+        ];
+        for (op, sim) in rows {
+            t.row(&[
+                op.to_string(),
+                s.name().to_string(),
+                fmt::time_us(sim.makespan_us),
+                sim.wan_messages().to_string(),
+                sim.msgs_by_sep.iter().sum::<u64>().to_string(),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// E9 — §6 ablation: tree shape at the WAN level (flat vs binomial vs
+/// chain vs Fibonacci-λ) for a many-site grid.
+pub fn wan_shape_ablation(sites: usize, bytes: usize) -> Result<Table> {
+    let spec = TopologySpec::uniform(sites, 2, 4)?;
+    let comm = Communicator::world(&spec);
+    let params = presets::paper_grid();
+    let data = vec![0.5f32; bytes / 4];
+    let mut t = Table::new(&["WAN shape", "makespan", "WAN msgs"]);
+    let shapes: Vec<(String, LevelPolicy)> = vec![
+        ("flat (paper)".into(), LevelPolicy::paper()),
+        ("binomial".into(), LevelPolicy::all_binomial()),
+        (
+            "chain".into(),
+            LevelPolicy { shapes: vec![TreeShape::Chain, TreeShape::Binomial] },
+        ),
+        (
+            "fibonacci λ=2".into(),
+            LevelPolicy { shapes: vec![TreeShape::Fibonacci(2), TreeShape::Binomial] },
+        ),
+        (
+            "fibonacci λ=4".into(),
+            LevelPolicy { shapes: vec![TreeShape::Fibonacci(4), TreeShape::Binomial] },
+        ),
+    ];
+    for (name, policy) in shapes {
+        let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
+            .with_policy(policy);
+        let out = e.bcast(0, &data)?;
+        t.row(&[
+            name,
+            fmt::time_us(out.sim.makespan_us),
+            out.sim.wan_messages().to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// E10 — scaling with the number of sites at fixed total processes.
+pub fn site_scaling_table(bytes: usize) -> Result<Table> {
+    let params = presets::paper_grid();
+    let data = vec![0.25f32; bytes / 4];
+    let mut t = Table::new(&["sites", "procs", "binomial", "multilevel", "speedup"]);
+    for sites in [2usize, 4, 8, 16] {
+        let per = 64 / sites;
+        let spec = TopologySpec::uniform(sites, 1, per)?;
+        let comm = Communicator::world(&spec);
+        let b = CollectiveEngine::new(&comm, params.clone(), Strategy::Unaware)
+            .bcast(0, &data)?
+            .sim
+            .makespan_us;
+        let m = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
+            .bcast(0, &data)?
+            .sim
+            .makespan_us;
+        t.row(&[
+            sites.to_string(),
+            "64".into(),
+            fmt::time_us(b),
+            fmt::time_us(m),
+            format!("{:.2}x", b / m),
+        ]);
+    }
+    Ok(t)
+}
+
+/// E7/E10 — root-placement sensitivity: the binomial tree's cost varies
+/// with the root's position, the multilevel tree's does not (much).
+pub fn root_sensitivity_table(bytes: usize) -> Result<Table> {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let params = presets::paper_grid();
+    let data = vec![0.5f32; bytes / 4];
+    let mut t = Table::new(&["strategy", "min over roots", "max over roots", "spread"]);
+    for s in [Strategy::Unaware, Strategy::Multilevel] {
+        let e = CollectiveEngine::new(&comm, params.clone(), s);
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for root in 0..comm.size() {
+            let us = e.bcast(root, &data)?.sim.makespan_us;
+            lo = lo.min(us);
+            hi = hi.max(us);
+        }
+        t.row(&[
+            s.name().to_string(),
+            fmt::time_us(lo),
+            fmt::time_us(hi),
+            format!("{:.2}x", hi / lo),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Per-link-class message/byte accounting for one broadcast (E4/E5).
+pub fn message_accounting(comm: &Communicator, strategy: Strategy, bytes: usize) -> Result<Table> {
+    let params = presets::paper_grid();
+    let e = CollectiveEngine::new(comm, params, strategy);
+    let out = e.bcast(0, &vec![0.0f32; bytes / 4])?;
+    let n_levels = comm.clustering().n_levels();
+    let mut t = Table::new(&["link class", "messages", "bytes"]);
+    for (i, (&m, &b)) in out.sim.msgs_by_sep.iter().zip(&out.sim.bytes_by_sep).enumerate() {
+        t.row(&[
+            crate::model::sep_name(i + 1, n_levels).to_string(),
+            m.to_string(),
+            fmt::bytes(b as usize),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Render all four strategy trees for a topology (tree explorer).
+pub fn render_strategy_trees(spec: &TopologySpec, root: usize) -> Result<String> {
+    let comm = Communicator::world(spec);
+    let machines = spec.machines();
+    let label = |r: usize| {
+        let m = machines
+            .iter()
+            .rev()
+            .find(|m| m.first_rank <= r)
+            .expect("rank within some machine");
+        format!("r{r}[{}]", m.name)
+    };
+    let mut out = String::new();
+    for s in Strategy::ALL {
+        let t = build_strategy_tree(&comm, root, s, &LevelPolicy::paper())?;
+        out.push_str(&format!("--- {} (root {root}) ---\n", s.name()));
+        out.push_str(&t.render(label));
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Cheap default combiner for CLI paths that don't need PJRT.
+pub fn native() -> &'static NativeCombiner {
+    static N: NativeCombiner = NativeCombiner;
+    &N
+}
+
+/// Sweep helper shared by benches: build the paper-grid communicator.
+pub fn paper_comm() -> Communicator {
+    Communicator::world(&TopologySpec::paper_experiment())
+}
+
+/// Default parameter set for CLI paths.
+pub fn paper_params() -> NetworkParams {
+    presets::paper_grid()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_table_has_all_rows() {
+        let (t, pts) = fig8_table(&[1024, 8192], native()).unwrap();
+        assert_eq!(t.n_rows(), 8);
+        assert_eq!(pts.len(), 8);
+    }
+
+    #[test]
+    fn cost_model_rows() {
+        let t = cost_model_table(65536).unwrap();
+        assert_eq!(t.n_rows(), 4);
+    }
+
+    #[test]
+    fn suite_covers_5_ops_x_4_strategies() {
+        let t = collectives_suite_table(4096, native()).unwrap();
+        assert_eq!(t.n_rows(), 20);
+    }
+
+    #[test]
+    fn ablation_and_scaling_run() {
+        assert_eq!(wan_shape_ablation(6, 16384).unwrap().n_rows(), 5);
+        assert_eq!(site_scaling_table(16384).unwrap().n_rows(), 4);
+        assert_eq!(root_sensitivity_table(16384).unwrap().n_rows(), 2);
+    }
+
+    #[test]
+    fn accounting_rows_match_levels() {
+        let comm = paper_comm();
+        let t = message_accounting(&comm, Strategy::Multilevel, 4096).unwrap();
+        assert_eq!(t.n_rows(), 3);
+    }
+
+    #[test]
+    fn tree_rendering_contains_all_strategies() {
+        let s = render_strategy_trees(&TopologySpec::paper_fig1(), 0).unwrap();
+        for name in ["mpich-binomial", "magpie-machine", "magpie-site", "multilevel"] {
+            assert!(s.contains(name), "missing {name}");
+        }
+        assert!(s.contains("r10[O2Ka]"));
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordination: the Fig. 7 timing application, the experiment drivers
+//! behind every reproduced table/figure, and the end-to-end data-parallel
+//! training orchestrator.
+
+pub mod experiment;
+pub mod report;
+pub mod timing_app;
+pub mod training;
+
+pub use timing_app::{ack_barrier_program, default_sizes, fig8_sweep, run_point, TimingPoint};
+pub use training::{train, StepLog, TrainConfig};

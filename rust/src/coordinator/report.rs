@@ -1,0 +1,139 @@
+//! Trace reporting: ASCII Gantt charts of simulated collective
+//! executions and CSV trace export — the observability layer for
+//! debugging tree schedules and for EXPERIMENTS.md figures.
+
+use crate::netsim::{SimResult, TraceKind};
+use crate::util::fmt;
+
+/// Render an ASCII Gantt chart of the trace: one row per rank, time
+/// bucketed into `width` columns. `S` marks a send start, `R` a receive
+/// completion, `-` spans in-between activity.
+pub fn gantt(sim: &SimResult, width: usize) -> String {
+    let width = width.max(10);
+    if sim.trace.is_empty() {
+        return String::from("(no trace recorded — build the engine with .with_trace())\n");
+    }
+    let n = sim.finish_us.len();
+    let t_max = sim.makespan_us.max(1e-9);
+    let col = |t: f64| -> usize { ((t / t_max) * (width - 1) as f64).round() as usize };
+    let mut rows: Vec<Vec<u8>> = vec![vec![b' '; width]; n];
+    // fill activity spans: first event to finish time
+    let mut first_event = vec![f64::INFINITY; n];
+    for ev in &sim.trace {
+        first_event[ev.rank] = first_event[ev.rank].min(ev.t_us);
+    }
+    for r in 0..n {
+        if first_event[r].is_finite() {
+            let a = col(first_event[r]);
+            let b = col(sim.finish_us[r]);
+            for c in a..=b.min(width - 1) {
+                rows[r][c] = b'-';
+            }
+        }
+    }
+    for ev in &sim.trace {
+        let c = col(ev.t_us);
+        rows[ev.rank][c] = match ev.kind {
+            TraceKind::SendStart => b'S',
+            TraceKind::RecvDone => b'R',
+        };
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "time 0 .. {} ({} cols; S=send start, R=recv done)\n",
+        fmt::time_us(t_max),
+        width
+    ));
+    for (r, row) in rows.iter().enumerate() {
+        out.push_str(&format!("r{r:<3} |{}|\n", String::from_utf8_lossy(row)));
+    }
+    out
+}
+
+/// Export the trace as CSV (`t_us,rank,kind,peer,tag,bytes,sep`).
+pub fn trace_csv(sim: &SimResult) -> String {
+    let mut out = String::from("t_us,rank,kind,peer,tag,bytes,sep\n");
+    for ev in &sim.trace {
+        out.push_str(&format!(
+            "{:.3},{},{},{},{},{},{}\n",
+            ev.t_us,
+            ev.rank,
+            match ev.kind {
+                TraceKind::SendStart => "send",
+                TraceKind::RecvDone => "recv",
+            },
+            ev.peer,
+            ev.tag,
+            ev.bytes,
+            ev.sep
+        ));
+    }
+    out
+}
+
+/// One-line per-level summary of a simulation.
+pub fn level_summary(sim: &SimResult, n_levels: usize) -> String {
+    let mut parts = Vec::new();
+    for (i, (&m, &b)) in sim.msgs_by_sep.iter().zip(&sim.bytes_by_sep).enumerate() {
+        parts.push(format!(
+            "{}: {m} msgs / {}",
+            crate::model::sep_name(i + 1, n_levels),
+            fmt::bytes(b as usize)
+        ));
+    }
+    format!("makespan {} | {}", fmt::time_us(sim.makespan_us), parts.join(" | "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CollectiveEngine;
+    use crate::model::presets;
+    use crate::topology::{Communicator, TopologySpec};
+    use crate::tree::Strategy;
+
+    fn traced_sim() -> SimResult {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+            .with_trace();
+        e.bcast(0, &[1.0f32; 512]).unwrap().sim
+    }
+
+    #[test]
+    fn gantt_renders_all_ranks() {
+        let sim = traced_sim();
+        let g = gantt(&sim, 60);
+        assert_eq!(g.lines().count(), 21); // header + 20 ranks
+        assert!(g.contains('S'));
+        assert!(g.contains('R'));
+        // root row has sends
+        assert!(g.lines().nth(1).unwrap().contains('S'));
+    }
+
+    #[test]
+    fn gantt_without_trace_is_graceful() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        let sim = e.bcast(0, &[1.0f32; 16]).unwrap().sim;
+        assert!(gantt(&sim, 40).contains("no trace"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let sim = traced_sim();
+        let csv = trace_csv(&sim);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "t_us,rank,kind,peer,tag,bytes,sep");
+        assert_eq!(lines.len(), 1 + sim.trace.len());
+        assert!(lines[1].contains("send"));
+    }
+
+    #[test]
+    fn summary_mentions_all_levels() {
+        let sim = traced_sim();
+        let s = level_summary(&sim, 3);
+        assert!(s.contains("WAN"));
+        assert!(s.contains("LAN"));
+        assert!(s.contains("intra-machine"));
+    }
+}

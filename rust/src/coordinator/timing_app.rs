@@ -1,0 +1,180 @@
+//! The paper's Figure-7 broadcast timing application.
+//!
+//! For each message size M: barrier, then every rank takes a turn as the
+//! broadcast root, with an **ack-barrier** (every rank sends ACK to rank
+//! 0; rank 0 answers each with GO, one at a time) after each broadcast to
+//! kill inter-broadcast pipelining. The reported number for M is the total
+//! virtual time of the root rotation — exactly what `t1 - t0` measures in
+//! Fig. 7.
+
+use crate::collectives::CollectiveEngine;
+use crate::error::Result;
+use crate::model::NetworkParams;
+use crate::netsim::{run, Combiner, Merge, NativeCombiner, Payload, Program, SendPart, SimConfig};
+use crate::topology::Communicator;
+use crate::tree::Strategy;
+
+/// One sweep point of the Fig. 8 curve.
+#[derive(Clone, Debug)]
+pub struct TimingPoint {
+    pub bytes: usize,
+    pub strategy: Strategy,
+    /// Total virtual time for the full root rotation (us) — the paper's y-axis.
+    pub total_us: f64,
+    /// Mean per-broadcast time (us), ack-barrier excluded.
+    pub mean_bcast_us: f64,
+    /// WAN messages across the whole rotation (broadcasts only).
+    pub wan_msgs: u64,
+    /// All messages across the rotation (broadcasts only).
+    pub total_msgs: u64,
+}
+
+/// The paper's hand-rolled ack-barrier (§4): flat fan-in of ACKs to rank
+/// 0, then rank 0 sends GO to each rank one at a time. Deliberately *not*
+/// the (reimplemented, topology-aware) MPI_Barrier, for the reason the
+/// paper gives.
+pub fn ack_barrier_program(n: usize, tag: u64) -> Program {
+    let mut p = Program::new(n);
+    for r in 1..n {
+        p.send(r, 0, tag, SendPart::Empty);
+    }
+    for r in 1..n {
+        p.recv(0, r, tag, Merge::Discard);
+    }
+    for r in 1..n {
+        p.send(0, r, tag + 1, SendPart::Empty);
+        p.recv(r, 0, tag + 1, Merge::Discard);
+    }
+    p
+}
+
+/// Run the Fig. 7 application for one (strategy, message size) pair.
+pub fn run_point(
+    comm: &Communicator,
+    params: &NetworkParams,
+    strategy: Strategy,
+    bytes: usize,
+    combiner: &dyn Combiner,
+) -> Result<TimingPoint> {
+    assert_eq!(bytes % 4, 0, "message size must be f32-aligned");
+    let n = comm.size();
+    let data = vec![1.0f32; bytes / 4];
+    let engine = CollectiveEngine::new(comm, params.clone(), strategy).with_combiner(combiner);
+    let ack_cfg = SimConfig::new(params.clone());
+
+    let mut total_us = 0.0;
+    let mut bcast_us_sum = 0.0;
+    let mut wan_msgs = 0;
+    let mut total_msgs = 0;
+    for root in 0..n {
+        // measurement path: no per-rank payload materialization
+        let sim = engine.bcast_sim(root, &data)?;
+        total_us += sim.makespan_us;
+        bcast_us_sum += sim.makespan_us;
+        wan_msgs += sim.wan_messages();
+        total_msgs += sim.msgs_by_sep.iter().sum::<u64>();
+        // ack barrier between broadcasts
+        let ack = ack_barrier_program(n, 1_000_000 + root as u64 * 4);
+        let sim = run(
+            comm.clustering(),
+            &ack,
+            vec![Payload::empty(); n],
+            &ack_cfg,
+            &NativeCombiner,
+        )?;
+        total_us += sim.makespan_us;
+    }
+    Ok(TimingPoint {
+        bytes,
+        strategy,
+        total_us,
+        mean_bcast_us: bcast_us_sum / n as f64,
+        wan_msgs,
+        total_msgs,
+    })
+}
+
+/// Full Fig. 8 sweep: all strategies × all message sizes.
+pub fn fig8_sweep(
+    comm: &Communicator,
+    params: &NetworkParams,
+    sizes: &[usize],
+    strategies: &[Strategy],
+    combiner: &dyn Combiner,
+) -> Result<Vec<TimingPoint>> {
+    let mut out = Vec::with_capacity(sizes.len() * strategies.len());
+    for &bytes in sizes {
+        for &s in strategies {
+            out.push(run_point(comm, params, s, bytes, combiner)?);
+        }
+    }
+    Ok(out)
+}
+
+/// The default Fig. 8 message-size grid: 1 KiB to 1 MiB, doubling.
+pub fn default_sizes() -> Vec<usize> {
+    (0..=10).map(|i| 1024usize << i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use crate::topology::TopologySpec;
+
+    #[test]
+    fn ack_barrier_is_balanced_and_sequential() {
+        let p = ack_barrier_program(4, 100);
+        p.validate().unwrap();
+        // 2*(n-1) messages
+        let total: usize = p.actions.iter().map(|a| a.len()).sum();
+        assert_eq!(total, 4 * 3);
+    }
+
+    #[test]
+    fn fig8_ordering_holds_at_64k() {
+        // The paper's experiment topology; one representative size.
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        let params = presets::paper_grid();
+        let get = |s: Strategy| {
+            run_point(&comm, &params, s, 65536, &NativeCombiner).unwrap().total_us
+        };
+        let unaware = get(Strategy::Unaware);
+        let machine = get(Strategy::TwoLevelMachine);
+        let site = get(Strategy::TwoLevelSite);
+        let multi = get(Strategy::Multilevel);
+        // Fig. 8 ordering: multilevel fastest; every topology-aware
+        // variant beats the binomial tree.
+        assert!(multi < site, "multilevel {multi} !< site {site}");
+        assert!(multi < machine, "multilevel {multi} !< machine {machine}");
+        assert!(site < unaware);
+        assert!(machine < unaware);
+    }
+
+    #[test]
+    fn multilevel_wan_messages_one_per_bcast() {
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        let params = presets::paper_grid();
+        let pt =
+            run_point(&comm, &params, Strategy::Multilevel, 4096, &NativeCombiner).unwrap();
+        // one WAN message per broadcast, one broadcast per rank
+        assert_eq!(pt.wan_msgs, comm.size() as u64);
+    }
+
+    #[test]
+    fn sweep_shape() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let params = presets::paper_grid();
+        let pts = fig8_sweep(
+            &comm,
+            &params,
+            &[1024, 4096],
+            &[Strategy::Unaware, Strategy::Multilevel],
+            &NativeCombiner,
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 4);
+        // larger messages cost more, same strategy
+        assert!(pts[0].total_us < pts[2].total_us);
+    }
+}

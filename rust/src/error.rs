@@ -1,0 +1,102 @@
+//! Unified error type for the gridcollect library.
+//!
+//! Hand-rolled (no `thiserror` in the offline vendor set); implements
+//! `std::error::Error` + `Display` and converts from the error types of the
+//! substrates (RSL parsing, config parsing, simulator, runtime).
+
+use std::fmt;
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions surfaced by the public API.
+#[derive(Debug)]
+pub enum Error {
+    /// RSL script could not be parsed (position, message).
+    RslParse { line: usize, col: usize, msg: String },
+    /// Topology specification is structurally invalid.
+    TopologySpec(String),
+    /// Config file / key-value parse error.
+    Config(String),
+    /// CLI argument error.
+    Cli(String),
+    /// Communicator misuse (rank out of range, bad split, ...).
+    Comm(String),
+    /// Tree construction or validation failure.
+    Tree(String),
+    /// Collective schedule construction/validation failure.
+    Schedule(String),
+    /// The simulator detected a deadlock: no runnable rank before completion.
+    Deadlock { stuck_ranks: Vec<usize>, detail: String },
+    /// Simulator invariant violation.
+    Sim(String),
+    /// PJRT runtime error (artifact load, compile, execute).
+    Runtime(String),
+    /// Artifact missing or manifest inconsistent.
+    Artifact(String),
+    /// I/O error with path context.
+    Io { path: String, source: std::io::Error },
+    /// Numeric verification failed (expected vs got summary).
+    Verify(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::RslParse { line, col, msg } => {
+                write!(f, "RSL parse error at {line}:{col}: {msg}")
+            }
+            Error::TopologySpec(m) => write!(f, "invalid topology spec: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Cli(m) => write!(f, "CLI error: {m}"),
+            Error::Comm(m) => write!(f, "communicator error: {m}"),
+            Error::Tree(m) => write!(f, "tree error: {m}"),
+            Error::Schedule(m) => write!(f, "schedule error: {m}"),
+            Error::Deadlock { stuck_ranks, detail } => {
+                write!(f, "simulation deadlock (stuck ranks {stuck_ranks:?}): {detail}")
+            }
+            Error::Sim(m) => write!(f, "simulator error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Io { path, source } => write!(f, "I/O error on {path}: {source}"),
+            Error::Verify(m) => write!(f, "verification failure: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl Error {
+    /// Attach a path to an `std::io::Error`.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::RslParse { line: 3, col: 7, msg: "unexpected ')'".into() };
+        assert_eq!(e.to_string(), "RSL parse error at 3:7: unexpected ')'");
+        let e = Error::Deadlock { stuck_ranks: vec![1, 2], detail: "recv never matched".into() };
+        assert!(e.to_string().contains("stuck ranks [1, 2]"));
+    }
+
+    #[test]
+    fn io_source_is_chained() {
+        use std::error::Error as _;
+        let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "nope"));
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("/tmp/x"));
+    }
+}

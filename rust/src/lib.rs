@@ -1,0 +1,34 @@
+//! # gridcollect
+//!
+//! A production-grade reproduction of *"A Multilevel Approach to
+//! Topology-Aware Collective Operations in Computational Grids"*
+//! (Karonis, de Supinski, Foster, Gropp, Lusk, Lacour — 2002): multilevel
+//! topology-aware MPI collective operations, an RSL topology front-end, a
+//! discrete-event grid network simulator, and an AOT-compiled JAX/Pallas
+//! compute path driven from Rust via PJRT.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! - **L3** (this crate): clustering, tree builders, the five collectives,
+//!   the simulator, experiment drivers and CLI.
+//! - **L2** (`python/compile/model.py`): JAX compute graphs, AOT-lowered to
+//!   HLO text in `artifacts/`.
+//! - **L1** (`python/compile/kernels/`): Pallas reduction-combine kernels
+//!   called by L2.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod analytic;
+pub mod benchkit;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod model;
+pub mod runtime;
+pub mod tree;
+pub mod netsim;
+pub mod topology;
+pub mod util;
+
+pub use error::{Error, Result};

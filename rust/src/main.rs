@@ -1,0 +1,239 @@
+//! `gridcollect` — the L3 coordinator CLI.
+//!
+//! Subcommands map 1:1 onto the experiments in DESIGN.md §6:
+//!
+//! ```text
+//! gridcollect fig8 [--sizes 1k,...,1m] [--xla]     # E1: the headline figure
+//! gridcollect suite [--size 64k] [--xla]           # E8: 5 ops x 4 strategies
+//! gridcollect cost-model [--size 64k]              # E2: §4 analytic vs sim
+//! gridcollect ablation [--sites 8] [--size 64k]    # E9: WAN tree shapes
+//! gridcollect scaling [--size 64k]                 # E10: site-count scaling
+//! gridcollect roots [--size 64k]                   # E7: root sensitivity
+//! gridcollect tree [--spec fig1|experiment] [--root 0]   # E3-E5: tree shapes
+//! gridcollect rsl <script.rsl> [--root 0]          # E6: RSL front-end
+//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--xla]
+//! gridcollect gantt [--size 64k] [--strategy s] [--params file.net]
+//! gridcollect calibrate [--out params.net]        # measure combine us/B
+//! ```
+//!
+//! `--xla` routes reduce arithmetic through the AOT-compiled Pallas
+//! combine kernels via PJRT (requires `make artifacts`); default is the
+//! native combiner.
+
+use gridcollect::cli::Args;
+use gridcollect::coordinator::{experiment, timing_app, training};
+use gridcollect::error::{Error, Result};
+use gridcollect::model::presets;
+use gridcollect::netsim::Combiner;
+use gridcollect::runtime::{calibrate_us_per_byte, MlpRuntime, Runtime, XlaCombiner};
+use gridcollect::topology::{rsl, Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::fmt;
+
+const USAGE: &str = "usage: gridcollect <fig8|suite|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
+run `gridcollect help` or see rust/src/main.rs for flag details";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Open the PJRT runtime + XLA combiner when `--xla` is given.
+fn maybe_xla(args: &Args) -> Result<Option<(Runtime, XlaCombiner)>> {
+    if !args.has("xla") {
+        return Ok(None);
+    }
+    let rt = Runtime::open(
+        args.get("artifacts").map(Into::into).unwrap_or_else(gridcollect::runtime::artifacts::default_dir),
+    )?;
+    let c = XlaCombiner::open_default(&rt)?;
+    Ok(Some((rt, c)))
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw)?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "fig8" => {
+            let sizes = args.sizes(&timing_app::default_sizes())?;
+            let xla = maybe_xla(&args)?;
+            let combiner: &dyn Combiner = match &xla {
+                Some((_, c)) => c,
+                None => experiment::native(),
+            };
+            let (table, _) = experiment::fig8_table(&sizes, combiner)?;
+            println!("E1 / Figure 8 — rotating-root MPI_Bcast on the paper grid (48 procs):\n");
+            print!("{}", table.to_markdown());
+        }
+        "suite" => {
+            let size = args.get_size("size", 65536)?;
+            let xla = maybe_xla(&args)?;
+            let combiner: &dyn Combiner = match &xla {
+                Some((_, c)) => c,
+                None => experiment::native(),
+            };
+            println!("E8 — five collectives x four strategies ({}):\n", fmt::bytes(size));
+            print!("{}", experiment::collectives_suite_table(size, combiner)?.to_markdown());
+        }
+        "cost-model" => {
+            // Latency-dominated default (the regime where the §4 closed
+            // form is exact; see experiment::cost_model_table docs).
+            let size = args.get_size("size", 1024)?;
+            println!("E2 — §4 closed-form model vs simulator ({}):\n", fmt::bytes(size));
+            print!("{}", experiment::cost_model_table(size)?.to_markdown());
+        }
+        "ablation" => {
+            let sites = args.get_usize("sites", 8)?;
+            let size = args.get_size("size", 65536)?;
+            println!("E9 — WAN-level tree shape ablation ({sites} sites, {}):\n", fmt::bytes(size));
+            print!("{}", experiment::wan_shape_ablation(sites, size)?.to_markdown());
+        }
+        "scaling" => {
+            let size = args.get_size("size", 65536)?;
+            println!("E10 — site-count scaling at 64 procs ({}):\n", fmt::bytes(size));
+            print!("{}", experiment::site_scaling_table(size)?.to_markdown());
+        }
+        "roots" => {
+            let size = args.get_size("size", 65536)?;
+            println!("E7 — root-placement sensitivity ({}):\n", fmt::bytes(size));
+            print!("{}", experiment::root_sensitivity_table(size)?.to_markdown());
+        }
+        "tree" => {
+            let spec = match args.get_or("spec", "fig1") {
+                "fig1" => TopologySpec::paper_fig1(),
+                "experiment" => TopologySpec::paper_experiment(),
+                other => {
+                    // SxMxP, e.g. 4x2x8
+                    let parts: Vec<usize> =
+                        other.split('x').filter_map(|p| p.parse().ok()).collect();
+                    if parts.len() != 3 {
+                        return Err(Error::Cli(format!(
+                            "--spec must be fig1|experiment|SxMxP, got '{other}'"
+                        )));
+                    }
+                    TopologySpec::uniform(parts[0], parts[1], parts[2])?
+                }
+            };
+            let root = args.get_usize("root", 0)?;
+            print!("{}", experiment::render_strategy_trees(&spec, root)?);
+            let comm = Communicator::world(&spec);
+            for s in Strategy::ALL {
+                println!("--- {} message accounting (64 KiB bcast) ---", s.name());
+                print!("{}", experiment::message_accounting(&comm, s, 65536)?.to_markdown());
+            }
+        }
+        "rsl" => {
+            let path = args
+                .positional
+                .get(1)
+                .ok_or_else(|| Error::Cli("rsl: need a script path".into()))?;
+            let src = std::fs::read_to_string(path).map_err(|e| Error::io(path.clone(), e))?;
+            let spec = rsl::topology_from_script(&src)?;
+            println!(
+                "parsed RSL: {} machines, {} processes, {} levels",
+                spec.machines().len(),
+                spec.n_procs(),
+                spec.n_levels()
+            );
+            let root = args.get_usize("root", 0)?;
+            print!("{}", experiment::render_strategy_trees(&spec, root)?);
+        }
+        "train" => {
+            let rt = Runtime::open(
+                args.get("artifacts")
+                    .map(Into::into)
+                    .unwrap_or_else(gridcollect::runtime::artifacts::default_dir),
+            )?;
+            let mlp = MlpRuntime::open(&rt)?;
+            let xla_combiner;
+            let combiner: &dyn Combiner = if args.has("xla") {
+                xla_combiner = XlaCombiner::open_default(&rt)?;
+                &xla_combiner
+            } else {
+                experiment::native()
+            };
+            let comm = Communicator::world(&TopologySpec::paper_fig1());
+            let cfg = training::TrainConfig {
+                steps: args.get_usize("steps", 50)?,
+                lr: args.get_f32("lr", 0.1)?,
+                strategy: args.strategy(Strategy::Multilevel)?,
+                seed: args.get_usize("seed", 0)? as u64,
+            };
+            println!(
+                "E11 — data-parallel training: {} workers ({}), strategy {}, combiner {}",
+                comm.size(),
+                comm.name(),
+                cfg.strategy.name(),
+                combiner.name(),
+            );
+            let logs = training::train(&comm, &presets::paper_grid(), &mlp, combiner, &cfg)?;
+            for l in logs.iter().step_by((logs.len() / 10).max(1)) {
+                println!(
+                    "step {:>3}  loss {:.4}  comm {:>12}  wan_msgs {}  compute {:>10}",
+                    l.step,
+                    l.mean_loss,
+                    fmt::time_us(l.comm_us),
+                    l.wan_msgs,
+                    fmt::time_us(l.compute_wall_us)
+                );
+            }
+            let first = logs.first().unwrap();
+            let last = logs.last().unwrap();
+            println!(
+                "loss {:.4} -> {:.4} over {} steps; per-step comm {}",
+                first.mean_loss,
+                last.mean_loss,
+                logs.len(),
+                fmt::time_us(last.comm_us)
+            );
+        }
+        "gantt" => {
+            // Visualize one collective's simulated timeline.
+            let spec = TopologySpec::paper_fig1();
+            let comm = Communicator::world(&spec);
+            let size = args.get_size("size", 16384)?;
+            let strategy = args.strategy(Strategy::Multilevel)?;
+            let params = match args.get("params") {
+                Some(path) => gridcollect::config::network_params_from_file(path)?,
+                None => presets::paper_grid(),
+            };
+            let e = gridcollect::collectives::CollectiveEngine::new(&comm, params, strategy)
+                .with_trace();
+            let out = e.bcast(args.get_usize("root", 0)?, &vec![0.0f32; size / 4])?;
+            println!(
+                "{} bcast of {} on fig1 ({} ranks):",
+                strategy.name(),
+                fmt::bytes(size),
+                comm.size()
+            );
+            print!("{}", gridcollect::coordinator::report::gantt(&out.sim, 100));
+            println!(
+                "{}",
+                gridcollect::coordinator::report::level_summary(
+                    &out.sim,
+                    comm.clustering().n_levels()
+                )
+            );
+        }
+        "calibrate" => {
+            let rt = Runtime::open(gridcollect::runtime::artifacts::default_dir())?;
+            let c = XlaCombiner::open_default(&rt)?;
+            let us_per_byte = calibrate_us_per_byte(&c, 50);
+            println!("PJRT combine throughput: {:.6} us/byte ({:.1} MB/s)", us_per_byte, 1.0 / us_per_byte);
+            println!("suggested NetworkParams::combine_us_per_byte = {us_per_byte:.6}");
+            if let Some(path) = args.get("out") {
+                let params = presets::paper_grid().with_combine_us_per_byte(us_per_byte);
+                let text = gridcollect::config::render_network_params(&params);
+                std::fs::write(path, text).map_err(|e| Error::io(path, e))?;
+                println!("wrote {path} (paper_grid preset with calibrated combine cost)");
+            }
+        }
+        "help" | _ => {
+            println!("{USAGE}");
+        }
+    }
+    Ok(())
+}

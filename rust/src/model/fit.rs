@@ -1,0 +1,159 @@
+//! PLogP-style network parameter fitting (§6: "through parameterized
+//! studies of the network, determine optimal packet sizes"; Kielmann et
+//! al.). Measures point-to-point costs through the simulator (or any
+//! observation source) at a sweep of message sizes and fits per-level
+//! `LinkParams` by least squares — the calibration path a deployment
+//! would run at bootstrap.
+
+use crate::error::{Error, Result};
+use crate::model::{LinkParams, NetworkParams};
+use crate::netsim::{run, Merge, NativeCombiner, Payload, Program, SendPart, SimConfig};
+use crate::topology::Clustering;
+use crate::util::stats::linear_fit;
+
+/// One observation: a `bytes`-sized message between a fixed pair took
+/// `us` end-to-end (send start to receive completion).
+#[derive(Clone, Copy, Debug)]
+pub struct PingObservation {
+    pub bytes: usize,
+    pub us: f64,
+}
+
+/// Fit `(latency_us, bandwidth_mb_s)` from ping observations:
+/// `t = (latency + overheads) + bytes / bandwidth` is linear in bytes.
+/// The constant term bundles latency + send/recv overhead, exactly what a
+/// real PLogP measurement sees; we report it as `latency_us` with zero
+/// overheads (an equivalent parameterization).
+pub fn fit_link(observations: &[PingObservation]) -> Result<LinkParams> {
+    if observations.len() < 2 {
+        return Err(Error::Config("fit_link: need >= 2 observations".into()));
+    }
+    let xs: Vec<f64> = observations.iter().map(|o| o.bytes as f64).collect();
+    let ys: Vec<f64> = observations.iter().map(|o| o.us).collect();
+    let (intercept, slope) = linear_fit(&xs, &ys);
+    if slope <= 0.0 || intercept < 0.0 {
+        return Err(Error::Config(format!(
+            "fit_link: non-physical fit (intercept {intercept:.3}, slope {slope:.6})"
+        )));
+    }
+    Ok(LinkParams::new(intercept, 1.0 / slope).with_overheads(0.0, 0.0))
+}
+
+/// Measure a ping between `src` and `dst` of `bytes` under `params`
+/// through the simulation engine (end-to-end: send start at t=0 to recv
+/// completion at the receiver).
+pub fn measure_ping(
+    clustering: &Clustering,
+    params: &NetworkParams,
+    src: usize,
+    dst: usize,
+    bytes: usize,
+) -> Result<PingObservation> {
+    let n = clustering.n_ranks();
+    let mut p = Program::new(n);
+    p.send(src, dst, 1, SendPart::All);
+    p.recv(dst, src, 1, Merge::Replace);
+    let mut init = vec![Payload::empty(); n];
+    init[src] = Payload::single(src, vec![0.0f32; bytes / 4]);
+    let cfg = SimConfig::new(params.clone());
+    let sim = run(clustering, &p, init, &cfg, &NativeCombiner)?;
+    Ok(PingObservation { bytes, us: sim.finish_us[dst] })
+}
+
+/// Full bootstrap calibration: for every separation level present in the
+/// clustering, pick one representative pair, sweep message sizes, and fit
+/// that level's parameters. Returns fitted params ordered like
+/// `NetworkParams::per_sep`.
+pub fn calibrate(
+    clustering: &Clustering,
+    true_params: &NetworkParams,
+    sizes: &[usize],
+) -> Result<Vec<(usize, LinkParams)>> {
+    let n = clustering.n_ranks();
+    let mut out = Vec::new();
+    for sep in 1..=clustering.n_levels() {
+        // find a pair with this separation
+        let mut pair = None;
+        'outer: for a in 0..n {
+            for b in 0..n {
+                if a != b && clustering.sep(a, b) == sep {
+                    pair = Some((a, b));
+                    break 'outer;
+                }
+            }
+        }
+        let Some((a, b)) = pair else { continue };
+        let mut obs = Vec::with_capacity(sizes.len());
+        for &bytes in sizes {
+            obs.push(measure_ping(clustering, true_params, a, b, bytes)?);
+        }
+        out.push((sep, fit_link(&obs)?));
+    }
+    if out.is_empty() {
+        return Err(Error::Config("calibrate: no measurable pairs".into()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use crate::topology::TopologySpec;
+
+    #[test]
+    fn fit_recovers_synthetic_line() {
+        let obs: Vec<PingObservation> = [1024usize, 4096, 65536, 262144]
+            .iter()
+            .map(|&b| PingObservation { bytes: b, us: 500.0 + b as f64 / 25.0 })
+            .collect();
+        let l = fit_link(&obs).unwrap();
+        assert!((l.latency_us - 500.0).abs() < 1e-6);
+        assert!((l.bandwidth_mb_s - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_input() {
+        assert!(fit_link(&[PingObservation { bytes: 1, us: 1.0 }]).is_err());
+        // negative slope: time decreasing with size
+        let obs = [
+            PingObservation { bytes: 1000, us: 100.0 },
+            PingObservation { bytes: 2000, us: 50.0 },
+        ];
+        assert!(fit_link(&obs).is_err());
+    }
+
+    #[test]
+    fn calibration_recovers_preset_parameters() {
+        let spec = TopologySpec::paper_fig1();
+        let c = spec.clustering();
+        let truth = presets::paper_grid();
+        let sizes = [1024usize, 8192, 65536, 524288];
+        let fitted = calibrate(&c, &truth, &sizes).unwrap();
+        assert_eq!(fitted.len(), 3, "three levels measurable on fig1");
+        for (sep, l) in fitted {
+            let t = truth.at_sep(sep);
+            // bandwidth within 2%
+            let bw_err = (l.bandwidth_mb_s - t.bandwidth_mb_s).abs() / t.bandwidth_mb_s;
+            assert!(bw_err < 0.02, "sep {sep}: bw {} vs {}", l.bandwidth_mb_s, t.bandwidth_mb_s);
+            // intercept = latency + send/recv overheads
+            let expect_const = t.latency_us + t.send_overhead_us + t.recv_overhead_us;
+            let lat_err = (l.latency_us - expect_const).abs() / expect_const;
+            assert!(lat_err < 0.02, "sep {sep}: const {} vs {}", l.latency_us, expect_const);
+        }
+    }
+
+    #[test]
+    fn fitted_params_predict_unseen_size() {
+        let spec = TopologySpec::paper_fig1();
+        let c = spec.clustering();
+        let truth = presets::paper_grid();
+        let fitted = calibrate(&c, &truth, &[1024, 16384, 131072]).unwrap();
+        let (sep, l) = fitted[0]; // WAN
+        assert_eq!(sep, 1);
+        let true_obs = measure_ping(&c, &truth, 0, 10, 32768).unwrap();
+        let predicted = l.p2p_us(32768);
+        let err = (predicted - true_obs.us).abs() / true_obs.us;
+        assert!(err < 0.02, "predicted {predicted} vs measured {}", true_obs.us);
+    }
+}

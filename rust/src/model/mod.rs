@@ -1,0 +1,189 @@
+//! Point-to-point network cost models.
+//!
+//! The simulator prices a message by the **separation level** of its
+//! endpoints (see [`crate::topology::Clustering::sep`]): `sep==1` crosses
+//! the slowest boundary (WAN between level-1 clusters), deeper separations
+//! use progressively faster channels, and `sep == n_levels` is
+//! intra-machine. The per-link cost follows a LogGP-flavored postal model:
+//!
+//! ```text
+//! sender busy   : o_send + bytes/bandwidth        (serialization)
+//! wire          : latency
+//! receiver busy : o_recv
+//! arrival time  : t_send + o_send + bytes/bandwidth + latency
+//! ```
+//!
+//! Endpoint occupancy (not shared-link contention) is modeled — the same
+//! assumption the paper's §4 analysis and the postal/LogP literature make.
+
+pub mod fit;
+pub mod presets;
+
+/// Cost parameters of one channel class. Times in microseconds; bandwidth
+/// in bytes/us (== MB/s).
+///
+/// `sender_serializes` selects between the two classical injection
+/// models: `true` (LogGP-style — the sender's NIC is busy for the whole
+/// transfer, appropriate for LAN/shared-memory channels) and `false`
+/// (postal-style — the sender is busy only for `o` and transfers to
+/// distinct destinations proceed on independent wide-area paths, the
+/// assumption the paper's §4 analysis and MagPIe make for WAN links).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkParams {
+    pub latency_us: f64,
+    pub bandwidth_mb_s: f64,
+    pub send_overhead_us: f64,
+    pub recv_overhead_us: f64,
+    pub sender_serializes: bool,
+}
+
+impl LinkParams {
+    pub fn new(latency_us: f64, bandwidth_mb_s: f64) -> Self {
+        LinkParams {
+            latency_us,
+            bandwidth_mb_s,
+            send_overhead_us: 1.0,
+            recv_overhead_us: 1.0,
+            sender_serializes: true,
+        }
+    }
+
+    pub fn with_overheads(mut self, send_us: f64, recv_us: f64) -> Self {
+        self.send_overhead_us = send_us;
+        self.recv_overhead_us = recv_us;
+        self
+    }
+
+    /// Postal-style injection: sender busy only for the overhead;
+    /// transfers to distinct destinations overlap (independent paths).
+    pub fn overlapped(mut self) -> Self {
+        self.sender_serializes = false;
+        self
+    }
+
+    /// Time the sender is occupied injecting `bytes`.
+    #[inline]
+    pub fn sender_busy_us(&self, bytes: usize) -> f64 {
+        if self.sender_serializes {
+            self.send_overhead_us + bytes as f64 / self.bandwidth_mb_s
+        } else {
+            self.send_overhead_us
+        }
+    }
+
+    /// Delay from send start to availability at the receiver (always
+    /// includes the transfer time, whichever injection model is used).
+    #[inline]
+    pub fn arrival_delay_us(&self, bytes: usize) -> f64 {
+        self.send_overhead_us + bytes as f64 / self.bandwidth_mb_s + self.latency_us
+    }
+
+    /// One-way point-to-point cost (the `l + N/b` of §4).
+    #[inline]
+    pub fn p2p_us(&self, bytes: usize) -> f64 {
+        self.latency_us + bytes as f64 / self.bandwidth_mb_s
+    }
+}
+
+/// Per-level channel parameters plus local compute pricing.
+#[derive(Clone, Debug)]
+pub struct NetworkParams {
+    /// `per_sep[s]` prices messages whose endpoints have separation level
+    /// `s+1`: index 0 = the slowest (WAN) boundary, the last entry =
+    /// intra-machine. Length must equal the clustering's `n_levels()`.
+    pub per_sep: Vec<LinkParams>,
+    /// Local reduction-combine cost in us per byte (calibrated from the
+    /// measured PJRT combiner throughput; see `runtime::combiner`).
+    pub combine_us_per_byte: f64,
+}
+
+impl NetworkParams {
+    pub fn new(per_sep: Vec<LinkParams>) -> Self {
+        assert!(!per_sep.is_empty(), "need at least one level");
+        NetworkParams { per_sep, combine_us_per_byte: 0.0005 } // ~2 GB/s default
+    }
+
+    /// Channel parameters for endpoints at separation `sep` (1-based;
+    /// values beyond the table clamp to the fastest/innermost entry, which
+    /// lets a deep clustering run against a shallower parameter table).
+    #[inline]
+    pub fn at_sep(&self, sep: usize) -> &LinkParams {
+        debug_assert!(sep >= 1);
+        let idx = (sep - 1).min(self.per_sep.len() - 1);
+        &self.per_sep[idx]
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.per_sep.len()
+    }
+
+    /// Combine cost for a payload of `bytes`.
+    #[inline]
+    pub fn combine_us(&self, bytes: usize) -> f64 {
+        self.combine_us_per_byte * bytes as f64
+    }
+
+    pub fn with_combine_us_per_byte(mut self, v: f64) -> Self {
+        self.combine_us_per_byte = v;
+        self
+    }
+
+    /// Uniform network (every level identical) — the topology-unaware
+    /// modeling assumption the paper argues against.
+    pub fn uniform(levels: usize, link: LinkParams) -> Self {
+        NetworkParams::new(vec![link; levels])
+    }
+}
+
+/// Human-readable names for the canonical 3-level grid's link classes.
+pub fn sep_name(sep: usize, n_levels: usize) -> &'static str {
+    if sep >= n_levels {
+        "intra-machine"
+    } else if sep == 1 {
+        "WAN"
+    } else if sep == 2 && n_levels >= 3 {
+        "LAN"
+    } else {
+        "mid-level"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_costs() {
+        let l = LinkParams::new(100.0, 10.0).with_overheads(5.0, 3.0);
+        // 1000 bytes at 10 MB/s = 100 us serialization.
+        assert!((l.sender_busy_us(1000) - 105.0).abs() < 1e-9);
+        assert!((l.arrival_delay_us(1000) - 205.0).abs() < 1e-9);
+        assert!((l.p2p_us(1000) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sep_indexing_and_clamp() {
+        let p = NetworkParams::new(vec![
+            LinkParams::new(1000.0, 1.0),
+            LinkParams::new(10.0, 100.0),
+        ]);
+        assert_eq!(p.at_sep(1).latency_us, 1000.0);
+        assert_eq!(p.at_sep(2).latency_us, 10.0);
+        // sep beyond table clamps to innermost.
+        assert_eq!(p.at_sep(5).latency_us, 10.0);
+    }
+
+    #[test]
+    fn combine_pricing() {
+        let p = NetworkParams::new(vec![LinkParams::new(1.0, 1.0)]).with_combine_us_per_byte(0.01);
+        assert!((p.combine_us(1000) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sep_names() {
+        assert_eq!(sep_name(1, 3), "WAN");
+        assert_eq!(sep_name(2, 3), "LAN");
+        assert_eq!(sep_name(3, 3), "intra-machine");
+        assert_eq!(sep_name(1, 1), "intra-machine");
+    }
+}

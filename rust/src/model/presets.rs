@@ -1,0 +1,95 @@
+//! Calibrated parameter presets for the simulated grids.
+//!
+//! Absolute values are era-plausible (2002 WAN/LAN/SMP numbers informed by
+//! the paper's testbed description and the MagPIe/PLogP measurements the
+//! paper cites); the reproduced *shapes* — who wins and where crossovers
+//! fall — are insensitive to the exact values, which `benches/` sweep.
+
+use super::{LinkParams, NetworkParams};
+
+/// The paper's experimental setting (§4): two sites over a transcontinental
+/// WAN; machines at one site share a LAN; processes within a machine use
+/// vendor MPI / shared memory. 3 levels: WAN / LAN / intra-machine.
+pub fn paper_grid() -> NetworkParams {
+    NetworkParams::new(vec![
+        // WAN: SDSC <-> ANL. ~30 ms one-way latency, ~2 MB/s sustained TCP.
+        // Overlapped injection: distinct site pairs use independent
+        // wide-area paths (the §4 / MagPIe assumption).
+        LinkParams::new(30_000.0, 2.0).with_overheads(60.0, 60.0),
+        // LAN at ANL: ~0.5 ms latency, ~10 MB/s TCP over fast ethernet.
+        LinkParams::new(500.0, 10.0).with_overheads(25.0, 25.0),
+        // Intra-machine (vendor MPI on the SP / shared memory on the O2K).
+        LinkParams::new(30.0, 150.0).with_overheads(2.0, 2.0),
+    ])
+    .with_combine_us_per_byte(0.002) // ~0.5 GB/s combine, 2002-era CPU
+}
+
+/// A modern-ish grid for ablations: faster absolute numbers, same ordering.
+pub fn modern_grid() -> NetworkParams {
+    NetworkParams::new(vec![
+        LinkParams::new(15_000.0, 100.0).with_overheads(10.0, 10.0),
+        LinkParams::new(100.0, 1_000.0).with_overheads(3.0, 3.0),
+        LinkParams::new(2.0, 10_000.0).with_overheads(0.5, 0.5),
+    ])
+    .with_combine_us_per_byte(0.0005)
+}
+
+/// 4-level variant (world / site / LAN / machine) for the deep-hierarchy
+/// experiments: campus backbone inserted between WAN and machine-room LAN.
+pub fn deep_grid() -> NetworkParams {
+    NetworkParams::new(vec![
+        LinkParams::new(30_000.0, 2.0).with_overheads(60.0, 60.0),
+        LinkParams::new(2_000.0, 5.0).with_overheads(40.0, 40.0),
+        LinkParams::new(500.0, 10.0).with_overheads(25.0, 25.0),
+        LinkParams::new(30.0, 150.0).with_overheads(2.0, 2.0),
+    ])
+    .with_combine_us_per_byte(0.002)
+}
+
+/// Cluster-of-SMPs (MPI-StarT's setting): 2 levels, interconnect + bus.
+pub fn cluster_of_smps() -> NetworkParams {
+    NetworkParams::new(vec![
+        LinkParams::new(100.0, 40.0).with_overheads(8.0, 8.0),
+        LinkParams::new(5.0, 200.0).with_overheads(1.0, 1.0),
+    ])
+    .with_combine_us_per_byte(0.002)
+}
+
+/// Uniform low-latency network (telephone-model assumption) — the regime
+/// where plain binomial trees are actually optimal; used as a control.
+pub fn uniform_lan(levels: usize) -> NetworkParams {
+    NetworkParams::uniform(levels, LinkParams::new(50.0, 50.0).with_overheads(5.0, 5.0))
+        .with_combine_us_per_byte(0.002)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_ordered_slow_to_fast() {
+        for p in [paper_grid(), modern_grid(), deep_grid(), cluster_of_smps()] {
+            for w in p.per_sep.windows(2) {
+                assert!(w[0].latency_us > w[1].latency_us, "latency must decrease inward");
+                assert!(
+                    w[0].bandwidth_mb_s < w[1].bandwidth_mb_s,
+                    "bandwidth must increase inward"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_grid_is_three_level() {
+        assert_eq!(paper_grid().n_levels(), 3);
+        assert_eq!(deep_grid().n_levels(), 4);
+    }
+
+    #[test]
+    fn wan_dominates_lan_by_an_order_of_magnitude() {
+        let p = paper_grid();
+        // The §1 claim: inter-level costs differ by >= 10x.
+        assert!(p.at_sep(1).p2p_us(1024) / p.at_sep(2).p2p_us(1024) > 10.0);
+        assert!(p.at_sep(2).p2p_us(1024) / p.at_sep(3).p2p_us(1024) > 5.0);
+    }
+}

@@ -1,0 +1,395 @@
+//! The discrete-event execution engine.
+//!
+//! Executes a [`Program`] over a communicator's clustering under a
+//! [`NetworkParams`] cost model. Timing follows the postal/LogGP
+//! conventions documented in [`crate::model`]: endpoint occupancy, no
+//! shared-link contention (§4 of the paper reasons under the same model).
+//!
+//! The engine is a deterministic worklist fixpoint rather than a global
+//! event heap: each rank's program is sequential, and a message's arrival
+//! time depends only on the *sender's* progress, so ranks can be advanced
+//! in any order until quiescence — with identical results. Quiescence
+//! before completion is a deadlock and is reported with the stuck ranks.
+
+use crate::error::{Error, Result};
+use crate::model::NetworkParams;
+use crate::netsim::payload::{Combiner, Payload, Rank};
+use crate::netsim::program::{Action, Merge, Program, SendPart};
+use crate::topology::Clustering;
+use std::collections::{HashMap, VecDeque};
+
+/// One trace record (enabled via `SimConfig::trace`).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub t_us: f64,
+    pub rank: Rank,
+    pub kind: TraceKind,
+    pub peer: Rank,
+    pub tag: u64,
+    pub bytes: usize,
+    pub sep: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    SendStart,
+    RecvDone,
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub params: NetworkParams,
+    /// Record per-message trace events (adds allocation; off for benches).
+    pub trace: bool,
+}
+
+impl SimConfig {
+    pub fn new(params: NetworkParams) -> Self {
+        SimConfig { params, trace: false }
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.trace = true;
+        self
+    }
+}
+
+/// Everything the simulation produces.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Per-rank local completion time (us).
+    pub finish_us: Vec<f64>,
+    /// max over ranks.
+    pub makespan_us: f64,
+    /// Message count by separation level (index `sep-1`; index 0 = WAN).
+    pub msgs_by_sep: Vec<u64>,
+    /// Bytes by separation level.
+    pub bytes_by_sep: Vec<u64>,
+    /// Number of combine invocations (reduce arithmetic).
+    pub combines: u64,
+    /// Final payload register of every rank (for semantic verification).
+    pub payloads: Vec<Payload>,
+    /// Trace (empty unless enabled).
+    pub trace: Vec<TraceEvent>,
+}
+
+impl SimResult {
+    /// Total messages at the WAN boundary (sep 1) — the paper's headline
+    /// count.
+    pub fn wan_messages(&self) -> u64 {
+        self.msgs_by_sep.first().copied().unwrap_or(0)
+    }
+}
+
+struct RankState {
+    idx: usize,
+    clock: f64,
+    payload: Payload,
+}
+
+/// Execute `prog` with the given initial payload registers.
+///
+/// `clustering` supplies `sep(src,dst)`; `initial[r]` seeds rank `r`'s
+/// payload register; `combiner` performs reduce arithmetic.
+pub fn run(
+    clustering: &Clustering,
+    prog: &Program,
+    initial: Vec<Payload>,
+    cfg: &SimConfig,
+    combiner: &dyn Combiner,
+) -> Result<SimResult> {
+    let n = prog.n_ranks();
+    if clustering.n_ranks() != n {
+        return Err(Error::Sim(format!(
+            "clustering has {} ranks, program has {n}",
+            clustering.n_ranks()
+        )));
+    }
+    if initial.len() != n {
+        return Err(Error::Sim(format!("initial payloads: {} != {n}", initial.len())));
+    }
+    let n_levels = clustering.n_levels();
+    let mut states: Vec<RankState> = initial
+        .into_iter()
+        .map(|payload| RankState { idx: 0, clock: 0.0, payload })
+        .collect();
+    // In-flight messages: (from, to, tag) -> FIFO of (arrival_time, payload).
+    let mut mailbox: HashMap<(Rank, Rank, u64), VecDeque<(f64, Payload)>> = HashMap::new();
+    let mut msgs_by_sep = vec![0u64; n_levels];
+    let mut bytes_by_sep = vec![0u64; n_levels];
+    let mut combines = 0u64;
+    let mut trace = Vec::new();
+
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for r in 0..n {
+            // Advance rank r as far as possible.
+            loop {
+                // Borrow the action in place (no clone: `SendPart::Ranks`
+                // carries key vectors that are expensive to copy per
+                // execution — §Perf L3 optimization #2).
+                let action = match prog.actions[r].get(states[r].idx) {
+                    None => break,
+                    Some(a) => a,
+                };
+                match *action {
+                    Action::Send { to, tag, ref part } => {
+                        let st = &mut states[r];
+                        let out = match part {
+                            SendPart::All => st.payload.clone(),
+                            SendPart::Ranks(rs) => st.payload.select(rs),
+                            SendPart::Empty => Payload::empty(),
+                        };
+                        let bytes = out.n_bytes();
+                        let sep = clustering.sep(r, to);
+                        let link = cfg.params.at_sep(sep);
+                        let start = st.clock;
+                        let arrival = start + link.arrival_delay_us(bytes);
+                        st.clock = start + link.sender_busy_us(bytes);
+                        st.idx += 1;
+                        msgs_by_sep[sep - 1] += 1;
+                        bytes_by_sep[sep - 1] += bytes as u64;
+                        if cfg.trace {
+                            trace.push(TraceEvent {
+                                t_us: start,
+                                rank: r,
+                                kind: TraceKind::SendStart,
+                                peer: to,
+                                tag,
+                                bytes,
+                                sep,
+                            });
+                        }
+                        mailbox.entry((r, to, tag)).or_default().push_back((arrival, out));
+                        progressed = true;
+                    }
+                    Action::Recv { from, tag, merge } => {
+                        let key = (from, r, tag);
+                        let msg = mailbox.get_mut(&key).and_then(|q| q.pop_front());
+                        let (arrival, incoming) = match msg {
+                            Some(m) => m,
+                            None => break, // blocked; try other ranks
+                        };
+                        let sep = clustering.sep(from, r);
+                        let link = cfg.params.at_sep(sep);
+                        let bytes = incoming.n_bytes();
+                        let st = &mut states[r];
+                        st.clock = st.clock.max(arrival) + link.recv_overhead_us;
+                        match merge {
+                            Merge::Replace => st.payload = incoming,
+                            Merge::Discard => {}
+                            Merge::Union => st
+                                .payload
+                                .union(incoming)
+                                .map_err(Error::Sim)?,
+                            Merge::Combine(op) => {
+                                st.clock += cfg.params.combine_us(bytes);
+                                combines += 1;
+                                st.payload
+                                    .combine(&incoming, op, combiner)
+                                    .map_err(Error::Sim)?;
+                            }
+                        }
+                        st.idx += 1;
+                        if cfg.trace {
+                            trace.push(TraceEvent {
+                                t_us: states[r].clock,
+                                rank: r,
+                                kind: TraceKind::RecvDone,
+                                peer: from,
+                                tag,
+                                bytes,
+                                sep,
+                            });
+                        }
+                        progressed = true;
+                    }
+                }
+            }
+            if states[r].idx < prog.actions[r].len() {
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+        if !progressed {
+            let stuck: Vec<usize> =
+                (0..n).filter(|&r| states[r].idx < prog.actions[r].len()).collect();
+            let detail = stuck
+                .iter()
+                .take(4)
+                .map(|&r| format!("rank {r} at action {:?}", prog.actions[r][states[r].idx]))
+                .collect::<Vec<_>>()
+                .join("; ");
+            return Err(Error::Deadlock { stuck_ranks: stuck, detail });
+        }
+    }
+
+    // Undelivered messages indicate a send with no matching recv.
+    for ((f, t, tag), q) in &mailbox {
+        if !q.is_empty() {
+            return Err(Error::Sim(format!(
+                "{} undelivered message(s) on channel {f}->{t} tag {tag}",
+                q.len()
+            )));
+        }
+    }
+
+    let finish_us: Vec<f64> = states.iter().map(|s| s.clock).collect();
+    let makespan_us = finish_us.iter().fold(0.0f64, |a, &b| a.max(b));
+    trace.sort_by(|a, b| a.t_us.partial_cmp(&b.t_us).unwrap());
+    Ok(SimResult {
+        finish_us,
+        makespan_us,
+        msgs_by_sep,
+        bytes_by_sep,
+        combines,
+        payloads: states.into_iter().map(|s| s.payload).collect(),
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LinkParams, NetworkParams};
+    use crate::netsim::payload::{NativeCombiner, ReduceOp};
+    use crate::netsim::program::{Merge, SendPart};
+
+    fn flat2() -> Clustering {
+        Clustering::flat(2)
+    }
+
+    fn simple_params() -> NetworkParams {
+        // latency 100us, 1 MB/s (1 byte/us), overheads 10/5 us.
+        NetworkParams::new(vec![LinkParams::new(100.0, 1.0).with_overheads(10.0, 5.0)])
+            .with_combine_us_per_byte(0.0)
+    }
+
+    #[test]
+    fn single_message_timing() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 1, SendPart::All);
+        p.recv(1, 0, 1, Merge::Replace);
+        let init = vec![Payload::single(0, vec![1.0; 25]), Payload::empty()]; // 100 bytes
+        let cfg = SimConfig::new(simple_params());
+        let r = run(&flat2(), &p, init, &cfg, &NativeCombiner).unwrap();
+        // sender busy: 10 + 100 = 110; arrival: 110 + 100(lat) = 210;
+        // receiver: max(0, 210) + 5 = 215.
+        assert!((r.finish_us[0] - 110.0).abs() < 1e-9);
+        assert!((r.finish_us[1] - 215.0).abs() < 1e-9);
+        assert!((r.makespan_us - 215.0).abs() < 1e-9);
+        assert_eq!(r.msgs_by_sep, vec![1]);
+        assert_eq!(r.bytes_by_sep, vec![100]);
+        assert_eq!(r.payloads[1].get(&0).unwrap(), vec![1.0; 25]);
+    }
+
+    #[test]
+    fn combine_merge_applies_op_and_cost() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 1, SendPart::All);
+        p.recv(1, 0, 1, Merge::Combine(ReduceOp::Sum));
+        let init = vec![Payload::single(0, vec![2.0; 10]), Payload::single(0, vec![3.0; 10])];
+        let params = simple_params().with_combine_us_per_byte(1.0); // 1 us/byte
+        let cfg = SimConfig::new(params);
+        let r = run(&flat2(), &p, init, &cfg, &NativeCombiner).unwrap();
+        assert_eq!(r.payloads[1].get(&0).unwrap(), vec![5.0; 10]);
+        assert_eq!(r.combines, 1);
+        // arrival: 10 + 40 + 100 = 150; recv: 150 + 5 + 40(combine) = 195.
+        assert!((r.finish_us[1] - 195.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        let mut p = Program::new(2);
+        p.recv(0, 1, 1, Merge::Replace);
+        p.recv(1, 0, 1, Merge::Replace);
+        let init = vec![Payload::empty(), Payload::empty()];
+        let cfg = SimConfig::new(simple_params());
+        match run(&flat2(), &p, init, &cfg, &NativeCombiner) {
+            Err(Error::Deadlock { stuck_ranks, .. }) => assert_eq!(stuck_ranks, vec![0, 1]),
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn undelivered_message_detected() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 1, SendPart::All);
+        let init = vec![Payload::single(0, vec![1.0]), Payload::empty()];
+        let cfg = SimConfig::new(simple_params());
+        assert!(run(&flat2(), &p, init, &cfg, &NativeCombiner).is_err());
+    }
+
+    #[test]
+    fn sends_serialize_at_sender() {
+        // Root sends to 2 peers: second send starts after first's busy time.
+        let mut p = Program::new(3);
+        p.send(0, 1, 1, SendPart::All);
+        p.send(0, 2, 2, SendPart::All);
+        p.recv(1, 0, 1, Merge::Replace);
+        p.recv(2, 0, 2, Merge::Replace);
+        let init =
+            vec![Payload::single(0, vec![0.0; 25]), Payload::empty(), Payload::empty()];
+        let cfg = SimConfig::new(simple_params());
+        let r = run(&Clustering::flat(3), &p, init, &cfg, &NativeCombiner).unwrap();
+        // peer 1: (10+100)+100+5 = 215. peer 2 send starts at 110:
+        // 110 + 110 + 100 + 5 = 325.
+        assert!((r.finish_us[1] - 215.0).abs() < 1e-9);
+        assert!((r.finish_us[2] - 325.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sep_levels_priced_differently() {
+        // 2-level clustering: ranks {0,1} machine A, {2} machine B.
+        let c = Clustering::new(vec![vec![0, 0, 0], vec![0, 0, 1]]).unwrap();
+        let params = NetworkParams::new(vec![
+            LinkParams::new(1000.0, 1.0).with_overheads(0.0, 0.0), // cross-machine
+            LinkParams::new(1.0, 100.0).with_overheads(0.0, 0.0),  // intra
+        ])
+        .with_combine_us_per_byte(0.0);
+        let mut p = Program::new(3);
+        p.send(0, 1, 1, SendPart::Empty); // intra: sep 2
+        p.recv(1, 0, 1, Merge::Discard);
+        p.send(0, 2, 2, SendPart::Empty); // cross: sep 1
+        p.recv(2, 0, 2, Merge::Discard);
+        let init = vec![Payload::empty(); 3];
+        let cfg = SimConfig::new(params);
+        let r = run(&c, &p, init, &cfg, &NativeCombiner).unwrap();
+        assert_eq!(r.msgs_by_sep, vec![1, 1]);
+        assert!((r.finish_us[1] - 1.0).abs() < 1e-9); // intra latency
+        assert!((r.finish_us[2] - 1000.0).abs() < 1e-9); // WAN latency
+        assert_eq!(r.wan_messages(), 1);
+    }
+
+    #[test]
+    fn fifo_same_tag_channel() {
+        // Two messages with the same (from,to,tag): FIFO delivery.
+        let mut p = Program::new(2);
+        p.send(0, 1, 7, SendPart::All);
+        p.send(0, 1, 7, SendPart::Empty);
+        p.recv(1, 0, 7, Merge::Replace);
+        p.recv(1, 0, 7, Merge::Discard);
+        let init = vec![Payload::single(0, vec![4.0]), Payload::empty()];
+        let cfg = SimConfig::new(simple_params());
+        let r = run(&flat2(), &p, init, &cfg, &NativeCombiner).unwrap();
+        // First (data) message replaced, second discarded: payload intact.
+        assert_eq!(r.payloads[1].get(&0).unwrap(), vec![4.0]);
+    }
+
+    #[test]
+    fn trace_records_events() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 1, SendPart::All);
+        p.recv(1, 0, 1, Merge::Replace);
+        let init = vec![Payload::single(0, vec![1.0]), Payload::empty()];
+        let cfg = SimConfig::new(simple_params()).with_trace();
+        let r = run(&flat2(), &p, init, &cfg, &NativeCombiner).unwrap();
+        assert_eq!(r.trace.len(), 2);
+        assert_eq!(r.trace[0].kind, TraceKind::SendStart);
+        assert_eq!(r.trace[1].kind, TraceKind::RecvDone);
+    }
+}

@@ -1,0 +1,11 @@
+//! Discrete-event grid network simulator: payload model, program IR, and
+//! the deterministic execution engine. See DESIGN.md §2 for why this
+//! substitutes for the paper's physical testbed.
+
+pub mod engine;
+pub mod payload;
+pub mod program;
+
+pub use engine::{run, SimConfig, SimResult, TraceEvent, TraceKind};
+pub use payload::{Combiner, NativeCombiner, Payload, ReduceOp};
+pub use program::{Action, Merge, Program, SendPart};

@@ -1,0 +1,287 @@
+//! Payloads carried by simulated messages, and the reduction combiner
+//! abstraction.
+//!
+//! A payload is a rank-keyed map of f32 segments. This one representation
+//! serves all five collectives: broadcast/reduce move a single segment,
+//! gather/scatter move per-rank segments, barrier moves empty payloads.
+//! Real bytes flow through the simulator so collective *semantics* are
+//! verified, not just timing; the combine arithmetic is pluggable so the
+//! PJRT-backed combiner (L1 Pallas kernel, AOT-compiled) can execute it.
+
+use std::collections::BTreeMap;
+
+pub type Rank = usize;
+
+/// MPI reduction operators supported by the combine kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+    Prod,
+}
+
+impl ReduceOp {
+    pub const ALL: [ReduceOp; 4] = [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min, ReduceOp::Prod];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Max => "max",
+            ReduceOp::Min => "min",
+            ReduceOp::Prod => "prod",
+        }
+    }
+
+    #[inline]
+    pub fn apply(&self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Prod => a * b,
+        }
+    }
+
+    /// Identity element (for empty folds).
+    pub fn identity(&self) -> f32 {
+        match self {
+            ReduceOp::Sum => 0.0,
+            ReduceOp::Max => f32::NEG_INFINITY,
+            ReduceOp::Min => f32::INFINITY,
+            ReduceOp::Prod => 1.0,
+        }
+    }
+}
+
+/// Executes the elementwise combine `acc[i] = op(acc[i], src[i])`.
+///
+/// `NativeCombiner` is the pure-Rust fallback; `runtime::XlaCombiner` runs
+/// the AOT-compiled Pallas kernel through PJRT.
+pub trait Combiner {
+    fn combine(&self, op: ReduceOp, acc: &mut [f32], src: &[f32]);
+
+    /// Name for reports.
+    fn name(&self) -> &'static str {
+        "combiner"
+    }
+}
+
+/// Scalar-loop reference combiner.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeCombiner;
+
+impl Combiner for NativeCombiner {
+    fn combine(&self, op: ReduceOp, acc: &mut [f32], src: &[f32]) {
+        assert_eq!(acc.len(), src.len(), "combine length mismatch");
+        match op {
+            // Specialized loops: the generic `op.apply` closure defeats
+            // autovectorization; these compile to packed SIMD.
+            ReduceOp::Sum => {
+                for (a, b) in acc.iter_mut().zip(src) {
+                    *a += *b;
+                }
+            }
+            ReduceOp::Max => {
+                for (a, b) in acc.iter_mut().zip(src) {
+                    *a = a.max(*b);
+                }
+            }
+            ReduceOp::Min => {
+                for (a, b) in acc.iter_mut().zip(src) {
+                    *a = a.min(*b);
+                }
+            }
+            ReduceOp::Prod => {
+                for (a, b) in acc.iter_mut().zip(src) {
+                    *a *= *b;
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Rank-keyed f32 segments.
+///
+/// Segments are reference-counted (`Arc`) so that forwarding a payload
+/// down a tree — the inner loop of every simulated broadcast — is a
+/// refcount bump instead of a deep copy; `combine` uses copy-on-write
+/// (`Arc::make_mut`). This is the §Perf L3 optimization recorded in
+/// EXPERIMENTS.md.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Payload {
+    segments: BTreeMap<Rank, std::sync::Arc<Vec<f32>>>,
+}
+
+impl Payload {
+    pub fn empty() -> Self {
+        Payload::default()
+    }
+
+    /// Single segment keyed by `owner`.
+    pub fn single(owner: Rank, data: Vec<f32>) -> Self {
+        let mut segments = BTreeMap::new();
+        segments.insert(owner, std::sync::Arc::new(data));
+        Payload { segments }
+    }
+
+    /// Number of segments.
+    pub fn len(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// Borrow the segment keyed `k`, if present.
+    pub fn get(&self, k: &Rank) -> Option<&[f32]> {
+        self.segments.get(k).map(|v| v.as_slice())
+    }
+
+    /// Clone out the segment keyed `k` (for result extraction).
+    pub fn get_cloned(&self, k: &Rank) -> Option<Vec<f32>> {
+        self.segments.get(k).map(|v| v.as_ref().clone())
+    }
+
+    /// Whether a segment with key `k` exists.
+    pub fn contains_key(&self, k: &Rank) -> bool {
+        self.segments.contains_key(k)
+    }
+
+    /// Iterate `(key, segment)` in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (Rank, &[f32])> {
+        self.segments.iter().map(|(&k, v)| (k, v.as_slice()))
+    }
+
+    /// Keys in order.
+    pub fn keys(&self) -> impl Iterator<Item = Rank> + '_ {
+        self.segments.keys().copied()
+    }
+
+    pub fn n_bytes(&self) -> usize {
+        self.segments.values().map(|v| v.len() * 4).sum()
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.segments.values().map(|v| v.len()).sum()
+    }
+
+    /// Subset containing only the given ranks' segments (cheap: shares
+    /// the underlying segment storage).
+    pub fn select(&self, ranks: &[Rank]) -> Payload {
+        let mut segments = BTreeMap::new();
+        for &r in ranks {
+            if let Some(v) = self.segments.get(&r) {
+                segments.insert(r, v.clone());
+            }
+        }
+        Payload { segments }
+    }
+
+    /// Union-merge (gather): disjoint keys required.
+    pub fn union(&mut self, other: Payload) -> Result<(), String> {
+        for (k, v) in other.segments {
+            if self.segments.insert(k, v).is_some() {
+                return Err(format!("duplicate segment for rank {k} in union"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Elementwise combine (reduce): keys and lengths must align.
+    /// Copy-on-write: the accumulator segment is cloned only if shared.
+    pub fn combine(&mut self, other: &Payload, op: ReduceOp, c: &dyn Combiner) -> Result<(), String> {
+        if self.segments.len() != other.segments.len() {
+            return Err(format!(
+                "combine key-count mismatch: {} vs {}",
+                self.segments.len(),
+                other.segments.len()
+            ));
+        }
+        for (k, src) in &other.segments {
+            let acc = self
+                .segments
+                .get_mut(k)
+                .ok_or_else(|| format!("combine missing segment {k}"))?;
+            if acc.len() != src.len() {
+                return Err(format!("combine length mismatch on segment {k}"));
+            }
+            c.combine(op, std::sync::Arc::make_mut(acc).as_mut_slice(), src.as_slice());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_apply_and_identity() {
+        assert_eq!(ReduceOp::Sum.apply(2.0, 3.0), 5.0);
+        assert_eq!(ReduceOp::Max.apply(2.0, 3.0), 3.0);
+        assert_eq!(ReduceOp::Min.apply(2.0, 3.0), 2.0);
+        assert_eq!(ReduceOp::Prod.apply(2.0, 3.0), 6.0);
+        for op in ReduceOp::ALL {
+            assert_eq!(op.apply(op.identity(), 7.0), 7.0);
+        }
+    }
+
+    #[test]
+    fn payload_sizes() {
+        let p = Payload::single(3, vec![1.0; 10]);
+        assert_eq!(p.n_bytes(), 40);
+        assert_eq!(p.n_elems(), 10);
+        assert_eq!(Payload::empty().n_bytes(), 0);
+    }
+
+    #[test]
+    fn select_subsets() {
+        let mut p = Payload::single(0, vec![1.0]);
+        p.union(Payload::single(1, vec![2.0, 2.0])).unwrap();
+        p.union(Payload::single(2, vec![3.0])).unwrap();
+        let s = p.select(&[1, 2]);
+        assert_eq!(s.segments.len(), 2);
+        assert!(s.segments.contains_key(&1));
+        assert!(!s.segments.contains_key(&0));
+        // selecting a missing rank is silently empty for that key
+        assert_eq!(p.select(&[9]).segments.len(), 0);
+    }
+
+    #[test]
+    fn union_rejects_duplicates() {
+        let mut p = Payload::single(0, vec![1.0]);
+        assert!(p.union(Payload::single(0, vec![2.0])).is_err());
+    }
+
+    #[test]
+    fn combine_native_all_ops() {
+        let c = NativeCombiner;
+        for (op, expect) in [
+            (ReduceOp::Sum, vec![5.0, 7.0]),
+            (ReduceOp::Max, vec![4.0, 5.0]),
+            (ReduceOp::Min, vec![1.0, 2.0]),
+            (ReduceOp::Prod, vec![4.0, 10.0]),
+        ] {
+            let mut acc = Payload::single(0, vec![1.0, 5.0]);
+            let src = Payload::single(0, vec![4.0, 2.0]);
+            acc.combine(&src, op, &c).unwrap();
+            assert_eq!(acc.get(&0).unwrap(), expect.as_slice(), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn combine_shape_mismatches_rejected() {
+        let c = NativeCombiner;
+        let mut a = Payload::single(0, vec![1.0]);
+        let b = Payload::single(1, vec![1.0]);
+        assert!(a.combine(&b, ReduceOp::Sum, &c).is_err());
+        let b2 = Payload::single(0, vec![1.0, 2.0]);
+        assert!(a.combine(&b2, ReduceOp::Sum, &c).is_err());
+    }
+}

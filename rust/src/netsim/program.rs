@@ -1,0 +1,193 @@
+//! The message-passing program IR executed by the simulator.
+//!
+//! A collective operation compiles (deterministically, per §3.2 — every
+//! rank derives the same tree without communication) into a [`Program`]:
+//! one ordered action list per rank. The engine executes actions in
+//! per-rank program order; `Recv` blocks until the matching message
+//! arrives.
+
+use crate::error::{Error, Result};
+use crate::netsim::payload::{Rank, ReduceOp};
+use std::collections::HashMap;
+
+/// What a `Send` puts on the wire, taken from the sender's payload register.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SendPart {
+    /// The whole payload (bcast forwarding, reduce partials, gather-up).
+    All,
+    /// Only the listed ranks' segments (scatter-down).
+    Ranks(Vec<Rank>),
+    /// Zero-byte control message (barrier).
+    Empty,
+}
+
+/// How a `Recv` folds the incoming payload into the local register.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Merge {
+    /// Overwrite (bcast, scatter).
+    Replace,
+    /// Disjoint union of segments (gather).
+    Union,
+    /// Elementwise reduction via the combiner (reduce). Charges combine
+    /// compute time in addition to the receive.
+    Combine(ReduceOp),
+    /// Ignore the payload (barrier control messages).
+    Discard,
+}
+
+/// One step of a rank's program.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    Send { to: Rank, tag: u64, part: SendPart },
+    Recv { from: Rank, tag: u64, merge: Merge },
+}
+
+/// Per-rank action lists.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub actions: Vec<Vec<Action>>,
+}
+
+impl Program {
+    pub fn new(n_ranks: usize) -> Self {
+        Program { actions: vec![Vec::new(); n_ranks] }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.actions.len()
+    }
+
+    pub fn send(&mut self, from: Rank, to: Rank, tag: u64, part: SendPart) {
+        self.actions[from].push(Action::Send { to, tag, part });
+    }
+
+    pub fn recv(&mut self, at: Rank, from: Rank, tag: u64, merge: Merge) {
+        self.actions[at].push(Action::Recv { from, tag, merge });
+    }
+
+    pub fn total_actions(&self) -> usize {
+        self.actions.iter().map(|a| a.len()).sum()
+    }
+
+    /// Static sanity checks, independent of execution:
+    /// - peers in range,
+    /// - no self-messages (collective trees never need them),
+    /// - every `(from,to,tag)` send count matches the recv count.
+    ///
+    /// (Deadlock-freedom is a dynamic property; the engine detects it.)
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n_ranks();
+        let mut sends: HashMap<(Rank, Rank, u64), i64> = HashMap::new();
+        for (r, list) in self.actions.iter().enumerate() {
+            for a in list {
+                match a {
+                    Action::Send { to, tag, .. } => {
+                        if *to >= n {
+                            return Err(Error::Schedule(format!(
+                                "rank {r} sends to out-of-range rank {to}"
+                            )));
+                        }
+                        if *to == r {
+                            return Err(Error::Schedule(format!("rank {r} sends to itself")));
+                        }
+                        *sends.entry((r, *to, *tag)).or_insert(0) += 1;
+                    }
+                    Action::Recv { from, tag, .. } => {
+                        if *from >= n {
+                            return Err(Error::Schedule(format!(
+                                "rank {r} receives from out-of-range rank {from}"
+                            )));
+                        }
+                        if *from == r {
+                            return Err(Error::Schedule(format!("rank {r} receives from itself")));
+                        }
+                        *sends.entry((*from, r, *tag)).or_insert(0) -= 1;
+                    }
+                }
+            }
+        }
+        for ((f, t, tag), bal) in sends {
+            if bal != 0 {
+                return Err(Error::Schedule(format!(
+                    "unbalanced channel {f}->{t} tag {tag}: send-recv imbalance {bal}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Append another program's actions (sequential composition with
+    /// distinct tags, e.g. allreduce = reduce ; bcast).
+    pub fn then(&mut self, other: Program) -> Result<()> {
+        if other.n_ranks() != self.n_ranks() {
+            return Err(Error::Schedule(format!(
+                "program composition rank mismatch: {} vs {}",
+                self.n_ranks(),
+                other.n_ranks()
+            )));
+        }
+        for (mine, theirs) in self.actions.iter_mut().zip(other.actions) {
+            mine.extend(theirs);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_program_validates() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 7, SendPart::All);
+        p.recv(1, 0, 7, Merge::Replace);
+        assert!(p.validate().is_ok());
+        assert_eq!(p.total_actions(), 2);
+    }
+
+    #[test]
+    fn unbalanced_send_rejected() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 7, SendPart::All);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn tag_mismatch_rejected() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 7, SendPart::All);
+        p.recv(1, 0, 8, Merge::Replace);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn self_message_rejected() {
+        let mut p = Program::new(2);
+        p.send(0, 0, 1, SendPart::All);
+        p.recv(0, 0, 1, Merge::Replace);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut p = Program::new(2);
+        p.send(0, 5, 1, SendPart::All);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn composition_concatenates() {
+        let mut a = Program::new(2);
+        a.send(0, 1, 1, SendPart::All);
+        a.recv(1, 0, 1, Merge::Replace);
+        let mut b = Program::new(2);
+        b.send(1, 0, 2, SendPart::All);
+        b.recv(0, 1, 2, Merge::Replace);
+        a.then(b).unwrap();
+        assert_eq!(a.actions[0].len(), 2);
+        assert!(a.validate().is_ok());
+        let c = Program::new(3);
+        assert!(a.then(c).is_err());
+    }
+}

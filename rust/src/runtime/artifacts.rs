@@ -1,0 +1,178 @@
+//! Artifact manifest: discovery and metadata for the AOT-compiled HLO
+//! modules produced by `python/compile/aot.py`.
+//!
+//! Format (`artifacts/manifest.tsv`, tab-separated, `#` comments):
+//!
+//! ```text
+//! name  file  kind  meta(k=v;k=v)  inputs(f32[AxB],...)  outputs(...)
+//! ```
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub meta: HashMap<String, String>,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactInfo {
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| Error::Artifact(format!("{}: missing/invalid meta '{key}'", self.name)))
+    }
+}
+
+/// The parsed manifest plus the artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 6 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected 6 columns, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let mut meta = HashMap::new();
+            for kv in cols[3].split(';').filter(|s| !s.is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| Error::Artifact(format!("bad meta entry '{kv}'")))?;
+                meta.insert(k.to_string(), v.to_string());
+            }
+            artifacts.push(ArtifactInfo {
+                name: cols[0].to_string(),
+                file: dir.join(cols[1]),
+                kind: cols[2].to_string(),
+                meta,
+                inputs: cols[4].split(',').map(str::to_string).collect(),
+                outputs: cols[5].split(',').map(str::to_string).collect(),
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Artifact(format!("{}: no artifacts listed", path.display())));
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Artifact(format!("artifact '{name}' not in manifest")))
+    }
+
+    /// All artifacts of a given kind.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactInfo> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    /// Verify every listed file exists.
+    pub fn check_files(&self) -> Result<()> {
+        for a in &self.artifacts {
+            if !a.file.is_file() {
+                return Err(Error::Artifact(format!(
+                    "artifact file missing: {} (run `make artifacts`)",
+                    a.file.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Default artifact directory: `$GRIDCOLLECT_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("GRIDCOLLECT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.tsv")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gc_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_well_formed_manifest() {
+        let d = tmpdir("ok");
+        write_manifest(
+            &d,
+            "# comment\n\
+             c2\tc2.hlo.txt\tcombine2\tn=128;op=sum\tf32[128],f32[128]\tf32[128]\n",
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("c2").unwrap();
+        assert_eq!(a.kind, "combine2");
+        assert_eq!(a.meta_usize("n").unwrap(), 128);
+        assert_eq!(a.meta["op"], "sum");
+        assert_eq!(a.inputs.len(), 2);
+        assert!(m.get("nope").is_err());
+        assert_eq!(m.by_kind("combine2").len(), 1);
+        // file missing on disk
+        assert!(m.check_files().is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let d = tmpdir("bad");
+        write_manifest(&d, "only\tthree\tcols\n");
+        assert!(Manifest::load(&d).is_err());
+        write_manifest(&d, "");
+        assert!(Manifest::load(&d).is_err());
+        write_manifest(&d, "a\tf\tk\tbadmeta\tf32[1]\tf32[1]\n");
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // When `make artifacts` has run, validate the real manifest.
+        let dir = default_dir();
+        if dir.join("manifest.tsv").is_file() {
+            let m = Manifest::load(&dir).unwrap();
+            m.check_files().unwrap();
+            assert!(m.by_kind("combine2").len() >= 4, "sum/max/min/prod combiners");
+            m.get("mlp_train_step").unwrap();
+            m.get("mlp_sgd_step").unwrap();
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! The PJRT-backed reduction combiner: executes the L1 Pallas combine
+//! kernels (AOT-compiled to `combine2_{op}_{n}.hlo.txt`) for the payload
+//! arithmetic of simulated `MPI_Reduce` trees.
+//!
+//! Arbitrary payload lengths are handled by chunking to the artifact's
+//! fixed `n` and padding the tail chunk with the operator's identity
+//! element. A calibration helper measures effective combine throughput so
+//! the simulator's `combine_us_per_byte` can be set from reality.
+
+use crate::error::Result;
+use crate::netsim::{Combiner, ReduceOp};
+use crate::runtime::pjrt::{Executable, Runtime};
+use std::sync::Arc;
+
+/// Chunked, padded PJRT combiner. Implements [`Combiner`] so it can be
+/// plugged straight into the simulation engine.
+pub struct XlaCombiner {
+    n: usize,
+    exes: [Arc<Executable>; 4], // indexed by op_index
+    /// Scratch is per-call allocated; kept simple because PJRT owns its
+    /// own buffers anyway.
+    pub calls: std::cell::Cell<u64>,
+}
+
+fn op_index(op: ReduceOp) -> usize {
+    match op {
+        ReduceOp::Sum => 0,
+        ReduceOp::Max => 1,
+        ReduceOp::Min => 2,
+        ReduceOp::Prod => 3,
+    }
+}
+
+impl XlaCombiner {
+    /// Load the four combine artifacts of width `n` from `runtime`.
+    pub fn new(runtime: &Runtime, n: usize) -> Result<Self> {
+        let load = |op: &str| runtime.load(&format!("combine2_{op}_{n}"));
+        Ok(XlaCombiner {
+            n,
+            exes: [load("sum")?, load("max")?, load("min")?, load("prod")?],
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Default artifact width (matches `python/compile/aot.py::COMBINE_N`).
+    pub const DEFAULT_N: usize = 16384;
+
+    pub fn open_default(runtime: &Runtime) -> Result<Self> {
+        Self::new(runtime, Self::DEFAULT_N)
+    }
+
+    pub fn chunk_len(&self) -> usize {
+        self.n
+    }
+
+    /// Combine one padded chunk through PJRT.
+    fn combine_chunk(&self, op: ReduceOp, acc: &[f32], src: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(acc.len(), self.n);
+        debug_assert_eq!(src.len(), self.n);
+        let exe = &self.exes[op_index(op)];
+        self.calls.set(self.calls.get() + 1);
+        let out = exe
+            .run_f32(&[(acc, &[self.n as i64]), (src, &[self.n as i64])])
+            .expect("combine artifact execution failed");
+        out.into_iter().next().expect("combine artifact returned no output")
+    }
+}
+
+impl Combiner for XlaCombiner {
+    fn combine(&self, op: ReduceOp, acc: &mut [f32], src: &[f32]) {
+        assert_eq!(acc.len(), src.len(), "combine length mismatch");
+        let id = op.identity();
+        let mut off = 0;
+        while off < acc.len() {
+            let take = (acc.len() - off).min(self.n);
+            if take == self.n {
+                let out = self.combine_chunk(op, &acc[off..off + take], &src[off..off + take]);
+                acc[off..off + take].copy_from_slice(&out);
+            } else {
+                // Tail chunk: pad with the identity so op(pad, pad) = pad.
+                let mut a = vec![id; self.n];
+                let mut b = vec![id; self.n];
+                a[..take].copy_from_slice(&acc[off..off + take]);
+                b[..take].copy_from_slice(&src[off..off + take]);
+                let out = self.combine_chunk(op, &a, &b);
+                acc[off..off + take].copy_from_slice(&out[..take]);
+            }
+            off += take;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+/// Measure effective combine throughput (us per byte) over `iters`
+/// full-chunk combines — used to calibrate the simulator's
+/// `combine_us_per_byte` from measured reality.
+pub fn calibrate_us_per_byte(c: &XlaCombiner, iters: usize) -> f64 {
+    let n = c.chunk_len();
+    let mut acc = vec![1.0f32; n];
+    let src = vec![2.0f32; n];
+    // warm-up
+    c.combine(ReduceOp::Sum, &mut acc, &src);
+    let start = std::time::Instant::now();
+    for _ in 0..iters {
+        c.combine(ReduceOp::Sum, &mut acc, &src);
+    }
+    let us = start.elapsed().as_secs_f64() * 1e6;
+    us / (iters as f64 * (n * 4) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::NativeCombiner;
+    use crate::runtime::artifacts::default_dir;
+    use crate::util::rng::Rng;
+
+    fn combiner() -> Option<(Runtime, XlaCombiner)> {
+        let dir = default_dir();
+        if !dir.join("manifest.tsv").is_file() {
+            return None;
+        }
+        let rt = Runtime::open(dir).unwrap();
+        let c = XlaCombiner::open_default(&rt).unwrap();
+        Some((rt, c))
+    }
+
+    #[test]
+    fn matches_native_on_exact_chunks() {
+        let Some((_rt, c)) = combiner() else { return };
+        let n = XlaCombiner::DEFAULT_N;
+        let mut rng = Rng::new(42);
+        for op in ReduceOp::ALL {
+            let mut acc: Vec<f32> = (0..n).map(|_| rng.f32_in(0.5, 2.0)).collect();
+            let src: Vec<f32> = (0..n).map(|_| rng.f32_in(0.5, 2.0)).collect();
+            let mut expect = acc.clone();
+            NativeCombiner.combine(op, &mut expect, &src);
+            c.combine(op, &mut acc, &src);
+            assert_eq!(acc, expect, "{op:?}"); // bitwise: same fp ops
+        }
+    }
+
+    #[test]
+    fn chunking_and_padding_arbitrary_lengths() {
+        let Some((_rt, c)) = combiner() else { return };
+        let mut rng = Rng::new(7);
+        for len in [1usize, 100, 16384, 16385, 40000] {
+            for op in [ReduceOp::Sum, ReduceOp::Min] {
+                let mut acc: Vec<f32> = (0..len).map(|_| rng.f32_in(-3.0, 3.0)).collect();
+                let src: Vec<f32> = (0..len).map(|_| rng.f32_in(-3.0, 3.0)).collect();
+                let mut expect = acc.clone();
+                NativeCombiner.combine(op, &mut expect, &src);
+                c.combine(op, &mut acc, &src);
+                assert_eq!(acc, expect, "len={len} {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn call_counting() {
+        let Some((_rt, c)) = combiner() else { return };
+        let before = c.calls.get();
+        let mut acc = vec![0.0f32; XlaCombiner::DEFAULT_N * 2 + 5];
+        let src = acc.clone();
+        c.combine(ReduceOp::Sum, &mut acc, &src);
+        assert_eq!(c.calls.get() - before, 3, "2 full + 1 padded chunk");
+    }
+}

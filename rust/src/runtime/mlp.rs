@@ -1,0 +1,224 @@
+//! Executors for the MLP training artifacts (`mlp_train_step`,
+//! `mlp_sgd_step`) used by the end-to-end data-parallel training example:
+//! gradients are computed per simulated worker through PJRT, allreduced
+//! through the topology-aware collectives, and applied with the Pallas
+//! `axpy` kernel — all from Rust.
+
+use crate::error::{Error, Result};
+use crate::runtime::pjrt::{Executable, Runtime};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Dimensions baked into the artifacts (mirrors `model.MLP_SIZES` etc.).
+#[derive(Clone, Copy, Debug)]
+pub struct MlpDims {
+    pub params: usize,
+    pub batch: usize,
+    pub d_in: usize,
+    pub d_h: usize,
+    pub d_out: usize,
+}
+
+/// The training-step + SGD-step executable pair.
+pub struct MlpRuntime {
+    train: Arc<Executable>,
+    sgd: Arc<Executable>,
+    pub dims: MlpDims,
+}
+
+impl MlpRuntime {
+    pub fn open(runtime: &Runtime) -> Result<Self> {
+        let info = runtime.manifest.get("mlp_train_step")?;
+        let dims = MlpDims {
+            params: info.meta_usize("params")?,
+            batch: info.meta_usize("batch")?,
+            d_in: info.meta_usize("d_in")?,
+            d_h: info.meta_usize("d_h")?,
+            d_out: info.meta_usize("d_out")?,
+        };
+        Ok(MlpRuntime {
+            train: runtime.load("mlp_train_step")?,
+            sgd: runtime.load("mlp_sgd_step")?,
+            dims,
+        })
+    }
+
+    /// Forward+backward: returns (grads, loss).
+    /// `x`: `[batch * d_in]` row-major, `y_onehot`: `[batch * d_out]`.
+    pub fn train_step(&self, params: &[f32], x: &[f32], y_onehot: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let d = &self.dims;
+        if params.len() != d.params || x.len() != d.batch * d.d_in || y_onehot.len() != d.batch * d.d_out
+        {
+            return Err(Error::Runtime(format!(
+                "train_step shape mismatch: params {} (want {}), x {} (want {}), y {} (want {})",
+                params.len(),
+                d.params,
+                x.len(),
+                d.batch * d.d_in,
+                y_onehot.len(),
+                d.batch * d.d_out
+            )));
+        }
+        let out = self.train.run_f32(&[
+            (params, &[d.params as i64]),
+            (x, &[d.batch as i64, d.d_in as i64]),
+            (y_onehot, &[d.batch as i64, d.d_out as i64]),
+        ])?;
+        if out.len() != 2 {
+            return Err(Error::Runtime(format!("train_step returned {} outputs", out.len())));
+        }
+        let mut it = out.into_iter();
+        let grads = it.next().unwrap();
+        let loss = it.next().unwrap();
+        Ok((grads, loss[0]))
+    }
+
+    /// Parameter update via the Pallas axpy kernel: `p - lr * g`.
+    pub fn sgd_step(&self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
+        let d = &self.dims;
+        if params.len() != d.params || grads.len() != d.params {
+            return Err(Error::Runtime("sgd_step shape mismatch".into()));
+        }
+        let out = self.sgd.run_f32(&[
+            (params, &[d.params as i64]),
+            (grads, &[d.params as i64]),
+            (&[lr], &[]),
+        ])?;
+        Ok(out.into_iter().next().ok_or_else(|| Error::Runtime("sgd_step: no output".into()))?)
+    }
+
+    /// Deterministic Glorot-style init matching `model.mlp_init`'s scheme
+    /// (not bitwise — different RNG — but the same scaling).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let d = &self.dims;
+        let mut rng = Rng::new(seed);
+        let mut flat = vec![0.0f32; d.params];
+        // Layout per model._unflatten:
+        // W1 [d_in, d_h], b1 [d_h], W2 [d_h, d_out], b2 [d_out], padding.
+        let hidden = d.d_h;
+        let w1_scale = (2.0 / d.d_in as f32).sqrt();
+        let w2_scale = (2.0 / hidden as f32).sqrt();
+        let mut i = 0;
+        for _ in 0..d.d_in * hidden {
+            flat[i] = gauss(&mut rng) * w1_scale;
+            i += 1;
+        }
+        i += hidden; // b1 = 0
+        for _ in 0..hidden * d.d_out {
+            flat[i] = gauss(&mut rng) * w2_scale;
+            i += 1;
+        }
+        flat
+    }
+
+    /// Synthetic classification batch (same construction as the Python
+    /// tests): label = argmax of a fixed random projection.
+    pub fn synth_batch(&self, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let d = &self.dims;
+        let mut proj_rng = Rng::new(123);
+        let proj: Vec<f32> =
+            (0..d.d_in * d.d_out).map(|_| gauss(&mut proj_rng)).collect();
+        let mut rng = Rng::new(seed ^ 0xBA7C4);
+        let mut x = vec![0.0f32; d.batch * d.d_in];
+        for v in x.iter_mut() {
+            *v = gauss(&mut rng);
+        }
+        let mut y = vec![0.0f32; d.batch * d.d_out];
+        for b in 0..d.batch {
+            let mut best = f32::NEG_INFINITY;
+            let mut arg = 0;
+            for c in 0..d.d_out {
+                let mut dot = 0.0;
+                for j in 0..d.d_in {
+                    dot += x[b * d.d_in + j] * proj[j * d.d_out + c];
+                }
+                if dot > best {
+                    best = dot;
+                    arg = c;
+                }
+            }
+            y[b * d.d_out + arg] = 1.0;
+        }
+        (x, y)
+    }
+}
+
+/// Box–Muller standard normal from the deterministic RNG.
+fn gauss(rng: &mut Rng) -> f32 {
+    let u1 = rng.f64().max(1e-12);
+    let u2 = rng.f64();
+    ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_dir;
+
+    fn mlp() -> Option<(Runtime, MlpRuntime)> {
+        let dir = default_dir();
+        if !dir.join("manifest.tsv").is_file() {
+            return None;
+        }
+        let rt = Runtime::open(dir).unwrap();
+        let m = MlpRuntime::open(&rt).unwrap();
+        Some((rt, m))
+    }
+
+    #[test]
+    fn dims_from_manifest() {
+        let Some((_rt, m)) = mlp() else { return };
+        assert_eq!(m.dims.d_in, 64);
+        assert_eq!(m.dims.d_out, 10);
+        assert_eq!(m.dims.batch, 32);
+        assert_eq!(m.dims.params % 1024, 0);
+        assert_eq!(m.dims.d_h, 256);
+        // padded params cover the unpadded layout
+        let unpadded =
+            m.dims.d_in * m.dims.d_h + m.dims.d_h + m.dims.d_h * m.dims.d_out + m.dims.d_out;
+        assert!(m.dims.params >= unpadded);
+    }
+
+    #[test]
+    fn train_step_runs_and_loss_reasonable() {
+        let Some((_rt, m)) = mlp() else { return };
+        let p = m.init_params(0);
+        let (x, y) = m.synth_batch(0);
+        let (grads, loss) = m.train_step(&p, &x, &y).unwrap();
+        assert_eq!(grads.len(), m.dims.params);
+        assert!(loss.is_finite());
+        assert!((loss - (10.0f32).ln()).abs() < 1.0, "loss {loss} far from ln(10)");
+        assert!(grads.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn sgd_matches_manual() {
+        let Some((_rt, m)) = mlp() else { return };
+        let p = m.init_params(1);
+        let (x, y) = m.synth_batch(1);
+        let (grads, _) = m.train_step(&p, &x, &y).unwrap();
+        let updated = m.sgd_step(&p, &grads, 0.05).unwrap();
+        for i in (0..m.dims.params).step_by(997) {
+            let want = p[i] - 0.05 * grads[i];
+            assert!((updated[i] - want).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn loss_decreases_over_steps() {
+        let Some((_rt, m)) = mlp() else { return };
+        let mut p = m.init_params(0);
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 0..30 {
+            let (x, y) = m.synth_batch(step % 4);
+            let (grads, loss) = m.train_step(&p, &x, &y).unwrap();
+            p = m.sgd_step(&p, &grads, 0.1).unwrap();
+            if first.is_none() {
+                first = Some(loss);
+            }
+            last = loss;
+        }
+        assert!(last < first.unwrap() * 0.8, "no learning: {first:?} -> {last}");
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) and executes them from the request
+//! path — the combine kernels for `MPI_Reduce` arithmetic and the MLP
+//! train/update steps for the end-to-end training example.
+
+pub mod artifacts;
+pub mod combiner;
+pub mod mlp;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactInfo, Manifest};
+pub use combiner::{calibrate_us_per_byte, XlaCombiner};
+pub use mlp::{MlpDims, MlpRuntime};
+pub use pjrt::{Executable, Runtime};

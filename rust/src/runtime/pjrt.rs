@@ -1,0 +1,153 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them on the CPU PJRT client from the request path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format —
+//! the bundled xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos.
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::{ArtifactInfo, Manifest};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A compiled, executable artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with f32 buffers; returns the tuple elements as f32 vectors.
+    ///
+    /// `inputs` are (data, dims) pairs; a rank-0 scalar is `(&[v], &[])`.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.is_empty() {
+                lit.reshape(&[]).map_err(wrap)?
+            } else {
+                lit.reshape(dims).map_err(wrap)?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime("empty execution result".into()))?;
+        let tuple = first.to_literal_sync().map_err(wrap)?;
+        // aot.py lowers with return_tuple=True.
+        let parts = tuple.to_tuple().map_err(wrap)?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().map_err(wrap)?);
+        }
+        Ok(out)
+    }
+}
+
+fn wrap(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// PJRT client + compiled-executable cache over an artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (validates the manifest and files) and
+    /// bring up the CPU PJRT client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        manifest.check_files()?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open the default artifact directory (`$GRIDCOLLECT_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn open_default() -> Result<Self> {
+        Self::open(crate::runtime::artifacts::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let info: &ArtifactInfo = self.manifest.get(name)?;
+        let path = info.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        let exe = std::sync::Arc::new(Executable { exe, name: name.to_string() });
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact (startup warm-up so the request path
+    /// never compiles).
+    pub fn warm_up(&self) -> Result<usize> {
+        let names: Vec<String> = self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_dir;
+
+    fn runtime() -> Option<Runtime> {
+        // Skip silently when artifacts have not been built yet (pure
+        // `cargo test` before `make artifacts`); integration tests in
+        // rust/tests/runtime_artifacts.rs require them.
+        let dir = default_dir();
+        if dir.join("manifest.tsv").is_file() {
+            Some(Runtime::open(dir).expect("runtime open"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn combine2_sum_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("combine2_sum_16384").unwrap();
+        let n = 16384;
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
+        let out = exe.run_f32(&[(&x, &[n as i64]), (&y, &[n as i64])]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), n);
+        assert_eq!(out[0][10], 30.0);
+        assert_eq!(out[0][n - 1], 3.0 * (n - 1) as f32);
+    }
+
+    #[test]
+    fn cache_returns_same_executable() {
+        let Some(rt) = runtime() else { return };
+        let a = rt.load("combine2_sum_16384").unwrap();
+        let b = rt.load("combine2_sum_16384").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.load("not_a_real_artifact").is_err());
+    }
+}

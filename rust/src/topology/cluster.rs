@@ -1,0 +1,298 @@
+//! Multilevel process clustering — the paper's replacement for "hidden
+//! communicators" (§1, §3.1): per-process **integer vectors** describing, at
+//! every network level, which cluster each process belongs to.
+//!
+//! `colors[l][r]` is the cluster id of rank `r` at level `l`. Level 0 is the
+//! whole world (everyone color 0); deeper levels refine shallower ones
+//! (MPICH-G2's "depths & colors" table). For the canonical 3-level grid:
+//! level 0 = world, level 1 = site (WAN between sites), level 2 = machine
+//! (LAN between machines of a site, vendor-MPI/shared memory within).
+
+use crate::error::{Error, Result};
+
+/// A communicator rank (dense `0..n`).
+pub type Rank = usize;
+
+/// Nested multilevel partition of ranks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Clustering {
+    /// `colors[l][r]` = cluster id of rank `r` at level `l`; `colors[0]` all 0.
+    colors: Vec<Vec<u32>>,
+}
+
+impl Clustering {
+    /// Build from explicit color vectors. Validates shape and nestedness.
+    pub fn new(colors: Vec<Vec<u32>>) -> Result<Self> {
+        let c = Clustering { colors };
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// The trivial clustering: one level, everyone in one cluster
+    /// (a topology-unaware view of `n` ranks).
+    pub fn flat(n: usize) -> Self {
+        Clustering { colors: vec![vec![0; n]] }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.colors.is_empty() {
+            return Err(Error::TopologySpec("clustering needs >= 1 level".into()));
+        }
+        let n = self.colors[0].len();
+        if n == 0 {
+            return Err(Error::TopologySpec("clustering needs >= 1 rank".into()));
+        }
+        if self.colors[0].iter().any(|&c| c != 0) {
+            return Err(Error::TopologySpec("level 0 must be a single cluster (color 0)".into()));
+        }
+        for (l, lv) in self.colors.iter().enumerate() {
+            if lv.len() != n {
+                return Err(Error::TopologySpec(format!(
+                    "level {l} has {} ranks, expected {n}",
+                    lv.len()
+                )));
+            }
+        }
+        // Nestedness: same color at level l+1 implies same color at level l.
+        for l in 1..self.colors.len() {
+            let mut parent_of: std::collections::HashMap<u32, u32> = Default::default();
+            for r in 0..n {
+                let child = self.colors[l][r];
+                let parent = self.colors[l - 1][r];
+                match parent_of.insert(child, parent) {
+                    Some(prev) if prev != parent => {
+                        return Err(Error::TopologySpec(format!(
+                            "level {l} cluster {child} spans parent clusters {prev} and {parent}"
+                        )));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of levels `D` (>= 1).
+    pub fn n_levels(&self) -> usize {
+        self.colors.len()
+    }
+
+    /// Number of ranks.
+    pub fn n_ranks(&self) -> usize {
+        self.colors[0].len()
+    }
+
+    /// Cluster id of `r` at level `l`.
+    pub fn color(&self, l: usize, r: Rank) -> u32 {
+        self.colors[l][r]
+    }
+
+    /// **Separation level** of two ranks: the smallest level at which they
+    /// fall in different clusters; `n_levels()` if they never differ
+    /// (same machine). `sep==1` means the pair crosses the WAN;
+    /// `sep==n_levels()` means intra-machine.
+    pub fn sep(&self, a: Rank, b: Rank) -> usize {
+        for l in 0..self.colors.len() {
+            if self.colors[l][a] != self.colors[l][b] {
+                return l;
+            }
+        }
+        self.colors.len()
+    }
+
+    /// Distinct cluster ids at level `l`, in first-appearance (rank) order.
+    pub fn clusters_at(&self, l: usize) -> Vec<u32> {
+        let mut seen = Vec::new();
+        for &c in &self.colors[l] {
+            if !seen.contains(&c) {
+                seen.push(c);
+            }
+        }
+        seen
+    }
+
+    /// Member ranks of cluster `c` at level `l`, ascending.
+    pub fn members(&self, l: usize, c: u32) -> Vec<Rank> {
+        (0..self.n_ranks()).filter(|&r| self.colors[l][r] == c).collect()
+    }
+
+    /// Partition a *subset* of ranks by their level-`l` color, preserving
+    /// first-appearance order of clusters and member order. Used by the
+    /// multilevel tree builder's recursion.
+    pub fn partition(&self, ranks: &[Rank], l: usize) -> Vec<Vec<Rank>> {
+        let mut order: Vec<u32> = Vec::new();
+        let mut groups: std::collections::HashMap<u32, Vec<Rank>> = Default::default();
+        for &r in ranks {
+            let c = self.colors[l][r];
+            if !order.contains(&c) {
+                order.push(c);
+            }
+            groups.entry(c).or_default().push(r);
+        }
+        order.into_iter().map(|c| groups.remove(&c).unwrap()).collect()
+    }
+
+    /// Restriction to a subset of ranks (the §3.1 propagation rule for
+    /// `MPI_Comm_split`): new rank `i` corresponds to `ranks[i]`; colors are
+    /// re-numbered densely per level (first-appearance order) and levels
+    /// that have become degenerate duplicates of their parent are *kept*
+    /// (MPICH-G2 keeps the full depth table), so `n_levels` is preserved.
+    pub fn restrict(&self, ranks: &[Rank]) -> Result<Self> {
+        if ranks.is_empty() {
+            return Err(Error::TopologySpec("cannot restrict to zero ranks".into()));
+        }
+        for &r in ranks {
+            if r >= self.n_ranks() {
+                return Err(Error::TopologySpec(format!(
+                    "restrict: rank {r} out of range ({} ranks)",
+                    self.n_ranks()
+                )));
+            }
+        }
+        let mut colors = Vec::with_capacity(self.n_levels());
+        for l in 0..self.n_levels() {
+            let mut map: std::collections::HashMap<u32, u32> = Default::default();
+            let mut next = 0u32;
+            let lv: Vec<u32> = ranks
+                .iter()
+                .map(|&r| {
+                    let c = self.colors[l][r];
+                    *map.entry(c).or_insert_with(|| {
+                        let v = next;
+                        next += 1;
+                        v
+                    })
+                })
+                .collect();
+            colors.push(lv);
+        }
+        Clustering::new(colors)
+    }
+
+    /// Per-rank "depths" vector in the MPICH-G2 sense: for rank `r`, the
+    /// number of levels in which `r`'s cluster is non-trivial w.r.t. its
+    /// siblings is not needed for tree building — what the builders use is
+    /// the full color table. Exposed for the MPI-attribute-style API.
+    pub fn depths(&self) -> Vec<usize> {
+        vec![self.n_levels(); self.n_ranks()]
+    }
+
+    /// Collapse to a 2-level view at level `l` (the MagPIe comparison):
+    /// level 0 = world, level 1 = the level-`l` clusters.
+    pub fn two_level_view(&self, l: usize) -> Result<Clustering> {
+        if l == 0 || l >= self.n_levels() {
+            return Err(Error::TopologySpec(format!(
+                "two_level_view: level {l} out of range 1..{}",
+                self.n_levels()
+            )));
+        }
+        Clustering::new(vec![self.colors[0].clone(), self.colors[l].clone()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 3-level example from the paper's Fig. 1: 10 procs on the SDSC SP,
+    /// 5 on each of two NCSA O2Ks sharing a LAN.
+    fn fig1() -> Clustering {
+        let n = 20;
+        let world = vec![0u32; n];
+        let mut site = vec![0u32; n];
+        let mut machine = vec![0u32; n];
+        for r in 0..n {
+            if r < 10 {
+                site[r] = 0; // SDSC
+                machine[r] = 0; // SP
+            } else {
+                site[r] = 1; // NCSA
+                machine[r] = if r < 15 { 1 } else { 2 }; // O2Ka / O2Kb
+            }
+        }
+        Clustering::new(vec![world, site, machine]).unwrap()
+    }
+
+    #[test]
+    fn fig1_separation_levels() {
+        let c = fig1();
+        assert_eq!(c.sep(0, 5), 3); // same machine (SP)
+        assert_eq!(c.sep(10, 12), 3); // same machine (O2Ka)
+        assert_eq!(c.sep(10, 17), 2); // O2Ka vs O2Kb: same site, LAN link
+        assert_eq!(c.sep(0, 10), 1); // SDSC vs NCSA: WAN link
+        assert_eq!(c.sep(3, 3), 3);
+    }
+
+    #[test]
+    fn clusters_and_members() {
+        let c = fig1();
+        assert_eq!(c.clusters_at(1), vec![0, 1]);
+        assert_eq!(c.clusters_at(2), vec![0, 1, 2]);
+        assert_eq!(c.members(2, 1), vec![10, 11, 12, 13, 14]);
+        assert_eq!(c.members(1, 0), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partition_subset_preserves_order() {
+        let c = fig1();
+        let subset = [17, 3, 11, 9, 18];
+        let parts = c.partition(&subset, 2);
+        // first-appearance order: machine of 17 (O2Kb), of 3 (SP), of 11 (O2Ka)
+        assert_eq!(parts, vec![vec![17, 18], vec![3, 9], vec![11]]);
+    }
+
+    #[test]
+    fn nestedness_violation_rejected() {
+        // Level-2 cluster 0 spans both level-1 clusters -> invalid.
+        let world = vec![0, 0];
+        let site = vec![0, 1];
+        let machine = vec![0, 0];
+        assert!(Clustering::new(vec![world, site, machine]).is_err());
+    }
+
+    #[test]
+    fn level0_must_be_single_cluster() {
+        assert!(Clustering::new(vec![vec![0, 1]]).is_err());
+    }
+
+    #[test]
+    fn restrict_renumbers_densely() {
+        let c = fig1();
+        // NCSA only: ranks 10..20.
+        let sub = c.restrict(&(10..20).collect::<Vec<_>>()).unwrap();
+        assert_eq!(sub.n_ranks(), 10);
+        assert_eq!(sub.n_levels(), 3);
+        // All in one site now (color 0 after renumbering).
+        assert!((0..10).all(|r| sub.color(1, r) == 0));
+        // Two machines, colors 0 and 1.
+        assert_eq!(sub.clusters_at(2), vec![0, 1]);
+        assert_eq!(sub.sep(0, 5), 2); // O2Ka vs O2Kb is now the deepest split
+    }
+
+    #[test]
+    fn restrict_rejects_bad_ranks() {
+        let c = fig1();
+        assert!(c.restrict(&[25]).is_err());
+        assert!(c.restrict(&[]).is_err());
+    }
+
+    #[test]
+    fn two_level_views() {
+        let c = fig1();
+        let by_site = c.two_level_view(1).unwrap();
+        assert_eq!(by_site.n_levels(), 2);
+        assert_eq!(by_site.clusters_at(1).len(), 2);
+        let by_machine = c.two_level_view(2).unwrap();
+        assert_eq!(by_machine.clusters_at(1).len(), 3);
+        assert!(c.two_level_view(0).is_err());
+        assert!(c.two_level_view(3).is_err());
+    }
+
+    #[test]
+    fn flat_clustering() {
+        let c = Clustering::flat(4);
+        assert_eq!(c.n_levels(), 1);
+        assert_eq!(c.sep(0, 3), 1); // beyond the last level: "same machine"
+        assert_eq!(c.clusters_at(0), vec![0]);
+    }
+}

@@ -1,0 +1,194 @@
+//! Communicators carrying multilevel topology information.
+//!
+//! Mirrors §3.1 of the paper: the multilevel clustering is computed at
+//! bootstrap, stored on the world communicator, and **propagated to every
+//! derived communicator** (`split`) so that all communicators can build
+//! multilevel topology-aware trees without communication.
+
+use crate::error::{Error, Result};
+use crate::topology::cluster::{Clustering, Rank};
+use crate::topology::spec::TopologySpec;
+use std::sync::Arc;
+
+/// An MPI-like communicator: an ordered process group plus the multilevel
+/// clustering of exactly those processes.
+#[derive(Clone, Debug)]
+pub struct Communicator {
+    /// Map from communicator rank to world rank.
+    world_ranks: Arc<Vec<usize>>,
+    /// Clustering over *communicator* ranks (already restricted).
+    clustering: Arc<Clustering>,
+    /// Human-readable name for reports.
+    name: String,
+}
+
+impl Communicator {
+    /// Bootstrap `MPI_COMM_WORLD` from a topology spec.
+    pub fn world(spec: &TopologySpec) -> Self {
+        let n = spec.n_procs();
+        Communicator {
+            world_ranks: Arc::new((0..n).collect()),
+            clustering: Arc::new(spec.clustering()),
+            name: format!("world[{}]", spec.name),
+        }
+    }
+
+    /// A topology-unaware communicator over `n` ranks (single level) —
+    /// what a plain MPICH would see.
+    pub fn unaware(n: usize) -> Self {
+        Communicator {
+            world_ranks: Arc::new((0..n).collect()),
+            clustering: Arc::new(Clustering::flat(n)),
+            name: format!("flat[{n}]"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.world_ranks.len()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// World rank of communicator rank `r`.
+    pub fn world_rank(&self, r: Rank) -> usize {
+        self.world_ranks[r]
+    }
+
+    pub fn world_ranks(&self) -> &[usize] {
+        &self.world_ranks
+    }
+
+    /// The multilevel clustering of this communicator's group.
+    pub fn clustering(&self) -> &Clustering {
+        &self.clustering
+    }
+
+    /// `MPI_Comm_split`: every rank supplies a `(color, key)`; ranks with
+    /// equal color form a new communicator ordered by `(key, old rank)`.
+    /// Color `None` (MPI_UNDEFINED) opts out. Returns the new
+    /// communicators in ascending color order; each inherits the
+    /// restriction of the parent's clustering (the §3.1 propagation rule).
+    pub fn split<F>(&self, color_key: F) -> Result<Vec<Communicator>>
+    where
+        F: Fn(Rank) -> (Option<i64>, i64),
+    {
+        let mut by_color: std::collections::BTreeMap<i64, Vec<(i64, Rank)>> = Default::default();
+        for r in 0..self.size() {
+            let (color, key) = color_key(r);
+            if let Some(c) = color {
+                by_color.entry(c).or_default().push((key, r));
+            }
+        }
+        let mut out = Vec::with_capacity(by_color.len());
+        for (color, mut members) in by_color {
+            members.sort_by_key(|&(key, r)| (key, r));
+            let ranks: Vec<Rank> = members.iter().map(|&(_, r)| r).collect();
+            let clustering = self.clustering.restrict(&ranks)?;
+            let world_ranks: Vec<usize> = ranks.iter().map(|&r| self.world_ranks[r]).collect();
+            out.push(Communicator {
+                world_ranks: Arc::new(world_ranks),
+                clustering: Arc::new(clustering),
+                name: format!("{}/split{color}", self.name),
+            });
+        }
+        if out.is_empty() {
+            return Err(Error::Comm("split produced no communicators".into()));
+        }
+        Ok(out)
+    }
+
+    /// Communicator over a subset of ranks (in the given order must be
+    /// ascending-unique). Used by tests and the training driver.
+    pub fn sub(&self, ranks: &[Rank]) -> Result<Communicator> {
+        for w in ranks.windows(2) {
+            if w[0] >= w[1] {
+                return Err(Error::Comm("sub(): ranks must be ascending and unique".into()));
+            }
+        }
+        if ranks.iter().any(|&r| r >= self.size()) {
+            return Err(Error::Comm("sub(): rank out of range".into()));
+        }
+        Ok(Communicator {
+            world_ranks: Arc::new(ranks.iter().map(|&r| self.world_ranks[r]).collect()),
+            clustering: Arc::new(self.clustering.restrict(ranks)?),
+            name: format!("{}/sub", self.name),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> Communicator {
+        Communicator::world(&TopologySpec::paper_fig1())
+    }
+
+    #[test]
+    fn world_shape() {
+        let w = world();
+        assert_eq!(w.size(), 20);
+        assert_eq!(w.world_rank(7), 7);
+        assert_eq!(w.clustering().n_levels(), 3);
+    }
+
+    #[test]
+    fn split_even_odd_propagates_clustering() {
+        let w = world();
+        let comms = w.split(|r| (Some((r % 2) as i64), r as i64)).unwrap();
+        assert_eq!(comms.len(), 2);
+        let even = &comms[0];
+        assert_eq!(even.size(), 10);
+        assert_eq!(even.world_rank(0), 0);
+        assert_eq!(even.world_rank(5), 10); // world rank 10 is the 6th even
+        // Clustering was restricted: even ranks 0..5 are SDSC, 5..10 NCSA.
+        assert_eq!(even.clustering().sep(0, 4), 3); // both on SP
+        assert_eq!(even.clustering().sep(0, 5), 1); // SP vs O2Ka: WAN
+        assert_eq!(even.clustering().sep(5, 8), 2); // O2Ka vs O2Kb: LAN
+    }
+
+    #[test]
+    fn split_with_undefined_color() {
+        let w = world();
+        // Only NCSA ranks participate.
+        let comms = w.split(|r| (if r >= 10 { Some(0) } else { None }, r as i64)).unwrap();
+        assert_eq!(comms.len(), 1);
+        assert_eq!(comms[0].size(), 10);
+        assert_eq!(comms[0].world_rank(0), 10);
+    }
+
+    #[test]
+    fn split_key_reorders() {
+        let w = world();
+        // Reverse order within a single color.
+        let comms = w.split(|r| (Some(0), -(r as i64))).unwrap();
+        assert_eq!(comms[0].world_rank(0), 19);
+        assert_eq!(comms[0].world_rank(19), 0);
+    }
+
+    #[test]
+    fn split_all_undefined_errors() {
+        let w = world();
+        assert!(w.split(|_| (None, 0)).is_err());
+    }
+
+    #[test]
+    fn sub_validates() {
+        let w = world();
+        assert!(w.sub(&[3, 3]).is_err());
+        assert!(w.sub(&[5, 2]).is_err());
+        assert!(w.sub(&[99]).is_err());
+        let s = w.sub(&[0, 10, 15]).unwrap();
+        assert_eq!(s.size(), 3);
+        assert_eq!(s.clustering().sep(1, 2), 2); // O2Ka vs O2Kb
+    }
+
+    #[test]
+    fn unaware_has_single_level() {
+        let c = Communicator::unaware(8);
+        assert_eq!(c.clustering().n_levels(), 1);
+        assert_eq!(c.size(), 8);
+    }
+}

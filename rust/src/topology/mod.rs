@@ -1,0 +1,11 @@
+//! Grid topology: declarative specs, the RSL front-end (Fig. 5/6), the
+//! multilevel clustering table (§3.1), and topology-carrying communicators.
+
+pub mod cluster;
+pub mod comm;
+pub mod rsl;
+pub mod spec;
+
+pub use cluster::{Clustering, Rank};
+pub use comm::Communicator;
+pub use spec::{GroupNode, MachineInfo, NodeKind, TopologySpec};

@@ -1,0 +1,612 @@
+//! Parser for the Globus **Resource Specification Language** dialect used
+//! by the paper's Figures 5 and 6, and the bootstrap step that turns a
+//! parsed script into a multilevel [`TopologySpec`].
+//!
+//! Grammar (the subset MPICH-G2 job scripts use):
+//!
+//! ```text
+//! script   := '+'? subjob+
+//! subjob   := '(' '&' relation* ')'
+//! relation := '(' ident '=' value ')'
+//! value    := atom
+//!           | quoted-string
+//!           | pairlist              // e.g. environment=(A 1)(B two)
+//! pairlist := ( '(' ident atom ')' )+
+//! ```
+//!
+//! Each subjob describes one machine (`resourceManagerContact`, `count`).
+//! `GLOBUS_LAN_ID` in a subjob's `environment` merges machines into one
+//! LAN/site group (the paper's only user-visible knob, §3.1);
+//! `GLOBUS_DUROC_SUBJOB_INDEX` fixes subjob (and hence rank) order. As a
+//! documented extension, `GLOBUS_SITE_ID` inserts a level *above* LANs,
+//! producing a 4-level clustering (world / site / LAN / machine).
+
+use crate::error::{Error, Result};
+use crate::topology::spec::{GroupNode, TopologySpec};
+use std::collections::BTreeMap;
+
+/// One `(attr=value)` relation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RslValue {
+    Atom(String),
+    Pairs(Vec<(String, String)>),
+}
+
+/// A parsed subjob: ordered relations.
+#[derive(Clone, Debug, Default)]
+pub struct Subjob {
+    pub relations: Vec<(String, RslValue)>,
+}
+
+impl Subjob {
+    pub fn get(&self, key: &str) -> Option<&RslValue> {
+        self.relations.iter().find(|(k, _)| k.eq_ignore_ascii_case(key)).map(|(_, v)| v)
+    }
+
+    pub fn atom(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(RslValue::Atom(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn env(&self, var: &str) -> Option<&str> {
+        match self.get("environment") {
+            Some(RslValue::Pairs(ps)) => {
+                ps.iter().find(|(k, _)| k == var).map(|(_, v)| v.as_str())
+            }
+            _ => None,
+        }
+    }
+
+    pub fn contact(&self) -> Option<&str> {
+        self.atom("resourceManagerContact")
+    }
+
+    pub fn count(&self) -> Option<usize> {
+        self.atom("count").and_then(|s| s.parse().ok())
+    }
+}
+
+/// A parsed RSL multi-request.
+#[derive(Clone, Debug, Default)]
+pub struct RslScript {
+    pub subjobs: Vec<Subjob>,
+}
+
+// ----------------------------------------------------------------------
+// Lexer
+// ----------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Tok {
+    LParen,
+    RParen,
+    Amp,
+    Plus,
+    Eq,
+    Atom(String),
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+    col: usize,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Self {
+        Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 1 }
+    }
+
+    fn err(&self, msg: impl Into<String>) -> Error {
+        Error::RslParse { line: self.line, col: self.col, msg: msg.into() }
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.src.get(self.pos).copied()?;
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(b)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn skip_ws_and_comments(&mut self) {
+        loop {
+            match self.peek() {
+                Some(b) if b.is_ascii_whitespace() => {
+                    self.bump();
+                }
+                Some(b'#') => {
+                    while let Some(b) = self.bump() {
+                        if b == b'\n' {
+                            break;
+                        }
+                    }
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Next token, or None at EOF.
+    fn next_tok(&mut self) -> Result<Option<(Tok, usize, usize)>> {
+        self.skip_ws_and_comments();
+        let (line, col) = (self.line, self.col);
+        let b = match self.peek() {
+            None => return Ok(None),
+            Some(b) => b,
+        };
+        let tok = match b {
+            b'(' => {
+                self.bump();
+                Tok::LParen
+            }
+            b')' => {
+                self.bump();
+                Tok::RParen
+            }
+            b'&' => {
+                self.bump();
+                Tok::Amp
+            }
+            b'+' => {
+                self.bump();
+                Tok::Plus
+            }
+            b'=' => {
+                self.bump();
+                Tok::Eq
+            }
+            b'"' => {
+                self.bump();
+                let mut s = String::new();
+                loop {
+                    match self.bump() {
+                        None => return Err(self.err("unterminated string")),
+                        Some(b'"') => break,
+                        Some(b'\\') => match self.bump() {
+                            Some(c) => s.push(c as char),
+                            None => return Err(self.err("unterminated escape")),
+                        },
+                        Some(c) => s.push(c as char),
+                    }
+                }
+                Tok::Atom(s)
+            }
+            _ => {
+                let mut s = String::new();
+                while let Some(c) = self.peek() {
+                    if c.is_ascii_whitespace() || matches!(c, b'(' | b')' | b'&' | b'=' | b'"') {
+                        break;
+                    }
+                    s.push(c as char);
+                    self.bump();
+                }
+                if s.is_empty() {
+                    return Err(self.err(format!("unexpected byte {:?}", b as char)));
+                }
+                Tok::Atom(s)
+            }
+        };
+        Ok(Some((tok, line, col)))
+    }
+}
+
+// ----------------------------------------------------------------------
+// Parser
+// ----------------------------------------------------------------------
+
+struct Parser {
+    toks: Vec<(Tok, usize, usize)>,
+    pos: usize,
+}
+
+impl Parser {
+    fn err_at(&self, msg: impl Into<String>) -> Error {
+        let (line, col) = self
+            .toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|&(_, l, c)| (l, c))
+            .unwrap_or((0, 0));
+        Error::RslParse { line, col, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|(t, _, _)| t)
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|(t, _, _)| t.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Tok) -> Result<()> {
+        match self.bump() {
+            Some(ref t) if t == want => Ok(()),
+            Some(t) => Err(self.err_at(format!("expected {want:?}, found {t:?}"))),
+            None => Err(self.err_at(format!("expected {want:?}, found EOF"))),
+        }
+    }
+
+    fn subjob(&mut self) -> Result<Subjob> {
+        self.expect(&Tok::LParen)?;
+        self.expect(&Tok::Amp)?;
+        let mut sj = Subjob::default();
+        loop {
+            match self.peek() {
+                Some(Tok::RParen) => {
+                    self.bump();
+                    break;
+                }
+                Some(Tok::LParen) => {
+                    let (k, v) = self.relation()?;
+                    sj.relations.push((k, v));
+                }
+                Some(t) => {
+                    let t = t.clone();
+                    return Err(self.err_at(format!("expected relation or ')', found {t:?}")));
+                }
+                None => return Err(self.err_at("unterminated subjob")),
+            }
+        }
+        Ok(sj)
+    }
+
+    fn relation(&mut self) -> Result<(String, RslValue)> {
+        self.expect(&Tok::LParen)?;
+        let key = match self.bump() {
+            Some(Tok::Atom(s)) => s,
+            other => return Err(self.err_at(format!("expected attribute name, found {other:?}"))),
+        };
+        self.expect(&Tok::Eq)?;
+        // value: pairs, or atom(s)
+        let val = match self.peek() {
+            Some(Tok::LParen) => {
+                let mut pairs = Vec::new();
+                while matches!(self.peek(), Some(Tok::LParen)) {
+                    self.bump();
+                    let k = match self.bump() {
+                        Some(Tok::Atom(s)) => s,
+                        other => {
+                            return Err(self.err_at(format!("expected env var name, found {other:?}")))
+                        }
+                    };
+                    let v = match self.bump() {
+                        Some(Tok::Atom(s)) => s,
+                        // Empty value: `(VAR )`
+                        Some(Tok::RParen) => {
+                            pairs.push((k, String::new()));
+                            continue;
+                        }
+                        other => {
+                            return Err(self.err_at(format!("expected env value, found {other:?}")))
+                        }
+                    };
+                    self.expect(&Tok::RParen)?;
+                    pairs.push((k, v));
+                }
+                RslValue::Pairs(pairs)
+            }
+            Some(Tok::Atom(_)) => {
+                let mut parts: Vec<String> = Vec::new();
+                while let Some(Tok::Atom(_)) = self.peek() {
+                    if let Some(Tok::Atom(s)) = self.bump() {
+                        parts.push(s);
+                    }
+                }
+                RslValue::Atom(parts.join(" "))
+            }
+            other => return Err(self.err_at(format!("expected value, found {other:?}"))),
+        };
+        self.expect(&Tok::RParen)?;
+        Ok((key, val))
+    }
+}
+
+/// Parse an RSL multi-request script.
+pub fn parse(src: &str) -> Result<RslScript> {
+    let mut lx = Lexer::new(src);
+    let mut toks = Vec::new();
+    while let Some(t) = lx.next_tok()? {
+        toks.push(t);
+    }
+    let mut p = Parser { toks, pos: 0 };
+    // optional leading '+' (multi-request operator)
+    if matches!(p.peek(), Some(Tok::Plus)) {
+        p.bump();
+    }
+    let mut script = RslScript::default();
+    while p.peek().is_some() {
+        script.subjobs.push(p.subjob()?);
+    }
+    if script.subjobs.is_empty() {
+        return Err(Error::RslParse { line: 1, col: 1, msg: "no subjobs in script".into() });
+    }
+    Ok(script)
+}
+
+/// MPICH-G2 bootstrap: derive the multilevel [`TopologySpec`] from a parsed
+/// script (§3.1). Subjobs are ordered by `GLOBUS_DUROC_SUBJOB_INDEX` when
+/// present (script order otherwise); `GLOBUS_LAN_ID` merges machines into
+/// LAN groups; machines without a LAN id form singleton groups. The
+/// extension variable `GLOBUS_SITE_ID` (if present on any subjob) adds a
+/// site level above the LAN level.
+pub fn to_topology(script: &RslScript) -> Result<TopologySpec> {
+    let mut ordered: Vec<(usize, &Subjob)> = script.subjobs.iter().enumerate().collect();
+    // Sort by DUROC index when every subjob carries one.
+    if script.subjobs.iter().all(|s| s.env("GLOBUS_DUROC_SUBJOB_INDEX").is_some()) {
+        let mut keyed: Vec<(usize, &Subjob)> = Vec::with_capacity(ordered.len());
+        for (i, sj) in ordered {
+            let idx: usize = sj
+                .env("GLOBUS_DUROC_SUBJOB_INDEX")
+                .unwrap()
+                .parse()
+                .map_err(|_| Error::TopologySpec(format!("subjob {i}: bad DUROC index")))?;
+            keyed.push((idx, sj));
+        }
+        keyed.sort_by_key(|&(idx, _)| idx);
+        // Duplicate indices are a user error.
+        for w in keyed.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(Error::TopologySpec(format!(
+                    "duplicate GLOBUS_DUROC_SUBJOB_INDEX {}",
+                    w[0].0
+                )));
+            }
+        }
+        ordered = keyed;
+    }
+
+    struct M {
+        name: String,
+        procs: usize,
+        lan: String,
+        site: Option<String>,
+    }
+    let mut machines = Vec::new();
+    for (i, sj) in &ordered {
+        let contact = sj
+            .contact()
+            .ok_or_else(|| Error::TopologySpec(format!("subjob {i}: missing resourceManagerContact")))?;
+        let count = sj
+            .count()
+            .ok_or_else(|| Error::TopologySpec(format!("subjob {i} ({contact}): missing/invalid count")))?;
+        let lan = sj
+            .env("GLOBUS_LAN_ID")
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("__solo_{contact}"));
+        let site = sj.env("GLOBUS_SITE_ID").map(|s| s.to_string());
+        machines.push(M { name: contact.to_string(), procs: count, lan, site });
+    }
+
+    let any_site = machines.iter().any(|m| m.site.is_some());
+    // Group machines by LAN (first-appearance order).
+    let mut lan_order: Vec<String> = Vec::new();
+    let mut lans: BTreeMap<String, Vec<GroupNode>> = BTreeMap::new();
+    let mut lan_site: BTreeMap<String, String> = BTreeMap::new();
+    for m in &machines {
+        if !lan_order.contains(&m.lan) {
+            lan_order.push(m.lan.clone());
+        }
+        lans.entry(m.lan.clone()).or_default().push(GroupNode::machine(&m.name, m.procs));
+        let site = m.site.clone().unwrap_or_else(|| format!("__site_{}", m.lan));
+        match lan_site.get(&m.lan) {
+            Some(prev) if *prev != site => {
+                return Err(Error::TopologySpec(format!(
+                    "LAN '{}' spans sites '{prev}' and '{site}'",
+                    m.lan
+                )));
+            }
+            None => {
+                lan_site.insert(m.lan.clone(), site);
+            }
+            _ => {}
+        }
+    }
+
+    let root = if any_site {
+        // 4 levels: world / site / lan / machine
+        let mut site_order: Vec<String> = Vec::new();
+        let mut sites: BTreeMap<String, Vec<GroupNode>> = BTreeMap::new();
+        for lan in &lan_order {
+            let site = lan_site[lan].clone();
+            if !site_order.contains(&site) {
+                site_order.push(site.clone());
+            }
+            sites.entry(site).or_default().push(GroupNode::group(lan, lans[lan].clone()));
+        }
+        GroupNode::group(
+            "grid",
+            site_order
+                .into_iter()
+                .map(|s| {
+                    let nodes = sites.remove(&s).unwrap();
+                    GroupNode::group(s, nodes)
+                })
+                .collect(),
+        )
+    } else {
+        // 3 levels: world / lan-as-site / machine (the paper's model:
+        // site groups == GLOBUS_LAN_ID groups).
+        GroupNode::group(
+            "grid",
+            lan_order
+                .into_iter()
+                .map(|lan| {
+                    let nodes = lans.remove(&lan).unwrap();
+                    GroupNode::group(lan, nodes)
+                })
+                .collect(),
+        )
+    };
+    TopologySpec::new("rsl", root)
+}
+
+/// Convenience: parse + bootstrap in one step.
+pub fn topology_from_script(src: &str) -> Result<TopologySpec> {
+    to_topology(&parse(src)?)
+}
+
+/// The paper's Figure 6 script (multilevel clustering via GLOBUS_LAN_ID),
+/// reproduced verbatim-modulo-whitespace; used by tests and examples.
+pub const FIG6_SCRIPT: &str = r#"
+( &(resourceManagerContact="sp.npaci.edu")
+   (count=10)
+   (jobtype=mpi)
+   (label="subjob 0")
+   (environment=(GLOBUS_DUROC_SUBJOB_INDEX 0))
+   (directory=/homes/users/smith)
+   (executable=/homes/users/smith/myapp)
+)
+( &(resourceManagerContact="o2ka.ncsa.uiuc.edu")
+   (count=5)
+   (jobtype=mpi)
+   (label="subjob 1")
+   (environment=(GLOBUS_DUROC_SUBJOB_INDEX 1)
+                (GLOBUS_LAN_ID NCSAlan))
+   (directory=/users/smith)
+   (executable=/users/smith/myapp)
+)
+( &(resourceManagerContact="o2kb.ncsa.uiuc.edu")
+   (count=5)
+   (jobtype=mpi)
+   (label="subjob 2")
+   (environment=(GLOBUS_DUROC_SUBJOB_INDEX 2)
+                (GLOBUS_LAN_ID NCSAlan))
+   (directory=/users/smith)
+   (executable=/users/smith/myapp)
+)
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fig6_script() {
+        let s = parse(FIG6_SCRIPT).unwrap();
+        assert_eq!(s.subjobs.len(), 3);
+        assert_eq!(s.subjobs[0].contact(), Some("sp.npaci.edu"));
+        assert_eq!(s.subjobs[0].count(), Some(10));
+        assert_eq!(s.subjobs[0].atom("label"), Some("subjob 0"));
+        assert_eq!(s.subjobs[1].env("GLOBUS_LAN_ID"), Some("NCSAlan"));
+        assert_eq!(s.subjobs[0].env("GLOBUS_LAN_ID"), None);
+    }
+
+    #[test]
+    fn fig6_topology_matches_fig1() {
+        let t = topology_from_script(FIG6_SCRIPT).unwrap();
+        assert_eq!(t.n_procs(), 20);
+        assert_eq!(t.n_levels(), 3);
+        let c = t.clustering();
+        // Same separation structure as the hand-built Fig. 1 clustering.
+        assert_eq!(c.sep(0, 9), 3);
+        assert_eq!(c.sep(10, 15), 2);
+        assert_eq!(c.sep(0, 10), 1);
+        assert_eq!(c.clusters_at(1).len(), 2); // SDSC-ish solo + NCSAlan
+        assert_eq!(c.clusters_at(2).len(), 3);
+    }
+
+    #[test]
+    fn fig5_no_lan_id_gives_singleton_sites() {
+        // Figure 5: identical script minus the GLOBUS_LAN_ID lines: every
+        // machine is its own "site" -> only machine-boundary clustering.
+        let fig5 = FIG6_SCRIPT.replace("(GLOBUS_LAN_ID NCSAlan)", "");
+        let t = topology_from_script(&fig5).unwrap();
+        let c = t.clustering();
+        assert_eq!(c.clusters_at(1).len(), 3); // three singleton groups
+        assert_eq!(c.sep(10, 15), 1); // O2Ka vs O2Kb now looks like WAN
+    }
+
+    #[test]
+    fn duroc_index_reorders() {
+        let src = r#"
+            ( &(resourceManagerContact="b") (count=2)
+              (environment=(GLOBUS_DUROC_SUBJOB_INDEX 1)) )
+            ( &(resourceManagerContact="a") (count=3)
+              (environment=(GLOBUS_DUROC_SUBJOB_INDEX 0)) )
+        "#;
+        let t = topology_from_script(src).unwrap();
+        let ms = t.machines();
+        assert_eq!(ms[0].name, "a");
+        assert_eq!(ms[0].first_rank, 0);
+        assert_eq!(ms[1].name, "b");
+        assert_eq!(ms[1].first_rank, 3);
+    }
+
+    #[test]
+    fn duplicate_duroc_index_rejected() {
+        let src = r#"
+            ( &(resourceManagerContact="a") (count=1)
+              (environment=(GLOBUS_DUROC_SUBJOB_INDEX 0)) )
+            ( &(resourceManagerContact="b") (count=1)
+              (environment=(GLOBUS_DUROC_SUBJOB_INDEX 0)) )
+        "#;
+        assert!(topology_from_script(src).is_err());
+    }
+
+    #[test]
+    fn site_id_extension_adds_level() {
+        let src = r#"
+            ( &(resourceManagerContact="a") (count=2)
+              (environment=(GLOBUS_LAN_ID lan1)(GLOBUS_SITE_ID east)) )
+            ( &(resourceManagerContact="b") (count=2)
+              (environment=(GLOBUS_LAN_ID lan2)(GLOBUS_SITE_ID east)) )
+            ( &(resourceManagerContact="c") (count=2)
+              (environment=(GLOBUS_LAN_ID lan3)(GLOBUS_SITE_ID west)) )
+        "#;
+        let t = topology_from_script(src).unwrap();
+        assert_eq!(t.n_levels(), 4);
+        let c = t.clustering();
+        assert_eq!(c.sep(0, 2), 2); // a vs b: same site, different LAN
+        assert_eq!(c.sep(0, 4), 1); // a vs c: WAN
+    }
+
+    #[test]
+    fn lan_spanning_sites_rejected() {
+        let src = r#"
+            ( &(resourceManagerContact="a") (count=1)
+              (environment=(GLOBUS_LAN_ID l)(GLOBUS_SITE_ID east)) )
+            ( &(resourceManagerContact="b") (count=1)
+              (environment=(GLOBUS_LAN_ID l)(GLOBUS_SITE_ID west)) )
+        "#;
+        assert!(topology_from_script(src).is_err());
+    }
+
+    #[test]
+    fn parse_errors_have_positions() {
+        match parse("( &(count=") {
+            Err(Error::RslParse { line, .. }) => assert_eq!(line, 1),
+            other => panic!("expected parse error, got {other:?}"),
+        }
+        assert!(parse("").is_err());
+        assert!(parse("( &(count 5) )").is_err()); // missing '='
+    }
+
+    #[test]
+    fn comments_and_plus_prefix() {
+        let src = "+ # leading multirequest op\n( &(resourceManagerContact=\"x\") (count=4) )";
+        let t = topology_from_script(src).unwrap();
+        assert_eq!(t.n_procs(), 4);
+    }
+
+    #[test]
+    fn missing_required_fields_rejected() {
+        assert!(topology_from_script("( &(count=4) )").is_err());
+        assert!(topology_from_script("( &(resourceManagerContact=\"x\") )").is_err());
+        assert!(topology_from_script("( &(resourceManagerContact=\"x\") (count=zero) )").is_err());
+    }
+}

@@ -1,0 +1,385 @@
+//! Declarative grid topology: a uniform-depth tree of named groups whose
+//! leaves are machines with process counts. This is the structured form
+//! behind both the RSL front-end (Fig. 5/6) and the programmatic builders
+//! used by experiments.
+
+use crate::error::{Error, Result};
+use crate::topology::cluster::Clustering;
+
+/// A node in the topology tree.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GroupNode {
+    pub name: String,
+    pub kind: NodeKind,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Interior grouping (site, LAN, ...).
+    Group(Vec<GroupNode>),
+    /// A machine hosting `procs` MPI processes.
+    Machine { procs: usize },
+}
+
+impl GroupNode {
+    pub fn group(name: impl Into<String>, children: Vec<GroupNode>) -> Self {
+        GroupNode { name: name.into(), kind: NodeKind::Group(children) }
+    }
+
+    pub fn machine(name: impl Into<String>, procs: usize) -> Self {
+        GroupNode { name: name.into(), kind: NodeKind::Machine { procs } }
+    }
+
+    fn depth_range(&self) -> (usize, usize) {
+        match &self.kind {
+            NodeKind::Machine { .. } => (0, 0),
+            NodeKind::Group(children) => {
+                let mut lo = usize::MAX;
+                let mut hi = 0;
+                for c in children {
+                    let (clo, chi) = c.depth_range();
+                    lo = lo.min(clo + 1);
+                    hi = hi.max(chi + 1);
+                }
+                if children.is_empty() {
+                    (1, 1)
+                } else {
+                    (lo, hi)
+                }
+            }
+        }
+    }
+}
+
+/// A validated topology: uniform depth, >= 1 process.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TopologySpec {
+    pub name: String,
+    root: GroupNode,
+    n_procs: usize,
+    depth: usize, // levels below the root group, >= 1; machines sit at `depth`
+}
+
+/// Description of one machine, flattened in rank order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MachineInfo {
+    pub name: String,
+    /// Names of enclosing groups from outermost (site) to innermost.
+    pub path: Vec<String>,
+    pub first_rank: usize,
+    pub procs: usize,
+}
+
+impl TopologySpec {
+    /// Validate and wrap a group tree. Requirements: all machines at the
+    /// same depth, at least one process, positive per-machine counts.
+    pub fn new(name: impl Into<String>, root: GroupNode) -> Result<Self> {
+        let (lo, hi) = root.depth_range();
+        if lo != hi {
+            return Err(Error::TopologySpec(format!(
+                "machines at non-uniform depth ({lo} vs {hi}); pad the tree"
+            )));
+        }
+        if lo == 0 {
+            return Err(Error::TopologySpec("root cannot itself be a machine".into()));
+        }
+        let mut n = 0usize;
+        let mut bad: Option<String> = None;
+        visit_machines(&root, &mut |m, _| {
+            if let NodeKind::Machine { procs } = m.kind {
+                if procs == 0 {
+                    bad = Some(m.name.clone());
+                }
+                n += procs;
+            }
+        });
+        if let Some(b) = bad {
+            return Err(Error::TopologySpec(format!("machine '{b}' has 0 processes")));
+        }
+        if n == 0 {
+            return Err(Error::TopologySpec("topology has no processes".into()));
+        }
+        Ok(TopologySpec { name: name.into(), root, n_procs: n, depth: lo })
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.n_procs
+    }
+
+    /// Number of clustering levels, including the world level:
+    /// `depth + 1` (world, each interior tier, machines).
+    pub fn n_levels(&self) -> usize {
+        self.depth + 1
+    }
+
+    pub fn root(&self) -> &GroupNode {
+        &self.root
+    }
+
+    /// Machines in rank order with their group paths.
+    pub fn machines(&self) -> Vec<MachineInfo> {
+        let mut out = Vec::new();
+        let mut next_rank = 0usize;
+        visit_machines(&self.root, &mut |m, path| {
+            if let NodeKind::Machine { procs } = m.kind {
+                out.push(MachineInfo {
+                    name: m.name.clone(),
+                    path: path.to_vec(),
+                    first_rank: next_rank,
+                    procs,
+                });
+                next_rank += procs;
+            }
+        });
+        out
+    }
+
+    /// Derive the multilevel clustering (colors table). Ranks are assigned
+    /// in tree (DFS) order; cluster ids per level in first-appearance order.
+    pub fn clustering(&self) -> Clustering {
+        let levels = self.n_levels();
+        let mut colors: Vec<Vec<u32>> = vec![Vec::with_capacity(self.n_procs); levels];
+        // counters[l] = next cluster id to assign at level l
+        let mut counters = vec![0u32; levels];
+        // `ancestors[l]` is the cluster id at level `l` of the node being
+        // visited; when a Machine is reached, `ancestors` is a complete
+        // column of the colors table (the machine's id at the leaf level
+        // was assigned by its parent's loop).
+        fn rec(
+            node: &GroupNode,
+            level: usize,
+            colors: &mut Vec<Vec<u32>>,
+            counters: &mut Vec<u32>,
+            ancestors: &mut Vec<u32>,
+        ) {
+            match &node.kind {
+                NodeKind::Machine { procs } => {
+                    debug_assert_eq!(ancestors.len(), colors.len());
+                    for _ in 0..*procs {
+                        for (l, &c) in ancestors.iter().enumerate() {
+                            colors[l].push(c);
+                        }
+                    }
+                }
+                NodeKind::Group(children) => {
+                    for ch in children {
+                        let id = counters[level];
+                        counters[level] += 1;
+                        ancestors.push(id);
+                        rec(ch, level + 1, colors, counters, ancestors);
+                        ancestors.pop();
+                    }
+                }
+            }
+        }
+        // Level 0 (world): a single cluster with id 0 for every rank; the
+        // recursion assigns fresh ids per child group at each deeper level.
+        let mut ancestors = vec![0u32];
+        rec(&self.root, 1, &mut colors, &mut counters, &mut ancestors);
+        Clustering::new(colors).expect("spec-derived clustering is valid by construction")
+    }
+
+    // ---------------------------------------------------------------
+    // Canned builders used throughout tests, examples and benchmarks.
+    // ---------------------------------------------------------------
+
+    /// `sites[s][m]` = process count of machine `m` at site `s`
+    /// (3 levels: world / site / machine).
+    pub fn grid(name: &str, sites: &[Vec<usize>]) -> Result<Self> {
+        let site_nodes = sites
+            .iter()
+            .enumerate()
+            .map(|(si, machines)| {
+                GroupNode::group(
+                    format!("site{si}"),
+                    machines
+                        .iter()
+                        .enumerate()
+                        .map(|(mi, &p)| GroupNode::machine(format!("site{si}-m{mi}"), p))
+                        .collect(),
+                )
+            })
+            .collect();
+        TopologySpec::new(name, GroupNode::group("grid", site_nodes))
+    }
+
+    /// Uniform grid: `sites` sites × `machines` machines × `procs` processes.
+    pub fn uniform(sites: usize, machines: usize, procs: usize) -> Result<Self> {
+        TopologySpec::grid(
+            &format!("uniform-{sites}x{machines}x{procs}"),
+            &vec![vec![procs; machines]; sites],
+        )
+    }
+
+    /// The paper's Fig. 1 example: 10 procs on the SDSC SP; 5 on each of
+    /// two NCSA O2Ks (which share a LAN).
+    pub fn paper_fig1() -> Self {
+        TopologySpec::new(
+            "fig1",
+            GroupNode::group(
+                "grid",
+                vec![
+                    GroupNode::group("SDSC", vec![GroupNode::machine("SP", 10)]),
+                    GroupNode::group(
+                        "NCSA",
+                        vec![GroupNode::machine("O2Ka", 5), GroupNode::machine("O2Kb", 5)],
+                    ),
+                ],
+            ),
+        )
+        .expect("static spec")
+    }
+
+    /// The §4 experiment: 16 procs on the SDSC SP and 16 on each of the
+    /// ANL SP and ANL O2K (ANL machines share a LAN). 48 processes total.
+    pub fn paper_experiment() -> Self {
+        TopologySpec::new(
+            "paper-experiment",
+            GroupNode::group(
+                "grid",
+                vec![
+                    GroupNode::group("SDSC", vec![GroupNode::machine("SDSC-SP", 16)]),
+                    GroupNode::group(
+                        "ANL",
+                        vec![GroupNode::machine("ANL-SP", 16), GroupNode::machine("ANL-O2K", 16)],
+                    ),
+                ],
+            ),
+        )
+        .expect("static spec")
+    }
+}
+
+fn visit_machines<'a, F: FnMut(&'a GroupNode, &[String])>(node: &'a GroupNode, f: &mut F) {
+    fn rec<'a, F: FnMut(&'a GroupNode, &[String])>(
+        node: &'a GroupNode,
+        path: &mut Vec<String>,
+        f: &mut F,
+    ) {
+        match &node.kind {
+            NodeKind::Machine { .. } => f(node, path),
+            NodeKind::Group(children) => {
+                for c in children {
+                    path.push(node.name.clone());
+                    rec(c, path, f);
+                    path.pop();
+                }
+            }
+        }
+    }
+    let mut path = Vec::new();
+    match &node.kind {
+        NodeKind::Machine { .. } => f(node, &path),
+        NodeKind::Group(children) => {
+            for c in children {
+                rec(c, &mut path, f);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shape() {
+        let t = TopologySpec::paper_fig1();
+        assert_eq!(t.n_procs(), 20);
+        assert_eq!(t.n_levels(), 3);
+        let ms = t.machines();
+        assert_eq!(ms.len(), 3);
+        assert_eq!(ms[0].name, "SP");
+        assert_eq!(ms[0].first_rank, 0);
+        assert_eq!(ms[1].name, "O2Ka");
+        assert_eq!(ms[1].first_rank, 10);
+        assert_eq!(ms[2].first_rank, 15);
+        assert_eq!(ms[1].path, vec!["NCSA".to_string()]);
+    }
+
+    #[test]
+    fn fig1_clustering_matches_hand_built() {
+        let t = TopologySpec::paper_fig1();
+        let c = t.clustering();
+        assert_eq!(c.n_levels(), 3);
+        assert_eq!(c.n_ranks(), 20);
+        assert_eq!(c.sep(0, 9), 3); // same SP
+        assert_eq!(c.sep(0, 10), 1); // WAN
+        assert_eq!(c.sep(10, 15), 2); // LAN between O2Ks
+        assert_eq!(c.clusters_at(1).len(), 2);
+        assert_eq!(c.clusters_at(2).len(), 3);
+    }
+
+    #[test]
+    fn paper_experiment_shape() {
+        let t = TopologySpec::paper_experiment();
+        assert_eq!(t.n_procs(), 48);
+        let c = t.clustering();
+        assert_eq!(c.members(1, 1).len(), 32); // ANL site
+        assert_eq!(c.sep(16, 32), 2); // ANL-SP vs ANL-O2K: LAN
+        assert_eq!(c.sep(0, 16), 1); // SDSC vs ANL: WAN
+    }
+
+    #[test]
+    fn uniform_builder() {
+        let t = TopologySpec::uniform(4, 2, 8).unwrap();
+        assert_eq!(t.n_procs(), 64);
+        assert_eq!(t.machines().len(), 8);
+        let c = t.clustering();
+        assert_eq!(c.clusters_at(1).len(), 4);
+        assert_eq!(c.clusters_at(2).len(), 8);
+    }
+
+    #[test]
+    fn four_level_topology() {
+        // world -> site -> lan -> machine (the MPICH-G2 4-level table).
+        let t = TopologySpec::new(
+            "deep",
+            GroupNode::group(
+                "grid",
+                vec![
+                    GroupNode::group(
+                        "siteA",
+                        vec![
+                            GroupNode::group(
+                                "lanA1",
+                                vec![GroupNode::machine("a", 2), GroupNode::machine("b", 2)],
+                            ),
+                            GroupNode::group("lanA2", vec![GroupNode::machine("c", 2)]),
+                        ],
+                    ),
+                    GroupNode::group(
+                        "siteB",
+                        vec![GroupNode::group("lanB1", vec![GroupNode::machine("d", 2)])],
+                    ),
+                ],
+            ),
+        )
+        .unwrap();
+        assert_eq!(t.n_levels(), 4);
+        let c = t.clustering();
+        assert_eq!(c.sep(0, 2), 3); // a vs b: same lan, different machine
+        assert_eq!(c.sep(0, 4), 2); // a vs c: same site, different lan
+        assert_eq!(c.sep(0, 6), 1); // a vs d: WAN
+    }
+
+    #[test]
+    fn rejects_non_uniform_depth() {
+        let bad = GroupNode::group(
+            "grid",
+            vec![
+                GroupNode::machine("shallow", 1),
+                GroupNode::group("deep", vec![GroupNode::machine("m", 1)]),
+            ],
+        );
+        assert!(TopologySpec::new("bad", bad).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_procs_and_empty() {
+        let zero = GroupNode::group("g", vec![GroupNode::machine("m", 0)]);
+        assert!(TopologySpec::new("z", zero).is_err());
+        let machine_root = GroupNode::machine("m", 4);
+        assert!(TopologySpec::new("m", machine_root).is_err());
+    }
+}

@@ -1,0 +1,301 @@
+//! Communication trees and their builders.
+//!
+//! A [`Tree`] spans a set of communicator ranks; builders produce the
+//! shapes the paper discusses — binomial (Fig. 2, the MPICH default), flat
+//! (postal-optimal at high latency), chain, and generalized Fibonacci
+//! (postal-optimal at intermediate latency λ) — plus the **multilevel
+//! composite** (Fig. 4) and the MagPIe-style 2-level trees (Fig. 3).
+
+pub mod multilevel;
+pub mod shapes;
+
+pub use multilevel::{build_multilevel, build_strategy_tree, LevelPolicy, Strategy};
+pub use shapes::TreeShape;
+
+use crate::error::{Error, Result};
+use crate::topology::Rank;
+
+/// Rooted ordered tree over a subset of communicator ranks `0..n`.
+///
+/// `parent[r] == None` for the root and for ranks not in the tree; use
+/// [`Tree::contains`] to distinguish. Children are ordered — send order
+/// matters (a parent's earlier sends depart first).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tree {
+    root: Rank,
+    parent: Vec<Option<Rank>>,
+    children: Vec<Vec<Rank>>,
+    in_tree: Vec<bool>,
+    n_members: usize,
+}
+
+impl Tree {
+    /// A tree containing only `root` over an `n`-rank communicator.
+    pub fn singleton(n: usize, root: Rank) -> Self {
+        assert!(root < n);
+        let mut t = Tree {
+            root,
+            parent: vec![None; n],
+            children: vec![Vec::new(); n],
+            in_tree: vec![false; n],
+            n_members: 1,
+        };
+        t.in_tree[root] = true;
+        t
+    }
+
+    pub fn root(&self) -> Rank {
+        self.root
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn n_members(&self) -> usize {
+        self.n_members
+    }
+
+    pub fn contains(&self, r: Rank) -> bool {
+        self.in_tree[r]
+    }
+
+    pub fn parent(&self, r: Rank) -> Option<Rank> {
+        self.parent[r]
+    }
+
+    /// Ordered children of `r`.
+    pub fn children(&self, r: Rank) -> &[Rank] {
+        &self.children[r]
+    }
+
+    /// Add edge `parent -> child`, appending to the parent's child order.
+    /// `child` must not already be in the tree; `parent` must be.
+    pub fn attach(&mut self, parent: Rank, child: Rank) -> Result<()> {
+        if !self.in_tree[parent] {
+            return Err(Error::Tree(format!("attach: parent {parent} not in tree")));
+        }
+        if self.in_tree[child] {
+            return Err(Error::Tree(format!("attach: child {child} already in tree")));
+        }
+        self.parent[child] = Some(parent);
+        self.children[parent].push(child);
+        self.in_tree[child] = true;
+        self.n_members += 1;
+        Ok(())
+    }
+
+    /// Members in preorder (root, then each child subtree in order).
+    pub fn preorder(&self) -> Vec<Rank> {
+        let mut out = Vec::with_capacity(self.n_members);
+        let mut stack = vec![self.root];
+        while let Some(r) = stack.pop() {
+            out.push(r);
+            // reverse so the first child is popped first
+            for &c in self.children[r].iter().rev() {
+                stack.push(c);
+            }
+        }
+        out
+    }
+
+    /// Ranks of the subtree rooted at `r` (preorder), including `r`.
+    pub fn subtree(&self, r: Rank) -> Vec<Rank> {
+        let mut out = Vec::new();
+        let mut stack = vec![r];
+        while let Some(x) = stack.pop() {
+            out.push(x);
+            for &c in self.children[x].iter().rev() {
+                stack.push(c);
+            }
+        }
+        out
+    }
+
+    /// Depth of rank `r` (root = 0).
+    pub fn depth(&self, r: Rank) -> usize {
+        let mut d = 0;
+        let mut x = r;
+        while let Some(p) = self.parent[x] {
+            d += 1;
+            x = p;
+        }
+        d
+    }
+
+    /// Height of the tree (max depth over members).
+    pub fn height(&self) -> usize {
+        (0..self.capacity())
+            .filter(|&r| self.in_tree[r])
+            .map(|r| self.depth(r))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Verify structural invariants and (optionally) that the member set
+    /// equals `members`.
+    pub fn validate(&self, members: Option<&[Rank]>) -> Result<()> {
+        if !self.in_tree[self.root] || self.parent[self.root].is_some() {
+            return Err(Error::Tree("root missing or has a parent".into()));
+        }
+        // Every member reachable from root exactly once.
+        let reach = self.preorder();
+        if reach.len() != self.n_members {
+            return Err(Error::Tree(format!(
+                "reachable {} != members {} (cycle or orphan)",
+                reach.len(),
+                self.n_members
+            )));
+        }
+        let mut seen = vec![false; self.capacity()];
+        for &r in &reach {
+            if seen[r] {
+                return Err(Error::Tree(format!("rank {r} visited twice (cycle)")));
+            }
+            seen[r] = true;
+            if !self.in_tree[r] {
+                return Err(Error::Tree(format!("rank {r} reachable but not marked in-tree")));
+            }
+        }
+        // parent/child coherence
+        for r in 0..self.capacity() {
+            for &c in &self.children[r] {
+                if self.parent[c] != Some(r) {
+                    return Err(Error::Tree(format!("child {c} of {r} disagrees on parent")));
+                }
+            }
+            if let Some(p) = self.parent[r] {
+                if !self.children[p].contains(&r) {
+                    return Err(Error::Tree(format!("rank {r} not in parent {p}'s child list")));
+                }
+            }
+        }
+        if let Some(members) = members {
+            if members.len() != self.n_members {
+                return Err(Error::Tree(format!(
+                    "member count {} != expected {}",
+                    self.n_members,
+                    members.len()
+                )));
+            }
+            for &m in members {
+                if !self.in_tree[m] {
+                    return Err(Error::Tree(format!("expected member {m} missing")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// ASCII rendering (for `tree_explorer` and docs).
+    pub fn render(&self, label: impl Fn(Rank) -> String) -> String {
+        let mut out = String::new();
+        fn rec(
+            t: &Tree,
+            r: Rank,
+            prefix: &str,
+            is_last: bool,
+            is_root: bool,
+            label: &dyn Fn(Rank) -> String,
+            out: &mut String,
+        ) {
+            if is_root {
+                out.push_str(&format!("{}\n", label(r)));
+            } else {
+                out.push_str(&format!("{prefix}{}{}\n", if is_last { "└─ " } else { "├─ " }, label(r)));
+            }
+            let kids = t.children(r);
+            for (i, &c) in kids.iter().enumerate() {
+                let last = i + 1 == kids.len();
+                let child_prefix = if is_root {
+                    String::new()
+                } else {
+                    format!("{prefix}{}", if is_last { "   " } else { "│  " })
+                };
+                rec(t, c, &child_prefix, last, false, label, out);
+            }
+        }
+        rec(self, self.root, "", true, true, &label, &mut out);
+        out
+    }
+
+    /// Edge list `(parent, child)` in preorder discovery order.
+    pub fn edges(&self) -> Vec<(Rank, Rank)> {
+        let mut out = Vec::with_capacity(self.n_members.saturating_sub(1));
+        for r in self.preorder() {
+            for &c in self.children(r) {
+                out.push((r, c));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Tree {
+        let mut t = Tree::singleton(3, 0);
+        t.attach(0, 1).unwrap();
+        t.attach(1, 2).unwrap();
+        t
+    }
+
+    #[test]
+    fn attach_and_query() {
+        let t = path3();
+        assert_eq!(t.root(), 0);
+        assert_eq!(t.parent(2), Some(1));
+        assert_eq!(t.children(0), &[1]);
+        assert_eq!(t.n_members(), 3);
+        assert!(t.contains(2));
+        assert_eq!(t.depth(2), 2);
+        assert_eq!(t.height(), 2);
+        t.validate(Some(&[0, 1, 2])).unwrap();
+    }
+
+    #[test]
+    fn attach_rejects_duplicates_and_orphans() {
+        let mut t = path3();
+        assert!(t.attach(0, 1).is_err()); // already in tree
+        let mut t2 = Tree::singleton(5, 0);
+        assert!(t2.attach(3, 4).is_err()); // parent not in tree
+    }
+
+    #[test]
+    fn preorder_and_subtree() {
+        let mut t = Tree::singleton(5, 0);
+        t.attach(0, 1).unwrap();
+        t.attach(0, 2).unwrap();
+        t.attach(1, 3).unwrap();
+        t.attach(1, 4).unwrap();
+        assert_eq!(t.preorder(), vec![0, 1, 3, 4, 2]);
+        assert_eq!(t.subtree(1), vec![1, 3, 4]);
+        assert_eq!(t.edges(), vec![(0, 1), (0, 2), (1, 3), (1, 4)]);
+    }
+
+    #[test]
+    fn validate_detects_missing_member() {
+        let t = path3();
+        assert!(t.validate(Some(&[0, 1])).is_err());
+        assert!(t.validate(Some(&[0, 1, 2])).is_ok());
+    }
+
+    #[test]
+    fn partial_tree_over_larger_comm() {
+        let mut t = Tree::singleton(10, 4);
+        t.attach(4, 7).unwrap();
+        assert!(!t.contains(0));
+        assert_eq!(t.n_members(), 2);
+        t.validate(Some(&[4, 7])).unwrap();
+    }
+
+    #[test]
+    fn render_ascii() {
+        let t = path3();
+        let s = t.render(|r| format!("r{r}"));
+        assert!(s.contains("r0"));
+        assert!(s.contains("└─ r2"));
+    }
+}

@@ -1,0 +1,338 @@
+//! The multilevel topology-aware tree builder (§2.3, §3.2) plus the
+//! comparison strategies: topology-unaware MPICH binomial and the
+//! MagPIe-style 2-level trees (§2.1, §2.2).
+//!
+//! Construction is purely a function of `(clustering, root, policy)` —
+//! every process can build the identical tree independently, with no
+//! communication, exactly as MPICH-G2 does at collective-call time.
+
+use crate::error::Result;
+use crate::topology::{Clustering, Communicator, Rank};
+use crate::tree::shapes::TreeShape;
+use crate::tree::Tree;
+
+/// Which collective-tree strategy to use — the four curves of Fig. 8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// MPICH default: one binomial tree over all ranks, topology-ignorant.
+    Unaware,
+    /// MagPIe-style 2-level, clusters = machines (Fig. 3a).
+    TwoLevelMachine,
+    /// MagPIe-style 2-level, clusters = level-1 (site) groups (Fig. 3b).
+    TwoLevelSite,
+    /// The paper's multilevel approach (Fig. 4).
+    Multilevel,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 4] =
+        [Strategy::Unaware, Strategy::TwoLevelMachine, Strategy::TwoLevelSite, Strategy::Multilevel];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Unaware => "mpich-binomial",
+            Strategy::TwoLevelMachine => "magpie-machine",
+            Strategy::TwoLevelSite => "magpie-site",
+            Strategy::Multilevel => "multilevel",
+        }
+    }
+}
+
+/// Per-level tree shapes for the multilevel builder.
+///
+/// `shape_at(l)` picks the tree used *among the representatives of the
+/// level-`l` clusters* (l = 1 is the WAN level); the deepest level is the
+/// intra-machine tree. The paper's choice (§3.2): flat at the WAN level,
+/// binomial below.
+#[derive(Clone, Debug)]
+pub struct LevelPolicy {
+    /// `shapes[l-1]` = shape among level-`l` cluster representatives;
+    /// levels beyond the vector clamp to the last entry.
+    pub shapes: Vec<TreeShape>,
+}
+
+impl LevelPolicy {
+    /// The paper's §3.2 policy: flat across the WAN, binomial elsewhere.
+    pub fn paper() -> Self {
+        LevelPolicy { shapes: vec![TreeShape::Flat, TreeShape::Binomial] }
+    }
+
+    /// Binomial everywhere (what the earlier hidden-communicator prototype
+    /// [19] produced).
+    pub fn all_binomial() -> Self {
+        LevelPolicy { shapes: vec![TreeShape::Binomial] }
+    }
+
+    /// Same shape at every level.
+    pub fn uniform(shape: TreeShape) -> Self {
+        LevelPolicy { shapes: vec![shape] }
+    }
+
+    pub fn shape_at(&self, level: usize) -> TreeShape {
+        debug_assert!(level >= 1);
+        let idx = (level - 1).min(self.shapes.len() - 1);
+        self.shapes[idx]
+    }
+}
+
+/// Build the multilevel topology-aware tree over all ranks of `clustering`,
+/// rooted at `root` (§2.3):
+///
+/// - at each level, the clusters that partition the current group are
+///   connected by a tree over one **representative** per cluster (the root
+///   for its own cluster, the minimum member rank otherwise);
+/// - recursion descends into each cluster rooted at its representative;
+/// - at the deepest level the remaining ranks share a machine and are
+///   spanned directly.
+///
+/// Consequently each level-`l` boundary inside any cluster is crossed by
+/// exactly (#subclusters - 1) messages — one per non-root subcluster — the
+/// minimum possible (Fig. 4: one WAN message, one LAN message).
+pub fn build_multilevel(clustering: &Clustering, root: Rank, policy: &LevelPolicy) -> Result<Tree> {
+    let n = clustering.n_ranks();
+    let mut tree = Tree::singleton(n, root);
+    let all: Vec<Rank> = (0..n).collect();
+    build_rec(clustering, &all, 1, root, policy, &mut tree)?;
+    tree.validate(Some(&all))?;
+    Ok(tree)
+}
+
+fn build_rec(
+    clustering: &Clustering,
+    ranks: &[Rank],
+    level: usize,
+    root: Rank,
+    policy: &LevelPolicy,
+    tree: &mut Tree,
+) -> Result<()> {
+    debug_assert!(ranks.contains(&root));
+    if ranks.len() == 1 {
+        return Ok(());
+    }
+    if level >= clustering.n_levels() {
+        // Deepest level: all ranks share a machine.
+        return policy.shape_at(level).graft(tree, ranks, root);
+    }
+    let parts = clustering.partition(ranks, level);
+    if parts.len() == 1 {
+        return build_rec(clustering, ranks, level + 1, root, policy, tree);
+    }
+    // One representative per cluster; the root's cluster is led by root.
+    let mut reps = Vec::with_capacity(parts.len());
+    for part in &parts {
+        if part.contains(&root) {
+            reps.push(root);
+        } else {
+            reps.push(*part.iter().min().expect("non-empty part"));
+        }
+    }
+    // Representatives tree: root's rep first (shape builders rotate to the
+    // root), others in cluster order.
+    policy.shape_at(level).graft(tree, &reps, root)?;
+    for (part, &rep) in parts.iter().zip(&reps) {
+        build_rec(clustering, part, level + 1, rep, policy, tree)?;
+    }
+    Ok(())
+}
+
+/// Build the tree for a `(communicator, root, strategy)` triple — the
+/// single entry point the collectives use.
+pub fn build_strategy_tree(
+    comm: &Communicator,
+    root: Rank,
+    strategy: Strategy,
+    policy: &LevelPolicy,
+) -> Result<Tree> {
+    let clustering = comm.clustering();
+    let n = comm.size();
+    let all: Vec<Rank> = (0..n).collect();
+    match strategy {
+        Strategy::Unaware => {
+            let t = TreeShape::Binomial.build(n, &all, root)?;
+            Ok(t)
+        }
+        Strategy::TwoLevelMachine => {
+            // Clusters at the deepest (machine) level; if the clustering
+            // is already flat (1 level) this degrades to Unaware.
+            if clustering.n_levels() < 2 {
+                return build_strategy_tree(comm, root, Strategy::Unaware, policy);
+            }
+            let view = clustering.two_level_view(clustering.n_levels() - 1)?;
+            build_multilevel(&view, root, policy)
+        }
+        Strategy::TwoLevelSite => {
+            if clustering.n_levels() < 2 {
+                return build_strategy_tree(comm, root, Strategy::Unaware, policy);
+            }
+            let view = clustering.two_level_view(1)?;
+            build_multilevel(&view, root, policy)
+        }
+        Strategy::Multilevel => build_multilevel(clustering, root, policy),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologySpec;
+
+    /// Count tree edges by separation level.
+    fn edges_by_sep(tree: &Tree, c: &Clustering) -> Vec<usize> {
+        let mut counts = vec![0usize; c.n_levels()];
+        for (p, ch) in tree.edges() {
+            counts[c.sep(p, ch) - 1] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn fig4_multilevel_tree_crosses_each_level_once() {
+        // Fig. 1/4 topology: SDSC{SP:10}, NCSA{O2Ka:5, O2Kb:5}, root on SP.
+        let spec = TopologySpec::paper_fig1();
+        let c = spec.clustering();
+        let t = build_multilevel(&c, 0, &LevelPolicy::paper()).unwrap();
+        let by_sep = edges_by_sep(&t, &c);
+        assert_eq!(by_sep[0], 1, "exactly one WAN edge (Fig. 4)");
+        assert_eq!(by_sep[1], 1, "exactly one LAN edge (Fig. 4)");
+        assert_eq!(by_sep[2], 17, "remaining edges intra-machine");
+        // The WAN edge lands on the NCSA rep = rank 10 (min of O2Ka);
+        // the LAN edge goes O2Ka-rep -> O2Kb-rep (rank 15).
+        assert_eq!(t.parent(10), Some(0));
+        assert_eq!(t.parent(15), Some(10));
+    }
+
+    #[test]
+    fn fig3a_two_level_machine_uses_two_wan_messages() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = crate::topology::Communicator::world(&spec);
+        let t =
+            build_strategy_tree(&comm, 0, Strategy::TwoLevelMachine, &LevelPolicy::paper()).unwrap();
+        let by_sep = edges_by_sep(&t, comm.clustering());
+        // Machine-boundary clustering ignores the LAN: both O2K reps hang
+        // off the SDSC root -> 2 messages over the WAN (Fig. 3a).
+        assert_eq!(by_sep[0], 2);
+        assert_eq!(by_sep[1], 0);
+    }
+
+    #[test]
+    fn fig3b_two_level_site_uses_one_wan_but_lan_heavy() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = crate::topology::Communicator::world(&spec);
+        let t =
+            build_strategy_tree(&comm, 0, Strategy::TwoLevelSite, &LevelPolicy::paper()).unwrap();
+        let by_sep = edges_by_sep(&t, comm.clustering());
+        // Site clustering: 1 WAN message, but the NCSA-internal binomial
+        // tree is machine-unaware, so multiple LAN crossings (Fig. 3b).
+        assert_eq!(by_sep[0], 1);
+        assert!(by_sep[1] >= 2, "expected multiple LAN crossings, got {}", by_sep[1]);
+    }
+
+    #[test]
+    fn unaware_binomial_crosses_wan_logn_times() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = crate::topology::Communicator::world(&spec);
+        let t = build_strategy_tree(&comm, 0, Strategy::Unaware, &LevelPolicy::paper()).unwrap();
+        let by_sep = edges_by_sep(&t, comm.clustering());
+        // Binomial over 20 ranks rooted at 0: ranks 10..20 are NCSA; many
+        // edges cross the WAN.
+        assert!(by_sep[0] >= 2, "binomial should cross WAN repeatedly, got {}", by_sep[0]);
+    }
+
+    #[test]
+    fn multilevel_any_root_still_minimal() {
+        let spec = TopologySpec::paper_experiment(); // 3 machines, 2 sites, 48 procs
+        let c = spec.clustering();
+        for root in [0usize, 5, 16, 31, 32, 47] {
+            let t = build_multilevel(&c, root, &LevelPolicy::paper()).unwrap();
+            let by_sep = edges_by_sep(&t, &c);
+            assert_eq!(by_sep[0], 1, "root {root}: 1 WAN edge");
+            assert_eq!(by_sep[1], 1, "root {root}: 1 LAN edge (ANL pair)");
+            assert_eq!(t.root(), root);
+        }
+    }
+
+    #[test]
+    fn four_level_clustering_minimal_at_every_level() {
+        // 2 sites x 2 LANs x 2 machines x 3 procs = 24 ranks, 4 levels.
+        let spec = TopologySpec::new(
+            "deep",
+            crate::topology::GroupNode::group(
+                "grid",
+                (0..2)
+                    .map(|s| {
+                        crate::topology::GroupNode::group(
+                            format!("site{s}"),
+                            (0..2)
+                                .map(|l| {
+                                    crate::topology::GroupNode::group(
+                                        format!("s{s}lan{l}"),
+                                        (0..2)
+                                            .map(|m| {
+                                                crate::topology::GroupNode::machine(
+                                                    format!("s{s}l{l}m{m}"),
+                                                    3,
+                                                )
+                                            })
+                                            .collect(),
+                                    )
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        )
+        .unwrap();
+        let c = spec.clustering();
+        assert_eq!(c.n_levels(), 4);
+        let t = build_multilevel(&c, 0, &LevelPolicy::paper()).unwrap();
+        let by_sep = edges_by_sep(&t, &c);
+        assert_eq!(by_sep[0], 1, "1 WAN edge between the 2 sites");
+        assert_eq!(by_sep[1], 2, "1 inter-LAN edge within each site");
+        assert_eq!(by_sep[2], 4, "1 inter-machine edge within each LAN");
+        assert_eq!(by_sep[3], 16, "2 intra-machine edges per machine x 8");
+    }
+
+    #[test]
+    fn strategy_degrades_gracefully_on_flat_clustering() {
+        let comm = crate::topology::Communicator::unaware(8);
+        for s in Strategy::ALL {
+            let t = build_strategy_tree(&comm, 3, s, &LevelPolicy::paper()).unwrap();
+            t.validate(Some(&(0..8).collect::<Vec<_>>())).unwrap();
+            assert_eq!(t.root(), 3);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let spec = TopologySpec::paper_experiment();
+        let comm = crate::topology::Communicator::world(&spec);
+        for s in Strategy::ALL {
+            let a = build_strategy_tree(&comm, 7, s, &LevelPolicy::paper()).unwrap();
+            let b = build_strategy_tree(&comm, 7, s, &LevelPolicy::paper()).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn wan_level_is_flat_in_paper_policy() {
+        // 5 sites, one machine each; the inter-site tree must be flat.
+        let spec = TopologySpec::uniform(5, 1, 2).unwrap();
+        let c = spec.clustering();
+        let t = build_multilevel(&c, 0, &LevelPolicy::paper()).unwrap();
+        // Site reps are ranks 2,4,6,8 — all children of root 0.
+        for rep in [2, 4, 6, 8] {
+            assert_eq!(t.parent(rep), Some(0), "rep {rep} must hang off the root (flat WAN)");
+        }
+    }
+
+    #[test]
+    fn all_binomial_policy_differs_at_wan() {
+        let spec = TopologySpec::uniform(5, 1, 2).unwrap();
+        let c = spec.clustering();
+        let t = build_multilevel(&c, 0, &LevelPolicy::all_binomial()).unwrap();
+        // Binomial over 5 reps: root has ceil(log2(5)) = 3 children, not 4.
+        let rep_children = t.children(0).iter().filter(|&&ch| c.sep(0, ch) == 1).count();
+        assert_eq!(rep_children, 3);
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared utilities: deterministic RNG, statistics, formatting, and the
+//! property-testing kit. All substrates (no external crates beyond `xla`
+//! and `anyhow` are available offline — see DESIGN.md §2).
+
+pub mod fmt;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;

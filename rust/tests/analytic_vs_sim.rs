@@ -1,0 +1,116 @@
+//! Integration: the §4 closed-form model against the simulator (E2) —
+//! absolute agreement for the binomial critical path in the regime the
+//! model covers, and the asymptotic log2(C) saving for the multilevel
+//! approach in the latency-dominated regime.
+
+use gridcollect::analytic::{counts, TwoTier};
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::model::presets;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+
+fn sim_bcast_us(p: usize, c: usize, bytes: usize, s: Strategy) -> f64 {
+    let spec = TopologySpec::uniform(c, 1, p / c).unwrap();
+    let comm = Communicator::world(&spec);
+    CollectiveEngine::new(&comm, presets::paper_grid(), s)
+        .bcast(0, &vec![0.0f32; bytes / 4])
+        .unwrap()
+        .sim
+        .makespan_us
+}
+
+#[test]
+fn binomial_prediction_within_5_percent() {
+    let params = presets::paper_grid();
+    let tt = TwoTier { slow: params.per_sep[0], fast: params.per_sep[2] };
+    for (p, c) in [(16usize, 2usize), (32, 4), (64, 8), (128, 16)] {
+        for bytes in [1024usize, 65536] {
+            let predicted = tt.binomial_bcast_us(p, c, bytes);
+            let simulated = sim_bcast_us(p, c, bytes, Strategy::Unaware);
+            let err = (simulated - predicted).abs() / predicted;
+            assert!(
+                err < 0.05,
+                "P={p} C={c} {bytes}B: predicted {predicted:.0} vs sim {simulated:.0} (err {err:.3})"
+            );
+        }
+    }
+}
+
+#[test]
+fn multilevel_latency_regime_matches_model() {
+    // Small messages: the multilevel prediction (one slow term) must be
+    // within 30% (flat-stage overheads accumulate slightly).
+    let params = presets::paper_grid();
+    let tt = TwoTier { slow: params.per_sep[0], fast: params.per_sep[2] };
+    for (p, c) in [(32usize, 4usize), (64, 8)] {
+        let bytes = 1024;
+        let predicted = tt.multilevel_bcast_us(p, c, bytes);
+        let simulated = sim_bcast_us(p, c, bytes, Strategy::Multilevel);
+        let err = (simulated - predicted).abs() / predicted;
+        assert!(
+            err < 0.3,
+            "P={p} C={c}: predicted {predicted:.0} vs sim {simulated:.0}"
+        );
+    }
+}
+
+#[test]
+fn speedup_grows_toward_log2_c() {
+    let mut prev = 1.0;
+    for c in [2usize, 4, 8, 16] {
+        let p = c * 8;
+        let b = sim_bcast_us(p, c, 1024, Strategy::Unaware);
+        let m = sim_bcast_us(p, c, 1024, Strategy::Multilevel);
+        let speedup = b / m;
+        let bound = (c as f64).log2();
+        assert!(speedup <= bound * 1.05, "C={c}: speedup {speedup} exceeds log2(C)={bound}");
+        assert!(speedup >= prev - 0.05, "C={c}: speedup not monotone");
+        prev = speedup;
+    }
+    assert!(prev > 2.0, "16 clusters should save > 2x, got {prev}");
+}
+
+#[test]
+fn intercluster_message_counts_match_simulator() {
+    for (p, c) in [(16usize, 4usize), (32, 8), (64, 8)] {
+        let spec = TopologySpec::uniform(c, 1, p / c).unwrap();
+        let comm = Communicator::world(&spec);
+        let sim_unaware = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Unaware)
+            .bcast(0, &[0.0f32; 16])
+            .unwrap()
+            .sim;
+        assert_eq!(
+            sim_unaware.wan_messages() as usize,
+            counts::binomial_intercluster(p, c),
+            "P={p} C={c} binomial"
+        );
+        let sim_multi =
+            CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+                .bcast(0, &[0.0f32; 16])
+                .unwrap()
+                .sim;
+        assert_eq!(
+            sim_multi.wan_messages() as usize,
+            counts::multilevel_intercluster(c),
+            "P={p} C={c} multilevel"
+        );
+    }
+}
+
+#[test]
+fn single_cluster_strategies_converge() {
+    // C=1: no WAN at all; binomial == multilevel exactly (same tree).
+    let spec = TopologySpec::uniform(1, 1, 16).unwrap();
+    let comm = Communicator::world(&spec);
+    let b = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Unaware)
+        .bcast(0, &[0.0f32; 1024])
+        .unwrap()
+        .sim
+        .makespan_us;
+    let m = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .bcast(0, &[0.0f32; 1024])
+        .unwrap()
+        .sim
+        .makespan_us;
+    assert!((b - m).abs() < 1e-9);
+}

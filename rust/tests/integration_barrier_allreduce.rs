@@ -1,0 +1,115 @@
+//! Integration: MPI_Barrier semantics (fan-in/fan-out synchronization)
+//! and the allreduce composition used by the training driver.
+
+use gridcollect::collectives::{verify, CollectiveEngine};
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+
+#[test]
+fn barrier_runs_on_all_strategies_with_2n_minus_2_messages() {
+    let spec = TopologySpec::paper_experiment();
+    let comm = Communicator::world(&spec);
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        let sim = e.barrier().unwrap();
+        assert_eq!(
+            sim.msgs_by_sep.iter().sum::<u64>(),
+            2 * (comm.size() as u64 - 1),
+            "{}",
+            s.name()
+        );
+        assert_eq!(sim.bytes_by_sep.iter().sum::<u64>(), 0);
+    }
+}
+
+#[test]
+fn barrier_completion_after_slowest_entrant() {
+    // No rank may exit before every rank has entered: the fan-in must
+    // traverse the WAN once before the root releases anyone (>= 1 WAN
+    // latency for every rank), and remote-site ranks additionally wait
+    // for the fan-out to come back across (>= 2 WAN latencies). The
+    // root is rank 0 at SDSC; ranks 16.. are at ANL.
+    let spec = TopologySpec::paper_experiment();
+    let comm = Communicator::world(&spec);
+    let params = presets::paper_grid();
+    let wan = params.per_sep[0].latency_us;
+    let e = CollectiveEngine::new(&comm, params, Strategy::Multilevel);
+    let sim = e.barrier().unwrap();
+    for (r, &t) in sim.finish_us.iter().enumerate() {
+        assert!(t >= wan * 0.95, "rank {r} exited at {t} before the fan-in crossed the WAN");
+        if r >= 16 {
+            assert!(
+                t >= 2.0 * wan * 0.95,
+                "remote rank {r} exited at {t} before the WAN round-trip"
+            );
+        }
+    }
+}
+
+#[test]
+fn multilevel_barrier_fewer_wan_crossings() {
+    // For zero-byte barriers the WAN crossings of a binomial tree overlap
+    // (latency only, nothing to serialize), so the *makespan* is close;
+    // the multilevel win for barriers is WAN *traffic*: exactly 2
+    // crossings (fan-in + fan-out) instead of O(log n) per phase.
+    let spec = TopologySpec::paper_experiment();
+    let comm = Communicator::world(&spec);
+    let multi = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .barrier()
+        .unwrap();
+    let unaware = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Unaware)
+        .barrier()
+        .unwrap();
+    assert_eq!(multi.wan_messages(), 2, "fan-in + fan-out each cross once");
+    assert!(unaware.wan_messages() > multi.wan_messages());
+    assert!(
+        multi.makespan_us <= unaware.makespan_us * 1.1,
+        "multilevel barrier should not be meaningfully slower: {} vs {}",
+        multi.makespan_us,
+        unaware.makespan_us
+    );
+}
+
+#[test]
+fn allreduce_matches_reference_everywhere() {
+    let spec = TopologySpec::paper_fig1();
+    let comm = Communicator::world(&spec);
+    let contributions: Vec<Vec<f32>> = (0..comm.size())
+        .map(|r| (0..128).map(|i| ((r + i) % 13) as f32).collect())
+        .collect();
+    let expect = verify::ref_reduce(&contributions, ReduceOp::Sum);
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        let out = e.allreduce(ReduceOp::Sum, &contributions).unwrap();
+        for r in 0..comm.size() {
+            assert_eq!(out.data[r], expect, "{} rank {r}", s.name());
+        }
+    }
+}
+
+#[test]
+fn allreduce_multilevel_uses_two_wan_messages() {
+    let spec = TopologySpec::paper_experiment();
+    let comm = Communicator::world(&spec);
+    let contributions: Vec<Vec<f32>> = (0..comm.size()).map(|_| vec![1.0; 64]).collect();
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let out = e.allreduce(ReduceOp::Sum, &contributions).unwrap();
+    assert_eq!(out.sim.wan_messages(), 2, "reduce up + bcast down");
+}
+
+#[test]
+fn allreduce_is_cheaper_than_reduce_plus_separate_bcast_overheads() {
+    // Sanity: composed allreduce time ~= reduce + bcast (no double
+    // counting, no lost overlap beyond the sequential composition).
+    let spec = TopologySpec::paper_fig1();
+    let comm = Communicator::world(&spec);
+    let contributions: Vec<Vec<f32>> = (0..comm.size()).map(|_| vec![1.0; 1024]).collect();
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let ar = e.allreduce(ReduceOp::Sum, &contributions).unwrap().sim.makespan_us;
+    let red = e.reduce(0, ReduceOp::Sum, &contributions).unwrap().sim.makespan_us;
+    let bc = e.bcast(0, &contributions[0]).unwrap().sim.makespan_us;
+    assert!(ar <= red + bc + 1.0, "allreduce {ar} vs reduce {red} + bcast {bc}");
+    assert!(ar >= red.max(bc), "allreduce can't be faster than either phase");
+}

@@ -1,0 +1,150 @@
+//! Integration: the §6-extension collectives (allgather, reduce-scatter,
+//! all-to-all) and the van de Geijn segmented broadcast, at engine level
+//! across strategies and topologies.
+
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::rng::Rng;
+
+fn comm() -> Communicator {
+    Communicator::world(&TopologySpec::paper_fig1())
+}
+
+#[test]
+fn allgather_matches_reference_all_strategies() {
+    let comm = comm();
+    let n = comm.size();
+    let contributions: Vec<Vec<f32>> =
+        (0..n).map(|r| vec![r as f32, (r * r) as f32]).collect();
+    let expect: Vec<f32> = contributions.iter().flatten().copied().collect();
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        let out = e.allgather(&contributions).unwrap();
+        for r in 0..n {
+            assert_eq!(out.data[r], expect, "{} rank {r}", s.name());
+        }
+    }
+}
+
+#[test]
+fn allgather_multilevel_two_wan_crossings() {
+    let comm = comm();
+    let contributions: Vec<Vec<f32>> = (0..comm.size()).map(|_| vec![1.0; 64]).collect();
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let out = e.allgather(&contributions).unwrap();
+    assert_eq!(out.sim.wan_messages(), 2, "up once, down once");
+}
+
+#[test]
+fn reduce_scatter_matches_reference() {
+    let comm = comm();
+    let n = comm.size();
+    let mut rng = Rng::new(7);
+    // contributions[r][q] = segment rank r contributes toward q
+    let contributions: Vec<Vec<Vec<f32>>> = (0..n)
+        .map(|_| (0..n).map(|_| vec![rng.usize_in(0, 10) as f32; 3]).collect())
+        .collect();
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        let out = e.reduce_scatter(ReduceOp::Sum, &contributions).unwrap();
+        for q in 0..n {
+            let mut expect = vec![0.0f32; 3];
+            for r in 0..n {
+                for (e_i, v) in expect.iter_mut().zip(&contributions[r][q]) {
+                    *e_i += v;
+                }
+            }
+            assert_eq!(out.data[q], expect, "{} dst {q}", s.name());
+        }
+    }
+}
+
+#[test]
+fn alltoall_personalized_exchange_all_strategies() {
+    let spec = TopologySpec::uniform(2, 2, 3).unwrap();
+    let comm = Communicator::world(&spec);
+    let n = comm.size();
+    let sends: Vec<Vec<Vec<f32>>> = (0..n)
+        .map(|src| (0..n).map(|dst| vec![(src * 100 + dst) as f32]).collect())
+        .collect();
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        let out = e.alltoall(&sends).unwrap();
+        for dst in 0..n {
+            let expect: Vec<f32> = (0..n).map(|src| (src * 100 + dst) as f32).collect();
+            assert_eq!(out.data[dst], expect, "{} dst {dst}", s.name());
+        }
+    }
+}
+
+#[test]
+fn alltoall_hierarchical_beats_wan_naive_count() {
+    // n ranks across 2 sites: a direct exchange would cross the WAN
+    // (n/2)^2 * 2 times; the tree version crosses exactly twice.
+    let comm = comm();
+    let n = comm.size();
+    let sends: Vec<Vec<Vec<f32>>> =
+        (0..n).map(|_| (0..n).map(|_| vec![0.5]).collect()).collect();
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let out = e.alltoall(&sends).unwrap();
+    assert_eq!(out.sim.wan_messages(), 2);
+    let naive = 2 * (n / 2) * (n / 2);
+    assert!(out.sim.wan_messages() < naive as u64);
+}
+
+#[test]
+fn segmented_bcast_correct_and_faster_on_large_messages() {
+    let comm = comm();
+    let data: Vec<f32> = (0..262144).map(|i| (i % 1000) as f32).collect(); // 1 MiB
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let plain = e.bcast(0, &data).unwrap();
+    let seg = e.bcast_segmented(0, &data, 16).unwrap();
+    for r in 0..comm.size() {
+        assert_eq!(seg.data[r], data, "rank {r}");
+    }
+    assert!(
+        seg.sim.makespan_us < plain.sim.makespan_us,
+        "pipelined {} !< plain {}",
+        seg.sim.makespan_us,
+        plain.sim.makespan_us
+    );
+}
+
+#[test]
+fn segment_tuner_finds_interior_optimum() {
+    let comm = comm();
+    let data = vec![0.0f32; 262144];
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let candidates = [1usize, 2, 4, 8, 16, 32, 64, 128];
+    let (best_s, best_us) = e.tune_bcast_segments(0, &data, &candidates).unwrap();
+    assert!(best_s > 1, "pipelining must help at 1 MiB");
+    // tuned time beats both extremes
+    let one = e.bcast_segmented(0, &data, 1).unwrap().sim.makespan_us;
+    let many = e.bcast_segmented(0, &data, 128).unwrap().sim.makespan_us;
+    assert!(best_us <= one && best_us <= many);
+}
+
+#[test]
+fn segmented_bcast_degenerate_cases() {
+    let comm = comm();
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    // 1 segment == plain bcast data-wise
+    let data = vec![1.0f32, 2.0, 3.0];
+    let out = e.bcast_segmented(0, &data, 1).unwrap();
+    assert!(out.data.iter().all(|d| d == &data));
+    // more segments than elements clamps
+    let out = e.bcast_segmented(0, &data, 100).unwrap();
+    assert!(out.data.iter().all(|d| d == &data));
+}
+
+#[test]
+fn extended_input_validation() {
+    let comm = comm();
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    assert!(e.allgather(&[vec![1.0]]).is_err());
+    assert!(e.reduce_scatter(ReduceOp::Sum, &[vec![vec![1.0]]]).is_err());
+    assert!(e.alltoall(&[vec![vec![1.0]]]).is_err());
+}

@@ -1,0 +1,124 @@
+//! Integration: MPI_Gather and MPI_Scatter — segment placement, byte
+//! accounting (scatter sends only subtree segments), ragged segments,
+//! and round-trips.
+
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::model::presets;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::rng::Rng;
+
+fn ragged_segments(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|r| {
+            let len = rng.usize_in(1, 64);
+            (0..len).map(|i| (r * 1000 + i) as f32).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn gather_assembles_exact_segments_every_strategy() {
+    let spec = TopologySpec::paper_experiment();
+    let comm = Communicator::world(&spec);
+    let segs = ragged_segments(comm.size(), 1);
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        for root in [0, 17, 47] {
+            let out = e.gather(root, &segs).unwrap();
+            assert_eq!(out.data, segs, "{} root {root}", s.name());
+        }
+    }
+}
+
+#[test]
+fn scatter_delivers_exact_segments_every_strategy() {
+    let spec = TopologySpec::paper_experiment();
+    let comm = Communicator::world(&spec);
+    let segs = ragged_segments(comm.size(), 2);
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        for root in [0, 16, 33] {
+            let out = e.scatter(root, &segs).unwrap();
+            assert_eq!(out.data, segs, "{} root {root}", s.name());
+        }
+    }
+}
+
+#[test]
+fn scatter_gather_roundtrip() {
+    let spec = TopologySpec::uniform(3, 2, 4).unwrap();
+    let comm = Communicator::world(&spec);
+    let segs = ragged_segments(comm.size(), 3);
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let scattered = e.scatter(0, &segs).unwrap();
+    let gathered = e.gather(0, &scattered.data).unwrap();
+    assert_eq!(gathered.data, segs);
+}
+
+#[test]
+fn gather_and_scatter_byte_volumes_match() {
+    // Both move each segment along the same tree path (up vs down), so
+    // total bytes on the wire must be identical for the same tree.
+    let spec = TopologySpec::paper_fig1();
+    let comm = Communicator::world(&spec);
+    let segs: Vec<Vec<f32>> = (0..comm.size()).map(|r| vec![r as f32; 16]).collect();
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let g = e.gather(0, &segs).unwrap();
+    let s = e.scatter(0, &segs).unwrap();
+    assert_eq!(g.sim.bytes_by_sep, s.sim.bytes_by_sep);
+}
+
+#[test]
+fn multilevel_gather_crosses_wan_once_with_all_site_bytes() {
+    let spec = TopologySpec::paper_experiment();
+    let comm = Communicator::world(&spec);
+    let per = 64usize; // elements per rank
+    let segs: Vec<Vec<f32>> = (0..comm.size()).map(|_| vec![1.0; per]).collect();
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let out = e.gather(0, &segs).unwrap();
+    assert_eq!(out.sim.wan_messages(), 1);
+    // The single WAN message carries the whole remote site (32 ranks).
+    assert_eq!(out.sim.bytes_by_sep[0], (32 * per * 4) as u64);
+}
+
+#[test]
+fn scatter_wire_bytes_less_than_naive_flat() {
+    // Tree scatter sends each segment once per tree edge on its path;
+    // the multilevel tree keeps remote segments off the WAN except once.
+    let spec = TopologySpec::paper_experiment();
+    let comm = Communicator::world(&spec);
+    let segs: Vec<Vec<f32>> = (0..comm.size()).map(|_| vec![1.0; 256]).collect();
+    let run = |s: Strategy| -> (u64, f64) {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        let mut wan_bytes = 0;
+        let mut total_us = 0.0;
+        for root in 0..comm.size() {
+            let out = e.scatter(root, &segs).unwrap();
+            wan_bytes += out.sim.bytes_by_sep[0];
+            total_us += out.sim.makespan_us;
+        }
+        (wan_bytes, total_us)
+    };
+    let (multi_bytes, multi_us) = run(Strategy::Multilevel);
+    let (unaware_bytes, unaware_us) = run(Strategy::Unaware);
+    assert!(multi_bytes <= unaware_bytes);
+    assert!(
+        multi_us < unaware_us,
+        "rotation-summed scatter: multi {multi_us} vs unaware {unaware_us}"
+    );
+}
+
+#[test]
+fn empty_segments_allowed() {
+    let spec = TopologySpec::paper_fig1();
+    let comm = Communicator::world(&spec);
+    let mut segs: Vec<Vec<f32>> = (0..comm.size()).map(|_| vec![]).collect();
+    segs[5] = vec![9.0];
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let g = e.gather(0, &segs).unwrap();
+    assert_eq!(g.data, segs);
+    let s = e.scatter(0, &segs).unwrap();
+    assert_eq!(s.data, segs);
+}

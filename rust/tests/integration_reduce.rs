@@ -1,0 +1,119 @@
+//! Integration: MPI_Reduce — numeric correctness against the serial
+//! reference for every operator and strategy, exact integer payloads,
+//! and combine-count/message-count invariants.
+
+use gridcollect::collectives::{verify, CollectiveEngine};
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::rng::Rng;
+
+#[test]
+fn all_ops_all_strategies_match_reference() {
+    let spec = TopologySpec::paper_fig1();
+    let comm = Communicator::world(&spec);
+    let mut rng = Rng::new(99);
+    let contributions: Vec<Vec<f32>> = (0..comm.size())
+        .map(|_| (0..512).map(|_| rng.f32_in(0.5, 2.0)).collect())
+        .collect();
+    for op in ReduceOp::ALL {
+        let expect = verify::ref_reduce(&contributions, op);
+        for s in Strategy::ALL {
+            let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+            let out = e.reduce(7, op, &contributions).unwrap();
+            let tol = match op {
+                ReduceOp::Sum => verify::sum_tolerance(comm.size(), 2.0),
+                ReduceOp::Prod => 1e-3, // 20 factors in (0.5, 2.0)
+                _ => 0.0, // max/min are exact under any association
+            };
+            assert!(
+                verify::close(&out.data[7], &expect, tol, 1e-5),
+                "{} {op:?}",
+                s.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn integer_payloads_are_exact_for_sum() {
+    // Integer-valued f32 sums below 2^24 are exact regardless of tree
+    // association — lets us assert bitwise equality across strategies.
+    let spec = TopologySpec::paper_experiment();
+    let comm = Communicator::world(&spec);
+    let contributions: Vec<Vec<f32>> = (0..comm.size())
+        .map(|r| (0..256).map(|i| ((r * 7 + i) % 100) as f32).collect())
+        .collect();
+    let expect = verify::ref_reduce(&contributions, ReduceOp::Sum);
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        let out = e.reduce(0, ReduceOp::Sum, &contributions).unwrap();
+        assert_eq!(out.data[0], expect, "{}", s.name());
+    }
+}
+
+#[test]
+fn reduce_performs_exactly_n_minus_1_combines() {
+    let spec = TopologySpec::uniform(2, 3, 4).unwrap();
+    let comm = Communicator::world(&spec);
+    let contributions: Vec<Vec<f32>> = (0..comm.size()).map(|_| vec![1.0; 64]).collect();
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        let out = e.reduce(3, ReduceOp::Sum, &contributions).unwrap();
+        assert_eq!(out.sim.combines, (comm.size() - 1) as u64, "{}", s.name());
+        assert_eq!(out.data[3], vec![comm.size() as f32; 64]);
+    }
+}
+
+#[test]
+fn multilevel_reduce_minimizes_wan_crossings() {
+    let spec = TopologySpec::paper_experiment();
+    let comm = Communicator::world(&spec);
+    // bandwidth-relevant payload; rotation-summed like the Fig. 7 app
+    let contributions: Vec<Vec<f32>> = (0..comm.size()).map(|_| vec![2.0; 16384]).collect();
+    let multi = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let unaware = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Unaware);
+    let m0 = multi.reduce(0, ReduceOp::Max, &contributions).unwrap();
+    let u0 = unaware.reduce(0, ReduceOp::Max, &contributions).unwrap();
+    assert_eq!(m0.sim.wan_messages(), 1);
+    assert!(u0.sim.wan_messages() > 1);
+    let sum = |e: &CollectiveEngine| -> f64 {
+        (0..comm.size())
+            .map(|root| e.reduce(root, ReduceOp::Max, &contributions).unwrap().sim.makespan_us)
+            .sum()
+    };
+    let m = sum(&multi);
+    let u = sum(&unaware);
+    assert!(m < u, "rotation-summed reduce: multi {m} vs unaware {u}");
+}
+
+#[test]
+fn reduce_root_rotation_all_roots_correct() {
+    let spec = TopologySpec::uniform(2, 2, 3).unwrap();
+    let comm = Communicator::world(&spec);
+    let contributions: Vec<Vec<f32>> =
+        (0..comm.size()).map(|r| vec![r as f32, -(r as f32)]).collect();
+    let expect = verify::ref_reduce(&contributions, ReduceOp::Sum);
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    for root in 0..comm.size() {
+        let out = e.reduce(root, ReduceOp::Sum, &contributions).unwrap();
+        assert_eq!(out.data[root], expect, "root {root}");
+    }
+}
+
+#[test]
+fn special_values_flow_through_reduce() {
+    let spec = TopologySpec::paper_fig1();
+    let comm = Communicator::world(&spec);
+    let mut contributions: Vec<Vec<f32>> =
+        (0..comm.size()).map(|_| vec![1.0f32; 8]).collect();
+    contributions[13][2] = f32::INFINITY;
+    contributions[4][5] = f32::NEG_INFINITY;
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let out = e.reduce(0, ReduceOp::Max, &contributions).unwrap();
+    assert!(out.data[0][2].is_infinite() && out.data[0][2] > 0.0);
+    assert_eq!(out.data[0][5], 1.0); // max ignores -inf
+    let out = e.reduce(0, ReduceOp::Min, &contributions).unwrap();
+    assert!(out.data[0][5].is_infinite() && out.data[0][5] < 0.0);
+}

@@ -1,0 +1,233 @@
+//! Property tests over the collective engine: random topologies, random
+//! payloads, random roots — semantics must match the serial reference for
+//! every strategy, and simulation must always terminate (deadlock-free).
+
+use gridcollect::collectives::{verify, CollectiveEngine};
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::propcheck::{check, Config};
+use gridcollect::util::rng::Rng;
+
+struct Case {
+    spec: TopologySpec,
+    root: usize,
+    strategy: Strategy,
+    op: ReduceOp,
+    /// integer-valued contributions (exact under any association)
+    contributions: Vec<Vec<f32>>,
+}
+
+fn gen_case(rng: &mut Rng, size: usize) -> Case {
+    let sites = rng.usize_in(1, 4);
+    let layout: Vec<Vec<usize>> = (0..sites)
+        .map(|_| {
+            let machines = rng.usize_in(1, 4);
+            (0..machines).map(|_| rng.usize_in(1, size.max(2))).collect()
+        })
+        .collect();
+    let spec = TopologySpec::grid("prop", &layout).unwrap();
+    let n = spec.n_procs();
+    let len = rng.usize_in(1, 128);
+    let contributions = (0..n)
+        .map(|_| (0..len).map(|_| rng.usize_in(0, 8) as f32).collect())
+        .collect();
+    Case {
+        root: rng.usize_in(0, n),
+        strategy: *rng.choose(&Strategy::ALL),
+        op: *rng.choose(&ReduceOp::ALL),
+        spec,
+        contributions,
+    }
+}
+
+#[test]
+fn prop_reduce_matches_serial_reference() {
+    check(
+        "reduce-vs-reference",
+        Config::default().cases(120).max_size(8),
+        gen_case,
+        |case| {
+            let comm = Communicator::world(&case.spec);
+            let e = CollectiveEngine::new(&comm, presets::paper_grid(), case.strategy);
+            let out = e
+                .reduce(case.root, case.op, &case.contributions)
+                .map_err(|e| e.to_string())?;
+            let expect = verify::ref_reduce(&case.contributions, case.op);
+            // products of ints in [0,8) can overflow exactness; use tolerance
+            let tol = if case.op == ReduceOp::Prod { 1e-3 } else { 0.0 };
+            if !verify::close(&out.data[case.root], &expect, tol, 1e-6) {
+                return Err(format!(
+                    "{:?}/{:?} root {}: mismatch",
+                    case.strategy, case.op, case.root
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bcast_delivers_everywhere() {
+    check(
+        "bcast-delivery",
+        Config::default().cases(120).max_size(8),
+        gen_case,
+        |case| {
+            let comm = Communicator::world(&case.spec);
+            let e = CollectiveEngine::new(&comm, presets::paper_grid(), case.strategy);
+            let data = &case.contributions[0];
+            let out = e.bcast(case.root, data).map_err(|e| e.to_string())?;
+            for r in 0..comm.size() {
+                if &out.data[r] != data {
+                    return Err(format!("rank {r} got wrong data"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gather_scatter_are_inverse_permutations() {
+    check(
+        "gather-scatter",
+        Config::default().cases(100).max_size(8),
+        gen_case,
+        |case| {
+            let comm = Communicator::world(&case.spec);
+            let e = CollectiveEngine::new(&comm, presets::paper_grid(), case.strategy);
+            let segs = &case.contributions;
+            let g = e.gather(case.root, segs).map_err(|e| e.to_string())?;
+            if &g.data != segs {
+                return Err("gather mismatch".into());
+            }
+            let s = e.scatter(case.root, segs).map_err(|e| e.to_string())?;
+            if &s.data != segs {
+                return Err("scatter mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_no_deadlocks_and_message_conservation() {
+    check(
+        "termination",
+        Config::default().cases(150).max_size(8),
+        gen_case,
+        |case| {
+            let comm = Communicator::world(&case.spec);
+            let n = comm.size() as u64;
+            let e = CollectiveEngine::new(&comm, presets::paper_grid(), case.strategy);
+            // barrier: 2(n-1) messages, 0 bytes
+            let sim = e.barrier().map_err(|e| format!("barrier: {e}"))?;
+            if sim.msgs_by_sep.iter().sum::<u64>() != 2 * (n - 1) {
+                return Err("barrier message count".into());
+            }
+            // bcast: n-1 messages, (n-1)*len*4 bytes
+            let len = case.contributions[0].len();
+            let out = e
+                .bcast(case.root, &case.contributions[0])
+                .map_err(|e| format!("bcast: {e}"))?;
+            if out.sim.msgs_by_sep.iter().sum::<u64>() != n - 1 {
+                return Err("bcast message count".into());
+            }
+            if out.sim.bytes_by_sep.iter().sum::<u64>() != (n - 1) * (len * 4) as u64 {
+                return Err("bcast byte conservation".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_makespan_nonnegative_and_rank_finish_bounded() {
+    check(
+        "time-sanity",
+        Config::default().cases(100).max_size(8),
+        gen_case,
+        |case| {
+            let comm = Communicator::world(&case.spec);
+            let e = CollectiveEngine::new(&comm, presets::paper_grid(), case.strategy);
+            let out = e.bcast(case.root, &case.contributions[0]).map_err(|e| e.to_string())?;
+            if out.sim.makespan_us < 0.0 {
+                return Err("negative makespan".into());
+            }
+            for &f in &out.sim.finish_us {
+                if f > out.sim.makespan_us + 1e-9 {
+                    return Err("rank finish beyond makespan".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fault_injection_fails_cleanly() {
+    // Mutate a valid broadcast program (drop one random action) and run
+    // it: the engine must either complete with correct semantics (if the
+    // dropped action was redundant — it never is for bcast) or return a
+    // clean Deadlock/Sim error naming stuck ranks. It must never panic
+    // and never deliver silently-wrong payloads.
+    use gridcollect::collectives::programs;
+    use gridcollect::netsim::{run, NativeCombiner, Payload, SimConfig};
+    use gridcollect::tree::{build_strategy_tree, LevelPolicy};
+
+    check(
+        "fault-injection",
+        Config::default().cases(120).max_size(8),
+        |rng, size| {
+            let mut case = gen_case(rng, size);
+            case.root = 0;
+            let drop_seed = rng.next_u64();
+            (case, drop_seed)
+        },
+        |(case, drop_seed)| {
+            let comm = Communicator::world(&case.spec);
+            let tree = build_strategy_tree(&comm, 0, case.strategy, &LevelPolicy::paper())
+                .map_err(|e| e.to_string())?;
+            let mut prog = programs::bcast(&tree, 7).map_err(|e| e.to_string())?;
+            // drop one action from a random non-empty rank
+            let mut rng = Rng::new(*drop_seed);
+            let candidates: Vec<usize> =
+                (0..comm.size()).filter(|&r| !prog.actions[r].is_empty()).collect();
+            if candidates.is_empty() {
+                return Ok(()); // single-rank communicator: nothing to drop
+            }
+            let victim = *rng.choose(&candidates);
+            let idx = rng.usize_in(0, prog.actions[victim].len());
+            prog.actions[victim].remove(idx);
+
+            let mut init = vec![Payload::empty(); comm.size()];
+            init[0] = Payload::single(0, case.contributions[0].clone());
+            let cfg = SimConfig::new(presets::paper_grid());
+            match run(comm.clustering(), &prog, init, &cfg, &NativeCombiner) {
+                Err(gridcollect::error::Error::Deadlock { stuck_ranks, .. }) => {
+                    if stuck_ranks.is_empty() {
+                        return Err("deadlock with no stuck ranks".into());
+                    }
+                    Ok(())
+                }
+                Err(gridcollect::error::Error::Sim(_)) => Ok(()), // undelivered msg
+                Err(e) => Err(format!("unexpected error kind: {e}")),
+                Ok(sim) => {
+                    // Completing is only legal if every rank still got the
+                    // data (dropping a leaf's recv makes it unreachable —
+                    // then the mailbox check must have caught it, so a
+                    // clean Ok means full delivery).
+                    for r in 0..comm.size() {
+                        match sim.payloads[r].get(&0) {
+                            Some(d) if d == case.contributions[0].as_slice() => {}
+                            _ => return Err(format!("silent corruption at rank {r}")),
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}

@@ -1,0 +1,224 @@
+//! Property tests (via the in-repo propcheck kit) over randomly generated
+//! grid topologies: tree invariants for every strategy, minimal boundary
+//! crossings for the multilevel builder, and determinism.
+
+use gridcollect::topology::{Clustering, Communicator, TopologySpec};
+use gridcollect::tree::{
+    build_multilevel, build_strategy_tree, LevelPolicy, Strategy, TreeShape,
+};
+use gridcollect::util::propcheck::{check, Config};
+use gridcollect::util::rng::Rng;
+
+/// Random topology: 1..=4 sites, 1..=3 machines each, 1..=size procs.
+fn random_spec(rng: &mut Rng, size: usize) -> TopologySpec {
+    let sites = rng.usize_in(1, 5);
+    let spec: Vec<Vec<usize>> = (0..sites)
+        .map(|_| {
+            let machines = rng.usize_in(1, 4);
+            (0..machines).map(|_| rng.usize_in(1, size.max(2))).collect()
+        })
+        .collect();
+    TopologySpec::grid("random", &spec).expect("counts >= 1")
+}
+
+fn random_root(rng: &mut Rng, n: usize) -> usize {
+    rng.usize_in(0, n)
+}
+
+#[test]
+fn prop_all_strategies_produce_valid_spanning_trees() {
+    check(
+        "spanning-tree",
+        Config::default().cases(150).max_size(12),
+        |rng, size| {
+            let spec = random_spec(rng, size);
+            let root = random_root(rng, spec.n_procs());
+            (spec, root)
+        },
+        |(spec, root)| {
+            let comm = Communicator::world(spec);
+            let all: Vec<usize> = (0..comm.size()).collect();
+            for s in Strategy::ALL {
+                let t = build_strategy_tree(&comm, *root, s, &LevelPolicy::paper())
+                    .map_err(|e| format!("{s:?}: {e}"))?;
+                t.validate(Some(&all)).map_err(|e| format!("{s:?}: {e}"))?;
+                if t.root() != *root {
+                    return Err(format!("{s:?}: root moved"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_multilevel_crosses_each_boundary_minimally() {
+    check(
+        "minimal-crossings",
+        Config::default().cases(120).max_size(10),
+        |rng, size| {
+            let spec = random_spec(rng, size);
+            let root = random_root(rng, spec.n_procs());
+            (spec, root)
+        },
+        |(spec, root)| {
+            let c = spec.clustering();
+            let t = build_multilevel(&c, *root, &LevelPolicy::paper())
+                .map_err(|e| e.to_string())?;
+            // Level-1 crossings must equal (#level-1 clusters - 1);
+            // within each level-1 cluster, level-2 crossings must equal
+            // (#level-2 clusters inside it - 1).
+            let mut by_sep = vec![0usize; c.n_levels()];
+            for (p, ch) in t.edges() {
+                by_sep[c.sep(p, ch) - 1] += 1;
+            }
+            let sites = c.clusters_at(1).len();
+            if by_sep[0] != sites - 1 {
+                return Err(format!("WAN crossings {} != {}", by_sep[0], sites - 1));
+            }
+            let mut expect_l2 = 0;
+            for site in c.clusters_at(1) {
+                let members = c.members(1, site);
+                let machines = c.partition(&members, 2).len();
+                expect_l2 += machines - 1;
+            }
+            if by_sep[1] != expect_l2 {
+                return Err(format!("LAN crossings {} != {expect_l2}", by_sep[1]));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tree_construction_is_deterministic() {
+    check(
+        "deterministic-trees",
+        Config::default().cases(80).max_size(10),
+        |rng, size| {
+            let spec = random_spec(rng, size);
+            let root = random_root(rng, spec.n_procs());
+            let strategy = *rng.choose(&Strategy::ALL);
+            (spec, root, strategy)
+        },
+        |(spec, root, strategy)| {
+            let comm = Communicator::world(spec);
+            let a = build_strategy_tree(&comm, *root, *strategy, &LevelPolicy::paper())
+                .map_err(|e| e.to_string())?;
+            let b = build_strategy_tree(&comm, *root, *strategy, &LevelPolicy::paper())
+                .map_err(|e| e.to_string())?;
+            if a != b {
+                return Err("non-deterministic construction".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shapes_span_arbitrary_member_subsets() {
+    check(
+        "shape-subsets",
+        Config::default().cases(150).max_size(40),
+        |rng, size| {
+            let cap = size.max(2) + 2;
+            // random subset of 1..=cap ranks
+            let mut members: Vec<usize> = (0..cap).collect();
+            rng.shuffle(&mut members);
+            let k = rng.usize_in(1, cap + 1);
+            let mut members: Vec<usize> = members.into_iter().take(k).collect();
+            members.sort_unstable();
+            let root = *rng.choose(&members);
+            let shape = *rng.choose(&[
+                TreeShape::Binomial,
+                TreeShape::Flat,
+                TreeShape::Chain,
+                TreeShape::Fibonacci(2),
+                TreeShape::Fibonacci(5),
+            ]);
+            (cap, members, root, shape)
+        },
+        |(cap, members, root, shape)| {
+            let t = shape.build(*cap, members, *root).map_err(|e| e.to_string())?;
+            t.validate(Some(members)).map_err(|e| e.to_string())?;
+            // every member except the root has a parent within members
+            for &m in members {
+                if m != *root {
+                    let p = t.parent(m).ok_or(format!("member {m} has no parent"))?;
+                    if !members.contains(&p) {
+                        return Err(format!("parent {p} of {m} outside member set"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_clustering_restrict_preserves_separation_order() {
+    // For any subset, sep in the restriction is >= a function of the
+    // original: if two ranks were in the same cluster they stay together.
+    check(
+        "restrict-separation",
+        Config::default().cases(120).max_size(10),
+        |rng, size| {
+            let spec = random_spec(rng, size);
+            let n = spec.n_procs();
+            let mut ranks: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut ranks);
+            let k = rng.usize_in(1, n + 1);
+            let mut subset: Vec<usize> = ranks.into_iter().take(k).collect();
+            subset.sort_unstable();
+            (spec, subset, rng.next_u64())
+        },
+        |(spec, subset, seed)| {
+            let c = spec.clustering();
+            let sub = c.restrict(subset).map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(*seed);
+            for _ in 0..10.min(subset.len() * subset.len()) {
+                let i = rng.usize_in(0, subset.len());
+                let j = rng.usize_in(0, subset.len());
+                if sub.sep(i, j) != c.sep(subset[i], subset[j]) {
+                    return Err(format!(
+                        "sep changed for ({}, {}): {} vs {}",
+                        subset[i],
+                        subset[j],
+                        sub.sep(i, j),
+                        c.sep(subset[i], subset[j])
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_two_level_views_are_coarsenings() {
+    check(
+        "two-level-view",
+        Config::default().cases(100).max_size(10),
+        |rng, size| random_spec(rng, size),
+        |spec| {
+            let c = spec.clustering();
+            for l in 1..c.n_levels() {
+                let v: Clustering = c.two_level_view(l).map_err(|e| e.to_string())?;
+                if v.n_levels() != 2 {
+                    return Err("view not 2-level".into());
+                }
+                // same-cluster at level l implies same-cluster in view
+                for a in 0..c.n_ranks() {
+                    for b in (a + 1)..c.n_ranks().min(a + 5) {
+                        let same_orig = c.sep(a, b) > l;
+                        let same_view = v.sep(a, b) > 1;
+                        if same_orig != same_view {
+                            return Err(format!("view level {l} disagrees for ({a},{b})"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

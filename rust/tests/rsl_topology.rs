@@ -1,0 +1,93 @@
+//! Integration: the RSL front-end (E6) — from script text to running
+//! collectives, including the Fig. 5 vs Fig. 6 clustering difference and
+//! communicator splitting.
+
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::model::presets;
+use gridcollect::topology::{rsl, Communicator};
+use gridcollect::tree::Strategy;
+
+#[test]
+fn fig6_script_end_to_end() {
+    let spec = rsl::topology_from_script(rsl::FIG6_SCRIPT).unwrap();
+    assert_eq!(spec.n_procs(), 20);
+    let comm = Communicator::world(&spec);
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let out = e.bcast(0, &[1.0f32; 1024]).unwrap();
+    assert_eq!(out.sim.wan_messages(), 1);
+    assert_eq!(out.sim.msgs_by_sep[1], 1, "one LAN message between the O2Ks");
+}
+
+#[test]
+fn lan_id_saves_a_wan_message() {
+    // Fig. 5 (no GLOBUS_LAN_ID): the two O2Ks look WAN-separated, so the
+    // multilevel broadcast must use 2 "WAN" messages; Fig. 6 needs 1.
+    let fig5 = rsl::FIG6_SCRIPT.replace("(GLOBUS_LAN_ID NCSAlan)", "");
+    let spec5 = rsl::topology_from_script(&fig5).unwrap();
+    let spec6 = rsl::topology_from_script(rsl::FIG6_SCRIPT).unwrap();
+    let wan = |spec: &gridcollect::topology::TopologySpec| {
+        let comm = Communicator::world(spec);
+        CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+            .bcast(0, &[0.0f32; 256])
+            .unwrap()
+            .sim
+            .wan_messages()
+    };
+    assert_eq!(wan(&spec5), 2);
+    assert_eq!(wan(&spec6), 1);
+}
+
+#[test]
+fn machine_info_paths_follow_lan_groups() {
+    let spec = rsl::topology_from_script(rsl::FIG6_SCRIPT).unwrap();
+    let ms = spec.machines();
+    assert_eq!(ms.len(), 3);
+    assert_eq!(ms[0].name, "sp.npaci.edu");
+    assert_eq!(ms[1].path, vec!["NCSAlan".to_string()]);
+    assert_eq!(ms[2].path, vec!["NCSAlan".to_string()]);
+}
+
+#[test]
+fn split_on_rsl_topology_keeps_collectives_working() {
+    let spec = rsl::topology_from_script(rsl::FIG6_SCRIPT).unwrap();
+    let comm = Communicator::world(&spec);
+    // Split into SDSC (ranks < 10) and NCSA (>= 10).
+    let subs = comm.split(|r| (Some(if r < 10 { 0 } else { 1 }), r as i64)).unwrap();
+    assert_eq!(subs.len(), 2);
+    // NCSA sub-communicator still knows its two machines.
+    let ncsa = &subs[1];
+    assert_eq!(ncsa.size(), 10);
+    let e = CollectiveEngine::new(ncsa, presets::paper_grid(), Strategy::Multilevel);
+    let out = e.bcast(0, &[3.0f32; 512]).unwrap();
+    // No WAN crossing inside one site; exactly one LAN message between
+    // the two O2Ks.
+    assert_eq!(out.sim.wan_messages(), 0);
+    assert_eq!(out.sim.msgs_by_sep[1], 1);
+    assert!(out.data.iter().all(|d| d == &vec![3.0f32; 512]));
+}
+
+#[test]
+fn four_level_script_runs_collectives() {
+    let src = r#"
+        ( &(resourceManagerContact="a") (count=3)
+          (environment=(GLOBUS_LAN_ID l1)(GLOBUS_SITE_ID east)) )
+        ( &(resourceManagerContact="b") (count=3)
+          (environment=(GLOBUS_LAN_ID l2)(GLOBUS_SITE_ID east)) )
+        ( &(resourceManagerContact="c") (count=3)
+          (environment=(GLOBUS_LAN_ID l3)(GLOBUS_SITE_ID west)) )
+    "#;
+    let spec = rsl::topology_from_script(src).unwrap();
+    assert_eq!(spec.n_levels(), 4);
+    let comm = Communicator::world(&spec);
+    let e = CollectiveEngine::new(&comm, presets::deep_grid(), Strategy::Multilevel);
+    let out = e.bcast(0, &[1.0f32; 128]).unwrap();
+    assert_eq!(out.sim.wan_messages(), 1, "east->west once");
+    assert!(out.data.iter().all(|d| d.len() == 128));
+}
+
+#[test]
+fn whitespace_and_comment_robustness() {
+    let src = "# job header\n\n  ( &(resourceManagerContact=\"x\")(count=2) )\n\t( &(resourceManagerContact=\"y\")(count=2)(environment=(GLOBUS_LAN_ID z)) )";
+    let spec = rsl::topology_from_script(src).unwrap();
+    assert_eq!(spec.n_procs(), 4);
+}

@@ -1,0 +1,125 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//! These tests REQUIRE `make artifacts` (they fail loudly, not skip —
+//! the Makefile orders `test-rust` after `artifacts`).
+
+use gridcollect::collectives::{verify, CollectiveEngine};
+use gridcollect::model::presets;
+use gridcollect::netsim::{Combiner, NativeCombiner, ReduceOp};
+use gridcollect::runtime::{MlpRuntime, Runtime, XlaCombiner};
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let rt = runtime();
+    for name in [
+        "combine2_sum_16384",
+        "combine2_max_16384",
+        "combine2_min_16384",
+        "combine2_prod_16384",
+        "combine8_sum_16384",
+        "mlp_train_step",
+        "mlp_sgd_step",
+    ] {
+        rt.manifest.get(name).unwrap();
+    }
+    assert_eq!(rt.warm_up().unwrap(), rt.manifest.artifacts.len());
+}
+
+#[test]
+fn combine_k_artifact_reduces_eight_buffers() {
+    let rt = runtime();
+    let exe = rt.load("combine8_sum_16384").unwrap();
+    let n = 16384;
+    let k = 8;
+    let mut xs = vec![0.0f32; k * n];
+    for (i, v) in xs.iter_mut().enumerate() {
+        *v = (i / n) as f32; // buffer j filled with value j
+    }
+    let out = exe.run_f32(&[(&xs, &[k as i64, n as i64])]).unwrap();
+    assert_eq!(out[0].len(), n);
+    // sum over j of j = 28
+    assert!(out[0].iter().all(|&v| v == 28.0));
+}
+
+#[test]
+fn xla_combiner_bitwise_matches_native() {
+    let rt = runtime();
+    let c = XlaCombiner::open_default(&rt).unwrap();
+    let mut rng = Rng::new(5);
+    for op in ReduceOp::ALL {
+        for len in [100usize, 16384, 20000] {
+            let mut a: Vec<f32> = (0..len).map(|_| rng.f32_in(0.5, 1.5)).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.f32_in(0.5, 1.5)).collect();
+            let mut expect = a.clone();
+            NativeCombiner.combine(op, &mut expect, &b);
+            c.combine(op, &mut a, &b);
+            assert_eq!(a, expect, "{op:?} len {len}");
+        }
+    }
+}
+
+#[test]
+fn full_reduce_through_pjrt_combiner() {
+    let rt = runtime();
+    let c = XlaCombiner::open_default(&rt).unwrap();
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let contributions: Vec<Vec<f32>> = (0..comm.size())
+        .map(|r| (0..20000).map(|i| ((r + i) % 17) as f32).collect())
+        .collect();
+    let expect = verify::ref_reduce(&contributions, ReduceOp::Sum);
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .with_combiner(&c);
+    let out = e.reduce(3, ReduceOp::Sum, &contributions).unwrap();
+    assert_eq!(out.data[3], expect, "integer sums must be exact");
+    assert!(c.calls.get() > 0, "PJRT combiner was actually used");
+}
+
+#[test]
+fn allreduce_through_pjrt_matches_native_path() {
+    let rt = runtime();
+    let c = XlaCombiner::open_default(&rt).unwrap();
+    let comm = Communicator::world(&TopologySpec::uniform(2, 2, 3).unwrap());
+    let contributions: Vec<Vec<f32>> = (0..comm.size())
+        .map(|r| (0..5000).map(|i| ((r * 3 + i) % 11) as f32).collect())
+        .collect();
+    let xla_out = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .with_combiner(&c)
+        .allreduce(ReduceOp::Sum, &contributions)
+        .unwrap();
+    let native_out = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .allreduce(ReduceOp::Sum, &contributions)
+        .unwrap();
+    assert_eq!(xla_out.data, native_out.data);
+    // Virtual time must be identical: the combiner choice affects the
+    // arithmetic backend, not the simulated clock.
+    assert!((xla_out.sim.makespan_us - native_out.sim.makespan_us).abs() < 1e-9);
+}
+
+#[test]
+fn mlp_artifacts_run() {
+    let rt = runtime();
+    let mlp = MlpRuntime::open(&rt).unwrap();
+    let p = mlp.init_params(42);
+    let (x, y) = mlp.synth_batch(0);
+    let (grads, loss) = mlp.train_step(&p, &x, &y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    let updated = mlp.sgd_step(&p, &grads, 0.01).unwrap();
+    assert_eq!(updated.len(), p.len());
+    assert_ne!(updated, p);
+}
+
+#[test]
+fn hlo_text_files_are_parseable_modules() {
+    let rt = runtime();
+    for a in &rt.manifest.artifacts {
+        let text = std::fs::read_to_string(&a.file).unwrap();
+        assert!(text.starts_with("HloModule"), "{} not an HLO module", a.name);
+        assert!(text.contains("ENTRY"), "{} lacks an entry computation", a.name);
+    }
+}
