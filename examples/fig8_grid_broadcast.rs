@@ -19,7 +19,7 @@ use gridcollect::runtime::{Runtime, XlaCombiner};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gridcollect::error::Result<()> {
     let use_xla = std::env::args().any(|a| a == "--xla");
     let sizes = timing_app::default_sizes();
 

@@ -21,7 +21,7 @@ use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gridcollect::error::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let use_xla = args.iter().any(|a| a == "--xla");
     let steps = args

@@ -11,7 +11,7 @@ use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gridcollect::error::Result<()> {
     // The paper's Fig. 1 grid: 10 procs on an SDSC SP, 5 on each of two
     // NCSA O2Ks that share a LAN.
     let spec = TopologySpec::paper_fig1();
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
             "  {:<16} {:>12}   WAN msgs {}  LAN msgs {}  intra msgs {}",
             strategy.name(),
             fmt::time_us(out.sim.makespan_us),
-            out.sim.msgs_by_sep[0],
+            out.sim.wan_messages(),
             out.sim.msgs_by_sep[1],
             out.sim.msgs_by_sep[2],
         );

@@ -13,7 +13,7 @@ use gridcollect::topology::{rsl, Communicator};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gridcollect::error::Result<()> {
     // --- Figure 6: with GLOBUS_LAN_ID ---
     println!("=== Figure 6 script (GLOBUS_LAN_ID groups the NCSA O2Ks) ===");
     let fig6 = rsl::topology_from_script(rsl::FIG6_SCRIPT)?;

@@ -10,7 +10,7 @@ use gridcollect::coordinator::experiment;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::{Strategy, TreeShape};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gridcollect::error::Result<()> {
     // --- Fig. 2: binomial trees B0..B3 ---
     println!("=== Figure 2: binomial trees B0..B3 ===");
     for k in 0..=3u32 {

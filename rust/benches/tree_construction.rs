@@ -1,12 +1,15 @@
-//! Bench E12a — wall-clock cost of tree construction (the §3.2 design
-//! requires every rank to rebuild the tree at each collective call, so
-//! construction is on the L3 hot path) and of program compilation.
+//! Bench E12a — wall-clock cost of tree construction (which the seed
+//! design re-ran on every collective call) and of program compilation,
+//! plus the plan-cache cold/warm comparison that justifies the
+//! topology → plan → execute pipeline: a warm `PlanCache` hit skips the
+//! tree build *and* the program compile entirely.
 //!
 //! Run: `cargo bench --bench tree_construction`
 
 use gridcollect::benchkit::{section, Bench};
 use gridcollect::collectives::programs;
 use gridcollect::netsim::ReduceOp;
+use gridcollect::plan::{AllreduceAlgo, OpKind, PlanCache, PlanKey};
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::{build_strategy_tree, LevelPolicy, Strategy, TreeShape};
 
@@ -50,5 +53,65 @@ fn main() {
     });
     bench.run("program/scatter/512", || {
         std::hint::black_box(programs::scatter(&tree, 1).unwrap().total_actions());
+    });
+
+    section("plan cache: cold build vs warm hit (paper grid, 48 ranks)");
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let key = |op: OpKind| PlanKey {
+        comm_epoch: comm.epoch(),
+        strategy: Strategy::Multilevel,
+        policy: LevelPolicy::paper(),
+        root: 0,
+        op,
+        segments: 1,
+    };
+    let ops = [
+        OpKind::Bcast,
+        OpKind::Reduce(ReduceOp::Sum),
+        OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceBcast),
+        OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceScatterAllgather),
+    ];
+    for op in ops {
+        let label = match op {
+            OpKind::Allreduce(_, algo) => format!("{}[{}]", op.name(), algo.name()),
+            _ => op.name().to_string(),
+        };
+        // Cold: a fresh cache every iteration — tree build + compile + meta.
+        bench.run(&format!("plan/cold/{label}"), || {
+            let cache = PlanCache::new();
+            let plan = cache.get_or_build(&comm, key(op)).unwrap();
+            std::hint::black_box(plan.meta.total_messages());
+        });
+        // Warm: the plan was built once; every call is a pure lookup.
+        let cache = PlanCache::new();
+        cache.get_or_build(&comm, key(op)).unwrap();
+        bench.run(&format!("plan/warm/{label}"), || {
+            let plan = cache.get_or_build(&comm, key(op)).unwrap();
+            std::hint::black_box(plan.meta.total_messages());
+        });
+    }
+
+    section("plan cache: 512 ranks, warm amortization");
+    let big = Communicator::world(&TopologySpec::uniform(8, 8, 8).unwrap());
+    let big_key = PlanKey {
+        comm_epoch: big.epoch(),
+        strategy: Strategy::Multilevel,
+        policy: LevelPolicy::paper(),
+        root: 0,
+        op: OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceBcast),
+        segments: 1,
+    };
+    bench.run("plan/cold/allreduce/512", || {
+        let cache = PlanCache::new();
+        std::hint::black_box(
+            cache.get_or_build(&big, big_key.clone()).unwrap().meta.total_messages(),
+        );
+    });
+    let cache = PlanCache::new();
+    cache.get_or_build(&big, big_key.clone()).unwrap();
+    bench.run("plan/warm/allreduce/512", || {
+        std::hint::black_box(
+            cache.get_or_build(&big, big_key.clone()).unwrap().meta.total_messages(),
+        );
     });
 }

@@ -14,7 +14,7 @@ pub struct Args {
 /// Flags that take a value (everything else beginning `--` is a switch).
 pub const VALUE_FLAGS: &[&str] = &[
     "sizes", "size", "steps", "lr", "strategy", "root", "spec", "sites", "machines", "procs",
-    "out", "artifacts", "seed", "shape", "params",
+    "out", "artifacts", "seed", "shape", "params", "algo", "op",
 ];
 
 impl Args {
@@ -98,6 +98,42 @@ impl Args {
             ))),
         }
     }
+
+    /// Parse `--algo` (allreduce composition).
+    pub fn allreduce_algo(
+        &self,
+        default: crate::plan::AllreduceAlgo,
+    ) -> Result<crate::plan::AllreduceAlgo> {
+        use crate::plan::AllreduceAlgo::*;
+        match self.get("algo") {
+            None => Ok(default),
+            Some("rb") | Some("reduce-bcast") | Some("reduce+bcast") => Ok(ReduceBcast),
+            Some("rsag") | Some("rs+ag") | Some("reduce-scatter-allgather") => {
+                Ok(ReduceScatterAllgather)
+            }
+            Some(other) => {
+                Err(Error::Cli(format!("unknown allreduce algo '{other}' (use rb|rsag)")))
+            }
+        }
+    }
+
+    /// Parse `--op` (reduction operator).
+    pub fn reduce_op(
+        &self,
+        default: crate::netsim::ReduceOp,
+    ) -> Result<crate::netsim::ReduceOp> {
+        use crate::netsim::ReduceOp::*;
+        match self.get("op") {
+            None => Ok(default),
+            Some("sum") => Ok(Sum),
+            Some("max") => Ok(Max),
+            Some("min") => Ok(Min),
+            Some("prod") => Ok(Prod),
+            Some(other) => {
+                Err(Error::Cli(format!("unknown reduce op '{other}' (use sum|max|min|prod)")))
+            }
+        }
+    }
 }
 
 /// `"64k"` -> 65536, `"2m"` -> 2097152, plain integers pass through.
@@ -151,6 +187,23 @@ mod tests {
             Strategy::TwoLevelSite);
         assert_eq!(args("").strategy(Strategy::Multilevel).unwrap(), Strategy::Multilevel);
         assert!(args("--strategy bogus").strategy(Strategy::Unaware).is_err());
+    }
+
+    #[test]
+    fn allreduce_algo_and_op_names() {
+        use crate::netsim::ReduceOp;
+        use crate::plan::AllreduceAlgo;
+        assert_eq!(
+            args("--algo rsag").allreduce_algo(AllreduceAlgo::ReduceBcast).unwrap(),
+            AllreduceAlgo::ReduceScatterAllgather
+        );
+        assert_eq!(
+            args("").allreduce_algo(AllreduceAlgo::ReduceBcast).unwrap(),
+            AllreduceAlgo::ReduceBcast
+        );
+        assert!(args("--algo bogus").allreduce_algo(AllreduceAlgo::ReduceBcast).is_err());
+        assert_eq!(args("--op max").reduce_op(ReduceOp::Sum).unwrap(), ReduceOp::Max);
+        assert!(args("--op bogus").reduce_op(ReduceOp::Sum).is_err());
     }
 
     #[test]

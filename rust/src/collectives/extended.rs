@@ -13,12 +13,14 @@ use crate::error::Result;
 use crate::netsim::{Merge, Program, ReduceOp, SendPart};
 use crate::topology::Rank;
 use crate::tree::Tree;
+use crate::util::counters::count_program_compile;
 
 /// Allgather: every rank contributes a segment; every rank ends with all
 /// segments. Implemented as gather-up + broadcast-down over the same tree
 /// (each boundary crossed once per direction).
 /// Initial payloads: rank `r` holds `{r: segment}`.
 pub fn allgather(tree: &Tree, tag: u64) -> Result<Program> {
+    count_program_compile();
     let n = tree.capacity();
     let mut p = Program::new(n);
     // up phase: union-gather toward the root
@@ -48,6 +50,7 @@ pub fn allgather(tree: &Tree, tag: u64) -> Result<Program> {
 /// way down.
 /// Initial payloads: rank `r` holds `{q: contribution_r_for_q}` for all q.
 pub fn reduce_scatter(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
+    count_program_compile();
     let n = tree.capacity();
     let mut p = Program::new(n);
     // up phase: combine full maps
@@ -86,6 +89,7 @@ pub fn a2a_key(n: usize, src: Rank, dst: Rank) -> usize {
 /// crossings (2·(sites-1) vs O(n²/sites)) for root concentration —
 /// the same trade the paper's broadcast makes.
 pub fn alltoall(tree: &Tree, tag: u64) -> Result<Program> {
+    count_program_compile();
     let n = tree.capacity();
     let mut p = Program::new(n);
     let mut in_subtree: Vec<Vec<bool>> = vec![vec![false; n]; n];
@@ -140,6 +144,7 @@ pub fn alltoall(tree: &Tree, tag: u64) -> Result<Program> {
 /// of D full-message hops.
 /// Initial payloads: root holds `{i: chunk_i}`.
 pub fn bcast_segmented(tree: &Tree, n_segments: usize, tag: u64) -> Result<Program> {
+    count_program_compile();
     assert!(n_segments >= 1);
     let n = tree.capacity();
     let mut p = Program::new(n);
@@ -186,7 +191,7 @@ mod tests {
             }
         }
         // one WAN crossing per direction
-        assert_eq!(out.msgs_by_sep[0], 2);
+        assert_eq!(out.wan_messages(), 2);
     }
 
     #[test]
@@ -268,7 +273,7 @@ mod tests {
             .collect();
         let cfg = SimConfig::new(presets::paper_grid());
         let out = run(comm.clustering(), &p, init, &cfg, &NativeCombiner).unwrap();
-        assert_eq!(out.msgs_by_sep[0], 2, "one WAN message per direction");
+        assert_eq!(out.wan_messages(), 2, "one WAN message per direction");
     }
 
     #[test]

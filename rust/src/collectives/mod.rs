@@ -1,6 +1,17 @@
-//! The five multilevel topology-aware collective operations (MPI_Bcast,
-//! MPI_Reduce, MPI_Barrier, MPI_Gather, MPI_Scatter — §3) over a simulated
-//! grid, under any of the four strategies of Fig. 8.
+//! The multilevel topology-aware collective operations (§3, §6) over a
+//! simulated grid, under any of the four strategies of Fig. 8.
+//!
+//! Since the plan-pipeline refactor, every operation goes through three
+//! explicit stages (see [`crate::plan`] for the full story):
+//!
+//! 1. **topology** — `(Communicator, Strategy, LevelPolicy)` describe the
+//!    process group and how trees should hug it;
+//! 2. **plan** — a [`crate::plan::CollectivePlan`] (built tree, compiled
+//!    program, static metadata) is fetched from a memoizing
+//!    [`PlanCache`]; repeated calls with the same `(root, op)` reuse it
+//!    with **zero** tree builds and **zero** program compiles;
+//! 3. **execute** — `netsim::run` simulates the cached program against
+//!    this call's payloads.
 
 pub mod extended;
 pub mod programs;
@@ -11,9 +22,10 @@ use crate::model::NetworkParams;
 use crate::netsim::{
     run, Combiner, NativeCombiner, Payload, Program, ReduceOp, SimConfig, SimResult,
 };
+use crate::plan::{AllreduceAlgo, CollectivePlan, OpKind, PlanCache, PlanKey};
 use crate::topology::{Communicator, Rank};
-use crate::tree::{build_strategy_tree, LevelPolicy, Strategy, Tree};
-use std::cell::Cell;
+use crate::tree::{LevelPolicy, Strategy};
+use std::sync::Arc;
 
 /// Outcome of a data-carrying collective: simulator metrics plus the
 /// delivered data.
@@ -25,16 +37,22 @@ pub struct Outcome {
 }
 
 /// High-level executor binding a communicator, a cost model, a combiner
-/// and a strategy. Each call builds the strategy's tree for the requested
-/// root (deterministically, as §3.2 prescribes), compiles the program,
-/// and runs the simulator with real payloads.
+/// and a strategy. Plans (tree + compiled program) are built once per
+/// `(root, op, segmentation)` and memoized in a [`PlanCache`]; each call
+/// only constructs initial payloads and runs the simulator.
+///
+/// The cache is engine-private by default; use
+/// [`CollectiveEngine::with_plan_cache`] to share one across engines
+/// (plans are keyed by [`Communicator::epoch`], so a shared cache never
+/// leaks plans between communicators).
 pub struct CollectiveEngine<'a> {
     comm: &'a Communicator,
     cfg: SimConfig,
     combiner: &'a dyn Combiner,
     strategy: Strategy,
     policy: LevelPolicy,
-    next_tag: Cell<u64>,
+    allreduce_algo: AllreduceAlgo,
+    cache: Arc<PlanCache>,
 }
 
 impl<'a> CollectiveEngine<'a> {
@@ -46,7 +64,8 @@ impl<'a> CollectiveEngine<'a> {
             combiner: &NATIVE,
             strategy,
             policy: LevelPolicy::paper(),
-            next_tag: Cell::new(1),
+            allreduce_algo: AllreduceAlgo::ReduceBcast,
+            cache: Arc::new(PlanCache::new()),
         }
     }
 
@@ -65,6 +84,19 @@ impl<'a> CollectiveEngine<'a> {
         self
     }
 
+    /// Share a plan cache with other engines (e.g. one cache for all
+    /// strategies of an experiment sweep, or across training steps).
+    pub fn with_plan_cache(mut self, cache: Arc<PlanCache>) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    /// Default composition used by [`CollectiveEngine::allreduce`].
+    pub fn with_allreduce_algo(mut self, algo: AllreduceAlgo) -> Self {
+        self.allreduce_algo = algo;
+        self
+    }
+
     pub fn strategy(&self) -> Strategy {
         self.strategy
     }
@@ -73,22 +105,40 @@ impl<'a> CollectiveEngine<'a> {
         self.comm
     }
 
-    fn take_tag(&self, span: u64) -> u64 {
-        let t = self.next_tag.get();
-        self.next_tag.set(t + span);
-        t
+    /// The engine's plan cache (for stats or sharing).
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.cache
     }
 
-    fn tree_for(&self, root: Rank) -> Result<Tree> {
+    /// Stage-2 entry point: fetch (or build once) the compiled plan for
+    /// `(root, op, segments)` under this engine's strategy and policy.
+    pub fn plan_for(
+        &self,
+        root: Rank,
+        op: OpKind,
+        segments: usize,
+    ) -> Result<Arc<CollectivePlan>> {
         if root >= self.comm.size() {
             return Err(Error::Comm(format!(
                 "root {root} out of range for {}-rank communicator",
                 self.comm.size()
             )));
         }
-        build_strategy_tree(self.comm, root, self.strategy, &self.policy)
+        self.cache.get_or_build(
+            self.comm,
+            PlanKey {
+                comm_epoch: self.comm.epoch(),
+                strategy: self.strategy,
+                policy: self.policy.clone(),
+                root,
+                op,
+                segments,
+            },
+        )
     }
 
+    /// Stage-3 entry point: run a compiled program against this call's
+    /// initial payloads.
     fn execute(&self, prog: &Program, init: Vec<Payload>) -> Result<SimResult> {
         run(self.comm.clustering(), prog, init, &self.cfg, self.combiner)
     }
@@ -109,11 +159,10 @@ impl<'a> CollectiveEngine<'a> {
     /// §Perf). Delivered payloads remain inspectable (shared) in
     /// `SimResult::payloads`.
     pub fn bcast_sim(&self, root: Rank, data: &[f32]) -> Result<SimResult> {
-        let tree = self.tree_for(root)?;
-        let prog = programs::bcast(&tree, self.take_tag(16))?;
+        let plan = self.plan_for(root, OpKind::Bcast, 1)?;
         let mut init = vec![Payload::empty(); self.comm.size()];
         init[root] = Payload::single(root, data.to_vec());
-        self.execute(&prog, init)
+        self.execute(&plan.program, init)
     }
 
     /// MPI_Reduce: elementwise `op` over every rank's contribution, result
@@ -121,13 +170,12 @@ impl<'a> CollectiveEngine<'a> {
     /// hold their partials; MPI leaves them undefined).
     pub fn reduce(&self, root: Rank, op: ReduceOp, contributions: &[Vec<f32>]) -> Result<Outcome> {
         self.check_contribs(contributions)?;
-        let tree = self.tree_for(root)?;
-        let prog = programs::reduce(&tree, op, self.take_tag(16))?;
+        let plan = self.plan_for(root, OpKind::Reduce(op), 1)?;
         let init: Vec<Payload> = contributions
             .iter()
             .map(|c| Payload::single(0, c.clone()))
             .collect();
-        let sim = self.execute(&prog, init)?;
+        let sim = self.execute(&plan.program, init)?;
         let data = (0..self.comm.size())
             .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
             .collect();
@@ -136,9 +184,8 @@ impl<'a> CollectiveEngine<'a> {
 
     /// MPI_Barrier rooted at rank 0 (fan-in/fan-out).
     pub fn barrier(&self) -> Result<SimResult> {
-        let tree = self.tree_for(0)?;
-        let prog = programs::barrier(&tree, self.take_tag(16))?;
-        self.execute(&prog, vec![Payload::empty(); self.comm.size()])
+        let plan = self.plan_for(0, OpKind::Barrier, 1)?;
+        self.execute(&plan.program, vec![Payload::empty(); self.comm.size()])
     }
 
     /// MPI_Gather: rank `r`'s segment `contributions[r]` ends at `root`.
@@ -152,14 +199,13 @@ impl<'a> CollectiveEngine<'a> {
                 self.comm.size()
             )));
         }
-        let tree = self.tree_for(root)?;
-        let prog = programs::gather(&tree, self.take_tag(16))?;
+        let plan = self.plan_for(root, OpKind::Gather, 1)?;
         let init: Vec<Payload> = contributions
             .iter()
             .enumerate()
             .map(|(r, c)| Payload::single(r, c.clone()))
             .collect();
-        let sim = self.execute(&prog, init)?;
+        let sim = self.execute(&plan.program, init)?;
         let root_payload = &sim.payloads[root];
         if root_payload.len() != self.comm.size() {
             return Err(Error::Verify(format!(
@@ -184,34 +230,96 @@ impl<'a> CollectiveEngine<'a> {
                 self.comm.size()
             )));
         }
-        let tree = self.tree_for(root)?;
-        let prog = programs::scatter(&tree, self.take_tag(16))?;
+        let plan = self.plan_for(root, OpKind::Scatter, 1)?;
         let mut root_payload = Payload::empty();
         for (r, s) in segments.iter().enumerate() {
             root_payload.union(Payload::single(r, s.clone())).map_err(Error::Sim)?;
         }
         let mut init = vec![Payload::empty(); self.comm.size()];
         init[root] = root_payload;
-        let sim = self.execute(&prog, init)?;
+        let sim = self.execute(&plan.program, init)?;
         let data = (0..self.comm.size())
             .map(|r| sim.payloads[r].get_cloned(&r).unwrap_or_default())
             .collect();
         Ok(Outcome { sim, data })
     }
 
-    /// All-reduce (reduce to rank 0, broadcast back): every rank ends with
-    /// the full reduction. Used by the data-parallel training driver.
+    /// All-reduce: every rank ends with the full reduction. Uses the
+    /// engine's default composition ([`AllreduceAlgo::ReduceBcast`]
+    /// unless overridden) rooted at rank 0. Used by the data-parallel
+    /// training driver.
     pub fn allreduce(&self, op: ReduceOp, contributions: &[Vec<f32>]) -> Result<Outcome> {
+        self.allreduce_at(0, op, contributions)
+    }
+
+    /// All-reduce with an explicit internal tree root. The result is
+    /// root-independent; the root only shapes the message flow (useful
+    /// for load-spreading across repeated calls and for testing).
+    pub fn allreduce_at(
+        &self,
+        root: Rank,
+        op: ReduceOp,
+        contributions: &[Vec<f32>],
+    ) -> Result<Outcome> {
+        self.allreduce_with(self.allreduce_algo, root, op, contributions)
+    }
+
+    /// All-reduce with an explicit composition algorithm. Both algorithms
+    /// deliver bitwise-identical results (same tree, same combine order);
+    /// see [`AllreduceAlgo`] for the trade-off.
+    pub fn allreduce_with(
+        &self,
+        algo: AllreduceAlgo,
+        root: Rank,
+        op: ReduceOp,
+        contributions: &[Vec<f32>],
+    ) -> Result<Outcome> {
         self.check_contribs(contributions)?;
-        let tree = self.tree_for(0)?;
-        let prog = programs::allreduce(&tree, &tree, op, self.take_tag(32))?;
-        let init: Vec<Payload> =
-            contributions.iter().map(|c| Payload::single(0, c.clone())).collect();
-        let sim = self.execute(&prog, init)?;
-        let data = (0..self.comm.size())
-            .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
-            .collect();
-        Ok(Outcome { sim, data })
+        let plan = self.plan_for(root, OpKind::Allreduce(op, algo), 1)?;
+        let n = self.comm.size();
+        match algo {
+            AllreduceAlgo::ReduceBcast => {
+                let init: Vec<Payload> = contributions
+                    .iter()
+                    .map(|c| Payload::single(0, c.clone()))
+                    .collect();
+                let sim = self.execute(&plan.program, init)?;
+                let data = (0..n)
+                    .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
+                    .collect();
+                Ok(Outcome { sim, data })
+            }
+            AllreduceAlgo::ReduceScatterAllgather => {
+                let len = contributions[0].len();
+                let ranges = chunk_ranges(len, n);
+                let init: Vec<Payload> = contributions
+                    .iter()
+                    .map(|c| {
+                        let mut pl = Payload::empty();
+                        for (q, &(lo, hi)) in ranges.iter().enumerate() {
+                            pl.union(Payload::single(q, c[lo..hi].to_vec()))
+                                .expect("distinct chunk keys");
+                        }
+                        pl
+                    })
+                    .collect();
+                let sim = self.execute(&plan.program, init)?;
+                let mut data = Vec::with_capacity(n);
+                for r in 0..n {
+                    let mut flat = Vec::with_capacity(len);
+                    for q in 0..n {
+                        let seg = sim.payloads[r].get(&q).ok_or_else(|| {
+                            Error::Verify(format!(
+                                "allreduce rs+ag: rank {r} missing chunk {q}"
+                            ))
+                        })?;
+                        flat.extend_from_slice(seg);
+                    }
+                    data.push(flat);
+                }
+                Ok(Outcome { sim, data })
+            }
+        }
     }
 
     /// Allgather (§6 extension): every rank contributes `contributions[r]`
@@ -225,14 +333,13 @@ impl<'a> CollectiveEngine<'a> {
                 self.comm.size()
             )));
         }
-        let tree = self.tree_for(0)?;
-        let prog = extended::allgather(&tree, self.take_tag(16))?;
+        let plan = self.plan_for(0, OpKind::Allgather, 1)?;
         let init: Vec<Payload> = contributions
             .iter()
             .enumerate()
             .map(|(r, c)| Payload::single(r, c.clone()))
             .collect();
-        let sim = self.execute(&prog, init)?;
+        let sim = self.execute(&plan.program, init)?;
         let mut data = Vec::with_capacity(self.comm.size());
         for r in 0..self.comm.size() {
             let segs = &sim.payloads[r];
@@ -264,8 +371,7 @@ impl<'a> CollectiveEngine<'a> {
         if contributions.len() != n || contributions.iter().any(|c| c.len() != n) {
             return Err(Error::Comm("reduce_scatter: need n x n segment matrix".into()));
         }
-        let tree = self.tree_for(0)?;
-        let prog = extended::reduce_scatter(&tree, op, self.take_tag(16))?;
+        let plan = self.plan_for(0, OpKind::ReduceScatter(op), 1)?;
         let init: Vec<Payload> = contributions
             .iter()
             .map(|per_dst| {
@@ -276,7 +382,7 @@ impl<'a> CollectiveEngine<'a> {
                 pl
             })
             .collect();
-        let sim = self.execute(&prog, init)?;
+        let sim = self.execute(&plan.program, init)?;
         let data = (0..n)
             .map(|r| sim.payloads[r].get_cloned(&r).unwrap_or_default())
             .collect();
@@ -291,8 +397,7 @@ impl<'a> CollectiveEngine<'a> {
         if sends.len() != n || sends.iter().any(|s| s.len() != n) {
             return Err(Error::Comm("alltoall: need n x n segment matrix".into()));
         }
-        let tree = self.tree_for(0)?;
-        let prog = extended::alltoall(&tree, self.take_tag(16))?;
+        let plan = self.plan_for(0, OpKind::Alltoall, 1)?;
         let init: Vec<Payload> = sends
             .iter()
             .enumerate()
@@ -305,7 +410,7 @@ impl<'a> CollectiveEngine<'a> {
                 pl
             })
             .collect();
-        let sim = self.execute(&prog, init)?;
+        let sim = self.execute(&plan.program, init)?;
         let mut data = Vec::with_capacity(n);
         for dst in 0..n {
             let mut flat = Vec::new();
@@ -322,16 +427,18 @@ impl<'a> CollectiveEngine<'a> {
     }
 
     /// Segmented (pipelined) broadcast — van de Geijn (§5/§6). Splits
-    /// `data` into `n_segments` chunks streamed down the tree.
+    /// `data` into `n_segments` chunks streamed down the tree. The chunk
+    /// count participates in the plan key, so each segmentation compiles
+    /// once and sweeps (e.g. [`CollectiveEngine::tune_bcast_segments`])
+    /// reuse plans across repeats.
     pub fn bcast_segmented(
         &self,
         root: Rank,
         data: &[f32],
         n_segments: usize,
     ) -> Result<Outcome> {
-        let tree = self.tree_for(root)?;
         let segs = n_segments.clamp(1, data.len().max(1));
-        let prog = extended::bcast_segmented(&tree, segs, self.take_tag(segs as u64 + 4))?;
+        let plan = self.plan_for(root, OpKind::BcastSegmented, segs)?;
         let mut root_payload = Payload::empty();
         let chunk = data.len().div_ceil(segs);
         for i in 0..segs {
@@ -343,7 +450,7 @@ impl<'a> CollectiveEngine<'a> {
         }
         let mut init = vec![Payload::empty(); self.comm.size()];
         init[root] = root_payload;
-        let sim = self.execute(&prog, init)?;
+        let sim = self.execute(&plan.program, init)?;
         let data = (0..self.comm.size())
             .map(|r| {
                 let mut flat = Vec::new();
@@ -390,6 +497,18 @@ impl<'a> CollectiveEngine<'a> {
         }
         Ok(())
     }
+}
+
+/// Split `len` elements into `n` contiguous chunks (ceil-sized; trailing
+/// chunks may be empty). Every rank derives identical bounds, so chunk
+/// `q` is globally consistent — the §3.2 determinism requirement applied
+/// to payload segmentation.
+fn chunk_ranges(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let n = n.max(1);
+    let chunk = len.div_ceil(n);
+    (0..n)
+        .map(|q| ((q * chunk).min(len), ((q + 1) * chunk).min(len)))
+        .collect()
 }
 
 #[cfg(test)]
@@ -485,6 +604,96 @@ mod tests {
     }
 
     #[test]
+    fn allreduce_algos_agree_bitwise_at_every_root() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let contributions: Vec<Vec<f32>> = (0..comm.size())
+            .map(|r| (0..37).map(|i| ((r * 7 + i) % 23) as f32).collect())
+            .collect();
+        let e = engine(Strategy::Multilevel, &comm);
+        let reference = e
+            .allreduce_with(AllreduceAlgo::ReduceBcast, 0, ReduceOp::Sum, &contributions)
+            .unwrap();
+        for root in [0, 3, 10, 19] {
+            for algo in AllreduceAlgo::ALL {
+                let out =
+                    e.allreduce_with(algo, root, ReduceOp::Sum, &contributions).unwrap();
+                for r in 0..comm.size() {
+                    assert_eq!(
+                        out.data[r],
+                        reference.data[0],
+                        "{} root {root} rank {r}",
+                        algo.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_rsag_handles_short_and_empty_vectors() {
+        // Fewer elements than ranks => trailing chunks are empty; zero
+        // elements => all chunks empty. Both must round-trip.
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let e = engine(Strategy::Multilevel, &comm);
+        for len in [0usize, 1, 5, 19, 20, 21] {
+            let contributions: Vec<Vec<f32>> =
+                (0..comm.size()).map(|r| vec![(r + 1) as f32; len]).collect();
+            let expect = if len == 0 {
+                Vec::new()
+            } else {
+                verify::ref_reduce(&contributions, ReduceOp::Sum)
+            };
+            let out = e
+                .allreduce_with(
+                    AllreduceAlgo::ReduceScatterAllgather,
+                    0,
+                    ReduceOp::Sum,
+                    &contributions,
+                )
+                .unwrap();
+            for r in 0..comm.size() {
+                assert_eq!(out.data[r], expect, "len {len} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_calls_hit_the_plan_cache() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let e = engine(Strategy::Multilevel, &comm);
+        let data = vec![1.0f32; 16];
+        e.bcast(0, &data).unwrap();
+        assert_eq!(e.plan_cache().misses(), 1);
+        assert_eq!(e.plan_cache().hits(), 0);
+        for _ in 0..5 {
+            e.bcast(0, &data).unwrap();
+        }
+        assert_eq!(e.plan_cache().misses(), 1, "one build, five hits");
+        assert_eq!(e.plan_cache().hits(), 5);
+        // A different root is a different plan.
+        e.bcast(1, &data).unwrap();
+        assert_eq!(e.plan_cache().misses(), 2);
+    }
+
+    #[test]
+    fn plan_cache_shared_across_engines() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let shared = Arc::new(PlanCache::new());
+        let a = engine(Strategy::Multilevel, &comm).with_plan_cache(shared.clone());
+        let b = engine(Strategy::Multilevel, &comm).with_plan_cache(shared.clone());
+        let data = vec![2.0f32; 8];
+        a.bcast(4, &data).unwrap();
+        let out = b.bcast(4, &data).unwrap();
+        assert_eq!(out.data[0], data);
+        assert_eq!(shared.misses(), 1, "second engine reused the first's plan");
+        assert_eq!(shared.hits(), 1);
+    }
+
+    #[test]
     fn input_validation() {
         let spec = TopologySpec::paper_fig1();
         let comm = Communicator::world(&spec);
@@ -496,16 +705,32 @@ mod tests {
         assert!(e.reduce(0, ReduceOp::Sum, &ragged).is_err());
         assert!(e.gather(0, &[vec![]]).is_err());
         assert!(e.scatter(0, &[vec![]]).is_err());
+        assert!(e.allreduce_at(99, ReduceOp::Sum, &vec![vec![1.0]; comm.size()]).is_err());
     }
 
     #[test]
     fn tags_do_not_collide_across_calls() {
+        // Plans are compiled at a fixed base tag; every run gets an
+        // isolated mailbox, so reusing tags across calls is safe.
         let spec = TopologySpec::paper_fig1();
         let comm = Communicator::world(&spec);
         let e = engine(Strategy::Multilevel, &comm);
         for i in 0..5 {
             let out = e.bcast(i, &[i as f32]).unwrap();
             assert_eq!(out.data[10][0], i as f32);
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_cover_and_partition() {
+        for (len, n) in [(0usize, 4usize), (1, 4), (5, 4), (8, 4), (9, 4), (20, 1)] {
+            let rs = chunk_ranges(len, n);
+            assert_eq!(rs.len(), n);
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs[n - 1].1, len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
         }
     }
 }

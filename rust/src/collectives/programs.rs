@@ -9,10 +9,12 @@
 use crate::error::Result;
 use crate::netsim::{Merge, Program, ReduceOp, SendPart};
 use crate::tree::Tree;
+use crate::util::counters::count_program_compile;
 
 /// Broadcast (MPI_Bcast): root's payload flows down the tree.
 /// Initial payloads: root holds the data; everyone else empty.
 pub fn bcast(tree: &Tree, tag: u64) -> Result<Program> {
+    count_program_compile();
     let n = tree.capacity();
     let mut p = Program::new(n);
     for r in tree.preorder() {
@@ -31,6 +33,7 @@ pub fn bcast(tree: &Tree, tag: u64) -> Result<Program> {
 /// finishes with `op` applied across every rank's contribution.
 /// Initial payloads: every rank holds its contribution under segment key 0.
 pub fn reduce(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
+    count_program_compile();
     let n = tree.capacity();
     let mut p = Program::new(n);
     for r in tree.preorder() {
@@ -50,6 +53,7 @@ pub fn reduce(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
 /// No rank's fan-out receive can complete before every rank has entered
 /// the fan-in phase.
 pub fn barrier(tree: &Tree, tag: u64) -> Result<Program> {
+    count_program_compile();
     let n = tree.capacity();
     let tag_up = tag;
     let tag_down = tag + 1;
@@ -74,6 +78,7 @@ pub fn barrier(tree: &Tree, tag: u64) -> Result<Program> {
 /// tree; the root finishes holding every rank's segment.
 /// Initial payloads: rank `r` holds its segment under key `r`.
 pub fn gather(tree: &Tree, tag: u64) -> Result<Program> {
+    count_program_compile();
     let n = tree.capacity();
     let mut p = Program::new(n);
     for r in tree.preorder() {
@@ -92,6 +97,7 @@ pub fn gather(tree: &Tree, tag: u64) -> Result<Program> {
 /// edge carries exactly the segments of the child's subtree.
 /// Initial payloads: root holds all segments under their owners' keys.
 pub fn scatter(tree: &Tree, tag: u64) -> Result<Program> {
+    count_program_compile();
     let n = tree.capacity();
     let mut p = Program::new(n);
     for r in tree.preorder() {
@@ -106,11 +112,70 @@ pub fn scatter(tree: &Tree, tag: u64) -> Result<Program> {
     Ok(p)
 }
 
-/// All-reduce composition: reduce to the tree root, then broadcast back
-/// down (the MPICH-G2 implementation composes exactly these two phases).
-pub fn allreduce(reduce_tree: &Tree, bcast_tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
-    let mut p = reduce(reduce_tree, op, tag)?;
-    p.then(bcast(bcast_tree, tag + 8)?)?;
+// NOTE: there is deliberately no `allreduce` compiler here. The
+// reduce+bcast composition is built exactly once, in
+// `plan::PlanCache::build`, by concatenating the *cached* reduce and
+// bcast plans with `Program::rebase_tags` — a second standalone
+// implementation would inevitably drift from it.
+
+/// All-reduce via reduce-scatter + allgather over one tree — the
+/// segmented-delivery composition ([`crate::plan::AllreduceAlgo`]).
+///
+/// Inputs are the same per-destination segment maps `reduce_scatter`
+/// uses: rank `r` starts with `{q: chunk_q(contribution_r)}` for every
+/// destination `q`, and ends holding every reduced chunk. Three phases
+/// over the same tree:
+///
+/// 1. **up** (`tag`): full segment maps combine toward the root, child
+///    order — the same elementwise fold as [`reduce`], so the result is
+///    bitwise identical to the reduce+bcast composition;
+/// 2. **scatter-down** (`tag+1`): each edge `(p, c)` delivers exactly
+///    `subtree(c)`'s reduced chunks (the reduce-scatter half);
+/// 3. **complement-down** (`tag+2`): each edge delivers the chunks
+///    *outside* `subtree(c)` (the allgather half). No up-phase is needed:
+///    after phase 2 every ancestor already holds its descendants' chunks.
+///
+/// Total bytes per edge equal the reduce+bcast composition's (the full
+/// vector must cross every edge once per direction either way), but the
+/// down-traffic is split into two messages, so a child can forward its
+/// subtree's chunks before the complement arrives — pipelining that
+/// shortens deep-tree makespans at the price of n-1 extra (small)
+/// messages.
+pub fn allreduce_rsag(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
+    count_program_compile();
+    let n = tree.capacity();
+    let members: Vec<usize> = tree.preorder();
+    let mut p = Program::new(n);
+    // Phase 1: combine full maps up (identical dataflow to `reduce`).
+    for &r in &members {
+        for &c in tree.children(r) {
+            p.recv(r, c, tag, Merge::Combine(op));
+        }
+        if let Some(parent) = tree.parent(r) {
+            p.send(r, parent, tag, SendPart::All);
+        }
+    }
+    // Phases 2+3 interleaved per rank so subtree chunks can be forwarded
+    // to grandchildren before the complement arrives from the parent.
+    for &r in &members {
+        if let Some(parent) = tree.parent(r) {
+            // Replace: drops the partial map kept from phase 1.
+            p.recv(r, parent, tag + 1, Merge::Replace);
+        }
+        for &c in tree.children(r) {
+            p.send(r, c, tag + 1, SendPart::Ranks(tree.subtree(c)));
+        }
+        if let Some(parent) = tree.parent(r) {
+            p.recv(r, parent, tag + 2, Merge::Union);
+        }
+        for &c in tree.children(r) {
+            let inside: std::collections::HashSet<usize> =
+                tree.subtree(c).into_iter().collect();
+            let complement: Vec<usize> =
+                members.iter().copied().filter(|m| !inside.contains(m)).collect();
+            p.send(r, c, tag + 2, SendPart::Ranks(complement));
+        }
+    }
     p.validate()?;
     Ok(p)
 }
@@ -251,15 +316,53 @@ mod tests {
 
     #[test]
     fn allreduce_everyone_gets_total() {
+        // The reduce+bcast composition, built the way the plan cache
+        // builds it: cached-phase programs concatenated with a tag
+        // rebase (no dedicated compiler exists — see module note).
         let ids: Vec<Rank> = (0..5).collect();
         let t = TreeShape::Binomial.build(5, &ids, 0).unwrap();
         let c = Clustering::flat(5);
-        let p = allreduce(&t, &t, ReduceOp::Sum, 1000).unwrap();
+        let mut p = reduce(&t, ReduceOp::Sum, 1000).unwrap();
+        let b = bcast(&t, 1000).unwrap();
+        p.then(b.rebased(p.max_tag() + 1)).unwrap();
+        p.validate().unwrap();
         let init: Vec<Payload> =
             (0..5).map(|r| Payload::single(0, vec![r as f32 + 1.0])).collect();
         let r = sim(&c, &p, init);
         for rank in 0..5 {
             assert_eq!(r.payloads[rank].get(&0).unwrap(), vec![15.0], "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn allreduce_rsag_delivers_all_chunks_everywhere() {
+        // 5 ranks, binomial tree, chunked contributions: rank r holds
+        // chunk q of its vector under key q; afterwards every rank must
+        // hold every reduced chunk, bitwise equal to the reduce+bcast
+        // composition's result.
+        let ids: Vec<Rank> = (0..5).collect();
+        let t = TreeShape::Binomial.build(5, &ids, 2).unwrap();
+        let c = Clustering::flat(5);
+        let chunks_of = |r: usize| -> Vec<Vec<f32>> {
+            (0..5).map(|q| vec![(r * 5 + q) as f32, 1.0]).collect()
+        };
+        let init: Vec<Payload> = (0..5)
+            .map(|r| {
+                let mut pl = Payload::empty();
+                for (q, seg) in chunks_of(r).into_iter().enumerate() {
+                    pl.union(Payload::single(q, seg)).unwrap();
+                }
+                pl
+            })
+            .collect();
+        let p = allreduce_rsag(&t, ReduceOp::Sum, 300).unwrap();
+        let r = sim(&c, &p, init);
+        for rank in 0..5 {
+            for q in 0..5 {
+                let expect: Vec<f32> =
+                    vec![(0..5).map(|src| (src * 5 + q) as f32).sum(), 5.0];
+                assert_eq!(r.payloads[rank].get(&q).unwrap(), expect, "rank {rank} chunk {q}");
+            }
         }
     }
 

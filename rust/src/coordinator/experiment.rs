@@ -2,14 +2,16 @@
 //! DESIGN.md §6, shared by the benches, the examples and the CLI.
 
 use crate::analytic::TwoTier;
-use crate::collectives::CollectiveEngine;
+use crate::collectives::{verify, CollectiveEngine};
 use crate::coordinator::timing_app::{self, TimingPoint};
 use crate::error::Result;
 use crate::model::{presets, NetworkParams};
 use crate::netsim::{Combiner, NativeCombiner, ReduceOp};
+use crate::plan::{AllreduceAlgo, PlanCache};
 use crate::topology::{Communicator, TopologySpec};
 use crate::tree::{build_strategy_tree, LevelPolicy, Strategy, TreeShape};
 use crate::util::fmt::{self, Table};
+use std::sync::Arc;
 
 /// E1 — Fig. 8: the full rotation timing for the paper's 48-process
 /// grid, one row per (size, strategy).
@@ -72,15 +74,20 @@ pub fn cost_model_table(bytes: usize) -> Result<Table> {
     Ok(t)
 }
 
-/// E8 — all five collectives under every strategy on the paper grid.
+/// E8 — the core collectives plus allreduce under every strategy on the
+/// paper grid. All engines share one [`PlanCache`] (keys carry the
+/// strategy, so sharing is safe and the table's second run is all-warm).
 pub fn collectives_suite_table(bytes: usize, combiner: &dyn Combiner) -> Result<Table> {
     let comm = Communicator::world(&TopologySpec::paper_experiment());
     let params = presets::paper_grid();
     let n = comm.size();
     let elems = bytes / 4;
+    let cache = Arc::new(PlanCache::new());
     let mut t = Table::new(&["op", "strategy", "makespan", "WAN msgs", "total msgs"]);
     for s in Strategy::ALL {
-        let e = CollectiveEngine::new(&comm, params.clone(), s).with_combiner(combiner);
+        let e = CollectiveEngine::new(&comm, params.clone(), s)
+            .with_combiner(combiner)
+            .with_plan_cache(cache.clone());
         let data = vec![1.0f32; elems];
         let contributions: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; elems]).collect();
         let seg: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; elems / n.max(1) + 1]).collect();
@@ -90,6 +97,7 @@ pub fn collectives_suite_table(bytes: usize, combiner: &dyn Combiner) -> Result<
             ("barrier", e.barrier()?),
             ("gather", e.gather(0, &seg)?.sim),
             ("scatter", e.scatter(0, &seg)?.sim),
+            ("allreduce", e.allreduce(ReduceOp::Sum, &contributions)?.sim),
         ];
         for (op, sim) in rows {
             t.row(&[
@@ -98,6 +106,46 @@ pub fn collectives_suite_table(bytes: usize, combiner: &dyn Combiner) -> Result<
                 fmt::time_us(sim.makespan_us),
                 sim.wan_messages().to_string(),
                 sim.msgs_by_sep.iter().sum::<u64>().to_string(),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// E12 — the headline new op: allreduce across every strategy and both
+/// compositions, verified against the serial reference on every row.
+pub fn allreduce_table(bytes: usize, op: ReduceOp, combiner: &dyn Combiner) -> Result<Table> {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let params = presets::paper_grid();
+    let n = comm.size();
+    let elems = (bytes / 4).max(1);
+    // Small-integer contributions keep f32 arithmetic exact for every
+    // operator (sums stay far below 2^24; products of values in [1, 3]
+    // over 48 ranks stay finite and exact is not guaranteed for prod, so
+    // prod uses a [1, 2] base), hence "verified" means bit-for-bit
+    // against the reference combiner.
+    let base = if op == ReduceOp::Prod { 2 } else { 9 };
+    let contributions: Vec<Vec<f32>> = (0..n)
+        .map(|r| (0..elems).map(|i| (1 + (r + i) % base) as f32).collect())
+        .collect();
+    let expect = verify::ref_reduce(&contributions, op);
+    let cache = Arc::new(PlanCache::new());
+    let mut t =
+        Table::new(&["strategy", "algorithm", "makespan", "WAN msgs", "total msgs", "verified"]);
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, params.clone(), s)
+            .with_combiner(combiner)
+            .with_plan_cache(cache.clone());
+        for algo in AllreduceAlgo::ALL {
+            let out = e.allreduce_with(algo, 0, op, &contributions)?;
+            let ok = (0..n).all(|r| out.data[r] == expect);
+            t.row(&[
+                s.name().to_string(),
+                algo.name().to_string(),
+                fmt::time_us(out.sim.makespan_us),
+                out.sim.wan_messages().to_string(),
+                out.sim.msgs_by_sep.iter().sum::<u64>().to_string(),
+                if ok { "exact".into() } else { "MISMATCH".to_string() },
             ]);
         }
     }
@@ -177,6 +225,10 @@ pub fn root_sensitivity_table(bytes: usize) -> Result<Table> {
     let data = vec![0.5f32; bytes / 4];
     let mut t = Table::new(&["strategy", "min over roots", "max over roots", "spread"]);
     for s in [Strategy::Unaware, Strategy::Multilevel] {
+        // Each root appears once per sweep, so this engine-private cache
+        // only pays off for callers that hold a long-lived engine (or
+        // pass a shared PlanCache) across repeated sweeps; within one
+        // call it simply builds each root's plan once.
         let e = CollectiveEngine::new(&comm, params.clone(), s);
         let mut lo = f64::INFINITY;
         let mut hi = 0.0f64;
@@ -268,9 +320,20 @@ mod tests {
     }
 
     #[test]
-    fn suite_covers_5_ops_x_4_strategies() {
+    fn suite_covers_6_ops_x_4_strategies() {
         let t = collectives_suite_table(4096, native()).unwrap();
-        assert_eq!(t.n_rows(), 20);
+        assert_eq!(t.n_rows(), 24);
+    }
+
+    #[test]
+    fn allreduce_table_verifies_every_row() {
+        for op in crate::netsim::ReduceOp::ALL {
+            let t = allreduce_table(4096, op, native()).unwrap();
+            assert_eq!(t.n_rows(), 8, "4 strategies x 2 algorithms");
+            let md = t.to_markdown();
+            assert!(md.contains("exact"), "{op:?}");
+            assert!(!md.contains("MISMATCH"), "{op:?}");
+        }
     }
 
     #[test]

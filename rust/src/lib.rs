@@ -8,8 +8,9 @@
 //! compute path driven from Rust via PJRT.
 //!
 //! Architecture (three layers, Python never on the request path):
-//! - **L3** (this crate): clustering, tree builders, the five collectives,
-//!   the simulator, experiment drivers and CLI.
+//! - **L3** (this crate): clustering, tree builders, the collectives
+//!   (compiled through the topology → plan → execute pipeline, see
+//!   [`plan`]), the simulator, experiment drivers and CLI.
 //! - **L2** (`python/compile/model.py`): JAX compute graphs, AOT-lowered to
 //!   HLO text in `artifacts/`.
 //! - **L1** (`python/compile/kernels/`): Pallas reduction-combine kernels
@@ -25,6 +26,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod model;
+pub mod plan;
 pub mod runtime;
 pub mod tree;
 pub mod netsim;

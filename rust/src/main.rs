@@ -4,14 +4,15 @@
 //!
 //! ```text
 //! gridcollect fig8 [--sizes 1k,...,1m] [--xla]     # E1: the headline figure
-//! gridcollect suite [--size 64k] [--xla]           # E8: 5 ops x 4 strategies
+//! gridcollect suite [--size 64k] [--xla]           # E8: 6 ops x 4 strategies
+//! gridcollect allreduce [--size 64k] [--op sum] [--xla]   # E12: both compositions
 //! gridcollect cost-model [--size 64k]              # E2: §4 analytic vs sim
 //! gridcollect ablation [--sites 8] [--size 64k]    # E9: WAN tree shapes
 //! gridcollect scaling [--size 64k]                 # E10: site-count scaling
 //! gridcollect roots [--size 64k]                   # E7: root sensitivity
 //! gridcollect tree [--spec fig1|experiment] [--root 0]   # E3-E5: tree shapes
 //! gridcollect rsl <script.rsl> [--root 0]          # E6: RSL front-end
-//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--xla]
+//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--algo rb|rsag] [--xla]
 //! gridcollect gantt [--size 64k] [--strategy s] [--params file.net]
 //! gridcollect calibrate [--out params.net]        # measure combine us/B
 //! ```
@@ -30,7 +31,7 @@ use gridcollect::topology::{rsl, Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
 
-const USAGE: &str = "usage: gridcollect <fig8|suite|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
+const USAGE: &str = "usage: gridcollect <fig8|suite|allreduce|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
 run `gridcollect help` or see rust/src/main.rs for flag details";
 
 fn main() {
@@ -75,8 +76,23 @@ fn run(raw: Vec<String>) -> Result<()> {
                 Some((_, c)) => c,
                 None => experiment::native(),
             };
-            println!("E8 — five collectives x four strategies ({}):\n", fmt::bytes(size));
+            println!("E8 — six collectives x four strategies ({}):\n", fmt::bytes(size));
             print!("{}", experiment::collectives_suite_table(size, combiner)?.to_markdown());
+        }
+        "allreduce" => {
+            let size = args.get_size("size", 65536)?;
+            let xla = maybe_xla(&args)?;
+            let combiner: &dyn Combiner = match &xla {
+                Some((_, c)) => c,
+                None => experiment::native(),
+            };
+            let op = args.reduce_op(gridcollect::netsim::ReduceOp::Sum)?;
+            println!(
+                "E12 — multilevel allreduce ({}), both compositions, every strategy ({}):\n",
+                op.name(),
+                fmt::bytes(size)
+            );
+            print!("{}", experiment::allreduce_table(size, op, combiner)?.to_markdown());
         }
         "cost-model" => {
             // Latency-dominated default (the regime where the §4 closed
@@ -160,13 +176,16 @@ fn run(raw: Vec<String>) -> Result<()> {
                 steps: args.get_usize("steps", 50)?,
                 lr: args.get_f32("lr", 0.1)?,
                 strategy: args.strategy(Strategy::Multilevel)?,
+                allreduce: args
+                    .allreduce_algo(gridcollect::plan::AllreduceAlgo::ReduceBcast)?,
                 seed: args.get_usize("seed", 0)? as u64,
             };
             println!(
-                "E11 — data-parallel training: {} workers ({}), strategy {}, combiner {}",
+                "E11 — data-parallel training: {} workers ({}), strategy {}, allreduce {}, combiner {}",
                 comm.size(),
                 comm.name(),
                 cfg.strategy.name(),
+                cfg.allreduce.name(),
                 combiner.name(),
             );
             let logs = training::train(&comm, &presets::paper_grid(), &mlp, combiner, &cfg)?;

@@ -77,6 +77,14 @@ pub struct SimResult {
 impl SimResult {
     /// Total messages at the WAN boundary (sep 1) — the paper's headline
     /// count.
+    ///
+    /// This is the **single source of truth** for WAN message counts:
+    /// every layer (engine outcomes, experiment tables, training logs)
+    /// reads it from here rather than indexing `msgs_by_sep[0]` directly,
+    /// so the "sep 1 == WAN" convention lives in exactly one place. For
+    /// the *static* (pre-execution) count of a cached plan, see
+    /// `plan::PlanMeta::wan_messages`, which is defined to agree with this
+    /// accessor for every op.
     pub fn wan_messages(&self) -> u64 {
         self.msgs_by_sep.first().copied().unwrap_or(0)
     }

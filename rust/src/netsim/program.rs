@@ -116,6 +116,46 @@ impl Program {
         Ok(())
     }
 
+    /// Shift every send/recv tag by `delta`, in place.
+    ///
+    /// This is the pipeline's cheap alternative to recompilation: a cached
+    /// [`Program`] is compiled once at a fixed base tag, and composing it
+    /// into a larger program (e.g. allreduce = cached reduce ; cached
+    /// bcast) only requires rebasing the second phase's tags so the two
+    /// phases' channels stay disjoint — an O(actions) integer add instead
+    /// of an O(tree) rebuild + recompile.
+    pub fn rebase_tags(&mut self, delta: u64) {
+        for list in &mut self.actions {
+            for a in list {
+                match a {
+                    Action::Send { tag, .. } => *tag += delta,
+                    Action::Recv { tag, .. } => *tag += delta,
+                }
+            }
+        }
+    }
+
+    /// Copy of this program with every tag shifted by `delta`
+    /// (non-destructive [`Program::rebase_tags`]).
+    pub fn rebased(&self, delta: u64) -> Program {
+        let mut p = self.clone();
+        p.rebase_tags(delta);
+        p
+    }
+
+    /// Largest tag used by any action (0 for an empty program). A safe
+    /// rebase delta for sequential composition is `max_tag() + 1`.
+    pub fn max_tag(&self) -> u64 {
+        self.actions
+            .iter()
+            .flatten()
+            .map(|a| match a {
+                Action::Send { tag, .. } | Action::Recv { tag, .. } => *tag,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Append another program's actions (sequential composition with
     /// distinct tags, e.g. allreduce = reduce ; bcast).
     pub fn then(&mut self, other: Program) -> Result<()> {
@@ -174,6 +214,26 @@ mod tests {
         let mut p = Program::new(2);
         p.send(0, 5, 1, SendPart::All);
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rebase_shifts_all_tags() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 3, SendPart::All);
+        p.recv(1, 0, 3, Merge::Replace);
+        assert_eq!(p.max_tag(), 3);
+        let r = p.rebased(10);
+        assert_eq!(r.max_tag(), 13);
+        assert!(r.validate().is_ok());
+        // original untouched
+        assert_eq!(p.max_tag(), 3);
+        // composing a program with its own rebased copy keeps channels
+        // disjoint (the cached-plan composition pattern).
+        let delta = p.max_tag() + 1;
+        let second = p.rebased(delta);
+        p.then(second).unwrap();
+        assert!(p.validate().is_ok());
+        assert_eq!(p.actions[0].len(), 2);
     }
 
     #[test]

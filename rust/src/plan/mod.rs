@@ -1,0 +1,301 @@
+//! Stage 2 of the collective pipeline: **topology → plan → execute**.
+//!
+//! The paper's §3.2 requires every rank to derive the collective tree
+//! deterministically at call time; the seed code took that literally and
+//! re-ran tree construction *and* program compilation on every call, even
+//! though the result is a pure function of
+//! `(communicator, strategy, policy, root, op, segmentation)`. This module
+//! makes that function explicit and memoizable:
+//!
+//! - **topology** (stage 1, unchanged): [`Communicator`] + [`Strategy`] +
+//!   [`LevelPolicy`] describe *where* processes sit;
+//! - **plan** (this module): a [`CollectivePlan`] is the compiled,
+//!   immutable artifact — the built [`Tree`], the compiled simulator
+//!   [`Program`], and static [`PlanMeta`] (message counts per separation
+//!   level, per-level fan-out) — produced once per [`PlanKey`] and stored
+//!   in a [`PlanCache`];
+//! - **execute** (stage 3): `netsim::run` is invoked against the cached
+//!   plan with per-call initial payloads. Programs are compiled at a
+//!   fixed base tag; every `run` gets a fresh mailbox, so cached tags can
+//!   be reused verbatim across calls, and *composition* of cached
+//!   programs (allreduce = cached reduce ; cached bcast) uses
+//!   [`Program::rebase_tags`] instead of recompiling.
+//!
+//! A warm [`PlanCache`] hit therefore performs **zero tree builds and
+//! zero program compiles** (asserted in tests via
+//! [`crate::util::counters`]) — the hot path of an iterative workload
+//! (e.g. the training loop's per-step allreduce) reduces to payload
+//! setup + simulation.
+
+pub mod cache;
+
+pub use cache::PlanCache;
+
+use crate::netsim::{Action, Program, ReduceOp};
+use crate::topology::{Clustering, Rank};
+use crate::tree::{LevelPolicy, Strategy, Tree};
+
+/// How `allreduce` is composed from tree phases — selectable per call
+/// (both algorithms produce bitwise-identical results; they differ in
+/// message structure and pipelining).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AllreduceAlgo {
+    /// Reduce to the root, then broadcast back down over the same cached
+    /// tree pair — 2 messages per tree edge, the MPICH-G2 composition.
+    ReduceBcast,
+    /// Reduce-scatter + allgather over one tree: the reduced vector is
+    /// chunked per rank; the down-traffic is split into a subtree-chunks
+    /// message and a complement message (3 messages per edge, same total
+    /// bytes), letting interior nodes forward early (pipelining).
+    ReduceScatterAllgather,
+}
+
+impl AllreduceAlgo {
+    pub const ALL: [AllreduceAlgo; 2] =
+        [AllreduceAlgo::ReduceBcast, AllreduceAlgo::ReduceScatterAllgather];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllreduceAlgo::ReduceBcast => "reduce+bcast",
+            AllreduceAlgo::ReduceScatterAllgather => "rs+ag",
+        }
+    }
+}
+
+/// Which collective a plan implements. Carries everything that changes
+/// the compiled program (reduction operator, allreduce composition);
+/// message segmentation lives in [`PlanKey::segments`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Bcast,
+    Reduce(ReduceOp),
+    Barrier,
+    Gather,
+    Scatter,
+    Allreduce(ReduceOp, AllreduceAlgo),
+    Allgather,
+    ReduceScatter(ReduceOp),
+    Alltoall,
+    /// Segmented (pipelined) broadcast; chunk count = `PlanKey::segments`.
+    BcastSegmented,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Bcast => "bcast",
+            OpKind::Reduce(_) => "reduce",
+            OpKind::Barrier => "barrier",
+            OpKind::Gather => "gather",
+            OpKind::Scatter => "scatter",
+            OpKind::Allreduce(..) => "allreduce",
+            OpKind::Allgather => "allgather",
+            OpKind::ReduceScatter(_) => "reduce_scatter",
+            OpKind::Alltoall => "alltoall",
+            OpKind::BcastSegmented => "bcast_segmented",
+        }
+    }
+}
+
+/// Complete cache key for a compiled plan. Two calls with equal keys are
+/// guaranteed to need byte-identical programs:
+/// [`Communicator::epoch`](crate::topology::Communicator::epoch)
+/// pins the process group + clustering, and tree construction is a pure
+/// function of the remaining fields (§3.2 determinism).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub comm_epoch: u64,
+    pub strategy: Strategy,
+    pub policy: LevelPolicy,
+    pub root: Rank,
+    pub op: OpKind,
+    /// Pipelining chunk count (1 = unsegmented). Only `BcastSegmented`
+    /// uses values > 1.
+    pub segments: usize,
+}
+
+/// How a plan's wire bytes relate to the caller's payload size — lets
+/// [`PlanMeta::expected_bytes_by_sep`] predict traffic statically where
+/// that is well-defined.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BytesModel {
+    /// Every message carries the full input payload (bcast, reduce,
+    /// allreduce/reduce+bcast).
+    FullPayloadPerSend,
+    /// Control messages only (barrier).
+    Zero,
+    /// Per-message bytes depend on segment routing (gather, scatter,
+    /// the extended ops, segmented/chunked compositions).
+    Routed,
+}
+
+/// Static, payload-independent facts about a compiled plan.
+#[derive(Clone, Debug)]
+pub struct PlanMeta {
+    /// Messages the program will put on the wire, by separation level
+    /// (index `sep-1`; index 0 = WAN). Exact: `SimResult::msgs_by_sep`
+    /// equals this for every execution of the plan.
+    pub msgs_by_sep: Vec<u64>,
+    /// Tree edges by separation level (the Fig. 4 boundary-crossing
+    /// structure: multilevel trees have exactly `#subclusters - 1` edges
+    /// per boundary).
+    pub tree_edges_by_sep: Vec<usize>,
+    /// Largest child count of any tree node (root serialization width).
+    pub max_fanout: usize,
+    /// Tree height in hops.
+    pub tree_height: usize,
+    /// Byte-prediction model for this op.
+    pub bytes_model: BytesModel,
+}
+
+impl PlanMeta {
+    fn compute(clustering: &Clustering, tree: &Tree, program: &Program, op: OpKind) -> PlanMeta {
+        let n_levels = clustering.n_levels();
+        let mut msgs_by_sep = vec![0u64; n_levels];
+        for (from, list) in program.actions.iter().enumerate() {
+            for a in list {
+                if let Action::Send { to, .. } = a {
+                    msgs_by_sep[clustering.sep(from, *to) - 1] += 1;
+                }
+            }
+        }
+        let mut tree_edges_by_sep = vec![0usize; n_levels];
+        for (p, c) in tree.edges() {
+            tree_edges_by_sep[clustering.sep(p, c) - 1] += 1;
+        }
+        let max_fanout = (0..tree.capacity())
+            .filter(|&r| tree.contains(r))
+            .map(|r| tree.children(r).len())
+            .max()
+            .unwrap_or(0);
+        let bytes_model = match op {
+            OpKind::Bcast
+            | OpKind::Reduce(_)
+            | OpKind::Allreduce(_, AllreduceAlgo::ReduceBcast) => BytesModel::FullPayloadPerSend,
+            OpKind::Barrier => BytesModel::Zero,
+            _ => BytesModel::Routed,
+        };
+        PlanMeta {
+            msgs_by_sep,
+            tree_edges_by_sep,
+            max_fanout,
+            tree_height: tree.height(),
+            bytes_model,
+        }
+    }
+
+    /// Static WAN message count — defined to agree with
+    /// `SimResult::wan_messages()` for every execution of the plan.
+    pub fn wan_messages(&self) -> u64 {
+        self.msgs_by_sep.first().copied().unwrap_or(0)
+    }
+
+    /// Total messages across all levels.
+    pub fn total_messages(&self) -> u64 {
+        self.msgs_by_sep.iter().sum()
+    }
+
+    /// Predicted bytes per separation level for a call whose full input
+    /// payload is `payload_bytes`. `None` when the op's per-message bytes
+    /// are routing-dependent ([`BytesModel::Routed`]).
+    pub fn expected_bytes_by_sep(&self, payload_bytes: usize) -> Option<Vec<u64>> {
+        match self.bytes_model {
+            BytesModel::FullPayloadPerSend => {
+                Some(self.msgs_by_sep.iter().map(|&m| m * payload_bytes as u64).collect())
+            }
+            BytesModel::Zero => Some(vec![0; self.msgs_by_sep.len()]),
+            BytesModel::Routed => None,
+        }
+    }
+}
+
+/// A compiled, immutable collective plan: the stage-2 artifact.
+///
+/// The program is compiled at a fixed base tag (every `netsim::run` gets
+/// an isolated mailbox, so identical tags across calls never collide);
+/// callers composing several plans into one run must rebase —
+/// see [`Program::rebase_tags`].
+#[derive(Clone, Debug)]
+pub struct CollectivePlan {
+    pub key: PlanKey,
+    pub tree: Tree,
+    pub program: Program,
+    pub meta: PlanMeta,
+}
+
+/// Base tag plans are compiled at. Arbitrary but fixed: documented so
+/// composition deltas are predictable.
+pub const PLAN_BASE_TAG: u64 = 1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use crate::netsim::{NativeCombiner, SimConfig};
+    use crate::topology::{Communicator, TopologySpec};
+
+    fn key(comm: &Communicator, op: OpKind, root: Rank) -> PlanKey {
+        PlanKey {
+            comm_epoch: comm.epoch(),
+            strategy: Strategy::Multilevel,
+            policy: LevelPolicy::paper(),
+            root,
+            op,
+            segments: 1,
+        }
+    }
+
+    #[test]
+    fn meta_predicts_simulated_message_and_byte_counts() {
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        let cache = PlanCache::new();
+        let plan = cache.get_or_build(&comm, key(&comm, OpKind::Bcast, 0)).unwrap();
+        // Fig. 4 structure: one WAN edge, one LAN edge.
+        assert_eq!(plan.meta.wan_messages(), 1);
+        assert_eq!(plan.meta.tree_edges_by_sep[0], 1);
+        assert_eq!(plan.meta.total_messages(), comm.size() as u64 - 1);
+
+        let data = vec![1.0f32; 256];
+        let mut init = vec![crate::netsim::Payload::empty(); comm.size()];
+        init[0] = crate::netsim::Payload::single(0, data.clone());
+        let cfg = SimConfig::new(presets::paper_grid());
+        let sim = crate::netsim::run(
+            comm.clustering(),
+            &plan.program,
+            init,
+            &cfg,
+            &NativeCombiner,
+        )
+        .unwrap();
+        assert_eq!(sim.msgs_by_sep, plan.meta.msgs_by_sep);
+        assert_eq!(
+            sim.bytes_by_sep,
+            plan.meta.expected_bytes_by_sep(data.len() * 4).unwrap()
+        );
+        assert_eq!(sim.wan_messages(), plan.meta.wan_messages());
+    }
+
+    #[test]
+    fn meta_models_match_ops() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let cache = PlanCache::new();
+        let barrier = cache.get_or_build(&comm, key(&comm, OpKind::Barrier, 0)).unwrap();
+        assert_eq!(barrier.meta.bytes_model, BytesModel::Zero);
+        assert_eq!(
+            barrier.meta.expected_bytes_by_sep(4096).unwrap().iter().sum::<u64>(),
+            0
+        );
+        let scatter = cache.get_or_build(&comm, key(&comm, OpKind::Scatter, 0)).unwrap();
+        assert_eq!(scatter.meta.bytes_model, BytesModel::Routed);
+        assert!(scatter.meta.expected_bytes_by_sep(4096).is_none());
+        let ar = cache
+            .get_or_build(
+                &comm,
+                key(&comm, OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceBcast), 0),
+            )
+            .unwrap();
+        // reduce up + bcast down: every tree edge carries two messages.
+        assert_eq!(ar.meta.total_messages(), 2 * (comm.size() as u64 - 1));
+        assert_eq!(ar.meta.wan_messages(), 2);
+    }
+}

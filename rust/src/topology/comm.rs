@@ -8,7 +8,12 @@
 use crate::error::{Error, Result};
 use crate::topology::cluster::{Clustering, Rank};
 use crate::topology::spec::TopologySpec;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Process-wide epoch allocator: every newly *constructed* communicator
+/// (world/unaware/split/sub) gets a distinct epoch; clones share it.
+static NEXT_EPOCH: AtomicU64 = AtomicU64::new(1);
 
 /// An MPI-like communicator: an ordered process group plus the multilevel
 /// clustering of exactly those processes.
@@ -20,6 +25,15 @@ pub struct Communicator {
     clustering: Arc<Clustering>,
     /// Human-readable name for reports.
     name: String,
+    /// Cache identity: plans compiled against this communicator are keyed
+    /// by this value (see [`crate::plan`]). Clones share the epoch (same
+    /// group, same clustering => same plans apply); any freshly derived
+    /// communicator gets its own.
+    epoch: u64,
+}
+
+fn fresh_epoch() -> u64 {
+    NEXT_EPOCH.fetch_add(1, Ordering::Relaxed)
 }
 
 impl Communicator {
@@ -30,6 +44,7 @@ impl Communicator {
             world_ranks: Arc::new((0..n).collect()),
             clustering: Arc::new(spec.clustering()),
             name: format!("world[{}]", spec.name),
+            epoch: fresh_epoch(),
         }
     }
 
@@ -40,11 +55,20 @@ impl Communicator {
             world_ranks: Arc::new((0..n).collect()),
             clustering: Arc::new(Clustering::flat(n)),
             name: format!("flat[{n}]"),
+            epoch: fresh_epoch(),
         }
     }
 
     pub fn size(&self) -> usize {
         self.world_ranks.len()
+    }
+
+    /// Cache identity of this communicator's (group, clustering) pair.
+    /// Stable across clones, unique across constructions — a
+    /// [`crate::plan::PlanCache`] keyed by it never serves a plan built
+    /// for a different communicator.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     pub fn name(&self) -> &str {
@@ -91,6 +115,7 @@ impl Communicator {
                 world_ranks: Arc::new(world_ranks),
                 clustering: Arc::new(clustering),
                 name: format!("{}/split{color}", self.name),
+                epoch: fresh_epoch(),
             });
         }
         if out.is_empty() {
@@ -114,6 +139,7 @@ impl Communicator {
             world_ranks: Arc::new(ranks.iter().map(|&r| self.world_ranks[r]).collect()),
             clustering: Arc::new(self.clustering.restrict(ranks)?),
             name: format!("{}/sub", self.name),
+            epoch: fresh_epoch(),
         })
     }
 }
@@ -190,5 +216,17 @@ mod tests {
         let c = Communicator::unaware(8);
         assert_eq!(c.clustering().n_levels(), 1);
         assert_eq!(c.size(), 8);
+    }
+
+    #[test]
+    fn epochs_distinguish_constructions_but_not_clones() {
+        let a = world();
+        let b = world();
+        assert_ne!(a.epoch(), b.epoch(), "independent worlds must not share plans");
+        assert_eq!(a.epoch(), a.clone().epoch(), "clones are the same group");
+        let subs = a.split(|r| (Some((r % 2) as i64), r as i64)).unwrap();
+        assert_ne!(subs[0].epoch(), subs[1].epoch());
+        assert_ne!(subs[0].epoch(), a.epoch());
+        assert_ne!(a.sub(&[0, 1]).unwrap().epoch(), a.epoch());
     }
 }

@@ -44,7 +44,7 @@ impl Strategy {
 /// level-`l` clusters* (l = 1 is the WAN level); the deepest level is the
 /// intra-machine tree. The paper's choice (§3.2): flat at the WAN level,
 /// binomial below.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct LevelPolicy {
     /// `shapes[l-1]` = shape among level-`l` cluster representatives;
     /// levels beyond the vector clamp to the last entry.
@@ -143,6 +143,7 @@ pub fn build_strategy_tree(
     strategy: Strategy,
     policy: &LevelPolicy,
 ) -> Result<Tree> {
+    crate::util::counters::count_tree_build();
     let clustering = comm.clustering();
     let n = comm.size();
     let all: Vec<Rank> = (0..n).collect();

@@ -11,7 +11,7 @@ use crate::topology::Rank;
 use crate::tree::Tree;
 
 /// Tree shape selector.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TreeShape {
     /// MPICH's relative-rank binomial tree (Fig. 2).
     Binomial,

@@ -1,0 +1,97 @@
+//! Global pipeline-stage counters.
+//!
+//! The topology → plan → execute pipeline promises that a warm
+//! [`crate::plan::PlanCache`] hit performs **zero** tree builds and
+//! **zero** program compiles. That promise is only testable if the
+//! expensive stages count themselves, so [`crate::tree::build_strategy_tree`]
+//! and every program compiler in `collectives::programs` /
+//! `collectives::extended` bump these process-wide counters. Reads and
+//! increments are relaxed atomics — nanoseconds, safe to leave on in
+//! release builds.
+//!
+//! Tests should compare *deltas* ([`snapshot`] before / after), never
+//! absolute values: other tests in the same process also increment.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TREE_BUILDS: AtomicU64 = AtomicU64::new(0);
+static PROGRAM_COMPILES: AtomicU64 = AtomicU64::new(0);
+static PLAN_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static PLAN_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// One strategy-tree construction (any [`crate::tree::Strategy`]).
+#[inline]
+pub fn count_tree_build() {
+    TREE_BUILDS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One collective-program compilation (tree → simulator IR).
+#[inline]
+pub fn count_program_compile() {
+    PROGRAM_COMPILES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A plan served from the cache without rebuilding.
+#[inline]
+pub fn count_plan_hit() {
+    PLAN_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A plan that had to be built (cold path).
+#[inline]
+pub fn count_plan_miss() {
+    PLAN_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Point-in-time view of all pipeline counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Snapshot {
+    pub tree_builds: u64,
+    pub program_compiles: u64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+}
+
+impl Snapshot {
+    /// Counter increments between `earlier` and `self`.
+    pub fn since(&self, earlier: &Snapshot) -> Snapshot {
+        Snapshot {
+            tree_builds: self.tree_builds - earlier.tree_builds,
+            program_compiles: self.program_compiles - earlier.program_compiles,
+            plan_cache_hits: self.plan_cache_hits - earlier.plan_cache_hits,
+            plan_cache_misses: self.plan_cache_misses - earlier.plan_cache_misses,
+        }
+    }
+}
+
+/// Read every counter at once.
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        tree_builds: TREE_BUILDS.load(Ordering::Relaxed),
+        program_compiles: PROGRAM_COMPILES.load(Ordering::Relaxed),
+        plan_cache_hits: PLAN_CACHE_HITS.load(Ordering::Relaxed),
+        plan_cache_misses: PLAN_CACHE_MISSES.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn increments_are_visible_in_deltas() {
+        let before = snapshot();
+        count_tree_build();
+        count_program_compile();
+        count_program_compile();
+        count_plan_hit();
+        count_plan_miss();
+        let delta = snapshot().since(&before);
+        // Other tests run concurrently in this process, so the deltas are
+        // lower bounds, not exact counts.
+        assert!(delta.tree_builds >= 1);
+        assert!(delta.program_compiles >= 2);
+        assert!(delta.plan_cache_hits >= 1);
+        assert!(delta.plan_cache_misses >= 1);
+    }
+}

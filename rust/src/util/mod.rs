@@ -2,6 +2,7 @@
 //! property-testing kit. All substrates (no external crates beyond `xla`
 //! and `anyhow` are available offline — see DESIGN.md §2).
 
+pub mod counters;
 pub mod fmt;
 pub mod propcheck;
 pub mod rng;

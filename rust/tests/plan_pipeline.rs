@@ -1,0 +1,71 @@
+//! Acceptance test for the topology → plan → execute pipeline: warm-path
+//! calls for a repeated `(root, op)` perform **zero tree builds and zero
+//! program compiles**, asserted via the global build/compile counters in
+//! `util::counters`.
+//!
+//! This is deliberately a single `#[test]` in its own binary: the
+//! counters are process-wide, and `cargo test` runs tests within a
+//! binary concurrently — one test per binary makes the zero-delta
+//! assertions race-free.
+
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::plan::AllreduceAlgo;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::counters;
+
+#[test]
+fn warm_path_performs_zero_tree_builds_and_zero_program_compiles() {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let n = comm.size();
+    let data = vec![1.0f32; 256];
+    let contributions: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 256]).collect();
+
+    // Cold calls: one per (root, op) — these must build.
+    let before_cold = counters::snapshot();
+    e.bcast(0, &data).unwrap();
+    e.reduce(0, ReduceOp::Sum, &contributions).unwrap();
+    e.allreduce(ReduceOp::Sum, &contributions).unwrap();
+    e.allreduce_with(AllreduceAlgo::ReduceScatterAllgather, 0, ReduceOp::Sum, &contributions)
+        .unwrap();
+    e.barrier().unwrap();
+    let cold = counters::snapshot().since(&before_cold);
+    assert!(cold.tree_builds >= 1, "cold path must build trees");
+    assert!(cold.program_compiles >= 1, "cold path must compile programs");
+    // The allreduce composed its cached reduce and bcast plans rather
+    // than rebuilding: bcast+reduce+barrier+rs-ag = 4 trees, not more.
+    assert_eq!(cold.tree_builds, 4, "reduce+bcast allreduce must reuse cached phase trees");
+    assert_eq!(cold.plan_cache_misses, 5, "five distinct plans");
+    assert_eq!(cold.plan_cache_hits, 2, "allreduce served both phases warm");
+
+    // Warm calls: identical (root, op) tuples, many times over.
+    let before_warm = counters::snapshot();
+    for _ in 0..10 {
+        e.bcast(0, &data).unwrap();
+        e.reduce(0, ReduceOp::Sum, &contributions).unwrap();
+        e.allreduce(ReduceOp::Sum, &contributions).unwrap();
+        e.allreduce_with(
+            AllreduceAlgo::ReduceScatterAllgather,
+            0,
+            ReduceOp::Sum,
+            &contributions,
+        )
+        .unwrap();
+        e.barrier().unwrap();
+    }
+    let warm = counters::snapshot().since(&before_warm);
+    assert_eq!(warm.tree_builds, 0, "warm path must never build a tree");
+    assert_eq!(warm.program_compiles, 0, "warm path must never compile a program");
+    assert_eq!(warm.plan_cache_misses, 0, "every warm call is a cache hit");
+    assert_eq!(warm.plan_cache_hits, 50, "10 rounds x 5 ops");
+
+    // Results stay correct on the warm path.
+    let out = e.allreduce(ReduceOp::Sum, &contributions).unwrap();
+    let expect: Vec<f32> = vec![(0..n).map(|r| r as f32).sum(); 256];
+    for r in 0..n {
+        assert_eq!(out.data[r], expect, "rank {r}");
+    }
+}

@@ -90,6 +90,94 @@ fn prop_bcast_delivers_everywhere() {
 }
 
 #[test]
+fn prop_allreduce_matches_reference_for_both_algorithms() {
+    // Random topology, random strategy, random op, random payload length,
+    // random tree root: every rank must receive the reference elementwise
+    // reduction, and the two compositions must agree bitwise (identical
+    // tree, identical combine association).
+    use gridcollect::plan::AllreduceAlgo;
+    check(
+        "allreduce-vs-reference",
+        Config::default().cases(100).max_size(8),
+        gen_case,
+        |case| {
+            let comm = Communicator::world(&case.spec);
+            let e = CollectiveEngine::new(&comm, presets::paper_grid(), case.strategy);
+            // For Prod, remap payloads to {1, 2}: products stay exact
+            // powers of two (no f32 overflow, association-free), so every
+            // comparison below is bit-for-bit for every operator.
+            let contribs: Vec<Vec<f32>> = if case.op == ReduceOp::Prod {
+                case.contributions
+                    .iter()
+                    .map(|c| c.iter().map(|&v| if v >= 4.0 { 2.0 } else { 1.0 }).collect())
+                    .collect()
+            } else {
+                case.contributions.clone()
+            };
+            let expect = verify::ref_reduce(&contribs, case.op);
+            let rb = e
+                .allreduce_with(AllreduceAlgo::ReduceBcast, case.root, case.op, &contribs)
+                .map_err(|e| e.to_string())?;
+            let rsag = e
+                .allreduce_with(
+                    AllreduceAlgo::ReduceScatterAllgather,
+                    case.root,
+                    case.op,
+                    &contribs,
+                )
+                .map_err(|e| e.to_string())?;
+            for r in 0..comm.size() {
+                if rb.data[r] != expect {
+                    return Err(format!(
+                        "{:?}/{:?} root {} rank {r}: reduce+bcast mismatch",
+                        case.strategy, case.op, case.root
+                    ));
+                }
+                if rsag.data[r] != rb.data[r] {
+                    return Err(format!(
+                        "{:?}/{:?} root {} rank {r}: compositions disagree bitwise",
+                        case.strategy, case.op, case.root
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn allreduce_matches_reference_for_every_root_fig1() {
+    // Deterministic complement to the property: all 20 roots x all four
+    // strategies x both compositions on the Fig. 1 grid; integer-valued
+    // payloads make the comparison bit-for-bit.
+    use gridcollect::plan::AllreduceAlgo;
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let contributions: Vec<Vec<f32>> = (0..comm.size())
+        .map(|r| (0..47).map(|i| ((r * 5 + i) % 7) as f32).collect())
+        .collect();
+    let expect = verify::ref_reduce(&contributions, ReduceOp::Sum);
+    for strategy in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), strategy);
+        for root in 0..comm.size() {
+            for algo in AllreduceAlgo::ALL {
+                let out = e
+                    .allreduce_with(algo, root, ReduceOp::Sum, &contributions)
+                    .unwrap();
+                for r in 0..comm.size() {
+                    assert_eq!(
+                        out.data[r],
+                        expect,
+                        "{}/{} root {root} rank {r}",
+                        strategy.name(),
+                        algo.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_gather_scatter_are_inverse_permutations() {
     check(
         "gather-scatter",

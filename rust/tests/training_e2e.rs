@@ -1,7 +1,10 @@
 //! End-to-end (E11): data-parallel training with all three layers
 //! composing — PJRT train-step (L2), Pallas combine/axpy kernels (L1),
 //! topology-aware allreduce over the simulated grid (L3).
-//! Requires `make artifacts`.
+//!
+//! Requires `make artifacts`; marked `#[ignore]` so tier-1 (`cargo test`)
+//! stays interpretable in environments without the AOT-compiled PJRT
+//! kernels. Run with `cargo test -- --ignored` after building artifacts.
 
 use gridcollect::coordinator::training::{train, TrainConfig};
 use gridcollect::model::presets;
@@ -19,10 +22,12 @@ fn setup() -> (Runtime, Communicator) {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` (AOT PJRT kernels absent in plain tier-1 runs)"]
 fn loss_decreases_with_native_combiner() {
     let (rt, comm) = setup();
     let mlp = MlpRuntime::open(&rt).unwrap();
-    let cfg = TrainConfig { steps: 30, lr: 0.2, strategy: Strategy::Multilevel, seed: 1 };
+    let cfg =
+        TrainConfig { steps: 30, lr: 0.2, strategy: Strategy::Multilevel, seed: 1, ..Default::default() };
     let logs = train(
         &comm,
         &presets::paper_grid(),
@@ -37,6 +42,7 @@ fn loss_decreases_with_native_combiner() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` (AOT PJRT kernels absent in plain tier-1 runs)"]
 fn xla_and_native_combiners_train_identically() {
     // The gradient payloads are not integer-valued, but both combiners
     // perform the same chunked fp additions in the same order, so the
@@ -44,7 +50,8 @@ fn xla_and_native_combiners_train_identically() {
     let (rt, comm) = setup();
     let mlp = MlpRuntime::open(&rt).unwrap();
     let xla = XlaCombiner::open_default(&rt).unwrap();
-    let cfg = TrainConfig { steps: 8, lr: 0.1, strategy: Strategy::Multilevel, seed: 2 };
+    let cfg =
+        TrainConfig { steps: 8, lr: 0.1, strategy: Strategy::Multilevel, seed: 2, ..Default::default() };
     let a = train(&comm, &presets::paper_grid(), &mlp, &xla, &cfg).unwrap();
     let b = train(
         &comm,
@@ -61,12 +68,13 @@ fn xla_and_native_combiners_train_identically() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` (AOT PJRT kernels absent in plain tier-1 runs)"]
 fn multilevel_strategy_cuts_communication_time() {
     let (rt, comm) = setup();
     let mlp = MlpRuntime::open(&rt).unwrap();
     let native = gridcollect::coordinator::experiment::native();
     let mk = |strategy| {
-        let cfg = TrainConfig { steps: 3, lr: 0.1, strategy, seed: 3 };
+        let cfg = TrainConfig { steps: 3, lr: 0.1, strategy, seed: 3, ..Default::default() };
         train(&comm, &presets::paper_grid(), &mlp, native, &cfg).unwrap()
     };
     let unaware = mk(Strategy::Unaware);
@@ -81,6 +89,7 @@ fn multilevel_strategy_cuts_communication_time() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` (AOT PJRT kernels absent in plain tier-1 runs)"]
 fn gradient_payload_spans_multiple_combiner_chunks() {
     // The padded parameter vector (19456 f32 = 76 KiB) exceeds the
     // 16384-element artifact chunk: the chunked path is exercised.
