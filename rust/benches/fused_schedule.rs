@@ -1,0 +1,90 @@
+//! Bench E13 — fused vs separate Fig. 7 rotation, cold and warm.
+//!
+//! "Separate" is the pre-fusion timing app: 2n `netsim::run` invocations
+//! per point (one per broadcast, one per ack-barrier). "Fused" assembles
+//! the whole rotation into one Schedule and runs a single simulation.
+//! Cold includes the tree builds + compiles of a fresh plan cache; warm
+//! reuses a long-lived engine, so fused is pure payload setup + schedule
+//! assembly + one run.
+//!
+//! Run: `cargo bench --bench fused_schedule`
+//! Smoke (CI): `cargo bench --bench fused_schedule -- --smoke`
+//! Reports land in `target/bench-reports/` (md/csv + BENCH_*.json).
+
+use gridcollect::benchkit::{save_bench_json, save_report, section, Bench};
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::coordinator::{experiment, timing_app};
+use gridcollect::tree::Strategy;
+use gridcollect::util::fmt::{self, Table};
+use std::time::Duration;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let bench = if smoke {
+        // 1 sample: CI smoke mode only checks the harness runs end to end.
+        Bench { warmup_iters: 0, min_iters: 1, max_iters: 1, target: Duration::ZERO }
+    } else {
+        Bench::default()
+    };
+    let sizes: Vec<usize> = if smoke { vec![65536] } else { vec![4096, 65536, 1 << 20] };
+
+    let comm = experiment::paper_comm();
+    let params = experiment::paper_params();
+    let mut results = Vec::new();
+
+    section("fused vs separate rotation — cold (fresh engine per iteration)");
+    for &bytes in &sizes {
+        results.push(bench.run(&format!("rotation/cold/fused/{}", fmt::bytes(bytes)), || {
+            let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
+            let p = timing_app::run_point_with(&e, bytes).unwrap();
+            std::hint::black_box(p.total_us);
+        }));
+        results.push(bench.run(
+            &format!("rotation/cold/separate/{}", fmt::bytes(bytes)),
+            || {
+                let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
+                let p = timing_app::run_point_separate(&e, bytes).unwrap();
+                std::hint::black_box(p.total_us);
+            },
+        ));
+    }
+
+    section("fused vs separate rotation — warm (long-lived engine)");
+    let engine = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
+    timing_app::run_point_with(&engine, sizes[0]).unwrap(); // prime the plan cache
+    for &bytes in &sizes {
+        results.push(bench.run(&format!("rotation/warm/fused/{}", fmt::bytes(bytes)), || {
+            let p = timing_app::run_point_with(&engine, bytes).unwrap();
+            std::hint::black_box(p.total_us);
+        }));
+        results.push(bench.run(
+            &format!("rotation/warm/separate/{}", fmt::bytes(bytes)),
+            || {
+                let p = timing_app::run_point_separate(&engine, bytes).unwrap();
+                std::hint::black_box(p.total_us);
+            },
+        ));
+    }
+
+    section("virtual-time delta (the §4 fidelity gap the fusion closes)");
+    let delta = experiment::fig8_fused_vs_separate(
+        &sizes,
+        Strategy::Multilevel,
+        experiment::native(),
+    )
+    .unwrap();
+    print!("{}", delta.to_markdown());
+    save_report("fused_vs_separate", &delta);
+
+    let mut wall = Table::new(&["case", "median us", "mean us", "iters"]);
+    for r in &results {
+        wall.row(&[
+            r.name.clone(),
+            format!("{:.1}", r.median_us),
+            format!("{:.1}", r.mean_us),
+            r.iters.to_string(),
+        ]);
+    }
+    save_report("fused_schedule_wall", &wall);
+    save_bench_json("fused_schedule", &results);
+}

@@ -22,7 +22,9 @@ use crate::model::NetworkParams;
 use crate::netsim::{
     run, Combiner, NativeCombiner, Payload, Program, ReduceOp, SimConfig, SimResult,
 };
-use crate::plan::{AllreduceAlgo, CollectivePlan, OpKind, PlanCache, PlanKey};
+use crate::plan::{
+    AllreduceAlgo, CollectivePlan, OpKind, PlanCache, PlanKey, Schedule, ScheduleBuilder,
+};
 use crate::topology::{Communicator, Rank};
 use crate::tree::{LevelPolicy, Strategy};
 use std::sync::Arc;
@@ -105,9 +107,51 @@ impl<'a> CollectiveEngine<'a> {
         self.comm
     }
 
+    /// Cost-model parameters this engine simulates under.
+    pub fn params(&self) -> &NetworkParams {
+        &self.cfg.params
+    }
+
     /// The engine's plan cache (for stats or sharing).
     pub fn plan_cache(&self) -> &Arc<PlanCache> {
         &self.cache
+    }
+
+    /// Start a fused multi-collective [`Schedule`] over this engine's
+    /// communicator. Append cached plans via [`CollectiveEngine::plan_for`]
+    /// + [`ScheduleBuilder::add_plan`] (zero builds / compiles on a warm
+    /// cache) and ad-hoc programs via [`ScheduleBuilder::add_program`],
+    /// then execute the whole sequence as **one** simulation with
+    /// [`CollectiveEngine::run_schedule`].
+    pub fn schedule_builder(&self) -> ScheduleBuilder {
+        ScheduleBuilder::new(self.comm)
+    }
+
+    /// The fused reduce;bcast allreduce as a two-segment schedule with a
+    /// per-phase boundary marker — the same message structure the cached
+    /// `Allreduce(ReduceBcast)` plan compiles to, but one fused run now
+    /// also reports where the reduce phase ends and the bcast begins.
+    pub fn allreduce_schedule(&self, root: Rank, op: ReduceOp) -> Result<Schedule> {
+        let red = self.plan_for(root, OpKind::Reduce(op), 1)?;
+        let bc = self.plan_for(root, OpKind::Bcast, 1)?;
+        let mut b = self.schedule_builder();
+        b.add_plan("reduce", &red)?;
+        b.add_plan("bcast", &bc)?;
+        b.build()
+    }
+
+    /// Stage-3 entry point for fused schedules: execute the schedule's
+    /// program as a single `netsim::run` under this engine's cost model
+    /// and combiner.
+    pub fn run_schedule(&self, schedule: &Schedule, init: Vec<Payload>) -> Result<SimResult> {
+        if schedule.comm_epoch() != self.comm.epoch() {
+            return Err(Error::Comm(format!(
+                "schedule epoch {} does not match communicator epoch {}",
+                schedule.comm_epoch(),
+                self.comm.epoch()
+            )));
+        }
+        self.execute(schedule.program(), init)
     }
 
     /// Stage-2 entry point: fetch (or build once) the compiled plan for
@@ -657,6 +701,35 @@ mod tests {
                 assert_eq!(out.data[r], expect, "len {len} rank {r}");
             }
         }
+    }
+
+    #[test]
+    fn fused_allreduce_schedule_matches_plan_composition() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let e = engine(Strategy::Multilevel, &comm);
+        let contributions: Vec<Vec<f32>> =
+            (0..comm.size()).map(|r| vec![r as f32; 16]).collect();
+        let reference = e.allreduce(ReduceOp::Sum, &contributions).unwrap();
+        let s = e.allreduce_schedule(0, ReduceOp::Sum).unwrap();
+        let init: Vec<Payload> =
+            contributions.iter().map(|c| Payload::single(0, c.clone())).collect();
+        let sim = e.run_schedule(&s, init).unwrap();
+        // Same message structure and timing as the cached-plan composition;
+        // boundary markers are free and tags are timing-neutral.
+        assert_eq!(sim.msgs_by_sep, reference.sim.msgs_by_sep);
+        assert!((sim.makespan_us - reference.sim.makespan_us).abs() < 1e-9);
+        let t = s.segment_completions(&sim).unwrap();
+        assert_eq!(t.len(), 2, "reduce and bcast phases");
+        assert!(t[0] <= t[1]);
+        assert!((t[1] - sim.makespan_us).abs() < 1e-9);
+        for r in 0..comm.size() {
+            assert_eq!(sim.payloads[r].get(&0).unwrap(), reference.data[r].as_slice());
+        }
+        // Schedules are epoch-pinned like plans.
+        let other = Communicator::world(&spec);
+        let e2 = engine(Strategy::Multilevel, &other);
+        assert!(e2.run_schedule(&s, vec![Payload::empty(); other.size()]).is_err());
     }
 
     #[test]

@@ -14,22 +14,56 @@ use crate::util::fmt::{self, Table};
 use std::sync::Arc;
 
 /// E1 — Fig. 8: the full rotation timing for the paper's 48-process
-/// grid, one row per (size, strategy).
+/// grid, one row per (size, strategy). Each point is one fused
+/// simulation of the whole rotation (§4 fidelity; see
+/// [`timing_app::run_point_with`]).
 pub fn fig8_table(sizes: &[usize], combiner: &dyn Combiner) -> Result<(Table, Vec<TimingPoint>)> {
     let comm = Communicator::world(&TopologySpec::paper_experiment());
     let params = presets::paper_grid();
     let pts = timing_app::fig8_sweep(&comm, &params, sizes, &Strategy::ALL, combiner)?;
-    let mut t = Table::new(&["msg size", "strategy", "rotation total", "mean bcast", "WAN msgs"]);
+    let mut t = Table::new(&[
+        "msg size", "strategy", "rotation total", "mean bcast", "mean ack", "WAN msgs",
+    ]);
     for p in &pts {
         t.row(&[
             fmt::bytes(p.bytes),
             p.strategy.name().to_string(),
             fmt::time_us(p.total_us),
             fmt::time_us(p.mean_bcast_us),
+            fmt::time_us(p.mean_ack_us),
             p.wan_msgs.to_string(),
         ]);
     }
     Ok((t, pts))
+}
+
+/// E13 — fused rotation vs sum-of-isolated-makespans, one strategy:
+/// quantifies exactly what the pre-fusion timing app overstated (and the
+/// 2n-fold engine-invocation saving is benched in `fused_schedule`).
+pub fn fig8_fused_vs_separate(
+    sizes: &[usize],
+    strategy: Strategy,
+    combiner: &dyn Combiner,
+) -> Result<Table> {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let params = presets::paper_grid();
+    let engine = CollectiveEngine::new(&comm, params, strategy).with_combiner(combiner);
+    let mut t = Table::new(&[
+        "msg size", "fused rotation", "separate sum", "overlap saved", "saved %",
+    ]);
+    for &bytes in sizes {
+        let fused = timing_app::run_point_with(&engine, bytes)?;
+        let sep = timing_app::run_point_separate(&engine, bytes)?;
+        let saved = sep.total_us - fused.total_us;
+        t.row(&[
+            fmt::bytes(bytes),
+            fmt::time_us(fused.total_us),
+            fmt::time_us(sep.total_us),
+            fmt::time_us(saved),
+            format!("{:.2}%", 100.0 * saved / sep.total_us),
+        ]);
+    }
+    Ok(t)
 }
 
 /// E2 — §4 cost model: predicted vs simulated binomial/multilevel
@@ -311,6 +345,12 @@ mod tests {
         let (t, pts) = fig8_table(&[1024, 8192], native()).unwrap();
         assert_eq!(t.n_rows(), 8);
         assert_eq!(pts.len(), 8);
+    }
+
+    #[test]
+    fn fused_vs_separate_table_rows() {
+        let t = fig8_fused_vs_separate(&[4096], Strategy::Multilevel, native()).unwrap();
+        assert_eq!(t.n_rows(), 1);
     }
 
     #[test]

@@ -7,5 +7,8 @@ pub mod report;
 pub mod timing_app;
 pub mod training;
 
-pub use timing_app::{ack_barrier_program, default_sizes, fig8_sweep, run_point, TimingPoint};
+pub use timing_app::{
+    ack_barrier_program, default_sizes, fig8_sweep, rotation_schedule, run_point,
+    run_point_separate, run_point_with, TimingPoint,
+};
 pub use training::{train, StepLog, TrainConfig};

@@ -6,13 +6,27 @@
 //! kill inter-broadcast pipelining. The reported number for M is the total
 //! virtual time of the root rotation — exactly what `t1 - t0` measures in
 //! Fig. 7.
+//!
+//! Fidelity note: the paper measures `t1 - t0` over one *continuous* run
+//! of the whole rotation, so [`run_point`] fuses the 2n phases (n
+//! broadcasts, n ack-barriers) into a single [`Schedule`] and executes
+//! **one** `netsim::run` per point. Summing per-phase makespans of
+//! isolated simulations — the pre-fusion implementation, kept as
+//! [`run_point_separate`] for A/B comparison — erases every cross-phase
+//! effect: a straggler rank entering the next broadcast late, ack/GO
+//! control traffic overlapping the tail of a broadcast. On a warm
+//! [`crate::plan::PlanCache`] the fused point performs zero tree builds,
+//! zero program compiles, and exactly one engine invocation (asserted in
+//! `rust/tests/fused_timing.rs`).
 
 use crate::collectives::CollectiveEngine;
 use crate::error::Result;
 use crate::model::NetworkParams;
 use crate::netsim::{run, Combiner, Merge, NativeCombiner, Payload, Program, SendPart, SimConfig};
+use crate::plan::{OpKind, PlanCache, Schedule};
 use crate::topology::Communicator;
 use crate::tree::Strategy;
+use std::sync::Arc;
 
 /// One sweep point of the Fig. 8 curve.
 #[derive(Clone, Debug)]
@@ -21,8 +35,12 @@ pub struct TimingPoint {
     pub strategy: Strategy,
     /// Total virtual time for the full root rotation (us) — the paper's y-axis.
     pub total_us: f64,
-    /// Mean per-broadcast time (us), ack-barrier excluded.
+    /// Mean per-broadcast time (us), ack-barrier excluded. For the fused
+    /// path this is the mean critical-path residual of the broadcast
+    /// segments (overlap with the preceding ack tail already discounted).
     pub mean_bcast_us: f64,
+    /// Mean ack-barrier time (us) between broadcasts.
+    pub mean_ack_us: f64,
     /// WAN messages across the whole rotation (broadcasts only).
     pub wan_msgs: u64,
     /// All messages across the rotation (broadcasts only).
@@ -48,22 +66,79 @@ pub fn ack_barrier_program(n: usize, tag: u64) -> Program {
     p
 }
 
-/// Run the Fig. 7 application for one (strategy, message size) pair.
-pub fn run_point(
-    comm: &Communicator,
-    params: &NetworkParams,
-    strategy: Strategy,
-    bytes: usize,
-    combiner: &dyn Combiner,
-) -> Result<TimingPoint> {
+/// Assemble the full Fig. 7 root rotation — n × (broadcast from root r ;
+/// ack-barrier) — as one fused, tag-rebased, validated [`Schedule`].
+/// Even segments are broadcasts, odd segments ack-barriers. On a warm
+/// plan cache assembly performs zero tree builds and zero compiles
+/// (cached programs are cloned and integer-rebased).
+pub fn rotation_schedule(engine: &CollectiveEngine) -> Result<Schedule> {
+    let n = engine.comm().size();
+    let mut b = engine.schedule_builder();
+    for root in 0..n {
+        let plan = engine.plan_for(root, OpKind::Bcast, 1)?;
+        b.add_plan(&format!("bcast@{root}"), &plan)?;
+        b.add_program(&format!("ack@{root}"), ack_barrier_program(n, 1))?;
+    }
+    b.build()
+}
+
+/// Run the Fig. 7 application for one message size on `engine`, as a
+/// **single fused simulation** of the whole rotation.
+///
+/// Only rank 0 (the first root) is seeded with data: every later root
+/// re-broadcasts the payload it received in an earlier phase, exactly as
+/// the paper's application broadcasts same-sized buffers in turn — wire
+/// bytes per phase are identical to the isolated runs.
+pub fn run_point_with(engine: &CollectiveEngine, bytes: usize) -> Result<TimingPoint> {
     assert_eq!(bytes % 4, 0, "message size must be f32-aligned");
+    let n = engine.comm().size();
+    let schedule = rotation_schedule(engine)?;
+    let mut init = vec![Payload::empty(); n];
+    init[0] = Payload::single(0, vec![1.0f32; bytes / 4]);
+    let sim = engine.run_schedule(&schedule, init)?;
+    let durations = schedule.segment_durations(&sim)?;
+
+    let mut bcast_us_sum = 0.0;
+    let mut ack_us_sum = 0.0;
+    let mut wan_msgs = 0;
+    let mut total_msgs = 0;
+    for (i, (seg, &d)) in schedule.segments().iter().zip(&durations).enumerate() {
+        if i % 2 == 0 {
+            // broadcast segment (see rotation_schedule ordering)
+            bcast_us_sum += d;
+            wan_msgs += seg.meta.wan_messages();
+            total_msgs += seg.meta.total_messages();
+        } else {
+            ack_us_sum += d;
+        }
+    }
+    Ok(TimingPoint {
+        bytes,
+        strategy: engine.strategy(),
+        total_us: sim.makespan_us,
+        mean_bcast_us: bcast_us_sum / n as f64,
+        mean_ack_us: ack_us_sum / n as f64,
+        wan_msgs,
+        total_msgs,
+    })
+}
+
+/// The pre-fusion implementation: every broadcast and every ack-barrier
+/// is an isolated `netsim::run` and the point is the **sum** of 2n
+/// makespans. Kept for A/B comparison (`gridcollect fig8 --fused`
+/// comparison table, the `fused_schedule` bench); it overstates the
+/// rotation by serializing phases that the continuous measurement
+/// overlaps, and costs 2n engine invocations per point.
+pub fn run_point_separate(engine: &CollectiveEngine, bytes: usize) -> Result<TimingPoint> {
+    assert_eq!(bytes % 4, 0, "message size must be f32-aligned");
+    let comm = engine.comm();
     let n = comm.size();
     let data = vec![1.0f32; bytes / 4];
-    let engine = CollectiveEngine::new(comm, params.clone(), strategy).with_combiner(combiner);
-    let ack_cfg = SimConfig::new(params.clone());
+    let ack_cfg = SimConfig::new(engine.params().clone());
 
     let mut total_us = 0.0;
     let mut bcast_us_sum = 0.0;
+    let mut ack_us_sum = 0.0;
     let mut wan_msgs = 0;
     let mut total_msgs = 0;
     for root in 0..n {
@@ -83,18 +158,41 @@ pub fn run_point(
             &NativeCombiner,
         )?;
         total_us += sim.makespan_us;
+        ack_us_sum += sim.makespan_us;
     }
     Ok(TimingPoint {
         bytes,
-        strategy,
+        strategy: engine.strategy(),
         total_us,
         mean_bcast_us: bcast_us_sum / n as f64,
+        mean_ack_us: ack_us_sum / n as f64,
         wan_msgs,
         total_msgs,
     })
 }
 
-/// Full Fig. 8 sweep: all strategies × all message sizes.
+/// Run the Fig. 7 application for one (strategy, message size) pair.
+///
+/// Convenience wrapper over [`run_point_with`] that builds a one-shot
+/// engine (cold cache). Sweeps should hold a [`CollectiveEngine`] (or a
+/// shared [`PlanCache`]) and call [`run_point_with`] so repeated points
+/// stay warm — see [`fig8_sweep`].
+pub fn run_point(
+    comm: &Communicator,
+    params: &NetworkParams,
+    strategy: Strategy,
+    bytes: usize,
+    combiner: &dyn Combiner,
+) -> Result<TimingPoint> {
+    let engine =
+        CollectiveEngine::new(comm, params.clone(), strategy).with_combiner(combiner);
+    run_point_with(&engine, bytes)
+}
+
+/// Full Fig. 8 sweep: all strategies × all message sizes, fused. One
+/// long-lived engine per strategy shares a single [`PlanCache`], so only
+/// the first point per strategy builds plans — every later size reuses
+/// them (plans are payload-size-independent).
 pub fn fig8_sweep(
     comm: &Communicator,
     params: &NetworkParams,
@@ -102,10 +200,19 @@ pub fn fig8_sweep(
     strategies: &[Strategy],
     combiner: &dyn Combiner,
 ) -> Result<Vec<TimingPoint>> {
+    let cache = Arc::new(PlanCache::new());
+    let engines: Vec<CollectiveEngine> = strategies
+        .iter()
+        .map(|&s| {
+            CollectiveEngine::new(comm, params.clone(), s)
+                .with_combiner(combiner)
+                .with_plan_cache(cache.clone())
+        })
+        .collect();
     let mut out = Vec::with_capacity(sizes.len() * strategies.len());
     for &bytes in sizes {
-        for &s in strategies {
-            out.push(run_point(comm, params, s, bytes, combiner)?);
+        for engine in &engines {
+            out.push(run_point_with(engine, bytes)?);
         }
     }
     Ok(out)
@@ -132,6 +239,25 @@ mod tests {
     }
 
     #[test]
+    fn rotation_schedule_has_2n_segments_and_validates() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        let s = rotation_schedule(&e).unwrap();
+        assert_eq!(s.n_segments(), 2 * comm.size());
+        s.program().validate().unwrap();
+        // even segments broadcast (one message per non-root rank), odd
+        // segments ack (2(n-1) control messages)
+        let n = comm.size() as u64;
+        for (i, seg) in s.segments().iter().enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(seg.meta.total_messages(), n - 1, "segment {i}");
+            } else {
+                assert_eq!(seg.meta.total_messages(), 2 * (n - 1), "segment {i}");
+            }
+        }
+    }
+
+    #[test]
     fn fig8_ordering_holds_at_64k() {
         // The paper's experiment topology; one representative size.
         let comm = Communicator::world(&TopologySpec::paper_experiment());
@@ -150,6 +276,9 @@ mod tests {
         assert!(site < unaware);
         assert!(machine < unaware);
     }
+
+    // NB: fused-vs-separate invariants (fused ≤ separate, identical
+    // message accounting) live in rust/tests/schedule_invariants.rs.
 
     #[test]
     fn multilevel_wan_messages_one_per_bcast() {
@@ -174,7 +303,18 @@ mod tests {
         )
         .unwrap();
         assert_eq!(pts.len(), 4);
-        // larger messages cost more, same strategy
+        // size-major order preserved: larger messages cost more, same strategy
+        assert_eq!(pts[0].bytes, 1024);
+        assert_eq!(pts[2].bytes, 4096);
         assert!(pts[0].total_us < pts[2].total_us);
+        // phase means decompose the rotation
+        for p in &pts {
+            let n = comm.size() as f64;
+            let recomposed = n * (p.mean_bcast_us + p.mean_ack_us);
+            assert!(
+                (recomposed - p.total_us).abs() < 1e-6 * p.total_us.max(1.0),
+                "segment durations must sum to the rotation total"
+            );
+        }
     }
 }

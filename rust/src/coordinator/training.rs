@@ -9,7 +9,7 @@
 use crate::collectives::CollectiveEngine;
 use crate::error::{Error, Result};
 use crate::model::NetworkParams;
-use crate::netsim::{Combiner, ReduceOp};
+use crate::netsim::{Combiner, Payload, ReduceOp};
 use crate::plan::AllreduceAlgo;
 use crate::runtime::MlpRuntime;
 use crate::topology::Communicator;
@@ -22,6 +22,13 @@ pub struct StepLog {
     pub mean_loss: f32,
     /// Virtual communication time of the gradient allreduce (us).
     pub comm_us: f64,
+    /// Completion time of the reduce phase within the fused allreduce
+    /// schedule (us). Zero when the composition is a single fused
+    /// segment (`rs+ag`).
+    pub reduce_us: f64,
+    /// Critical-path residual of the broadcast phase (`comm_us -
+    /// reduce_us`). Zero for `rs+ag`.
+    pub bcast_us: f64,
     pub wan_msgs: u64,
     /// Wall-clock compute time of the PJRT train steps (us).
     pub compute_wall_us: f64,
@@ -73,6 +80,15 @@ pub fn train(
     let engine = CollectiveEngine::new(comm, params_net.clone(), cfg.strategy)
         .with_combiner(combiner)
         .with_allreduce_algo(cfg.allreduce);
+    // For the reduce+bcast composition the per-step exchange executes as
+    // a fused two-segment Schedule (same message structure and timing as
+    // the cached Allreduce plan, plus a phase boundary marker), built
+    // once here and reused every step — the program is payload-
+    // independent, so the hot path stays payload setup + one simulation.
+    let step_schedule = match cfg.allreduce {
+        AllreduceAlgo::ReduceBcast => Some(engine.allreduce_schedule(0, ReduceOp::Sum)?),
+        AllreduceAlgo::ReduceScatterAllgather => None,
+    };
     let p0 = mlp.init_params(cfg.seed);
     let mut replicas: Vec<Vec<f32>> = vec![p0; n];
     let mut logs = Vec::with_capacity(cfg.steps);
@@ -91,12 +107,27 @@ pub fn train(
         let compute_wall_us = t0.elapsed().as_secs_f64() * 1e6;
 
         // Gradient allreduce over the simulated grid.
-        let out = engine.allreduce(ReduceOp::Sum, &grads)?;
+        let (reduced, comm_us, reduce_us, bcast_us, wan_msgs) = match &step_schedule {
+            Some(schedule) => {
+                let init: Vec<Payload> =
+                    grads.iter().map(|g| Payload::single(0, g.clone())).collect();
+                let sim = engine.run_schedule(schedule, init)?;
+                let t = schedule.segment_completions(&sim)?;
+                let data: Vec<Vec<f32>> = (0..n)
+                    .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
+                    .collect();
+                (data, sim.makespan_us, t[0], t[1] - t[0], sim.wan_messages())
+            }
+            None => {
+                let out = engine.allreduce(ReduceOp::Sum, &grads)?;
+                (out.data, out.sim.makespan_us, 0.0, 0.0, out.sim.wan_messages())
+            }
+        };
 
         // SGD update with the averaged gradient (Pallas axpy kernel).
         let lr_eff = cfg.lr / n as f32;
         for w in 0..n {
-            replicas[w] = mlp.sgd_step(&replicas[w], &out.data[w], lr_eff)?;
+            replicas[w] = mlp.sgd_step(&replicas[w], &reduced[w], lr_eff)?;
         }
 
         // Replica synchronization invariant.
@@ -111,8 +142,10 @@ pub fn train(
         logs.push(StepLog {
             step,
             mean_loss: loss_sum / n as f32,
-            comm_us: out.sim.makespan_us,
-            wan_msgs: out.sim.wan_messages(),
+            comm_us,
+            reduce_us,
+            bcast_us,
+            wan_msgs,
             compute_wall_us,
         });
     }

@@ -3,7 +3,8 @@
 //! Subcommands map 1:1 onto the experiments in DESIGN.md §6:
 //!
 //! ```text
-//! gridcollect fig8 [--sizes 1k,...,1m] [--xla]     # E1: the headline figure
+//! gridcollect fig8 [--sizes 1k,...,1m] [--xla] [--fused]   # E1: the headline figure
+//!                                  # (--fused adds the E13 fused-vs-separate delta table)
 //! gridcollect suite [--size 64k] [--xla]           # E8: 6 ops x 4 strategies
 //! gridcollect allreduce [--size 64k] [--op sum] [--xla]   # E12: both compositions
 //! gridcollect cost-model [--size 64k]              # E2: §4 analytic vs sim
@@ -66,8 +67,21 @@ fn run(raw: Vec<String>) -> Result<()> {
                 None => experiment::native(),
             };
             let (table, _) = experiment::fig8_table(&sizes, combiner)?;
-            println!("E1 / Figure 8 — rotating-root MPI_Bcast on the paper grid (48 procs):\n");
+            println!("E1 / Figure 8 — rotating-root MPI_Bcast on the paper grid (48 procs),");
+            println!("each point one fused simulation of the whole rotation:\n");
             print!("{}", table.to_markdown());
+            if args.has("fused") {
+                let strategy = args.strategy(Strategy::Multilevel)?;
+                println!(
+                    "\nE13 — fused rotation vs summed isolated makespans ({}):\n",
+                    strategy.name()
+                );
+                print!(
+                    "{}",
+                    experiment::fig8_fused_vs_separate(&sizes, strategy, combiner)?
+                        .to_markdown()
+                );
+            }
         }
         "suite" => {
             let size = args.get_size("size", 65536)?;
@@ -191,10 +205,12 @@ fn run(raw: Vec<String>) -> Result<()> {
             let logs = training::train(&comm, &presets::paper_grid(), &mlp, combiner, &cfg)?;
             for l in logs.iter().step_by((logs.len() / 10).max(1)) {
                 println!(
-                    "step {:>3}  loss {:.4}  comm {:>12}  wan_msgs {}  compute {:>10}",
+                    "step {:>3}  loss {:.4}  comm {:>12} (reduce {} | bcast {})  wan_msgs {}  compute {:>10}",
                     l.step,
                     l.mean_loss,
                     fmt::time_us(l.comm_us),
+                    fmt::time_us(l.reduce_us),
+                    fmt::time_us(l.bcast_us),
                     l.wan_msgs,
                     fmt::time_us(l.compute_wall_us)
                 );

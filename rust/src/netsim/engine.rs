@@ -16,7 +16,8 @@ use crate::model::NetworkParams;
 use crate::netsim::payload::{Combiner, Payload, Rank};
 use crate::netsim::program::{Action, Merge, Program, SendPart};
 use crate::topology::Clustering;
-use std::collections::{HashMap, VecDeque};
+use crate::util::counters;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 /// One trace record (enabled via `SimConfig::trace`).
 #[derive(Clone, Debug)]
@@ -70,6 +71,12 @@ pub struct SimResult {
     pub combines: u64,
     /// Final payload register of every rank (for semantic verification).
     pub payloads: Vec<Payload>,
+    /// Completion timestamp per boundary marker, sorted by marker id:
+    /// `(id, t_us)` where `t_us` is the max local clock over every rank
+    /// that executed `Action::Mark { id }`. Empty for mark-free programs.
+    /// Fused schedules use consecutive ids, so this is the cumulative
+    /// per-segment completion profile of a single run.
+    pub mark_times_us: Vec<(u64, f64)>,
     /// Trace (empty unless enabled).
     pub trace: Vec<TraceEvent>,
 }
@@ -117,6 +124,7 @@ pub fn run(
     if initial.len() != n {
         return Err(Error::Sim(format!("initial payloads: {} != {n}", initial.len())));
     }
+    counters::count_sim_run();
     let n_levels = clustering.n_levels();
     let mut states: Vec<RankState> = initial
         .into_iter()
@@ -128,6 +136,7 @@ pub fn run(
     let mut bytes_by_sep = vec![0u64; n_levels];
     let mut combines = 0u64;
     let mut trace = Vec::new();
+    let mut mark_times: BTreeMap<u64, f64> = BTreeMap::new();
 
     loop {
         let mut progressed = false;
@@ -214,6 +223,15 @@ pub fn run(
                         }
                         progressed = true;
                     }
+                    Action::Mark { id } => {
+                        let t = states[r].clock;
+                        states[r].idx += 1;
+                        let slot = mark_times.entry(id).or_insert(t);
+                        if t > *slot {
+                            *slot = t;
+                        }
+                        progressed = true;
+                    }
                 }
             }
             if states[r].idx < prog.actions[r].len() {
@@ -256,6 +274,7 @@ pub fn run(
         bytes_by_sep,
         combines,
         payloads: states.into_iter().map(|s| s.payload).collect(),
+        mark_times_us: mark_times.into_iter().collect(),
         trace,
     })
 }
@@ -386,6 +405,33 @@ mod tests {
         let r = run(&flat2(), &p, init, &cfg, &NativeCombiner).unwrap();
         // First (data) message replaced, second discarded: payload intact.
         assert_eq!(r.payloads[1].get(&0).unwrap(), vec![4.0]);
+    }
+
+    #[test]
+    fn marks_record_segment_completion_times() {
+        // Two back-to-back messages with a marker after each: the marker
+        // time is the max local clock over ranks at that boundary.
+        let mut p = Program::new(2);
+        p.send(0, 1, 1, SendPart::All);
+        p.recv(1, 0, 1, Merge::Replace);
+        p.mark_all(0);
+        p.send(1, 0, 2, SendPart::All);
+        p.recv(0, 1, 2, Merge::Replace);
+        p.mark_all(1);
+        let init = vec![Payload::single(0, vec![1.0; 25]), Payload::empty()]; // 100 bytes
+        let cfg = SimConfig::new(simple_params());
+        let r = run(&flat2(), &p, init, &cfg, &NativeCombiner).unwrap();
+        // segment 0: rank 1 done at 215 (see single_message_timing).
+        // segment 1: rank 1 busy until 215+110=325; arrival 325+100=425;
+        // rank 0 done at max(110,425)+5 = 430.
+        assert_eq!(r.mark_times_us.len(), 2);
+        assert_eq!(r.mark_times_us[0].0, 0);
+        assert!((r.mark_times_us[0].1 - 215.0).abs() < 1e-9);
+        assert_eq!(r.mark_times_us[1].0, 1);
+        assert!((r.mark_times_us[1].1 - 430.0).abs() < 1e-9);
+        assert!((r.makespan_us - 430.0).abs() < 1e-9);
+        // markers are free: same finish times as the unmarked program
+        assert!(r.mark_times_us[0].1 <= r.mark_times_us[1].1, "monotone");
     }
 
     #[test]

@@ -40,6 +40,12 @@ pub enum Merge {
 pub enum Action {
     Send { to: Rank, tag: u64, part: SendPart },
     Recv { from: Rank, tag: u64, merge: Merge },
+    /// Zero-cost boundary marker: records the rank's local clock under
+    /// `id` when reached. Fused schedules insert one per rank at each
+    /// segment boundary so a single run yields per-segment completion
+    /// timestamps (`SimResult::mark_times_us`). Not a synchronization
+    /// point — ranks pass it independently.
+    Mark { id: u64 },
 }
 
 /// Per-rank action lists.
@@ -63,6 +69,18 @@ impl Program {
 
     pub fn recv(&mut self, at: Rank, from: Rank, tag: u64, merge: Merge) {
         self.actions[at].push(Action::Recv { from, tag, merge });
+    }
+
+    /// Append a boundary marker at `rank`.
+    pub fn mark(&mut self, rank: Rank, id: u64) {
+        self.actions[rank].push(Action::Mark { id });
+    }
+
+    /// Append a boundary marker with the same `id` at every rank.
+    pub fn mark_all(&mut self, id: u64) {
+        for list in &mut self.actions {
+            list.push(Action::Mark { id });
+        }
     }
 
     pub fn total_actions(&self) -> usize {
@@ -103,6 +121,7 @@ impl Program {
                         }
                         *sends.entry((*from, r, *tag)).or_insert(0) -= 1;
                     }
+                    Action::Mark { .. } => {}
                 }
             }
         }
@@ -130,6 +149,7 @@ impl Program {
                 match a {
                     Action::Send { tag, .. } => *tag += delta,
                     Action::Recv { tag, .. } => *tag += delta,
+                    Action::Mark { .. } => {} // marker ids are not tags
                 }
             }
         }
@@ -149,8 +169,9 @@ impl Program {
         self.actions
             .iter()
             .flatten()
-            .map(|a| match a {
-                Action::Send { tag, .. } | Action::Recv { tag, .. } => *tag,
+            .filter_map(|a| match a {
+                Action::Send { tag, .. } | Action::Recv { tag, .. } => Some(*tag),
+                Action::Mark { .. } => None,
             })
             .max()
             .unwrap_or(0)
@@ -234,6 +255,24 @@ mod tests {
         p.then(second).unwrap();
         assert!(p.validate().is_ok());
         assert_eq!(p.actions[0].len(), 2);
+    }
+
+    #[test]
+    fn marks_are_tag_neutral_and_validate() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 5, SendPart::All);
+        p.recv(1, 0, 5, Merge::Replace);
+        p.mark_all(0);
+        p.mark(0, 1);
+        assert!(p.validate().is_ok());
+        assert_eq!(p.max_tag(), 5, "marker ids never count as tags");
+        let r = p.rebased(10);
+        assert_eq!(r.max_tag(), 15);
+        assert!(
+            r.actions[0].contains(&Action::Mark { id: 1 }),
+            "rebase leaves marker ids untouched"
+        );
+        assert_eq!(p.total_actions(), 5);
     }
 
     #[test]

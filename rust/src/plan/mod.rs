@@ -28,10 +28,12 @@
 //! setup + simulation.
 
 pub mod cache;
+pub mod schedule;
 
 pub use cache::PlanCache;
+pub use schedule::{Schedule, ScheduleBuilder, Segment};
 
-use crate::netsim::{Action, Program, ReduceOp};
+use crate::netsim::{Action, Program, ReduceOp, SendPart};
 use crate::topology::{Clustering, Rank};
 use crate::tree::{LevelPolicy, Strategy, Tree};
 
@@ -149,16 +151,40 @@ pub struct PlanMeta {
 }
 
 impl PlanMeta {
-    fn compute(clustering: &Clustering, tree: &Tree, program: &Program, op: OpKind) -> PlanMeta {
-        let n_levels = clustering.n_levels();
-        let mut msgs_by_sep = vec![0u64; n_levels];
+    /// Exact message counts per separation level for any program's sends.
+    fn msgs_by_sep(clustering: &Clustering, program: &Program) -> Vec<u64> {
+        let mut msgs = vec![0u64; clustering.n_levels()];
         for (from, list) in program.actions.iter().enumerate() {
             for a in list {
                 if let Action::Send { to, .. } = a {
-                    msgs_by_sep[clustering.sep(from, *to) - 1] += 1;
+                    msgs[clustering.sep(from, *to) - 1] += 1;
                 }
             }
         }
+        msgs
+    }
+
+    /// Metadata for an ad-hoc (tree-less) program — e.g. a schedule's
+    /// ack-barrier segment. Message counts are exact; tree facts are
+    /// zero; control-only programs get the [`BytesModel::Zero`] model so
+    /// byte predictions stay available, anything else is `Routed`.
+    pub fn of_program(clustering: &Clustering, program: &Program) -> PlanMeta {
+        let msgs_by_sep = Self::msgs_by_sep(clustering, program);
+        let control_only = program.actions.iter().flatten().all(|a| {
+            !matches!(a, Action::Send { part, .. } if *part != SendPart::Empty)
+        });
+        PlanMeta {
+            msgs_by_sep,
+            tree_edges_by_sep: vec![0; clustering.n_levels()],
+            max_fanout: 0,
+            tree_height: 0,
+            bytes_model: if control_only { BytesModel::Zero } else { BytesModel::Routed },
+        }
+    }
+
+    fn compute(clustering: &Clustering, tree: &Tree, program: &Program, op: OpKind) -> PlanMeta {
+        let n_levels = clustering.n_levels();
+        let msgs_by_sep = Self::msgs_by_sep(clustering, program);
         let mut tree_edges_by_sep = vec![0usize; n_levels];
         for (p, c) in tree.edges() {
             tree_edges_by_sep[clustering.sep(p, c) - 1] += 1;
@@ -221,6 +247,29 @@ pub struct CollectivePlan {
     pub tree: Tree,
     pub program: Program,
     pub meta: PlanMeta,
+}
+
+impl CollectivePlan {
+    /// Approximate resident size of this plan, used as the eviction
+    /// weight for capacity-bounded [`PlanCache`]s. Dominated by the
+    /// per-rank action lists and any scatter rank-lists they carry; the
+    /// tree and metadata vectors contribute their element storage.
+    pub fn footprint_bytes(&self) -> usize {
+        let mut bytes = std::mem::size_of::<CollectivePlan>();
+        for list in &self.program.actions {
+            bytes += std::mem::size_of::<Vec<Action>>();
+            bytes += list.len() * std::mem::size_of::<Action>();
+            for a in list {
+                if let Action::Send { part: SendPart::Ranks(rs), .. } = a {
+                    bytes += rs.len() * std::mem::size_of::<Rank>();
+                }
+            }
+        }
+        bytes += self.tree.capacity() * 2 * std::mem::size_of::<usize>();
+        bytes += self.meta.msgs_by_sep.len() * std::mem::size_of::<u64>();
+        bytes += self.meta.tree_edges_by_sep.len() * std::mem::size_of::<usize>();
+        bytes
+    }
 }
 
 /// Base tag plans are compiled at. Arbitrary but fixed: documented so
@@ -297,5 +346,23 @@ mod tests {
         // reduce up + bcast down: every tree edge carries two messages.
         assert_eq!(ar.meta.total_messages(), 2 * (comm.size() as u64 - 1));
         assert_eq!(ar.meta.wan_messages(), 2);
+    }
+
+    #[test]
+    fn footprint_tracks_program_size() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let cache = PlanCache::new();
+        let bc = cache.get_or_build(&comm, key(&comm, OpKind::Bcast, 0)).unwrap();
+        let ar = cache
+            .get_or_build(
+                &comm,
+                key(&comm, OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceBcast), 0),
+            )
+            .unwrap();
+        assert!(bc.footprint_bytes() > 0);
+        assert!(
+            ar.footprint_bytes() > bc.footprint_bytes(),
+            "allreduce carries strictly more actions than one of its phases"
+        );
     }
 }

@@ -1,0 +1,426 @@
+//! Fused multi-collective schedules (stage 2½ of the pipeline).
+//!
+//! The paper's §4 timing application measures `t1 - t0` over one
+//! *continuous* run of a whole operation sequence (broadcast, ack-barrier,
+//! next root, …). Simulating each operation as its own `netsim::run` and
+//! summing makespans erases every cross-phase effect — a straggler rank
+//! entering the next phase late, ack/GO control traffic overlapping the
+//! tail of a broadcast — and costs one engine invocation per phase.
+//!
+//! A [`Schedule`] concatenates cached [`CollectivePlan`] programs and
+//! ad-hoc programs (e.g. the hand-rolled ack-barrier) into **one**
+//! validated [`Program`]:
+//!
+//! - **automatic tag allocation** — each appended segment is tag-rebased
+//!   past every tag already allocated ([`Program::rebase_tags`]), so
+//!   channels of different segments never collide; the fused program is
+//!   re-validated on [`ScheduleBuilder::build`];
+//! - **per-segment boundary markers** — an [`crate::netsim::Action::Mark`]
+//!   is appended at every rank after each segment, so a single `netsim::run` yields
+//!   the cumulative completion timestamp of every segment
+//!   ([`Schedule::segment_completions`]);
+//! - **aggregated [`PlanMeta`]** — static message counts per separation
+//!   level sum over segments and stay exact for the fused run.
+//!
+//! Assembly is cheap by design: cloning cached programs plus an
+//! O(actions) integer rebase — **zero tree builds, zero compiles** on a
+//! warm [`super::PlanCache`]. `Action::Mark` is not a synchronization
+//! point; ranks pass markers independently, so fusion never slows a
+//! sequence down (the engine's timing is monotone max-plus: fused
+//! makespan ≤ sum of isolated makespans).
+
+use super::{CollectivePlan, PlanMeta};
+use crate::error::{Error, Result};
+use crate::netsim::{Program, SimResult};
+use crate::topology::{Clustering, Communicator};
+
+/// One appended segment of a fused schedule: label + static metadata +
+/// the tag budget it was rebased into.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    /// Caller-supplied label (e.g. `"bcast@7"`, `"ack@7"`).
+    pub label: String,
+    /// Static per-segment metadata; `msgs_by_sep` stays exact for the
+    /// fused run (marker actions send nothing).
+    pub meta: PlanMeta,
+    /// Half-open tag interval `[lo, hi)` allocated to this segment.
+    /// Intervals of consecutive segments are disjoint by construction.
+    pub tags: (u64, u64),
+    /// Total actions contributed (excluding the boundary markers).
+    pub actions: usize,
+}
+
+/// Incrementally composes segments into a fused program.
+///
+/// Created via [`ScheduleBuilder::new`]; finished with
+/// [`ScheduleBuilder::build`], which validates the fused program.
+#[derive(Clone, Debug)]
+pub struct ScheduleBuilder {
+    clustering: Clustering,
+    comm_epoch: u64,
+    program: Program,
+    segments: Vec<Segment>,
+    next_tag: u64,
+}
+
+impl ScheduleBuilder {
+    /// Start an empty schedule over `comm`'s process group. The
+    /// clustering is captured for per-segment metadata; the epoch pins
+    /// which cached plans may be appended.
+    pub fn new(comm: &Communicator) -> Self {
+        ScheduleBuilder {
+            clustering: comm.clustering().clone(),
+            comm_epoch: comm.epoch(),
+            program: Program::new(comm.size()),
+            segments: Vec::new(),
+            next_tag: 0,
+        }
+    }
+
+    /// Number of segments appended so far.
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Append a cached plan as the next segment. Rejects plans built for
+    /// another communicator epoch. Returns the segment index (also the
+    /// boundary-marker id).
+    pub fn add_plan(&mut self, label: &str, plan: &CollectivePlan) -> Result<usize> {
+        if plan.key.comm_epoch != self.comm_epoch {
+            return Err(Error::Schedule(format!(
+                "segment '{label}': plan epoch {} does not match schedule epoch {}",
+                plan.key.comm_epoch, self.comm_epoch
+            )));
+        }
+        self.append(label, plan.program.clone(), plan.meta.clone())
+    }
+
+    /// Append an ad-hoc program (e.g. the §4 ack-barrier) as the next
+    /// segment. The program is validated in isolation first; its metadata
+    /// is derived from its send actions (no tree ⇒ zero tree edges).
+    pub fn add_program(&mut self, label: &str, program: Program) -> Result<usize> {
+        program.validate().map_err(|e| {
+            Error::Schedule(format!("segment '{label}' is invalid in isolation: {e}"))
+        })?;
+        let meta = PlanMeta::of_program(&self.clustering, &program);
+        self.append(label, program, meta)
+    }
+
+    fn append(&mut self, label: &str, mut program: Program, meta: PlanMeta) -> Result<usize> {
+        if program.n_ranks() != self.program.n_ranks() {
+            return Err(Error::Schedule(format!(
+                "segment '{label}' spans {} ranks, schedule spans {}",
+                program.n_ranks(),
+                self.program.n_ranks()
+            )));
+        }
+        // Marker ids are the schedule's namespace: a stray Mark inside a
+        // segment would collide with (or fall outside) the boundary ids
+        // and corrupt per-segment timing silently.
+        if program
+            .actions
+            .iter()
+            .flatten()
+            .any(|a| matches!(a, crate::netsim::Action::Mark { .. }))
+        {
+            return Err(Error::Schedule(format!(
+                "segment '{label}' contains Mark actions; boundary markers \
+                 are inserted by the schedule itself"
+            )));
+        }
+        let id = self.segments.len();
+        let actions = program.total_actions();
+        // Automatic tag allocation: shift the segment past every tag
+        // already spoken for, then reserve its (shifted) range.
+        let delta = self.next_tag;
+        program.rebase_tags(delta);
+        // `max(delta)` keeps the allocator monotone for empty segments
+        // (an action-free program reports max_tag() == 0).
+        let tag_end = (program.max_tag() + 1).max(delta);
+        self.next_tag = tag_end;
+        self.program.then(program)?;
+        // Boundary marker: every rank stamps its local clock when it
+        // finishes this segment; the engine keeps the max.
+        self.program.mark_all(id as u64);
+        self.segments.push(Segment {
+            label: label.to_string(),
+            meta,
+            tags: (delta, tag_end),
+            actions,
+        });
+        Ok(id)
+    }
+
+    /// Validate the fused program and freeze the schedule.
+    pub fn build(self) -> Result<Schedule> {
+        self.program.validate().map_err(|e| {
+            Error::Schedule(format!("fused schedule failed validation: {e}"))
+        })?;
+        let meta = aggregate_meta(self.clustering.n_levels(), &self.segments);
+        Ok(Schedule {
+            comm_epoch: self.comm_epoch,
+            program: self.program,
+            segments: self.segments,
+            meta,
+        })
+    }
+}
+
+/// Sum the per-segment static facts. Counts add exactly; shape facts
+/// (fan-out, height) take the max; byte prediction is answered per
+/// segment by [`Schedule::expected_bytes_by_sep`], so the aggregate
+/// carries the conservative `Routed` model.
+fn aggregate_meta(n_levels: usize, segments: &[Segment]) -> PlanMeta {
+    let mut msgs_by_sep = vec![0u64; n_levels];
+    let mut tree_edges_by_sep = vec![0usize; n_levels];
+    let mut max_fanout = 0usize;
+    let mut tree_height = 0usize;
+    for s in segments {
+        for (acc, &m) in msgs_by_sep.iter_mut().zip(&s.meta.msgs_by_sep) {
+            *acc += m;
+        }
+        for (acc, &e) in tree_edges_by_sep.iter_mut().zip(&s.meta.tree_edges_by_sep) {
+            *acc += e;
+        }
+        max_fanout = max_fanout.max(s.meta.max_fanout);
+        tree_height = tree_height.max(s.meta.tree_height);
+    }
+    PlanMeta {
+        msgs_by_sep,
+        tree_edges_by_sep,
+        max_fanout,
+        tree_height,
+        bytes_model: super::BytesModel::Routed,
+    }
+}
+
+/// A validated, tag-rebased fusion of collective plans and ad-hoc
+/// programs: one program, one `netsim::run`, per-segment timings.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    comm_epoch: u64,
+    program: Program,
+    segments: Vec<Segment>,
+    meta: PlanMeta,
+}
+
+impl Schedule {
+    /// The fused program (run it with `netsim::run` or
+    /// `CollectiveEngine::run_schedule`).
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    /// The appended segments, in execution order.
+    pub fn segments(&self) -> &[Segment] {
+        &self.segments
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Communicator epoch the schedule was assembled against.
+    pub fn comm_epoch(&self) -> u64 {
+        self.comm_epoch
+    }
+
+    /// Aggregated static metadata: `msgs_by_sep` is the exact message
+    /// count of the fused run (sum over segments).
+    pub fn meta(&self) -> &PlanMeta {
+        &self.meta
+    }
+
+    /// Predicted wire bytes per separation level for a run whose data
+    /// payload is `payload_bytes`, summed over segments. `None` as soon
+    /// as any segment's per-message bytes are routing-dependent.
+    pub fn expected_bytes_by_sep(&self, payload_bytes: usize) -> Option<Vec<u64>> {
+        let mut total = vec![0u64; self.meta.msgs_by_sep.len()];
+        for s in &self.segments {
+            let per = s.meta.expected_bytes_by_sep(payload_bytes)?;
+            for (acc, b) in total.iter_mut().zip(per) {
+                *acc += b;
+            }
+        }
+        Some(total)
+    }
+
+    /// Cumulative completion timestamp of every segment, extracted from a
+    /// fused run's boundary markers. Monotone non-decreasing; the last
+    /// entry equals the run's makespan.
+    pub fn segment_completions(&self, sim: &SimResult) -> Result<Vec<f64>> {
+        let mut out = vec![f64::NAN; self.segments.len()];
+        let mut seen = 0usize;
+        for &(id, t) in &sim.mark_times_us {
+            let idx = id as usize;
+            if idx >= out.len() {
+                return Err(Error::Schedule(format!(
+                    "run recorded marker {id}, schedule has {} segments",
+                    self.segments.len()
+                )));
+            }
+            out[idx] = t;
+            seen += 1;
+        }
+        if seen != self.segments.len() {
+            return Err(Error::Schedule(format!(
+                "run recorded {seen} markers, schedule has {} segments \
+                 (was the schedule's own program executed?)",
+                self.segments.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Per-segment durations `d[i] = t[i] - t[i-1]` (with `t[-1] = 0`)
+    /// from a fused run. Because markers are not synchronization points,
+    /// `d[i]` is the *critical-path* residual of segment `i` given the
+    /// overlap with its predecessors — exactly the per-phase share of the
+    /// continuous `t1 - t0` measurement.
+    pub fn segment_durations(&self, sim: &SimResult) -> Result<Vec<f64>> {
+        let t = self.segment_completions(sim)?;
+        let mut prev = 0.0;
+        Ok(t.into_iter()
+            .map(|ti| {
+                let d = ti - prev;
+                prev = ti;
+                d
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use crate::netsim::{run, Merge, NativeCombiner, Payload, SendPart, SimConfig};
+    use crate::plan::{OpKind, PlanCache, PlanKey};
+    use crate::topology::{Communicator, TopologySpec};
+    use crate::tree::{LevelPolicy, Strategy};
+
+    fn key(comm: &Communicator, op: OpKind, root: usize) -> PlanKey {
+        PlanKey {
+            comm_epoch: comm.epoch(),
+            strategy: Strategy::Multilevel,
+            policy: LevelPolicy::paper(),
+            root,
+            op,
+            segments: 1,
+        }
+    }
+
+    #[test]
+    fn tag_budgets_are_disjoint_and_fused_program_validates() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let cache = PlanCache::new();
+        let mut b = ScheduleBuilder::new(&comm);
+        for root in 0..4 {
+            let plan = cache.get_or_build(&comm, key(&comm, OpKind::Bcast, root)).unwrap();
+            b.add_plan(&format!("bcast@{root}"), &plan).unwrap();
+        }
+        assert_eq!(b.n_segments(), 4);
+        let s = b.build().unwrap();
+        s.program().validate().unwrap();
+        for w in s.segments().windows(2) {
+            assert!(w[0].tags.1 <= w[1].tags.0, "tag budgets overlap");
+        }
+        assert_eq!(s.n_segments(), 4);
+    }
+
+    #[test]
+    fn aggregated_meta_sums_segments() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let cache = PlanCache::new();
+        let mut b = ScheduleBuilder::new(&comm);
+        let p0 = cache.get_or_build(&comm, key(&comm, OpKind::Bcast, 0)).unwrap();
+        let p1 = cache.get_or_build(&comm, key(&comm, OpKind::Bcast, 1)).unwrap();
+        b.add_plan("a", &p0).unwrap();
+        b.add_plan("b", &p1).unwrap();
+        let s = b.build().unwrap();
+        let expect: Vec<u64> = p0
+            .meta
+            .msgs_by_sep
+            .iter()
+            .zip(&p1.meta.msgs_by_sep)
+            .map(|(a, b)| a + b)
+            .collect();
+        assert_eq!(s.meta().msgs_by_sep, expect);
+        assert_eq!(s.meta().total_messages(), 2 * (comm.size() as u64 - 1));
+    }
+
+    #[test]
+    fn fused_run_yields_monotone_segment_timestamps() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let cache = PlanCache::new();
+        let mut b = ScheduleBuilder::new(&comm);
+        for root in [0usize, 5, 11] {
+            let plan = cache.get_or_build(&comm, key(&comm, OpKind::Bcast, root)).unwrap();
+            b.add_plan(&format!("bcast@{root}"), &plan).unwrap();
+        }
+        let s = b.build().unwrap();
+        let data = vec![1.0f32; 64];
+        let mut init = vec![Payload::empty(); comm.size()];
+        init[0] = Payload::single(0, data.clone());
+        let cfg = SimConfig::new(presets::paper_grid());
+        let sim =
+            run(comm.clustering(), s.program(), init, &cfg, &NativeCombiner).unwrap();
+        let t = s.segment_completions(&sim).unwrap();
+        assert_eq!(t.len(), 3);
+        assert!(t.windows(2).all(|w| w[0] <= w[1]), "monotone: {t:?}");
+        assert!((t[2] - sim.makespan_us).abs() < 1e-9, "last marker == makespan");
+        let d = s.segment_durations(&sim).unwrap();
+        assert!(d.iter().all(|&x| x >= 0.0));
+        assert!((d.iter().sum::<f64>() - sim.makespan_us).abs() < 1e-6);
+        // static meta stays exact for the fused run
+        assert_eq!(sim.msgs_by_sep, s.meta().msgs_by_sep);
+        assert_eq!(
+            sim.bytes_by_sep,
+            s.expected_bytes_by_sep(data.len() * 4).unwrap()
+        );
+    }
+
+    #[test]
+    fn ad_hoc_program_segment_gets_derived_meta() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let n = comm.size();
+        let mut ack = Program::new(n);
+        for r in 1..n {
+            ack.send(r, 0, 1, SendPart::Empty);
+        }
+        for r in 1..n {
+            ack.recv(0, r, 1, Merge::Discard);
+        }
+        let mut b = ScheduleBuilder::new(&comm);
+        b.add_program("ack", ack).unwrap();
+        let s = b.build().unwrap();
+        assert_eq!(s.meta().total_messages(), n as u64 - 1);
+        assert_eq!(s.segments()[0].meta.tree_edges_by_sep.iter().sum::<usize>(), 0);
+        // control traffic: zero predicted bytes
+        assert_eq!(
+            s.expected_bytes_by_sep(4096).unwrap().iter().sum::<u64>(),
+            0
+        );
+    }
+
+    #[test]
+    fn mismatched_segments_rejected() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let other = Communicator::world(&TopologySpec::paper_fig1());
+        let cache = PlanCache::new();
+        let plan = cache.get_or_build(&other, key(&other, OpKind::Bcast, 0)).unwrap();
+        let mut b = ScheduleBuilder::new(&comm);
+        // same shape, different epoch: cached plans must not cross
+        assert!(b.add_plan("x", &plan).is_err());
+        // wrong rank count
+        assert!(b.add_program("y", Program::new(3)).is_err());
+        // invalid in isolation (unbalanced send)
+        let mut bad = Program::new(comm.size());
+        bad.send(0, 1, 1, SendPart::Empty);
+        assert!(b.add_program("z", bad).is_err());
+        // stray markers would collide with the schedule's boundary ids
+        let mut marked = Program::new(comm.size());
+        marked.mark_all(0);
+        assert!(b.add_program("w", marked).is_err());
+    }
+}

@@ -18,6 +18,7 @@ static TREE_BUILDS: AtomicU64 = AtomicU64::new(0);
 static PROGRAM_COMPILES: AtomicU64 = AtomicU64::new(0);
 static PLAN_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
 static PLAN_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+static SIM_RUNS: AtomicU64 = AtomicU64::new(0);
 
 /// One strategy-tree construction (any [`crate::tree::Strategy`]).
 #[inline]
@@ -43,6 +44,13 @@ pub fn count_plan_miss() {
     PLAN_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
 }
 
+/// One `netsim::run` invocation (stage 3). Lets tests assert that fused
+/// schedules really execute as a *single* simulation.
+#[inline]
+pub fn count_sim_run() {
+    SIM_RUNS.fetch_add(1, Ordering::Relaxed);
+}
+
 /// Point-in-time view of all pipeline counters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Snapshot {
@@ -50,6 +58,7 @@ pub struct Snapshot {
     pub program_compiles: u64,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
+    pub sim_runs: u64,
 }
 
 impl Snapshot {
@@ -60,6 +69,7 @@ impl Snapshot {
             program_compiles: self.program_compiles - earlier.program_compiles,
             plan_cache_hits: self.plan_cache_hits - earlier.plan_cache_hits,
             plan_cache_misses: self.plan_cache_misses - earlier.plan_cache_misses,
+            sim_runs: self.sim_runs - earlier.sim_runs,
         }
     }
 }
@@ -71,6 +81,7 @@ pub fn snapshot() -> Snapshot {
         program_compiles: PROGRAM_COMPILES.load(Ordering::Relaxed),
         plan_cache_hits: PLAN_CACHE_HITS.load(Ordering::Relaxed),
         plan_cache_misses: PLAN_CACHE_MISSES.load(Ordering::Relaxed),
+        sim_runs: SIM_RUNS.load(Ordering::Relaxed),
     }
 }
 
@@ -86,6 +97,7 @@ mod tests {
         count_program_compile();
         count_plan_hit();
         count_plan_miss();
+        count_sim_run();
         let delta = snapshot().since(&before);
         // Other tests run concurrently in this process, so the deltas are
         // lower bounds, not exact counts.
@@ -93,5 +105,6 @@ mod tests {
         assert!(delta.program_compiles >= 2);
         assert!(delta.plan_cache_hits >= 1);
         assert!(delta.plan_cache_misses >= 1);
+        assert!(delta.sim_runs >= 1);
     }
 }

@@ -1,0 +1,54 @@
+//! Acceptance test for the fused Fig. 7 timing application: on a warm
+//! plan cache, one sweep point is **exactly one** `netsim::run` with
+//! **zero** tree builds and **zero** program compiles, asserted via the
+//! global stage counters in `util::counters`.
+//!
+//! Like `plan_pipeline.rs`, this is deliberately a single `#[test]` in
+//! its own binary: the counters are process-wide and `cargo test` runs
+//! tests within a binary concurrently — one test per binary makes the
+//! zero/exact-delta assertions race-free.
+
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::model::presets;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::counters;
+
+#[test]
+fn warm_fused_point_is_one_simulation_zero_builds_zero_compiles() {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let params = presets::paper_grid();
+    let engine = CollectiveEngine::new(&comm, params, Strategy::Multilevel);
+
+    // Cold prime at a different size: plans are payload-size-independent,
+    // so this warms every (root, bcast) plan the rotation needs.
+    let cold = gridcollect::coordinator::run_point_with(&engine, 4096).unwrap();
+    assert_eq!(engine.plan_cache().len(), comm.size(), "one bcast plan per root");
+
+    let before = counters::snapshot();
+    let warm = gridcollect::coordinator::run_point_with(&engine, 65536).unwrap();
+    let delta = counters::snapshot().since(&before);
+
+    assert_eq!(delta.tree_builds, 0, "warm fused point must not build trees");
+    assert_eq!(delta.program_compiles, 0, "warm fused point must not compile");
+    assert_eq!(delta.sim_runs, 1, "the whole rotation is ONE simulation");
+    assert_eq!(delta.plan_cache_misses, 0, "every plan served warm");
+    assert_eq!(delta.plan_cache_hits, comm.size() as u64, "one hit per root");
+    assert_eq!(engine.plan_cache().misses() as usize, engine.plan_cache().len());
+
+    // Sanity on the measurements themselves.
+    assert!(warm.total_us > cold.total_us, "64 KiB rotation slower than 4 KiB");
+    assert_eq!(warm.wan_msgs, comm.size() as u64, "multilevel: 1 WAN msg per bcast");
+
+    // The fused sweep still reproduces the paper's Fig. 8 ordering.
+    let total = |s: Strategy| {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        gridcollect::coordinator::run_point_with(&e, 65536).unwrap().total_us
+    };
+    let unaware = total(Strategy::Unaware);
+    let machine = total(Strategy::TwoLevelMachine);
+    let site = total(Strategy::TwoLevelSite);
+    let multi = total(Strategy::Multilevel);
+    assert!(multi < site && multi < machine, "multilevel fastest");
+    assert!(site < unaware && machine < unaware, "topology-aware beats binomial");
+}

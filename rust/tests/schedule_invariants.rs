@@ -1,0 +1,130 @@
+//! Schedule-subsystem invariants, for all four strategies of Fig. 8:
+//!
+//! 1. the fused rotation's simulated `msgs_by_sep` equals the sum of its
+//!    segments' static `PlanMeta` counts (and the schedule's aggregated
+//!    meta);
+//! 2. fused makespan ≤ sum of the separate per-phase makespans (fusion
+//!    can only overlap, never serialize more);
+//! 3. per-segment completion timestamps are monotone non-decreasing and
+//!    end at the fused makespan;
+//! 4. tag rebasing never collides: the fused program passes
+//!    `Program::validate` (per-channel send/recv balance) and segment
+//!    tag budgets are pairwise disjoint.
+//!
+//! All assertions are cache-local / result-local — nothing here reads
+//! the process-global stage counters, so these tests are immune to
+//! parallel-test interference.
+
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::coordinator::{rotation_schedule, run_point_separate, run_point_with};
+use gridcollect::model::presets;
+use gridcollect::netsim::Payload;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+
+const BYTES: usize = 16384;
+
+fn engine(comm: &Communicator, s: Strategy) -> CollectiveEngine<'_> {
+    CollectiveEngine::new(comm, presets::paper_grid(), s)
+}
+
+#[test]
+fn fused_message_counts_equal_segment_meta_sums() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    for s in Strategy::ALL {
+        let e = engine(&comm, s);
+        let schedule = rotation_schedule(&e).unwrap();
+        let mut init = vec![Payload::empty(); comm.size()];
+        init[0] = Payload::single(0, vec![1.0f32; BYTES / 4]);
+        let sim = e.run_schedule(&schedule, init).unwrap();
+        // aggregated meta is the exact fused accounting
+        assert_eq!(sim.msgs_by_sep, schedule.meta().msgs_by_sep, "{}", s.name());
+        // and it is precisely the sum over segments
+        let mut summed = vec![0u64; sim.msgs_by_sep.len()];
+        for seg in schedule.segments() {
+            for (acc, &m) in summed.iter_mut().zip(&seg.meta.msgs_by_sep) {
+                *acc += m;
+            }
+        }
+        assert_eq!(sim.msgs_by_sep, summed, "{}", s.name());
+        // byte prediction holds for the fused run too (bcast payload +
+        // zero-byte ack traffic)
+        assert_eq!(
+            sim.bytes_by_sep,
+            schedule.expected_bytes_by_sep(BYTES).unwrap(),
+            "{}",
+            s.name()
+        );
+    }
+}
+
+#[test]
+fn fused_makespan_never_exceeds_sum_of_separate_makespans() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    for s in Strategy::ALL {
+        let e = engine(&comm, s);
+        let fused = run_point_with(&e, BYTES).unwrap();
+        let separate = run_point_separate(&e, BYTES).unwrap();
+        assert!(
+            fused.total_us <= separate.total_us + 1e-6,
+            "{}: fused {} > separate {}",
+            s.name(),
+            fused.total_us,
+            separate.total_us
+        );
+        assert!(fused.total_us > 0.0, "{}", s.name());
+        // identical static accounting either way
+        assert_eq!(fused.wan_msgs, separate.wan_msgs, "{}", s.name());
+        assert_eq!(fused.total_msgs, separate.total_msgs, "{}", s.name());
+    }
+}
+
+#[test]
+fn segment_timestamps_are_monotone_and_end_at_makespan() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    for s in Strategy::ALL {
+        let e = engine(&comm, s);
+        let schedule = rotation_schedule(&e).unwrap();
+        let mut init = vec![Payload::empty(); comm.size()];
+        init[0] = Payload::single(0, vec![1.0f32; BYTES / 4]);
+        let sim = e.run_schedule(&schedule, init).unwrap();
+        let t = schedule.segment_completions(&sim).unwrap();
+        assert_eq!(t.len(), 2 * comm.size(), "{}", s.name());
+        for w in t.windows(2) {
+            assert!(w[0] <= w[1], "{}: timestamps regress: {w:?}", s.name());
+        }
+        assert!(
+            (t.last().unwrap() - sim.makespan_us).abs() < 1e-9,
+            "{}: last segment must end at the makespan",
+            s.name()
+        );
+        let d = schedule.segment_durations(&sim).unwrap();
+        assert!(d.iter().all(|&x| x >= -1e-9), "{}", s.name());
+        assert!(
+            (d.iter().sum::<f64>() - sim.makespan_us).abs() < 1e-6,
+            "{}",
+            s.name()
+        );
+    }
+}
+
+#[test]
+fn tag_rebasing_never_collides() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    for s in Strategy::ALL {
+        let e = engine(&comm, s);
+        let schedule = rotation_schedule(&e).unwrap();
+        // channel balance of the fused program (collisions would break it)
+        schedule.program().validate().unwrap();
+        // and the allocator never hands out overlapping budgets
+        for w in schedule.segments().windows(2) {
+            assert!(
+                w[0].tags.1 <= w[1].tags.0,
+                "{}: overlapping tag budgets {:?} vs {:?}",
+                s.name(),
+                w[0].tags,
+                w[1].tags
+            );
+        }
+    }
+}
