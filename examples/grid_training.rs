@@ -58,7 +58,7 @@ fn main() -> gridcollect::error::Result<()> {
     );
 
     for strategy in [Strategy::Unaware, Strategy::Multilevel] {
-        let cfg = TrainConfig { steps, lr: 0.2, strategy, seed: 0 };
+        let cfg = TrainConfig { steps, lr: 0.2, strategy, seed: 0, ..Default::default() };
         let t0 = std::time::Instant::now();
         let logs = train(&comm, &presets::paper_grid(), &mlp, combiner, &cfg)?;
         let wall = t0.elapsed().as_secs_f64();

@@ -40,23 +40,34 @@ fn main() {
     print!("{}", t.to_markdown());
     save_report("ablation_lambda_sweep", &t);
 
-    section("E9c — paper policy (flat WAN) vs prototype policy (all binomial)");
-    let mut t2 = Table::new(&["msg size", "flat WAN (paper §3.2)", "all binomial ([19] prototype)"]);
+    section("E9c — flat WAN (paper) vs all binomial vs distance-halving (bine)");
+    let mut t2 = Table::new(&[
+        "msg size",
+        "flat WAN (paper §3.2)",
+        "all binomial ([19] prototype)",
+        "distance-halving WAN (2508.17311)",
+    ]);
     for bytes in [1024usize, 16384, 262144, 1 << 20] {
         let data = vec![0.5f32; bytes / 4];
-        let flat = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
-            .with_policy(LevelPolicy::paper())
-            .bcast(0, &data)
-            .unwrap()
-            .sim
-            .makespan_us;
-        let bino = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
-            .with_policy(LevelPolicy::all_binomial())
-            .bcast(0, &data)
-            .unwrap()
-            .sim
-            .makespan_us;
-        t2.row(&[fmt::bytes(bytes), fmt::time_us(flat), fmt::time_us(bino)]);
+        let run_policy = |policy: LevelPolicy| {
+            CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
+                .with_policy(policy)
+                .bcast(0, &data)
+                .unwrap()
+                .sim
+                .makespan_us
+        };
+        let flat = run_policy(LevelPolicy::paper());
+        let bino = run_policy(LevelPolicy::all_binomial());
+        let dh = run_policy(LevelPolicy {
+            shapes: vec![TreeShape::DistanceHalving, TreeShape::Binomial],
+        });
+        t2.row(&[
+            fmt::bytes(bytes),
+            fmt::time_us(flat),
+            fmt::time_us(bino),
+            fmt::time_us(dh),
+        ]);
     }
     print!("{}", t2.to_markdown());
     save_report("ablation_policy", &t2);

@@ -14,6 +14,8 @@
 use gridcollect::benchkit::{save_bench_json, save_report, section, Bench};
 use gridcollect::collectives::CollectiveEngine;
 use gridcollect::coordinator::{experiment, timing_app};
+use gridcollect::netsim::ReduceOp;
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt::{self, Table};
 use std::time::Duration;
@@ -65,6 +67,56 @@ fn main() {
             },
         ));
     }
+
+    section("hybrid allreduce — fused per-level plan vs the uniform compositions");
+    let n = comm.size();
+    let policies = [
+        AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+        AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+        AlgoPolicy::hybrid(1),
+    ];
+    let mut hybrid_delta =
+        Table::new(&["msg size", "policy", "makespan", "WAN msgs", "total msgs"]);
+    for &bytes in &sizes {
+        let contributions: Vec<Vec<f32>> =
+            (0..n).map(|r| vec![r as f32; bytes / 4]).collect();
+        for policy in policies {
+            // Cold: fresh engine per iteration — composes the hybrid plan
+            // from scratch (cached reduce phase + delivery compile).
+            results.push(bench.run(
+                &format!("allreduce/cold/{}/{}", policy.name(), fmt::bytes(bytes)),
+                || {
+                    let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
+                    let o = e
+                        .allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions)
+                        .unwrap();
+                    std::hint::black_box(o.sim.makespan_us);
+                },
+            ));
+            // Warm: long-lived engine — pure payload setup + one run.
+            let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
+            e.allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions).unwrap();
+            results.push(bench.run(
+                &format!("allreduce/warm/{}/{}", policy.name(), fmt::bytes(bytes)),
+                || {
+                    let o = e
+                        .allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions)
+                        .unwrap();
+                    std::hint::black_box(o.sim.makespan_us);
+                },
+            ));
+            let o = e.allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions).unwrap();
+            hybrid_delta.row(&[
+                fmt::bytes(bytes),
+                policy.name(),
+                fmt::time_us(o.sim.makespan_us),
+                o.sim.wan_messages().to_string(),
+                o.sim.msgs_by_sep.iter().sum::<u64>().to_string(),
+            ]);
+        }
+    }
+    print!("{}", hybrid_delta.to_markdown());
+    save_report("hybrid_allreduce", &hybrid_delta);
 
     section("virtual-time delta (the §4 fidelity gap the fusion closes)");
     let delta = experiment::fig8_fused_vs_separate(

@@ -9,7 +9,7 @@
 use gridcollect::benchkit::{section, Bench};
 use gridcollect::collectives::programs;
 use gridcollect::netsim::ReduceOp;
-use gridcollect::plan::{AllreduceAlgo, OpKind, PlanCache, PlanKey};
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, OpKind, PlanCache, PlanKey};
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::{build_strategy_tree, LevelPolicy, Strategy, TreeShape};
 
@@ -68,12 +68,16 @@ fn main() {
     let ops = [
         OpKind::Bcast,
         OpKind::Reduce(ReduceOp::Sum),
-        OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceBcast),
-        OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceScatterAllgather),
+        OpKind::Allreduce(ReduceOp::Sum, AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)),
+        OpKind::Allreduce(
+            ReduceOp::Sum,
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+        ),
+        OpKind::Allreduce(ReduceOp::Sum, AlgoPolicy::hybrid(1)),
     ];
     for op in ops {
         let label = match op {
-            OpKind::Allreduce(_, algo) => format!("{}[{}]", op.name(), algo.name()),
+            OpKind::Allreduce(_, policy) => format!("{}[{}]", op.name(), policy.name()),
             _ => op.name().to_string(),
         };
         // Cold: a fresh cache every iteration — tree build + compile + meta.
@@ -98,7 +102,7 @@ fn main() {
         strategy: Strategy::Multilevel,
         policy: LevelPolicy::paper(),
         root: 0,
-        op: OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceBcast),
+        op: OpKind::Allreduce(ReduceOp::Sum, AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)),
         segments: 1,
     };
     bench.run("plan/cold/allreduce/512", || {

@@ -170,6 +170,10 @@ mod tests {
             assert!(text.contains("}},") || text.contains("},\n"), "comma between items");
             assert!(text.trim_end().ends_with('}'));
         }
+        // Don't leave the synthetic file behind: `cargo test` runs before
+        // the CI bench smoke step, and the whole bench-reports directory
+        // is uploaded as the trajectory-tracking artifact.
+        let _ = std::fs::remove_file("target/bench-reports/BENCH_benchkit_selftest.json");
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub struct Args {
 /// Flags that take a value (everything else beginning `--` is a switch).
 pub const VALUE_FLAGS: &[&str] = &[
     "sizes", "size", "steps", "lr", "strategy", "root", "spec", "sites", "machines", "procs",
-    "out", "artifacts", "seed", "shape", "params", "algo", "op",
+    "out", "artifacts", "seed", "shape", "params", "algo", "op", "boundary",
 ];
 
 impl Args {
@@ -99,7 +99,7 @@ impl Args {
         }
     }
 
-    /// Parse `--algo` (allreduce composition).
+    /// Parse `--algo` (uniform allreduce composition).
     pub fn allreduce_algo(
         &self,
         default: crate::plan::AllreduceAlgo,
@@ -113,6 +113,40 @@ impl Args {
             }
             Some(other) => {
                 Err(Error::Cli(format!("unknown allreduce algo '{other}' (use rb|rsag)")))
+            }
+        }
+    }
+
+    /// Parse `--algo` + `--boundary` into an allreduce [`AlgoPolicy`]:
+    /// `rb`/`rsag` are uniform compositions, `hybrid` pairs with
+    /// `--boundary N` (default 1 = reduce+bcast across the WAN only).
+    /// `--boundary` without `--algo hybrid` is rejected — silently
+    /// dropping it would run a different composition than requested.
+    pub fn algo_policy(
+        &self,
+        default: crate::plan::AlgoPolicy,
+    ) -> Result<crate::plan::AlgoPolicy> {
+        use crate::plan::{AlgoPolicy, AllreduceAlgo};
+        match self.get("algo") {
+            Some("hybrid") => Ok(AlgoPolicy::hybrid(self.get_usize("boundary", 1)?)),
+            algo => {
+                if self.get("boundary").is_some() {
+                    return Err(Error::Cli(
+                        "--boundary only applies to --algo hybrid".into(),
+                    ));
+                }
+                match algo {
+                    None => Ok(default),
+                    Some("rb") | Some("reduce-bcast") | Some("reduce+bcast") => {
+                        Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast))
+                    }
+                    Some("rsag") | Some("rs+ag") | Some("reduce-scatter-allgather") => {
+                        Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather))
+                    }
+                    Some(other) => Err(Error::Cli(format!(
+                        "unknown allreduce algo '{other}' (use rb|rsag|hybrid)"
+                    ))),
+                }
             }
         }
     }
@@ -204,6 +238,28 @@ mod tests {
         assert!(args("--algo bogus").allreduce_algo(AllreduceAlgo::ReduceBcast).is_err());
         assert_eq!(args("--op max").reduce_op(ReduceOp::Sum).unwrap(), ReduceOp::Max);
         assert!(args("--op bogus").reduce_op(ReduceOp::Sum).is_err());
+    }
+
+    #[test]
+    fn algo_policy_names() {
+        use crate::plan::{AlgoPolicy, AllreduceAlgo};
+        let rb = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast);
+        assert_eq!(args("").algo_policy(rb).unwrap(), rb);
+        assert_eq!(
+            args("--algo rsag").algo_policy(rb).unwrap(),
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather)
+        );
+        assert_eq!(args("--algo hybrid").algo_policy(rb).unwrap(), AlgoPolicy::hybrid(1));
+        assert_eq!(
+            args("--algo hybrid --boundary 2").algo_policy(rb).unwrap(),
+            AlgoPolicy::hybrid(2)
+        );
+        assert!(args("--algo bogus").algo_policy(rb).is_err());
+        assert!(args("--algo hybrid --boundary x").algo_policy(rb).is_err());
+        // --boundary without --algo hybrid would silently change the
+        // measured composition; reject it instead.
+        assert!(args("--boundary 2").algo_policy(rb).is_err());
+        assert!(args("--algo rsag --boundary 2").algo_policy(rb).is_err());
     }
 
     #[test]

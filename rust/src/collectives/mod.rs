@@ -15,7 +15,10 @@
 
 pub mod extended;
 pub mod programs;
+pub mod request;
 pub mod verify;
+
+pub use request::OpSpec;
 
 use crate::error::{Error, Result};
 use crate::model::NetworkParams;
@@ -23,7 +26,8 @@ use crate::netsim::{
     run, Combiner, NativeCombiner, Payload, Program, ReduceOp, SimConfig, SimResult,
 };
 use crate::plan::{
-    AllreduceAlgo, CollectivePlan, OpKind, PlanCache, PlanKey, Schedule, ScheduleBuilder,
+    AlgoPolicy, AllreduceAlgo, CollectivePlan, OpKind, PlanCache, PlanKey, Schedule,
+    ScheduleBuilder,
 };
 use crate::topology::{Communicator, Rank};
 use crate::tree::{LevelPolicy, Strategy};
@@ -43,6 +47,10 @@ pub struct Outcome {
 /// `(root, op, segmentation)` and memoized in a [`PlanCache`]; each call
 /// only constructs initial payloads and runs the simulator.
 ///
+/// Every operation is a typed [`request`] value driven through one
+/// generic path ([`CollectiveEngine::run`]); the named methods below are
+/// thin wrappers constructing those requests.
+///
 /// The cache is engine-private by default; use
 /// [`CollectiveEngine::with_plan_cache`] to share one across engines
 /// (plans are keyed by [`Communicator::epoch`], so a shared cache never
@@ -53,7 +61,7 @@ pub struct CollectiveEngine<'a> {
     combiner: &'a dyn Combiner,
     strategy: Strategy,
     policy: LevelPolicy,
-    allreduce_algo: AllreduceAlgo,
+    allreduce_policy: AlgoPolicy,
     cache: Arc<PlanCache>,
 }
 
@@ -66,7 +74,7 @@ impl<'a> CollectiveEngine<'a> {
             combiner: &NATIVE,
             strategy,
             policy: LevelPolicy::paper(),
-            allreduce_algo: AllreduceAlgo::ReduceBcast,
+            allreduce_policy: AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast),
             cache: Arc::new(PlanCache::new()),
         }
     }
@@ -93,9 +101,18 @@ impl<'a> CollectiveEngine<'a> {
         self
     }
 
-    /// Default composition used by [`CollectiveEngine::allreduce`].
+    /// Default composition used by [`CollectiveEngine::allreduce`]
+    /// (shorthand for a uniform [`AlgoPolicy`]).
     pub fn with_allreduce_algo(mut self, algo: AllreduceAlgo) -> Self {
-        self.allreduce_algo = algo;
+        self.allreduce_policy = AlgoPolicy::uniform(algo);
+        self
+    }
+
+    /// Default per-level allreduce composition policy used by
+    /// [`CollectiveEngine::allreduce`] — e.g. [`AlgoPolicy::hybrid`] for
+    /// reduce+bcast across the WAN with rs+ag inside the machines.
+    pub fn with_allreduce_policy(mut self, policy: AlgoPolicy) -> Self {
+        self.allreduce_policy = policy;
         self
     }
 
@@ -187,111 +204,80 @@ impl<'a> CollectiveEngine<'a> {
         run(self.comm.clustering(), prog, init, &self.cfg, self.combiner)
     }
 
-    /// MPI_Bcast: `data` flows from `root` to every rank.
-    /// `Outcome::data[r]` = the buffer received at rank `r`.
-    pub fn bcast(&self, root: Rank, data: &[f32]) -> Result<Outcome> {
-        let sim = self.bcast_sim(root, data)?;
-        let data = (0..self.comm.size())
-            .map(|r| sim.payloads[r].get_cloned(&root).unwrap_or_default())
-            .collect();
+    /// The generic request path every collective flows through:
+    /// encode the request's inputs, fetch (or build once) its plan,
+    /// simulate, decode the per-rank results.
+    ///
+    /// ```
+    /// use gridcollect::collectives::{request, CollectiveEngine};
+    /// use gridcollect::model::presets;
+    /// use gridcollect::topology::{Communicator, TopologySpec};
+    /// use gridcollect::tree::Strategy;
+    ///
+    /// let comm = Communicator::world(&TopologySpec::paper_fig1());
+    /// let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    /// let out = e.run(&request::Bcast { root: 0, data: &[1.0, 2.0] }).unwrap();
+    /// assert_eq!(out.data[5], vec![1.0, 2.0]);
+    /// ```
+    pub fn run(&self, request: &dyn OpSpec) -> Result<Outcome> {
+        let sim = self.run_sim(request)?;
+        let data = request.decode(self.comm, &sim)?;
         Ok(Outcome { sim, data })
     }
 
-    /// MPI_Bcast, measurement path: identical simulation, but skips
-    /// materializing per-rank owned copies of the delivered data (which
-    /// dominates wall-clock for large payloads — see EXPERIMENTS.md
-    /// §Perf). Delivered payloads remain inspectable (shared) in
-    /// `SimResult::payloads`.
-    pub fn bcast_sim(&self, root: Rank, data: &[f32]) -> Result<SimResult> {
-        let plan = self.plan_for(root, OpKind::Bcast, 1)?;
-        let mut init = vec![Payload::empty(); self.comm.size()];
-        init[root] = Payload::single(root, data.to_vec());
+    /// [`CollectiveEngine::run`], measurement path: identical simulation,
+    /// but skips decoding per-rank owned copies of the delivered data
+    /// (which dominates wall-clock for large payloads — see
+    /// EXPERIMENTS.md §Perf). Delivered payloads remain inspectable
+    /// (shared) in `SimResult::payloads`.
+    pub fn run_sim(&self, request: &dyn OpSpec) -> Result<SimResult> {
+        // Plan first: `plan_for` validates the root range, which encoders
+        // that index by root rely on.
+        let plan = self.plan_for(request.root(), request.op_kind(), request.segments())?;
+        let init = request.encode_init(self.comm)?;
         self.execute(&plan.program, init)
+    }
+
+    /// MPI_Bcast: `data` flows from `root` to every rank.
+    /// `Outcome::data[r]` = the buffer received at rank `r`.
+    pub fn bcast(&self, root: Rank, data: &[f32]) -> Result<Outcome> {
+        self.run(&request::Bcast { root, data })
+    }
+
+    /// MPI_Bcast, measurement path (see [`CollectiveEngine::run_sim`]).
+    pub fn bcast_sim(&self, root: Rank, data: &[f32]) -> Result<SimResult> {
+        self.run_sim(&request::Bcast { root, data })
     }
 
     /// MPI_Reduce: elementwise `op` over every rank's contribution, result
     /// at `root`. `Outcome::data[root]` = the reduced vector (non-roots
     /// hold their partials; MPI leaves them undefined).
     pub fn reduce(&self, root: Rank, op: ReduceOp, contributions: &[Vec<f32>]) -> Result<Outcome> {
-        self.check_contribs(contributions)?;
-        let plan = self.plan_for(root, OpKind::Reduce(op), 1)?;
-        let init: Vec<Payload> = contributions
-            .iter()
-            .map(|c| Payload::single(0, c.clone()))
-            .collect();
-        let sim = self.execute(&plan.program, init)?;
-        let data = (0..self.comm.size())
-            .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
-            .collect();
-        Ok(Outcome { sim, data })
+        self.run(&request::Reduce { root, op, contributions })
     }
 
     /// MPI_Barrier rooted at rank 0 (fan-in/fan-out).
     pub fn barrier(&self) -> Result<SimResult> {
-        let plan = self.plan_for(0, OpKind::Barrier, 1)?;
-        self.execute(&plan.program, vec![Payload::empty(); self.comm.size()])
+        self.run_sim(&request::Barrier)
     }
 
     /// MPI_Gather: rank `r`'s segment `contributions[r]` ends at `root`.
     /// `Outcome::data` = the per-rank segments as assembled at the root
     /// (rank order).
     pub fn gather(&self, root: Rank, contributions: &[Vec<f32>]) -> Result<Outcome> {
-        if contributions.len() != self.comm.size() {
-            return Err(Error::Comm(format!(
-                "gather: {} contributions for {} ranks",
-                contributions.len(),
-                self.comm.size()
-            )));
-        }
-        let plan = self.plan_for(root, OpKind::Gather, 1)?;
-        let init: Vec<Payload> = contributions
-            .iter()
-            .enumerate()
-            .map(|(r, c)| Payload::single(r, c.clone()))
-            .collect();
-        let sim = self.execute(&plan.program, init)?;
-        let root_payload = &sim.payloads[root];
-        if root_payload.len() != self.comm.size() {
-            return Err(Error::Verify(format!(
-                "gather root holds {} segments, expected {}",
-                root_payload.len(),
-                self.comm.size()
-            )));
-        }
-        let data = (0..self.comm.size())
-            .map(|r| root_payload.get_cloned(&r).expect("validated above"))
-            .collect();
-        Ok(Outcome { sim, data })
+        self.run(&request::Gather { root, contributions })
     }
 
     /// MPI_Scatter: `segments[r]` travels from `root` to rank `r`.
     /// `Outcome::data[r]` = the segment received at rank `r`.
     pub fn scatter(&self, root: Rank, segments: &[Vec<f32>]) -> Result<Outcome> {
-        if segments.len() != self.comm.size() {
-            return Err(Error::Comm(format!(
-                "scatter: {} segments for {} ranks",
-                segments.len(),
-                self.comm.size()
-            )));
-        }
-        let plan = self.plan_for(root, OpKind::Scatter, 1)?;
-        let mut root_payload = Payload::empty();
-        for (r, s) in segments.iter().enumerate() {
-            root_payload.union(Payload::single(r, s.clone())).map_err(Error::Sim)?;
-        }
-        let mut init = vec![Payload::empty(); self.comm.size()];
-        init[root] = root_payload;
-        let sim = self.execute(&plan.program, init)?;
-        let data = (0..self.comm.size())
-            .map(|r| sim.payloads[r].get_cloned(&r).unwrap_or_default())
-            .collect();
-        Ok(Outcome { sim, data })
+        self.run(&request::Scatter { root, segments })
     }
 
     /// All-reduce: every rank ends with the full reduction. Uses the
-    /// engine's default composition ([`AllreduceAlgo::ReduceBcast`]
-    /// unless overridden) rooted at rank 0. Used by the data-parallel
-    /// training driver.
+    /// engine's default composition policy (uniform reduce+bcast unless
+    /// overridden) rooted at rank 0. Used by the data-parallel training
+    /// driver.
     pub fn allreduce(&self, op: ReduceOp, contributions: &[Vec<f32>]) -> Result<Outcome> {
         self.allreduce_at(0, op, contributions)
     }
@@ -305,12 +291,12 @@ impl<'a> CollectiveEngine<'a> {
         op: ReduceOp,
         contributions: &[Vec<f32>],
     ) -> Result<Outcome> {
-        self.allreduce_with(self.allreduce_algo, root, op, contributions)
+        self.allreduce_with_policy(self.allreduce_policy, root, op, contributions)
     }
 
-    /// All-reduce with an explicit composition algorithm. Both algorithms
-    /// deliver bitwise-identical results (same tree, same combine order);
-    /// see [`AllreduceAlgo`] for the trade-off.
+    /// All-reduce with an explicit uniform composition algorithm. Both
+    /// algorithms deliver bitwise-identical results (same tree, same
+    /// combine order); see [`AllreduceAlgo`] for the trade-off.
     pub fn allreduce_with(
         &self,
         algo: AllreduceAlgo,
@@ -318,89 +304,28 @@ impl<'a> CollectiveEngine<'a> {
         op: ReduceOp,
         contributions: &[Vec<f32>],
     ) -> Result<Outcome> {
-        self.check_contribs(contributions)?;
-        let plan = self.plan_for(root, OpKind::Allreduce(op, algo), 1)?;
-        let n = self.comm.size();
-        match algo {
-            AllreduceAlgo::ReduceBcast => {
-                let init: Vec<Payload> = contributions
-                    .iter()
-                    .map(|c| Payload::single(0, c.clone()))
-                    .collect();
-                let sim = self.execute(&plan.program, init)?;
-                let data = (0..n)
-                    .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
-                    .collect();
-                Ok(Outcome { sim, data })
-            }
-            AllreduceAlgo::ReduceScatterAllgather => {
-                let len = contributions[0].len();
-                let ranges = chunk_ranges(len, n);
-                let init: Vec<Payload> = contributions
-                    .iter()
-                    .map(|c| {
-                        let mut pl = Payload::empty();
-                        for (q, &(lo, hi)) in ranges.iter().enumerate() {
-                            pl.union(Payload::single(q, c[lo..hi].to_vec()))
-                                .expect("distinct chunk keys");
-                        }
-                        pl
-                    })
-                    .collect();
-                let sim = self.execute(&plan.program, init)?;
-                let mut data = Vec::with_capacity(n);
-                for r in 0..n {
-                    let mut flat = Vec::with_capacity(len);
-                    for q in 0..n {
-                        let seg = sim.payloads[r].get(&q).ok_or_else(|| {
-                            Error::Verify(format!(
-                                "allreduce rs+ag: rank {r} missing chunk {q}"
-                            ))
-                        })?;
-                        flat.extend_from_slice(seg);
-                    }
-                    data.push(flat);
-                }
-                Ok(Outcome { sim, data })
-            }
-        }
+        self.allreduce_with_policy(AlgoPolicy::uniform(algo), root, op, contributions)
+    }
+
+    /// All-reduce with an explicit per-level composition policy — e.g.
+    /// [`AlgoPolicy::hybrid`] pays reduce+bcast's 2 messages per WAN edge
+    /// while keeping rs+ag's pipelined delivery inside the machines. All
+    /// policies deliver bitwise-identical results.
+    pub fn allreduce_with_policy(
+        &self,
+        policy: AlgoPolicy,
+        root: Rank,
+        op: ReduceOp,
+        contributions: &[Vec<f32>],
+    ) -> Result<Outcome> {
+        self.run(&request::Allreduce { root, op, policy, contributions })
     }
 
     /// Allgather (§6 extension): every rank contributes `contributions[r]`
     /// and ends with every segment. `Outcome::data[r]` = concatenation in
     /// rank order as assembled at rank `r`.
     pub fn allgather(&self, contributions: &[Vec<f32>]) -> Result<Outcome> {
-        if contributions.len() != self.comm.size() {
-            return Err(Error::Comm(format!(
-                "allgather: {} contributions for {} ranks",
-                contributions.len(),
-                self.comm.size()
-            )));
-        }
-        let plan = self.plan_for(0, OpKind::Allgather, 1)?;
-        let init: Vec<Payload> = contributions
-            .iter()
-            .enumerate()
-            .map(|(r, c)| Payload::single(r, c.clone()))
-            .collect();
-        let sim = self.execute(&plan.program, init)?;
-        let mut data = Vec::with_capacity(self.comm.size());
-        for r in 0..self.comm.size() {
-            let segs = &sim.payloads[r];
-            if segs.len() != self.comm.size() {
-                return Err(Error::Verify(format!(
-                    "allgather: rank {r} holds {} segments, expected {}",
-                    segs.len(),
-                    self.comm.size()
-                )));
-            }
-            let mut flat = Vec::new();
-            for q in 0..self.comm.size() {
-                flat.extend_from_slice(segs.get(&q).expect("validated above"));
-            }
-            data.push(flat);
-        }
-        Ok(Outcome { sim, data })
+        self.run(&request::Allgather { contributions })
     }
 
     /// Reduce-scatter (§6 extension): `contributions[r][q]` is rank `r`'s
@@ -411,63 +336,14 @@ impl<'a> CollectiveEngine<'a> {
         op: ReduceOp,
         contributions: &[Vec<Vec<f32>>],
     ) -> Result<Outcome> {
-        let n = self.comm.size();
-        if contributions.len() != n || contributions.iter().any(|c| c.len() != n) {
-            return Err(Error::Comm("reduce_scatter: need n x n segment matrix".into()));
-        }
-        let plan = self.plan_for(0, OpKind::ReduceScatter(op), 1)?;
-        let init: Vec<Payload> = contributions
-            .iter()
-            .map(|per_dst| {
-                let mut pl = Payload::empty();
-                for (q, seg) in per_dst.iter().enumerate() {
-                    pl.union(Payload::single(q, seg.clone())).expect("distinct keys");
-                }
-                pl
-            })
-            .collect();
-        let sim = self.execute(&plan.program, init)?;
-        let data = (0..n)
-            .map(|r| sim.payloads[r].get_cloned(&r).unwrap_or_default())
-            .collect();
-        Ok(Outcome { sim, data })
+        self.run(&request::ReduceScatter { op, contributions })
     }
 
     /// Personalized all-to-all (§6 extension): `sends[r][q]` travels from
     /// rank `r` to rank `q`. `Outcome::data[r]` = concatenation of what
     /// `r` received, in source order.
     pub fn alltoall(&self, sends: &[Vec<Vec<f32>>]) -> Result<Outcome> {
-        let n = self.comm.size();
-        if sends.len() != n || sends.iter().any(|s| s.len() != n) {
-            return Err(Error::Comm("alltoall: need n x n segment matrix".into()));
-        }
-        let plan = self.plan_for(0, OpKind::Alltoall, 1)?;
-        let init: Vec<Payload> = sends
-            .iter()
-            .enumerate()
-            .map(|(src, per_dst)| {
-                let mut pl = Payload::empty();
-                for (dst, seg) in per_dst.iter().enumerate() {
-                    pl.union(Payload::single(extended::a2a_key(n, src, dst), seg.clone()))
-                        .expect("distinct keys");
-                }
-                pl
-            })
-            .collect();
-        let sim = self.execute(&plan.program, init)?;
-        let mut data = Vec::with_capacity(n);
-        for dst in 0..n {
-            let mut flat = Vec::new();
-            for src in 0..n {
-                let key = extended::a2a_key(n, src, dst);
-                let seg = sim.payloads[dst].get(&key).ok_or_else(|| {
-                    Error::Verify(format!("alltoall: segment {src}->{dst} missing"))
-                })?;
-                flat.extend_from_slice(seg);
-            }
-            data.push(flat);
-        }
-        Ok(Outcome { sim, data })
+        self.run(&request::Alltoall { sends })
     }
 
     /// Segmented (pipelined) broadcast — van de Geijn (§5/§6). Splits
@@ -481,42 +357,23 @@ impl<'a> CollectiveEngine<'a> {
         data: &[f32],
         n_segments: usize,
     ) -> Result<Outcome> {
-        let segs = n_segments.clamp(1, data.len().max(1));
-        let plan = self.plan_for(root, OpKind::BcastSegmented, segs)?;
-        let mut root_payload = Payload::empty();
-        let chunk = data.len().div_ceil(segs);
-        for i in 0..segs {
-            let lo = (i * chunk).min(data.len());
-            let hi = ((i + 1) * chunk).min(data.len());
-            root_payload
-                .union(Payload::single(i, data[lo..hi].to_vec()))
-                .map_err(Error::Sim)?;
-        }
-        let mut init = vec![Payload::empty(); self.comm.size()];
-        init[root] = root_payload;
-        let sim = self.execute(&plan.program, init)?;
-        let data = (0..self.comm.size())
-            .map(|r| {
-                let mut flat = Vec::new();
-                for i in 0..segs {
-                    if let Some(s) = sim.payloads[r].get(&i) {
-                        flat.extend_from_slice(s);
-                    }
-                }
-                flat
-            })
-            .collect();
-        Ok(Outcome { sim, data })
+        self.run(&request::BcastSegmented { root, data, n_segments })
     }
 
     /// Empirical segment-size tuning (Kielmann's PLogP plan, §6): sweep
     /// candidate segment counts and return `(best_n_segments, best_us)`.
+    /// An empty candidate set is an error — there is no segmentation to
+    /// report, and silently returning `(1, inf)` would poison downstream
+    /// comparisons.
     pub fn tune_bcast_segments(
         &self,
         root: Rank,
         data: &[f32],
         candidates: &[usize],
     ) -> Result<(usize, f64)> {
+        if candidates.is_empty() {
+            return Err(Error::Comm("tune_bcast_segments: empty candidate set".into()));
+        }
         let mut best = (1usize, f64::INFINITY);
         for &s in candidates {
             let out = self.bcast_segmented(root, data, s)?;
@@ -526,33 +383,6 @@ impl<'a> CollectiveEngine<'a> {
         }
         Ok(best)
     }
-
-    fn check_contribs(&self, contributions: &[Vec<f32>]) -> Result<()> {
-        if contributions.len() != self.comm.size() {
-            return Err(Error::Comm(format!(
-                "{} contributions for {} ranks",
-                contributions.len(),
-                self.comm.size()
-            )));
-        }
-        let len = contributions[0].len();
-        if contributions.iter().any(|c| c.len() != len) {
-            return Err(Error::Comm("ragged contributions".into()));
-        }
-        Ok(())
-    }
-}
-
-/// Split `len` elements into `n` contiguous chunks (ceil-sized; trailing
-/// chunks may be empty). Every rank derives identical bounds, so chunk
-/// `q` is globally consistent — the §3.2 determinism requirement applied
-/// to payload segmentation.
-fn chunk_ranges(len: usize, n: usize) -> Vec<(usize, usize)> {
-    let n = n.max(1);
-    let chunk = len.div_ceil(n);
-    (0..n)
-        .map(|q| ((q * chunk).min(len), ((q + 1) * chunk).min(len)))
-        .collect()
 }
 
 #[cfg(test)]
@@ -795,15 +625,45 @@ mod tests {
     }
 
     #[test]
-    fn chunk_ranges_cover_and_partition() {
-        for (len, n) in [(0usize, 4usize), (1, 4), (5, 4), (8, 4), (9, 4), (20, 1)] {
-            let rs = chunk_ranges(len, n);
-            assert_eq!(rs.len(), n);
-            assert_eq!(rs[0].0, 0);
-            assert_eq!(rs[n - 1].1, len);
-            for w in rs.windows(2) {
-                assert_eq!(w[0].1, w[1].0, "contiguous");
-            }
-        }
+    fn tune_bcast_segments_rejects_empty_candidates() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let e = engine(Strategy::Multilevel, &comm);
+        let data = vec![1.0f32; 64];
+        assert!(e.tune_bcast_segments(0, &data, &[]).is_err());
+        let (best, us) = e.tune_bcast_segments(0, &data, &[1, 4]).unwrap();
+        assert!(best == 1 || best == 4);
+        assert!(us.is_finite());
+    }
+
+    #[test]
+    fn hybrid_policy_through_the_engine() {
+        let spec = TopologySpec::paper_experiment();
+        let comm = Communicator::world(&spec);
+        let e = engine(Strategy::Multilevel, &comm);
+        let contributions: Vec<Vec<f32>> = (0..comm.size())
+            .map(|r| (0..32).map(|i| ((r + i) % 5) as f32).collect())
+            .collect();
+        let rb = e
+            .allreduce_with(AllreduceAlgo::ReduceBcast, 0, ReduceOp::Sum, &contributions)
+            .unwrap();
+        let rsag = e
+            .allreduce_with(
+                AllreduceAlgo::ReduceScatterAllgather,
+                0,
+                ReduceOp::Sum,
+                &contributions,
+            )
+            .unwrap();
+        let hybrid = e
+            .allreduce_with_policy(AlgoPolicy::hybrid(1), 0, ReduceOp::Sum, &contributions)
+            .unwrap();
+        assert_eq!(hybrid.data, rb.data, "bitwise-identical results");
+        assert_eq!(hybrid.sim.wan_messages(), rb.sim.wan_messages());
+        assert!(hybrid.sim.wan_messages() < rsag.sim.wan_messages());
+        // Engine default policy is settable to the hybrid.
+        let e2 = engine(Strategy::Multilevel, &comm).with_allreduce_policy(AlgoPolicy::hybrid(1));
+        let out = e2.allreduce(ReduceOp::Sum, &contributions).unwrap();
+        assert_eq!(out.data, rb.data);
     }
 }

@@ -8,6 +8,8 @@
 
 use crate::error::Result;
 use crate::netsim::{Merge, Program, ReduceOp, SendPart};
+use crate::plan::AlgoPolicy;
+use crate::topology::{Clustering, Rank};
 use crate::tree::Tree;
 use crate::util::counters::count_program_compile;
 
@@ -112,72 +114,248 @@ pub fn scatter(tree: &Tree, tag: u64) -> Result<Program> {
     Ok(p)
 }
 
-// NOTE: there is deliberately no `allreduce` compiler here. The
-// reduce+bcast composition is built exactly once, in
-// `plan::PlanCache::build`, by concatenating the *cached* reduce and
-// bcast plans with `Program::rebase_tags` — a second standalone
-// implementation would inevitably drift from it.
+// NOTE: `allreduce` below is the one total composition authority: the
+// up phase is always the [`reduce`] dataflow and the delivery phase is
+// [`allreduce_down`], glued with `Program::rebase_tags`. The plan cache
+// builds the same shape from *cached* phase programs (see
+// `plan::PlanCache::build`) so warm composition never recompiles.
 
-/// All-reduce via reduce-scatter + allgather over one tree — the
-/// segmented-delivery composition ([`crate::plan::AllreduceAlgo`]).
+/// Coalesce a rank set into sorted, disjoint half-open `[lo, hi)` runs.
 ///
-/// Inputs are the same per-destination segment maps `reduce_scatter`
-/// uses: rank `r` starts with `{q: chunk_q(contribution_r)}` for every
-/// destination `q`, and ends holding every reduced chunk. Three phases
-/// over the same tree:
-///
-/// 1. **up** (`tag`): full segment maps combine toward the root, child
-///    order — the same elementwise fold as [`reduce`], so the result is
-///    bitwise identical to the reduce+bcast composition;
-/// 2. **scatter-down** (`tag+1`): each edge `(p, c)` delivers exactly
-///    `subtree(c)`'s reduced chunks (the reduce-scatter half);
-/// 3. **complement-down** (`tag+2`): each edge delivers the chunks
-///    *outside* `subtree(c)` (the allgather half). No up-phase is needed:
-///    after phase 2 every ancestor already holds its descendants' chunks.
-///
-/// Total bytes per edge equal the reduce+bcast composition's (the full
-/// vector must cross every edge once per direction either way), but the
-/// down-traffic is split into two messages, so a child can forward its
-/// subtree's chunks before the complement arrives — pipelining that
-/// shortens deep-tree makespans at the price of n-1 extra (small)
-/// messages.
-pub fn allreduce_rsag(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
-    count_program_compile();
-    let n = tree.capacity();
-    let members: Vec<usize> = tree.preorder();
-    let mut p = Program::new(n);
-    // Phase 1: combine full maps up (identical dataflow to `reduce`).
-    for &r in &members {
-        for &c in tree.children(r) {
-            p.recv(r, c, tag, Merge::Combine(op));
-        }
-        if let Some(parent) = tree.parent(r) {
-            p.send(r, parent, tag, SendPart::All);
+/// Topology-aware subtrees span rank-contiguous clusters, so the result
+/// is typically a handful of intervals — the payload-routing currency of
+/// [`SendPart::Ranges`], replacing O(n) rank lists (the ROADMAP 10k-rank
+/// scale item).
+pub fn rank_runs(ranks: &[Rank]) -> Vec<(Rank, Rank)> {
+    let mut sorted: Vec<Rank> = ranks.to_vec();
+    sorted.sort_unstable();
+    let mut runs: Vec<(Rank, Rank)> = Vec::new();
+    for r in sorted {
+        match runs.last_mut() {
+            Some(last) if last.1 == r => last.1 = r + 1,
+            _ => runs.push((r, r + 1)),
         }
     }
-    // Phases 2+3 interleaved per rank so subtree chunks can be forwarded
-    // to grandchildren before the complement arrives from the parent.
-    for &r in &members {
-        if let Some(parent) = tree.parent(r) {
-            // Replace: drops the partial map kept from phase 1.
-            p.recv(r, parent, tag + 1, Merge::Replace);
+    runs
+}
+
+/// Intervals of `universe` not covered by `sub` — both sorted and
+/// disjoint, with every `sub` run lying inside some `universe` run
+/// (subtree ⊆ members, the tree invariant). Keeps the interval-addressed
+/// complement exactly equal to the member-set complement the rank-list
+/// fallback computes, even for trees over a subset of the rank space.
+pub fn subtract_runs(universe: &[(Rank, Rank)], sub: &[(Rank, Rank)]) -> Vec<(Rank, Rank)> {
+    let mut out = Vec::new();
+    let mut si = 0usize;
+    for &(ulo, uhi) in universe {
+        let mut lo = ulo;
+        while si < sub.len() && sub[si].0 < uhi {
+            let (slo, shi) = sub[si];
+            debug_assert!(slo >= lo && shi <= uhi, "sub runs must lie within the universe");
+            if slo > lo {
+                out.push((lo, slo));
+            }
+            lo = shi;
+            si += 1;
         }
-        for &c in tree.children(r) {
-            p.send(r, c, tag + 1, SendPart::Ranks(tree.subtree(c)));
+        if lo < uhi {
+            out.push((lo, uhi));
         }
-        if let Some(parent) = tree.parent(r) {
-            p.recv(r, parent, tag + 2, Merge::Union);
-        }
-        for &c in tree.children(r) {
-            let inside: std::collections::HashSet<usize> =
-                tree.subtree(c).into_iter().collect();
-            let complement: Vec<usize> =
+    }
+    out
+}
+
+/// How split (subtree/complement) delivery messages address their chunk
+/// keys.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkParts {
+    /// Coalesced half-open key intervals ([`SendPart::Ranges`]) — O(runs)
+    /// per edge; the default.
+    Intervals,
+    /// Explicit rank lists ([`SendPart::Ranks`]) — the legacy O(n)-per-
+    /// edge construction, kept as a fallback and as the reference for the
+    /// equal-wire-bytes test.
+    RankList,
+}
+
+/// Subtree-chunks and complement send parts for one split edge, built
+/// from a single `tree.subtree(c)` enumeration. Both addressing modes
+/// select exactly `members ∖ subtree(c)` for the complement.
+fn split_parts(
+    tree: &Tree,
+    c: Rank,
+    members: &[Rank],
+    member_runs: &[(Rank, Rank)],
+    parts: ChunkParts,
+) -> (SendPart, SendPart) {
+    let sub = tree.subtree(c);
+    match parts {
+        ChunkParts::RankList => {
+            let inside: std::collections::HashSet<Rank> = sub.iter().copied().collect();
+            let comp: Vec<Rank> =
                 members.iter().copied().filter(|m| !inside.contains(m)).collect();
-            p.send(r, c, tag + 2, SendPart::Ranks(complement));
+            (SendPart::Ranks(sub), SendPart::Ranks(comp))
+        }
+        ChunkParts::Intervals => {
+            let runs = rank_runs(&sub);
+            let comp = subtract_runs(member_runs, &runs);
+            (SendPart::Ranges(runs), SendPart::Ranges(comp))
+        }
+    }
+}
+
+/// Delivery (down) phase of the chunked multilevel allreduce, with a
+/// per-edge composition switch: tree edges at separation level
+/// `<= boundary_level` carry the whole reduced map in **one** full-map
+/// message (the reduce+bcast structure — 2 messages per edge across the
+/// whole allreduce); deeper edges split delivery into a subtree-chunks
+/// message and a complement message (the rs+ag structure — pipelined, 3
+/// messages per edge). `boundary_level == 0` is uniform rs+ag delivery;
+/// `usize::MAX` is uniform bcast delivery.
+///
+/// Composed after the [`reduce`] up phase (see [`allreduce`]); every
+/// rank finishes holding every member's reduced chunk regardless of the
+/// boundary, so results are independent of the policy.
+pub fn allreduce_down(
+    tree: &Tree,
+    clustering: &Clustering,
+    boundary_level: usize,
+    tag: u64,
+) -> Result<Program> {
+    allreduce_down_with(tree, clustering, boundary_level, tag, ChunkParts::Intervals)
+}
+
+/// [`allreduce_down`] with an explicit chunk-addressing mode (interval
+/// default vs rank-list fallback).
+pub fn allreduce_down_with(
+    tree: &Tree,
+    clustering: &Clustering,
+    boundary_level: usize,
+    tag: u64,
+    parts: ChunkParts,
+) -> Result<Program> {
+    count_program_compile();
+    let n = tree.capacity();
+    let members: Vec<Rank> = tree.preorder();
+    let member_runs = rank_runs(&members);
+    let full_map = |a: Rank, b: Rank| clustering.sep(a, b) <= boundary_level;
+    let mut p = Program::new(n);
+    for &r in &members {
+        // Full-map parent edges deliver everything right here; split
+        // parent edges deliver the subtree chunks (Replace drops the
+        // partial map kept from the up phase either way).
+        if let Some(parent) = tree.parent(r) {
+            p.recv(r, parent, tag, Merge::Replace);
+        }
+        // Subtree chunks flow on to grandchildren before the complement
+        // arrives — the rs+ag pipelining, preserved per split edge. The
+        // complement part of each split edge is built here too (one
+        // subtree enumeration per edge) and sent after the Union recv.
+        let mut complements: Vec<SendPart> = Vec::new();
+        for &c in tree.children(r) {
+            if !full_map(r, c) {
+                let (sub, comp) = split_parts(tree, c, &members, &member_runs, parts);
+                p.send(r, c, tag, sub);
+                complements.push(comp);
+            }
+        }
+        if let Some(parent) = tree.parent(r) {
+            if !full_map(parent, r) {
+                p.recv(r, parent, tag + 1, Merge::Union);
+            }
+        }
+        // From here `r` holds every member's chunk: complement sends for
+        // split edges, single full-map sends for boundary edges.
+        let mut complements = complements.into_iter();
+        for &c in tree.children(r) {
+            if full_map(r, c) {
+                p.send(r, c, tag, SendPart::All);
+            } else {
+                let comp = complements.next().expect("one complement per split child");
+                p.send(r, c, tag + 1, comp);
+            }
         }
     }
     p.validate()?;
     Ok(p)
+}
+
+/// All-reduce over one tree under an [`AlgoPolicy`] — the total compiler
+/// behind `OpKind::Allreduce`.
+///
+/// Inputs are the per-destination chunk maps `reduce_scatter` uses: rank
+/// `r` starts with `{q: chunk_q(contribution_r)}` for every destination
+/// `q`, and ends holding every reduced chunk. Two phases, glued with a
+/// tag rebase:
+///
+/// 1. **up**: full chunk maps combine toward the root in child order —
+///    the exact [`reduce`] dataflow, so every policy's result is bitwise
+///    identical (same tree, same combine association);
+/// 2. **down**: [`allreduce_down`] at the policy's boundary — full-map
+///    messages on the slow (WAN-side) edges, split subtree/complement
+///    messages below.
+///
+/// Total bytes per edge are policy-independent (the full vector crosses
+/// every edge once per direction either way); the policy only moves the
+/// split/full trade-off: splitting pipelines interior forwarding at the
+/// price of one extra message per edge — worth it on fast links, waste
+/// on high-latency WAN hops. The uniform reduce+bcast policy is *not*
+/// compiled here but composed from the cached reduce and bcast plans by
+/// `plan::PlanCache::build` (identical structure, zero recompiles); this
+/// function still accepts it for standalone use.
+pub fn allreduce(
+    tree: &Tree,
+    clustering: &Clustering,
+    op: ReduceOp,
+    policy: AlgoPolicy,
+    tag: u64,
+) -> Result<Program> {
+    compose_allreduce(tree, clustering, op, policy.boundary(), tag, ChunkParts::Intervals)
+}
+
+/// The one compose sequence both public allreduce compilers share:
+/// reduce up-phase, per-level delivery, tag rebase, re-validate.
+fn compose_allreduce(
+    tree: &Tree,
+    clustering: &Clustering,
+    op: ReduceOp,
+    boundary_level: usize,
+    tag: u64,
+    parts: ChunkParts,
+) -> Result<Program> {
+    let mut p = reduce(tree, op, tag)?;
+    let down = allreduce_down_with(tree, clustering, boundary_level, tag, parts)?;
+    let delta = p.max_tag() + 1;
+    p.then(down.rebased(delta))?;
+    p.validate()?;
+    Ok(p)
+}
+
+/// All-reduce via reduce-scatter + allgather over one tree — uniform
+/// split delivery on every edge ([`AlgoPolicy::Uniform`] rs+ag),
+/// interval-addressed.
+pub fn allreduce_rsag(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
+    allreduce(
+        tree,
+        &Clustering::flat(tree.capacity()),
+        op,
+        AlgoPolicy::uniform(crate::plan::AllreduceAlgo::ReduceScatterAllgather),
+        tag,
+    )
+}
+
+/// [`allreduce_rsag`] with the legacy rank-list chunk addressing — the
+/// `SendPart::Ranks` fallback kept for comparison; wire bytes are
+/// identical to the interval construction (asserted in tests).
+pub fn allreduce_rsag_ranklist(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
+    compose_allreduce(
+        tree,
+        &Clustering::flat(tree.capacity()),
+        op,
+        0,
+        tag,
+        ChunkParts::RankList,
+    )
 }
 
 #[cfg(test)]
@@ -318,7 +496,7 @@ mod tests {
     fn allreduce_everyone_gets_total() {
         // The reduce+bcast composition, built the way the plan cache
         // builds it: cached-phase programs concatenated with a tag
-        // rebase (no dedicated compiler exists — see module note).
+        // rebase (see module note — `allreduce` composes the same shape).
         let ids: Vec<Rank> = (0..5).collect();
         let t = TreeShape::Binomial.build(5, &ids, 0).unwrap();
         let c = Clustering::flat(5);
@@ -364,6 +542,107 @@ mod tests {
                 assert_eq!(r.payloads[rank].get(&q).unwrap(), expect, "rank {rank} chunk {q}");
             }
         }
+    }
+
+    #[test]
+    fn rank_runs_coalesce() {
+        assert_eq!(rank_runs(&[3, 1, 2, 7, 8]), vec![(1, 4), (7, 9)]);
+        assert_eq!(rank_runs(&[5]), vec![(5, 6)]);
+        assert_eq!(rank_runs(&[]), Vec::<(Rank, Rank)>::new());
+    }
+
+    #[test]
+    fn subtract_runs_is_the_member_set_difference() {
+        // Contiguous universe: plain interval complement.
+        assert_eq!(
+            subtract_runs(&[(0, 10)], &[(1, 4), (7, 9)]),
+            vec![(0, 1), (4, 7), (9, 10)]
+        );
+        // Gapped universe (subset tree): holes never enter the complement.
+        assert_eq!(subtract_runs(&[(0, 2), (5, 9)], &[(6, 8)]), vec![(0, 2), (5, 6), (8, 9)]);
+        assert_eq!(subtract_runs(&[(0, 2), (5, 9)], &[(0, 2)]), vec![(5, 9)]);
+        assert_eq!(subtract_runs(&[(0, 3)], &[(0, 3)]), Vec::<(Rank, Rank)>::new());
+        assert_eq!(subtract_runs(&[(0, 3)], &[]), vec![(0, 3)]);
+    }
+
+    /// Build the chunked (`{q: chunk_q}` per rank) initial payloads the
+    /// rs+ag/hybrid compositions operate on.
+    fn chunked_init(n: usize) -> Vec<Payload> {
+        (0..n)
+            .map(|r| {
+                let mut pl = Payload::empty();
+                for q in 0..n {
+                    pl.union(Payload::single(q, vec![(r * n + q) as f32, 1.0])).unwrap();
+                }
+                pl
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rsag_intervals_and_ranklist_identical_on_the_wire() {
+        // The interval construction must be a pure representation change:
+        // same messages, same bytes per level, same delivered payloads,
+        // same virtual time as the legacy rank-list fallback.
+        let spec = TopologySpec::paper_fig1();
+        let c = spec.clustering();
+        let t = crate::tree::build_multilevel(&c, 3, &crate::tree::LevelPolicy::paper()).unwrap();
+        let n = c.n_ranks();
+        let cfg = SimConfig::new(presets::paper_grid());
+        let pi = allreduce_rsag(&t, ReduceOp::Sum, 100).unwrap();
+        let pl = allreduce_rsag_ranklist(&t, ReduceOp::Sum, 100).unwrap();
+        let ri = run(&c, &pi, chunked_init(n), &cfg, &NativeCombiner).unwrap();
+        let rl = run(&c, &pl, chunked_init(n), &cfg, &NativeCombiner).unwrap();
+        assert_eq!(ri.bytes_by_sep, rl.bytes_by_sep, "equal wire bytes per level");
+        assert_eq!(ri.msgs_by_sep, rl.msgs_by_sep);
+        assert_eq!(ri.payloads, rl.payloads, "identical delivery");
+        assert!((ri.makespan_us - rl.makespan_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hybrid_down_is_full_map_at_the_wan_and_split_below() {
+        let spec = TopologySpec::paper_fig1();
+        let c = spec.clustering();
+        let t = crate::tree::build_multilevel(&c, 0, &crate::tree::LevelPolicy::paper()).unwrap();
+        let n = c.n_ranks();
+        let cfg = SimConfig::new(presets::paper_grid());
+        let hybrid = allreduce(&t, &c, ReduceOp::Sum, AlgoPolicy::hybrid(1), 50).unwrap();
+        let rsag = allreduce_rsag(&t, ReduceOp::Sum, 50).unwrap();
+        let rh = run(&c, &hybrid, chunked_init(n), &cfg, &NativeCombiner).unwrap();
+        let rr = run(&c, &rsag, chunked_init(n), &cfg, &NativeCombiner).unwrap();
+        // Fig. 4 tree: exactly one WAN edge. Hybrid: 1 up + 1 full-map
+        // down = 2 WAN messages; uniform rs+ag pays 3.
+        assert_eq!(rh.wan_messages(), 2, "reduce+bcast structure at the WAN");
+        assert_eq!(rr.wan_messages(), 3, "split structure everywhere");
+        // Same total bytes either way (full vector per edge per direction).
+        assert_eq!(
+            rh.bytes_by_sep.iter().sum::<u64>(),
+            rr.bytes_by_sep.iter().sum::<u64>()
+        );
+        // Identical delivery: every rank holds every reduced chunk.
+        assert_eq!(rh.payloads, rr.payloads);
+        for r in 0..n {
+            assert_eq!(rh.payloads[r].len(), n, "rank {r} holds all chunks");
+        }
+    }
+
+    #[test]
+    fn hybrid_boundary_extremes_match_uniform_structures() {
+        let spec = TopologySpec::paper_fig1();
+        let c = spec.clustering();
+        let t = crate::tree::build_multilevel(&c, 0, &crate::tree::LevelPolicy::paper()).unwrap();
+        let n = c.n_ranks();
+        let cfg = SimConfig::new(presets::paper_grid());
+        let sim_of = |p: &Program| run(&c, p, chunked_init(n), &cfg, &NativeCombiner).unwrap();
+        // boundary 0 == uniform rs+ag message structure.
+        let h0 = allreduce(&t, &c, ReduceOp::Sum, AlgoPolicy::hybrid(0), 1).unwrap();
+        let rsag = allreduce_rsag(&t, ReduceOp::Sum, 1).unwrap();
+        assert_eq!(sim_of(&h0).msgs_by_sep, sim_of(&rsag).msgs_by_sep);
+        // boundary >= n_levels == uniform reduce+bcast structure: two
+        // messages per tree edge.
+        let hmax = allreduce(&t, &c, ReduceOp::Sum, AlgoPolicy::hybrid(9), 1).unwrap();
+        let sim = sim_of(&hmax);
+        assert_eq!(sim.msgs_by_sep.iter().sum::<u64>(), 2 * (n as u64 - 1));
     }
 
     #[test]

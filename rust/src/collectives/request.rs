@@ -1,0 +1,645 @@
+//! The typed collective-request path: one value per call, one generic
+//! engine entry point.
+//!
+//! Every collective is described by a **request** — a small struct
+//! borrowing the caller's inputs — that implements [`OpSpec`]. The spec
+//! answers the four questions the pipeline asks of any operation:
+//!
+//! 1. *which plan?* — [`OpSpec::op_kind`] (+ root + segments) keys the
+//!    [`crate::plan::PlanCache`] lookup;
+//! 2. *which program?* — [`OpSpec::compile`] lowers a tree to simulator
+//!    IR (the plan cache calls the same total dispatch, so specs never
+//!    bypass memoization);
+//! 3. *which bytes in?* — [`OpSpec::encode_init`] validates inputs and
+//!    builds the per-rank initial payload registers;
+//! 4. *which data out?* — [`OpSpec::decode`] extracts per-rank results
+//!    from the finished [`SimResult`] (and [`OpSpec::bytes_model`]
+//!    predicts traffic statically where well-defined).
+//!
+//! [`crate::collectives::CollectiveEngine::run`] is the single generic
+//! driver: `plan_for(spec) → encode → simulate → decode`. The engine's
+//! named methods (`bcast`, `reduce`, …) are thin wrappers constructing
+//! these requests, so a new operation is a new `OpSpec` impl — not an
+//! eleventh hand-rolled engine method duplicating payload construction,
+//! validation and result extraction.
+
+use crate::error::{Error, Result};
+use crate::netsim::{Payload, Program, ReduceOp, SimResult};
+use crate::plan::{AlgoPolicy, BytesModel, OpKind};
+use crate::topology::{Clustering, Communicator, Rank};
+use crate::tree::Tree;
+
+use super::extended::a2a_key;
+
+/// A typed collective request: everything one call needs, in one value.
+///
+/// Implementations are cheap, borrow their inputs, and are consumed by
+/// [`crate::collectives::CollectiveEngine::run`] /
+/// [`crate::collectives::CollectiveEngine::run_sim`].
+pub trait OpSpec {
+    /// Which plan this request compiles to (cache-key component).
+    fn op_kind(&self) -> OpKind;
+
+    /// Tree root the plan is built at (cache-key component).
+    fn root(&self) -> Rank {
+        0
+    }
+
+    /// Pipelining chunk count (cache-key component; 1 = unsegmented).
+    fn segments(&self) -> usize {
+        1
+    }
+
+    /// Validate the inputs and build every rank's initial payload
+    /// register.
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>>;
+
+    /// Extract the per-rank result data from a finished simulation.
+    fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>>;
+
+    /// Lower a communication tree to the simulator program implementing
+    /// this op — the same total dispatch the plan cache compiles through,
+    /// so a spec's program and its cached plan can never drift.
+    fn compile(&self, clustering: &Clustering, tree: &Tree, tag: u64) -> Result<Program> {
+        self.op_kind().compile(clustering, tree, self.segments(), tag)
+    }
+
+    /// Static byte-prediction model (see [`BytesModel`]).
+    fn bytes_model(&self) -> BytesModel {
+        self.op_kind().bytes_model()
+    }
+
+    /// Display name.
+    fn name(&self) -> &'static str {
+        self.op_kind().name()
+    }
+}
+
+/// Equal-count, equal-length contribution validation shared by the
+/// reduction-style requests.
+fn check_contribs(comm: &Communicator, contributions: &[Vec<f32>]) -> Result<()> {
+    if contributions.len() != comm.size() {
+        return Err(Error::Comm(format!(
+            "{} contributions for {} ranks",
+            contributions.len(),
+            comm.size()
+        )));
+    }
+    let len = contributions[0].len();
+    if contributions.iter().any(|c| c.len() != len) {
+        return Err(Error::Comm("ragged contributions".into()));
+    }
+    Ok(())
+}
+
+/// Split `len` elements into `n` contiguous chunks (ceil-sized; trailing
+/// chunks may be empty). Every rank derives identical bounds, so chunk
+/// `q` is globally consistent — the §3.2 determinism requirement applied
+/// to payload segmentation.
+pub(crate) fn chunk_ranges(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let n = n.max(1);
+    let chunk = len.div_ceil(n);
+    (0..n)
+        .map(|q| ((q * chunk).min(len), ((q + 1) * chunk).min(len)))
+        .collect()
+}
+
+/// MPI_Bcast: `data` flows from `root` to every rank.
+/// Decoded `data[r]` = the buffer received at rank `r`.
+pub struct Bcast<'a> {
+    pub root: Rank,
+    pub data: &'a [f32],
+}
+
+impl OpSpec for Bcast<'_> {
+    fn op_kind(&self) -> OpKind {
+        OpKind::Bcast
+    }
+
+    fn root(&self) -> Rank {
+        self.root
+    }
+
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
+        let mut init = vec![Payload::empty(); comm.size()];
+        init[self.root] = Payload::single(self.root, self.data.to_vec());
+        Ok(init)
+    }
+
+    fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        Ok((0..comm.size())
+            .map(|r| sim.payloads[r].get_cloned(&self.root).unwrap_or_default())
+            .collect())
+    }
+}
+
+/// MPI_Reduce: elementwise `op` over every rank's contribution, result
+/// at `root`. Decoded `data[root]` = the reduced vector (non-roots hold
+/// their partials; MPI leaves them undefined).
+pub struct Reduce<'a> {
+    pub root: Rank,
+    pub op: ReduceOp,
+    pub contributions: &'a [Vec<f32>],
+}
+
+impl OpSpec for Reduce<'_> {
+    fn op_kind(&self) -> OpKind {
+        OpKind::Reduce(self.op)
+    }
+
+    fn root(&self) -> Rank {
+        self.root
+    }
+
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
+        check_contribs(comm, self.contributions)?;
+        let init: Vec<Payload> = self
+            .contributions
+            .iter()
+            .map(|c| Payload::single(0, c.clone()))
+            .collect();
+        Ok(init)
+    }
+
+    fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        Ok((0..comm.size())
+            .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
+            .collect())
+    }
+}
+
+/// MPI_Barrier rooted at rank 0 (fan-in/fan-out). Carries no data; the
+/// decoded vectors are empty.
+pub struct Barrier;
+
+impl OpSpec for Barrier {
+    fn op_kind(&self) -> OpKind {
+        OpKind::Barrier
+    }
+
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
+        Ok(vec![Payload::empty(); comm.size()])
+    }
+
+    fn decode(&self, comm: &Communicator, _sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        Ok(vec![Vec::new(); comm.size()])
+    }
+}
+
+/// MPI_Gather: rank `r`'s segment `contributions[r]` ends at `root`.
+/// Decoded `data` = the per-rank segments as assembled at the root
+/// (rank order).
+pub struct Gather<'a> {
+    pub root: Rank,
+    pub contributions: &'a [Vec<f32>],
+}
+
+impl OpSpec for Gather<'_> {
+    fn op_kind(&self) -> OpKind {
+        OpKind::Gather
+    }
+
+    fn root(&self) -> Rank {
+        self.root
+    }
+
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
+        if self.contributions.len() != comm.size() {
+            return Err(Error::Comm(format!(
+                "gather: {} contributions for {} ranks",
+                self.contributions.len(),
+                comm.size()
+            )));
+        }
+        let init: Vec<Payload> = self
+            .contributions
+            .iter()
+            .enumerate()
+            .map(|(r, c)| Payload::single(r, c.clone()))
+            .collect();
+        Ok(init)
+    }
+
+    fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        let root_payload = &sim.payloads[self.root];
+        if root_payload.len() != comm.size() {
+            return Err(Error::Verify(format!(
+                "gather root holds {} segments, expected {}",
+                root_payload.len(),
+                comm.size()
+            )));
+        }
+        Ok((0..comm.size())
+            .map(|r| root_payload.get_cloned(&r).expect("validated above"))
+            .collect())
+    }
+}
+
+/// MPI_Scatter: `segments[r]` travels from `root` to rank `r`.
+/// Decoded `data[r]` = the segment received at rank `r`.
+pub struct Scatter<'a> {
+    pub root: Rank,
+    pub segments: &'a [Vec<f32>],
+}
+
+impl OpSpec for Scatter<'_> {
+    fn op_kind(&self) -> OpKind {
+        OpKind::Scatter
+    }
+
+    fn root(&self) -> Rank {
+        self.root
+    }
+
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
+        if self.segments.len() != comm.size() {
+            return Err(Error::Comm(format!(
+                "scatter: {} segments for {} ranks",
+                self.segments.len(),
+                comm.size()
+            )));
+        }
+        let mut root_payload = Payload::empty();
+        for (r, s) in self.segments.iter().enumerate() {
+            root_payload.union(Payload::single(r, s.clone())).map_err(Error::Sim)?;
+        }
+        let mut init = vec![Payload::empty(); comm.size()];
+        init[self.root] = root_payload;
+        Ok(init)
+    }
+
+    fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        Ok((0..comm.size())
+            .map(|r| sim.payloads[r].get_cloned(&r).unwrap_or_default())
+            .collect())
+    }
+}
+
+/// All-reduce under an [`AlgoPolicy`]: every rank ends with the full
+/// reduction. The policy picks the payload convention: uniform
+/// reduce+bcast moves one key-0 vector, every chunked policy (rs+ag,
+/// hybrid) moves per-destination chunk maps — both decode to the same
+/// per-rank reduced vector, bitwise.
+pub struct Allreduce<'a> {
+    pub root: Rank,
+    pub op: ReduceOp,
+    pub policy: AlgoPolicy,
+    pub contributions: &'a [Vec<f32>],
+}
+
+impl OpSpec for Allreduce<'_> {
+    fn op_kind(&self) -> OpKind {
+        OpKind::Allreduce(self.op, self.policy)
+    }
+
+    fn root(&self) -> Rank {
+        self.root
+    }
+
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
+        check_contribs(comm, self.contributions)?;
+        if !self.policy.is_chunked() {
+            let init: Vec<Payload> = self
+                .contributions
+                .iter()
+                .map(|c| Payload::single(0, c.clone()))
+                .collect();
+            return Ok(init);
+        }
+        let n = comm.size();
+        let len = self.contributions[0].len();
+        let ranges = chunk_ranges(len, n);
+        let init: Vec<Payload> = self
+            .contributions
+            .iter()
+            .map(|c| {
+                let mut pl = Payload::empty();
+                for (q, &(lo, hi)) in ranges.iter().enumerate() {
+                    pl.union(Payload::single(q, c[lo..hi].to_vec()))
+                        .expect("distinct chunk keys");
+                }
+                pl
+            })
+            .collect();
+        Ok(init)
+    }
+
+    fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        let n = comm.size();
+        if !self.policy.is_chunked() {
+            return Ok((0..n)
+                .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
+                .collect());
+        }
+        let len = self.contributions[0].len();
+        let mut data = Vec::with_capacity(n);
+        for r in 0..n {
+            let mut flat = Vec::with_capacity(len);
+            for q in 0..n {
+                let seg = sim.payloads[r].get(&q).ok_or_else(|| {
+                    Error::Verify(format!(
+                        "allreduce {}: rank {r} missing chunk {q}",
+                        self.policy.name()
+                    ))
+                })?;
+                flat.extend_from_slice(seg);
+            }
+            data.push(flat);
+        }
+        Ok(data)
+    }
+}
+
+/// Allgather (§6 extension): every rank contributes `contributions[r]`
+/// and ends with every segment. Decoded `data[r]` = concatenation in
+/// rank order as assembled at rank `r`.
+pub struct Allgather<'a> {
+    pub contributions: &'a [Vec<f32>],
+}
+
+impl OpSpec for Allgather<'_> {
+    fn op_kind(&self) -> OpKind {
+        OpKind::Allgather
+    }
+
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
+        if self.contributions.len() != comm.size() {
+            return Err(Error::Comm(format!(
+                "allgather: {} contributions for {} ranks",
+                self.contributions.len(),
+                comm.size()
+            )));
+        }
+        let init: Vec<Payload> = self
+            .contributions
+            .iter()
+            .enumerate()
+            .map(|(r, c)| Payload::single(r, c.clone()))
+            .collect();
+        Ok(init)
+    }
+
+    fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        let n = comm.size();
+        let mut data = Vec::with_capacity(n);
+        for r in 0..n {
+            let segs = &sim.payloads[r];
+            if segs.len() != n {
+                return Err(Error::Verify(format!(
+                    "allgather: rank {r} holds {} segments, expected {n}",
+                    segs.len()
+                )));
+            }
+            let mut flat = Vec::new();
+            for q in 0..n {
+                flat.extend_from_slice(segs.get(&q).expect("validated above"));
+            }
+            data.push(flat);
+        }
+        Ok(data)
+    }
+}
+
+/// Reduce-scatter (§6 extension): `contributions[r][q]` is rank `r`'s
+/// contribution to destination `q`'s segment; rank `r` receives the
+/// elementwise `op` over all ranks' segment `r`.
+pub struct ReduceScatter<'a> {
+    pub op: ReduceOp,
+    pub contributions: &'a [Vec<Vec<f32>>],
+}
+
+impl OpSpec for ReduceScatter<'_> {
+    fn op_kind(&self) -> OpKind {
+        OpKind::ReduceScatter(self.op)
+    }
+
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
+        let n = comm.size();
+        if self.contributions.len() != n || self.contributions.iter().any(|c| c.len() != n) {
+            return Err(Error::Comm("reduce_scatter: need n x n segment matrix".into()));
+        }
+        let init: Vec<Payload> = self
+            .contributions
+            .iter()
+            .map(|per_dst| {
+                let mut pl = Payload::empty();
+                for (q, seg) in per_dst.iter().enumerate() {
+                    pl.union(Payload::single(q, seg.clone())).expect("distinct keys");
+                }
+                pl
+            })
+            .collect();
+        Ok(init)
+    }
+
+    fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        Ok((0..comm.size())
+            .map(|r| sim.payloads[r].get_cloned(&r).unwrap_or_default())
+            .collect())
+    }
+}
+
+/// Personalized all-to-all (§6 extension): `sends[r][q]` travels from
+/// rank `r` to rank `q`. Decoded `data[r]` = concatenation of what `r`
+/// received, in source order.
+pub struct Alltoall<'a> {
+    pub sends: &'a [Vec<Vec<f32>>],
+}
+
+impl OpSpec for Alltoall<'_> {
+    fn op_kind(&self) -> OpKind {
+        OpKind::Alltoall
+    }
+
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
+        let n = comm.size();
+        if self.sends.len() != n || self.sends.iter().any(|s| s.len() != n) {
+            return Err(Error::Comm("alltoall: need n x n segment matrix".into()));
+        }
+        let init: Vec<Payload> = self
+            .sends
+            .iter()
+            .enumerate()
+            .map(|(src, per_dst)| {
+                let mut pl = Payload::empty();
+                for (dst, seg) in per_dst.iter().enumerate() {
+                    pl.union(Payload::single(a2a_key(n, src, dst), seg.clone()))
+                        .expect("distinct keys");
+                }
+                pl
+            })
+            .collect();
+        Ok(init)
+    }
+
+    fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        let n = comm.size();
+        let mut data = Vec::with_capacity(n);
+        for dst in 0..n {
+            let mut flat = Vec::new();
+            for src in 0..n {
+                let key = a2a_key(n, src, dst);
+                let seg = sim.payloads[dst].get(&key).ok_or_else(|| {
+                    Error::Verify(format!("alltoall: segment {src}->{dst} missing"))
+                })?;
+                flat.extend_from_slice(seg);
+            }
+            data.push(flat);
+        }
+        Ok(data)
+    }
+}
+
+/// Segmented (pipelined) broadcast — van de Geijn (§5/§6). Splits `data`
+/// into `n_segments` chunks streamed down the tree; the (clamped) chunk
+/// count participates in the plan key, so each segmentation compiles
+/// once.
+pub struct BcastSegmented<'a> {
+    pub root: Rank,
+    pub data: &'a [f32],
+    pub n_segments: usize,
+}
+
+impl BcastSegmented<'_> {
+    fn segs(&self) -> usize {
+        self.n_segments.clamp(1, self.data.len().max(1))
+    }
+}
+
+impl OpSpec for BcastSegmented<'_> {
+    fn op_kind(&self) -> OpKind {
+        OpKind::BcastSegmented
+    }
+
+    fn root(&self) -> Rank {
+        self.root
+    }
+
+    fn segments(&self) -> usize {
+        self.segs()
+    }
+
+    fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
+        let mut root_payload = Payload::empty();
+        for (i, &(lo, hi)) in chunk_ranges(self.data.len(), self.segs()).iter().enumerate() {
+            root_payload
+                .union(Payload::single(i, self.data[lo..hi].to_vec()))
+                .map_err(Error::Sim)?;
+        }
+        let mut init = vec![Payload::empty(); comm.size()];
+        init[self.root] = root_payload;
+        Ok(init)
+    }
+
+    fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        let segs = self.segs();
+        Ok((0..comm.size())
+            .map(|r| {
+                let mut flat = Vec::new();
+                for i in 0..segs {
+                    if let Some(s) = sim.payloads[r].get(&i) {
+                        flat.extend_from_slice(s);
+                    }
+                }
+                flat
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{AllreduceAlgo, PlanCache, PlanKey, PLAN_BASE_TAG};
+    use crate::topology::TopologySpec;
+    use crate::tree::{LevelPolicy, Strategy};
+
+    #[test]
+    fn chunk_ranges_cover_and_partition() {
+        for (len, n) in [(0usize, 4usize), (1, 4), (5, 4), (8, 4), (9, 4), (20, 1)] {
+            let rs = chunk_ranges(len, n);
+            assert_eq!(rs.len(), n);
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs[n - 1].1, len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_compile_agrees_with_cached_plan() {
+        // OpSpec::compile and the plan cache go through the same total
+        // dispatch: the standalone program equals the cached plan's.
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let cache = PlanCache::new();
+        let data = [1.0f32; 8];
+        let spec = Bcast { root: 3, data: &data };
+        let plan = cache
+            .get_or_build(
+                &comm,
+                PlanKey {
+                    comm_epoch: comm.epoch(),
+                    strategy: Strategy::Multilevel,
+                    policy: LevelPolicy::paper(),
+                    root: spec.root(),
+                    op: spec.op_kind(),
+                    segments: spec.segments(),
+                },
+            )
+            .unwrap();
+        let clustering = comm.clustering();
+        let standalone = spec.compile(clustering, &plan.tree, PLAN_BASE_TAG).unwrap();
+        assert_eq!(standalone.actions, plan.program.actions);
+        assert_eq!(spec.bytes_model(), plan.meta.bytes_model);
+        // The allreduce policies are where a second build path exists:
+        // the cache composes cached phase programs (plan::cache) while
+        // OpSpec::compile runs the standalone total compiler — the two
+        // must stay action-identical for every policy.
+        let contributions: Vec<Vec<f32>> = vec![vec![0.0; 4]; comm.size()];
+        for policy in [
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+            AlgoPolicy::hybrid(1),
+        ] {
+            let spec = Allreduce {
+                root: 0,
+                op: ReduceOp::Sum,
+                policy,
+                contributions: &contributions,
+            };
+            let plan = cache
+                .get_or_build(
+                    &comm,
+                    PlanKey {
+                        comm_epoch: comm.epoch(),
+                        strategy: Strategy::Multilevel,
+                        policy: LevelPolicy::paper(),
+                        root: spec.root(),
+                        op: spec.op_kind(),
+                        segments: spec.segments(),
+                    },
+                )
+                .unwrap();
+            let standalone = spec.compile(clustering, &plan.tree, PLAN_BASE_TAG).unwrap();
+            assert_eq!(standalone.actions, plan.program.actions, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn request_validation_errors() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let bad: Vec<Vec<f32>> = vec![vec![1.0]];
+        assert!(Reduce { root: 0, op: ReduceOp::Sum, contributions: &bad }
+            .encode_init(&comm)
+            .is_err());
+        assert!(Gather { root: 0, contributions: &bad }.encode_init(&comm).is_err());
+        assert!(Scatter { root: 0, segments: &bad }.encode_init(&comm).is_err());
+        assert!(Allgather { contributions: &bad }.encode_init(&comm).is_err());
+        let bad2: Vec<Vec<Vec<f32>>> = vec![vec![vec![1.0]]];
+        assert!(ReduceScatter { op: ReduceOp::Sum, contributions: &bad2 }
+            .encode_init(&comm)
+            .is_err());
+        assert!(Alltoall { sends: &bad2 }.encode_init(&comm).is_err());
+    }
+}

@@ -7,7 +7,7 @@ use crate::coordinator::timing_app::{self, TimingPoint};
 use crate::error::Result;
 use crate::model::{presets, NetworkParams};
 use crate::netsim::{Combiner, NativeCombiner, ReduceOp};
-use crate::plan::{AllreduceAlgo, PlanCache};
+use crate::plan::{AlgoPolicy, AllreduceAlgo, PlanCache};
 use crate::topology::{Communicator, TopologySpec};
 use crate::tree::{build_strategy_tree, LevelPolicy, Strategy, TreeShape};
 use crate::util::fmt::{self, Table};
@@ -146,9 +146,15 @@ pub fn collectives_suite_table(bytes: usize, combiner: &dyn Combiner) -> Result<
     Ok(t)
 }
 
-/// E12 — the headline new op: allreduce across every strategy and both
-/// compositions, verified against the serial reference on every row.
-pub fn allreduce_table(bytes: usize, op: ReduceOp, combiner: &dyn Combiner) -> Result<Table> {
+/// E12 — the headline new op: allreduce across every strategy and every
+/// composition policy (both uniforms plus the per-level hybrid at
+/// `boundary`), verified against the serial reference on every row.
+pub fn allreduce_table(
+    bytes: usize,
+    op: ReduceOp,
+    combiner: &dyn Combiner,
+    boundary: usize,
+) -> Result<Table> {
     let comm = Communicator::world(&TopologySpec::paper_experiment());
     let params = presets::paper_grid();
     let n = comm.size();
@@ -164,18 +170,23 @@ pub fn allreduce_table(bytes: usize, op: ReduceOp, combiner: &dyn Combiner) -> R
         .collect();
     let expect = verify::ref_reduce(&contributions, op);
     let cache = Arc::new(PlanCache::new());
+    let policies = [
+        AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+        AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+        AlgoPolicy::hybrid(boundary),
+    ];
     let mut t =
         Table::new(&["strategy", "algorithm", "makespan", "WAN msgs", "total msgs", "verified"]);
     for s in Strategy::ALL {
         let e = CollectiveEngine::new(&comm, params.clone(), s)
             .with_combiner(combiner)
             .with_plan_cache(cache.clone());
-        for algo in AllreduceAlgo::ALL {
-            let out = e.allreduce_with(algo, 0, op, &contributions)?;
+        for policy in policies {
+            let out = e.allreduce_with_policy(policy, 0, op, &contributions)?;
             let ok = (0..n).all(|r| out.data[r] == expect);
             t.row(&[
                 s.name().to_string(),
-                algo.name().to_string(),
+                policy.name(),
                 fmt::time_us(out.sim.makespan_us),
                 out.sim.wan_messages().to_string(),
                 out.sim.msgs_by_sep.iter().sum::<u64>().to_string(),
@@ -208,6 +219,10 @@ pub fn wan_shape_ablation(sites: usize, bytes: usize) -> Result<Table> {
         (
             "fibonacci λ=4".into(),
             LevelPolicy { shapes: vec![TreeShape::Fibonacci(4), TreeShape::Binomial] },
+        ),
+        (
+            "distance-halving (bine)".into(),
+            LevelPolicy { shapes: vec![TreeShape::DistanceHalving, TreeShape::Binomial] },
         ),
     ];
     for (name, policy) in shapes {
@@ -368,17 +383,18 @@ mod tests {
     #[test]
     fn allreduce_table_verifies_every_row() {
         for op in crate::netsim::ReduceOp::ALL {
-            let t = allreduce_table(4096, op, native()).unwrap();
-            assert_eq!(t.n_rows(), 8, "4 strategies x 2 algorithms");
+            let t = allreduce_table(4096, op, native(), 1).unwrap();
+            assert_eq!(t.n_rows(), 12, "4 strategies x 3 composition policies");
             let md = t.to_markdown();
             assert!(md.contains("exact"), "{op:?}");
+            assert!(md.contains("hybrid(b=1)"), "{op:?}");
             assert!(!md.contains("MISMATCH"), "{op:?}");
         }
     }
 
     #[test]
     fn ablation_and_scaling_run() {
-        assert_eq!(wan_shape_ablation(6, 16384).unwrap().n_rows(), 5);
+        assert_eq!(wan_shape_ablation(6, 16384).unwrap().n_rows(), 6);
         assert_eq!(site_scaling_table(16384).unwrap().n_rows(), 4);
         assert_eq!(root_sensitivity_table(16384).unwrap().n_rows(), 2);
     }

@@ -10,7 +10,7 @@ use crate::collectives::CollectiveEngine;
 use crate::error::{Error, Result};
 use crate::model::NetworkParams;
 use crate::netsim::{Combiner, Payload, ReduceOp};
-use crate::plan::AllreduceAlgo;
+use crate::plan::{AlgoPolicy, AllreduceAlgo};
 use crate::runtime::MlpRuntime;
 use crate::topology::Communicator;
 use crate::tree::Strategy;
@@ -23,11 +23,11 @@ pub struct StepLog {
     /// Virtual communication time of the gradient allreduce (us).
     pub comm_us: f64,
     /// Completion time of the reduce phase within the fused allreduce
-    /// schedule (us). Zero when the composition is a single fused
-    /// segment (`rs+ag`).
+    /// schedule (us). Zero when the composition runs as a single fused
+    /// plan (the chunked policies: `rs+ag`, hybrid).
     pub reduce_us: f64,
     /// Critical-path residual of the broadcast phase (`comm_us -
-    /// reduce_us`). Zero for `rs+ag`.
+    /// reduce_us`). Zero for the chunked policies.
     pub bcast_us: f64,
     pub wan_msgs: u64,
     /// Wall-clock compute time of the PJRT train steps (us).
@@ -40,9 +40,10 @@ pub struct TrainConfig {
     pub steps: usize,
     pub lr: f32,
     pub strategy: Strategy,
-    /// How the per-step gradient allreduce is composed (both algorithms
-    /// are bitwise-equivalent; see [`AllreduceAlgo`]).
-    pub allreduce: AllreduceAlgo,
+    /// How the per-step gradient allreduce is composed (every policy is
+    /// bitwise-equivalent; see [`AlgoPolicy`] — uniform reduce+bcast,
+    /// uniform rs+ag, or the per-level hybrid).
+    pub allreduce: AlgoPolicy,
     pub seed: u64,
 }
 
@@ -52,7 +53,7 @@ impl Default for TrainConfig {
             steps: 50,
             lr: 0.1,
             strategy: Strategy::Multilevel,
-            allreduce: AllreduceAlgo::ReduceBcast,
+            allreduce: AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast),
             seed: 0,
         }
     }
@@ -79,15 +80,19 @@ pub fn train(
     // path — the pipeline's whole point for this workload).
     let engine = CollectiveEngine::new(comm, params_net.clone(), cfg.strategy)
         .with_combiner(combiner)
-        .with_allreduce_algo(cfg.allreduce);
-    // For the reduce+bcast composition the per-step exchange executes as
-    // a fused two-segment Schedule (same message structure and timing as
-    // the cached Allreduce plan, plus a phase boundary marker), built
-    // once here and reused every step — the program is payload-
-    // independent, so the hot path stays payload setup + one simulation.
+        .with_allreduce_policy(cfg.allreduce);
+    // For the uniform reduce+bcast composition the per-step exchange
+    // executes as a fused two-segment Schedule (same message structure
+    // and timing as the cached Allreduce plan, plus a phase boundary
+    // marker), built once here and reused every step — the program is
+    // payload-independent, so the hot path stays payload setup + one
+    // simulation. Chunked policies (rs+ag, hybrid) run their single
+    // fused plan through the generic request path instead.
     let step_schedule = match cfg.allreduce {
-        AllreduceAlgo::ReduceBcast => Some(engine.allreduce_schedule(0, ReduceOp::Sum)?),
-        AllreduceAlgo::ReduceScatterAllgather => None,
+        AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast) => {
+            Some(engine.allreduce_schedule(0, ReduceOp::Sum)?)
+        }
+        _ => None,
     };
     let p0 = mlp.init_params(cfg.seed);
     let mut replicas: Vec<Vec<f32>> = vec![p0; n];

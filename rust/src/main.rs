@@ -6,14 +6,14 @@
 //! gridcollect fig8 [--sizes 1k,...,1m] [--xla] [--fused]   # E1: the headline figure
 //!                                  # (--fused adds the E13 fused-vs-separate delta table)
 //! gridcollect suite [--size 64k] [--xla]           # E8: 6 ops x 4 strategies
-//! gridcollect allreduce [--size 64k] [--op sum] [--xla]   # E12: both compositions
+//! gridcollect allreduce [--size 64k] [--op sum] [--boundary 1] [--xla]   # E12: all compositions
 //! gridcollect cost-model [--size 64k]              # E2: §4 analytic vs sim
 //! gridcollect ablation [--sites 8] [--size 64k]    # E9: WAN tree shapes
 //! gridcollect scaling [--size 64k]                 # E10: site-count scaling
 //! gridcollect roots [--size 64k]                   # E7: root sensitivity
 //! gridcollect tree [--spec fig1|experiment] [--root 0]   # E3-E5: tree shapes
 //! gridcollect rsl <script.rsl> [--root 0]          # E6: RSL front-end
-//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--algo rb|rsag] [--xla]
+//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--algo rb|rsag|hybrid] [--boundary 1] [--xla]
 //! gridcollect gantt [--size 64k] [--strategy s] [--params file.net]
 //! gridcollect calibrate [--out params.net]        # measure combine us/B
 //! ```
@@ -101,12 +101,16 @@ fn run(raw: Vec<String>) -> Result<()> {
                 None => experiment::native(),
             };
             let op = args.reduce_op(gridcollect::netsim::ReduceOp::Sum)?;
+            let boundary = args.get_usize("boundary", 1)?;
             println!(
-                "E12 — multilevel allreduce ({}), both compositions, every strategy ({}):\n",
+                "E12 — multilevel allreduce ({}), every composition policy, every strategy ({}):\n",
                 op.name(),
                 fmt::bytes(size)
             );
-            print!("{}", experiment::allreduce_table(size, op, combiner)?.to_markdown());
+            print!(
+                "{}",
+                experiment::allreduce_table(size, op, combiner, boundary)?.to_markdown()
+            );
         }
         "cost-model" => {
             // Latency-dominated default (the regime where the §4 closed
@@ -190,8 +194,9 @@ fn run(raw: Vec<String>) -> Result<()> {
                 steps: args.get_usize("steps", 50)?,
                 lr: args.get_f32("lr", 0.1)?,
                 strategy: args.strategy(Strategy::Multilevel)?,
-                allreduce: args
-                    .allreduce_algo(gridcollect::plan::AllreduceAlgo::ReduceBcast)?,
+                allreduce: args.algo_policy(gridcollect::plan::AlgoPolicy::uniform(
+                    gridcollect::plan::AllreduceAlgo::ReduceBcast,
+                ))?,
                 seed: args.get_usize("seed", 0)? as u64,
             };
             println!(

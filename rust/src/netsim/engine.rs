@@ -157,6 +157,7 @@ pub fn run(
                         let out = match part {
                             SendPart::All => st.payload.clone(),
                             SendPart::Ranks(rs) => st.payload.select(rs),
+                            SendPart::Ranges(rs) => st.payload.select_ranges(rs),
                             SendPart::Empty => Payload::empty(),
                         };
                         let bytes = out.n_bytes();

@@ -183,6 +183,20 @@ impl Payload {
         Payload { segments }
     }
 
+    /// Subset containing the segments whose keys fall in one of the
+    /// half-open `[lo, hi)` intervals. Like [`Payload::select`] this
+    /// shares segment storage; unlike it, the walk is O(runs + hits)
+    /// via the ordered map's range queries, never O(n) in the rank count.
+    pub fn select_ranges(&self, ranges: &[(Rank, Rank)]) -> Payload {
+        let mut segments = BTreeMap::new();
+        for &(lo, hi) in ranges {
+            for (&k, v) in self.segments.range(lo..hi) {
+                segments.insert(k, v.clone());
+            }
+        }
+        Payload { segments }
+    }
+
     /// Union-merge (gather): disjoint keys required.
     pub fn union(&mut self, other: Payload) -> Result<(), String> {
         for (k, v) in other.segments {
@@ -251,6 +265,20 @@ mod tests {
         assert!(!s.segments.contains_key(&0));
         // selecting a missing rank is silently empty for that key
         assert_eq!(p.select(&[9]).segments.len(), 0);
+    }
+
+    #[test]
+    fn select_ranges_matches_select() {
+        let mut p = Payload::empty();
+        for k in [0usize, 1, 2, 5, 6, 9] {
+            p.union(Payload::single(k, vec![k as f32])).unwrap();
+        }
+        let by_ranges = p.select_ranges(&[(0, 3), (5, 7)]);
+        let by_ranks = p.select(&[0, 1, 2, 5, 6]);
+        assert_eq!(by_ranges, by_ranks);
+        // intervals spanning absent keys select only what exists
+        assert_eq!(p.select_ranges(&[(3, 5)]).len(), 0);
+        assert_eq!(p.select_ranges(&[(0, 10)]).len(), 6);
     }
 
     #[test]

@@ -17,6 +17,12 @@ pub enum SendPart {
     All,
     /// Only the listed ranks' segments (scatter-down).
     Ranks(Vec<Rank>),
+    /// Only the segments whose keys fall in one of the sorted, disjoint
+    /// half-open `[lo, hi)` intervals — the O(runs) alternative to
+    /// [`SendPart::Ranks`] for subtree/complement routing: rank sets of
+    /// topology-aware subtrees coalesce to a handful of contiguous runs,
+    /// so this stores (and selects) intervals instead of O(n) rank lists.
+    Ranges(Vec<(Rank, Rank)>),
     /// Zero-byte control message (barrier).
     Empty,
 }

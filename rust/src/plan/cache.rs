@@ -23,12 +23,11 @@
 //! Evicted plans stay alive for holders of their `Arc`; `evictions()`
 //! reports how many were dropped.
 
-use super::{AllreduceAlgo, CollectivePlan, OpKind, PlanKey, PlanMeta, PLAN_BASE_TAG};
-use crate::collectives::{extended, programs};
+use super::{AlgoPolicy, AllreduceAlgo, CollectivePlan, OpKind, PlanKey, PlanMeta, PLAN_BASE_TAG};
+use crate::collectives::programs;
 use crate::error::{Error, Result};
-use crate::netsim::Program;
 use crate::topology::Communicator;
-use crate::tree::{build_strategy_tree, Tree};
+use crate::tree::build_strategy_tree;
 use crate::util::counters;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -218,7 +217,7 @@ impl PlanCache {
     fn build(&self, comm: &Communicator, key: PlanKey) -> Result<CollectivePlan> {
         let tag = PLAN_BASE_TAG;
         let (tree, program) = match key.op {
-            OpKind::Allreduce(op, AllreduceAlgo::ReduceBcast) => {
+            OpKind::Allreduce(op, AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast)) => {
                 // Compose the two cached phases instead of recompiling:
                 // the reduce and bcast plans share one tree build, and the
                 // bcast program is tag-rebased past the reduce's tags.
@@ -233,34 +232,35 @@ impl PlanCache {
                 program.validate()?;
                 (red.tree.clone(), program)
             }
+            OpKind::Allreduce(op, AlgoPolicy::Hybrid { boundary_level }) => {
+                // The per-level hybrid: the up phase IS the cached reduce
+                // plan (same tree, same program — the combine dataflow is
+                // payload-representation-agnostic); only the per-level
+                // delivery phase is compiled, then tag-rebased past it.
+                // Zero extra tree builds on this path.
+                let red = self.get_or_build(
+                    comm,
+                    PlanKey { op: OpKind::Reduce(op), ..key.clone() },
+                )?;
+                let down = programs::allreduce_down(
+                    &red.tree,
+                    comm.clustering(),
+                    boundary_level,
+                    tag,
+                )?;
+                let mut program = red.program.clone();
+                program.then(down.rebased(red.program.max_tag() + 1))?;
+                program.validate()?;
+                (red.tree.clone(), program)
+            }
             _ => {
                 let tree = build_strategy_tree(comm, key.root, key.strategy, &key.policy)?;
-                let program = Self::compile(&tree, &key, tag)?;
+                let program = key.op.compile(comm.clustering(), &tree, key.segments, tag)?;
                 (tree, program)
             }
         };
         let meta = PlanMeta::compute(comm.clustering(), &tree, &program, key.op);
         Ok(CollectivePlan { key, tree, program, meta })
-    }
-
-    fn compile(tree: &Tree, key: &PlanKey, tag: u64) -> Result<Program> {
-        match key.op {
-            OpKind::Bcast => programs::bcast(tree, tag),
-            OpKind::Reduce(op) => programs::reduce(tree, op, tag),
-            OpKind::Barrier => programs::barrier(tree, tag),
-            OpKind::Gather => programs::gather(tree, tag),
-            OpKind::Scatter => programs::scatter(tree, tag),
-            OpKind::Allreduce(op, AllreduceAlgo::ReduceScatterAllgather) => {
-                programs::allreduce_rsag(tree, op, tag)
-            }
-            OpKind::Allreduce(_, AllreduceAlgo::ReduceBcast) => {
-                unreachable!("composed in build()")
-            }
-            OpKind::Allgather => extended::allgather(tree, tag),
-            OpKind::ReduceScatter(op) => extended::reduce_scatter(tree, op, tag),
-            OpKind::Alltoall => extended::alltoall(tree, tag),
-            OpKind::BcastSegmented => extended::bcast_segmented(tree, key.segments.max(1), tag),
-        }
     }
 }
 
@@ -327,7 +327,14 @@ mod tests {
         let ar = cache
             .get_or_build(
                 &comm,
-                key(&comm, OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceBcast), 0),
+                key(
+                    &comm,
+                    OpKind::Allreduce(
+                        ReduceOp::Sum,
+                        AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+                    ),
+                    0,
+                ),
             )
             .unwrap();
         let delta = counters::snapshot().since(&before);
@@ -347,6 +354,33 @@ mod tests {
         assert!(delta.plan_cache_misses >= 1);
         // Tags of the two phases must not collide inside one run.
         ar.program.validate().unwrap();
+    }
+
+    #[test]
+    fn allreduce_hybrid_reuses_cached_reduce_tree() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let cache = PlanCache::new();
+        let red = cache.get_or_build(&comm, key(&comm, OpKind::Reduce(ReduceOp::Sum), 0)).unwrap();
+        let hybrid = cache
+            .get_or_build(
+                &comm,
+                key(&comm, OpKind::Allreduce(ReduceOp::Sum, AlgoPolicy::hybrid(1)), 0),
+            )
+            .unwrap();
+        // Composition: the reduce phase was served warm, only the hybrid
+        // plan itself missed (cache-local stats are race-free).
+        assert_eq!(cache.misses(), 2, "reduce + hybrid");
+        assert_eq!(cache.hits(), 1, "reduce phase served warm");
+        assert_eq!(hybrid.tree, red.tree, "one tree shared by both phases");
+        hybrid.program.validate().unwrap();
+        // Distinct boundaries are distinct plans.
+        cache
+            .get_or_build(
+                &comm,
+                key(&comm, OpKind::Allreduce(ReduceOp::Sum, AlgoPolicy::hybrid(2)), 0),
+            )
+            .unwrap();
+        assert_eq!(cache.misses(), 3);
     }
 
     #[test]

@@ -33,6 +33,8 @@ pub mod schedule;
 pub use cache::PlanCache;
 pub use schedule::{Schedule, ScheduleBuilder, Segment};
 
+use crate::collectives::{extended, programs};
+use crate::error::Result;
 use crate::netsim::{Action, Program, ReduceOp, SendPart};
 use crate::topology::{Clustering, Rank};
 use crate::tree::{LevelPolicy, Strategy, Tree};
@@ -64,6 +66,90 @@ impl AllreduceAlgo {
     }
 }
 
+/// Per-separation-level allreduce composition — the algorithmic analogue
+/// of [`LevelPolicy`]'s per-level shape table. A policy participates in
+/// [`PlanKey`], so each distinct policy compiles (once) to its own cached
+/// plan.
+///
+/// [`AlgoPolicy::Hybrid`] is the paper-§6 "exploit the network at every
+/// level" composition the uniform algorithms cannot express: reduce+bcast
+/// message structure across the slow (WAN-side) tree edges — two full-
+/// payload messages per edge — while edges below the boundary pipeline
+/// their delivery rs+ag style (split subtree/complement messages). All
+/// compositions are bitwise-identical in their results (same tree, same
+/// combine association); they differ only in message structure.
+///
+/// ```
+/// use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
+/// let p = AlgoPolicy::hybrid(1);
+/// // level 1 = WAN: reduce+bcast; deeper levels: rs+ag.
+/// assert_eq!(p.algo_at(1), AllreduceAlgo::ReduceBcast);
+/// assert_eq!(p.algo_at(3), AllreduceAlgo::ReduceScatterAllgather);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AlgoPolicy {
+    /// One composition for every tree edge.
+    Uniform(AllreduceAlgo),
+    /// Reduce+bcast (full-payload) delivery on edges at separation level
+    /// `<= boundary_level`; rs+ag (split, pipelined) delivery on deeper
+    /// edges. `hybrid(0)` degrades to uniform rs+ag, `hybrid(>= levels)`
+    /// to uniform reduce+bcast.
+    Hybrid { boundary_level: usize },
+}
+
+impl AlgoPolicy {
+    /// The same composition at every level.
+    pub fn uniform(algo: AllreduceAlgo) -> Self {
+        AlgoPolicy::Uniform(algo)
+    }
+
+    /// Reduce+bcast across levels `1..=boundary_level`, rs+ag below.
+    pub fn hybrid(boundary_level: usize) -> Self {
+        AlgoPolicy::Hybrid { boundary_level }
+    }
+
+    /// Which composition handles a tree edge at separation `level`
+    /// (level 1 = WAN) — mirrors [`LevelPolicy::shape_at`].
+    pub fn algo_at(&self, level: usize) -> AllreduceAlgo {
+        debug_assert!(level >= 1);
+        match *self {
+            AlgoPolicy::Uniform(algo) => algo,
+            AlgoPolicy::Hybrid { boundary_level } => {
+                if level <= boundary_level {
+                    AllreduceAlgo::ReduceBcast
+                } else {
+                    AllreduceAlgo::ReduceScatterAllgather
+                }
+            }
+        }
+    }
+
+    /// Effective boundary for the down-phase compiler: edges at
+    /// separation `<= boundary()` carry a single full-map message, deeper
+    /// edges the split subtree/complement pair.
+    pub fn boundary(&self) -> usize {
+        match *self {
+            AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast) => usize::MAX,
+            AlgoPolicy::Uniform(AllreduceAlgo::ReduceScatterAllgather) => 0,
+            AlgoPolicy::Hybrid { boundary_level } => boundary_level,
+        }
+    }
+
+    /// Whether calls under this policy move rank-chunked payload maps
+    /// (rs+ag convention) rather than a single key-0 vector. Uniform
+    /// reduce+bcast is the only single-vector policy.
+    pub fn is_chunked(&self) -> bool {
+        !matches!(self, AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast))
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            AlgoPolicy::Uniform(algo) => algo.name().to_string(),
+            AlgoPolicy::Hybrid { boundary_level } => format!("hybrid(b={boundary_level})"),
+        }
+    }
+}
+
 /// Which collective a plan implements. Carries everything that changes
 /// the compiled program (reduction operator, allreduce composition);
 /// message segmentation lives in [`PlanKey::segments`].
@@ -74,7 +160,7 @@ pub enum OpKind {
     Barrier,
     Gather,
     Scatter,
-    Allreduce(ReduceOp, AllreduceAlgo),
+    Allreduce(ReduceOp, AlgoPolicy),
     Allgather,
     ReduceScatter(ReduceOp),
     Alltoall,
@@ -95,6 +181,46 @@ impl OpKind {
             OpKind::ReduceScatter(_) => "reduce_scatter",
             OpKind::Alltoall => "alltoall",
             OpKind::BcastSegmented => "bcast_segmented",
+        }
+    }
+
+    /// Compile this op's program over `tree` — the single, total dispatch
+    /// every path (plan cache cold builds, `OpSpec::compile`) goes
+    /// through. `clustering` classifies edges for per-level compositions
+    /// (the hybrid allreduce); `segments` is the pipelining chunk count.
+    pub fn compile(
+        &self,
+        clustering: &Clustering,
+        tree: &Tree,
+        segments: usize,
+        tag: u64,
+    ) -> Result<Program> {
+        match *self {
+            OpKind::Bcast => programs::bcast(tree, tag),
+            OpKind::Reduce(op) => programs::reduce(tree, op, tag),
+            OpKind::Barrier => programs::barrier(tree, tag),
+            OpKind::Gather => programs::gather(tree, tag),
+            OpKind::Scatter => programs::scatter(tree, tag),
+            OpKind::Allreduce(op, policy) => {
+                programs::allreduce(tree, clustering, op, policy, tag)
+            }
+            OpKind::Allgather => extended::allgather(tree, tag),
+            OpKind::ReduceScatter(op) => extended::reduce_scatter(tree, op, tag),
+            OpKind::Alltoall => extended::alltoall(tree, tag),
+            OpKind::BcastSegmented => extended::bcast_segmented(tree, segments.max(1), tag),
+        }
+    }
+
+    /// Static byte-prediction model for this op (see [`BytesModel`]).
+    pub fn bytes_model(&self) -> BytesModel {
+        match self {
+            OpKind::Bcast
+            | OpKind::Reduce(_)
+            | OpKind::Allreduce(_, AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast)) => {
+                BytesModel::FullPayloadPerSend
+            }
+            OpKind::Barrier => BytesModel::Zero,
+            _ => BytesModel::Routed,
         }
     }
 }
@@ -194,13 +320,7 @@ impl PlanMeta {
             .map(|r| tree.children(r).len())
             .max()
             .unwrap_or(0);
-        let bytes_model = match op {
-            OpKind::Bcast
-            | OpKind::Reduce(_)
-            | OpKind::Allreduce(_, AllreduceAlgo::ReduceBcast) => BytesModel::FullPayloadPerSend,
-            OpKind::Barrier => BytesModel::Zero,
-            _ => BytesModel::Routed,
-        };
+        let bytes_model = op.bytes_model();
         PlanMeta {
             msgs_by_sep,
             tree_edges_by_sep,
@@ -260,8 +380,14 @@ impl CollectivePlan {
             bytes += std::mem::size_of::<Vec<Action>>();
             bytes += list.len() * std::mem::size_of::<Action>();
             for a in list {
-                if let Action::Send { part: SendPart::Ranks(rs), .. } = a {
-                    bytes += rs.len() * std::mem::size_of::<Rank>();
+                match a {
+                    Action::Send { part: SendPart::Ranks(rs), .. } => {
+                        bytes += rs.len() * std::mem::size_of::<Rank>();
+                    }
+                    Action::Send { part: SendPart::Ranges(rs), .. } => {
+                        bytes += rs.len() * std::mem::size_of::<(Rank, Rank)>();
+                    }
+                    _ => {}
                 }
             }
         }
@@ -340,12 +466,41 @@ mod tests {
         let ar = cache
             .get_or_build(
                 &comm,
-                key(&comm, OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceBcast), 0),
+                key(
+                    &comm,
+                    OpKind::Allreduce(
+                        ReduceOp::Sum,
+                        AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+                    ),
+                    0,
+                ),
             )
             .unwrap();
         // reduce up + bcast down: every tree edge carries two messages.
         assert_eq!(ar.meta.total_messages(), 2 * (comm.size() as u64 - 1));
         assert_eq!(ar.meta.wan_messages(), 2);
+    }
+
+    #[test]
+    fn algo_policy_levels_and_boundaries() {
+        let rb = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast);
+        let rsag = AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather);
+        for l in 1..=4 {
+            assert_eq!(rb.algo_at(l), AllreduceAlgo::ReduceBcast);
+            assert_eq!(rsag.algo_at(l), AllreduceAlgo::ReduceScatterAllgather);
+        }
+        let h = AlgoPolicy::hybrid(2);
+        assert_eq!(h.algo_at(1), AllreduceAlgo::ReduceBcast);
+        assert_eq!(h.algo_at(2), AllreduceAlgo::ReduceBcast);
+        assert_eq!(h.algo_at(3), AllreduceAlgo::ReduceScatterAllgather);
+        assert_eq!(h.boundary(), 2);
+        assert_eq!(rb.boundary(), usize::MAX);
+        assert_eq!(rsag.boundary(), 0);
+        assert!(!rb.is_chunked());
+        assert!(rsag.is_chunked());
+        assert!(h.is_chunked());
+        assert_eq!(h.name(), "hybrid(b=2)");
+        assert_eq!(rb.name(), "reduce+bcast");
     }
 
     #[test]
@@ -356,7 +511,14 @@ mod tests {
         let ar = cache
             .get_or_build(
                 &comm,
-                key(&comm, OpKind::Allreduce(ReduceOp::Sum, AllreduceAlgo::ReduceBcast), 0),
+                key(
+                    &comm,
+                    OpKind::Allreduce(
+                        ReduceOp::Sum,
+                        AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+                    ),
+                    0,
+                ),
             )
             .unwrap();
         assert!(bc.footprint_bytes() > 0);

@@ -23,6 +23,15 @@ pub enum TreeShape {
     /// in node count; shape follows the postal recurrence
     /// N(t) = N(t-1) + N(t-λ)).
     Fibonacci(u32),
+    /// Bine/Swing-style distance-halving tree (PAPERS.md, 2508.17311):
+    /// recursive halving over the rotated member ring — the root covers
+    /// the whole ring and repeatedly hands the upper half of its interval
+    /// to the member at its midpoint, so the first hop spans half the
+    /// ring and every deeper hop spans half the previous distance.
+    /// Identical to [`TreeShape::Binomial`] on power-of-two member counts;
+    /// on other counts its sends stay distance-ordered (farthest first)
+    /// where the bitmask construction's do not.
+    DistanceHalving,
 }
 
 impl TreeShape {
@@ -32,6 +41,7 @@ impl TreeShape {
             TreeShape::Flat => "flat".into(),
             TreeShape::Chain => "chain".into(),
             TreeShape::Fibonacci(l) => format!("fibonacci(λ={l})"),
+            TreeShape::DistanceHalving => "distance-halving".into(),
         }
     }
 
@@ -94,6 +104,24 @@ impl TreeShape {
                         tree.attach(abs(p), abs(c))?;
                         queue.push_back(c);
                     }
+                }
+            }
+            TreeShape::DistanceHalving => {
+                // Recursive halving: the owner of interval [lo, hi) sends
+                // to the member at the midpoint, which takes over the
+                // upper half. LIFO processing keeps the attach order
+                // parent-before-child and each owner's children in
+                // descending-distance order (farthest first), matching
+                // the postal send discipline.
+                let mut stack = vec![(0usize, m)];
+                while let Some((lo, hi)) = stack.pop() {
+                    if hi - lo <= 1 {
+                        continue;
+                    }
+                    let mid = lo + (hi - lo).div_ceil(2);
+                    tree.attach(abs(lo), abs(mid))?;
+                    stack.push((lo, mid));
+                    stack.push((mid, hi));
                 }
             }
             TreeShape::Fibonacci(lambda) => {
@@ -224,13 +252,61 @@ mod tests {
 
     #[test]
     fn builders_deterministic() {
-        for shape in
-            [TreeShape::Binomial, TreeShape::Flat, TreeShape::Chain, TreeShape::Fibonacci(3)]
-        {
+        for shape in [
+            TreeShape::Binomial,
+            TreeShape::Flat,
+            TreeShape::Chain,
+            TreeShape::Fibonacci(3),
+            TreeShape::DistanceHalving,
+        ] {
             let a = shape.build(9, &ids(9), 4).unwrap();
             let b = shape.build(9, &ids(9), 4).unwrap();
             assert_eq!(a, b, "{shape:?} not deterministic");
         }
+    }
+
+    #[test]
+    fn distance_halving_equals_binomial_on_powers_of_two() {
+        for n in [2usize, 4, 8, 16] {
+            let dh = TreeShape::DistanceHalving.build(n, &ids(n), 0).unwrap();
+            let bi = TreeShape::Binomial.build(n, &ids(n), 0).unwrap();
+            assert_eq!(dh, bi, "n={n}");
+        }
+    }
+
+    #[test]
+    fn distance_halving_spans_and_halves_distances() {
+        for n in [3usize, 5, 6, 7, 9, 13, 20] {
+            let t = TreeShape::DistanceHalving.build(n, &ids(n), 0).unwrap();
+            t.validate(Some(&ids(n))).unwrap();
+            // Root's children sit at strictly decreasing ring distances,
+            // first hop spanning (at least) half the ring.
+            let kids = t.children(0);
+            assert!(!kids.is_empty());
+            assert!(2 * kids[0] >= n, "first hop spans half the ring (n={n})");
+            for w in kids.windows(2) {
+                assert!(w[0] > w[1], "descending distance order (n={n})");
+            }
+        }
+        // Non-power-of-two counts differ from the bitmask binomial.
+        let dh = TreeShape::DistanceHalving.build(6, &ids(6), 0).unwrap();
+        let bi = TreeShape::Binomial.build(6, &ids(6), 0).unwrap();
+        assert_ne!(dh, bi);
+        assert_eq!(dh.children(0), &[3, 2, 1]);
+        assert_eq!(dh.children(3), &[5, 4]);
+    }
+
+    #[test]
+    fn distance_halving_rotates_with_root_and_subsets() {
+        let t = TreeShape::DistanceHalving.build(8, &ids(8), 3).unwrap();
+        t.validate(Some(&ids(8))).unwrap();
+        assert_eq!(t.root(), 3);
+        // rel 4, 2, 1 => ranks (3+4)%8=7, 5, 4 — same rotation law as
+        // the other shapes.
+        assert_eq!(t.children(3), &[7, 5, 4]);
+        let members = [2, 5, 7];
+        let s = TreeShape::DistanceHalving.build(10, &members, 5).unwrap();
+        s.validate(Some(&members)).unwrap();
     }
 
     #[test]

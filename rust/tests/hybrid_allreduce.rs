@@ -1,0 +1,188 @@
+//! Acceptance tests for the per-level hybrid allreduce
+//! (`AlgoPolicy::hybrid`): bitwise equivalence against the serial
+//! reference for every strategy × root × boundary level, the WAN
+//! message-count claim (reduce+bcast's 2 per WAN edge, not rs+ag's 3),
+//! and warm-path plan reuse via cache-local stats. (The exact global
+//! zero-build/zero-compile counter assertions live in
+//! `rust/tests/plan_pipeline.rs`, the single-test race-free binary.)
+
+use gridcollect::collectives::{verify, CollectiveEngine};
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, OpKind, PlanCache, PlanKey};
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::{LevelPolicy, Strategy};
+
+/// Small-integer contributions keep f32 sums exact (far below 2^24), so
+/// the tree fold equals the serial reference bit-for-bit regardless of
+/// association.
+fn int_contributions(n: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|r| (0..len).map(|i| ((r * 7 + i) % 9) as f32).collect()).collect()
+}
+
+#[test]
+fn hybrid_bitwise_equals_reference_for_all_strategies_roots_and_boundaries() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let n = comm.size();
+    let contributions = int_contributions(n, 37);
+    let expect = verify::ref_reduce(&contributions, ReduceOp::Sum);
+    for strategy in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), strategy);
+        for root in [0usize, 3, 10, 19] {
+            let rb = e
+                .allreduce_with(AllreduceAlgo::ReduceBcast, root, ReduceOp::Sum, &contributions)
+                .unwrap();
+            let rsag = e
+                .allreduce_with(
+                    AllreduceAlgo::ReduceScatterAllgather,
+                    root,
+                    ReduceOp::Sum,
+                    &contributions,
+                )
+                .unwrap();
+            for boundary in [0usize, 1, 2, 3, 9] {
+                let hybrid = e
+                    .allreduce_with_policy(
+                        AlgoPolicy::hybrid(boundary),
+                        root,
+                        ReduceOp::Sum,
+                        &contributions,
+                    )
+                    .unwrap();
+                for r in 0..n {
+                    assert_eq!(
+                        hybrid.data[r],
+                        expect,
+                        "{} root {root} b={boundary} rank {r} vs reference",
+                        strategy.name()
+                    );
+                    assert_eq!(hybrid.data[r], rb.data[r], "vs reduce+bcast");
+                    assert_eq!(hybrid.data[r], rsag.data[r], "vs rs+ag");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hybrid_wan_messages_match_reduce_bcast_not_rsag() {
+    // Static claim, checked on PlanMeta (payload-independent) and
+    // confirmed by the simulation counts.
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let cache = PlanCache::new();
+    let key = |op: OpKind| PlanKey {
+        comm_epoch: comm.epoch(),
+        strategy: Strategy::Multilevel,
+        policy: LevelPolicy::paper(),
+        root: 0,
+        op,
+        segments: 1,
+    };
+    let rb = cache
+        .get_or_build(
+            &comm,
+            key(OpKind::Allreduce(
+                ReduceOp::Sum,
+                AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+            )),
+        )
+        .unwrap();
+    let rsag = cache
+        .get_or_build(
+            &comm,
+            key(OpKind::Allreduce(
+                ReduceOp::Sum,
+                AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+            )),
+        )
+        .unwrap();
+    for boundary in [1usize, 2] {
+        let hybrid = cache
+            .get_or_build(
+                &comm,
+                key(OpKind::Allreduce(ReduceOp::Sum, AlgoPolicy::hybrid(boundary))),
+            )
+            .unwrap();
+        assert_eq!(
+            hybrid.meta.wan_messages(),
+            rb.meta.wan_messages(),
+            "b={boundary}: hybrid pays reduce+bcast's WAN price"
+        );
+        assert!(
+            hybrid.meta.wan_messages() < rsag.meta.wan_messages(),
+            "b={boundary}: strictly fewer WAN messages than uniform rs+ag"
+        );
+    }
+    // Fig. 4 structure: one WAN edge, crossed once per direction.
+    assert_eq!(rb.meta.wan_messages(), 2);
+    assert_eq!(rsag.meta.wan_messages(), 3);
+
+    // The simulation agrees with the static meta.
+    let n = comm.size();
+    let contributions = int_contributions(n, 48);
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let out = e
+        .allreduce_with_policy(AlgoPolicy::hybrid(1), 0, ReduceOp::Sum, &contributions)
+        .unwrap();
+    assert_eq!(out.sim.wan_messages(), 2);
+}
+
+#[test]
+fn hybrid_boundary_extremes_degrade_to_uniform_structures() {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let cache = PlanCache::new();
+    let key = |op: OpKind| PlanKey {
+        comm_epoch: comm.epoch(),
+        strategy: Strategy::Multilevel,
+        policy: LevelPolicy::paper(),
+        root: 0,
+        op,
+        segments: 1,
+    };
+    let rb = cache
+        .get_or_build(
+            &comm,
+            key(OpKind::Allreduce(
+                ReduceOp::Sum,
+                AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+            )),
+        )
+        .unwrap();
+    let rsag = cache
+        .get_or_build(
+            &comm,
+            key(OpKind::Allreduce(
+                ReduceOp::Sum,
+                AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+            )),
+        )
+        .unwrap();
+    let h0 = cache
+        .get_or_build(&comm, key(OpKind::Allreduce(ReduceOp::Sum, AlgoPolicy::hybrid(0))))
+        .unwrap();
+    let h9 = cache
+        .get_or_build(&comm, key(OpKind::Allreduce(ReduceOp::Sum, AlgoPolicy::hybrid(9))))
+        .unwrap();
+    assert_eq!(h0.meta.msgs_by_sep, rsag.meta.msgs_by_sep, "b=0 == uniform rs+ag");
+    assert_eq!(h9.meta.msgs_by_sep, rb.meta.msgs_by_sep, "b>=levels == uniform rb");
+}
+
+#[test]
+fn warm_hybrid_calls_are_pure_cache_hits() {
+    // Cache-local stats are race-free under parallel test execution.
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let n = comm.size();
+    let contributions = int_contributions(n, 64);
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    e.allreduce_with_policy(AlgoPolicy::hybrid(1), 0, ReduceOp::Sum, &contributions)
+        .unwrap();
+    // Cold: the hybrid plan + its composed reduce phase.
+    assert_eq!(e.plan_cache().misses(), 2, "hybrid + reduce phase");
+    assert_eq!(e.plan_cache().hits(), 0);
+    for _ in 0..5 {
+        e.allreduce_with_policy(AlgoPolicy::hybrid(1), 0, ReduceOp::Sum, &contributions)
+            .unwrap();
+    }
+    assert_eq!(e.plan_cache().misses(), 2, "no warm rebuilds");
+    assert_eq!(e.plan_cache().hits(), 5, "one hit per warm call");
+}

@@ -11,7 +11,7 @@
 use gridcollect::collectives::CollectiveEngine;
 use gridcollect::model::presets;
 use gridcollect::netsim::ReduceOp;
-use gridcollect::plan::AllreduceAlgo;
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::counters;
@@ -61,6 +61,31 @@ fn warm_path_performs_zero_tree_builds_and_zero_program_compiles() {
     assert_eq!(warm.program_compiles, 0, "warm path must never compile a program");
     assert_eq!(warm.plan_cache_misses, 0, "every warm call is a cache hit");
     assert_eq!(warm.plan_cache_hits, 50, "10 rounds x 5 ops");
+
+    // Hybrid allreduce, cold: composes the *cached* reduce phase with a
+    // freshly compiled per-level delivery program — zero new tree builds,
+    // exactly one compile, one plan-cache miss (the hybrid plan itself).
+    let before_hybrid = counters::snapshot();
+    e.allreduce_with_policy(AlgoPolicy::hybrid(1), 0, ReduceOp::Sum, &contributions)
+        .unwrap();
+    let cold_h = counters::snapshot().since(&before_hybrid);
+    assert_eq!(cold_h.tree_builds, 0, "hybrid reuses the cached reduce tree");
+    assert_eq!(cold_h.program_compiles, 1, "only the delivery phase compiles");
+    assert_eq!(cold_h.plan_cache_misses, 1, "the hybrid plan itself");
+    assert_eq!(cold_h.plan_cache_hits, 1, "reduce phase served warm");
+
+    // Hybrid allreduce, warm: pure cache hits — zero builds, zero
+    // compiles (the acceptance criterion for the per-level policy).
+    let before_hw = counters::snapshot();
+    for _ in 0..10 {
+        e.allreduce_with_policy(AlgoPolicy::hybrid(1), 0, ReduceOp::Sum, &contributions)
+            .unwrap();
+    }
+    let warm_h = counters::snapshot().since(&before_hw);
+    assert_eq!(warm_h.tree_builds, 0, "warm hybrid must never build a tree");
+    assert_eq!(warm_h.program_compiles, 0, "warm hybrid must never compile");
+    assert_eq!(warm_h.plan_cache_misses, 0);
+    assert_eq!(warm_h.plan_cache_hits, 10);
 
     // Results stay correct on the warm path.
     let out = e.allreduce(ReduceOp::Sum, &contributions).unwrap();

@@ -135,6 +135,7 @@ fn prop_shapes_span_arbitrary_member_subsets() {
                 TreeShape::Chain,
                 TreeShape::Fibonacci(2),
                 TreeShape::Fibonacci(5),
+                TreeShape::DistanceHalving,
             ]);
             (cap, members, root, shape)
         },
