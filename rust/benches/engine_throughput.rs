@@ -1,0 +1,131 @@
+//! Bench: engine throughput — full vs ghost execution on the
+//! ready-queue core, with the retained rescan scheduler as the third
+//! point of comparison (full-rescan vs full vs ghost).
+//!
+//! The workload is the Fig. 8 sweep point: one fused simulation of the
+//! whole Fig. 7 rotation (n broadcasts + n ack-barriers) against the
+//! engine's memoized rotation schedule. Each measured case is the
+//! complete per-point cost — initial-register construction plus one
+//! engine run — exactly what `timing_app::run_point_with` pays per
+//! sweep point in each mode. A second workload measures the boundary
+//! tuner (`tune_allreduce_boundary`), whose warm sweep is the
+//! ghost engine's payoff path.
+//!
+//! Reported per case: wall time and actions/sec (retired program
+//! actions per second of engine wall time). The summary table records
+//! the ghost-vs-full speedup per payload size — the perf-trajectory
+//! number the ISSUE 4 acceptance tracks.
+//!
+//! Run: `cargo bench --bench engine_throughput`
+//! Smoke (CI): `cargo bench --bench engine_throughput -- --smoke`
+//! Reports land in `target/bench-reports/` (md/csv + BENCH_*.json).
+
+use gridcollect::benchkit::{save_bench_json, save_report, section, Bench, BenchResult};
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::coordinator::{rotation_schedule_memo, tuning};
+use gridcollect::netsim::{run_rescan, GhostPayload, NativeCombiner, Payload, ReduceOp, SimConfig};
+use gridcollect::tree::Strategy;
+use gridcollect::util::fmt::{self, Table};
+use std::time::Duration;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let bench = if smoke {
+        // 1 sample: CI smoke mode only checks the harness runs end to end.
+        Bench { warmup_iters: 0, min_iters: 1, max_iters: 1, target: Duration::ZERO }
+    } else {
+        Bench::default()
+    };
+    let sizes: Vec<usize> = if smoke { vec![65536] } else { vec![4096, 65536, 1 << 20] };
+
+    let comm = gridcollect::coordinator::experiment::paper_comm();
+    let params = gridcollect::coordinator::experiment::paper_params();
+    let n = comm.size();
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    section("fig8 sweep point, warm engine — full-rescan vs full vs ghost");
+    let engine = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
+    let schedule = rotation_schedule_memo(&engine).unwrap();
+    let actions = schedule.program().total_actions();
+    let rescan_cfg = SimConfig::new(params.clone());
+    let mut summary = Table::new(&[
+        "msg size", "rescan-full", "full", "ghost", "ghost vs full", "ghost actions/s",
+    ]);
+    for &bytes in &sizes {
+        let elems = bytes / 4;
+        let label = fmt::bytes(bytes);
+        let rescan = bench.run(&format!("point/warm/rescan-full/{label}"), || {
+            let mut init = vec![Payload::empty(); n];
+            init[0] = Payload::single(0, vec![1.0f32; elems]);
+            let c = comm.clustering();
+            let prog = schedule.program();
+            let sim = run_rescan(c, prog, init, &rescan_cfg, &NativeCombiner).unwrap();
+            std::hint::black_box(sim.makespan_us);
+        });
+        let full = bench.run(&format!("point/warm/full/{label}"), || {
+            let mut init = vec![Payload::empty(); n];
+            init[0] = Payload::single(0, vec![1.0f32; elems]);
+            let sim = engine.run_schedule(&schedule, init).unwrap();
+            std::hint::black_box(sim.makespan_us);
+        });
+        let ghost = bench.run(&format!("point/warm/ghost/{label}"), || {
+            let mut init = vec![GhostPayload::empty(); n];
+            init[0] = GhostPayload::single(0, elems);
+            let sim = engine.run_schedule_timing(&schedule, init).unwrap();
+            std::hint::black_box(sim.makespan_us);
+        });
+        let speedup = full.median_us / ghost.median_us.max(1e-9);
+        let actions_per_sec = actions as f64 / (ghost.median_us.max(1e-9) / 1e6);
+        summary.row(&[
+            label,
+            fmt::time_us(rescan.median_us),
+            fmt::time_us(full.median_us),
+            fmt::time_us(ghost.median_us),
+            format!("{speedup:.2}x"),
+            format!("{actions_per_sec:.0}"),
+        ]);
+        results.push(rescan);
+        results.push(full);
+        results.push(ghost);
+    }
+    print!("{}", summary.to_markdown());
+    save_report("engine_throughput_summary", &summary);
+
+    section("fig8 sweep point, cold engine — plan builds + schedule assembly included");
+    for &bytes in &sizes {
+        let label = fmt::bytes(bytes);
+        results.push(bench.run(&format!("point/cold/ghost/{label}"), || {
+            let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
+            let p = gridcollect::coordinator::run_point_with(&e, bytes).unwrap();
+            std::hint::black_box(p.total_us);
+        }));
+    }
+
+    section("boundary tuner — full candidate sweep per call");
+    let tuned = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
+    tuning::tune_allreduce_boundary(&tuned, ReduceOp::Sum, sizes[0]).unwrap(); // prime plans
+    for &bytes in &sizes {
+        let label = fmt::bytes(bytes);
+        results.push(bench.run(&format!("tune/warm/{label}"), || {
+            let t = tuning::tune_allreduce_boundary(&tuned, ReduceOp::Sum, bytes).unwrap();
+            std::hint::black_box(t.best_us);
+        }));
+        results.push(bench.run(&format!("tune/cold/{label}"), || {
+            let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
+            let t = tuning::tune_allreduce_boundary(&e, ReduceOp::Sum, bytes).unwrap();
+            std::hint::black_box(t.best_us);
+        }));
+    }
+
+    let mut wall = Table::new(&["case", "median us", "mean us", "iters"]);
+    for r in &results {
+        wall.row(&[
+            r.name.clone(),
+            format!("{:.1}", r.median_us),
+            format!("{:.1}", r.mean_us),
+            r.iters.to_string(),
+        ]);
+    }
+    save_report("engine_throughput_wall", &wall);
+    save_bench_json("engine_throughput", &results);
+}

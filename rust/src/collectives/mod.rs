@@ -23,7 +23,8 @@ pub use request::OpSpec;
 use crate::error::{Error, Result};
 use crate::model::NetworkParams;
 use crate::netsim::{
-    run, Combiner, NativeCombiner, Payload, Program, ReduceOp, SimConfig, SimResult,
+    run_indexed, run_timing_indexed, ChannelIndex, Combiner, GhostPayload, NativeCombiner,
+    Payload, Program, ReduceOp, SimConfig, SimResult,
 };
 use crate::plan::{
     AlgoPolicy, AllreduceAlgo, CollectivePlan, OpKind, PlanCache, PlanKey, Schedule,
@@ -31,7 +32,8 @@ use crate::plan::{
 };
 use crate::topology::{Communicator, Rank};
 use crate::tree::{LevelPolicy, Strategy};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Outcome of a data-carrying collective: simulator metrics plus the
 /// delivered data.
@@ -63,6 +65,11 @@ pub struct CollectiveEngine<'a> {
     policy: LevelPolicy,
     allreduce_policy: AlgoPolicy,
     cache: Arc<PlanCache>,
+    /// Memoized fused schedules, keyed by caller-chosen names (e.g. the
+    /// Fig. 7 rotation). A schedule depends only on the engine's
+    /// topology/strategy/policy — never on payload sizes — so sweeps
+    /// assemble it once (see [`CollectiveEngine::memo_schedule`]).
+    schedules: Mutex<HashMap<String, Arc<Schedule>>>,
 }
 
 impl<'a> CollectiveEngine<'a> {
@@ -76,6 +83,7 @@ impl<'a> CollectiveEngine<'a> {
             policy: LevelPolicy::paper(),
             allreduce_policy: AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast),
             cache: Arc::new(PlanCache::new()),
+            schedules: Mutex::new(HashMap::new()),
         }
     }
 
@@ -158,9 +166,32 @@ impl<'a> CollectiveEngine<'a> {
     }
 
     /// Stage-3 entry point for fused schedules: execute the schedule's
-    /// program as a single `netsim::run` under this engine's cost model
+    /// program as a single `netsim` run under this engine's cost model
     /// and combiner.
     pub fn run_schedule(&self, schedule: &Schedule, init: Vec<Payload>) -> Result<SimResult> {
+        self.check_schedule_epoch(schedule)?;
+        self.execute(schedule.program(), schedule.channels(), init)
+    }
+
+    /// [`CollectiveEngine::run_schedule`], ghost mode: one timing-only
+    /// simulation of the whole schedule. Identical timing and accounting
+    /// fields, no payload allocation, empty `SimResult::payloads`.
+    pub fn run_schedule_timing(
+        &self,
+        schedule: &Schedule,
+        init: Vec<GhostPayload>,
+    ) -> Result<SimResult> {
+        self.check_schedule_epoch(schedule)?;
+        run_timing_indexed(
+            self.comm.clustering(),
+            schedule.program(),
+            schedule.channels(),
+            init,
+            &self.cfg,
+        )
+    }
+
+    fn check_schedule_epoch(&self, schedule: &Schedule) -> Result<()> {
         if schedule.comm_epoch() != self.comm.epoch() {
             return Err(Error::Comm(format!(
                 "schedule epoch {} does not match communicator epoch {}",
@@ -168,7 +199,27 @@ impl<'a> CollectiveEngine<'a> {
                 self.comm.epoch()
             )));
         }
-        self.execute(schedule.program(), init)
+        Ok(())
+    }
+
+    /// Memoized schedule slot: return the schedule cached under `key`,
+    /// building it with `build` (once) on the first call. Assembly of a
+    /// fused schedule is payload-independent — clone + rebase +
+    /// re-validate of every segment — so sweeps that execute the same
+    /// schedule at many payload sizes hoist it here; the
+    /// `schedule_builds` stage counter enforces the single build.
+    pub fn memo_schedule(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<Schedule>,
+    ) -> Result<Arc<Schedule>> {
+        if let Some(s) = self.schedules.lock().unwrap().get(key) {
+            return Ok(s.clone());
+        }
+        // Build outside the lock: assembly consults the plan cache.
+        let built = Arc::new(build()?);
+        let mut map = self.schedules.lock().unwrap();
+        Ok(map.entry(key.to_string()).or_insert(built).clone())
     }
 
     /// Stage-2 entry point: fetch (or build once) the compiled plan for
@@ -199,9 +250,14 @@ impl<'a> CollectiveEngine<'a> {
     }
 
     /// Stage-3 entry point: run a compiled program against this call's
-    /// initial payloads.
-    fn execute(&self, prog: &Program, init: Vec<Payload>) -> Result<SimResult> {
-        run(self.comm.clustering(), prog, init, &self.cfg, self.combiner)
+    /// initial payloads, with its precomputed channel index.
+    fn execute(
+        &self,
+        prog: &Program,
+        channels: &ChannelIndex,
+        init: Vec<Payload>,
+    ) -> Result<SimResult> {
+        run_indexed(self.comm.clustering(), prog, channels, init, &self.cfg, self.combiner)
     }
 
     /// The generic request path every collective flows through:
@@ -235,7 +291,34 @@ impl<'a> CollectiveEngine<'a> {
         // that index by root rely on.
         let plan = self.plan_for(request.root(), request.op_kind(), request.segments())?;
         let init = request.encode_init(self.comm)?;
-        self.execute(&plan.program, init)
+        self.execute(&plan.program, &plan.channels, init)
+    }
+
+    /// [`CollectiveEngine::run_sim`], ghost mode: the request layer
+    /// plans (warm: cache hit) but skips `encode_init` and `decode` —
+    /// initial registers are the request's [`OpSpec::encode_ghost`]
+    /// shapes and execution is timing-only. Every timing and accounting
+    /// field is bit-identical to the full run's; `SimResult::payloads`
+    /// is empty.
+    ///
+    /// ```
+    /// use gridcollect::collectives::{request, CollectiveEngine};
+    /// use gridcollect::model::presets;
+    /// use gridcollect::topology::{Communicator, TopologySpec};
+    /// use gridcollect::tree::Strategy;
+    ///
+    /// let comm = Communicator::world(&TopologySpec::paper_fig1());
+    /// let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    /// let full = e.run_sim(&request::Bcast { root: 0, data: &[1.0; 64] }).unwrap();
+    /// let ghost = e.simulate_timing(&request::Bcast { root: 0, data: &[1.0; 64] }).unwrap();
+    /// assert_eq!(full.makespan_us, ghost.makespan_us);
+    /// assert!(ghost.payloads.is_empty());
+    /// ```
+    pub fn simulate_timing(&self, request: &dyn OpSpec) -> Result<SimResult> {
+        let plan = self.plan_for(request.root(), request.op_kind(), request.segments())?;
+        let init = request.encode_ghost(self.comm)?;
+        let clustering = self.comm.clustering();
+        run_timing_indexed(clustering, &plan.program, &plan.channels, init, &self.cfg)
     }
 
     /// MPI_Bcast: `data` flows from `root` to every rank.
@@ -634,6 +717,60 @@ mod tests {
         let (best, us) = e.tune_bcast_segments(0, &data, &[1, 4]).unwrap();
         assert!(best == 1 || best == 4);
         assert!(us.is_finite());
+    }
+
+    #[test]
+    fn simulate_timing_matches_run_sim() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let e = engine(Strategy::Multilevel, &comm);
+        let contributions: Vec<Vec<f32>> =
+            (0..comm.size()).map(|r| vec![r as f32; 33]).collect();
+        let req = request::Allreduce {
+            root: 0,
+            op: ReduceOp::Sum,
+            policy: AlgoPolicy::hybrid(1),
+            contributions: &contributions,
+        };
+        let full = e.run_sim(&req).unwrap();
+        let ghost = e.simulate_timing(&req).unwrap();
+        assert_eq!(full.finish_us, ghost.finish_us);
+        assert_eq!(full.msgs_by_sep, ghost.msgs_by_sep);
+        assert_eq!(full.bytes_by_sep, ghost.bytes_by_sep);
+        assert_eq!(full.combines, ghost.combines);
+        assert!(ghost.payloads.is_empty());
+        // The data-free probe lands on the same cached plan and timing.
+        let probe = request::AllreduceProbe {
+            root: 0,
+            op: ReduceOp::Sum,
+            policy: AlgoPolicy::hybrid(1),
+            elems: 33,
+        };
+        let probed = e.simulate_timing(&probe).unwrap();
+        assert_eq!(probed.finish_us, full.finish_us);
+        assert!(e.run(&probe).is_err(), "probes have no data path");
+    }
+
+    #[test]
+    fn memo_schedule_builds_once_and_shares() {
+        let spec = TopologySpec::paper_fig1();
+        let comm = Communicator::world(&spec);
+        let e = engine(Strategy::Multilevel, &comm);
+        let a = e.memo_schedule("allreduce", || e.allreduce_schedule(0, ReduceOp::Sum)).unwrap();
+        let b = e
+            .memo_schedule("allreduce", || panic!("memoized schedule must not rebuild"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "one assembly per key per engine");
+        // Ghost execution of the memoized schedule times like the full one.
+        let n = comm.size();
+        let full_init: Vec<Payload> =
+            (0..n).map(|r| Payload::single(0, vec![r as f32; 16])).collect();
+        let ghost_init: Vec<crate::netsim::GhostPayload> =
+            full_init.iter().map(crate::netsim::GhostPayload::of).collect();
+        let full = e.run_schedule(&a, full_init).unwrap();
+        let ghost = e.run_schedule_timing(&a, ghost_init).unwrap();
+        assert_eq!(full.finish_us, ghost.finish_us);
+        assert_eq!(full.mark_times_us, ghost.mark_times_us);
     }
 
     #[test]

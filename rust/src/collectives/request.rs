@@ -24,7 +24,7 @@
 //! validation and result extraction.
 
 use crate::error::{Error, Result};
-use crate::netsim::{Payload, Program, ReduceOp, SimResult};
+use crate::netsim::{GhostPayload, Payload, Program, ReduceOp, SimResult};
 use crate::plan::{AlgoPolicy, BytesModel, OpKind};
 use crate::topology::{Clustering, Communicator, Rank};
 use crate::tree::Tree;
@@ -53,6 +53,16 @@ pub trait OpSpec {
     /// Validate the inputs and build every rank's initial payload
     /// register.
     fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>>;
+
+    /// Ghost (timing-only) initial registers: the per-key *lengths* of
+    /// exactly what [`OpSpec::encode_init`] would build, for
+    /// `CollectiveEngine::simulate_timing`. The default derives them by
+    /// materializing the full payloads and stripping the data — correct
+    /// for every spec by construction. Timing-hot specs override it with
+    /// pure integer constructions that allocate no payload data.
+    fn encode_ghost(&self, comm: &Communicator) -> Result<Vec<GhostPayload>> {
+        Ok(self.encode_init(comm)?.iter().map(GhostPayload::of).collect())
+    }
 
     /// Extract the per-rank result data from a finished simulation.
     fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>>;
@@ -126,6 +136,12 @@ impl OpSpec for Bcast<'_> {
         Ok(init)
     }
 
+    fn encode_ghost(&self, comm: &Communicator) -> Result<Vec<GhostPayload>> {
+        let mut init = vec![GhostPayload::empty(); comm.size()];
+        init[self.root] = GhostPayload::single(self.root, self.data.len());
+        Ok(init)
+    }
+
     fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
         Ok((0..comm.size())
             .map(|r| sim.payloads[r].get_cloned(&self.root).unwrap_or_default())
@@ -161,6 +177,12 @@ impl OpSpec for Reduce<'_> {
         Ok(init)
     }
 
+    fn encode_ghost(&self, comm: &Communicator) -> Result<Vec<GhostPayload>> {
+        check_contribs(comm, self.contributions)?;
+        let len = self.contributions[0].len();
+        Ok(vec![GhostPayload::single(0, len); comm.size()])
+    }
+
     fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
         Ok((0..comm.size())
             .map(|r| sim.payloads[r].get_cloned(&0).unwrap_or_default())
@@ -179,6 +201,10 @@ impl OpSpec for Barrier {
 
     fn encode_init(&self, comm: &Communicator) -> Result<Vec<Payload>> {
         Ok(vec![Payload::empty(); comm.size()])
+    }
+
+    fn encode_ghost(&self, comm: &Communicator) -> Result<Vec<GhostPayload>> {
+        Ok(vec![GhostPayload::empty(); comm.size()])
     }
 
     fn decode(&self, comm: &Communicator, _sim: &SimResult) -> Result<Vec<Vec<f32>>> {
@@ -324,6 +350,12 @@ impl OpSpec for Allreduce<'_> {
         Ok(init)
     }
 
+    fn encode_ghost(&self, comm: &Communicator) -> Result<Vec<GhostPayload>> {
+        check_contribs(comm, self.contributions)?;
+        let len = self.contributions[0].len();
+        Ok(allreduce_ghost_init(comm.size(), len, self.policy))
+    }
+
     fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
         let n = comm.size();
         if !self.policy.is_chunked() {
@@ -347,6 +379,61 @@ impl OpSpec for Allreduce<'_> {
             data.push(flat);
         }
         Ok(data)
+    }
+}
+
+/// The per-rank ghost register shape of an allreduce under `policy`:
+/// one key-0 segment of `elems` (uniform reduce+bcast) or the
+/// `{q: chunk_q}` map of every chunked policy — pure integer arithmetic,
+/// shared by [`Allreduce::encode_ghost`] and [`AllreduceProbe`].
+fn allreduce_ghost_init(n: usize, elems: usize, policy: AlgoPolicy) -> Vec<GhostPayload> {
+    if !policy.is_chunked() {
+        return vec![GhostPayload::single(0, elems); n];
+    }
+    let mut pl = GhostPayload::empty();
+    for (q, &(lo, hi)) in chunk_ranges(elems, n).iter().enumerate() {
+        pl.push_segment(q, hi - lo);
+    }
+    vec![pl; n]
+}
+
+/// Timing-only allreduce request: carries the payload *shape* (element
+/// count) instead of data, so a tuner probe neither materializes `n`
+/// contribution vectors nor touches payload memory at all — the
+/// per-probe currency of `tune_allreduce_boundary`. Only the ghost path
+/// is supported: drive it through `CollectiveEngine::simulate_timing`;
+/// `encode_init`/`decode` error.
+pub struct AllreduceProbe {
+    pub root: Rank,
+    pub op: ReduceOp,
+    pub policy: AlgoPolicy,
+    /// Element count of each rank's (virtual) contribution.
+    pub elems: usize,
+}
+
+impl OpSpec for AllreduceProbe {
+    fn op_kind(&self) -> OpKind {
+        OpKind::Allreduce(self.op, self.policy)
+    }
+
+    fn root(&self) -> Rank {
+        self.root
+    }
+
+    fn encode_init(&self, _comm: &Communicator) -> Result<Vec<Payload>> {
+        Err(Error::Comm(
+            "allreduce probe is timing-only: drive it through simulate_timing".into(),
+        ))
+    }
+
+    fn encode_ghost(&self, comm: &Communicator) -> Result<Vec<GhostPayload>> {
+        Ok(allreduce_ghost_init(comm.size(), self.elems, self.policy))
+    }
+
+    fn decode(&self, _comm: &Communicator, _sim: &SimResult) -> Result<Vec<Vec<f32>>> {
+        Err(Error::Comm(
+            "allreduce probe is timing-only: there is no data to decode".into(),
+        ))
     }
 }
 
@@ -531,6 +618,16 @@ impl OpSpec for BcastSegmented<'_> {
         Ok(init)
     }
 
+    fn encode_ghost(&self, comm: &Communicator) -> Result<Vec<GhostPayload>> {
+        let mut root_payload = GhostPayload::empty();
+        for (i, &(lo, hi)) in chunk_ranges(self.data.len(), self.segs()).iter().enumerate() {
+            root_payload.push_segment(i, hi - lo);
+        }
+        let mut init = vec![GhostPayload::empty(); comm.size()];
+        init[self.root] = root_payload;
+        Ok(init)
+    }
+
     fn decode(&self, comm: &Communicator, sim: &SimResult) -> Result<Vec<Vec<f32>>> {
         let segs = self.segs();
         Ok((0..comm.size())
@@ -623,6 +720,51 @@ mod tests {
                 .unwrap();
             let standalone = spec.compile(clustering, &plan.tree, PLAN_BASE_TAG).unwrap();
             assert_eq!(standalone.actions, plan.program.actions, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn ghost_overrides_match_the_derived_encoding() {
+        // Every hand-written `encode_ghost` must equal the shape of
+        // `encode_init` (the default derivation) — the bit-equality of
+        // timing runs rests on it.
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let n = comm.size();
+        let data: Vec<f32> = (0..37).map(|i| i as f32).collect();
+        let contributions: Vec<Vec<f32>> = (0..n).map(|_| data.clone()).collect();
+        let shape_of = |init: &[Payload]| -> Vec<GhostPayload> {
+            init.iter().map(GhostPayload::of).collect()
+        };
+        let specs: Vec<Box<dyn OpSpec + '_>> = vec![
+            Box::new(Bcast { root: 3, data: &data }),
+            Box::new(Reduce { root: 2, op: ReduceOp::Sum, contributions: &contributions }),
+            Box::new(Barrier),
+            Box::new(BcastSegmented { root: 1, data: &data, n_segments: 5 }),
+        ];
+        for spec in &specs {
+            let full = spec.encode_init(&comm).unwrap();
+            assert_eq!(spec.encode_ghost(&comm).unwrap(), shape_of(&full), "{}", spec.name());
+        }
+        for policy in [
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+            AlgoPolicy::hybrid(1),
+        ] {
+            let ar = Allreduce {
+                root: 0,
+                op: ReduceOp::Sum,
+                policy,
+                contributions: &contributions,
+            };
+            let full = ar.encode_init(&comm).unwrap();
+            let ghost = ar.encode_ghost(&comm).unwrap();
+            assert_eq!(ghost, shape_of(&full), "{}", policy.name());
+            // The data-free probe builds the identical shape from the
+            // element count alone.
+            let probe =
+                AllreduceProbe { root: 0, op: ReduceOp::Sum, policy, elems: data.len() };
+            assert_eq!(probe.encode_ghost(&comm).unwrap(), ghost, "{}", policy.name());
+            assert!(probe.encode_init(&comm).is_err(), "probe has no data path");
         }
     }
 

@@ -1,14 +1,19 @@
 //! L3 coordination: the Fig. 7 timing application, the experiment drivers
-//! behind every reproduced table/figure, and the end-to-end data-parallel
-//! training orchestrator.
+//! behind every reproduced table/figure, the allreduce-boundary
+//! autotuner, and the end-to-end data-parallel training orchestrator.
 
 pub mod experiment;
 pub mod report;
 pub mod timing_app;
 pub mod training;
+pub mod tuning;
 
 pub use timing_app::{
-    ack_barrier_program, default_sizes, fig8_sweep, rotation_schedule, run_point,
-    run_point_separate, run_point_with, TimingPoint,
+    ack_barrier_program, default_sizes, fig8_sweep, rotation_schedule, rotation_schedule_memo,
+    run_point, run_point_separate, run_point_with, TimingPoint,
 };
 pub use training::{train, StepLog, TrainConfig};
+pub use tuning::{
+    boundary_candidates, boundary_tuning_table, tune_allreduce_boundary, BoundaryProbe,
+    BoundaryTuning,
+};

@@ -10,19 +10,27 @@
 //! Fidelity note: the paper measures `t1 - t0` over one *continuous* run
 //! of the whole rotation, so [`run_point`] fuses the 2n phases (n
 //! broadcasts, n ack-barriers) into a single [`Schedule`] and executes
-//! **one** `netsim::run` per point. Summing per-phase makespans of
+//! **one** engine run per point. Summing per-phase makespans of
 //! isolated simulations — the pre-fusion implementation, kept as
 //! [`run_point_separate`] for A/B comparison — erases every cross-phase
 //! effect: a straggler rank entering the next broadcast late, ack/GO
-//! control traffic overlapping the tail of a broadcast. On a warm
-//! [`crate::plan::PlanCache`] the fused point performs zero tree builds,
-//! zero program compiles, and exactly one engine invocation (asserted in
-//! `rust/tests/fused_timing.rs`).
+//! control traffic overlapping the tail of a broadcast.
+//!
+//! Perf note: a timing point only needs *timing*, so [`run_point_with`]
+//! executes the rotation in **ghost mode**
+//! ([`CollectiveEngine::run_schedule_timing`]) — bit-identical virtual
+//! times, zero payload allocation — against the engine's **memoized**
+//! rotation schedule ([`rotation_schedule_memo`]): the schedule is
+//! payload-independent, so a warm sweep point performs zero tree builds,
+//! zero compiles, zero schedule assemblies and exactly one engine
+//! invocation (asserted in `rust/tests/fused_timing.rs`).
 
 use crate::collectives::CollectiveEngine;
 use crate::error::Result;
 use crate::model::NetworkParams;
-use crate::netsim::{run, Combiner, Merge, NativeCombiner, Payload, Program, SendPart, SimConfig};
+use crate::netsim::{
+    run, Combiner, GhostPayload, Merge, NativeCombiner, Payload, Program, SendPart, SimConfig,
+};
 use crate::plan::{OpKind, PlanCache, Schedule};
 use crate::topology::Communicator;
 use crate::tree::Strategy;
@@ -82,20 +90,30 @@ pub fn rotation_schedule(engine: &CollectiveEngine) -> Result<Schedule> {
     b.build()
 }
 
+/// The engine's memoized Fig. 7 rotation (built once per engine via
+/// [`CollectiveEngine::memo_schedule`]; the schedule depends only on the
+/// engine's topology/strategy, never on the payload size). Sweeps and
+/// benches share this slot so a warm point re-assembles nothing.
+pub fn rotation_schedule_memo(engine: &CollectiveEngine) -> Result<Arc<Schedule>> {
+    engine.memo_schedule("fig7-rotation", || rotation_schedule(engine))
+}
+
 /// Run the Fig. 7 application for one message size on `engine`, as a
-/// **single fused simulation** of the whole rotation.
+/// **single fused ghost simulation** of the whole rotation (the point
+/// only reports timing, and ghost timing is bit-identical to the full
+/// run's — `rust/tests/ghost_equivalence.rs`).
 ///
-/// Only rank 0 (the first root) is seeded with data: every later root
-/// re-broadcasts the payload it received in an earlier phase, exactly as
-/// the paper's application broadcasts same-sized buffers in turn — wire
-/// bytes per phase are identical to the isolated runs.
+/// Only rank 0 (the first root) is seeded: every later root
+/// re-broadcasts the register it received in an earlier phase, exactly
+/// as the paper's application broadcasts same-sized buffers in turn —
+/// wire bytes per phase are identical to the isolated runs.
 pub fn run_point_with(engine: &CollectiveEngine, bytes: usize) -> Result<TimingPoint> {
     assert_eq!(bytes % 4, 0, "message size must be f32-aligned");
     let n = engine.comm().size();
-    let schedule = rotation_schedule(engine)?;
-    let mut init = vec![Payload::empty(); n];
-    init[0] = Payload::single(0, vec![1.0f32; bytes / 4]);
-    let sim = engine.run_schedule(&schedule, init)?;
+    let schedule = rotation_schedule_memo(engine)?;
+    let mut init = vec![GhostPayload::empty(); n];
+    init[0] = GhostPayload::single(0, bytes / 4);
+    let sim = engine.run_schedule_timing(&schedule, init)?;
     let durations = schedule.segment_durations(&sim)?;
 
     let mut bcast_us_sum = 0.0;

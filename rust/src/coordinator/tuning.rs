@@ -1,0 +1,183 @@
+//! Empirical autotuning of the allreduce composition boundary — the
+//! ghost-payload engine's payoff feature.
+//!
+//! `AlgoPolicy` made the per-level composition a *plan-key parameter*
+//! (PR 3); what was missing was a cheap way to pick it. cs/0408034
+//! (*Fast Tuning of Intra-Cluster Collective Communications*) shows that
+//! sweep-based tuning is practical exactly when each probe is nearly
+//! free, and cs/0408033's logical-cluster construction assumes the same
+//! cheap-probe loop at every topology level. Ghost-mode simulation makes
+//! a probe exactly that: on a warm plan cache, one candidate costs one
+//! timing-only engine run — **zero tree builds, zero program compiles,
+//! zero payload allocations** (enforced by the stage counters in
+//! `rust/tests/tuning_counters.rs`).
+//!
+//! [`tune_allreduce_boundary`] sweeps every composition candidate — both
+//! uniforms plus `hybrid(b)` for every interior boundary level of the
+//! communicator's clustering — for one (topology, payload size) pair and
+//! returns the makespan-minimizing policy, the way
+//! `CollectiveEngine::tune_bcast_segments` does for segment counts. All
+//! candidates deliver bitwise-identical results (same tree, same combine
+//! association), so the tuner's choice is purely a message-structure
+//! trade-off and needs no re-verification.
+
+use crate::collectives::{request, CollectiveEngine};
+use crate::error::{Error, Result};
+use crate::netsim::ReduceOp;
+use crate::plan::{AlgoPolicy, AllreduceAlgo};
+use crate::util::fmt::{self, Table};
+
+/// One candidate's ghost-probe measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundaryProbe {
+    pub policy: AlgoPolicy,
+    /// Simulated makespan of the allreduce under this policy (us).
+    pub makespan_us: f64,
+    pub wan_msgs: u64,
+    pub total_msgs: u64,
+}
+
+/// The tuner's verdict for one (topology, payload size) pair.
+#[derive(Clone, Debug)]
+pub struct BoundaryTuning {
+    pub bytes: usize,
+    pub op: ReduceOp,
+    /// Every candidate, in sweep order (uniforms first, then ascending
+    /// boundaries).
+    pub probes: Vec<BoundaryProbe>,
+    /// The makespan-minimizing policy (ties break toward the earliest
+    /// candidate, so the preference order is deterministic).
+    pub best: AlgoPolicy,
+    pub best_us: f64,
+}
+
+/// The composition candidates for a clustering of `n_levels` separation
+/// levels: both uniforms, plus `hybrid(b)` for every interior boundary
+/// `1 <= b < n_levels`. (`hybrid(0)` and `hybrid(>= n_levels)` are
+/// structural aliases of the uniforms and are skipped.)
+pub fn boundary_candidates(n_levels: usize) -> Vec<AlgoPolicy> {
+    let mut c = vec![
+        AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+        AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+    ];
+    c.extend((1..n_levels).map(AlgoPolicy::hybrid));
+    c
+}
+
+/// Sweep every composition candidate for an allreduce of `bytes` on
+/// `engine`'s topology via ghost probes, and return the winner.
+///
+/// Probes run through [`CollectiveEngine::simulate_timing`] with a
+/// data-free [`request::AllreduceProbe`], so a warm sweep is pure
+/// timing-only execution. Plans are cached per policy: the first sweep
+/// compiles each candidate once, every later sweep (any payload size —
+/// plans are size-independent) compiles nothing.
+pub fn tune_allreduce_boundary(
+    engine: &CollectiveEngine,
+    op: ReduceOp,
+    bytes: usize,
+) -> Result<BoundaryTuning> {
+    if bytes % 4 != 0 {
+        return Err(Error::Comm(format!(
+            "tune_allreduce_boundary: payload size {bytes} is not f32-aligned"
+        )));
+    }
+    let elems = bytes / 4;
+    let candidates = boundary_candidates(engine.comm().clustering().n_levels());
+    let mut probes = Vec::with_capacity(candidates.len());
+    for policy in candidates {
+        let probe = request::AllreduceProbe { root: 0, op, policy, elems };
+        let sim = engine.simulate_timing(&probe)?;
+        probes.push(BoundaryProbe {
+            policy,
+            makespan_us: sim.makespan_us,
+            wan_msgs: sim.wan_messages(),
+            total_msgs: sim.msgs_by_sep.iter().sum(),
+        });
+    }
+    let best = probes
+        .iter()
+        .min_by(|a, b| a.makespan_us.total_cmp(&b.makespan_us))
+        .expect("candidate set is never empty (two uniforms)");
+    let (best_policy, best_us) = (best.policy, best.makespan_us);
+    Ok(BoundaryTuning { bytes, op, probes, best: best_policy, best_us })
+}
+
+/// E14 — the winning-policy table: every candidate × every payload size,
+/// with the per-size winner marked. Returns the table plus the raw
+/// tunings (the policy table callers would install).
+pub fn boundary_tuning_table(
+    engine: &CollectiveEngine,
+    op: ReduceOp,
+    sizes: &[usize],
+) -> Result<(Table, Vec<BoundaryTuning>)> {
+    let mut t = Table::new(&[
+        "msg size", "policy", "makespan", "WAN msgs", "total msgs", "winner",
+    ]);
+    let mut tunings = Vec::with_capacity(sizes.len());
+    for &bytes in sizes {
+        let tuning = tune_allreduce_boundary(engine, op, bytes)?;
+        for p in &tuning.probes {
+            t.row(&[
+                fmt::bytes(bytes),
+                p.policy.name(),
+                fmt::time_us(p.makespan_us),
+                p.wan_msgs.to_string(),
+                p.total_msgs.to_string(),
+                if p.policy == tuning.best { "<- best".into() } else { String::new() },
+            ]);
+        }
+        tunings.push(tuning);
+    }
+    Ok((t, tunings))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use crate::topology::{Communicator, TopologySpec};
+    use crate::tree::Strategy;
+
+    #[test]
+    fn candidates_cover_uniforms_and_interior_boundaries() {
+        let c = boundary_candidates(3);
+        assert_eq!(c.len(), 4, "2 uniforms + boundaries 1 and 2");
+        assert_eq!(c[0], AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast));
+        assert_eq!(c[1], AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather));
+        assert_eq!(c[2], AlgoPolicy::hybrid(1));
+        assert_eq!(c[3], AlgoPolicy::hybrid(2));
+        assert_eq!(boundary_candidates(1).len(), 2, "flat clustering: uniforms only");
+    }
+
+    #[test]
+    fn tuner_probes_every_candidate_and_picks_the_min() {
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        let t = tune_allreduce_boundary(&e, ReduceOp::Sum, 65536).unwrap();
+        let n_levels = comm.clustering().n_levels();
+        assert_eq!(t.probes.len(), boundary_candidates(n_levels).len());
+        let min = t
+            .probes
+            .iter()
+            .map(|p| p.makespan_us)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(t.best_us, min, "winner is the sweep minimum");
+        assert!(t.probes.iter().any(|p| p.policy == t.best));
+        // Misaligned sizes are rejected, not rounded.
+        assert!(tune_allreduce_boundary(&e, ReduceOp::Sum, 1001).is_err());
+    }
+
+    #[test]
+    fn tuning_table_rows_and_winner_marks() {
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        let sizes = [4096usize, 65536];
+        let (table, tunings) = boundary_tuning_table(&e, ReduceOp::Sum, &sizes).unwrap();
+        let per_size = boundary_candidates(comm.clustering().n_levels()).len();
+        assert_eq!(table.n_rows(), sizes.len() * per_size);
+        assert_eq!(tunings.len(), sizes.len());
+        let md = table.to_markdown();
+        assert_eq!(md.matches("<- best").count(), sizes.len(), "one winner per size");
+    }
+}

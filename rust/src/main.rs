@@ -7,6 +7,7 @@
 //!                                  # (--fused adds the E13 fused-vs-separate delta table)
 //! gridcollect suite [--size 64k] [--xla]           # E8: 6 ops x 4 strategies
 //! gridcollect allreduce [--size 64k] [--op sum] [--boundary 1] [--xla]   # E12: all compositions
+//! gridcollect tune-boundary [--sizes 4k,64k,1m] [--op sum] [--strategy s]  # E14: ghost autotune
 //! gridcollect cost-model [--size 64k]              # E2: §4 analytic vs sim
 //! gridcollect ablation [--sites 8] [--size 64k]    # E9: WAN tree shapes
 //! gridcollect scaling [--size 64k]                 # E10: site-count scaling
@@ -32,7 +33,7 @@ use gridcollect::topology::{rsl, Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
 
-const USAGE: &str = "usage: gridcollect <fig8|suite|allreduce|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
+const USAGE: &str = "usage: gridcollect <fig8|suite|allreduce|tune-boundary|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
 run `gridcollect help` or see rust/src/main.rs for flag details";
 
 fn main() {
@@ -111,6 +112,35 @@ fn run(raw: Vec<String>) -> Result<()> {
                 "{}",
                 experiment::allreduce_table(size, op, combiner, boundary)?.to_markdown()
             );
+        }
+        "tune-boundary" => {
+            let sizes = args.sizes(&[4096, 65536, 1 << 20])?;
+            let op = args.reduce_op(gridcollect::netsim::ReduceOp::Sum)?;
+            let strategy = args.strategy(Strategy::Multilevel)?;
+            let comm = Communicator::world(&TopologySpec::paper_experiment());
+            let engine = gridcollect::collectives::CollectiveEngine::new(
+                &comm,
+                presets::paper_grid(),
+                strategy,
+            );
+            println!(
+                "E14 — allreduce composition-boundary autotuning ({} strategy, {} ranks,",
+                strategy.name(),
+                comm.size()
+            );
+            println!("ghost probes: timing-only simulation, zero payload allocation):\n");
+            let (table, tunings) =
+                gridcollect::coordinator::tuning::boundary_tuning_table(&engine, op, &sizes)?;
+            print!("{}", table.to_markdown());
+            println!("\nwinning policy per payload size:");
+            for t in &tunings {
+                println!(
+                    "  {:>10}: {} ({})",
+                    fmt::bytes(t.bytes),
+                    t.best.name(),
+                    fmt::time_us(t.best_us)
+                );
+            }
         }
         "cost-model" => {
             // Latency-dominated default (the regime where the §4 closed

@@ -5,16 +5,35 @@
 //! conventions documented in [`crate::model`]: endpoint occupancy, no
 //! shared-link contention (§4 of the paper reasons under the same model).
 //!
-//! The engine is a deterministic worklist fixpoint rather than a global
-//! event heap: each rank's program is sequential, and a message's arrival
-//! time depends only on the *sender's* progress, so ranks can be advanced
-//! in any order until quiescence — with identical results. Quiescence
-//! before completion is a deadlock and is reported with the stuck ranks.
+//! Two orthogonal axes, one core:
+//!
+//! - **Register mode.** The core is generic over [`Register`]: [`run`]
+//!   executes full [`Payload`]s (real f32 segments, semantic
+//!   verification), [`run_timing`] executes [`GhostPayload`]s (per-key
+//!   lengths only). The cost model prices messages exclusively through
+//!   `n_bytes()`, so both modes produce **bit-identical**
+//!   `finish_us` / `makespan_us` / `msgs_by_sep` / `bytes_by_sep` /
+//!   `mark_times_us`; ghost mode allocates no payload data and performs
+//!   no combine arithmetic.
+//! - **Scheduling.** Ranks advance through an event-driven ready queue:
+//!   a rank blocked on a `Recv` parks in a per-channel wait slot and is
+//!   woken by the matching `Send`, so each scheduling step is O(ready
+//!   work) instead of the previous fixpoint loop's O(n_ranks) rescans of
+//!   blocked ranks. Channel lookup is a dense [`ChannelIndex`] (cached
+//!   on plans/schedules; rebuilt per call for ad-hoc programs), so warm
+//!   executions hash nothing. Results are order-independent: each rank's
+//!   program is sequential and arrival times depend only on the sender's
+//!   progress, so any scheduling order yields identical clocks — the old
+//!   rescan loop survives as [`run_rescan`], a differential-testing
+//!   oracle.
+//!
+//! Quiescence before completion is a deadlock and is reported with the
+//! stuck ranks.
 
 use crate::error::{Error, Result};
 use crate::model::NetworkParams;
-use crate::netsim::payload::{Combiner, Payload, Rank};
-use crate::netsim::program::{Action, Merge, Program, SendPart};
+use crate::netsim::payload::{Combiner, GhostPayload, NativeCombiner, Payload, Rank, Register};
+use crate::netsim::program::{Action, ChannelIndex, Merge, Program, SendPart};
 use crate::topology::Clustering;
 use crate::util::counters;
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -70,6 +89,9 @@ pub struct SimResult {
     /// Number of combine invocations (reduce arithmetic).
     pub combines: u64,
     /// Final payload register of every rank (for semantic verification).
+    /// **Empty for timing-mode runs** ([`run_timing`]): ghost registers
+    /// carry no data worth returning, and the timing fields above are
+    /// bit-identical to the full run's.
     pub payloads: Vec<Payload>,
     /// Completion timestamp per boundary marker, sorted by marker id:
     /// `(id, t_us)` where `t_us` is the max local clock over every rank
@@ -97,17 +119,369 @@ impl SimResult {
     }
 }
 
-struct RankState {
+struct RankState<R> {
     idx: usize,
     clock: f64,
-    payload: Payload,
+    payload: R,
 }
 
-/// Execute `prog` with the given initial payload registers.
+/// A mailbox channel: zero / one / many in-flight messages. Single-use
+/// channels — the overwhelmingly common case for compiled collectives,
+/// where every `(from, to, tag)` carries exactly one message — never
+/// allocate queue storage.
+enum Chan<R> {
+    Empty,
+    One(f64, R),
+    Many(VecDeque<(f64, R)>),
+}
+
+impl<R> Chan<R> {
+    fn push(&mut self, t: f64, m: R) {
+        match self {
+            Chan::Empty => *self = Chan::One(t, m),
+            Chan::One(..) => {
+                let Chan::One(t0, m0) = std::mem::replace(self, Chan::Empty) else {
+                    unreachable!()
+                };
+                let mut q = VecDeque::with_capacity(2);
+                q.push_back((t0, m0));
+                q.push_back((t, m));
+                *self = Chan::Many(q);
+            }
+            Chan::Many(q) => q.push_back((t, m)),
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, R)> {
+        match self {
+            Chan::Empty => None,
+            Chan::One(..) => {
+                let Chan::One(t, m) = std::mem::replace(self, Chan::Empty) else {
+                    unreachable!()
+                };
+                Some((t, m))
+            }
+            Chan::Many(q) => q.pop_front(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Chan::Empty => 0,
+            Chan::One(..) => 1,
+            Chan::Many(q) => q.len(),
+        }
+    }
+}
+
+/// Everything the generic core produces; mode-specific wrappers shape it
+/// into a [`SimResult`].
+struct RunOutput<R> {
+    finish_us: Vec<f64>,
+    makespan_us: f64,
+    msgs_by_sep: Vec<u64>,
+    bytes_by_sep: Vec<u64>,
+    combines: u64,
+    registers: Vec<R>,
+    mark_times_us: Vec<(u64, f64)>,
+    trace: Vec<TraceEvent>,
+}
+
+/// No rank parked on this channel.
+const NO_WAITER: usize = usize::MAX;
+
+/// The mode-generic ready-queue core shared by [`run`] and
+/// [`run_timing`].
+fn run_core<R: Register>(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    initial: Vec<R>,
+    cfg: &SimConfig,
+    combiner: &dyn Combiner,
+) -> Result<RunOutput<R>> {
+    let n = prog.n_ranks();
+    if clustering.n_ranks() != n {
+        return Err(Error::Sim(format!(
+            "clustering has {} ranks, program has {n}",
+            clustering.n_ranks()
+        )));
+    }
+    if initial.len() != n {
+        return Err(Error::Sim(format!("initial payloads: {} != {n}", initial.len())));
+    }
+    if !index.matches(prog) {
+        return Err(Error::Sim("channel index does not match program shape".into()));
+    }
+    // Shape coincidence is not identity: catch a stale index exactly in
+    // debug builds (tests), keep warm release runs O(1) here.
+    debug_assert!(
+        index.consistent_with(prog),
+        "channel index was built for a different program of the same shape"
+    );
+    counters::count_sim_run();
+    let n_levels = clustering.n_levels();
+    let mut states: Vec<RankState<R>> = initial
+        .into_iter()
+        .map(|payload| RankState { idx: 0, clock: 0.0, payload })
+        .collect();
+    let n_chan = index.n_channels();
+    let mut mailbox: Vec<Chan<R>> = Vec::with_capacity(n_chan);
+    mailbox.resize_with(n_chan, || Chan::Empty);
+    // `waiting[c]` = the rank parked on channel `c`'s next message. At
+    // most one rank can ever wait per channel (the channel's receiver).
+    let mut waiting: Vec<usize> = vec![NO_WAITER; n_chan];
+    // Every unfinished rank is in exactly one place: the ready queue, a
+    // wait slot, or currently executing — so each scheduling step costs
+    // O(actions retired), never O(n_ranks).
+    let mut ready: VecDeque<Rank> = (0..n).collect();
+    let mut msgs_by_sep = vec![0u64; n_levels];
+    let mut bytes_by_sep = vec![0u64; n_levels];
+    let mut combines = 0u64;
+    let mut trace = Vec::new();
+    let mut mark_times: BTreeMap<u64, f64> = BTreeMap::new();
+
+    while let Some(r) = ready.pop_front() {
+        // Advance rank r until it finishes or blocks on an empty channel.
+        loop {
+            // Borrow the action in place (no clone: `SendPart::Ranks`
+            // carries key vectors that are expensive to copy per
+            // execution — §Perf L3 optimization #2).
+            let action = match prog.actions[r].get(states[r].idx) {
+                None => break,
+                Some(a) => a,
+            };
+            let chan = index.at(r, states[r].idx) as usize;
+            match *action {
+                Action::Send { to, tag, ref part } => {
+                    let st = &mut states[r];
+                    let out = match part {
+                        SendPart::All => st.payload.clone(),
+                        SendPart::Ranks(rs) => st.payload.select(rs),
+                        SendPart::Ranges(rs) => st.payload.select_ranges(rs),
+                        SendPart::Empty => R::empty(),
+                    };
+                    let bytes = out.n_bytes();
+                    let sep = clustering.sep(r, to);
+                    let link = cfg.params.at_sep(sep);
+                    let start = st.clock;
+                    let arrival = start + link.arrival_delay_us(bytes);
+                    st.clock = start + link.sender_busy_us(bytes);
+                    st.idx += 1;
+                    msgs_by_sep[sep - 1] += 1;
+                    bytes_by_sep[sep - 1] += bytes as u64;
+                    if cfg.trace {
+                        trace.push(TraceEvent {
+                            t_us: start,
+                            rank: r,
+                            kind: TraceKind::SendStart,
+                            peer: to,
+                            tag,
+                            bytes,
+                            sep,
+                        });
+                    }
+                    mailbox[chan].push(arrival, out);
+                    // Wake the receiver if it is parked on this channel.
+                    let w = waiting[chan];
+                    if w != NO_WAITER {
+                        waiting[chan] = NO_WAITER;
+                        ready.push_back(w);
+                    }
+                }
+                Action::Recv { from, tag, merge } => {
+                    let (arrival, incoming) = match mailbox[chan].pop() {
+                        Some(m) => m,
+                        None => {
+                            // Park until the matching send arrives.
+                            waiting[chan] = r;
+                            break;
+                        }
+                    };
+                    let sep = clustering.sep(from, r);
+                    let link = cfg.params.at_sep(sep);
+                    let bytes = incoming.n_bytes();
+                    let st = &mut states[r];
+                    st.clock = st.clock.max(arrival) + link.recv_overhead_us;
+                    match merge {
+                        Merge::Replace => st.payload = incoming,
+                        Merge::Discard => {}
+                        Merge::Union => st.payload.union(incoming).map_err(Error::Sim)?,
+                        Merge::Combine(op) => {
+                            st.clock += cfg.params.combine_us(bytes);
+                            combines += 1;
+                            st.payload
+                                .combine(&incoming, op, combiner)
+                                .map_err(Error::Sim)?;
+                        }
+                    }
+                    st.idx += 1;
+                    if cfg.trace {
+                        trace.push(TraceEvent {
+                            t_us: states[r].clock,
+                            rank: r,
+                            kind: TraceKind::RecvDone,
+                            peer: from,
+                            tag,
+                            bytes,
+                            sep,
+                        });
+                    }
+                }
+                Action::Mark { id } => {
+                    let t = states[r].clock;
+                    states[r].idx += 1;
+                    let slot = mark_times.entry(id).or_insert(t);
+                    if t > *slot {
+                        *slot = t;
+                    }
+                }
+            }
+        }
+    }
+
+    // The queue drained: every rank either finished or is parked.
+    let stuck: Vec<usize> =
+        (0..n).filter(|&r| states[r].idx < prog.actions[r].len()).collect();
+    if !stuck.is_empty() {
+        let detail = stuck
+            .iter()
+            .take(4)
+            .map(|&r| format!("rank {r} at action {:?}", prog.actions[r][states[r].idx]))
+            .collect::<Vec<_>>()
+            .join("; ");
+        return Err(Error::Deadlock { stuck_ranks: stuck, detail });
+    }
+
+    // Undelivered messages indicate a send with no matching recv. The
+    // report is deterministic: channels are sorted by (from, to, tag),
+    // independent of scheduling or map iteration order.
+    let mut undelivered: Vec<((Rank, Rank, u64), usize)> = mailbox
+        .iter()
+        .enumerate()
+        .filter_map(|(c, q)| match q.len() {
+            0 => None,
+            l => Some((index.key(c as u32), l)),
+        })
+        .collect();
+    undelivered.sort_unstable();
+    if let Some(&((f, t, tag), count)) = undelivered.first() {
+        let more = if undelivered.len() > 1 {
+            format!(" (+{} more channels)", undelivered.len() - 1)
+        } else {
+            String::new()
+        };
+        return Err(Error::Sim(format!(
+            "{count} undelivered message(s) on channel {f}->{t} tag {tag}{more}"
+        )));
+    }
+
+    let finish_us: Vec<f64> = states.iter().map(|s| s.clock).collect();
+    let makespan_us = finish_us.iter().fold(0.0f64, |a, &b| a.max(b));
+    // NaN-safe total order; clocks are finite, but a cost model handing
+    // back a NaN must not panic the sort.
+    trace.sort_by(|a, b| a.t_us.total_cmp(&b.t_us));
+    Ok(RunOutput {
+        finish_us,
+        makespan_us,
+        msgs_by_sep,
+        bytes_by_sep,
+        combines,
+        registers: states.into_iter().map(|s| s.payload).collect(),
+        mark_times_us: mark_times.into_iter().collect(),
+        trace,
+    })
+}
+
+/// Execute `prog` with the given initial payload registers (full mode:
+/// real bytes flow, collective semantics are verifiable afterwards).
 ///
 /// `clustering` supplies `sep(src,dst)`; `initial[r]` seeds rank `r`'s
-/// payload register; `combiner` performs reduce arithmetic.
+/// payload register; `combiner` performs reduce arithmetic. Builds the
+/// [`ChannelIndex`] for this call; hot paths holding an immutable
+/// program (cached plans, fused schedules) should pass their prebuilt
+/// index via [`run_indexed`].
 pub fn run(
+    clustering: &Clustering,
+    prog: &Program,
+    initial: Vec<Payload>,
+    cfg: &SimConfig,
+    combiner: &dyn Combiner,
+) -> Result<SimResult> {
+    let index = ChannelIndex::build(prog);
+    run_indexed(clustering, prog, &index, initial, cfg, combiner)
+}
+
+/// [`run`] with a caller-supplied (typically cached) [`ChannelIndex`].
+pub fn run_indexed(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    initial: Vec<Payload>,
+    cfg: &SimConfig,
+    combiner: &dyn Combiner,
+) -> Result<SimResult> {
+    let out = run_core(clustering, prog, index, initial, cfg, combiner)?;
+    Ok(SimResult {
+        finish_us: out.finish_us,
+        makespan_us: out.makespan_us,
+        msgs_by_sep: out.msgs_by_sep,
+        bytes_by_sep: out.bytes_by_sep,
+        combines: out.combines,
+        payloads: out.registers,
+        mark_times_us: out.mark_times_us,
+        trace: out.trace,
+    })
+}
+
+/// Execute `prog` in **ghost (timing-only) mode**: registers carry
+/// per-key lengths instead of data, so sends allocate nothing and
+/// combines copy nothing, while every timing and accounting field of the
+/// result is bit-identical to the full run's (the cost model only reads
+/// `n_bytes()`). `SimResult::payloads` is empty in this mode.
+pub fn run_timing(
+    clustering: &Clustering,
+    prog: &Program,
+    initial: Vec<GhostPayload>,
+    cfg: &SimConfig,
+) -> Result<SimResult> {
+    let index = ChannelIndex::build(prog);
+    run_timing_indexed(clustering, prog, &index, initial, cfg)
+}
+
+/// [`run_timing`] with a caller-supplied (typically cached)
+/// [`ChannelIndex`].
+pub fn run_timing_indexed(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    initial: Vec<GhostPayload>,
+    cfg: &SimConfig,
+) -> Result<SimResult> {
+    // Ghost combines never touch the combiner; any impl satisfies the
+    // signature.
+    let out = run_core(clustering, prog, index, initial, cfg, &NativeCombiner)?;
+    Ok(SimResult {
+        finish_us: out.finish_us,
+        makespan_us: out.makespan_us,
+        msgs_by_sep: out.msgs_by_sep,
+        bytes_by_sep: out.bytes_by_sep,
+        combines: out.combines,
+        payloads: Vec::new(),
+        mark_times_us: out.mark_times_us,
+        trace: out.trace,
+    })
+}
+
+/// The pre-ready-queue scheduler: a deterministic worklist fixpoint that
+/// rescans all ranks (including blocked ones) until quiescence.
+///
+/// Kept as a second, independent implementation — a differential-testing
+/// oracle (results must be bit-identical to [`run`]'s, asserted in
+/// `rust/tests/ghost_equivalence.rs`) and the baseline the
+/// `engine_throughput` bench measures the ready-queue rewrite against.
+/// Full-payload mode only; not for hot paths.
+pub fn run_rescan(
     clustering: &Clustering,
     prog: &Program,
     initial: Vec<Payload>,
@@ -126,7 +500,7 @@ pub fn run(
     }
     counters::count_sim_run();
     let n_levels = clustering.n_levels();
-    let mut states: Vec<RankState> = initial
+    let mut states: Vec<RankState<Payload>> = initial
         .into_iter()
         .map(|payload| RankState { idx: 0, clock: 0.0, payload })
         .collect();
@@ -144,9 +518,6 @@ pub fn run(
         for r in 0..n {
             // Advance rank r as far as possible.
             loop {
-                // Borrow the action in place (no clone: `SendPart::Ranks`
-                // carries key vectors that are expensive to copy per
-                // execution — §Perf L3 optimization #2).
                 let action = match prog.actions[r].get(states[r].idx) {
                     None => break,
                     Some(a) => a,
@@ -198,10 +569,9 @@ pub fn run(
                         match merge {
                             Merge::Replace => st.payload = incoming,
                             Merge::Discard => {}
-                            Merge::Union => st
-                                .payload
-                                .union(incoming)
-                                .map_err(Error::Sim)?,
+                            Merge::Union => {
+                                st.payload.union(incoming).map_err(Error::Sim)?
+                            }
                             Merge::Combine(op) => {
                                 st.clock += cfg.params.combine_us(bytes);
                                 combines += 1;
@@ -255,19 +625,22 @@ pub fn run(
         }
     }
 
-    // Undelivered messages indicate a send with no matching recv.
-    for ((f, t, tag), q) in &mailbox {
-        if !q.is_empty() {
-            return Err(Error::Sim(format!(
-                "{} undelivered message(s) on channel {f}->{t} tag {tag}",
-                q.len()
-            )));
-        }
+    // Deterministic undelivered-message report (sorted by channel key).
+    let mut undelivered: Vec<((Rank, Rank, u64), usize)> = mailbox
+        .iter()
+        .filter(|(_, q)| !q.is_empty())
+        .map(|(&k, q)| (k, q.len()))
+        .collect();
+    undelivered.sort_unstable();
+    if let Some(&((f, t, tag), count)) = undelivered.first() {
+        return Err(Error::Sim(format!(
+            "{count} undelivered message(s) on channel {f}->{t} tag {tag}"
+        )));
     }
 
     let finish_us: Vec<f64> = states.iter().map(|s| s.clock).collect();
     let makespan_us = finish_us.iter().fold(0.0f64, |a, &b| a.max(b));
-    trace.sort_by(|a, b| a.t_us.partial_cmp(&b.t_us).unwrap());
+    trace.sort_by(|a, b| a.t_us.total_cmp(&b.t_us));
     Ok(SimResult {
         finish_us,
         makespan_us,
@@ -316,6 +689,48 @@ mod tests {
     }
 
     #[test]
+    fn ghost_run_reproduces_full_timing_bitwise() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 1, SendPart::All);
+        p.recv(1, 0, 1, Merge::Combine(ReduceOp::Sum));
+        p.mark_all(0);
+        let init = vec![Payload::single(0, vec![2.0; 10]), Payload::single(0, vec![3.0; 10])];
+        let ghost_init = init.iter().map(GhostPayload::of).collect();
+        let params = simple_params().with_combine_us_per_byte(1.0);
+        let cfg = SimConfig::new(params);
+        let full = run(&flat2(), &p, init, &cfg, &NativeCombiner).unwrap();
+        let ghost = run_timing(&flat2(), &p, ghost_init, &cfg).unwrap();
+        assert_eq!(full.finish_us, ghost.finish_us);
+        assert_eq!(full.makespan_us.to_bits(), ghost.makespan_us.to_bits());
+        assert_eq!(full.msgs_by_sep, ghost.msgs_by_sep);
+        assert_eq!(full.bytes_by_sep, ghost.bytes_by_sep);
+        assert_eq!(full.combines, ghost.combines);
+        assert_eq!(full.mark_times_us, ghost.mark_times_us);
+        assert!(ghost.payloads.is_empty(), "timing mode returns no payloads");
+    }
+
+    #[test]
+    fn rescan_oracle_agrees_with_ready_queue() {
+        // A program with cross-rank blocking: 0 -> 1 -> 2 -> 0 ring.
+        let mut p = Program::new(3);
+        p.send(0, 1, 1, SendPart::All);
+        p.recv(1, 0, 1, Merge::Replace);
+        p.send(1, 2, 2, SendPart::All);
+        p.recv(2, 1, 2, Merge::Replace);
+        p.send(2, 0, 3, SendPart::All);
+        p.recv(0, 2, 3, Merge::Replace);
+        let init =
+            vec![Payload::single(0, vec![7.0; 8]), Payload::empty(), Payload::empty()];
+        let cfg = SimConfig::new(simple_params());
+        let a = run(&Clustering::flat(3), &p, init.clone(), &cfg, &NativeCombiner).unwrap();
+        let b = run_rescan(&Clustering::flat(3), &p, init, &cfg, &NativeCombiner).unwrap();
+        assert_eq!(a.finish_us, b.finish_us);
+        assert_eq!(a.msgs_by_sep, b.msgs_by_sep);
+        assert_eq!(a.bytes_by_sep, b.bytes_by_sep);
+        assert_eq!(a.payloads, b.payloads);
+    }
+
+    #[test]
     fn combine_merge_applies_op_and_cost() {
         let mut p = Program::new(2);
         p.send(0, 1, 1, SendPart::All);
@@ -349,7 +764,30 @@ mod tests {
         p.send(0, 1, 1, SendPart::All);
         let init = vec![Payload::single(0, vec![1.0]), Payload::empty()];
         let cfg = SimConfig::new(simple_params());
-        assert!(run(&flat2(), &p, init, &cfg, &NativeCombiner).is_err());
+        match run(&flat2(), &p, init, &cfg, &NativeCombiner) {
+            Err(Error::Sim(msg)) => {
+                assert!(msg.contains("undelivered message(s) on channel 0->1 tag 1"), "{msg}")
+            }
+            other => panic!("expected undelivered-message error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn undelivered_report_is_deterministic_and_sorted() {
+        // Two dangling channels: the report always names the smallest
+        // (from, to, tag) and counts the rest.
+        let mut p = Program::new(3);
+        p.send(2, 0, 9, SendPart::Empty);
+        p.send(0, 1, 1, SendPart::Empty);
+        let init = vec![Payload::empty(); 3];
+        let cfg = SimConfig::new(simple_params());
+        match run(&Clustering::flat(3), &p, init, &cfg, &NativeCombiner) {
+            Err(Error::Sim(msg)) => {
+                assert!(msg.contains("channel 0->1 tag 1"), "{msg}");
+                assert!(msg.contains("+1 more channels"), "{msg}");
+            }
+            other => panic!("expected undelivered-message error, got {other:?}"),
+        }
     }
 
     #[test]

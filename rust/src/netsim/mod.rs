@@ -1,11 +1,19 @@
 //! Discrete-event grid network simulator: payload model, program IR, and
 //! the deterministic execution engine. See DESIGN.md §2 for why this
 //! substitutes for the paper's physical testbed.
+//!
+//! The engine runs in two register modes over one generic core: **full**
+//! ([`run`] — real f32 payloads, semantic verification) and **ghost**
+//! ([`run_timing`] — per-key lengths only, bit-identical timing with
+//! zero payload allocation). See [`payload::Register`].
 
 pub mod engine;
 pub mod payload;
 pub mod program;
 
-pub use engine::{run, SimConfig, SimResult, TraceEvent, TraceKind};
-pub use payload::{Combiner, NativeCombiner, Payload, ReduceOp};
-pub use program::{Action, Merge, Program, SendPart};
+pub use engine::{
+    run, run_indexed, run_rescan, run_timing, run_timing_indexed, SimConfig, SimResult,
+    TraceEvent, TraceKind,
+};
+pub use payload::{Combiner, GhostPayload, GhostRun, NativeCombiner, Payload, ReduceOp, Register};
+pub use program::{Action, ChannelIndex, Merge, Program, SendPart};

@@ -7,7 +7,16 @@
 //! Real bytes flow through the simulator so collective *semantics* are
 //! verified, not just timing; the combine arithmetic is pluggable so the
 //! PJRT-backed combiner (L1 Pallas kernel, AOT-compiled) can execute it.
+//!
+//! The engine itself only ever *prices* payloads (`n_bytes`), so a
+//! second register type exists for timing-only runs: [`GhostPayload`]
+//! carries per-key element counts as coalesced key runs and implements
+//! the same algebra with pure integer arithmetic. The shared contract is
+//! the [`Register`] trait; `netsim::run` executes full payloads,
+//! `netsim::run_timing` executes ghosts, and both produce bit-identical
+//! timing (see `rust/tests/ghost_equivalence.rs`).
 
+use crate::util::counters;
 use std::collections::BTreeMap;
 
 pub type Rank = usize;
@@ -123,7 +132,14 @@ impl Payload {
     }
 
     /// Single segment keyed by `owner`.
+    ///
+    /// This is the one constructor through which payload *data* enters
+    /// the simulator (every other operation shares or moves existing
+    /// segment storage), so it is the counting site for the
+    /// "ghost probes allocate no payload data" stage counter
+    /// ([`counters::count_payload_alloc`]).
     pub fn single(owner: Rank, data: Vec<f32>) -> Self {
+        counters::count_payload_alloc();
         let mut segments = BTreeMap::new();
         segments.insert(owner, std::sync::Arc::new(data));
         Payload { segments }
@@ -231,6 +247,378 @@ impl Payload {
     }
 }
 
+/// The payload-register algebra the execution engine is generic over.
+///
+/// Two implementations exist: [`Payload`] (real f32 segments — full
+/// semantic execution) and [`GhostPayload`] (per-key lengths only —
+/// timing execution). The engine prices messages exclusively through
+/// [`Register::n_bytes`], so any two registers that agree on key→length
+/// maps produce bit-identical timing.
+pub trait Register: Clone {
+    /// The empty register (zero segments).
+    fn empty() -> Self;
+
+    /// Wire size of this register's segments, in bytes.
+    fn n_bytes(&self) -> usize;
+
+    /// Subset containing only the given ranks' segments.
+    fn select(&self, ranks: &[Rank]) -> Self;
+
+    /// Subset of the segments whose keys fall in one of the sorted,
+    /// disjoint half-open `[lo, hi)` intervals.
+    fn select_ranges(&self, ranges: &[(Rank, Rank)]) -> Self;
+
+    /// Disjoint-union merge (gather); duplicate keys are an error.
+    fn union(&mut self, other: Self) -> std::result::Result<(), String>;
+
+    /// Elementwise combine (reduce): keys and lengths must align. The
+    /// ghost implementation validates shapes and skips the arithmetic.
+    fn combine(
+        &mut self,
+        other: &Self,
+        op: ReduceOp,
+        c: &dyn Combiner,
+    ) -> std::result::Result<(), String>;
+}
+
+impl Register for Payload {
+    fn empty() -> Self {
+        Payload::default()
+    }
+
+    fn n_bytes(&self) -> usize {
+        Payload::n_bytes(self)
+    }
+
+    fn select(&self, ranks: &[Rank]) -> Self {
+        Payload::select(self, ranks)
+    }
+
+    fn select_ranges(&self, ranges: &[(Rank, Rank)]) -> Self {
+        Payload::select_ranges(self, ranges)
+    }
+
+    fn union(&mut self, other: Self) -> std::result::Result<(), String> {
+        Payload::union(self, other)
+    }
+
+    fn combine(
+        &mut self,
+        other: &Self,
+        op: ReduceOp,
+        c: &dyn Combiner,
+    ) -> std::result::Result<(), String> {
+        Payload::combine(self, other, op, c)
+    }
+}
+
+/// A maximal run of consecutive segment keys `[lo, hi)`, each key
+/// carrying `elems` f32 elements.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GhostRun {
+    pub lo: Rank,
+    pub hi: Rank,
+    pub elems: usize,
+}
+
+/// Runs stored inline before spilling to the heap. Sized for the worst
+/// payloads the compiled collectives move (chunked allreduce maps
+/// coalesce to ≤ 3 runs; broadcast/reduce payloads are 1), so the hot
+/// paths — clone-per-send, interval select — never allocate.
+const GHOST_INLINE_RUNS: usize = 4;
+
+/// Timing-only payload register: the key→length *shape* of a [`Payload`]
+/// as coalesced [`GhostRun`]s, without the f32 data.
+///
+/// All operations are integer arithmetic on the run list; cloning a
+/// ghost (the per-send cost of `SendPart::All`) is a small `memcpy` with
+/// no allocation as long as the register stays within
+/// `GHOST_INLINE_RUNS` runs. Invariant: runs are sorted by `lo`,
+/// non-empty (`lo < hi`), pairwise disjoint, and adjacent runs with
+/// equal `elems` are merged. Keys with `elems == 0` are real segments
+/// (present key, zero bytes), exactly as in [`Payload`].
+#[derive(Clone, Debug, Default)]
+pub struct GhostPayload {
+    inline: [GhostRun; GHOST_INLINE_RUNS],
+    n_inline: usize,
+    /// Overflow runs; non-empty only past the inline capacity.
+    spill: Vec<GhostRun>,
+}
+
+impl PartialEq for GhostPayload {
+    fn eq(&self, other: &Self) -> bool {
+        // Canonical form makes run-sequence equality segment equality;
+        // the derived impl would compare stale inline slots.
+        self.n_runs() == other.n_runs()
+            && (0..self.n_runs()).all(|i| self.run_at(i) == other.run_at(i))
+    }
+}
+
+impl Eq for GhostPayload {}
+
+impl GhostPayload {
+    pub fn empty() -> Self {
+        GhostPayload::default()
+    }
+
+    /// Single segment of `elems` elements keyed by `owner`.
+    pub fn single(owner: Rank, elems: usize) -> Self {
+        let mut g = GhostPayload::empty();
+        g.push_run(GhostRun { lo: owner, hi: owner + 1, elems });
+        g
+    }
+
+    /// The shape of a full payload: same keys, same per-key lengths.
+    pub fn of(p: &Payload) -> Self {
+        let mut g = GhostPayload::empty();
+        for (k, seg) in p.iter() {
+            g.push_run(GhostRun { lo: k, hi: k + 1, elems: seg.len() });
+        }
+        g
+    }
+
+    fn n_runs(&self) -> usize {
+        self.n_inline + self.spill.len()
+    }
+
+    fn run_at(&self, i: usize) -> GhostRun {
+        if i < self.n_inline {
+            self.inline[i]
+        } else {
+            self.spill[i - self.n_inline]
+        }
+    }
+
+    /// The coalesced runs, in key order.
+    pub fn runs(&self) -> impl Iterator<Item = GhostRun> + '_ {
+        (0..self.n_runs()).map(|i| self.run_at(i))
+    }
+
+    /// Append a run at the high end. Runs must arrive in strictly
+    /// ascending, disjoint key order; contiguous equal-length runs are
+    /// coalesced in place.
+    fn push_run(&mut self, r: GhostRun) {
+        if r.lo >= r.hi {
+            return;
+        }
+        if self.n_runs() > 0 {
+            let in_spill = !self.spill.is_empty();
+            let last = if in_spill {
+                self.spill.last_mut().expect("non-empty spill")
+            } else {
+                &mut self.inline[self.n_inline - 1]
+            };
+            debug_assert!(r.lo >= last.hi, "ghost runs must be appended in key order");
+            if last.hi == r.lo && last.elems == r.elems {
+                last.hi = r.hi;
+                return;
+            }
+        }
+        if self.n_inline < GHOST_INLINE_RUNS && self.spill.is_empty() {
+            self.inline[self.n_inline] = r;
+            self.n_inline += 1;
+        } else {
+            self.spill.push(r);
+        }
+    }
+
+    /// Append one segment; keys must arrive in strictly ascending order
+    /// (the encode-path builder, mirroring `Payload` construction via
+    /// ordered `union`s).
+    pub fn push_segment(&mut self, key: Rank, elems: usize) {
+        self.push_run(GhostRun { lo: key, hi: key + 1, elems });
+    }
+
+    /// Number of segments (keys), matching [`Payload::len`].
+    pub fn len(&self) -> usize {
+        self.runs().map(|r| r.hi - r.lo).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_runs() == 0
+    }
+
+    pub fn n_bytes(&self) -> usize {
+        self.runs().map(|r| (r.hi - r.lo) * r.elems * 4).sum()
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.runs().map(|r| (r.hi - r.lo) * r.elems).sum()
+    }
+
+    /// Element count of the segment keyed `k`, if present.
+    pub fn elems_at(&self, k: Rank) -> Option<usize> {
+        self.runs().find(|r| r.lo <= k && k < r.hi).map(|r| r.elems)
+    }
+
+    pub fn contains_key(&self, k: Rank) -> bool {
+        self.elems_at(k).is_some()
+    }
+
+    /// Subset containing only the given ranks' segments (missing ranks
+    /// are silently skipped, duplicates collapse — [`Payload::select`]
+    /// semantics).
+    pub fn select(&self, ranks: &[Rank]) -> GhostPayload {
+        if ranks.windows(2).all(|w| w[0] < w[1]) {
+            return self.select_sorted(ranks.iter().copied());
+        }
+        let mut v: Vec<Rank> = ranks.to_vec();
+        v.sort_unstable();
+        v.dedup();
+        self.select_sorted(v.into_iter())
+    }
+
+    fn select_sorted<I: Iterator<Item = Rank>>(&self, ranks: I) -> GhostPayload {
+        let mut out = GhostPayload::empty();
+        let n = self.n_runs();
+        let mut i = 0;
+        for k in ranks {
+            while i < n && self.run_at(i).hi <= k {
+                i += 1;
+            }
+            if i < n {
+                let r = self.run_at(i);
+                if r.lo <= k {
+                    out.push_run(GhostRun { lo: k, hi: k + 1, elems: r.elems });
+                }
+            }
+        }
+        out
+    }
+
+    /// Subset of the segments whose keys fall in one of the sorted,
+    /// disjoint half-open `[lo, hi)` intervals — O(runs + hits) interval
+    /// intersection, the ghost counterpart of [`Payload::select_ranges`].
+    pub fn select_ranges(&self, ranges: &[(Rank, Rank)]) -> GhostPayload {
+        let mut out = GhostPayload::empty();
+        let n = self.n_runs();
+        let mut i = 0;
+        for &(lo, hi) in ranges {
+            while i < n && self.run_at(i).hi <= lo {
+                i += 1;
+            }
+            while i < n {
+                let r = self.run_at(i);
+                if r.lo >= hi {
+                    break;
+                }
+                let s = r.lo.max(lo);
+                let e = r.hi.min(hi);
+                if s < e {
+                    out.push_run(GhostRun { lo: s, hi: e, elems: r.elems });
+                }
+                if r.hi <= hi {
+                    i += 1;
+                } else {
+                    break; // run extends past this interval; revisit it
+                }
+            }
+        }
+        out
+    }
+
+    /// Union-merge (gather): disjoint keys required, [`Payload::union`]
+    /// semantics (the reported duplicate is the smallest shared key).
+    pub fn union(&mut self, other: GhostPayload) -> std::result::Result<(), String> {
+        if other.is_empty() {
+            return Ok(());
+        }
+        if self.is_empty() {
+            *self = other;
+            return Ok(());
+        }
+        let mut out = GhostPayload::empty();
+        let (an, bn) = (self.n_runs(), other.n_runs());
+        let (mut i, mut j) = (0, 0);
+        while i < an || j < bn {
+            let take_a = j >= bn || (i < an && self.run_at(i).lo <= other.run_at(j).lo);
+            let (x, rest) = if take_a {
+                (self.run_at(i), if j < bn { Some(other.run_at(j)) } else { None })
+            } else {
+                (other.run_at(j), if i < an { Some(self.run_at(i)) } else { None })
+            };
+            if let Some(y) = rest {
+                if y.lo < x.hi {
+                    return Err(format!("duplicate segment for rank {} in union", y.lo));
+                }
+            }
+            out.push_run(x);
+            if take_a {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        *self = out;
+        Ok(())
+    }
+
+    /// Shape validation of an elementwise combine: every key of `other`
+    /// must exist here with an equal element count. Pure run arithmetic;
+    /// error messages mirror [`Payload::combine`].
+    pub fn combine_shapes(&self, other: &GhostPayload) -> std::result::Result<(), String> {
+        if self.len() != other.len() {
+            return Err(format!(
+                "combine key-count mismatch: {} vs {}",
+                self.len(),
+                other.len()
+            ));
+        }
+        let sn = self.n_runs();
+        let mut i = 0;
+        for o in other.runs() {
+            let mut k = o.lo;
+            while k < o.hi {
+                while i < sn && self.run_at(i).hi <= k {
+                    i += 1;
+                }
+                if i >= sn || self.run_at(i).lo > k {
+                    return Err(format!("combine missing segment {k}"));
+                }
+                let s = self.run_at(i);
+                if s.elems != o.elems {
+                    return Err(format!("combine length mismatch on segment {k}"));
+                }
+                k = s.hi.min(o.hi);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Register for GhostPayload {
+    fn empty() -> Self {
+        GhostPayload::default()
+    }
+
+    fn n_bytes(&self) -> usize {
+        GhostPayload::n_bytes(self)
+    }
+
+    fn select(&self, ranks: &[Rank]) -> Self {
+        GhostPayload::select(self, ranks)
+    }
+
+    fn select_ranges(&self, ranges: &[(Rank, Rank)]) -> Self {
+        GhostPayload::select_ranges(self, ranges)
+    }
+
+    fn union(&mut self, other: Self) -> std::result::Result<(), String> {
+        GhostPayload::union(self, other)
+    }
+
+    fn combine(
+        &mut self,
+        other: &Self,
+        _op: ReduceOp,
+        _c: &dyn Combiner,
+    ) -> std::result::Result<(), String> {
+        // The accumulator's shape is unchanged by a valid combine, so
+        // shape validation is the whole operation.
+        self.combine_shapes(other)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -311,5 +699,106 @@ mod tests {
         assert!(a.combine(&b, ReduceOp::Sum, &c).is_err());
         let b2 = Payload::single(0, vec![1.0, 2.0]);
         assert!(a.combine(&b2, ReduceOp::Sum, &c).is_err());
+    }
+
+    /// `{0: n, 1: n, ..., k-1: n}` — the chunk-map shape.
+    fn ghost_uniform(keys: usize, elems: usize) -> GhostPayload {
+        let mut g = GhostPayload::empty();
+        for k in 0..keys {
+            g.push_segment(k, elems);
+        }
+        g
+    }
+
+    #[test]
+    fn ghost_of_payload_preserves_shape() {
+        let mut p = Payload::single(0, vec![1.0; 3]);
+        p.union(Payload::single(1, vec![2.0; 3])).unwrap();
+        p.union(Payload::single(5, vec![3.0; 7])).unwrap();
+        p.union(Payload::single(6, vec![0.0; 0])).unwrap();
+        let g = GhostPayload::of(&p);
+        assert_eq!(g.len(), p.len());
+        assert_eq!(g.n_bytes(), p.n_bytes());
+        assert_eq!(g.n_elems(), p.n_elems());
+        assert_eq!(g.elems_at(0), Some(3));
+        assert_eq!(g.elems_at(5), Some(7));
+        assert_eq!(g.elems_at(6), Some(0), "zero-length segments are real keys");
+        assert_eq!(g.elems_at(4), None);
+        // runs 0..2 coalesce; 5 and 6 differ in length and stay separate
+        assert_eq!(g.runs().count(), 3);
+    }
+
+    #[test]
+    fn ghost_select_matches_payload_select() {
+        let mut p = Payload::empty();
+        for k in [0usize, 1, 2, 5, 6, 9] {
+            p.union(Payload::single(k, vec![k as f32; k + 1])).unwrap();
+        }
+        let g = GhostPayload::of(&p);
+        for ranks in [
+            vec![0usize, 1, 2],
+            vec![9, 5, 0],
+            vec![3, 4],
+            vec![2, 2, 5],
+            vec![],
+        ] {
+            let full = p.select(&ranks);
+            let ghost = g.select(&ranks);
+            assert_eq!(ghost, GhostPayload::of(&full), "{ranks:?}");
+        }
+        for ranges in [vec![(0usize, 3usize), (5, 7)], vec![(3, 5)], vec![(0, 10)]] {
+            let full = p.select_ranges(&ranges);
+            let ghost = g.select_ranges(&ranges);
+            assert_eq!(ghost, GhostPayload::of(&full), "{ranges:?}");
+        }
+    }
+
+    #[test]
+    fn ghost_union_merges_and_rejects_duplicates() {
+        let mut a = ghost_uniform(3, 4); // keys 0..3
+        let b = GhostPayload::single(5, 4);
+        a.union(b).unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.n_bytes(), 4 * 4 * 4);
+        let dup = GhostPayload::single(1, 4);
+        let err = a.union(dup).unwrap_err();
+        assert!(err.contains("duplicate segment for rank 1"), "{err}");
+        // interleave: {0,2} ∪ {1} coalesces to one run
+        let mut x = GhostPayload::single(0, 2);
+        x.union(GhostPayload::single(2, 2)).unwrap();
+        x.union(GhostPayload::single(1, 2)).unwrap();
+        assert_eq!(x.runs().count(), 1);
+        assert_eq!(x.len(), 3);
+    }
+
+    #[test]
+    fn ghost_combine_shape_checks_mirror_payload() {
+        let a = ghost_uniform(4, 8);
+        assert!(a.combine_shapes(&ghost_uniform(4, 8)).is_ok());
+        let err = a.combine_shapes(&ghost_uniform(3, 8)).unwrap_err();
+        assert!(err.contains("key-count mismatch"), "{err}");
+        let err = a.combine_shapes(&ghost_uniform(4, 9)).unwrap_err();
+        assert!(err.contains("length mismatch"), "{err}");
+        let mut shifted = GhostPayload::empty();
+        for k in 1..5 {
+            shifted.push_segment(k, 8);
+        }
+        let err = a.combine_shapes(&shifted).unwrap_err();
+        assert!(err.contains("missing segment 4"), "{err}");
+    }
+
+    #[test]
+    fn ghost_spills_past_inline_capacity() {
+        // Alternating lengths defeat coalescing: every key is its own run.
+        let mut g = GhostPayload::empty();
+        for k in 0..10 {
+            g.push_segment(k, k % 2);
+        }
+        assert_eq!(g.runs().count(), 10);
+        assert_eq!(g.len(), 10);
+        assert_eq!(g.elems_at(9), Some(1));
+        let h = g.clone();
+        assert_eq!(g, h);
+        assert_eq!(g.select_ranges(&[(2, 7)]).len(), 5);
     }
 }

@@ -10,6 +10,122 @@ use crate::error::{Error, Result};
 use crate::netsim::payload::{Rank, ReduceOp};
 use std::collections::HashMap;
 
+/// Channel id of a `Mark` action (marks use no channel).
+pub const NO_CHANNEL: u32 = u32::MAX;
+
+/// Dense per-action channel resolution for a [`Program`], computed once
+/// and reused across runs.
+///
+/// The engine's mailbox is keyed by `(from, to, tag)` channels. Hashing
+/// that key on every send *and* every receive used to be the dominant
+/// payload-independent cost of a warm run; since the channel set is a
+/// pure function of the immutable program, it can be resolved ahead of
+/// time into dense ids — cached plans and fused schedules carry their
+/// index ([`crate::plan::CollectivePlan::channels`],
+/// `Schedule::channels`), so warm executions hash nothing and index a
+/// flat mailbox vector instead.
+#[derive(Clone, Debug)]
+pub struct ChannelIndex {
+    /// `chan[r][i]` = channel id of rank `r`'s `i`-th action
+    /// ([`NO_CHANNEL`] for `Mark`).
+    chan: Vec<Vec<u32>>,
+    /// Channel id → `(from, to, tag)`, for diagnostics.
+    keys: Vec<(Rank, Rank, u64)>,
+}
+
+impl ChannelIndex {
+    /// Resolve every send/recv of `prog` to a dense channel id. A send at
+    /// rank `r` uses channel `(r, to, tag)`; a recv at `r` uses
+    /// `(from, r, tag)` — matching sends and recvs share an id.
+    pub fn build(prog: &Program) -> ChannelIndex {
+        let mut ids: HashMap<(Rank, Rank, u64), u32> = HashMap::new();
+        let mut keys: Vec<(Rank, Rank, u64)> = Vec::new();
+        let mut chan = Vec::with_capacity(prog.n_ranks());
+        for (r, list) in prog.actions.iter().enumerate() {
+            let mut per_action = Vec::with_capacity(list.len());
+            for a in list {
+                let key = match a {
+                    Action::Send { to, tag, .. } => (r, *to, *tag),
+                    Action::Recv { from, tag, .. } => (*from, r, *tag),
+                    Action::Mark { .. } => {
+                        per_action.push(NO_CHANNEL);
+                        continue;
+                    }
+                };
+                let id = *ids.entry(key).or_insert_with(|| {
+                    keys.push(key);
+                    (keys.len() - 1) as u32
+                });
+                per_action.push(id);
+            }
+            chan.push(per_action);
+        }
+        ChannelIndex { chan, keys }
+    }
+
+    /// Number of distinct channels.
+    pub fn n_channels(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// The `(from, to, tag)` key of channel `c`.
+    pub fn key(&self, c: u32) -> (Rank, Rank, u64) {
+        self.keys[c as usize]
+    }
+
+    /// Channel id of rank `r`'s `i`-th action.
+    #[inline]
+    pub fn at(&self, r: Rank, i: usize) -> u32 {
+        self.chan[r][i]
+    }
+
+    /// Whether this index was built for a program of `prog`'s *shape*
+    /// (rank count and per-rank action counts). This is the cheap O(1)
+    /// guard the engine's indexed entry points apply per run; it cannot
+    /// distinguish two different programs of coincident shape — for
+    /// that, debug builds additionally run the exact
+    /// [`ChannelIndex::consistent_with`] check, so tests catch a stale
+    /// index while warm release runs stay hash-free.
+    pub fn matches(&self, prog: &Program) -> bool {
+        self.chan.len() == prog.n_ranks()
+            && self.chan.iter().zip(&prog.actions).all(|(c, a)| c.len() == a.len())
+    }
+
+    /// Exact consistency check: every action's resolved channel key
+    /// equals the key the action actually names. O(total actions) — the
+    /// engine runs it under `debug_assert!` only.
+    pub fn consistent_with(&self, prog: &Program) -> bool {
+        if !self.matches(prog) {
+            return false;
+        }
+        for (r, list) in prog.actions.iter().enumerate() {
+            for (i, a) in list.iter().enumerate() {
+                let id = self.chan[r][i];
+                let ok = match a {
+                    Action::Send { to, tag, .. } => {
+                        id != NO_CHANNEL && self.keys[id as usize] == (r, *to, *tag)
+                    }
+                    Action::Recv { from, tag, .. } => {
+                        id != NO_CHANNEL && self.keys[id as usize] == (*from, r, *tag)
+                    }
+                    Action::Mark { .. } => id == NO_CHANNEL,
+                };
+                if !ok {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Approximate resident size (for plan footprint accounting).
+    pub fn approx_bytes(&self) -> usize {
+        let per_rank = std::mem::size_of::<Vec<u32>>();
+        self.chan.iter().map(|v| v.len() * 4 + per_rank).sum::<usize>()
+            + self.keys.len() * std::mem::size_of::<(Rank, Rank, u64)>()
+    }
+}
+
 /// What a `Send` puts on the wire, taken from the sender's payload register.
 #[derive(Clone, Debug, PartialEq)]
 pub enum SendPart {
@@ -279,6 +395,45 @@ mod tests {
             "rebase leaves marker ids untouched"
         );
         assert_eq!(p.total_actions(), 5);
+    }
+
+    #[test]
+    fn channel_index_pairs_sends_with_recvs() {
+        let mut p = Program::new(3);
+        p.send(0, 1, 7, SendPart::All);
+        p.recv(1, 0, 7, Merge::Replace);
+        p.mark_all(0);
+        p.send(1, 2, 7, SendPart::All);
+        p.recv(2, 1, 7, Merge::Replace);
+        let ix = ChannelIndex::build(&p);
+        assert!(ix.matches(&p));
+        assert_eq!(ix.n_channels(), 2);
+        // matching send/recv share an id; distinct channels differ.
+        // (rank 2's action 0 is its mark_all marker, the recv is at 1)
+        assert_eq!(ix.at(0, 0), ix.at(1, 0));
+        assert_eq!(ix.at(1, 2), ix.at(2, 1));
+        assert_ne!(ix.at(0, 0), ix.at(1, 2));
+        assert_eq!(ix.at(2, 0), NO_CHANNEL);
+        assert_eq!(ix.key(ix.at(0, 0)), (0, 1, 7));
+        assert_eq!(ix.key(ix.at(1, 2)), (1, 2, 7));
+        // marks carry no channel
+        assert_eq!(ix.at(0, 1), NO_CHANNEL);
+        assert!(ix.approx_bytes() > 0);
+        assert!(ix.consistent_with(&p));
+        // a different shape no longer matches
+        let q = Program::new(2);
+        assert!(!ix.matches(&q));
+        assert!(!ix.consistent_with(&q));
+        // a different program of coincident shape passes the cheap shape
+        // check but fails the exact consistency check
+        let mut rev = Program::new(3);
+        rev.send(0, 2, 7, SendPart::All);
+        rev.recv(1, 2, 7, Merge::Replace);
+        rev.mark_all(0);
+        rev.send(1, 0, 7, SendPart::All);
+        rev.recv(2, 0, 7, Merge::Replace);
+        assert!(ix.matches(&rev), "same shape");
+        assert!(!ix.consistent_with(&rev), "different channels");
     }
 
     #[test]

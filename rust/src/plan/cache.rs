@@ -260,7 +260,10 @@ impl PlanCache {
             }
         };
         let meta = PlanMeta::compute(comm.clustering(), &tree, &program, key.op);
-        Ok(CollectivePlan { key, tree, program, meta })
+        // Resolve mailbox channels once, here on the cold path, so every
+        // warm execution of this plan is hash-free.
+        let channels = crate::netsim::ChannelIndex::build(&program);
+        Ok(CollectivePlan { key, tree, program, meta, channels })
     }
 }
 

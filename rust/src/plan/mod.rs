@@ -35,7 +35,7 @@ pub use schedule::{Schedule, ScheduleBuilder, Segment};
 
 use crate::collectives::{extended, programs};
 use crate::error::Result;
-use crate::netsim::{Action, Program, ReduceOp, SendPart};
+use crate::netsim::{Action, ChannelIndex, Program, ReduceOp, SendPart};
 use crate::topology::{Clustering, Rank};
 use crate::tree::{LevelPolicy, Strategy, Tree};
 
@@ -367,6 +367,11 @@ pub struct CollectivePlan {
     pub tree: Tree,
     pub program: Program,
     pub meta: PlanMeta,
+    /// Dense channel resolution of `program`, precomputed at build time
+    /// so warm executions (`CollectiveEngine::run_sim` /
+    /// `simulate_timing`) index a flat mailbox instead of hashing
+    /// `(from, to, tag)` per message.
+    pub channels: ChannelIndex,
 }
 
 impl CollectivePlan {
@@ -394,6 +399,7 @@ impl CollectivePlan {
         bytes += self.tree.capacity() * 2 * std::mem::size_of::<usize>();
         bytes += self.meta.msgs_by_sep.len() * std::mem::size_of::<u64>();
         bytes += self.meta.tree_edges_by_sep.len() * std::mem::size_of::<usize>();
+        bytes += self.channels.approx_bytes();
         bytes
     }
 }

@@ -31,8 +31,9 @@
 
 use super::{CollectivePlan, PlanMeta};
 use crate::error::{Error, Result};
-use crate::netsim::{Program, SimResult};
+use crate::netsim::{ChannelIndex, Program, SimResult};
 use crate::topology::{Clustering, Communicator};
+use crate::util::counters;
 
 /// One appended segment of a fused schedule: label + static metadata +
 /// the tag budget it was rebased into.
@@ -151,17 +152,24 @@ impl ScheduleBuilder {
         Ok(id)
     }
 
-    /// Validate the fused program and freeze the schedule.
+    /// Validate the fused program and freeze the schedule. Also resolves
+    /// the fused program's [`ChannelIndex`] so every execution of the
+    /// schedule is hash-free, and bumps the schedule-build stage counter
+    /// (warm sweeps over a memoized schedule must not re-assemble it —
+    /// see `CollectiveEngine::memo_schedule`).
     pub fn build(self) -> Result<Schedule> {
         self.program.validate().map_err(|e| {
             Error::Schedule(format!("fused schedule failed validation: {e}"))
         })?;
+        counters::count_schedule_build();
         let meta = aggregate_meta(self.clustering.n_levels(), &self.segments);
+        let channels = ChannelIndex::build(&self.program);
         Ok(Schedule {
             comm_epoch: self.comm_epoch,
             program: self.program,
             segments: self.segments,
             meta,
+            channels,
         })
     }
 }
@@ -202,6 +210,7 @@ pub struct Schedule {
     program: Program,
     segments: Vec<Segment>,
     meta: PlanMeta,
+    channels: ChannelIndex,
 }
 
 impl Schedule {
@@ -209,6 +218,12 @@ impl Schedule {
     /// `CollectiveEngine::run_schedule`).
     pub fn program(&self) -> &Program {
         &self.program
+    }
+
+    /// The fused program's precomputed channel resolution (pass to the
+    /// engine's `*_indexed` entry points).
+    pub fn channels(&self) -> &ChannelIndex {
+        &self.channels
     }
 
     /// The appended segments, in execution order.

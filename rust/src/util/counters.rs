@@ -9,6 +9,13 @@
 //! increments are relaxed atomics — nanoseconds, safe to leave on in
 //! release builds.
 //!
+//! The ghost-payload timing engine adds two more promises, counted the
+//! same way: a warm tuner probe performs **zero payload-data
+//! allocations** ([`count_payload_alloc`] in [`crate::netsim::Payload`]'s
+//! data-materializing constructor), and a warm Fig. 8 sweep assembles its
+//! rotation [`crate::plan::Schedule`] **once** per engine
+//! ([`count_schedule_build`]).
+//!
 //! Tests should compare *deltas* ([`snapshot`] before / after), never
 //! absolute values: other tests in the same process also increment.
 
@@ -19,6 +26,8 @@ static PROGRAM_COMPILES: AtomicU64 = AtomicU64::new(0);
 static PLAN_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
 static PLAN_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
 static SIM_RUNS: AtomicU64 = AtomicU64::new(0);
+static PAYLOAD_ALLOCS: AtomicU64 = AtomicU64::new(0);
+static SCHEDULE_BUILDS: AtomicU64 = AtomicU64::new(0);
 
 /// One strategy-tree construction (any [`crate::tree::Strategy`]).
 #[inline]
@@ -44,11 +53,29 @@ pub fn count_plan_miss() {
     PLAN_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
 }
 
-/// One `netsim::run` invocation (stage 3). Lets tests assert that fused
-/// schedules really execute as a *single* simulation.
+/// One `netsim` engine invocation (stage 3), full or ghost mode. Lets
+/// tests assert that fused schedules really execute as a *single*
+/// simulation and that a tuner sweep is exactly one run per probe.
 #[inline]
 pub fn count_sim_run() {
     SIM_RUNS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One payload **data** materialization (an f32 segment buffer entering
+/// a full [`crate::netsim::Payload`]). Ghost-mode execution never bumps
+/// this — the enforcement hook behind "timing probes allocate no payload
+/// data".
+#[inline]
+pub fn count_payload_alloc() {
+    PAYLOAD_ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One fused [`crate::plan::Schedule`] assembly
+/// (`ScheduleBuilder::build`). Warm sweeps over a memoized schedule must
+/// not re-assemble it.
+#[inline]
+pub fn count_schedule_build() {
+    SCHEDULE_BUILDS.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Point-in-time view of all pipeline counters.
@@ -59,6 +86,8 @@ pub struct Snapshot {
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
     pub sim_runs: u64,
+    pub payload_allocs: u64,
+    pub schedule_builds: u64,
 }
 
 impl Snapshot {
@@ -70,6 +99,8 @@ impl Snapshot {
             plan_cache_hits: self.plan_cache_hits - earlier.plan_cache_hits,
             plan_cache_misses: self.plan_cache_misses - earlier.plan_cache_misses,
             sim_runs: self.sim_runs - earlier.sim_runs,
+            payload_allocs: self.payload_allocs - earlier.payload_allocs,
+            schedule_builds: self.schedule_builds - earlier.schedule_builds,
         }
     }
 }
@@ -82,6 +113,8 @@ pub fn snapshot() -> Snapshot {
         plan_cache_hits: PLAN_CACHE_HITS.load(Ordering::Relaxed),
         plan_cache_misses: PLAN_CACHE_MISSES.load(Ordering::Relaxed),
         sim_runs: SIM_RUNS.load(Ordering::Relaxed),
+        payload_allocs: PAYLOAD_ALLOCS.load(Ordering::Relaxed),
+        schedule_builds: SCHEDULE_BUILDS.load(Ordering::Relaxed),
     }
 }
 
@@ -98,6 +131,8 @@ mod tests {
         count_plan_hit();
         count_plan_miss();
         count_sim_run();
+        count_payload_alloc();
+        count_schedule_build();
         let delta = snapshot().since(&before);
         // Other tests run concurrently in this process, so the deltas are
         // lower bounds, not exact counts.
@@ -106,5 +141,7 @@ mod tests {
         assert!(delta.plan_cache_hits >= 1);
         assert!(delta.plan_cache_misses >= 1);
         assert!(delta.sim_runs >= 1);
+        assert!(delta.payload_allocs >= 1);
+        assert!(delta.schedule_builds >= 1);
     }
 }

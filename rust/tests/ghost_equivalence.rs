@@ -1,0 +1,218 @@
+//! Ghost-mode equivalence suite: timing-only execution must be
+//! **bitwise identical** to full execution on every timing and
+//! accounting field — `finish_us`, `makespan_us`, `msgs_by_sep`,
+//! `bytes_by_sep`, `combines`, `mark_times_us` — for every strategy,
+//! collective, composition policy, root and boundary swept here. The
+//! cost model only reads `n_bytes()`, and the ghost register reproduces
+//! the key→length shape exactly; these tests pin that contract.
+//!
+//! Also pins the ready-queue scheduler against the retained rescan
+//! oracle (`netsim::run_rescan`), and the boundary tuner's verdict
+//! against exhaustive full-mode simulation.
+//!
+//! Everything here is result-local (no global stage counters), so the
+//! tests are safe to run concurrently; the counter-exact contracts live
+//! in `tuning_counters.rs` and `fused_timing.rs`.
+
+use gridcollect::collectives::{request, CollectiveEngine};
+use gridcollect::coordinator::{rotation_schedule_memo, tuning};
+use gridcollect::model::presets;
+use gridcollect::netsim::{GhostPayload, Payload, ReduceOp, SimResult};
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::rng::Rng;
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_timing_eq(full: &SimResult, ghost: &SimResult, ctx: &str) {
+    assert_eq!(bits(&full.finish_us), bits(&ghost.finish_us), "finish_us {ctx}");
+    assert_eq!(
+        full.makespan_us.to_bits(),
+        ghost.makespan_us.to_bits(),
+        "makespan_us {ctx}"
+    );
+    assert_eq!(full.msgs_by_sep, ghost.msgs_by_sep, "msgs_by_sep {ctx}");
+    assert_eq!(full.bytes_by_sep, ghost.bytes_by_sep, "bytes_by_sep {ctx}");
+    assert_eq!(full.combines, ghost.combines, "combines {ctx}");
+    let full_marks: Vec<(u64, u64)> =
+        full.mark_times_us.iter().map(|&(i, t)| (i, t.to_bits())).collect();
+    let ghost_marks: Vec<(u64, u64)> =
+        ghost.mark_times_us.iter().map(|&(i, t)| (i, t.to_bits())).collect();
+    assert_eq!(full_marks, ghost_marks, "mark_times_us {ctx}");
+    assert!(ghost.payloads.is_empty(), "ghost mode returns no payloads ({ctx})");
+}
+
+fn contributions(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..len).map(|_| (rng.next_u64() % 17) as f32 - 8.0).collect())
+        .collect()
+}
+
+/// The headline property: ghost == full for all 4 strategies ×
+/// {bcast, reduce, allreduce under every policy} × several roots ×
+/// several payload lengths (including chunk-starving short vectors).
+#[test]
+fn ghost_equals_full_across_strategies_ops_roots_and_policies() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let n = comm.size();
+    let mut rng = Rng::new(0x6b0a57);
+    let policies = [
+        AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+        AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+        AlgoPolicy::hybrid(1),
+        AlgoPolicy::hybrid(2),
+    ];
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        for &len in &[7usize, 64, 1000] {
+            let data = contributions(&mut rng, n, len);
+            for &root in &[0usize, 3, n - 1] {
+                let ctx = |what: &str| format!("{} root {root} len {len} {what}", s.name());
+
+                let req = request::Bcast { root, data: &data[0] };
+                let full = e.run_sim(&req).unwrap();
+                let ghost = e.simulate_timing(&req).unwrap();
+                assert_timing_eq(&full, &ghost, &ctx("bcast"));
+
+                let req = request::Reduce { root, op: ReduceOp::Sum, contributions: &data };
+                let full = e.run_sim(&req).unwrap();
+                let ghost = e.simulate_timing(&req).unwrap();
+                assert_timing_eq(&full, &ghost, &ctx("reduce"));
+
+                for policy in policies {
+                    let req = request::Allreduce {
+                        root,
+                        op: ReduceOp::Sum,
+                        policy,
+                        contributions: &data,
+                    };
+                    let full = e.run_sim(&req).unwrap();
+                    let ghost = e.simulate_timing(&req).unwrap();
+                    assert_timing_eq(&full, &ghost, &ctx(&policy.name()));
+                    // The data-free probe is yet another route to the
+                    // same cached plan — same timing again.
+                    let probe =
+                        request::AllreduceProbe { root, op: ReduceOp::Sum, policy, elems: len };
+                    let probed = e.simulate_timing(&probe).unwrap();
+                    assert_timing_eq(&full, &probed, &ctx(&format!("probe {}", policy.name())));
+                }
+            }
+        }
+    }
+}
+
+/// Ghost == full for the fused Fig. 7 rotation schedule — the mark-time
+/// (per-segment completion) equality is what the ghost-routed Fig. 8
+/// sweep rests on.
+#[test]
+fn ghost_equals_full_on_the_fused_rotation() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        let schedule = rotation_schedule_memo(&e).unwrap();
+        let elems = 16384 / 4;
+        let mut full_init = vec![Payload::empty(); comm.size()];
+        full_init[0] = Payload::single(0, vec![1.0f32; elems]);
+        let mut ghost_init = vec![GhostPayload::empty(); comm.size()];
+        ghost_init[0] = GhostPayload::single(0, elems);
+        let full = e.run_schedule(&schedule, full_init).unwrap();
+        let ghost = e.run_schedule_timing(&schedule, ghost_init).unwrap();
+        assert_timing_eq(&full, &ghost, s.name());
+        assert_eq!(full.mark_times_us.len(), 2 * comm.size());
+    }
+}
+
+/// The ready-queue scheduler against the retained rescan oracle:
+/// bit-identical clocks, accounting AND delivered payloads, across
+/// strategies and ops (both run full mode here — this pins the
+/// scheduler rewrite, not the register mode).
+#[test]
+fn ready_queue_scheduler_matches_rescan_oracle() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let n = comm.size();
+    let mut rng = Rng::new(0xfeed);
+    let cfg = gridcollect::netsim::SimConfig::new(presets::paper_grid());
+    let combiner = gridcollect::netsim::NativeCombiner;
+    for s in Strategy::ALL {
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
+        let data = contributions(&mut rng, n, 50);
+        let bc = request::Bcast { root: 2, data: &data[0] };
+        let red = request::Reduce { root: 2, op: ReduceOp::Max, contributions: &data };
+        let ar = request::Allreduce {
+            root: 2,
+            op: ReduceOp::Sum,
+            policy: AlgoPolicy::hybrid(1),
+            contributions: &data,
+        };
+        let cases: Vec<(&str, &dyn request::OpSpec)> =
+            vec![("bcast", &bc), ("reduce", &red), ("allreduce", &ar)];
+        for (what, req) in cases {
+            let plan = e.plan_for(req.root(), req.op_kind(), req.segments()).unwrap();
+            let init = req.encode_init(&comm).unwrap();
+            let a = gridcollect::netsim::run(
+                comm.clustering(),
+                &plan.program,
+                init.clone(),
+                &cfg,
+                &combiner,
+            )
+            .unwrap();
+            let b = gridcollect::netsim::run_rescan(
+                comm.clustering(),
+                &plan.program,
+                init,
+                &cfg,
+                &combiner,
+            )
+            .unwrap();
+            let ctx = format!("{} {what}", s.name());
+            assert_eq!(bits(&a.finish_us), bits(&b.finish_us), "{ctx}");
+            assert_eq!(a.msgs_by_sep, b.msgs_by_sep, "{ctx}");
+            assert_eq!(a.bytes_by_sep, b.bytes_by_sep, "{ctx}");
+            assert_eq!(a.combines, b.combines, "{ctx}");
+            assert_eq!(a.payloads, b.payloads, "{ctx}");
+        }
+    }
+}
+
+/// The tuner's chosen boundary really minimizes the *full-mode*
+/// simulated makespan on a 3-level topology — the ghost probes stand in
+/// for the expensive sweep without changing its verdict.
+#[test]
+fn tuned_boundary_minimizes_full_mode_makespan() {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    assert_eq!(comm.clustering().n_levels(), 3, "the paper grid is 3-level");
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let n = comm.size();
+    for bytes in [4096usize, 262144] {
+        let tuning = tuning::tune_allreduce_boundary(&e, ReduceOp::Sum, bytes).unwrap();
+        let data: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; bytes / 4]).collect();
+        let mut best_full = f64::INFINITY;
+        let mut argmin = tuning.probes[0].policy;
+        for p in &tuning.probes {
+            let full = e
+                .run_sim(&request::Allreduce {
+                    root: 0,
+                    op: ReduceOp::Sum,
+                    policy: p.policy,
+                    contributions: &data,
+                })
+                .unwrap();
+            assert_eq!(
+                full.makespan_us.to_bits(),
+                p.makespan_us.to_bits(),
+                "{} probe == full makespan",
+                p.policy.name()
+            );
+            if full.makespan_us < best_full {
+                best_full = full.makespan_us;
+                argmin = p.policy;
+            }
+        }
+        assert_eq!(tuning.best, argmin, "{bytes}: tuner picked the true argmin");
+        assert_eq!(tuning.best_us.to_bits(), best_full.to_bits(), "{bytes}");
+    }
+}

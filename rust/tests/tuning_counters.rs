@@ -1,0 +1,58 @@
+//! Acceptance test for the boundary autotuner's probe cost: a **warm**
+//! `tune_allreduce_boundary` sweep performs zero tree builds, zero
+//! program compiles, zero schedule assemblies and zero payload-data
+//! allocations — each probe is exactly one ghost-mode engine run on a
+//! cached plan. This is the "cheap probe" premise (cs/0408034) the
+//! tuner is built on, enforced by the global stage counters.
+//!
+//! Single `#[test]` in its own binary: the counters are process-wide
+//! and exact-delta assertions must not race with other tests.
+
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::coordinator::tuning;
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::counters;
+
+#[test]
+fn warm_boundary_tuning_is_pure_ghost_execution() {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let engine = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let n_candidates = tuning::boundary_candidates(comm.clustering().n_levels()).len() as u64;
+    assert!(n_candidates >= 4, "3-level grid: 2 uniforms + 2 hybrids");
+
+    // Cold sweep: builds each candidate's plan once — and nothing else.
+    // Even cold, probes are ghost runs: zero payload-data allocations.
+    let before_cold = counters::snapshot();
+    let cold = tuning::tune_allreduce_boundary(&engine, ReduceOp::Sum, 65536).unwrap();
+    let cold_delta = counters::snapshot().since(&before_cold);
+    assert_eq!(cold_delta.sim_runs, n_candidates, "one engine run per probe");
+    assert_eq!(cold_delta.payload_allocs, 0, "probes never materialize payload data");
+    assert_eq!(cold_delta.schedule_builds, 0, "plans, not schedules");
+    assert!(cold_delta.tree_builds >= 1, "cold sweep builds trees");
+
+    // Warm sweep at a different payload size: plans are size-independent,
+    // so every probe is served entirely from cache.
+    let before = counters::snapshot();
+    let warm = tuning::tune_allreduce_boundary(&engine, ReduceOp::Sum, 1 << 20).unwrap();
+    let delta = counters::snapshot().since(&before);
+    assert_eq!(delta.tree_builds, 0, "warm probes must not build trees");
+    assert_eq!(delta.program_compiles, 0, "warm probes must not compile");
+    assert_eq!(delta.plan_cache_misses, 0, "every candidate plan served warm");
+    assert_eq!(delta.plan_cache_hits, n_candidates, "one cache hit per probe");
+    assert_eq!(delta.sim_runs, n_candidates, "one engine run per probe");
+    assert_eq!(delta.payload_allocs, 0, "zero payload allocations per probe");
+    assert_eq!(delta.schedule_builds, 0);
+
+    // Sanity on the verdicts themselves.
+    assert_eq!(cold.probes.len(), warm.probes.len());
+    assert!(warm.best_us.is_finite() && warm.best_us > 0.0);
+    assert!(
+        warm.best_us >= cold.best_us,
+        "1 MiB allreduce cannot beat 64 KiB: {} vs {}",
+        warm.best_us,
+        cold.best_us
+    );
+}
