@@ -16,8 +16,10 @@ use gridcollect::coordinator::experiment;
 use gridcollect::coordinator::timing_app;
 use gridcollect::netsim::{Combiner, ReduceOp};
 use gridcollect::runtime::{Runtime, XlaCombiner};
+use gridcollect::session::GridSession;
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
+use std::sync::Arc;
 
 fn main() -> gridcollect::error::Result<()> {
     let use_xla = std::env::args().any(|a| a == "--xla");
@@ -30,17 +32,13 @@ fn main() -> gridcollect::error::Result<()> {
     } else {
         None
     };
-    let xla_combiner = match &xla {
-        Some(rt) => Some(XlaCombiner::open_default(rt)?),
-        None => None,
-    };
-    let combiner: &dyn Combiner = match &xla_combiner {
-        Some(c) => c,
-        None => experiment::native(),
+    let combiner: Arc<dyn Combiner> = match &xla {
+        Some(rt) => Arc::new(XlaCombiner::open_default(rt)?),
+        None => experiment::native_arc(),
     };
 
     println!("E1 / Figure 8 — rotating-root MPI_Bcast, 48 procs, 2 sites, 3 machines\n");
-    let (table, pts) = experiment::fig8_table(&sizes, combiner)?;
+    let (table, pts) = experiment::fig8_table(&sizes)?;
     print!("{}", table.to_markdown());
 
     // The paper's qualitative claims, checked programmatically:
@@ -66,13 +64,9 @@ fn main() -> gridcollect::error::Result<()> {
     let comm = experiment::paper_comm();
     let contributions: Vec<Vec<f32>> =
         (0..comm.size()).map(|r| vec![r as f32; 16384]).collect();
-    let engine = gridcollect::collectives::CollectiveEngine::new(
-        &comm,
-        experiment::paper_params(),
-        Strategy::Multilevel,
-    )
-    .with_combiner(combiner);
-    let out = engine.reduce(0, ReduceOp::Sum, &contributions)?;
+    let session = GridSession::new(&comm, experiment::paper_params(), Strategy::Multilevel)
+        .with_combiner(combiner);
+    let out = session.reduce(0, ReduceOp::Sum, &contributions)?;
     let expect = (0..comm.size()).map(|r| r as f32).sum::<f32>();
     assert!((out.data[0][0] - expect).abs() < 1e-3);
     println!(

@@ -17,9 +17,11 @@ use gridcollect::coordinator::training::{train, TrainConfig};
 use gridcollect::model::presets;
 use gridcollect::netsim::Combiner;
 use gridcollect::runtime::{MlpRuntime, Runtime, XlaCombiner};
+use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
+use std::sync::Arc;
 
 fn main() -> gridcollect::error::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -39,13 +41,10 @@ fn main() -> gridcollect::error::Result<()> {
         mlp.dims.params, mlp.dims.batch, mlp.dims.d_in, mlp.dims.d_h, mlp.dims.d_out
     );
 
-    let xla_combiner = if use_xla { Some(XlaCombiner::open_default(&rt)?) } else { None };
-    let combiner: &dyn Combiner = match &xla_combiner {
-        Some(c) => c,
-        None => {
-            static N: gridcollect::netsim::NativeCombiner = gridcollect::netsim::NativeCombiner;
-            &N
-        }
+    let combiner: Arc<dyn Combiner> = if use_xla {
+        Arc::new(XlaCombiner::open_default(&rt)?)
+    } else {
+        Arc::new(gridcollect::netsim::NativeCombiner)
     };
 
     // 20 workers on the paper's Fig. 1 grid.
@@ -58,9 +57,11 @@ fn main() -> gridcollect::error::Result<()> {
     );
 
     for strategy in [Strategy::Unaware, Strategy::Multilevel] {
-        let cfg = TrainConfig { steps, lr: 0.2, strategy, seed: 0, ..Default::default() };
+        let session = GridSession::new(&comm, presets::paper_grid(), strategy)
+            .with_combiner(combiner.clone());
+        let cfg = TrainConfig { steps, lr: 0.2, seed: 0, ..Default::default() };
         let t0 = std::time::Instant::now();
-        let logs = train(&comm, &presets::paper_grid(), &mlp, combiner, &cfg)?;
+        let logs = train(&session, &mlp, &cfg)?;
         let wall = t0.elapsed().as_secs_f64();
         let first = logs.first().unwrap();
         let last = logs.last().unwrap();

@@ -5,8 +5,8 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use gridcollect::collectives::CollectiveEngine;
 use gridcollect::model::presets;
+use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
@@ -29,8 +29,8 @@ fn main() -> gridcollect::error::Result<()> {
     let params = presets::paper_grid();
     println!("MPI_Bcast of {} from rank 0:", fmt::bytes(data.len() * 4));
     for strategy in Strategy::ALL {
-        let engine = CollectiveEngine::new(&comm, params.clone(), strategy);
-        let out = engine.bcast(0, &data)?;
+        let session = GridSession::new(&comm, params.clone(), strategy);
+        let out = session.bcast(0, &data)?;
         // All ranks must have received the payload.
         assert!(out.data.iter().all(|d| d == &data));
         println!(

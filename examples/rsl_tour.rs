@@ -7,8 +7,8 @@
 //! cargo run --release --example rsl_tour
 //! ```
 
-use gridcollect::collectives::CollectiveEngine;
 use gridcollect::model::presets;
+use gridcollect::session::GridSession;
 use gridcollect::topology::{rsl, Communicator};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
@@ -29,9 +29,8 @@ fn main() -> gridcollect::error::Result<()> {
     let data = vec![1.0f32; 16384];
     for (name, spec) in [("fig5", &fig5), ("fig6", &fig6)] {
         let comm = Communicator::world(spec);
-        let engine =
-            CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
-        let out = engine.bcast(0, &data)?;
+        let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        let out = session.bcast(0, &data)?;
         println!(
             "{name}: multilevel bcast {} — WAN msgs {} (LAN knowledge saves a WAN message)",
             fmt::time_us(out.sim.makespan_us),
@@ -71,8 +70,8 @@ fn main() -> gridcollect::error::Result<()> {
             sub.clustering().clusters_at(1)
         );
         // Collectives work on the derived communicator directly.
-        let engine = CollectiveEngine::new(sub, presets::paper_grid(), Strategy::Multilevel);
-        let out = engine.bcast(0, &data)?;
+        let session = GridSession::new(sub, presets::paper_grid(), Strategy::Multilevel);
+        let out = session.bcast(0, &data)?;
         println!(
             "    multilevel bcast on sub-communicator: {} (WAN msgs {})",
             fmt::time_us(out.sim.makespan_us),

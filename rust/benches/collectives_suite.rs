@@ -6,16 +6,16 @@
 //! Run: `cargo bench --bench collectives_suite`
 
 use gridcollect::benchkit::{save_report, section, Bench};
-use gridcollect::collectives::CollectiveEngine;
 use gridcollect::coordinator::experiment;
 use gridcollect::netsim::ReduceOp;
+use gridcollect::session::GridSession;
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
 
 fn main() {
     for bytes in [4096usize, 262144] {
         section(&format!("E8 — five ops x four strategies at {}", fmt::bytes(bytes)));
-        let t = experiment::collectives_suite_table(bytes, experiment::native()).unwrap();
+        let t = experiment::collectives_suite_table(bytes, experiment::native_arc()).unwrap();
         print!("{}", t.to_markdown());
         save_report(&format!("collectives_suite_{bytes}"), &t);
     }
@@ -25,7 +25,7 @@ fn main() {
     let params = experiment::paper_params();
     let n = comm.size();
     let bench = Bench::default();
-    let engine = CollectiveEngine::new(&comm, params, Strategy::Multilevel);
+    let engine = GridSession::new(&comm, params, Strategy::Multilevel);
     let data = vec![1.0f32; 16384];
     let contributions: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 16384]).collect();
     let segs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 512]).collect();

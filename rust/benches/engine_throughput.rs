@@ -23,7 +23,10 @@
 use gridcollect::benchkit::{save_bench_json, save_report, section, Bench, BenchResult};
 use gridcollect::collectives::CollectiveEngine;
 use gridcollect::coordinator::{rotation_schedule_memo, tuning};
-use gridcollect::netsim::{run_rescan, GhostPayload, NativeCombiner, Payload, ReduceOp, SimConfig};
+use gridcollect::netsim::{
+    testing::run_rescan, GhostPayload, NativeCombiner, Payload, ReduceOp, SimConfig,
+};
+use gridcollect::session::GridSession;
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt::{self, Table};
 use std::time::Duration;
@@ -44,8 +47,8 @@ fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
 
     section("fig8 sweep point, warm engine — full-rescan vs full vs ghost");
-    let engine = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
-    let schedule = rotation_schedule_memo(&engine).unwrap();
+    let session = GridSession::new(&comm, params.clone(), Strategy::Multilevel);
+    let schedule = rotation_schedule_memo(&session).unwrap();
     let actions = schedule.program().total_actions();
     let rescan_cfg = SimConfig::new(params.clone());
     let mut summary = Table::new(&[
@@ -65,13 +68,13 @@ fn main() {
         let full = bench.run(&format!("point/warm/full/{label}"), || {
             let mut init = vec![Payload::empty(); n];
             init[0] = Payload::single(0, vec![1.0f32; elems]);
-            let sim = engine.run_schedule(&schedule, init).unwrap();
+            let sim = session.run_schedule(&schedule, init).unwrap();
             std::hint::black_box(sim.makespan_us);
         });
         let ghost = bench.run(&format!("point/warm/ghost/{label}"), || {
             let mut init = vec![GhostPayload::empty(); n];
             init[0] = GhostPayload::single(0, elems);
-            let sim = engine.run_schedule_timing(&schedule, init).unwrap();
+            let sim = session.run_schedule_timing(&schedule, init).unwrap();
             std::hint::black_box(sim.makespan_us);
         });
         let speedup = full.median_us / ghost.median_us.max(1e-9);
@@ -95,8 +98,8 @@ fn main() {
     for &bytes in &sizes {
         let label = fmt::bytes(bytes);
         results.push(bench.run(&format!("point/cold/ghost/{label}"), || {
-            let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
-            let p = gridcollect::coordinator::run_point_with(&e, bytes).unwrap();
+            let s = GridSession::new(&comm, params.clone(), Strategy::Multilevel);
+            let p = gridcollect::coordinator::run_point_with(&s, bytes).unwrap();
             std::hint::black_box(p.total_us);
         }));
     }

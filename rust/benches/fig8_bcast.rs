@@ -12,7 +12,7 @@ use gridcollect::util::fmt;
 fn main() {
     section("E1 / Figure 8 — virtual-time reproduction");
     let sizes = timing_app::default_sizes();
-    let (table, pts) = experiment::fig8_table(&sizes, experiment::native()).unwrap();
+    let (table, pts) = experiment::fig8_table(&sizes).unwrap();
     print!("{}", table.to_markdown());
     save_report("fig8", &table);
 
@@ -41,24 +41,16 @@ fn main() {
     let bench = Bench::default();
     for s in Strategy::ALL {
         let data = vec![1.0f32; 16384];
-        let engine =
-            gridcollect::collectives::CollectiveEngine::new(&comm, params.clone(), s);
+        let session = gridcollect::session::GridSession::new(&comm, params.clone(), s);
         bench.run(&format!("bcast/sim-wall/{}", s.name()), || {
-            let out = engine.bcast(0, &data).unwrap();
+            let out = session.bcast(0, &data).unwrap();
             std::hint::black_box(out.sim.makespan_us);
         });
     }
 
     section("full rotation wall-clock (Fig. 7 app, one size)");
     bench.run("fig7-rotation/multilevel/64KiB", || {
-        let p = timing_app::run_point(
-            &comm,
-            &params,
-            Strategy::Multilevel,
-            65536,
-            experiment::native(),
-        )
-        .unwrap();
+        let p = timing_app::run_point(&comm, &params, Strategy::Multilevel, 65536).unwrap();
         std::hint::black_box(p.total_us);
     });
 }

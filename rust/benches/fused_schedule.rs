@@ -12,10 +12,10 @@
 //! Reports land in `target/bench-reports/` (md/csv + BENCH_*.json).
 
 use gridcollect::benchkit::{save_bench_json, save_report, section, Bench};
-use gridcollect::collectives::CollectiveEngine;
 use gridcollect::coordinator::{experiment, timing_app};
 use gridcollect::netsim::ReduceOp;
 use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
+use gridcollect::session::GridSession;
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt::{self, Table};
 use std::time::Duration;
@@ -37,32 +37,32 @@ fn main() {
     section("fused vs separate rotation — cold (fresh engine per iteration)");
     for &bytes in &sizes {
         results.push(bench.run(&format!("rotation/cold/fused/{}", fmt::bytes(bytes)), || {
-            let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
-            let p = timing_app::run_point_with(&e, bytes).unwrap();
+            let s = GridSession::new(&comm, params.clone(), Strategy::Multilevel);
+            let p = timing_app::run_point_with(&s, bytes).unwrap();
             std::hint::black_box(p.total_us);
         }));
         results.push(bench.run(
             &format!("rotation/cold/separate/{}", fmt::bytes(bytes)),
             || {
-                let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
-                let p = timing_app::run_point_separate(&e, bytes).unwrap();
+                let s = GridSession::new(&comm, params.clone(), Strategy::Multilevel);
+                let p = timing_app::run_point_separate(&s, bytes).unwrap();
                 std::hint::black_box(p.total_us);
             },
         ));
     }
 
     section("fused vs separate rotation — warm (long-lived engine)");
-    let engine = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
-    timing_app::run_point_with(&engine, sizes[0]).unwrap(); // prime the plan cache
+    let session = GridSession::new(&comm, params.clone(), Strategy::Multilevel);
+    timing_app::run_point_with(&session, sizes[0]).unwrap(); // prime the plan cache
     for &bytes in &sizes {
         results.push(bench.run(&format!("rotation/warm/fused/{}", fmt::bytes(bytes)), || {
-            let p = timing_app::run_point_with(&engine, bytes).unwrap();
+            let p = timing_app::run_point_with(&session, bytes).unwrap();
             std::hint::black_box(p.total_us);
         }));
         results.push(bench.run(
             &format!("rotation/warm/separate/{}", fmt::bytes(bytes)),
             || {
-                let p = timing_app::run_point_separate(&engine, bytes).unwrap();
+                let p = timing_app::run_point_separate(&session, bytes).unwrap();
                 std::hint::black_box(p.total_us);
             },
         ));
@@ -86,26 +86,26 @@ fn main() {
             results.push(bench.run(
                 &format!("allreduce/cold/{}/{}", policy.name(), fmt::bytes(bytes)),
                 || {
-                    let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
-                    let o = e
+                    let s = GridSession::new(&comm, params.clone(), Strategy::Multilevel);
+                    let o = s
                         .allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions)
                         .unwrap();
                     std::hint::black_box(o.sim.makespan_us);
                 },
             ));
-            // Warm: long-lived engine — pure payload setup + one run.
-            let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
-            e.allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions).unwrap();
+            // Warm: long-lived session — pure payload setup + one run.
+            let s = GridSession::new(&comm, params.clone(), Strategy::Multilevel);
+            s.allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions).unwrap();
             results.push(bench.run(
                 &format!("allreduce/warm/{}/{}", policy.name(), fmt::bytes(bytes)),
                 || {
-                    let o = e
+                    let o = s
                         .allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions)
                         .unwrap();
                     std::hint::black_box(o.sim.makespan_us);
                 },
             ));
-            let o = e.allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions).unwrap();
+            let o = s.allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions).unwrap();
             hybrid_delta.row(&[
                 fmt::bytes(bytes),
                 policy.name(),
@@ -119,12 +119,7 @@ fn main() {
     save_report("hybrid_allreduce", &hybrid_delta);
 
     section("virtual-time delta (the §4 fidelity gap the fusion closes)");
-    let delta = experiment::fig8_fused_vs_separate(
-        &sizes,
-        Strategy::Multilevel,
-        experiment::native(),
-    )
-    .unwrap();
+    let delta = experiment::fig8_fused_vs_separate(&sizes, Strategy::Multilevel).unwrap();
     print!("{}", delta.to_markdown());
     save_report("fused_vs_separate", &delta);
 

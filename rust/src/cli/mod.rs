@@ -14,7 +14,8 @@ pub struct Args {
 /// Flags that take a value (everything else beginning `--` is a switch).
 pub const VALUE_FLAGS: &[&str] = &[
     "sizes", "size", "steps", "lr", "strategy", "root", "spec", "sites", "machines", "procs",
-    "out", "artifacts", "seed", "shape", "params", "algo", "op", "boundary",
+    "out", "artifacts", "seed", "shape", "params", "algo", "op", "boundary", "save",
+    "policy-file",
 ];
 
 impl Args {
@@ -151,6 +152,21 @@ impl Args {
         }
     }
 
+    /// Parse `--algo`/`--boundary` into an *optional* policy pin:
+    /// `None` when neither flag is given (let the session's policy
+    /// provider resolve — the `--policy-file` path), `Some(policy)` when
+    /// the user pinned one explicitly. `--boundary` without
+    /// `--algo hybrid` is still rejected.
+    pub fn algo_policy_opt(&self) -> Result<Option<crate::plan::AlgoPolicy>> {
+        if self.get("algo").is_none() && self.get("boundary").is_none() {
+            return Ok(None);
+        }
+        self.algo_policy(crate::plan::AlgoPolicy::uniform(
+            crate::plan::AllreduceAlgo::ReduceBcast,
+        ))
+        .map(Some)
+    }
+
     /// Parse `--op` (reduction operator).
     pub fn reduce_op(
         &self,
@@ -260,6 +276,26 @@ mod tests {
         // measured composition; reject it instead.
         assert!(args("--boundary 2").algo_policy(rb).is_err());
         assert!(args("--algo rsag --boundary 2").algo_policy(rb).is_err());
+    }
+
+    #[test]
+    fn algo_policy_opt_defers_to_the_provider() {
+        use crate::plan::{AlgoPolicy, AllreduceAlgo};
+        assert_eq!(args("").algo_policy_opt().unwrap(), None, "no pin: provider resolves");
+        assert_eq!(
+            args("--algo rsag").algo_policy_opt().unwrap(),
+            Some(AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather))
+        );
+        assert_eq!(
+            args("--algo hybrid --boundary 2").algo_policy_opt().unwrap(),
+            Some(AlgoPolicy::hybrid(2))
+        );
+        assert!(args("--boundary 2").algo_policy_opt().is_err());
+        // --save / --policy-file take values, not switch semantics.
+        let a = args("tune-boundary --save t.json");
+        assert_eq!(a.get("save"), Some("t.json"));
+        let a = args("train --policy-file t.json");
+        assert_eq!(a.get("policy-file"), Some("t.json"));
     }
 
     #[test]

@@ -23,8 +23,8 @@ pub use request::OpSpec;
 use crate::error::{Error, Result};
 use crate::model::NetworkParams;
 use crate::netsim::{
-    run_indexed, run_timing_indexed, ChannelIndex, Combiner, GhostPayload, NativeCombiner,
-    Payload, Program, ReduceOp, SimConfig, SimResult,
+    run_indexed_scratch, run_timing_indexed_scratch, ChannelIndex, Combiner, ExecScratch,
+    GhostPayload, NativeCombiner, Payload, Program, ReduceOp, SimConfig, SimResult,
 };
 use crate::plan::{
     AlgoPolicy, AllreduceAlgo, CollectivePlan, OpKind, PlanCache, PlanKey, Schedule,
@@ -44,14 +44,39 @@ pub struct Outcome {
     pub data: Vec<Vec<f32>>,
 }
 
-/// High-level executor binding a communicator, a cost model, a combiner
-/// and a strategy. Plans (tree + compiled program) are built once per
-/// `(root, op, segmentation)` and memoized in a [`PlanCache`]; each call
-/// only constructs initial payloads and runs the simulator.
+/// Shared memo of fused schedules, keyed by caller-chosen names — the
+/// handle a `GridSession` passes to every engine view it hands out so
+/// all of them see (and reuse) the same memoized schedules.
+pub type ScheduleMemo = Arc<Mutex<HashMap<String, Arc<Schedule>>>>;
+
+/// The shareable state a `GridSession` threads into every engine view it
+/// hands out (crate-internal: sessions construct engines through
+/// [`CollectiveEngine::from_parts`] so a view really is a handful of
+/// `Arc` clones — `CollectiveEngine::new` would allocate a private
+/// cache, scratch and memo only to discard them).
+pub(crate) struct EngineParts<'a> {
+    pub combiner: &'a dyn Combiner,
+    pub policy: LevelPolicy,
+    pub cache: Arc<PlanCache>,
+    pub scratch: Arc<ExecScratch>,
+    pub schedules: ScheduleMemo,
+    pub trace: bool,
+}
+
+/// The **internal execution layer** binding a communicator, a cost
+/// model, a combiner and a strategy. Plans (tree + compiled program) are
+/// built once per `(root, op, segmentation)` and memoized in a
+/// [`PlanCache`]; each call only constructs initial payloads and runs
+/// the simulator against the engine's reusable [`ExecScratch`] arena.
 ///
 /// Every operation is a typed [`request`] value driven through one
-/// generic path ([`CollectiveEngine::run`]); the named methods below are
-/// thin wrappers constructing those requests.
+/// generic path ([`CollectiveEngine::run`]).
+///
+/// **Application code should hold a [`crate::session::GridSession`]**
+/// (the front door: owned topology, pluggable policy provider, shared
+/// caches and scratch) and let it hand out engines; the named
+/// convenience wrappers below (`bcast`, `reduce`, …) are kept public but
+/// `#[doc(hidden)]` for one release — see the README migration table.
 ///
 /// The cache is engine-private by default; use
 /// [`CollectiveEngine::with_plan_cache`] to share one across engines
@@ -65,11 +90,17 @@ pub struct CollectiveEngine<'a> {
     policy: LevelPolicy,
     allreduce_policy: AlgoPolicy,
     cache: Arc<PlanCache>,
+    /// Reusable per-mode execution scratch (mailbox/wait/queue/cursor
+    /// storage); engine-private by default, shared across a session's
+    /// engines via [`CollectiveEngine::with_scratch`].
+    scratch: Arc<ExecScratch>,
     /// Memoized fused schedules, keyed by caller-chosen names (e.g. the
     /// Fig. 7 rotation). A schedule depends only on the engine's
     /// topology/strategy/policy — never on payload sizes — so sweeps
-    /// assemble it once (see [`CollectiveEngine::memo_schedule`]).
-    schedules: Mutex<HashMap<String, Arc<Schedule>>>,
+    /// assemble it once (see [`CollectiveEngine::memo_schedule`]). The
+    /// map sits behind an `Arc` so a session's short-lived engine views
+    /// share one memo.
+    schedules: ScheduleMemo,
 }
 
 impl<'a> CollectiveEngine<'a> {
@@ -83,7 +114,32 @@ impl<'a> CollectiveEngine<'a> {
             policy: LevelPolicy::paper(),
             allreduce_policy: AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast),
             cache: Arc::new(PlanCache::new()),
-            schedules: Mutex::new(HashMap::new()),
+            scratch: Arc::new(ExecScratch::new()),
+            schedules: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    /// Engine view over pre-shared session state — no private cache,
+    /// scratch or memo is allocated just to be replaced. Crate-internal:
+    /// the `GridSession` factory is the intended caller.
+    pub(crate) fn from_parts(
+        comm: &'a Communicator,
+        params: NetworkParams,
+        strategy: Strategy,
+        parts: EngineParts<'a>,
+    ) -> Self {
+        let mut cfg = SimConfig::new(params);
+        cfg.trace = parts.trace;
+        CollectiveEngine {
+            comm,
+            cfg,
+            combiner: parts.combiner,
+            strategy,
+            policy: parts.policy,
+            allreduce_policy: AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast),
+            cache: parts.cache,
+            scratch: parts.scratch,
+            schedules: parts.schedules,
         }
     }
 
@@ -106,6 +162,22 @@ impl<'a> CollectiveEngine<'a> {
     /// strategies of an experiment sweep, or across training steps).
     pub fn with_plan_cache(mut self, cache: Arc<PlanCache>) -> Self {
         self.cache = cache;
+        self
+    }
+
+    /// Share an execution scratch arena with other engines — how a
+    /// [`crate::session::GridSession`] keeps back-to-back runs through
+    /// its short-lived engine views allocation-free.
+    pub fn with_scratch(mut self, scratch: Arc<ExecScratch>) -> Self {
+        self.scratch = scratch;
+        self
+    }
+
+    /// Share the fused-schedule memo map with other engines (again, the
+    /// session mechanism: every engine view sees the same memoized
+    /// rotation schedule).
+    pub fn with_schedule_memo(mut self, memo: ScheduleMemo) -> Self {
+        self.schedules = memo;
         self
     }
 
@@ -140,6 +212,11 @@ impl<'a> CollectiveEngine<'a> {
     /// The engine's plan cache (for stats or sharing).
     pub fn plan_cache(&self) -> &Arc<PlanCache> {
         &self.cache
+    }
+
+    /// The engine's execution scratch arenas (for sharing).
+    pub fn scratch(&self) -> &Arc<ExecScratch> {
+        &self.scratch
     }
 
     /// Start a fused multi-collective [`Schedule`] over this engine's
@@ -182,12 +259,14 @@ impl<'a> CollectiveEngine<'a> {
         init: Vec<GhostPayload>,
     ) -> Result<SimResult> {
         self.check_schedule_epoch(schedule)?;
-        run_timing_indexed(
+        let mut scratch = self.scratch.ghost();
+        run_timing_indexed_scratch(
             self.comm.clustering(),
             schedule.program(),
             schedule.channels(),
             init,
             &self.cfg,
+            &mut scratch,
         )
     }
 
@@ -250,14 +329,24 @@ impl<'a> CollectiveEngine<'a> {
     }
 
     /// Stage-3 entry point: run a compiled program against this call's
-    /// initial payloads, with its precomputed channel index.
+    /// initial payloads, with its precomputed channel index and the
+    /// engine's recycled full-mode scratch arena.
     fn execute(
         &self,
         prog: &Program,
         channels: &ChannelIndex,
         init: Vec<Payload>,
     ) -> Result<SimResult> {
-        run_indexed(self.comm.clustering(), prog, channels, init, &self.cfg, self.combiner)
+        let mut scratch = self.scratch.full();
+        run_indexed_scratch(
+            self.comm.clustering(),
+            prog,
+            channels,
+            init,
+            &self.cfg,
+            self.combiner,
+            &mut scratch,
+        )
     }
 
     /// The generic request path every collective flows through:
@@ -318,16 +407,26 @@ impl<'a> CollectiveEngine<'a> {
         let plan = self.plan_for(request.root(), request.op_kind(), request.segments())?;
         let init = request.encode_ghost(self.comm)?;
         let clustering = self.comm.clustering();
-        run_timing_indexed(clustering, &plan.program, &plan.channels, init, &self.cfg)
+        let mut scratch = self.scratch.ghost();
+        run_timing_indexed_scratch(
+            clustering,
+            &plan.program,
+            &plan.channels,
+            init,
+            &self.cfg,
+            &mut scratch,
+        )
     }
 
     /// MPI_Bcast: `data` flows from `root` to every rank.
     /// `Outcome::data[r]` = the buffer received at rank `r`.
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn bcast(&self, root: Rank, data: &[f32]) -> Result<Outcome> {
         self.run(&request::Bcast { root, data })
     }
 
     /// MPI_Bcast, measurement path (see [`CollectiveEngine::run_sim`]).
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn bcast_sim(&self, root: Rank, data: &[f32]) -> Result<SimResult> {
         self.run_sim(&request::Bcast { root, data })
     }
@@ -335,11 +434,13 @@ impl<'a> CollectiveEngine<'a> {
     /// MPI_Reduce: elementwise `op` over every rank's contribution, result
     /// at `root`. `Outcome::data[root]` = the reduced vector (non-roots
     /// hold their partials; MPI leaves them undefined).
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn reduce(&self, root: Rank, op: ReduceOp, contributions: &[Vec<f32>]) -> Result<Outcome> {
         self.run(&request::Reduce { root, op, contributions })
     }
 
     /// MPI_Barrier rooted at rank 0 (fan-in/fan-out).
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn barrier(&self) -> Result<SimResult> {
         self.run_sim(&request::Barrier)
     }
@@ -347,12 +448,14 @@ impl<'a> CollectiveEngine<'a> {
     /// MPI_Gather: rank `r`'s segment `contributions[r]` ends at `root`.
     /// `Outcome::data` = the per-rank segments as assembled at the root
     /// (rank order).
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn gather(&self, root: Rank, contributions: &[Vec<f32>]) -> Result<Outcome> {
         self.run(&request::Gather { root, contributions })
     }
 
     /// MPI_Scatter: `segments[r]` travels from `root` to rank `r`.
     /// `Outcome::data[r]` = the segment received at rank `r`.
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn scatter(&self, root: Rank, segments: &[Vec<f32>]) -> Result<Outcome> {
         self.run(&request::Scatter { root, segments })
     }
@@ -361,6 +464,7 @@ impl<'a> CollectiveEngine<'a> {
     /// engine's default composition policy (uniform reduce+bcast unless
     /// overridden) rooted at rank 0. Used by the data-parallel training
     /// driver.
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn allreduce(&self, op: ReduceOp, contributions: &[Vec<f32>]) -> Result<Outcome> {
         self.allreduce_at(0, op, contributions)
     }
@@ -368,6 +472,7 @@ impl<'a> CollectiveEngine<'a> {
     /// All-reduce with an explicit internal tree root. The result is
     /// root-independent; the root only shapes the message flow (useful
     /// for load-spreading across repeated calls and for testing).
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn allreduce_at(
         &self,
         root: Rank,
@@ -380,6 +485,7 @@ impl<'a> CollectiveEngine<'a> {
     /// All-reduce with an explicit uniform composition algorithm. Both
     /// algorithms deliver bitwise-identical results (same tree, same
     /// combine order); see [`AllreduceAlgo`] for the trade-off.
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn allreduce_with(
         &self,
         algo: AllreduceAlgo,
@@ -394,6 +500,7 @@ impl<'a> CollectiveEngine<'a> {
     /// [`AlgoPolicy::hybrid`] pays reduce+bcast's 2 messages per WAN edge
     /// while keeping rs+ag's pipelined delivery inside the machines. All
     /// policies deliver bitwise-identical results.
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn allreduce_with_policy(
         &self,
         policy: AlgoPolicy,
@@ -407,6 +514,7 @@ impl<'a> CollectiveEngine<'a> {
     /// Allgather (§6 extension): every rank contributes `contributions[r]`
     /// and ends with every segment. `Outcome::data[r]` = concatenation in
     /// rank order as assembled at rank `r`.
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn allgather(&self, contributions: &[Vec<f32>]) -> Result<Outcome> {
         self.run(&request::Allgather { contributions })
     }
@@ -414,6 +522,7 @@ impl<'a> CollectiveEngine<'a> {
     /// Reduce-scatter (§6 extension): `contributions[r][q]` is rank `r`'s
     /// contribution to destination `q`'s segment; rank `r` receives the
     /// elementwise `op` over all ranks' segment `r`.
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn reduce_scatter(
         &self,
         op: ReduceOp,
@@ -425,6 +534,7 @@ impl<'a> CollectiveEngine<'a> {
     /// Personalized all-to-all (§6 extension): `sends[r][q]` travels from
     /// rank `r` to rank `q`. `Outcome::data[r]` = concatenation of what
     /// `r` received, in source order.
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn alltoall(&self, sends: &[Vec<Vec<f32>>]) -> Result<Outcome> {
         self.run(&request::Alltoall { sends })
     }
@@ -434,6 +544,7 @@ impl<'a> CollectiveEngine<'a> {
     /// count participates in the plan key, so each segmentation compiles
     /// once and sweeps (e.g. [`CollectiveEngine::tune_bcast_segments`])
     /// reuse plans across repeats.
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn bcast_segmented(
         &self,
         root: Rank,
@@ -448,6 +559,7 @@ impl<'a> CollectiveEngine<'a> {
     /// An empty candidate set is an error — there is no segmentation to
     /// report, and silently returning `(1, inf)` would poison downstream
     /// comparisons.
+    #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
     pub fn tune_bcast_segments(
         &self,
         root: Rank,

@@ -1,26 +1,30 @@
 //! Experiment drivers: parameterized sweeps behind every table/figure in
-//! DESIGN.md §6, shared by the benches, the examples and the CLI.
+//! DESIGN.md §6, shared by the benches, the examples and the CLI. All
+//! drivers run through [`GridSession`] (the front door); per-strategy
+//! sweeps share one plan cache and one scratch arena across sessions.
 
 use crate::analytic::TwoTier;
-use crate::collectives::{verify, CollectiveEngine};
+use crate::collectives::verify;
 use crate::coordinator::timing_app::{self, TimingPoint};
 use crate::error::Result;
 use crate::model::{presets, NetworkParams};
-use crate::netsim::{Combiner, NativeCombiner, ReduceOp};
+use crate::netsim::{Combiner, ExecScratch, NativeCombiner, ReduceOp};
 use crate::plan::{AlgoPolicy, AllreduceAlgo, PlanCache};
+use crate::session::GridSession;
 use crate::topology::{Communicator, TopologySpec};
 use crate::tree::{build_strategy_tree, LevelPolicy, Strategy, TreeShape};
 use crate::util::fmt::{self, Table};
 use std::sync::Arc;
 
 /// E1 — Fig. 8: the full rotation timing for the paper's 48-process
-/// grid, one row per (size, strategy). Each point is one fused
+/// grid, one row per (size, strategy). Each point is one fused **ghost**
 /// simulation of the whole rotation (§4 fidelity; see
-/// [`timing_app::run_point_with`]).
-pub fn fig8_table(sizes: &[usize], combiner: &dyn Combiner) -> Result<(Table, Vec<TimingPoint>)> {
+/// [`timing_app::run_point_with`]) — ghost runs never touch a combiner,
+/// so the driver takes none.
+pub fn fig8_table(sizes: &[usize]) -> Result<(Table, Vec<TimingPoint>)> {
     let comm = Communicator::world(&TopologySpec::paper_experiment());
     let params = presets::paper_grid();
-    let pts = timing_app::fig8_sweep(&comm, &params, sizes, &Strategy::ALL, combiner)?;
+    let pts = timing_app::fig8_sweep(&comm, &params, sizes, &Strategy::ALL)?;
     let mut t = Table::new(&[
         "msg size", "strategy", "rotation total", "mean bcast", "mean ack", "WAN msgs",
     ]);
@@ -40,20 +44,15 @@ pub fn fig8_table(sizes: &[usize], combiner: &dyn Combiner) -> Result<(Table, Ve
 /// E13 — fused rotation vs sum-of-isolated-makespans, one strategy:
 /// quantifies exactly what the pre-fusion timing app overstated (and the
 /// 2n-fold engine-invocation saving is benched in `fused_schedule`).
-pub fn fig8_fused_vs_separate(
-    sizes: &[usize],
-    strategy: Strategy,
-    combiner: &dyn Combiner,
-) -> Result<Table> {
+pub fn fig8_fused_vs_separate(sizes: &[usize], strategy: Strategy) -> Result<Table> {
     let comm = Communicator::world(&TopologySpec::paper_experiment());
-    let params = presets::paper_grid();
-    let engine = CollectiveEngine::new(&comm, params, strategy).with_combiner(combiner);
+    let session = GridSession::new(&comm, presets::paper_grid(), strategy);
     let mut t = Table::new(&[
         "msg size", "fused rotation", "separate sum", "overlap saved", "saved %",
     ]);
     for &bytes in sizes {
-        let fused = timing_app::run_point_with(&engine, bytes)?;
-        let sep = timing_app::run_point_separate(&engine, bytes)?;
+        let fused = timing_app::run_point_with(&session, bytes)?;
+        let sep = timing_app::run_point_separate(&session, bytes)?;
         let saved = sep.total_us - fused.total_us;
         t.row(&[
             fmt::bytes(bytes),
@@ -86,11 +85,11 @@ pub fn cost_model_table(bytes: usize) -> Result<Table> {
         let spec = TopologySpec::uniform(c, 1, p / c)?;
         let comm = Communicator::world(&spec);
         let data = vec![0.0f32; bytes / 4];
-        let sim_b = CollectiveEngine::new(&comm, params.clone(), Strategy::Unaware)
+        let sim_b = GridSession::new(&comm, params.clone(), Strategy::Unaware)
             .bcast(0, &data)?
             .sim
             .makespan_us;
-        let sim_m = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
+        let sim_m = GridSession::new(&comm, params.clone(), Strategy::Multilevel)
             .bcast(0, &data)?
             .sim
             .makespan_us;
@@ -109,29 +108,32 @@ pub fn cost_model_table(bytes: usize) -> Result<Table> {
 }
 
 /// E8 — the core collectives plus allreduce under every strategy on the
-/// paper grid. All engines share one [`PlanCache`] (keys carry the
-/// strategy, so sharing is safe and the table's second run is all-warm).
-pub fn collectives_suite_table(bytes: usize, combiner: &dyn Combiner) -> Result<Table> {
+/// paper grid. All sessions share one [`PlanCache`] and scratch arena
+/// (keys carry the strategy, so sharing is safe and the table's second
+/// run is all-warm).
+pub fn collectives_suite_table(bytes: usize, combiner: Arc<dyn Combiner>) -> Result<Table> {
     let comm = Communicator::world(&TopologySpec::paper_experiment());
     let params = presets::paper_grid();
     let n = comm.size();
     let elems = bytes / 4;
     let cache = Arc::new(PlanCache::new());
+    let scratch = Arc::new(ExecScratch::new());
     let mut t = Table::new(&["op", "strategy", "makespan", "WAN msgs", "total msgs"]);
     for s in Strategy::ALL {
-        let e = CollectiveEngine::new(&comm, params.clone(), s)
-            .with_combiner(combiner)
-            .with_plan_cache(cache.clone());
+        let session = GridSession::new(&comm, params.clone(), s)
+            .with_combiner(combiner.clone())
+            .with_plan_cache(cache.clone())
+            .with_scratch(scratch.clone());
         let data = vec![1.0f32; elems];
         let contributions: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; elems]).collect();
         let seg: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; elems / n.max(1) + 1]).collect();
         let rows: Vec<(&str, crate::netsim::SimResult)> = vec![
-            ("bcast", e.bcast(0, &data)?.sim),
-            ("reduce", e.reduce(0, ReduceOp::Sum, &contributions)?.sim),
-            ("barrier", e.barrier()?),
-            ("gather", e.gather(0, &seg)?.sim),
-            ("scatter", e.scatter(0, &seg)?.sim),
-            ("allreduce", e.allreduce(ReduceOp::Sum, &contributions)?.sim),
+            ("bcast", session.bcast(0, &data)?.sim),
+            ("reduce", session.reduce(0, ReduceOp::Sum, &contributions)?.sim),
+            ("barrier", session.barrier()?),
+            ("gather", session.gather(0, &seg)?.sim),
+            ("scatter", session.scatter(0, &seg)?.sim),
+            ("allreduce", session.allreduce(ReduceOp::Sum, &contributions)?.sim),
         ];
         for (op, sim) in rows {
             t.row(&[
@@ -152,7 +154,7 @@ pub fn collectives_suite_table(bytes: usize, combiner: &dyn Combiner) -> Result<
 pub fn allreduce_table(
     bytes: usize,
     op: ReduceOp,
-    combiner: &dyn Combiner,
+    combiner: Arc<dyn Combiner>,
     boundary: usize,
 ) -> Result<Table> {
     let comm = Communicator::world(&TopologySpec::paper_experiment());
@@ -170,6 +172,7 @@ pub fn allreduce_table(
         .collect();
     let expect = verify::ref_reduce(&contributions, op);
     let cache = Arc::new(PlanCache::new());
+    let scratch = Arc::new(ExecScratch::new());
     let policies = [
         AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
         AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
@@ -178,11 +181,12 @@ pub fn allreduce_table(
     let mut t =
         Table::new(&["strategy", "algorithm", "makespan", "WAN msgs", "total msgs", "verified"]);
     for s in Strategy::ALL {
-        let e = CollectiveEngine::new(&comm, params.clone(), s)
-            .with_combiner(combiner)
-            .with_plan_cache(cache.clone());
+        let session = GridSession::new(&comm, params.clone(), s)
+            .with_combiner(combiner.clone())
+            .with_plan_cache(cache.clone())
+            .with_scratch(scratch.clone());
         for policy in policies {
-            let out = e.allreduce_with_policy(policy, 0, op, &contributions)?;
+            let out = session.allreduce_with_policy(policy, 0, op, &contributions)?;
             let ok = (0..n).all(|r| out.data[r] == expect);
             t.row(&[
                 s.name().to_string(),
@@ -226,9 +230,9 @@ pub fn wan_shape_ablation(sites: usize, bytes: usize) -> Result<Table> {
         ),
     ];
     for (name, policy) in shapes {
-        let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
-            .with_policy(policy);
-        let out = e.bcast(0, &data)?;
+        let session = GridSession::new(&comm, params.clone(), Strategy::Multilevel)
+            .with_level_policy(policy);
+        let out = session.bcast(0, &data)?;
         t.row(&[
             name,
             fmt::time_us(out.sim.makespan_us),
@@ -247,11 +251,11 @@ pub fn site_scaling_table(bytes: usize) -> Result<Table> {
         let per = 64 / sites;
         let spec = TopologySpec::uniform(sites, 1, per)?;
         let comm = Communicator::world(&spec);
-        let b = CollectiveEngine::new(&comm, params.clone(), Strategy::Unaware)
+        let b = GridSession::new(&comm, params.clone(), Strategy::Unaware)
             .bcast(0, &data)?
             .sim
             .makespan_us;
-        let m = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
+        let m = GridSession::new(&comm, params.clone(), Strategy::Multilevel)
             .bcast(0, &data)?
             .sim
             .makespan_us;
@@ -274,15 +278,15 @@ pub fn root_sensitivity_table(bytes: usize) -> Result<Table> {
     let data = vec![0.5f32; bytes / 4];
     let mut t = Table::new(&["strategy", "min over roots", "max over roots", "spread"]);
     for s in [Strategy::Unaware, Strategy::Multilevel] {
-        // Each root appears once per sweep, so this engine-private cache
-        // only pays off for callers that hold a long-lived engine (or
-        // pass a shared PlanCache) across repeated sweeps; within one
-        // call it simply builds each root's plan once.
-        let e = CollectiveEngine::new(&comm, params.clone(), s);
+        // Each root appears once per sweep, so this session-private
+        // cache only pays off for callers that hold a long-lived session
+        // (or pass a shared PlanCache) across repeated sweeps; within
+        // one call it simply builds each root's plan once.
+        let session = GridSession::new(&comm, params.clone(), s);
         let mut lo = f64::INFINITY;
         let mut hi = 0.0f64;
         for root in 0..comm.size() {
-            let us = e.bcast(root, &data)?.sim.makespan_us;
+            let us = session.bcast(root, &data)?.sim.makespan_us;
             lo = lo.min(us);
             hi = hi.max(us);
         }
@@ -299,8 +303,8 @@ pub fn root_sensitivity_table(bytes: usize) -> Result<Table> {
 /// Per-link-class message/byte accounting for one broadcast (E4/E5).
 pub fn message_accounting(comm: &Communicator, strategy: Strategy, bytes: usize) -> Result<Table> {
     let params = presets::paper_grid();
-    let e = CollectiveEngine::new(comm, params, strategy);
-    let out = e.bcast(0, &vec![0.0f32; bytes / 4])?;
+    let session = GridSession::new(comm, params, strategy);
+    let out = session.bcast(0, &vec![0.0f32; bytes / 4])?;
     let n_levels = comm.clustering().n_levels();
     let mut t = Table::new(&["link class", "messages", "bytes"]);
     for (i, (&m, &b)) in out.sim.msgs_by_sep.iter().zip(&out.sim.bytes_by_sep).enumerate() {
@@ -341,6 +345,11 @@ pub fn native() -> &'static NativeCombiner {
     &N
 }
 
+/// [`native`] behind the `Arc` handle sessions take.
+pub fn native_arc() -> Arc<dyn Combiner> {
+    Arc::new(NativeCombiner)
+}
+
 /// Sweep helper shared by benches: build the paper-grid communicator.
 pub fn paper_comm() -> Communicator {
     Communicator::world(&TopologySpec::paper_experiment())
@@ -357,14 +366,14 @@ mod tests {
 
     #[test]
     fn fig8_table_has_all_rows() {
-        let (t, pts) = fig8_table(&[1024, 8192], native()).unwrap();
+        let (t, pts) = fig8_table(&[1024, 8192]).unwrap();
         assert_eq!(t.n_rows(), 8);
         assert_eq!(pts.len(), 8);
     }
 
     #[test]
     fn fused_vs_separate_table_rows() {
-        let t = fig8_fused_vs_separate(&[4096], Strategy::Multilevel, native()).unwrap();
+        let t = fig8_fused_vs_separate(&[4096], Strategy::Multilevel).unwrap();
         assert_eq!(t.n_rows(), 1);
     }
 
@@ -376,14 +385,14 @@ mod tests {
 
     #[test]
     fn suite_covers_6_ops_x_4_strategies() {
-        let t = collectives_suite_table(4096, native()).unwrap();
+        let t = collectives_suite_table(4096, native_arc()).unwrap();
         assert_eq!(t.n_rows(), 24);
     }
 
     #[test]
     fn allreduce_table_verifies_every_row() {
         for op in crate::netsim::ReduceOp::ALL {
-            let t = allreduce_table(4096, op, native(), 1).unwrap();
+            let t = allreduce_table(4096, op, native_arc(), 1).unwrap();
             assert_eq!(t.n_rows(), 12, "4 strategies x 3 composition policies");
             let md = t.to_markdown();
             assert!(md.contains("exact"), "{op:?}");

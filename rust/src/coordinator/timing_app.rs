@@ -8,7 +8,7 @@
 //! Fig. 7.
 //!
 //! Fidelity note: the paper measures `t1 - t0` over one *continuous* run
-//! of the whole rotation, so [`run_point`] fuses the 2n phases (n
+//! of the whole rotation, so [`run_point_with`] fuses the 2n phases (n
 //! broadcasts, n ack-barriers) into a single [`Schedule`] and executes
 //! **one** engine run per point. Summing per-phase makespans of
 //! isolated simulations — the pre-fusion implementation, kept as
@@ -18,20 +18,19 @@
 //!
 //! Perf note: a timing point only needs *timing*, so [`run_point_with`]
 //! executes the rotation in **ghost mode**
-//! ([`CollectiveEngine::run_schedule_timing`]) — bit-identical virtual
-//! times, zero payload allocation — against the engine's **memoized**
+//! ([`GridSession::run_schedule_timing`]) — bit-identical virtual
+//! times, zero payload allocation — against the session's **memoized**
 //! rotation schedule ([`rotation_schedule_memo`]): the schedule is
 //! payload-independent, so a warm sweep point performs zero tree builds,
-//! zero compiles, zero schedule assemblies and exactly one engine
-//! invocation (asserted in `rust/tests/fused_timing.rs`).
+//! zero compiles, zero schedule assemblies, zero scratch growth and
+//! exactly one engine invocation (asserted in
+//! `rust/tests/fused_timing.rs`).
 
-use crate::collectives::CollectiveEngine;
 use crate::error::Result;
 use crate::model::NetworkParams;
-use crate::netsim::{
-    run, Combiner, GhostPayload, Merge, NativeCombiner, Payload, Program, SendPart, SimConfig,
-};
+use crate::netsim::{run, GhostPayload, Merge, Payload, Program, SendPart, SimConfig};
 use crate::plan::{OpKind, PlanCache, Schedule};
+use crate::session::GridSession;
 use crate::topology::Communicator;
 use crate::tree::Strategy;
 use std::sync::Arc;
@@ -79,26 +78,26 @@ pub fn ack_barrier_program(n: usize, tag: u64) -> Program {
 /// Even segments are broadcasts, odd segments ack-barriers. On a warm
 /// plan cache assembly performs zero tree builds and zero compiles
 /// (cached programs are cloned and integer-rebased).
-pub fn rotation_schedule(engine: &CollectiveEngine) -> Result<Schedule> {
-    let n = engine.comm().size();
-    let mut b = engine.schedule_builder();
+pub fn rotation_schedule(session: &GridSession) -> Result<Schedule> {
+    let n = session.comm().size();
+    let mut b = session.schedule_builder();
     for root in 0..n {
-        let plan = engine.plan_for(root, OpKind::Bcast, 1)?;
+        let plan = session.plan_for(root, OpKind::Bcast, 1)?;
         b.add_plan(&format!("bcast@{root}"), &plan)?;
         b.add_program(&format!("ack@{root}"), ack_barrier_program(n, 1))?;
     }
     b.build()
 }
 
-/// The engine's memoized Fig. 7 rotation (built once per engine via
-/// [`CollectiveEngine::memo_schedule`]; the schedule depends only on the
-/// engine's topology/strategy, never on the payload size). Sweeps and
+/// The session's memoized Fig. 7 rotation (built once per session via
+/// [`GridSession::memo_schedule`]; the schedule depends only on the
+/// session's topology/strategy, never on the payload size). Sweeps and
 /// benches share this slot so a warm point re-assembles nothing.
-pub fn rotation_schedule_memo(engine: &CollectiveEngine) -> Result<Arc<Schedule>> {
-    engine.memo_schedule("fig7-rotation", || rotation_schedule(engine))
+pub fn rotation_schedule_memo(session: &GridSession) -> Result<Arc<Schedule>> {
+    session.memo_schedule("fig7-rotation", || rotation_schedule(session))
 }
 
-/// Run the Fig. 7 application for one message size on `engine`, as a
+/// Run the Fig. 7 application for one message size on `session`, as a
 /// **single fused ghost simulation** of the whole rotation (the point
 /// only reports timing, and ghost timing is bit-identical to the full
 /// run's — `rust/tests/ghost_equivalence.rs`).
@@ -107,13 +106,13 @@ pub fn rotation_schedule_memo(engine: &CollectiveEngine) -> Result<Arc<Schedule>
 /// re-broadcasts the register it received in an earlier phase, exactly
 /// as the paper's application broadcasts same-sized buffers in turn —
 /// wire bytes per phase are identical to the isolated runs.
-pub fn run_point_with(engine: &CollectiveEngine, bytes: usize) -> Result<TimingPoint> {
+pub fn run_point_with(session: &GridSession, bytes: usize) -> Result<TimingPoint> {
     assert_eq!(bytes % 4, 0, "message size must be f32-aligned");
-    let n = engine.comm().size();
-    let schedule = rotation_schedule_memo(engine)?;
+    let n = session.comm().size();
+    let schedule = rotation_schedule_memo(session)?;
     let mut init = vec![GhostPayload::empty(); n];
     init[0] = GhostPayload::single(0, bytes / 4);
-    let sim = engine.run_schedule_timing(&schedule, init)?;
+    let sim = session.run_schedule_timing(&schedule, init)?;
     let durations = schedule.segment_durations(&sim)?;
 
     let mut bcast_us_sum = 0.0;
@@ -132,7 +131,7 @@ pub fn run_point_with(engine: &CollectiveEngine, bytes: usize) -> Result<TimingP
     }
     Ok(TimingPoint {
         bytes,
-        strategy: engine.strategy(),
+        strategy: session.strategy(),
         total_us: sim.makespan_us,
         mean_bcast_us: bcast_us_sum / n as f64,
         mean_ack_us: ack_us_sum / n as f64,
@@ -147,12 +146,15 @@ pub fn run_point_with(engine: &CollectiveEngine, bytes: usize) -> Result<TimingP
 /// comparison table, the `fused_schedule` bench); it overstates the
 /// rotation by serializing phases that the continuous measurement
 /// overlaps, and costs 2n engine invocations per point.
-pub fn run_point_separate(engine: &CollectiveEngine, bytes: usize) -> Result<TimingPoint> {
+pub fn run_point_separate(session: &GridSession, bytes: usize) -> Result<TimingPoint> {
     assert_eq!(bytes % 4, 0, "message size must be f32-aligned");
-    let comm = engine.comm();
+    let comm = session.comm();
     let n = comm.size();
     let data = vec![1.0f32; bytes / 4];
-    let ack_cfg = SimConfig::new(engine.params().clone());
+    let ack_cfg = SimConfig::new(session.params().clone());
+    // One engine view for the whole 2n-phase loop (per-root views would
+    // re-clone the cost model and level policy 2n times per point).
+    let engine = session.engine();
 
     let mut total_us = 0.0;
     let mut bcast_us_sum = 0.0;
@@ -173,14 +175,14 @@ pub fn run_point_separate(engine: &CollectiveEngine, bytes: usize) -> Result<Tim
             &ack,
             vec![Payload::empty(); n],
             &ack_cfg,
-            &NativeCombiner,
+            session.combiner(),
         )?;
         total_us += sim.makespan_us;
         ack_us_sum += sim.makespan_us;
     }
     Ok(TimingPoint {
         bytes,
-        strategy: engine.strategy(),
+        strategy: session.strategy(),
         total_us,
         mean_bcast_us: bcast_us_sum / n as f64,
         mean_ack_us: ack_us_sum / n as f64,
@@ -191,46 +193,44 @@ pub fn run_point_separate(engine: &CollectiveEngine, bytes: usize) -> Result<Tim
 
 /// Run the Fig. 7 application for one (strategy, message size) pair.
 ///
-/// Convenience wrapper over [`run_point_with`] that builds a one-shot
-/// engine (cold cache). Sweeps should hold a [`CollectiveEngine`] (or a
-/// shared [`PlanCache`]) and call [`run_point_with`] so repeated points
-/// stay warm — see [`fig8_sweep`].
+/// Convenience wrapper over [`run_point_with`] that opens a one-shot
+/// session (cold cache). Sweeps should hold a [`GridSession`] (or share
+/// a [`PlanCache`]) and call [`run_point_with`] so repeated points stay
+/// warm — see [`fig8_sweep`].
 pub fn run_point(
     comm: &Communicator,
     params: &NetworkParams,
     strategy: Strategy,
     bytes: usize,
-    combiner: &dyn Combiner,
 ) -> Result<TimingPoint> {
-    let engine =
-        CollectiveEngine::new(comm, params.clone(), strategy).with_combiner(combiner);
-    run_point_with(&engine, bytes)
+    let session = GridSession::new(comm, params.clone(), strategy);
+    run_point_with(&session, bytes)
 }
 
 /// Full Fig. 8 sweep: all strategies × all message sizes, fused. One
-/// long-lived engine per strategy shares a single [`PlanCache`], so only
-/// the first point per strategy builds plans — every later size reuses
-/// them (plans are payload-size-independent).
+/// long-lived session per strategy shares a single [`PlanCache`] and one
+/// scratch arena, so only the first point per strategy builds plans —
+/// every later size reuses them (plans are payload-size-independent).
 pub fn fig8_sweep(
     comm: &Communicator,
     params: &NetworkParams,
     sizes: &[usize],
     strategies: &[Strategy],
-    combiner: &dyn Combiner,
 ) -> Result<Vec<TimingPoint>> {
     let cache = Arc::new(PlanCache::new());
-    let engines: Vec<CollectiveEngine> = strategies
+    let scratch = Arc::new(crate::netsim::ExecScratch::new());
+    let sessions: Vec<GridSession> = strategies
         .iter()
         .map(|&s| {
-            CollectiveEngine::new(comm, params.clone(), s)
-                .with_combiner(combiner)
+            GridSession::new(comm, params.clone(), s)
                 .with_plan_cache(cache.clone())
+                .with_scratch(scratch.clone())
         })
         .collect();
     let mut out = Vec::with_capacity(sizes.len() * strategies.len());
     for &bytes in sizes {
-        for engine in &engines {
-            out.push(run_point_with(engine, bytes)?);
+        for session in &sessions {
+            out.push(run_point_with(session, bytes)?);
         }
     }
     Ok(out)
@@ -259,14 +259,14 @@ mod tests {
     #[test]
     fn rotation_schedule_has_2n_segments_and_validates() {
         let comm = Communicator::world(&TopologySpec::paper_fig1());
-        let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
-        let s = rotation_schedule(&e).unwrap();
-        assert_eq!(s.n_segments(), 2 * comm.size());
-        s.program().validate().unwrap();
+        let s = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        let sched = rotation_schedule(&s).unwrap();
+        assert_eq!(sched.n_segments(), 2 * comm.size());
+        sched.program().validate().unwrap();
         // even segments broadcast (one message per non-root rank), odd
         // segments ack (2(n-1) control messages)
         let n = comm.size() as u64;
-        for (i, seg) in s.segments().iter().enumerate() {
+        for (i, seg) in sched.segments().iter().enumerate() {
             if i % 2 == 0 {
                 assert_eq!(seg.meta.total_messages(), n - 1, "segment {i}");
             } else {
@@ -280,9 +280,7 @@ mod tests {
         // The paper's experiment topology; one representative size.
         let comm = Communicator::world(&TopologySpec::paper_experiment());
         let params = presets::paper_grid();
-        let get = |s: Strategy| {
-            run_point(&comm, &params, s, 65536, &NativeCombiner).unwrap().total_us
-        };
+        let get = |s: Strategy| run_point(&comm, &params, s, 65536).unwrap().total_us;
         let unaware = get(Strategy::Unaware);
         let machine = get(Strategy::TwoLevelMachine);
         let site = get(Strategy::TwoLevelSite);
@@ -302,8 +300,7 @@ mod tests {
     fn multilevel_wan_messages_one_per_bcast() {
         let comm = Communicator::world(&TopologySpec::paper_experiment());
         let params = presets::paper_grid();
-        let pt =
-            run_point(&comm, &params, Strategy::Multilevel, 4096, &NativeCombiner).unwrap();
+        let pt = run_point(&comm, &params, Strategy::Multilevel, 4096).unwrap();
         // one WAN message per broadcast, one broadcast per rank
         assert_eq!(pt.wan_msgs, comm.size() as u64);
     }
@@ -317,7 +314,6 @@ mod tests {
             &params,
             &[1024, 4096],
             &[Strategy::Unaware, Strategy::Multilevel],
-            &NativeCombiner,
         )
         .unwrap();
         assert_eq!(pts.len(), 4);

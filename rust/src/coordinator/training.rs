@@ -2,18 +2,21 @@
 //! every simulated worker computes gradients through the AOT-compiled
 //! train-step (L2 JAX graph via PJRT), gradients are **all-reduced with
 //! the topology-aware collectives** (payload arithmetic through the L1
-//! Pallas combine kernels when an [`XlaCombiner`] is supplied), and
-//! parameters are updated with the Pallas `axpy` SGD kernel — all three
-//! layers composing on one workload.
+//! Pallas combine kernels when the session carries an `XlaCombiner`),
+//! and parameters are updated with the Pallas `axpy` SGD kernel — all
+//! three layers composing on one workload.
+//!
+//! The driver runs on a [`GridSession`]: the allreduce composition is
+//! **policy-resolved** per gradient size unless pinned in the config, so
+//! a session carrying a tuned [`crate::session::PolicyTable`]
+//! (`gridcollect train --policy-file t.json`) transparently executes the
+//! tuner's winning policy on every step.
 
-use crate::collectives::CollectiveEngine;
 use crate::error::{Error, Result};
-use crate::model::NetworkParams;
-use crate::netsim::{Combiner, Payload, ReduceOp};
+use crate::netsim::{Payload, ReduceOp};
 use crate::plan::{AlgoPolicy, AllreduceAlgo};
 use crate::runtime::MlpRuntime;
-use crate::topology::Communicator;
-use crate::tree::Strategy;
+use crate::session::GridSession;
 
 /// Per-step record.
 #[derive(Clone, Debug)]
@@ -30,32 +33,30 @@ pub struct StepLog {
     /// reduce_us`). Zero for the chunked policies.
     pub bcast_us: f64,
     pub wan_msgs: u64,
+    /// The composition policy this step's allreduce ran under (constant
+    /// across a run; recorded so logs show what the provider resolved).
+    pub policy: AlgoPolicy,
     /// Wall-clock compute time of the PJRT train steps (us).
     pub compute_wall_us: f64,
 }
 
-/// Training configuration.
+/// Training configuration. Topology, strategy and combiner live on the
+/// [`GridSession`]; this carries only the loop parameters.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub steps: usize,
     pub lr: f32,
-    pub strategy: Strategy,
-    /// How the per-step gradient allreduce is composed (every policy is
-    /// bitwise-equivalent; see [`AlgoPolicy`] — uniform reduce+bcast,
-    /// uniform rs+ag, or the per-level hybrid).
-    pub allreduce: AlgoPolicy,
+    /// Pin the per-step gradient-allreduce composition (every policy is
+    /// bitwise-equivalent; see [`AlgoPolicy`]). `None` — the default —
+    /// asks the session's policy provider to resolve it for the gradient
+    /// payload size (the tuned path under `--policy-file`).
+    pub allreduce: Option<AlgoPolicy>,
     pub seed: u64,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig {
-            steps: 50,
-            lr: 0.1,
-            strategy: Strategy::Multilevel,
-            allreduce: AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast),
-            seed: 0,
-        }
+        TrainConfig { steps: 50, lr: 0.1, allreduce: None, seed: 0 }
     }
 }
 
@@ -66,21 +67,21 @@ impl Default for TrainConfig {
 /// the simulated grid, and applies the averaged gradient. Divergence
 /// between replicas is checked every step (they must stay bitwise equal:
 /// same reduced gradient, same update).
-pub fn train(
-    comm: &Communicator,
-    params_net: &NetworkParams,
-    mlp: &MlpRuntime,
-    combiner: &dyn Combiner,
-    cfg: &TrainConfig,
-) -> Result<Vec<StepLog>> {
-    let n = comm.size();
-    // One engine for the whole run: the per-step allreduce plan is built
-    // on step 0 and served from the engine's PlanCache on every
-    // subsequent step (zero tree builds / program compiles on the hot
-    // path — the pipeline's whole point for this workload).
-    let engine = CollectiveEngine::new(comm, params_net.clone(), cfg.strategy)
-        .with_combiner(combiner)
-        .with_allreduce_policy(cfg.allreduce);
+pub fn train(session: &GridSession, mlp: &MlpRuntime, cfg: &TrainConfig) -> Result<Vec<StepLog>> {
+    let n = session.comm().size();
+    let p0 = mlp.init_params(cfg.seed);
+    // Resolve the composition once: the gradient size is fixed for the
+    // whole run, so the provider's verdict is too.
+    let policy = match cfg.allreduce {
+        Some(p) => p,
+        None => session.resolve_policy(ReduceOp::Sum, p0.len() * 4)?,
+    };
+    // One engine view for the whole run: the per-step allreduce plan is
+    // built on step 0 and served from the session's PlanCache on every
+    // subsequent step (zero tree builds / program compiles / scratch
+    // growth on the hot path — the pipeline's whole point for this
+    // workload).
+    let engine = session.engine();
     // For the uniform reduce+bcast composition the per-step exchange
     // executes as a fused two-segment Schedule (same message structure
     // and timing as the cached Allreduce plan, plus a phase boundary
@@ -88,13 +89,12 @@ pub fn train(
     // payload-independent, so the hot path stays payload setup + one
     // simulation. Chunked policies (rs+ag, hybrid) run their single
     // fused plan through the generic request path instead.
-    let step_schedule = match cfg.allreduce {
+    let step_schedule = match policy {
         AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast) => {
             Some(engine.allreduce_schedule(0, ReduceOp::Sum)?)
         }
         _ => None,
     };
-    let p0 = mlp.init_params(cfg.seed);
     let mut replicas: Vec<Vec<f32>> = vec![p0; n];
     let mut logs = Vec::with_capacity(cfg.steps);
 
@@ -124,7 +124,7 @@ pub fn train(
                 (data, sim.makespan_us, t[0], t[1] - t[0], sim.wan_messages())
             }
             None => {
-                let out = engine.allreduce(ReduceOp::Sum, &grads)?;
+                let out = engine.allreduce_with_policy(policy, 0, ReduceOp::Sum, &grads)?;
                 (out.data, out.sim.makespan_us, 0.0, 0.0, out.sim.wan_messages())
             }
         };
@@ -151,6 +151,7 @@ pub fn train(
             reduce_us,
             bcast_us,
             wan_msgs,
+            policy,
             compute_wall_us,
         });
     }
@@ -161,9 +162,9 @@ pub fn train(
 mod tests {
     use super::*;
     use crate::model::presets;
-    use crate::netsim::NativeCombiner;
     use crate::runtime::{artifacts::default_dir, Runtime};
-    use crate::topology::TopologySpec;
+    use crate::topology::{Communicator, TopologySpec};
+    use crate::tree::Strategy;
 
     #[test]
     fn training_learns_and_stays_synchronized() {
@@ -178,9 +179,9 @@ mod tests {
         let mlp = MlpRuntime::open(&rt).unwrap();
         // Small grid to keep the test quick: 2 sites x 2 machines x 2.
         let comm = Communicator::world(&TopologySpec::uniform(2, 2, 2).unwrap());
+        let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
         let cfg = TrainConfig { steps: 25, lr: 0.2, ..Default::default() };
-        let logs =
-            train(&comm, &presets::paper_grid(), &mlp, &NativeCombiner, &cfg).unwrap();
+        let logs = train(&session, &mlp, &cfg).unwrap();
         assert_eq!(logs.len(), 25);
         let first = logs.first().unwrap().mean_loss;
         let last = logs.last().unwrap().mean_loss;

@@ -52,14 +52,19 @@ pub struct BoundaryTuning {
 }
 
 /// The composition candidates for a clustering of `n_levels` separation
-/// levels: both uniforms, plus `hybrid(b)` for every interior boundary
-/// `1 <= b < n_levels`. (`hybrid(0)` and `hybrid(>= n_levels)` are
-/// structural aliases of the uniforms and are skipped.)
+/// levels: both uniforms, plus `hybrid(b)` for every **interior**
+/// boundary `1 <= b < n_levels`. `hybrid(0)` and `hybrid(>= n_levels)`
+/// are structural aliases of the uniforms (rs+ag and reduce+bcast
+/// respectively — see `AlgoPolicy::boundary`) and must never appear: a
+/// flat (1-level) clustering therefore yields exactly the two uniforms,
+/// and the sweep never probes the same message structure twice.
 pub fn boundary_candidates(n_levels: usize) -> Vec<AlgoPolicy> {
     let mut c = vec![
         AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
         AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
     ];
+    // `1..n_levels` is empty for flat (and degenerate 0-level)
+    // clusterings, so no hybrid candidate can ever alias a uniform.
     c.extend((1..n_levels).map(AlgoPolicy::hybrid));
     c
 }
@@ -147,7 +152,45 @@ mod tests {
         assert_eq!(c[1], AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather));
         assert_eq!(c[2], AlgoPolicy::hybrid(1));
         assert_eq!(c[3], AlgoPolicy::hybrid(2));
-        assert_eq!(boundary_candidates(1).len(), 2, "flat clustering: uniforms only");
+    }
+
+    #[test]
+    fn degenerate_clusterings_yield_exactly_the_two_uniforms() {
+        // A flat (1-level) topology has no interior boundary: the
+        // candidate set is exactly the two uniforms — in particular no
+        // duplicate/invalid hybrid(0) entry (a structural alias of
+        // uniform rs+ag that would probe the same message structure
+        // twice and could shadow it in the argmin tie-break).
+        for n_levels in [0usize, 1] {
+            let c = boundary_candidates(n_levels);
+            assert_eq!(c.len(), 2, "{n_levels} levels: uniforms only");
+            assert_eq!(c[0], AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast));
+            assert_eq!(c[1], AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather));
+            assert!(
+                !c.iter().any(|p| matches!(p, AlgoPolicy::Hybrid { .. })),
+                "no hybrid candidates on a degenerate clustering"
+            );
+        }
+        // No candidate set ever contains duplicates or non-interior
+        // hybrids (either would double-probe a structure).
+        for n_levels in 1..=5 {
+            let c = boundary_candidates(n_levels);
+            for (i, a) in c.iter().enumerate() {
+                assert!(!c[i + 1..].contains(a), "duplicate candidate {a:?}");
+                if let AlgoPolicy::Hybrid { boundary_level } = *a {
+                    assert!(
+                        (1..n_levels).contains(&boundary_level),
+                        "hybrid({boundary_level}) is not interior for {n_levels} levels"
+                    );
+                }
+            }
+        }
+        // And the tuner actually runs on a flat communicator.
+        let comm = Communicator::unaware(6);
+        let e = CollectiveEngine::new(&comm, presets::uniform_lan(1), Strategy::Unaware);
+        let t = tune_allreduce_boundary(&e, ReduceOp::Sum, 4096).unwrap();
+        assert_eq!(t.probes.len(), 2, "flat topology probes the two uniforms");
+        assert!(t.best_us.is_finite());
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //! Architecture (three layers, Python never on the request path):
 //! - **L3** (this crate): clustering, tree builders, the collectives
 //!   (compiled through the topology → plan → execute pipeline, see
-//!   [`plan`]), the simulator, experiment drivers and CLI.
+//!   [`plan`]; front door: [`session::GridSession`]), the simulator,
+//!   experiment drivers and CLI.
 //! - **L2** (`python/compile/model.py`): JAX compute graphs, AOT-lowered to
 //!   HLO text in `artifacts/`.
 //! - **L1** (`python/compile/kernels/`): Pallas reduction-combine kernels
@@ -28,6 +29,7 @@ pub mod error;
 pub mod model;
 pub mod plan;
 pub mod runtime;
+pub mod session;
 pub mod tree;
 pub mod netsim;
 pub mod topology;

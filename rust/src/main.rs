@@ -3,18 +3,19 @@
 //! Subcommands map 1:1 onto the experiments in DESIGN.md §6:
 //!
 //! ```text
-//! gridcollect fig8 [--sizes 1k,...,1m] [--xla] [--fused]   # E1: the headline figure
-//!                                  # (--fused adds the E13 fused-vs-separate delta table)
+//! gridcollect fig8 [--sizes 1k,...,1m] [--fused]        # E1: the headline figure
+//!                                  # (--fused adds the E13 fused-vs-separate delta table;
+//!                                  #  timing points are ghost runs — no combiner involved)
 //! gridcollect suite [--size 64k] [--xla]           # E8: 6 ops x 4 strategies
-//! gridcollect allreduce [--size 64k] [--op sum] [--boundary 1] [--xla]   # E12: all compositions
-//! gridcollect tune-boundary [--sizes 4k,64k,1m] [--op sum] [--strategy s]  # E14: ghost autotune
+//! gridcollect allreduce [--size 64k] [--op sum] [--boundary 1] [--policy-file t.json] [--xla]
+//! gridcollect tune-boundary [--sizes 4k,64k,1m] [--op sum] [--strategy s] [--spec fig1|experiment|SxMxP] [--save t.json]
 //! gridcollect cost-model [--size 64k]              # E2: §4 analytic vs sim
 //! gridcollect ablation [--sites 8] [--size 64k]    # E9: WAN tree shapes
 //! gridcollect scaling [--size 64k]                 # E10: site-count scaling
 //! gridcollect roots [--size 64k]                   # E7: root sensitivity
 //! gridcollect tree [--spec fig1|experiment] [--root 0]   # E3-E5: tree shapes
 //! gridcollect rsl <script.rsl> [--root 0]          # E6: RSL front-end
-//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--algo rb|rsag|hybrid] [--boundary 1] [--xla]
+//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--spec fig1|experiment|SxMxP] [--algo rb|rsag|hybrid] [--boundary 1] [--policy-file t.json] [--xla]
 //! gridcollect gantt [--size 64k] [--strategy s] [--params file.net]
 //! gridcollect calibrate [--out params.net]        # measure combine us/B
 //! ```
@@ -22,16 +23,26 @@
 //! `--xla` routes reduce arithmetic through the AOT-compiled Pallas
 //! combine kernels via PJRT (requires `make artifacts`); default is the
 //! native combiner.
+//!
+//! The tuner → workload loop: `tune-boundary --save t.json` persists the
+//! winning `AlgoPolicy` per payload size (with provenance); `train` /
+//! `allreduce` consume it via `--policy-file t.json` and transparently
+//! run the tuned composition. All of `tune-boundary`/`train`/`allreduce`
+//! default to the paper's experiment topology, so the two-command loop
+//! works as-is; tune and consume with the same `--spec`/`--strategy`
+//! otherwise — a provenance mismatch is a hard error by design.
 
 use gridcollect::cli::Args;
 use gridcollect::coordinator::{experiment, timing_app, training};
 use gridcollect::error::{Error, Result};
 use gridcollect::model::presets;
-use gridcollect::netsim::Combiner;
+use gridcollect::netsim::{Combiner, ReduceOp};
 use gridcollect::runtime::{calibrate_us_per_byte, MlpRuntime, Runtime, XlaCombiner};
+use gridcollect::session::GridSession;
 use gridcollect::topology::{rsl, Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
+use std::sync::Arc;
 
 const USAGE: &str = "usage: gridcollect <fig8|suite|allreduce|tune-boundary|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
 run `gridcollect help` or see rust/src/main.rs for flag details";
@@ -56,20 +67,34 @@ fn maybe_xla(args: &Args) -> Result<Option<(Runtime, XlaCombiner)>> {
     Ok(Some((rt, c)))
 }
 
+/// Parse `--spec fig1|experiment|SxMxP` (shared by `tree` and
+/// `tune-boundary`).
+fn parse_spec(args: &Args, default: &str) -> Result<TopologySpec> {
+    match args.get_or("spec", default) {
+        "fig1" => Ok(TopologySpec::paper_fig1()),
+        "experiment" => Ok(TopologySpec::paper_experiment()),
+        other => {
+            // SxMxP, e.g. 4x2x8
+            let parts: Vec<usize> = other.split('x').filter_map(|p| p.parse().ok()).collect();
+            if parts.len() != 3 {
+                return Err(Error::Cli(format!(
+                    "--spec must be fig1|experiment|SxMxP, got '{other}'"
+                )));
+            }
+            TopologySpec::uniform(parts[0], parts[1], parts[2])
+        }
+    }
+}
+
 fn run(raw: Vec<String>) -> Result<()> {
     let args = Args::parse(raw)?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "fig8" => {
             let sizes = args.sizes(&timing_app::default_sizes())?;
-            let xla = maybe_xla(&args)?;
-            let combiner: &dyn Combiner = match &xla {
-                Some((_, c)) => c,
-                None => experiment::native(),
-            };
-            let (table, _) = experiment::fig8_table(&sizes, combiner)?;
+            let (table, _) = experiment::fig8_table(&sizes)?;
             println!("E1 / Figure 8 — rotating-root MPI_Bcast on the paper grid (48 procs),");
-            println!("each point one fused simulation of the whole rotation:\n");
+            println!("each point one fused ghost simulation of the whole rotation:\n");
             print!("{}", table.to_markdown());
             if args.has("fused") {
                 let strategy = args.strategy(Strategy::Multilevel)?;
@@ -79,17 +104,16 @@ fn run(raw: Vec<String>) -> Result<()> {
                 );
                 print!(
                     "{}",
-                    experiment::fig8_fused_vs_separate(&sizes, strategy, combiner)?
-                        .to_markdown()
+                    experiment::fig8_fused_vs_separate(&sizes, strategy)?.to_markdown()
                 );
             }
         }
         "suite" => {
             let size = args.get_size("size", 65536)?;
             let xla = maybe_xla(&args)?;
-            let combiner: &dyn Combiner = match &xla {
-                Some((_, c)) => c,
-                None => experiment::native(),
+            let (_rt, combiner): (Option<Runtime>, Arc<dyn Combiner>) = match xla {
+                Some((rt, c)) => (Some(rt), Arc::new(c)),
+                None => (None, experiment::native_arc()),
             };
             println!("E8 — six collectives x four strategies ({}):\n", fmt::bytes(size));
             print!("{}", experiment::collectives_suite_table(size, combiner)?.to_markdown());
@@ -97,11 +121,11 @@ fn run(raw: Vec<String>) -> Result<()> {
         "allreduce" => {
             let size = args.get_size("size", 65536)?;
             let xla = maybe_xla(&args)?;
-            let combiner: &dyn Combiner = match &xla {
-                Some((_, c)) => c,
-                None => experiment::native(),
+            let (_rt, combiner): (Option<Runtime>, Arc<dyn Combiner>) = match xla {
+                Some((rt, c)) => (Some(rt), Arc::new(c)),
+                None => (None, experiment::native_arc()),
             };
-            let op = args.reduce_op(gridcollect::netsim::ReduceOp::Sum)?;
+            let op = args.reduce_op(ReduceOp::Sum)?;
             let boundary = args.get_usize("boundary", 1)?;
             println!(
                 "E12 — multilevel allreduce ({}), every composition policy, every strategy ({}):\n",
@@ -110,35 +134,79 @@ fn run(raw: Vec<String>) -> Result<()> {
             );
             print!(
                 "{}",
-                experiment::allreduce_table(size, op, combiner, boundary)?.to_markdown()
+                experiment::allreduce_table(size, op, combiner.clone(), boundary)?.to_markdown()
             );
+            if let Some(path) = args.get("policy-file") {
+                // The tuner → workload loop: resolve this size through
+                // the persisted table and run the winning policy. The
+                // session honors --spec (default: the experiment grid,
+                // matching tune-boundary's default) so any tuned
+                // topology can be consumed.
+                let spec = parse_spec(&args, "experiment")?;
+                let comm = Communicator::world(&spec);
+                let strategy = args.strategy(Strategy::Multilevel)?;
+                let session = GridSession::new(&comm, presets::paper_grid(), strategy)
+                    .with_combiner(combiner)
+                    .with_policy_file(path)?;
+                // Resolve once and run exactly that policy, so the
+                // printed name is always what executed.
+                let policy = session.resolve_policy(op, size)?;
+                let n = comm.size();
+                let elems = (size / 4).max(1);
+                let contributions: Vec<Vec<f32>> = (0..n)
+                    .map(|r| (0..elems).map(|i| (1 + (r + i) % 9) as f32).collect())
+                    .collect();
+                let out = session.allreduce_with_policy(policy, 0, op, &contributions)?;
+                println!(
+                    "\ntuned policy from {path} for {}: {} — makespan {}, WAN msgs {}",
+                    fmt::bytes(size),
+                    policy.name(),
+                    fmt::time_us(out.sim.makespan_us),
+                    out.sim.wan_messages()
+                );
+            }
         }
         "tune-boundary" => {
             let sizes = args.sizes(&[4096, 65536, 1 << 20])?;
-            let op = args.reduce_op(gridcollect::netsim::ReduceOp::Sum)?;
+            let op = args.reduce_op(ReduceOp::Sum)?;
             let strategy = args.strategy(Strategy::Multilevel)?;
-            let comm = Communicator::world(&TopologySpec::paper_experiment());
-            let engine = gridcollect::collectives::CollectiveEngine::new(
-                &comm,
-                presets::paper_grid(),
-                strategy,
-            );
+            let spec = parse_spec(&args, "experiment")?;
+            let comm = Communicator::world(&spec);
+            let session = GridSession::new(&comm, presets::paper_grid(), strategy);
             println!(
                 "E14 — allreduce composition-boundary autotuning ({} strategy, {} ranks,",
                 strategy.name(),
                 comm.size()
             );
             println!("ghost probes: timing-only simulation, zero payload allocation):\n");
-            let (table, tunings) =
-                gridcollect::coordinator::tuning::boundary_tuning_table(&engine, op, &sizes)?;
+            let (table, policy_table) = session.tune_boundary(op, &sizes)?;
             print!("{}", table.to_markdown());
             println!("\nwinning policy per payload size:");
-            for t in &tunings {
+            for e in policy_table.entries() {
                 println!(
                     "  {:>10}: {} ({})",
-                    fmt::bytes(t.bytes),
-                    t.best.name(),
-                    fmt::time_us(t.best_us)
+                    fmt::bytes(e.bytes),
+                    e.policy.name(),
+                    fmt::time_us(e.best_us)
+                );
+            }
+            if let Some(path) = args.get("save") {
+                policy_table.save(path)?;
+                // The consume hint must name commands whose topology
+                // actually matches this table's provenance; train and
+                // allreduce both default to the experiment spec, and
+                // both accept --spec to line up with a tuned table.
+                let spec_name = args.get_or("spec", "experiment");
+                let consumer = if spec_name == "experiment" {
+                    format!("`gridcollect train|allreduce --policy-file {path}`")
+                } else {
+                    format!("`gridcollect train --spec {spec_name} --policy-file {path}`")
+                };
+                println!(
+                    "\nwrote {path}: {} tuned entries (params hash {:#018x}); consume with \
+                     {consumer} (same --spec/--strategy — provenance is enforced)",
+                    policy_table.len(),
+                    policy_table.provenance().params_hash
                 );
             }
         }
@@ -166,21 +234,7 @@ fn run(raw: Vec<String>) -> Result<()> {
             print!("{}", experiment::root_sensitivity_table(size)?.to_markdown());
         }
         "tree" => {
-            let spec = match args.get_or("spec", "fig1") {
-                "fig1" => TopologySpec::paper_fig1(),
-                "experiment" => TopologySpec::paper_experiment(),
-                other => {
-                    // SxMxP, e.g. 4x2x8
-                    let parts: Vec<usize> =
-                        other.split('x').filter_map(|p| p.parse().ok()).collect();
-                    if parts.len() != 3 {
-                        return Err(Error::Cli(format!(
-                            "--spec must be fig1|experiment|SxMxP, got '{other}'"
-                        )));
-                    }
-                    TopologySpec::uniform(parts[0], parts[1], parts[2])?
-                }
-            };
+            let spec = parse_spec(&args, "fig1")?;
             let root = args.get_usize("root", 0)?;
             print!("{}", experiment::render_strategy_trees(&spec, root)?);
             let comm = Communicator::world(&spec);
@@ -212,32 +266,49 @@ fn run(raw: Vec<String>) -> Result<()> {
                     .unwrap_or_else(gridcollect::runtime::artifacts::default_dir),
             )?;
             let mlp = MlpRuntime::open(&rt)?;
-            let xla_combiner;
-            let combiner: &dyn Combiner = if args.has("xla") {
-                xla_combiner = XlaCombiner::open_default(&rt)?;
-                &xla_combiner
+            let combiner: Arc<dyn Combiner> = if args.has("xla") {
+                Arc::new(XlaCombiner::open_default(&rt)?)
             } else {
-                experiment::native()
+                experiment::native_arc()
             };
-            let comm = Communicator::world(&TopologySpec::paper_fig1());
+            // Default topology is the paper's experiment grid — the
+            // same default as tune-boundary/fig8/suite/allreduce, so
+            // `tune-boundary --save t.json && train --policy-file
+            // t.json` works as-is; `--spec fig1` selects the small
+            // Fig. 1 grid (tune with the same `--spec` so a
+            // `--policy-file`'s provenance matches).
+            let spec = parse_spec(&args, "experiment")?;
+            let comm = Communicator::world(&spec);
+            let strategy = args.strategy(Strategy::Multilevel)?;
+            let mut session = GridSession::new(&comm, presets::paper_grid(), strategy)
+                .with_combiner(combiner);
+            let pinned = args.algo_policy_opt()?;
+            if let Some(path) = args.get("policy-file") {
+                if pinned.is_some() {
+                    return Err(Error::Cli(
+                        "--policy-file and --algo/--boundary are mutually exclusive \
+                         (the file resolves the policy)"
+                            .into(),
+                    ));
+                }
+                session = session.with_policy_file(path)?;
+            }
             let cfg = training::TrainConfig {
                 steps: args.get_usize("steps", 50)?,
                 lr: args.get_f32("lr", 0.1)?,
-                strategy: args.strategy(Strategy::Multilevel)?,
-                allreduce: args.algo_policy(gridcollect::plan::AlgoPolicy::uniform(
-                    gridcollect::plan::AllreduceAlgo::ReduceBcast,
-                ))?,
+                allreduce: pinned,
                 seed: args.get_usize("seed", 0)? as u64,
             };
             println!(
-                "E11 — data-parallel training: {} workers ({}), strategy {}, allreduce {}, combiner {}",
+                "E11 — data-parallel training: {} workers ({}), strategy {}, \
+                 policy provider {}, combiner {}",
                 comm.size(),
                 comm.name(),
-                cfg.strategy.name(),
-                cfg.allreduce.name(),
-                combiner.name(),
+                strategy.name(),
+                session.policy_name(),
+                session.combiner().name(),
             );
-            let logs = training::train(&comm, &presets::paper_grid(), &mlp, combiner, &cfg)?;
+            let logs = training::train(&session, &mlp, &cfg)?;
             for l in logs.iter().step_by((logs.len() / 10).max(1)) {
                 println!(
                     "step {:>3}  loss {:.4}  comm {:>12} (reduce {} | bcast {})  wan_msgs {}  compute {:>10}",
@@ -253,10 +324,11 @@ fn run(raw: Vec<String>) -> Result<()> {
             let first = logs.first().unwrap();
             let last = logs.last().unwrap();
             println!(
-                "loss {:.4} -> {:.4} over {} steps; per-step comm {}",
+                "loss {:.4} -> {:.4} over {} steps; allreduce policy {}; per-step comm {}",
                 first.mean_loss,
                 last.mean_loss,
                 logs.len(),
+                last.policy.name(),
                 fmt::time_us(last.comm_us)
             );
         }
@@ -270,9 +342,8 @@ fn run(raw: Vec<String>) -> Result<()> {
                 Some(path) => gridcollect::config::network_params_from_file(path)?,
                 None => presets::paper_grid(),
             };
-            let e = gridcollect::collectives::CollectiveEngine::new(&comm, params, strategy)
-                .with_trace();
-            let out = e.bcast(args.get_usize("root", 0)?, &vec![0.0f32; size / 4])?;
+            let session = GridSession::new(&comm, params, strategy).with_trace();
+            let out = session.bcast(args.get_usize("root", 0)?, &vec![0.0f32; size / 4])?;
             println!(
                 "{} bcast of {} on fig1 ({} ranks):",
                 strategy.name(),

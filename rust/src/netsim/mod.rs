@@ -10,10 +10,13 @@
 pub mod engine;
 pub mod payload;
 pub mod program;
+#[doc(hidden)]
+pub mod testing;
 
 pub use engine::{
-    run, run_indexed, run_rescan, run_timing, run_timing_indexed, SimConfig, SimResult,
-    TraceEvent, TraceKind,
+    run, run_indexed, run_indexed_scratch, run_timing, run_timing_indexed,
+    run_timing_indexed_scratch, EngineScratch, ExecScratch, SimConfig, SimResult, TraceEvent,
+    TraceKind,
 };
 pub use payload::{Combiner, GhostPayload, GhostRun, NativeCombiner, Payload, ReduceOp, Register};
 pub use program::{Action, ChannelIndex, Merge, Program, SendPart};

@@ -1,0 +1,237 @@
+//! Differential-testing support: the retired pre-ready-queue scheduler.
+//!
+//! [`run_rescan`] is the engine the ready-queue rewrite replaced — a
+//! deterministic worklist fixpoint that rescans every rank (including
+//! blocked ones) until quiescence. It is deliberately kept as a second,
+//! independent implementation of the execution semantics so the
+//! equivalence suite (`rust/tests/ghost_equivalence.rs`) and the
+//! `engine_throughput` bench can pin the production scheduler against
+//! it bit-for-bit; it is **not** part of the supported API surface and
+//! is not tuned (full-payload mode only, hash-map mailboxes, O(n_ranks)
+//! scheduling steps).
+//!
+//! This lives in a `#[doc(hidden)]` module rather than `#[cfg(test)]`
+//! because integration tests and benches link against the public crate:
+//! a `cfg(test)` item would be invisible to them.
+
+use crate::error::{Error, Result};
+use crate::netsim::engine::{SimConfig, SimResult, TraceEvent, TraceKind};
+use crate::netsim::payload::{Combiner, Payload, Rank};
+use crate::netsim::program::{Action, Merge, Program, SendPart};
+use crate::topology::Clustering;
+use crate::util::counters;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+struct RankState {
+    idx: usize,
+    clock: f64,
+    payload: Payload,
+}
+
+/// The pre-ready-queue scheduler, retained as a differential oracle:
+/// results must be bit-identical to `netsim::run`'s.
+pub fn run_rescan(
+    clustering: &Clustering,
+    prog: &Program,
+    initial: Vec<Payload>,
+    cfg: &SimConfig,
+    combiner: &dyn Combiner,
+) -> Result<SimResult> {
+    let n = prog.n_ranks();
+    if clustering.n_ranks() != n {
+        return Err(Error::Sim(format!(
+            "clustering has {} ranks, program has {n}",
+            clustering.n_ranks()
+        )));
+    }
+    if initial.len() != n {
+        return Err(Error::Sim(format!("initial payloads: {} != {n}", initial.len())));
+    }
+    counters::count_sim_run();
+    let n_levels = clustering.n_levels();
+    let mut states: Vec<RankState> = initial
+        .into_iter()
+        .map(|payload| RankState { idx: 0, clock: 0.0, payload })
+        .collect();
+    // In-flight messages: (from, to, tag) -> FIFO of (arrival_time, payload).
+    let mut mailbox: HashMap<(Rank, Rank, u64), VecDeque<(f64, Payload)>> = HashMap::new();
+    let mut msgs_by_sep = vec![0u64; n_levels];
+    let mut bytes_by_sep = vec![0u64; n_levels];
+    let mut combines = 0u64;
+    let mut trace = Vec::new();
+    let mut mark_times: BTreeMap<u64, f64> = BTreeMap::new();
+
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for r in 0..n {
+            // Advance rank r as far as possible.
+            loop {
+                let action = match prog.actions[r].get(states[r].idx) {
+                    None => break,
+                    Some(a) => a,
+                };
+                match *action {
+                    Action::Send { to, tag, ref part } => {
+                        let st = &mut states[r];
+                        let out = match part {
+                            SendPart::All => st.payload.clone(),
+                            SendPart::Ranks(rs) => st.payload.select(rs),
+                            SendPart::Ranges(rs) => st.payload.select_ranges(rs),
+                            SendPart::Empty => Payload::empty(),
+                        };
+                        let bytes = out.n_bytes();
+                        let sep = clustering.sep(r, to);
+                        let link = cfg.params.at_sep(sep);
+                        let start = st.clock;
+                        let arrival = start + link.arrival_delay_us(bytes);
+                        st.clock = start + link.sender_busy_us(bytes);
+                        st.idx += 1;
+                        msgs_by_sep[sep - 1] += 1;
+                        bytes_by_sep[sep - 1] += bytes as u64;
+                        if cfg.trace {
+                            trace.push(TraceEvent {
+                                t_us: start,
+                                rank: r,
+                                kind: TraceKind::SendStart,
+                                peer: to,
+                                tag,
+                                bytes,
+                                sep,
+                            });
+                        }
+                        mailbox.entry((r, to, tag)).or_default().push_back((arrival, out));
+                        progressed = true;
+                    }
+                    Action::Recv { from, tag, merge } => {
+                        let key = (from, r, tag);
+                        let msg = mailbox.get_mut(&key).and_then(|q| q.pop_front());
+                        let (arrival, incoming) = match msg {
+                            Some(m) => m,
+                            None => break, // blocked; try other ranks
+                        };
+                        let sep = clustering.sep(from, r);
+                        let link = cfg.params.at_sep(sep);
+                        let bytes = incoming.n_bytes();
+                        let st = &mut states[r];
+                        st.clock = st.clock.max(arrival) + link.recv_overhead_us;
+                        match merge {
+                            Merge::Replace => st.payload = incoming,
+                            Merge::Discard => {}
+                            Merge::Union => {
+                                st.payload.union(incoming).map_err(Error::Sim)?
+                            }
+                            Merge::Combine(op) => {
+                                st.clock += cfg.params.combine_us(bytes);
+                                combines += 1;
+                                st.payload
+                                    .combine(&incoming, op, combiner)
+                                    .map_err(Error::Sim)?;
+                            }
+                        }
+                        st.idx += 1;
+                        if cfg.trace {
+                            trace.push(TraceEvent {
+                                t_us: states[r].clock,
+                                rank: r,
+                                kind: TraceKind::RecvDone,
+                                peer: from,
+                                tag,
+                                bytes,
+                                sep,
+                            });
+                        }
+                        progressed = true;
+                    }
+                    Action::Mark { id } => {
+                        let t = states[r].clock;
+                        states[r].idx += 1;
+                        let slot = mark_times.entry(id).or_insert(t);
+                        if t > *slot {
+                            *slot = t;
+                        }
+                        progressed = true;
+                    }
+                }
+            }
+            if states[r].idx < prog.actions[r].len() {
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+        if !progressed {
+            let stuck: Vec<usize> =
+                (0..n).filter(|&r| states[r].idx < prog.actions[r].len()).collect();
+            let detail = stuck
+                .iter()
+                .take(4)
+                .map(|&r| format!("rank {r} at action {:?}", prog.actions[r][states[r].idx]))
+                .collect::<Vec<_>>()
+                .join("; ");
+            return Err(Error::Deadlock { stuck_ranks: stuck, detail });
+        }
+    }
+
+    // Deterministic undelivered-message report (sorted by channel key).
+    let mut undelivered: Vec<((Rank, Rank, u64), usize)> = mailbox
+        .iter()
+        .filter(|(_, q)| !q.is_empty())
+        .map(|(&k, q)| (k, q.len()))
+        .collect();
+    undelivered.sort_unstable();
+    if let Some(&((f, t, tag), count)) = undelivered.first() {
+        return Err(Error::Sim(format!(
+            "{count} undelivered message(s) on channel {f}->{t} tag {tag}"
+        )));
+    }
+
+    let finish_us: Vec<f64> = states.iter().map(|s| s.clock).collect();
+    let makespan_us = finish_us.iter().fold(0.0f64, |a, &b| a.max(b));
+    trace.sort_by(|a, b| a.t_us.total_cmp(&b.t_us));
+    Ok(SimResult {
+        finish_us,
+        makespan_us,
+        msgs_by_sep,
+        bytes_by_sep,
+        combines,
+        payloads: states.into_iter().map(|s| s.payload).collect(),
+        mark_times_us: mark_times.into_iter().collect(),
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LinkParams, NetworkParams};
+    use crate::netsim::payload::NativeCombiner;
+    use crate::netsim::run;
+
+    fn simple_params() -> NetworkParams {
+        NetworkParams::new(vec![LinkParams::new(100.0, 1.0).with_overheads(10.0, 5.0)])
+            .with_combine_us_per_byte(0.0)
+    }
+
+    #[test]
+    fn rescan_oracle_agrees_with_ready_queue() {
+        // A program with cross-rank blocking: 0 -> 1 -> 2 -> 0 ring.
+        let mut p = Program::new(3);
+        p.send(0, 1, 1, SendPart::All);
+        p.recv(1, 0, 1, Merge::Replace);
+        p.send(1, 2, 2, SendPart::All);
+        p.recv(2, 1, 2, Merge::Replace);
+        p.send(2, 0, 3, SendPart::All);
+        p.recv(0, 2, 3, Merge::Replace);
+        let init =
+            vec![Payload::single(0, vec![7.0; 8]), Payload::empty(), Payload::empty()];
+        let cfg = SimConfig::new(simple_params());
+        let a = run(&Clustering::flat(3), &p, init.clone(), &cfg, &NativeCombiner).unwrap();
+        let b = run_rescan(&Clustering::flat(3), &p, init, &cfg, &NativeCombiner).unwrap();
+        assert_eq!(a.finish_us, b.finish_us);
+        assert_eq!(a.msgs_by_sep, b.msgs_by_sep);
+        assert_eq!(a.bytes_by_sep, b.bytes_by_sep);
+        assert_eq!(a.payloads, b.payloads);
+    }
+}

@@ -1,0 +1,164 @@
+//! Pluggable allreduce-policy resolution: who decides *which* per-level
+//! composition a session runs, per `(op, payload size)`, at call time.
+//!
+//! The [`PolicyProvider`] trait is the session's decision hook. Three
+//! providers ship in-tree:
+//!
+//! - [`Fixed`] — one [`AlgoPolicy`] for everything (the pre-session
+//!   behavior, and the default: uniform reduce+bcast);
+//! - [`Tuned`] — consult a persisted [`PolicyTable`] (exact size hit,
+//!   else nearest tuned size in log-space); how `--policy-file` closes
+//!   the tuner → workload loop;
+//! - [`AutoTune`] — consult an in-memory table and, on a miss, run the
+//!   ghost-probe boundary tuner right there and memoize the verdict
+//!   (configurable via [`OnMiss`]).
+//!
+//! Resolution happens on the session's engine, so an auto-tune miss
+//! shares the session's plan cache and scratch arenas: the probes that
+//! decide the policy warm the very caches the chosen policy then runs
+//! on.
+
+use crate::coordinator::tuning;
+use crate::error::{Error, Result};
+use crate::netsim::ReduceOp;
+use crate::plan::AlgoPolicy;
+use crate::session::table::{PolicyEntry, PolicyTable};
+use crate::session::GridSession;
+use std::sync::Mutex;
+
+/// Resolves the allreduce composition for one call. Implementations may
+/// consult the session (topology, engine, caches) — [`AutoTune`] runs
+/// ghost probes through it.
+pub trait PolicyProvider {
+    /// The policy to run for an allreduce of `bytes` under `op` on this
+    /// session's (topology, network, strategy).
+    fn resolve(&self, session: &GridSession, op: ReduceOp, bytes: usize) -> Result<AlgoPolicy>;
+
+    /// Display name for logs and reports.
+    fn name(&self) -> String;
+}
+
+/// Always the same policy — the expert override and the default
+/// (uniform reduce+bcast, matching the engine's historical default).
+#[derive(Clone, Copy, Debug)]
+pub struct Fixed(pub AlgoPolicy);
+
+impl PolicyProvider for Fixed {
+    fn resolve(&self, _session: &GridSession, _op: ReduceOp, _bytes: usize) -> Result<AlgoPolicy> {
+        Ok(self.0)
+    }
+
+    fn name(&self) -> String {
+        format!("fixed({})", self.0.name())
+    }
+}
+
+/// Consult a persisted [`PolicyTable`]. The table's provenance is
+/// validated against the session when the provider is installed
+/// ([`GridSession::with_policy_table`]); resolution itself is a pure
+/// lookup — exact `(op, bytes)` hit, else the nearest tuned size in
+/// log-space. An op the table was never tuned for is a hard error (a
+/// silent fallback would defeat the point of loading the table).
+#[derive(Clone, Debug)]
+pub struct Tuned(pub PolicyTable);
+
+impl PolicyProvider for Tuned {
+    fn resolve(&self, _session: &GridSession, op: ReduceOp, bytes: usize) -> Result<AlgoPolicy> {
+        self.0.best_for(op, bytes).ok_or_else(|| {
+            Error::Config(format!(
+                "policy table has no entry for op '{}' — retune with \
+                 `gridcollect tune-boundary --op {} --save <table.json>`",
+                op.name(),
+                op.name()
+            ))
+        })
+    }
+
+    fn name(&self) -> String {
+        format!("tuned({} entries)", self.0.len())
+    }
+}
+
+/// What an [`AutoTune`] provider does when `(op, bytes)` has no memoized
+/// verdict yet.
+#[derive(Clone, Copy, Debug)]
+pub enum OnMiss {
+    /// Run the ghost-probe boundary tuner for the missing point and
+    /// memoize its verdict (the default). First call per point pays one
+    /// candidate sweep; every later call is a lookup.
+    Tune,
+    /// Use a fixed fallback policy without tuning (bounded-latency mode:
+    /// nothing is ever probed on the request path).
+    Fallback(AlgoPolicy),
+}
+
+/// Tune-on-miss provider: an in-memory verdict table that fills itself
+/// via [`tuning::tune_allreduce_boundary`] as sizes are first seen.
+pub struct AutoTune {
+    verdicts: Mutex<Vec<PolicyEntry>>,
+    on_miss: OnMiss,
+}
+
+impl AutoTune {
+    /// Empty table, [`OnMiss::Tune`] on miss.
+    pub fn new() -> Self {
+        AutoTune { verdicts: Mutex::new(Vec::new()), on_miss: OnMiss::Tune }
+    }
+
+    /// Empty table with an explicit miss behavior.
+    pub fn with_on_miss(on_miss: OnMiss) -> Self {
+        AutoTune { verdicts: Mutex::new(Vec::new()), on_miss }
+    }
+
+    /// Seed the in-memory table with a saved table's entries (provenance
+    /// is the caller's concern — typically `GridSession::with_policy_table`
+    /// already validated the file this came from).
+    pub fn seeded(table: &PolicyTable, on_miss: OnMiss) -> Self {
+        AutoTune { verdicts: Mutex::new(table.entries().to_vec()), on_miss }
+    }
+
+    /// Snapshot the memoized verdicts (e.g. to persist what a workload
+    /// auto-tuned, via [`PolicyTable::record`]).
+    pub fn verdicts(&self) -> Vec<PolicyEntry> {
+        self.verdicts.lock().unwrap().clone()
+    }
+}
+
+impl Default for AutoTune {
+    fn default() -> Self {
+        AutoTune::new()
+    }
+}
+
+impl PolicyProvider for AutoTune {
+    fn resolve(&self, session: &GridSession, op: ReduceOp, bytes: usize) -> Result<AlgoPolicy> {
+        if let Some(e) =
+            self.verdicts.lock().unwrap().iter().find(|e| e.op == op && e.bytes == bytes)
+        {
+            return Ok(e.policy);
+        }
+        match self.on_miss {
+            OnMiss::Fallback(policy) => Ok(policy),
+            OnMiss::Tune => {
+                // Probe outside the lock: the sweep takes engine runs,
+                // and a concurrent resolver at worst repeats the work
+                // (verdicts are deterministic, so both agree).
+                let tuning = tuning::tune_allreduce_boundary(&session.engine(), op, bytes)?;
+                let entry = PolicyEntry { op, bytes, policy: tuning.best, best_us: tuning.best_us };
+                let mut verdicts = self.verdicts.lock().unwrap();
+                if !verdicts.iter().any(|e| e.op == op && e.bytes == bytes) {
+                    verdicts.push(entry);
+                }
+                Ok(tuning.best)
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        let n = self.verdicts.lock().unwrap().len();
+        match self.on_miss {
+            OnMiss::Tune => format!("autotune({n} memoized)"),
+            OnMiss::Fallback(p) => format!("autotune({n} memoized, fallback {})", p.name()),
+        }
+    }
+}

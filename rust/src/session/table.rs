@@ -1,0 +1,596 @@
+//! Persisted tuning tables: the versioned on-disk form of the boundary
+//! autotuner's verdicts.
+//!
+//! "Fast Tuning of Intra-Cluster Collective Communications" (cs/0408034)
+//! makes the case this module implements: tuned decision tables only pay
+//! off when they **persist across runs** and are consulted transparently
+//! at call time. A [`PolicyTable`] maps `(reduce op, payload bytes)` to
+//! the makespan-minimizing [`AlgoPolicy`] for one (topology, network,
+//! strategy) context, and carries a [`PolicyProvenance`] header so a
+//! table tuned under one context can never be silently applied to
+//! another: loading is cheap, but *installing* a table into a
+//! [`crate::session::GridSession`] re-derives the session's provenance
+//! and hard-errors on any mismatch.
+//!
+//! The file format is JSON (hand-rolled writer + [`crate::util::json`]
+//! parser — no `serde` in the offline vendor set), versioned via
+//! [`POLICY_TABLE_VERSION`]. 64-bit hashes are serialized as hex strings
+//! (JSON numbers are doubles and would corrupt them).
+
+use crate::error::{Error, Result};
+use crate::model::NetworkParams;
+use crate::netsim::ReduceOp;
+use crate::plan::{AlgoPolicy, AllreduceAlgo};
+use crate::topology::Communicator;
+use crate::tree::{LevelPolicy, Strategy};
+use crate::util::json::{self, Value};
+
+/// Current on-disk format version. Bump on any incompatible change;
+/// loading a different version is a hard error (tables are cheap to
+/// regenerate with `gridcollect tune-boundary --save <table.json>`).
+pub const POLICY_TABLE_VERSION: u64 = 1;
+
+const FORMAT_TAG: &str = "gridcollect-policy-table";
+
+/// 64-bit FNV-1a. Used for the provenance hashes because it is stable
+/// across Rust releases and platforms (`DefaultHasher` is neither).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic, platform-stable hash of a [`NetworkParams`] set: every
+/// per-level link parameter (bit-exact) plus the combine cost.
+pub fn params_hash(params: &NetworkParams) -> u64 {
+    let mut bytes = Vec::with_capacity(8 + params.per_sep.len() * 33);
+    bytes.extend_from_slice(&(params.per_sep.len() as u64).to_le_bytes());
+    for l in &params.per_sep {
+        bytes.extend_from_slice(&l.latency_us.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&l.bandwidth_mb_s.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&l.send_overhead_us.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&l.recv_overhead_us.to_bits().to_le_bytes());
+        bytes.push(l.sender_serializes as u8);
+    }
+    bytes.extend_from_slice(&params.combine_us_per_byte.to_bits().to_le_bytes());
+    fnv1a64(&bytes)
+}
+
+/// Structural fingerprint of a communicator's multilevel clustering:
+/// rank count, level count and the full color matrix. Deliberately
+/// **not** [`Communicator::epoch`] — epochs are process-local identities,
+/// while two worlds bootstrapped from the same topology spec in
+/// different processes must fingerprint identically (that is what makes
+/// a saved table loadable tomorrow).
+pub fn topology_fingerprint(comm: &Communicator) -> u64 {
+    let c = comm.clustering();
+    let (n, d) = (c.n_ranks(), c.n_levels());
+    let mut bytes = Vec::with_capacity(16 + n * d * 4);
+    bytes.extend_from_slice(&(n as u64).to_le_bytes());
+    bytes.extend_from_slice(&(d as u64).to_le_bytes());
+    for l in 0..d {
+        for r in 0..n {
+            bytes.extend_from_slice(&c.color(l, r).to_le_bytes());
+        }
+    }
+    fnv1a64(&bytes)
+}
+
+/// Everything a tuned table's verdicts depend on. Saved alongside the
+/// entries; checked (field by field, hard error on mismatch) before a
+/// table is installed into a session.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PolicyProvenance {
+    /// On-disk format version ([`POLICY_TABLE_VERSION`]).
+    pub version: u64,
+    /// [`params_hash`] of the cost model the probes ran under.
+    pub params_hash: u64,
+    /// [`topology_fingerprint`] of the tuned communicator.
+    pub topology_fingerprint: u64,
+    pub n_ranks: usize,
+    pub n_levels: usize,
+    /// [`Strategy::name`] of the tuned tree discipline.
+    pub strategy: String,
+    /// Debug rendering of the [`LevelPolicy`] (per-level tree shapes).
+    pub level_policy: String,
+    /// How the probes were executed (`"ghost"` for the timing engine).
+    pub probe_mode: String,
+}
+
+impl PolicyProvenance {
+    /// The provenance of tuning performed right now under the given
+    /// context (the session computes this for both saving and checking).
+    pub fn of(
+        comm: &Communicator,
+        params: &NetworkParams,
+        strategy: Strategy,
+        level_policy: &LevelPolicy,
+    ) -> Self {
+        PolicyProvenance {
+            version: POLICY_TABLE_VERSION,
+            params_hash: params_hash(params),
+            topology_fingerprint: topology_fingerprint(comm),
+            n_ranks: comm.size(),
+            n_levels: comm.clustering().n_levels(),
+            strategy: strategy.name().to_string(),
+            level_policy: format!("{level_policy:?}"),
+            probe_mode: "ghost".to_string(),
+        }
+    }
+
+    /// Hard compatibility check: every field of `self` (a loaded table's
+    /// header) must match `current` (the installing session's context).
+    /// A mismatch means the table's verdicts were tuned under different
+    /// conditions and silently accepting them would run the wrong
+    /// policies — so it is an error, never a warning.
+    pub fn check_matches(&self, current: &PolicyProvenance) -> Result<()> {
+        let mismatch = |what: &str, got: &str, want: &str| {
+            Err(Error::Config(format!(
+                "policy table provenance mismatch: {what} was '{got}' when tuned \
+                 but this session has '{want}' — retune with `gridcollect \
+                 tune-boundary --save <table.json>` under the current configuration"
+            )))
+        };
+        if self.version != current.version {
+            let (got, want) = (self.version.to_string(), current.version.to_string());
+            return mismatch("format version", &got, &want);
+        }
+        if self.params_hash != current.params_hash {
+            return mismatch(
+                "NetworkParams hash",
+                &format!("{:#018x}", self.params_hash),
+                &format!("{:#018x}", current.params_hash),
+            );
+        }
+        if self.topology_fingerprint != current.topology_fingerprint
+            || self.n_ranks != current.n_ranks
+            || self.n_levels != current.n_levels
+        {
+            return mismatch(
+                "topology",
+                &format!(
+                    "{} ranks / {} levels / {:#018x}",
+                    self.n_ranks, self.n_levels, self.topology_fingerprint
+                ),
+                &format!(
+                    "{} ranks / {} levels / {:#018x}",
+                    current.n_ranks, current.n_levels, current.topology_fingerprint
+                ),
+            );
+        }
+        if self.strategy != current.strategy {
+            return mismatch("strategy", &self.strategy, &current.strategy);
+        }
+        if self.level_policy != current.level_policy {
+            return mismatch("level policy", &self.level_policy, &current.level_policy);
+        }
+        if self.probe_mode != current.probe_mode {
+            return mismatch("probe mode", &self.probe_mode, &current.probe_mode);
+        }
+        Ok(())
+    }
+}
+
+/// One tuned verdict: the winning policy for `(op, bytes)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PolicyEntry {
+    pub op: ReduceOp,
+    pub bytes: usize,
+    pub policy: AlgoPolicy,
+    /// Simulated makespan of the winner (us) — informational.
+    pub best_us: f64,
+}
+
+/// A persisted tuning table: provenance header + sorted verdict entries.
+#[derive(Clone, Debug)]
+pub struct PolicyTable {
+    provenance: PolicyProvenance,
+    /// Sorted by `(op, bytes)`; at most one entry per key.
+    entries: Vec<PolicyEntry>,
+}
+
+fn op_rank(op: ReduceOp) -> u8 {
+    match op {
+        ReduceOp::Sum => 0,
+        ReduceOp::Max => 1,
+        ReduceOp::Min => 2,
+        ReduceOp::Prod => 3,
+    }
+}
+
+fn op_from_name(name: &str) -> Result<ReduceOp> {
+    match name {
+        "sum" => Ok(ReduceOp::Sum),
+        "max" => Ok(ReduceOp::Max),
+        "min" => Ok(ReduceOp::Min),
+        "prod" => Ok(ReduceOp::Prod),
+        other => Err(Error::Config(format!("policy table: unknown reduce op '{other}'"))),
+    }
+}
+
+/// Compact, grep-able policy token: `rb`, `rsag`, or `hybrid:N`.
+fn policy_to_token(p: AlgoPolicy) -> String {
+    match p {
+        AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast) => "rb".to_string(),
+        AlgoPolicy::Uniform(AllreduceAlgo::ReduceScatterAllgather) => "rsag".to_string(),
+        AlgoPolicy::Hybrid { boundary_level } => format!("hybrid:{boundary_level}"),
+    }
+}
+
+fn policy_from_token(token: &str) -> Result<AlgoPolicy> {
+    match token {
+        "rb" => Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)),
+        "rsag" => Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather)),
+        other => match other.strip_prefix("hybrid:") {
+            Some(b) => b
+                .parse::<usize>()
+                .map(AlgoPolicy::hybrid)
+                .map_err(|_| Error::Config(format!("policy table: bad policy token '{other}'"))),
+            None => Err(Error::Config(format!("policy table: bad policy token '{other}'"))),
+        },
+    }
+}
+
+impl PolicyTable {
+    /// An empty table for the given tuning context.
+    pub fn new(provenance: PolicyProvenance) -> Self {
+        PolicyTable { provenance, entries: Vec::new() }
+    }
+
+    pub fn provenance(&self) -> &PolicyProvenance {
+        &self.provenance
+    }
+
+    /// Entries sorted by `(op, bytes)`.
+    pub fn entries(&self) -> &[PolicyEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Record (or replace) the verdict for `(op, bytes)`, keeping the
+    /// entry list sorted — so the serialized form is deterministic.
+    pub fn record(&mut self, op: ReduceOp, bytes: usize, policy: AlgoPolicy, best_us: f64) {
+        let key = (op_rank(op), bytes);
+        match self.entries.binary_search_by_key(&key, |e| (op_rank(e.op), e.bytes)) {
+            Ok(i) => self.entries[i] = PolicyEntry { op, bytes, policy, best_us },
+            Err(i) => self.entries.insert(i, PolicyEntry { op, bytes, policy, best_us }),
+        }
+    }
+
+    /// The verdict stored for exactly `(op, bytes)`.
+    pub fn exact(&self, op: ReduceOp, bytes: usize) -> Option<&PolicyEntry> {
+        let key = (op_rank(op), bytes);
+        self.entries
+            .binary_search_by_key(&key, |e| (op_rank(e.op), e.bytes))
+            .ok()
+            .map(|i| &self.entries[i])
+    }
+
+    /// Resolve `(op, bytes)` to a policy: the exact entry if present,
+    /// otherwise the entry whose tuned size is nearest in log-space
+    /// (ties break toward the smaller size — deterministic). `None` only
+    /// when the table holds no entry for `op` at all.
+    pub fn best_for(&self, op: ReduceOp, bytes: usize) -> Option<AlgoPolicy> {
+        let target = (bytes.max(1) as f64).ln();
+        let mut best: Option<(f64, AlgoPolicy)> = None;
+        for e in self.entries.iter().filter(|e| e.op == op) {
+            if e.bytes == bytes {
+                return Some(e.policy);
+            }
+            let d = (target - (e.bytes.max(1) as f64).ln()).abs();
+            let closer = match best {
+                Some((bd, _)) => d < bd,
+                None => true,
+            };
+            if closer {
+                best = Some((d, e.policy));
+            }
+        }
+        best.map(|(_, p)| p)
+    }
+
+    /// `best_us` is informational; a non-finite makespan (a degenerate
+    /// cost model) must still round-trip, and JSON has no inf/NaN — so
+    /// the codec maps non-finite to `null` (read back as NaN).
+    fn best_us_json(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v:?}")
+        } else {
+            "null".to_string()
+        }
+    }
+
+    /// Serialize to the versioned JSON format.
+    pub fn to_json(&self) -> String {
+        let p = &self.provenance;
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"format\": \"{FORMAT_TAG}\",\n"));
+        s.push_str(&format!("  \"version\": {},\n", p.version));
+        s.push_str("  \"provenance\": {\n");
+        s.push_str(&format!("    \"params_hash\": \"{:#018x}\",\n", p.params_hash));
+        s.push_str(&format!(
+            "    \"topology_fingerprint\": \"{:#018x}\",\n",
+            p.topology_fingerprint
+        ));
+        s.push_str(&format!("    \"n_ranks\": {},\n", p.n_ranks));
+        s.push_str(&format!("    \"n_levels\": {},\n", p.n_levels));
+        s.push_str(&format!("    \"strategy\": \"{}\",\n", json::escape(&p.strategy)));
+        s.push_str(&format!("    \"level_policy\": \"{}\",\n", json::escape(&p.level_policy)));
+        s.push_str(&format!("    \"probe_mode\": \"{}\"\n", json::escape(&p.probe_mode)));
+        s.push_str("  },\n");
+        s.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"op\": \"{}\", \"bytes\": {}, \"policy\": \"{}\", \"best_us\": {}}}{}\n",
+                e.op.name(),
+                e.bytes,
+                policy_to_token(e.policy),
+                Self::best_us_json(e.best_us),
+                if i + 1 < self.entries.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse the versioned JSON format (strict: unknown versions, bad
+    /// tokens and malformed documents are errors).
+    pub fn from_json(src: &str) -> Result<PolicyTable> {
+        let doc = json::parse(src)?;
+        let field = |v: &Value, key: &str| -> Result<Value> {
+            v.get(key)
+                .cloned()
+                .ok_or_else(|| Error::Config(format!("policy table: missing field '{key}'")))
+        };
+        let str_field = |v: &Value, key: &str| -> Result<String> {
+            field(v, key)?
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| Error::Config(format!("policy table: '{key}' must be a string")))
+        };
+        let u64_field = |v: &Value, key: &str| -> Result<u64> {
+            field(v, key)?
+                .as_u64()
+                .ok_or_else(|| Error::Config(format!("policy table: '{key}' must be an integer")))
+        };
+        let hash_field = |v: &Value, key: &str| -> Result<u64> {
+            let s = str_field(v, key)?;
+            let hex = s.strip_prefix("0x").unwrap_or(&s);
+            u64::from_str_radix(hex, 16)
+                .map_err(|_| Error::Config(format!("policy table: '{key}' is not a hex hash")))
+        };
+        if str_field(&doc, "format")? != FORMAT_TAG {
+            return Err(Error::Config(format!(
+                "policy table: not a {FORMAT_TAG} file (format tag mismatch)"
+            )));
+        }
+        let version = u64_field(&doc, "version")?;
+        if version != POLICY_TABLE_VERSION {
+            return Err(Error::Config(format!(
+                "policy table: format version {version} is not the supported \
+                 {POLICY_TABLE_VERSION} — regenerate with `gridcollect tune-boundary --save \
+                 <table.json>`"
+            )));
+        }
+        let prov = field(&doc, "provenance")?;
+        let provenance = PolicyProvenance {
+            version,
+            params_hash: hash_field(&prov, "params_hash")?,
+            topology_fingerprint: hash_field(&prov, "topology_fingerprint")?,
+            n_ranks: u64_field(&prov, "n_ranks")? as usize,
+            n_levels: u64_field(&prov, "n_levels")? as usize,
+            strategy: str_field(&prov, "strategy")?,
+            level_policy: str_field(&prov, "level_policy")?,
+            probe_mode: str_field(&prov, "probe_mode")?,
+        };
+        let mut table = PolicyTable::new(provenance);
+        let entries = field(&doc, "entries")?;
+        let items = entries
+            .as_array()
+            .ok_or_else(|| Error::Config("policy table: 'entries' must be an array".into()))?;
+        for item in items {
+            let op = op_from_name(&str_field(item, "op")?)?;
+            let bytes = u64_field(item, "bytes")? as usize;
+            let policy = policy_from_token(&str_field(item, "policy")?)?;
+            // A non-interior hybrid boundary is a structural alias of a
+            // uniform policy the tuner never emits: a hand-edited table
+            // claiming one would *run* a uniform composition while
+            // *reporting* a hybrid — reject it rather than silently
+            // misreporting what executes.
+            if let AlgoPolicy::Hybrid { boundary_level } = policy {
+                if boundary_level == 0 || boundary_level >= table.provenance.n_levels {
+                    return Err(Error::Config(format!(
+                        "policy table: hybrid:{boundary_level} is not an interior boundary \
+                         for a {}-level clustering (valid: 1..{})",
+                        table.provenance.n_levels, table.provenance.n_levels
+                    )));
+                }
+            }
+            let best_us = match field(item, "best_us")? {
+                Value::Null => f64::NAN,
+                v => v.as_f64().ok_or_else(|| {
+                    Error::Config("policy table: 'best_us' must be a number or null".into())
+                })?,
+            };
+            table.record(op, bytes, policy, best_us);
+        }
+        Ok(table)
+    }
+
+    /// Write the table to `path` (JSON, atomic enough for our use:
+    /// single `fs::write`).
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json()).map_err(|e| Error::io(path, e))
+    }
+
+    /// Load a table from `path`. Loading does **not** validate
+    /// provenance — that happens when the table is installed into a
+    /// session (`GridSession::with_policy_table`), where the current
+    /// context is known.
+    pub fn load(path: &str) -> Result<PolicyTable> {
+        let src = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        PolicyTable::from_json(&src)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use crate::topology::TopologySpec;
+
+    fn provenance() -> PolicyProvenance {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        PolicyProvenance::of(
+            &comm,
+            &presets::paper_grid(),
+            Strategy::Multilevel,
+            &LevelPolicy::paper(),
+        )
+    }
+
+    #[test]
+    fn hashes_are_stable_and_discriminating() {
+        let a = Communicator::world(&TopologySpec::paper_fig1());
+        let b = Communicator::world(&TopologySpec::paper_fig1());
+        let c = Communicator::world(&TopologySpec::paper_experiment());
+        // Same spec, different processes-worth of epochs: identical
+        // fingerprints (the whole point — files outlive processes).
+        assert_ne!(a.epoch(), b.epoch());
+        assert_eq!(topology_fingerprint(&a), topology_fingerprint(&b));
+        assert_ne!(topology_fingerprint(&a), topology_fingerprint(&c));
+        let p = presets::paper_grid();
+        assert_eq!(params_hash(&p), params_hash(&presets::paper_grid()));
+        assert_ne!(params_hash(&p), params_hash(&p.clone().with_combine_us_per_byte(1.0)));
+    }
+
+    #[test]
+    fn record_sorts_and_replaces() {
+        let mut t = PolicyTable::new(provenance());
+        t.record(ReduceOp::Sum, 65536, AlgoPolicy::hybrid(1), 10.0);
+        t.record(ReduceOp::Sum, 4096, AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast), 5.0);
+        t.record(ReduceOp::Max, 4096, AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast), 7.0);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.entries()[0].bytes, 4096, "sorted by (op, bytes)");
+        assert_eq!(t.entries()[0].op, ReduceOp::Sum);
+        t.record(ReduceOp::Sum, 4096, AlgoPolicy::hybrid(2), 4.0);
+        assert_eq!(t.len(), 3, "replaced, not duplicated");
+        assert_eq!(t.exact(ReduceOp::Sum, 4096).unwrap().policy, AlgoPolicy::hybrid(2));
+    }
+
+    #[test]
+    fn best_for_is_exact_then_nearest_log_size() {
+        let mut t = PolicyTable::new(provenance());
+        let rb = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast);
+        let rsag = AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather);
+        t.record(ReduceOp::Sum, 4096, rb, 1.0);
+        t.record(ReduceOp::Sum, 1 << 20, rsag, 2.0);
+        assert_eq!(t.best_for(ReduceOp::Sum, 4096), Some(rb));
+        assert_eq!(t.best_for(ReduceOp::Sum, 1 << 20), Some(rsag));
+        // 8 KiB is much nearer 4 KiB than 1 MiB in log-space.
+        assert_eq!(t.best_for(ReduceOp::Sum, 8192), Some(rb));
+        assert_eq!(t.best_for(ReduceOp::Sum, 1 << 19), Some(rsag));
+        // exact log-midpoint (64 KiB between 4 KiB and 1 MiB): the
+        // smaller tuned size wins the tie deterministically.
+        assert_eq!(t.best_for(ReduceOp::Sum, 65536), Some(rb));
+        assert_eq!(t.best_for(ReduceOp::Max, 4096), None, "no entries for op");
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let mut t = PolicyTable::new(provenance());
+        t.record(ReduceOp::Sum, 4096, AlgoPolicy::hybrid(1), 123.456);
+        t.record(ReduceOp::Sum, 65536, AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast), 7.5);
+        t.record(
+            ReduceOp::Prod,
+            1 << 20,
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+            9999.25,
+        );
+        let back = PolicyTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.provenance(), t.provenance());
+        assert_eq!(back.entries(), t.entries());
+    }
+
+    #[test]
+    fn from_json_rejects_bad_documents() {
+        let good = PolicyTable::new(provenance()).to_json();
+        assert!(PolicyTable::from_json(&good).is_ok());
+        assert!(PolicyTable::from_json("{}").is_err(), "missing format tag");
+        assert!(
+            PolicyTable::from_json(&good.replace(FORMAT_TAG, "other-format")).is_err(),
+            "wrong format tag"
+        );
+        assert!(
+            PolicyTable::from_json(&good.replace("\"version\": 1", "\"version\": 99")).is_err(),
+            "unknown version"
+        );
+        let mut t = PolicyTable::new(provenance());
+        t.record(ReduceOp::Sum, 4096, AlgoPolicy::hybrid(1), 1.0);
+        let doc = t.to_json().replace("hybrid:1", "hybrid:x");
+        assert!(PolicyTable::from_json(&doc).is_err(), "bad policy token");
+    }
+
+    #[test]
+    fn non_finite_best_us_still_round_trips() {
+        // best_us is informational; JSON has no inf/NaN, so the codec
+        // maps non-finite to null and reads it back as NaN — save()
+        // must never produce a file load() cannot parse.
+        let mut t = PolicyTable::new(provenance());
+        t.record(ReduceOp::Sum, 4096, AlgoPolicy::hybrid(1), f64::INFINITY);
+        t.record(ReduceOp::Sum, 65536, AlgoPolicy::hybrid(2), f64::NAN);
+        let json = t.to_json();
+        assert!(json.contains("null"), "non-finite serialized as null: {json}");
+        let back = PolicyTable::from_json(&json).unwrap();
+        assert_eq!(back.len(), 2);
+        assert!(back.entries().iter().all(|e| e.best_us.is_nan()));
+        assert_eq!(back.best_for(ReduceOp::Sum, 4096), Some(AlgoPolicy::hybrid(1)));
+    }
+
+    #[test]
+    fn non_interior_hybrid_tokens_are_rejected_on_load() {
+        // hybrid(0) / hybrid(>= n_levels) are structural aliases of the
+        // uniforms; a table claiming one would misreport what executes.
+        let mut t = PolicyTable::new(provenance()); // fig1: 3 levels
+        t.record(ReduceOp::Sum, 4096, AlgoPolicy::hybrid(1), 1.0);
+        let good = t.to_json();
+        assert!(PolicyTable::from_json(&good).is_ok());
+        for bad in ["hybrid:0", "hybrid:3", "hybrid:99"] {
+            let doc = good.replace("hybrid:1", bad);
+            let err = PolicyTable::from_json(&doc);
+            assert!(err.is_err(), "{bad} must not load");
+        }
+    }
+
+    #[test]
+    fn provenance_mismatches_are_hard_errors() {
+        let current = provenance();
+        let mut other = current.clone();
+        other.params_hash ^= 1;
+        assert!(other.check_matches(&current).is_err(), "params");
+        let mut other = current.clone();
+        other.topology_fingerprint ^= 1;
+        assert!(other.check_matches(&current).is_err(), "topology");
+        let mut other = current.clone();
+        other.strategy = "mpich-binomial".into();
+        assert!(other.check_matches(&current).is_err(), "strategy");
+        let mut other = current.clone();
+        other.level_policy = "something else".into();
+        assert!(other.check_matches(&current).is_err(), "level policy");
+        let mut other = current.clone();
+        other.probe_mode = "full".into();
+        assert!(other.check_matches(&current).is_err(), "probe mode");
+        assert!(current.check_matches(&current).is_ok());
+    }
+}

@@ -16,6 +16,11 @@
 //! rotation [`crate::plan::Schedule`] **once** per engine
 //! ([`count_schedule_build`]).
 //!
+//! The session layer adds a final promise: the engine's per-run working
+//! state (mailbox channels, wait slots, ready queue, per-rank cursors) is
+//! a reusable scratch arena, so a warm step **grows no scratch storage**
+//! ([`count_scratch_alloc`] in `netsim::EngineScratch::prepare`).
+//!
 //! Tests should compare *deltas* ([`snapshot`] before / after), never
 //! absolute values: other tests in the same process also increment.
 
@@ -28,6 +33,7 @@ static PLAN_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
 static SIM_RUNS: AtomicU64 = AtomicU64::new(0);
 static PAYLOAD_ALLOCS: AtomicU64 = AtomicU64::new(0);
 static SCHEDULE_BUILDS: AtomicU64 = AtomicU64::new(0);
+static SCRATCH_ALLOCS: AtomicU64 = AtomicU64::new(0);
 
 /// One strategy-tree construction (any [`crate::tree::Strategy`]).
 #[inline]
@@ -78,6 +84,16 @@ pub fn count_schedule_build() {
     SCHEDULE_BUILDS.fetch_add(1, Ordering::Relaxed);
 }
 
+/// One growth of an engine scratch arena (`netsim::EngineScratch`): the
+/// run about to start needed more mailbox/wait/queue/cursor capacity
+/// than the arena held. Warm steps against a session- or engine-held
+/// arena must never bump this — the enforcement hook behind "warm ghost
+/// probes are allocation-free end to end".
+#[inline]
+pub fn count_scratch_alloc() {
+    SCRATCH_ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
+
 /// Point-in-time view of all pipeline counters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Snapshot {
@@ -88,6 +104,7 @@ pub struct Snapshot {
     pub sim_runs: u64,
     pub payload_allocs: u64,
     pub schedule_builds: u64,
+    pub scratch_allocs: u64,
 }
 
 impl Snapshot {
@@ -101,6 +118,7 @@ impl Snapshot {
             sim_runs: self.sim_runs - earlier.sim_runs,
             payload_allocs: self.payload_allocs - earlier.payload_allocs,
             schedule_builds: self.schedule_builds - earlier.schedule_builds,
+            scratch_allocs: self.scratch_allocs - earlier.scratch_allocs,
         }
     }
 }
@@ -115,6 +133,7 @@ pub fn snapshot() -> Snapshot {
         sim_runs: SIM_RUNS.load(Ordering::Relaxed),
         payload_allocs: PAYLOAD_ALLOCS.load(Ordering::Relaxed),
         schedule_builds: SCHEDULE_BUILDS.load(Ordering::Relaxed),
+        scratch_allocs: SCRATCH_ALLOCS.load(Ordering::Relaxed),
     }
 }
 
@@ -133,6 +152,7 @@ mod tests {
         count_sim_run();
         count_payload_alloc();
         count_schedule_build();
+        count_scratch_alloc();
         let delta = snapshot().since(&before);
         // Other tests run concurrently in this process, so the deltas are
         // lower bounds, not exact counts.
@@ -143,5 +163,6 @@ mod tests {
         assert!(delta.sim_runs >= 1);
         assert!(delta.payload_allocs >= 1);
         assert!(delta.schedule_builds >= 1);
+        assert!(delta.scratch_allocs >= 1);
     }
 }

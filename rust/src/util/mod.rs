@@ -4,6 +4,7 @@
 
 pub mod counters;
 pub mod fmt;
+pub mod json;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;

@@ -1,17 +1,18 @@
 //! Acceptance test for the fused Fig. 7 timing application: on a warm
-//! engine, one sweep point is **exactly one** ghost-mode engine run with
+//! session, one sweep point is **exactly one** ghost-mode engine run with
 //! **zero** tree builds, **zero** program compiles, **zero** schedule
-//! assemblies (the rotation schedule is memoized per engine — the PR 3
-//! ROADMAP item) and **zero** payload-data allocations, asserted via the
-//! global stage counters in `util::counters`.
+//! assemblies (the rotation schedule is memoized per session — the PR 3
+//! ROADMAP item), **zero** payload-data allocations and **zero** scratch
+//! growth (the session-held arena is recycled — the PR 5 item), asserted
+//! via the global stage counters in `util::counters`.
 //!
 //! Like `plan_pipeline.rs`, this is deliberately a single `#[test]` in
 //! its own binary: the counters are process-wide and `cargo test` runs
 //! tests within a binary concurrently — one test per binary makes the
 //! zero/exact-delta assertions race-free.
 
-use gridcollect::collectives::CollectiveEngine;
 use gridcollect::model::presets;
+use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::counters;
@@ -20,14 +21,14 @@ use gridcollect::util::counters;
 fn warm_fused_point_is_one_ghost_simulation_zero_builds() {
     let comm = Communicator::world(&TopologySpec::paper_experiment());
     let params = presets::paper_grid();
-    let engine = CollectiveEngine::new(&comm, params, Strategy::Multilevel);
+    let session = GridSession::new(&comm, params, Strategy::Multilevel);
 
     // Cold point: builds one bcast plan per root and assembles the
-    // rotation schedule exactly once (then memoizes it on the engine).
+    // rotation schedule exactly once (then memoizes it on the session).
     let before_cold = counters::snapshot();
-    let cold = gridcollect::coordinator::run_point_with(&engine, 4096).unwrap();
+    let cold = gridcollect::coordinator::run_point_with(&session, 4096).unwrap();
     let cold_delta = counters::snapshot().since(&before_cold);
-    assert_eq!(engine.plan_cache().len(), comm.size(), "one bcast plan per root");
+    assert_eq!(session.plan_cache().len(), comm.size(), "one bcast plan per root");
     assert_eq!(cold_delta.schedule_builds, 1, "rotation assembled exactly once");
     assert_eq!(cold_delta.sim_runs, 1, "even the cold point is ONE simulation");
     assert_eq!(
@@ -35,15 +36,17 @@ fn warm_fused_point_is_one_ghost_simulation_zero_builds() {
         0,
         "timing points are ghost runs: no payload data even cold"
     );
+    assert!(cold_delta.scratch_allocs >= 1, "the cold point sizes the scratch arena");
 
     // Warm sweep: three more sizes against the memoized schedule. Plans
-    // are payload-size-independent, the schedule is engine-resident, and
-    // ghost registers carry no data — so the whole sweep is three
-    // timing-only engine runs and nothing else.
+    // are payload-size-independent, the schedule is session-resident,
+    // ghost registers carry no data, and the scratch arena is recycled —
+    // so the whole sweep is three timing-only engine runs and nothing
+    // else.
     let before = counters::snapshot();
     let mut last = cold.total_us;
     for bytes in [8192usize, 65536, 262144] {
-        let warm = gridcollect::coordinator::run_point_with(&engine, bytes).unwrap();
+        let warm = gridcollect::coordinator::run_point_with(&session, bytes).unwrap();
         assert!(warm.total_us > last, "{bytes}: bigger messages take longer");
         last = warm.total_us;
         assert_eq!(warm.wan_msgs, comm.size() as u64, "multilevel: 1 WAN msg per bcast");
@@ -51,17 +54,18 @@ fn warm_fused_point_is_one_ghost_simulation_zero_builds() {
     let delta = counters::snapshot().since(&before);
     assert_eq!(delta.tree_builds, 0, "warm fused points must not build trees");
     assert_eq!(delta.program_compiles, 0, "warm fused points must not compile");
-    assert_eq!(delta.schedule_builds, 0, "memoized rotation: 1 assembly per engine");
+    assert_eq!(delta.schedule_builds, 0, "memoized rotation: 1 assembly per session");
     assert_eq!(delta.sim_runs, 3, "each sweep point is ONE simulation");
     assert_eq!(delta.plan_cache_misses, 0, "no plan rebuilt on the warm path");
     assert_eq!(delta.plan_cache_hits, 0, "memoized schedule: no plan-cache lookups");
     assert_eq!(delta.payload_allocs, 0, "ghost sweep allocates no payload data");
-    assert_eq!(engine.plan_cache().misses() as usize, engine.plan_cache().len());
+    assert_eq!(delta.scratch_allocs, 0, "warm ghost sweep grows no scratch storage");
+    assert_eq!(session.plan_cache().misses() as usize, session.plan_cache().len());
 
     // The fused ghost sweep still reproduces the paper's Fig. 8 ordering.
     let total = |s: Strategy| {
-        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
-        gridcollect::coordinator::run_point_with(&e, 65536).unwrap().total_us
+        let sess = GridSession::new(&comm, presets::paper_grid(), s);
+        gridcollect::coordinator::run_point_with(&sess, 65536).unwrap().total_us
     };
     let unaware = total(Strategy::Unaware);
     let machine = total(Strategy::TwoLevelMachine);

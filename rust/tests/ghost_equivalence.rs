@@ -7,8 +7,9 @@
 //! the key→length shape exactly; these tests pin that contract.
 //!
 //! Also pins the ready-queue scheduler against the retained rescan
-//! oracle (`netsim::run_rescan`), and the boundary tuner's verdict
-//! against exhaustive full-mode simulation.
+//! oracle (`netsim::testing::run_rescan` — test-support only since the
+//! session refactor), and the boundary tuner's verdict against
+//! exhaustive full-mode simulation.
 //!
 //! Everything here is result-local (no global stage counters), so the
 //! tests are safe to run concurrently; the counter-exact contracts live
@@ -19,6 +20,7 @@ use gridcollect::coordinator::{rotation_schedule_memo, tuning};
 use gridcollect::model::presets;
 use gridcollect::netsim::{GhostPayload, Payload, ReduceOp, SimResult};
 use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
+use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::rng::Rng;
@@ -111,15 +113,15 @@ fn ghost_equals_full_across_strategies_ops_roots_and_policies() {
 fn ghost_equals_full_on_the_fused_rotation() {
     let comm = Communicator::world(&TopologySpec::paper_fig1());
     for s in Strategy::ALL {
-        let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);
-        let schedule = rotation_schedule_memo(&e).unwrap();
+        let session = GridSession::new(&comm, presets::paper_grid(), s);
+        let schedule = rotation_schedule_memo(&session).unwrap();
         let elems = 16384 / 4;
         let mut full_init = vec![Payload::empty(); comm.size()];
         full_init[0] = Payload::single(0, vec![1.0f32; elems]);
         let mut ghost_init = vec![GhostPayload::empty(); comm.size()];
         ghost_init[0] = GhostPayload::single(0, elems);
-        let full = e.run_schedule(&schedule, full_init).unwrap();
-        let ghost = e.run_schedule_timing(&schedule, ghost_init).unwrap();
+        let full = session.run_schedule(&schedule, full_init).unwrap();
+        let ghost = session.run_schedule_timing(&schedule, ghost_init).unwrap();
         assert_timing_eq(&full, &ghost, s.name());
         assert_eq!(full.mark_times_us.len(), 2 * comm.size());
     }
@@ -160,7 +162,7 @@ fn ready_queue_scheduler_matches_rescan_oracle() {
                 &combiner,
             )
             .unwrap();
-            let b = gridcollect::netsim::run_rescan(
+            let b = gridcollect::netsim::testing::run_rescan(
                 comm.clustering(),
                 &plan.program,
                 init,

@@ -8,10 +8,10 @@
 //! binary concurrently — one test per binary makes the zero-delta
 //! assertions race-free.
 
-use gridcollect::collectives::CollectiveEngine;
 use gridcollect::model::presets;
 use gridcollect::netsim::ReduceOp;
 use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
+use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::counters;
@@ -19,7 +19,7 @@ use gridcollect::util::counters;
 #[test]
 fn warm_path_performs_zero_tree_builds_and_zero_program_compiles() {
     let comm = Communicator::world(&TopologySpec::paper_experiment());
-    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let e = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
     let n = comm.size();
     let data = vec![1.0f32; 256];
     let contributions: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 256]).collect();
@@ -61,6 +61,9 @@ fn warm_path_performs_zero_tree_builds_and_zero_program_compiles() {
     assert_eq!(warm.program_compiles, 0, "warm path must never compile a program");
     assert_eq!(warm.plan_cache_misses, 0, "every warm call is a cache hit");
     assert_eq!(warm.plan_cache_hits, 50, "10 rounds x 5 ops");
+    // The session recycles the engine scratch arena across its engine
+    // views: the cold round sized it, the warm rounds grow nothing.
+    assert_eq!(warm.scratch_allocs, 0, "warm path must never grow the scratch arena");
 
     // Hybrid allreduce, cold: composes the *cached* reduce phase with a
     // freshly compiled per-level delivery program — zero new tree builds,

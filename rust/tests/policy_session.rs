@@ -1,0 +1,155 @@
+//! GridSession front-door acceptance (result-local; no global stage
+//! counters, safe under parallel test execution):
+//!
+//! 1. `PolicyTable` round-trip: save → load → **identical argmin
+//!    decisions** as the in-memory table, across every op/size tuned;
+//! 2. provenance mismatch (table tuned under different `NetworkParams`,
+//!    topology or strategy) is a **hard error** on install;
+//! 3. every collective driven through `GridSession` produces
+//!    **bitwise-identical** `SimResult`s to the same call hand-wired
+//!    through `CollectiveEngine` — the migration is a pure re-fronting.
+
+use gridcollect::collectives::{request, CollectiveEngine};
+use gridcollect::model::presets;
+use gridcollect::netsim::{ReduceOp, SimResult};
+use gridcollect::plan::AlgoPolicy;
+use gridcollect::session::{GridSession, PolicyTable};
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_sim_eq(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(bits(&a.finish_us), bits(&b.finish_us), "finish_us {ctx}");
+    assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits(), "makespan {ctx}");
+    assert_eq!(a.msgs_by_sep, b.msgs_by_sep, "msgs_by_sep {ctx}");
+    assert_eq!(a.bytes_by_sep, b.bytes_by_sep, "bytes_by_sep {ctx}");
+    assert_eq!(a.combines, b.combines, "combines {ctx}");
+    assert_eq!(a.payloads, b.payloads, "payloads {ctx}");
+}
+
+#[test]
+fn policy_table_file_round_trip_preserves_argmin_decisions() {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let sizes = [4096usize, 65536, 1 << 20];
+    let (_, in_memory) = session.tune_boundary(ReduceOp::Sum, &sizes).unwrap();
+    assert_eq!(in_memory.len(), sizes.len());
+
+    let path = std::env::temp_dir().join(format!("gridcollect_policy_{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    in_memory.save(&path).unwrap();
+    let loaded = PolicyTable::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(loaded.provenance(), in_memory.provenance(), "provenance survives the disk");
+    assert_eq!(loaded.entries(), in_memory.entries(), "entries survive the disk");
+    // Identical argmin decisions — at tuned sizes AND between them
+    // (nearest-log-size resolution must agree too).
+    for probe in [1024usize, 4096, 10000, 65536, 1 << 19, 1 << 20, 1 << 22] {
+        assert_eq!(
+            loaded.best_for(ReduceOp::Sum, probe),
+            in_memory.best_for(ReduceOp::Sum, probe),
+            "argmin at {probe} bytes"
+        );
+    }
+    // Installing the loaded table resolves like the in-memory one.
+    let tuned = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .with_policy_table(loaded)
+        .unwrap();
+    for &bytes in &sizes {
+        assert_eq!(
+            tuned.resolve_policy(ReduceOp::Sum, bytes).unwrap(),
+            in_memory.best_for(ReduceOp::Sum, bytes).unwrap()
+        );
+    }
+}
+
+#[test]
+fn provenance_mismatch_on_load_is_a_hard_error() {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let (_, table) = session.tune_boundary(ReduceOp::Sum, &[65536]).unwrap();
+    let json = table.to_json();
+
+    // Different NetworkParams: hard error, not a silent accept.
+    let other_params = presets::paper_grid().with_combine_us_per_byte(0.5);
+    let err = GridSession::new(&comm, other_params, Strategy::Multilevel)
+        .with_policy_table(PolicyTable::from_json(&json).unwrap());
+    let msg = format!("{}", err.err().expect("params mismatch must error"));
+    assert!(msg.contains("NetworkParams"), "names the mismatched field: {msg}");
+
+    // Different topology: hard error.
+    let fig1 = Communicator::world(&TopologySpec::paper_fig1());
+    let err = GridSession::new(&fig1, presets::paper_grid(), Strategy::Multilevel)
+        .with_policy_table(PolicyTable::from_json(&json).unwrap());
+    assert!(err.is_err(), "topology mismatch must error");
+
+    // Different strategy: hard error.
+    let err = GridSession::new(&comm, presets::paper_grid(), Strategy::TwoLevelSite)
+        .with_policy_table(PolicyTable::from_json(&json).unwrap());
+    assert!(err.is_err(), "strategy mismatch must error");
+
+    // Matching context: installs.
+    assert!(GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .with_policy_table(PolicyTable::from_json(&json).unwrap())
+        .is_ok());
+}
+
+#[test]
+fn session_results_are_bitwise_identical_to_engine_results() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let n = comm.size();
+    let params = presets::paper_grid();
+    let data: Vec<f32> = (0..137).map(|i| (i % 11) as f32 - 5.0).collect();
+    let contributions: Vec<Vec<f32>> = (0..n)
+        .map(|r| (0..137).map(|i| ((r * 13 + i) % 17) as f32).collect())
+        .collect();
+    for strategy in Strategy::ALL {
+        let session = GridSession::new(&comm, params.clone(), strategy);
+        let engine = CollectiveEngine::new(&comm, params.clone(), strategy);
+        let ctx = |what: &str| format!("{} {what}", strategy.name());
+
+        let req = request::Bcast { root: 3, data: &data };
+        assert_sim_eq(
+            &session.run_sim(&req).unwrap(),
+            &engine.run_sim(&req).unwrap(),
+            &ctx("bcast"),
+        );
+
+        let req = request::Reduce { root: 1, op: ReduceOp::Max, contributions: &contributions };
+        assert_sim_eq(
+            &session.run_sim(&req).unwrap(),
+            &engine.run_sim(&req).unwrap(),
+            &ctx("reduce"),
+        );
+
+        for policy in [AlgoPolicy::hybrid(1), AlgoPolicy::hybrid(2)] {
+            let req = request::Allreduce {
+                root: 0,
+                op: ReduceOp::Sum,
+                policy,
+                contributions: &contributions,
+            };
+            assert_sim_eq(
+                &session.run_sim(&req).unwrap(),
+                &engine.run_sim(&req).unwrap(),
+                &ctx(&policy.name()),
+            );
+        }
+
+        // The named front-door methods agree with the engine wrappers
+        // on delivered data AND simulation, end to end.
+        let s_out = session.gather(2, &contributions).unwrap();
+        let e_out = engine.gather(2, &contributions).unwrap();
+        assert_eq!(s_out.data, e_out.data, "{}", ctx("gather data"));
+        assert_sim_eq(&s_out.sim, &e_out.sim, &ctx("gather"));
+
+        let s_out = session.allreduce(ReduceOp::Sum, &contributions).unwrap();
+        let e_out = engine.allreduce(ReduceOp::Sum, &contributions).unwrap();
+        assert_eq!(s_out.data, e_out.data, "{}", ctx("allreduce data"));
+        assert_sim_eq(&s_out.sim, &e_out.sim, &ctx("allreduce"));
+    }
+}

@@ -15,17 +15,17 @@
 //! the process-global stage counters, so these tests are immune to
 //! parallel-test interference.
 
-use gridcollect::collectives::CollectiveEngine;
 use gridcollect::coordinator::{rotation_schedule, run_point_separate, run_point_with};
 use gridcollect::model::presets;
 use gridcollect::netsim::Payload;
+use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 
 const BYTES: usize = 16384;
 
-fn engine(comm: &Communicator, s: Strategy) -> CollectiveEngine<'_> {
-    CollectiveEngine::new(comm, presets::paper_grid(), s)
+fn engine(comm: &Communicator, s: Strategy) -> GridSession {
+    GridSession::new(comm, presets::paper_grid(), s)
 }
 
 #[test]

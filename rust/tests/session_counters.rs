@@ -1,0 +1,92 @@
+//! Acceptance test for the tuner → workload loop through the
+//! `GridSession` front door (ISSUE 5): a session carrying a persisted
+//! `PolicyTable` transparently runs the tuned policy, and its **warm**
+//! steps perform zero tree builds, zero program compiles, zero plan
+//! rebuilds and zero scratch growth — with ghost (timing) steps
+//! additionally allocating zero payload data. Data-carrying steps
+//! necessarily materialize their input payloads; the counter pins that
+//! cost to exactly the encode path (nothing inside the engine).
+//!
+//! Single `#[test]` in its own binary: the counters are process-wide
+//! and exact-delta assertions must not race with other tests.
+
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::session::{GridSession, PolicyTable};
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::counters;
+
+#[test]
+fn tuned_session_runs_warm_steps_without_building_or_allocating() {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let n = comm.size();
+    let sizes = [4096usize, 65536];
+
+    // Tune and persist (round-tripping through the on-disk JSON form,
+    // exactly what `tune-boundary --save` + `--policy-file` do).
+    let tuner = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let (_, table) = tuner.tune_boundary(ReduceOp::Sum, &sizes).unwrap();
+    let table = PolicyTable::from_json(&table.to_json()).unwrap();
+
+    // A fresh session consuming the table: the provider must resolve to
+    // the tuner's argmin for each tuned size.
+    let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .with_policy_table(table.clone())
+        .unwrap();
+    for &bytes in &sizes {
+        assert_eq!(
+            session.resolve_policy(ReduceOp::Sum, bytes).unwrap(),
+            table.best_for(ReduceOp::Sum, bytes).unwrap(),
+            "{bytes}: session runs the tuned policy"
+        );
+    }
+
+    let elems = 65536 / 4;
+    let contributions: Vec<Vec<f32>> = (0..n).map(|r| vec![(r % 7) as f32; elems]).collect();
+
+    // Prime: first ghost step and first data step build the tuned
+    // policy's plan once and size the scratch arenas.
+    let before_cold = counters::snapshot();
+    session.allreduce_timing(ReduceOp::Sum, elems).unwrap();
+    let reference = session.allreduce(ReduceOp::Sum, &contributions).unwrap();
+    let cold = counters::snapshot().since(&before_cold);
+    assert!(cold.tree_builds >= 1, "cold steps build the tuned plan");
+    assert!(cold.scratch_allocs >= 1, "cold steps size the scratch arenas");
+
+    // Warm ghost steps (the tuner/timing consumers): pure engine runs.
+    let before = counters::snapshot();
+    for _ in 0..5 {
+        let sim = session.allreduce_timing(ReduceOp::Sum, elems).unwrap();
+        assert!(sim.payloads.is_empty(), "ghost steps return no payloads");
+    }
+    let ghost = counters::snapshot().since(&before);
+    assert_eq!(ghost.tree_builds, 0, "warm tuned ghost steps build no trees");
+    assert_eq!(ghost.program_compiles, 0, "warm tuned ghost steps compile nothing");
+    assert_eq!(ghost.plan_cache_misses, 0, "tuned plan served from cache");
+    assert_eq!(ghost.sim_runs, 5, "one engine run per step");
+    assert_eq!(ghost.payload_allocs, 0, "ghost steps allocate no payload data");
+    assert_eq!(ghost.scratch_allocs, 0, "ghost steps grow no scratch storage");
+    assert_eq!(ghost.schedule_builds, 0);
+
+    // Warm data steps (the training-style hot path): the only
+    // allocations are the steps' own input payloads.
+    let before = counters::snapshot();
+    for _ in 0..5 {
+        let out = session.allreduce(ReduceOp::Sum, &contributions).unwrap();
+        assert_eq!(out.data, reference.data, "warm results stay bitwise stable");
+    }
+    let data = counters::snapshot().since(&before);
+    assert_eq!(data.tree_builds, 0, "warm tuned data steps build no trees");
+    assert_eq!(data.program_compiles, 0, "warm tuned data steps compile nothing");
+    assert_eq!(data.plan_cache_misses, 0, "tuned plan served from cache");
+    assert_eq!(data.sim_runs, 5, "one engine run per step");
+    assert_eq!(data.scratch_allocs, 0, "warm data steps grow no scratch storage");
+    assert!(data.payload_allocs > 0, "data steps do materialize their inputs");
+
+    // And the tuned result is the same answer every policy gives:
+    // compare against the default (reduce+bcast) front door.
+    let default_session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let default_out = default_session.allreduce(ReduceOp::Sum, &contributions).unwrap();
+    assert_eq!(default_out.data, reference.data, "tuned == default, bitwise");
+}

@@ -1,6 +1,7 @@
 //! End-to-end (E11): data-parallel training with all three layers
 //! composing — PJRT train-step (L2), Pallas combine/axpy kernels (L1),
-//! topology-aware allreduce over the simulated grid (L3).
+//! topology-aware allreduce over the simulated grid (L3), driven through
+//! the `GridSession` front door.
 //!
 //! Requires `make artifacts`; marked `#[ignore]` so tier-1 (`cargo test`)
 //! stays interpretable in environments without the AOT-compiled PJRT
@@ -9,8 +10,10 @@
 use gridcollect::coordinator::training::{train, TrainConfig};
 use gridcollect::model::presets;
 use gridcollect::runtime::{MlpRuntime, Runtime, XlaCombiner};
+use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
+use std::sync::Arc;
 
 fn setup() -> (Runtime, Communicator) {
     let rt = Runtime::open_default().expect("run `make artifacts` before cargo test");
@@ -26,16 +29,9 @@ fn setup() -> (Runtime, Communicator) {
 fn loss_decreases_with_native_combiner() {
     let (rt, comm) = setup();
     let mlp = MlpRuntime::open(&rt).unwrap();
-    let cfg =
-        TrainConfig { steps: 30, lr: 0.2, strategy: Strategy::Multilevel, seed: 1, ..Default::default() };
-    let logs = train(
-        &comm,
-        &presets::paper_grid(),
-        &mlp,
-        gridcollect::coordinator::experiment::native(),
-        &cfg,
-    )
-    .unwrap();
+    let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let cfg = TrainConfig { steps: 30, lr: 0.2, seed: 1, ..Default::default() };
+    let logs = train(&session, &mlp, &cfg).unwrap();
     let first = logs.first().unwrap().mean_loss;
     let last = logs.last().unwrap().mean_loss;
     assert!(last < first * 0.75, "loss {first} -> {last}");
@@ -49,18 +45,13 @@ fn xla_and_native_combiners_train_identically() {
     // trajectories must be bitwise identical.
     let (rt, comm) = setup();
     let mlp = MlpRuntime::open(&rt).unwrap();
-    let xla = XlaCombiner::open_default(&rt).unwrap();
-    let cfg =
-        TrainConfig { steps: 8, lr: 0.1, strategy: Strategy::Multilevel, seed: 2, ..Default::default() };
-    let a = train(&comm, &presets::paper_grid(), &mlp, &xla, &cfg).unwrap();
-    let b = train(
-        &comm,
-        &presets::paper_grid(),
-        &mlp,
-        gridcollect::coordinator::experiment::native(),
-        &cfg,
-    )
-    .unwrap();
+    let xla = Arc::new(XlaCombiner::open_default(&rt).unwrap());
+    let cfg = TrainConfig { steps: 8, lr: 0.1, seed: 2, ..Default::default() };
+    let xla_session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .with_combiner(xla.clone());
+    let a = train(&xla_session, &mlp, &cfg).unwrap();
+    let native_session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let b = train(&native_session, &mlp, &cfg).unwrap();
     for (la, lb) in a.iter().zip(&b) {
         assert_eq!(la.mean_loss, lb.mean_loss, "step {}", la.step);
     }
@@ -72,10 +63,10 @@ fn xla_and_native_combiners_train_identically() {
 fn multilevel_strategy_cuts_communication_time() {
     let (rt, comm) = setup();
     let mlp = MlpRuntime::open(&rt).unwrap();
-    let native = gridcollect::coordinator::experiment::native();
     let mk = |strategy| {
-        let cfg = TrainConfig { steps: 3, lr: 0.1, strategy, seed: 3, ..Default::default() };
-        train(&comm, &presets::paper_grid(), &mlp, native, &cfg).unwrap()
+        let session = GridSession::new(&comm, presets::paper_grid(), strategy);
+        let cfg = TrainConfig { steps: 3, lr: 0.1, seed: 3, ..Default::default() };
+        train(&session, &mlp, &cfg).unwrap()
     };
     let unaware = mk(Strategy::Unaware);
     let multi = mk(Strategy::Multilevel);

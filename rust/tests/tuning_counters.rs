@@ -1,9 +1,11 @@
 //! Acceptance test for the boundary autotuner's probe cost: a **warm**
 //! `tune_allreduce_boundary` sweep performs zero tree builds, zero
-//! program compiles, zero schedule assemblies and zero payload-data
-//! allocations — each probe is exactly one ghost-mode engine run on a
-//! cached plan. This is the "cheap probe" premise (cs/0408034) the
-//! tuner is built on, enforced by the global stage counters.
+//! program compiles, zero schedule assemblies, zero payload-data
+//! allocations — and, with the reusable engine scratch arena, **zero
+//! mailbox/wait-vector allocations** — each probe is exactly one
+//! ghost-mode engine run on a cached plan over recycled working state.
+//! This is the "cheap probe" premise (cs/0408034) the tuner is built on,
+//! enforced by the global stage counters.
 //!
 //! Single `#[test]` in its own binary: the counters are process-wide
 //! and exact-delta assertions must not race with other tests.
@@ -25,6 +27,8 @@ fn warm_boundary_tuning_is_pure_ghost_execution() {
 
     // Cold sweep: builds each candidate's plan once — and nothing else.
     // Even cold, probes are ghost runs: zero payload-data allocations.
+    // The engine-held scratch arena grows while the candidates' channel
+    // counts ratchet up, but only on this first sweep.
     let before_cold = counters::snapshot();
     let cold = tuning::tune_allreduce_boundary(&engine, ReduceOp::Sum, 65536).unwrap();
     let cold_delta = counters::snapshot().since(&before_cold);
@@ -32,9 +36,12 @@ fn warm_boundary_tuning_is_pure_ghost_execution() {
     assert_eq!(cold_delta.payload_allocs, 0, "probes never materialize payload data");
     assert_eq!(cold_delta.schedule_builds, 0, "plans, not schedules");
     assert!(cold_delta.tree_builds >= 1, "cold sweep builds trees");
+    assert!(cold_delta.scratch_allocs >= 1, "cold sweep sizes the scratch arena");
 
     // Warm sweep at a different payload size: plans are size-independent,
-    // so every probe is served entirely from cache.
+    // so every probe is served entirely from cache — and the scratch
+    // arena (mailbox channels, wait slots, ready queue, cursors) is
+    // recycled, so a warm probe performs zero working-state allocations.
     let before = counters::snapshot();
     let warm = tuning::tune_allreduce_boundary(&engine, ReduceOp::Sum, 1 << 20).unwrap();
     let delta = counters::snapshot().since(&before);
@@ -45,6 +52,17 @@ fn warm_boundary_tuning_is_pure_ghost_execution() {
     assert_eq!(delta.sim_runs, n_candidates, "one engine run per probe");
     assert_eq!(delta.payload_allocs, 0, "zero payload allocations per probe");
     assert_eq!(delta.schedule_builds, 0);
+    assert_eq!(
+        delta.scratch_allocs,
+        0,
+        "warm ghost probes must not grow mailbox/wait-vector storage"
+    );
+
+    // A third sweep (another size again) stays allocation-free too —
+    // reuse is steady-state, not a one-off.
+    let before = counters::snapshot();
+    tuning::tune_allreduce_boundary(&engine, ReduceOp::Sum, 4096).unwrap();
+    assert_eq!(counters::snapshot().since(&before).scratch_allocs, 0);
 
     // Sanity on the verdicts themselves.
     assert_eq!(cold.probes.len(), warm.probes.len());
