@@ -5,8 +5,8 @@
 //! Run: `cargo bench --bench ablation_pipelining`
 
 use gridcollect::benchkit::{save_report, section};
-use gridcollect::collectives::CollectiveEngine;
 use gridcollect::coordinator::experiment;
+use gridcollect::session::GridSession;
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt::{self, Table};
 
@@ -15,13 +15,15 @@ fn main() {
     let params = experiment::paper_params();
 
     section("E9d — segment-count sweep (multilevel bcast, paper grid)");
+    // One session across all sizes: plans are payload-size-independent,
+    // so every size after the first runs entirely warm.
+    let session = GridSession::new(&comm, params.clone(), Strategy::Multilevel);
     let mut t = Table::new(&["msg size", "S=1", "S=4", "S=16", "S=64", "tuned S", "tuned time"]);
     for bytes in [16384usize, 262144, 1 << 20, 4 << 20] {
         let data = vec![0.5f32; bytes / 4];
-        let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel);
-        let at = |s: usize| e.bcast_segmented(0, &data, s).unwrap().sim.makespan_us;
+        let at = |s: usize| session.bcast_segmented(0, &data, s).unwrap().sim.makespan_us;
         let (best_s, best_us) =
-            e.tune_bcast_segments(0, &data, &[1, 2, 4, 8, 16, 32, 64, 128]).unwrap();
+            session.tune_bcast_segments(0, &data, &[1, 2, 4, 8, 16, 32, 64, 128]).unwrap();
         t.row(&[
             fmt::bytes(bytes),
             fmt::time_us(at(1)),
@@ -35,14 +37,23 @@ fn main() {
     print!("{}", t.to_markdown());
     save_report("pipelining_sweep", &t);
 
+    section("E9d' — tuned segment-count table (ghost probes, persistable)");
+    // The same sweep as a provenance-stamped PolicyTable: ghost probes,
+    // zero payload allocation, consumable via bcast_segmented_auto.
+    let sizes = [16384usize, 262144, 1 << 20, 4 << 20];
+    let (table, policy_table) =
+        session.tune_bcast_table(0, &sizes, &[1, 2, 4, 8, 16, 32, 64, 128]).unwrap();
+    print!("{}", table.to_markdown());
+    assert_eq!(policy_table.bcast_segment_entries().len(), sizes.len());
+    save_report("pipelining_tuned_table", &table);
+
     section("E9e — segmentation x strategy (1 MiB)");
     let data = vec![0.5f32; (1 << 20) / 4];
     let mut t = Table::new(&["strategy", "plain", "tuned segmented", "gain"]);
     for s in Strategy::ALL {
-        let e = CollectiveEngine::new(&comm, params.clone(), s);
-        let plain = e.bcast(0, &data).unwrap().sim.makespan_us;
-        let (_, tuned) =
-            e.tune_bcast_segments(0, &data, &[1, 4, 16, 64]).unwrap();
+        let session = GridSession::new(&comm, params.clone(), s);
+        let plain = session.bcast(0, &data).unwrap().sim.makespan_us;
+        let (_, tuned) = session.tune_bcast_segments(0, &data, &[1, 4, 16, 64]).unwrap();
         t.row(&[
             s.name().to_string(),
             fmt::time_us(plain),

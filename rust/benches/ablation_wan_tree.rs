@@ -8,9 +8,9 @@
 //! Run: `cargo bench --bench ablation_wan_tree`
 
 use gridcollect::benchkit::{save_report, section};
-use gridcollect::collectives::CollectiveEngine;
 use gridcollect::coordinator::experiment;
 use gridcollect::model::presets;
+use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::{LevelPolicy, Strategy, TreeShape};
 use gridcollect::util::fmt::{self, Table};
@@ -32,9 +32,9 @@ fn main() {
     for lambda in [1u32, 2, 3, 4, 6, 8, 12, 16] {
         let policy =
             LevelPolicy { shapes: vec![TreeShape::Fibonacci(lambda), TreeShape::Binomial] };
-        let e = CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
-            .with_policy(policy);
-        let out = e.bcast(0, &data).unwrap();
+        let session = GridSession::new(&comm, params.clone(), Strategy::Multilevel)
+            .with_level_policy(policy);
+        let out = session.bcast(0, &data).unwrap();
         t.row(&[lambda.to_string(), fmt::time_us(out.sim.makespan_us)]);
     }
     print!("{}", t.to_markdown());
@@ -50,8 +50,8 @@ fn main() {
     for bytes in [1024usize, 16384, 262144, 1 << 20] {
         let data = vec![0.5f32; bytes / 4];
         let run_policy = |policy: LevelPolicy| {
-            CollectiveEngine::new(&comm, params.clone(), Strategy::Multilevel)
-                .with_policy(policy)
+            GridSession::new(&comm, params.clone(), Strategy::Multilevel)
+                .with_level_policy(policy)
                 .bcast(0, &data)
                 .unwrap()
                 .sim

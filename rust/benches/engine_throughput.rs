@@ -21,12 +21,15 @@
 //! Reports land in `target/bench-reports/` (md/csv + BENCH_*.json).
 
 use gridcollect::benchkit::{save_bench_json, save_report, section, Bench, BenchResult};
-use gridcollect::collectives::CollectiveEngine;
+use gridcollect::collectives::{request, CollectiveEngine};
 use gridcollect::coordinator::{rotation_schedule_memo, tuning};
 use gridcollect::netsim::{
-    testing::run_rescan, GhostPayload, NativeCombiner, Payload, ReduceOp, SimConfig,
+    testing::run_rescan, ExecMode, GhostPayload, NativeCombiner, Payload, ReduceOp, SimConfig,
+    SimResult,
 };
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, OpKind};
 use gridcollect::session::GridSession;
+use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt::{self, Table};
 use std::time::Duration;
@@ -119,6 +122,47 @@ fn main() {
             std::hint::black_box(t.best_us);
         }));
     }
+
+    section("shard scaling — sharded ghost allreduce, 12,800 ranks / 8 sites");
+    // ISSUE 6 acceptance: the sharded engine retires >= 2x actions/s at
+    // 4 threads vs the sequential core on a >= 4-site, >= 10^4-rank
+    // topology. 8 sites x 16 machines x 100 procs = 12,800 ranks, so a
+    // 4-way shard split leaves every worker a full site's worth of work.
+    let big = Communicator::world(&TopologySpec::uniform(8, 16, 100).unwrap());
+    let policy = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast);
+    let elems = 65536 / 4;
+    let probe = request::AllreduceProbe { root: 0, op: ReduceOp::Sum, policy, elems };
+    let big_actions = {
+        let s = GridSession::new(&big, params.clone(), Strategy::Multilevel);
+        s.plan_for(0, OpKind::Allreduce(ReduceOp::Sum, policy), 1).unwrap().program.total_actions()
+    };
+    let mut scaling = Table::new(&["threads", "median", "actions/s", "vs sequential"]);
+    let mut scaling_results: Vec<BenchResult> = Vec::new();
+    let mut seq_us = f64::NAN;
+    for threads in [1usize, 2, 4] {
+        let mode = if threads > 1 { ExecMode::Sharded { threads } } else { ExecMode::Sequential };
+        let s = GridSession::new(&big, params.clone(), Strategy::Multilevel).with_exec_mode(mode);
+        let mut sim = SimResult::default();
+        s.simulate_timing_into(&probe, &mut sim).unwrap(); // prime plan + shard arenas
+        let r = bench.run(&format!("shard/ghost-allreduce/{}", mode.name()), || {
+            s.simulate_timing_into(&probe, &mut sim).unwrap();
+            std::hint::black_box(sim.makespan_us);
+        });
+        if threads == 1 {
+            seq_us = r.median_us;
+        }
+        let actions_per_sec = big_actions as f64 / (r.median_us.max(1e-9) / 1e6);
+        scaling.row(&[
+            threads.to_string(),
+            fmt::time_us(r.median_us),
+            format!("{actions_per_sec:.0}"),
+            format!("{:.2}x", seq_us / r.median_us.max(1e-9)),
+        ]);
+        scaling_results.push(r);
+    }
+    print!("{}", scaling.to_markdown());
+    save_report("shard_scaling_summary", &scaling);
+    save_bench_json("shard_scaling", &scaling_results);
 
     let mut wall = Table::new(&["case", "median us", "mean us", "iters"]);
     for r in &results {

@@ -6,9 +6,9 @@
 //! Run: `cargo bench --bench scaling_sites`
 
 use gridcollect::benchkit::{save_report, section};
-use gridcollect::collectives::CollectiveEngine;
 use gridcollect::coordinator::experiment;
 use gridcollect::model::presets;
+use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, GroupNode, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt::{self, Table};
@@ -64,11 +64,11 @@ fn main() {
                     s: Strategy,
                     data: &[f32]|
      -> (f64, u64) {
-        let e = CollectiveEngine::new(comm, params.clone(), s);
+        let session = GridSession::new(comm, params.clone(), s);
         let mut us = 0.0;
         let mut wan = 0;
         for root in 0..comm.size() {
-            let out = e.bcast(root, data).unwrap();
+            let out = session.bcast(root, data).unwrap();
             us += out.sim.makespan_us;
             wan += out.sim.wan_messages();
         }
@@ -81,9 +81,7 @@ fn main() {
         let comm = Communicator::world(spec);
         for s in [Strategy::Unaware, Strategy::TwoLevelSite, Strategy::Multilevel] {
             let (us, wan) = rotation(&comm, &params, s, &data);
-            let one = CollectiveEngine::new(&comm, params.clone(), s)
-                .bcast(0, &data)
-                .unwrap();
+            let one = GridSession::new(&comm, params.clone(), s).bcast(0, &data).unwrap();
             t.row(&[
                 name.to_string(),
                 s.name().to_string(),

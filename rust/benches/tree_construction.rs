@@ -8,8 +8,10 @@
 
 use gridcollect::benchkit::{section, Bench};
 use gridcollect::collectives::programs;
+use gridcollect::model::presets;
 use gridcollect::netsim::ReduceOp;
-use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, OpKind, PlanCache, PlanKey};
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, OpKind};
+use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::{build_strategy_tree, LevelPolicy, Strategy, TreeShape};
 
@@ -57,14 +59,7 @@ fn main() {
 
     section("plan cache: cold build vs warm hit (paper grid, 48 ranks)");
     let comm = Communicator::world(&TopologySpec::paper_experiment());
-    let key = |op: OpKind| PlanKey {
-        comm_epoch: comm.epoch(),
-        strategy: Strategy::Multilevel,
-        policy: LevelPolicy::paper(),
-        root: 0,
-        op,
-        segments: 1,
-    };
+    let params = presets::paper_grid();
     let ops = [
         OpKind::Bcast,
         OpKind::Reduce(ReduceOp::Sum),
@@ -80,42 +75,32 @@ fn main() {
             OpKind::Allreduce(_, policy) => format!("{}[{}]", op.name(), policy.name()),
             _ => op.name().to_string(),
         };
-        // Cold: a fresh cache every iteration — tree build + compile + meta.
+        // Cold: a fresh session (own cache) every iteration — tree build
+        // + compile + meta.
         bench.run(&format!("plan/cold/{label}"), || {
-            let cache = PlanCache::new();
-            let plan = cache.get_or_build(&comm, key(op)).unwrap();
+            let session = GridSession::new(&comm, params.clone(), Strategy::Multilevel);
+            let plan = session.plan_for(0, op, 1).unwrap();
             std::hint::black_box(plan.meta.total_messages());
         });
         // Warm: the plan was built once; every call is a pure lookup.
-        let cache = PlanCache::new();
-        cache.get_or_build(&comm, key(op)).unwrap();
+        let session = GridSession::new(&comm, params.clone(), Strategy::Multilevel);
+        session.plan_for(0, op, 1).unwrap();
         bench.run(&format!("plan/warm/{label}"), || {
-            let plan = cache.get_or_build(&comm, key(op)).unwrap();
+            let plan = session.plan_for(0, op, 1).unwrap();
             std::hint::black_box(plan.meta.total_messages());
         });
     }
 
     section("plan cache: 512 ranks, warm amortization");
     let big = Communicator::world(&TopologySpec::uniform(8, 8, 8).unwrap());
-    let big_key = PlanKey {
-        comm_epoch: big.epoch(),
-        strategy: Strategy::Multilevel,
-        policy: LevelPolicy::paper(),
-        root: 0,
-        op: OpKind::Allreduce(ReduceOp::Sum, AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)),
-        segments: 1,
-    };
+    let big_op = OpKind::Allreduce(ReduceOp::Sum, AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast));
     bench.run("plan/cold/allreduce/512", || {
-        let cache = PlanCache::new();
-        std::hint::black_box(
-            cache.get_or_build(&big, big_key.clone()).unwrap().meta.total_messages(),
-        );
+        let session = GridSession::new(&big, params.clone(), Strategy::Multilevel);
+        std::hint::black_box(session.plan_for(0, big_op, 1).unwrap().meta.total_messages());
     });
-    let cache = PlanCache::new();
-    cache.get_or_build(&big, big_key.clone()).unwrap();
+    let session = GridSession::new(&big, params.clone(), Strategy::Multilevel);
+    session.plan_for(0, big_op, 1).unwrap();
     bench.run("plan/warm/allreduce/512", || {
-        std::hint::black_box(
-            cache.get_or_build(&big, big_key.clone()).unwrap().meta.total_messages(),
-        );
+        std::hint::black_box(session.plan_for(0, big_op, 1).unwrap().meta.total_messages());
     });
 }

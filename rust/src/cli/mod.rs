@@ -15,7 +15,7 @@ pub struct Args {
 pub const VALUE_FLAGS: &[&str] = &[
     "sizes", "size", "steps", "lr", "strategy", "root", "spec", "sites", "machines", "procs",
     "out", "artifacts", "seed", "shape", "params", "algo", "op", "boundary", "save",
-    "policy-file",
+    "policy-file", "threads",
 ];
 
 impl Args {
@@ -167,6 +167,18 @@ impl Args {
         .map(Some)
     }
 
+    /// Parse `--threads N` into an execution mode: absent or `<= 1`
+    /// means sequential; `N > 1` selects the cluster-sharded engine
+    /// (bitwise-identical results, parallel wall-clock).
+    pub fn exec_mode(&self) -> Result<crate::netsim::ExecMode> {
+        let threads = self.get_usize("threads", 1)?;
+        Ok(if threads > 1 {
+            crate::netsim::ExecMode::Sharded { threads }
+        } else {
+            crate::netsim::ExecMode::Sequential
+        })
+    }
+
     /// Parse `--op` (reduction operator).
     pub fn reduce_op(
         &self,
@@ -301,6 +313,16 @@ mod tests {
     #[test]
     fn missing_value_flag_errors() {
         assert!(Args::parse(vec!["--sizes".to_string()]).is_err());
+    }
+
+    #[test]
+    fn threads_flag_selects_the_exec_mode() {
+        use crate::netsim::ExecMode;
+        assert_eq!(args("").exec_mode().unwrap(), ExecMode::Sequential);
+        assert_eq!(args("--threads 1").exec_mode().unwrap(), ExecMode::Sequential);
+        assert_eq!(args("--threads 4").exec_mode().unwrap(), ExecMode::Sharded { threads: 4 });
+        assert!(args("--threads x").exec_mode().is_err());
+        assert!(Args::parse(vec!["--threads".to_string()]).is_err(), "takes a value");
     }
 
     #[test]

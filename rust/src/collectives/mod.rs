@@ -23,8 +23,9 @@ pub use request::OpSpec;
 use crate::error::{Error, Result};
 use crate::model::NetworkParams;
 use crate::netsim::{
-    run_indexed_scratch, run_timing_indexed_scratch, ChannelIndex, Combiner, ExecScratch,
-    GhostPayload, NativeCombiner, Payload, Program, ReduceOp, SimConfig, SimResult,
+    run_indexed_scratch_into, run_indexed_scratch_sharded_into, run_timing_indexed_scratch_into,
+    run_timing_indexed_scratch_sharded_into, ChannelIndex, Combiner, ExecMode, ExecScratch,
+    GhostPayload, NativeCombiner, Payload, Program, ReduceOp, ShardMap, SimConfig, SimResult,
 };
 use crate::plan::{
     AlgoPolicy, AllreduceAlgo, CollectivePlan, OpKind, PlanCache, PlanKey, Schedule,
@@ -56,11 +57,15 @@ pub type ScheduleMemo = Arc<Mutex<HashMap<String, Arc<Schedule>>>>;
 /// cache, scratch and memo only to discard them).
 pub(crate) struct EngineParts<'a> {
     pub combiner: &'a dyn Combiner,
+    /// The same combiner when it is known `Sync` (`None` for plain custom
+    /// combiners) — required by sharded full-mode execution.
+    pub combiner_sync: Option<&'a (dyn Combiner + Sync)>,
     pub policy: LevelPolicy,
     pub cache: Arc<PlanCache>,
     pub scratch: Arc<ExecScratch>,
     pub schedules: ScheduleMemo,
     pub trace: bool,
+    pub exec_mode: ExecMode,
 }
 
 /// The **internal execution layer** binding a communicator, a cost
@@ -86,6 +91,15 @@ pub struct CollectiveEngine<'a> {
     comm: &'a Communicator,
     cfg: SimConfig,
     combiner: &'a dyn Combiner,
+    /// `combiner` again, when it is known to be `Sync` — the sharded
+    /// engine shares it across worker threads. `None` after
+    /// [`CollectiveEngine::with_combiner`] (thread-safety unknown), in
+    /// which case sharded full-mode runs fall back to the sequential
+    /// path; ghost runs never combine and always shard.
+    combiner_sync: Option<&'a (dyn Combiner + Sync)>,
+    /// Sequential oracle or cluster-sharded threads — results are
+    /// bitwise-identical either way (see [`crate::netsim::shard`]).
+    exec_mode: ExecMode,
     strategy: Strategy,
     policy: LevelPolicy,
     allreduce_policy: AlgoPolicy,
@@ -110,6 +124,8 @@ impl<'a> CollectiveEngine<'a> {
             comm,
             cfg: SimConfig::new(params),
             combiner: &NATIVE,
+            combiner_sync: Some(&NATIVE),
+            exec_mode: ExecMode::Sequential,
             strategy,
             policy: LevelPolicy::paper(),
             allreduce_policy: AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast),
@@ -134,6 +150,8 @@ impl<'a> CollectiveEngine<'a> {
             comm,
             cfg,
             combiner: parts.combiner,
+            combiner_sync: parts.combiner_sync,
+            exec_mode: parts.exec_mode,
             strategy,
             policy: parts.policy,
             allreduce_policy: AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast),
@@ -143,9 +161,34 @@ impl<'a> CollectiveEngine<'a> {
         }
     }
 
+    /// Replace the combiner. Its thread-safety is unknown here, so
+    /// sharded full-mode runs fall back to the sequential path; use
+    /// [`CollectiveEngine::with_sync_combiner`] for a `Sync` combiner.
     pub fn with_combiner(mut self, combiner: &'a dyn Combiner) -> Self {
         self.combiner = combiner;
+        self.combiner_sync = None;
         self
+    }
+
+    /// Replace the combiner with one that may be shared across shard
+    /// workers ([`ExecMode::Sharded`] full-mode runs use it directly).
+    pub fn with_sync_combiner(mut self, combiner: &'a (dyn Combiner + Sync)) -> Self {
+        self.combiner = combiner;
+        self.combiner_sync = Some(combiner);
+        self
+    }
+
+    /// Select sequential or cluster-sharded execution. Sharded runs are
+    /// bitwise-identical to sequential ones; the knob trades nothing but
+    /// wall-clock (see `netsim::shard`).
+    pub fn with_exec_mode(mut self, mode: ExecMode) -> Self {
+        self.exec_mode = mode;
+        self
+    }
+
+    /// The engine's execution mode.
+    pub fn exec_mode(&self) -> ExecMode {
+        self.exec_mode
     }
 
     pub fn with_policy(mut self, policy: LevelPolicy) -> Self {
@@ -247,7 +290,7 @@ impl<'a> CollectiveEngine<'a> {
     /// and combiner.
     pub fn run_schedule(&self, schedule: &Schedule, init: Vec<Payload>) -> Result<SimResult> {
         self.check_schedule_epoch(schedule)?;
-        self.execute(schedule.program(), schedule.channels(), init)
+        self.execute(schedule.program(), schedule.channels(), schedule.shards(), init)
     }
 
     /// [`CollectiveEngine::run_schedule`], ghost mode: one timing-only
@@ -259,15 +302,15 @@ impl<'a> CollectiveEngine<'a> {
         init: Vec<GhostPayload>,
     ) -> Result<SimResult> {
         self.check_schedule_epoch(schedule)?;
-        let mut scratch = self.scratch.ghost();
-        run_timing_indexed_scratch(
-            self.comm.clustering(),
+        let mut out = SimResult::default();
+        self.execute_timing_into(
             schedule.program(),
             schedule.channels(),
+            schedule.shards(),
             init,
-            &self.cfg,
-            &mut scratch,
-        )
+            &mut out,
+        )?;
+        Ok(out)
     }
 
     fn check_schedule_epoch(&self, schedule: &Schedule) -> Result<()> {
@@ -329,16 +372,50 @@ impl<'a> CollectiveEngine<'a> {
     }
 
     /// Stage-3 entry point: run a compiled program against this call's
-    /// initial payloads, with its precomputed channel index and the
-    /// engine's recycled full-mode scratch arena.
+    /// initial payloads, with its precomputed channel index, shard map
+    /// and the engine's recycled full-mode scratch arenas.
     fn execute(
         &self,
         prog: &Program,
         channels: &ChannelIndex,
+        shards: &ShardMap,
         init: Vec<Payload>,
     ) -> Result<SimResult> {
+        let mut out = SimResult::default();
+        self.execute_into(prog, channels, shards, init, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`CollectiveEngine::execute`] into a caller-owned result buffer,
+    /// dispatching on [`ExecMode`]. A sharded engine whose combiner is
+    /// not known `Sync` falls back to the sequential oracle (results are
+    /// identical by contract; only wall-clock differs).
+    fn execute_into(
+        &self,
+        prog: &Program,
+        channels: &ChannelIndex,
+        shards: &ShardMap,
+        init: Vec<Payload>,
+        out: &mut SimResult,
+    ) -> Result<()> {
+        if let ExecMode::Sharded { threads } = self.exec_mode {
+            if let Some(combiner) = self.combiner_sync {
+                return run_indexed_scratch_sharded_into(
+                    self.comm.clustering(),
+                    prog,
+                    channels,
+                    shards,
+                    init,
+                    &self.cfg,
+                    combiner,
+                    &self.scratch,
+                    threads,
+                    out,
+                );
+            }
+        }
         let mut scratch = self.scratch.full();
-        run_indexed_scratch(
+        run_indexed_scratch_into(
             self.comm.clustering(),
             prog,
             channels,
@@ -346,6 +423,43 @@ impl<'a> CollectiveEngine<'a> {
             &self.cfg,
             self.combiner,
             &mut scratch,
+            out,
+        )
+    }
+
+    /// Ghost-mode twin of [`CollectiveEngine::execute_into`]. Ghost
+    /// combines are data-free, so sharded execution never needs a `Sync`
+    /// combiner.
+    fn execute_timing_into(
+        &self,
+        prog: &Program,
+        channels: &ChannelIndex,
+        shards: &ShardMap,
+        init: Vec<GhostPayload>,
+        out: &mut SimResult,
+    ) -> Result<()> {
+        if let ExecMode::Sharded { threads } = self.exec_mode {
+            return run_timing_indexed_scratch_sharded_into(
+                self.comm.clustering(),
+                prog,
+                channels,
+                shards,
+                init,
+                &self.cfg,
+                &self.scratch,
+                threads,
+                out,
+            );
+        }
+        let mut scratch = self.scratch.ghost();
+        run_timing_indexed_scratch_into(
+            self.comm.clustering(),
+            prog,
+            channels,
+            init,
+            &self.cfg,
+            &mut scratch,
+            out,
         )
     }
 
@@ -380,7 +494,7 @@ impl<'a> CollectiveEngine<'a> {
         // that index by root rely on.
         let plan = self.plan_for(request.root(), request.op_kind(), request.segments())?;
         let init = request.encode_init(self.comm)?;
-        self.execute(&plan.program, &plan.channels, init)
+        self.execute(&plan.program, &plan.channels, &plan.shards, init)
     }
 
     /// [`CollectiveEngine::run_sim`], ghost mode: the request layer
@@ -404,18 +518,20 @@ impl<'a> CollectiveEngine<'a> {
     /// assert!(ghost.payloads.is_empty());
     /// ```
     pub fn simulate_timing(&self, request: &dyn OpSpec) -> Result<SimResult> {
+        let mut out = SimResult::default();
+        self.simulate_timing_into(request, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`CollectiveEngine::simulate_timing`] into a caller-owned
+    /// [`SimResult`] — the fully pooled probe: holding one result buffer
+    /// across a sweep recycles every output vector, so a warm probe
+    /// allocates nothing at all. On error, `out` is left in an
+    /// unspecified partially-written state.
+    pub fn simulate_timing_into(&self, request: &dyn OpSpec, out: &mut SimResult) -> Result<()> {
         let plan = self.plan_for(request.root(), request.op_kind(), request.segments())?;
         let init = request.encode_ghost(self.comm)?;
-        let clustering = self.comm.clustering();
-        let mut scratch = self.scratch.ghost();
-        run_timing_indexed_scratch(
-            clustering,
-            &plan.program,
-            &plan.channels,
-            init,
-            &self.cfg,
-            &mut scratch,
-        )
+        self.execute_timing_into(&plan.program, &plan.channels, &plan.shards, init, out)
     }
 
     /// MPI_Bcast: `data` flows from `root` to every rank.

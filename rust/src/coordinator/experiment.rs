@@ -8,7 +8,7 @@ use crate::collectives::verify;
 use crate::coordinator::timing_app::{self, TimingPoint};
 use crate::error::Result;
 use crate::model::{presets, NetworkParams};
-use crate::netsim::{Combiner, ExecScratch, NativeCombiner, ReduceOp};
+use crate::netsim::{Combiner, ExecMode, ExecScratch, NativeCombiner, ReduceOp};
 use crate::plan::{AlgoPolicy, AllreduceAlgo, PlanCache};
 use crate::session::GridSession;
 use crate::topology::{Communicator, TopologySpec};
@@ -22,9 +22,16 @@ use std::sync::Arc;
 /// [`timing_app::run_point_with`]) — ghost runs never touch a combiner,
 /// so the driver takes none.
 pub fn fig8_table(sizes: &[usize]) -> Result<(Table, Vec<TimingPoint>)> {
+    fig8_table_with_mode(sizes, ExecMode::Sequential)
+}
+
+/// [`fig8_table`] under an explicit execution mode (`--threads` routes
+/// here). Sharded timing is bitwise-identical to sequential, so the
+/// table contents never depend on the mode — only the wall-clock does.
+pub fn fig8_table_with_mode(sizes: &[usize], mode: ExecMode) -> Result<(Table, Vec<TimingPoint>)> {
     let comm = Communicator::world(&TopologySpec::paper_experiment());
     let params = presets::paper_grid();
-    let pts = timing_app::fig8_sweep(&comm, &params, sizes, &Strategy::ALL)?;
+    let pts = timing_app::fig8_sweep_with_mode(&comm, &params, sizes, &Strategy::ALL, mode)?;
     let mut t = Table::new(&[
         "msg size", "strategy", "rotation total", "mean bcast", "mean ack", "WAN msgs",
     ]);

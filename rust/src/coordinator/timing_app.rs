@@ -28,7 +28,7 @@
 
 use crate::error::Result;
 use crate::model::NetworkParams;
-use crate::netsim::{run, GhostPayload, Merge, Payload, Program, SendPart, SimConfig};
+use crate::netsim::{run, ExecMode, GhostPayload, Merge, Payload, Program, SendPart, SimConfig};
 use crate::plan::{OpKind, PlanCache, Schedule};
 use crate::session::GridSession;
 use crate::topology::Communicator;
@@ -217,6 +217,20 @@ pub fn fig8_sweep(
     sizes: &[usize],
     strategies: &[Strategy],
 ) -> Result<Vec<TimingPoint>> {
+    fig8_sweep_with_mode(comm, params, sizes, strategies, ExecMode::Sequential)
+}
+
+/// [`fig8_sweep`] under an explicit execution mode — the `--threads`
+/// CLI flag routes here. Every point is a ghost run, so sharded mode
+/// engages the cluster-parallel engine directly (timing is
+/// bitwise-identical to sequential by construction).
+pub fn fig8_sweep_with_mode(
+    comm: &Communicator,
+    params: &NetworkParams,
+    sizes: &[usize],
+    strategies: &[Strategy],
+    mode: ExecMode,
+) -> Result<Vec<TimingPoint>> {
     let cache = Arc::new(PlanCache::new());
     let scratch = Arc::new(crate::netsim::ExecScratch::new());
     let sessions: Vec<GridSession> = strategies
@@ -225,6 +239,7 @@ pub fn fig8_sweep(
             GridSession::new(comm, params.clone(), s)
                 .with_plan_cache(cache.clone())
                 .with_scratch(scratch.clone())
+                .with_exec_mode(mode)
         })
         .collect();
     let mut out = Vec::with_capacity(sizes.len() * strategies.len());
@@ -303,6 +318,25 @@ mod tests {
         let pt = run_point(&comm, &params, Strategy::Multilevel, 4096).unwrap();
         // one WAN message per broadcast, one broadcast per rank
         assert_eq!(pt.wan_msgs, comm.size() as u64);
+    }
+
+    #[test]
+    fn sharded_sweep_is_bitwise_identical_to_sequential() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let params = presets::paper_grid();
+        let sizes = [1024usize, 8192];
+        let strategies = [Strategy::Unaware, Strategy::Multilevel];
+        let seq = fig8_sweep(&comm, &params, &sizes, &strategies).unwrap();
+        let mode = ExecMode::Sharded { threads: 4 };
+        let sh = fig8_sweep_with_mode(&comm, &params, &sizes, &strategies, mode).unwrap();
+        assert_eq!(seq.len(), sh.len());
+        for (a, b) in seq.iter().zip(&sh) {
+            assert_eq!(a.total_us.to_bits(), b.total_us.to_bits(), "{} B", a.bytes);
+            assert_eq!(a.mean_bcast_us.to_bits(), b.mean_bcast_us.to_bits());
+            assert_eq!(a.mean_ack_us.to_bits(), b.mean_ack_us.to_bits());
+            assert_eq!(a.wan_msgs, b.wan_msgs);
+            assert_eq!(a.total_msgs, b.total_msgs);
+        }
     }
 
     #[test]

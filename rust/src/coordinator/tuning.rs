@@ -23,7 +23,7 @@
 
 use crate::collectives::{request, CollectiveEngine};
 use crate::error::{Error, Result};
-use crate::netsim::ReduceOp;
+use crate::netsim::{ReduceOp, SimResult};
 use crate::plan::{AlgoPolicy, AllreduceAlgo};
 use crate::util::fmt::{self, Table};
 
@@ -90,9 +90,13 @@ pub fn tune_allreduce_boundary(
     let elems = bytes / 4;
     let candidates = boundary_candidates(engine.comm().clustering().n_levels());
     let mut probes = Vec::with_capacity(candidates.len());
+    // One pooled result buffer for the whole sweep: a warm sweep
+    // allocates nothing for results either (inline per-separation
+    // accounting for <= 4-level clusterings).
+    let mut sim = SimResult::default();
     for policy in candidates {
         let probe = request::AllreduceProbe { root: 0, op, policy, elems };
-        let sim = engine.simulate_timing(&probe)?;
+        engine.simulate_timing_into(&probe, &mut sim)?;
         probes.push(BoundaryProbe {
             policy,
             makespan_us: sim.makespan_us,

@@ -3,19 +3,21 @@
 //! Subcommands map 1:1 onto the experiments in DESIGN.md §6:
 //!
 //! ```text
-//! gridcollect fig8 [--sizes 1k,...,1m] [--fused]        # E1: the headline figure
+//! gridcollect fig8 [--sizes 1k,...,1m] [--fused] [--threads N]  # E1: the headline figure
 //!                                  # (--fused adds the E13 fused-vs-separate delta table;
-//!                                  #  timing points are ghost runs — no combiner involved)
+//!                                  #  timing points are ghost runs — no combiner involved;
+//!                                  #  --threads N > 1 runs the cluster-sharded engine —
+//!                                  #  identical numbers, parallel wall-clock)
 //! gridcollect suite [--size 64k] [--xla]           # E8: 6 ops x 4 strategies
 //! gridcollect allreduce [--size 64k] [--op sum] [--boundary 1] [--policy-file t.json] [--xla]
-//! gridcollect tune-boundary [--sizes 4k,64k,1m] [--op sum] [--strategy s] [--spec fig1|experiment|SxMxP] [--save t.json]
+//! gridcollect tune-boundary [--sizes 4k,64k,1m] [--op sum] [--strategy s] [--spec fig1|experiment|SxMxP] [--save t.json] [--threads N]
 //! gridcollect cost-model [--size 64k]              # E2: §4 analytic vs sim
 //! gridcollect ablation [--sites 8] [--size 64k]    # E9: WAN tree shapes
 //! gridcollect scaling [--size 64k]                 # E10: site-count scaling
 //! gridcollect roots [--size 64k]                   # E7: root sensitivity
 //! gridcollect tree [--spec fig1|experiment] [--root 0]   # E3-E5: tree shapes
 //! gridcollect rsl <script.rsl> [--root 0]          # E6: RSL front-end
-//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--spec fig1|experiment|SxMxP] [--algo rb|rsag|hybrid] [--boundary 1] [--policy-file t.json] [--xla]
+//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--spec fig1|experiment|SxMxP] [--algo rb|rsag|hybrid] [--boundary 1] [--policy-file t.json] [--xla] [--threads N]
 //! gridcollect gantt [--size 64k] [--strategy s] [--params file.net]
 //! gridcollect calibrate [--out params.net]        # measure combine us/B
 //! ```
@@ -36,7 +38,7 @@ use gridcollect::cli::Args;
 use gridcollect::coordinator::{experiment, timing_app, training};
 use gridcollect::error::{Error, Result};
 use gridcollect::model::presets;
-use gridcollect::netsim::{Combiner, ReduceOp};
+use gridcollect::netsim::{Combiner, NativeCombiner, ReduceOp};
 use gridcollect::runtime::{calibrate_us_per_byte, MlpRuntime, Runtime, XlaCombiner};
 use gridcollect::session::GridSession;
 use gridcollect::topology::{rsl, Communicator, TopologySpec};
@@ -92,7 +94,7 @@ fn run(raw: Vec<String>) -> Result<()> {
     match cmd {
         "fig8" => {
             let sizes = args.sizes(&timing_app::default_sizes())?;
-            let (table, _) = experiment::fig8_table(&sizes)?;
+            let (table, _) = experiment::fig8_table_with_mode(&sizes, args.exec_mode()?)?;
             println!("E1 / Figure 8 — rotating-root MPI_Bcast on the paper grid (48 procs),");
             println!("each point one fused ghost simulation of the whole rotation:\n");
             print!("{}", table.to_markdown());
@@ -172,7 +174,8 @@ fn run(raw: Vec<String>) -> Result<()> {
             let strategy = args.strategy(Strategy::Multilevel)?;
             let spec = parse_spec(&args, "experiment")?;
             let comm = Communicator::world(&spec);
-            let session = GridSession::new(&comm, presets::paper_grid(), strategy);
+            let session = GridSession::new(&comm, presets::paper_grid(), strategy)
+                .with_exec_mode(args.exec_mode()?);
             println!(
                 "E14 — allreduce composition-boundary autotuning ({} strategy, {} ranks,",
                 strategy.name(),
@@ -266,11 +269,6 @@ fn run(raw: Vec<String>) -> Result<()> {
                     .unwrap_or_else(gridcollect::runtime::artifacts::default_dir),
             )?;
             let mlp = MlpRuntime::open(&rt)?;
-            let combiner: Arc<dyn Combiner> = if args.has("xla") {
-                Arc::new(XlaCombiner::open_default(&rt)?)
-            } else {
-                experiment::native_arc()
-            };
             // Default topology is the paper's experiment grid — the
             // same default as tune-boundary/fig8/suite/allreduce, so
             // `tune-boundary --save t.json && train --policy-file
@@ -281,7 +279,16 @@ fn run(raw: Vec<String>) -> Result<()> {
             let comm = Communicator::world(&spec);
             let strategy = args.strategy(Strategy::Multilevel)?;
             let mut session = GridSession::new(&comm, presets::paper_grid(), strategy)
-                .with_combiner(combiner);
+                .with_exec_mode(args.exec_mode()?);
+            // The native combiner is Sync, so sharded full-mode runs can
+            // share it across shard workers; an --xla combiner's
+            // thread-safety is unknown here, so those runs fall back to
+            // the sequential engine (identical results either way).
+            session = if args.has("xla") {
+                session.with_combiner(Arc::new(XlaCombiner::open_default(&rt)?))
+            } else {
+                session.with_sync_combiner(Arc::new(NativeCombiner))
+            };
             let pinned = args.algo_policy_opt()?;
             if let Some(path) = args.get("policy-file") {
                 if pinned.is_some() {

@@ -5,7 +5,7 @@
 //! conventions documented in [`crate::model`]: endpoint occupancy, no
 //! shared-link contention (§4 of the paper reasons under the same model).
 //!
-//! Two orthogonal axes, one core:
+//! Three orthogonal axes, one core:
 //!
 //! - **Register mode.** The core is generic over [`Register`]: [`run`]
 //!   executes full [`Payload`]s (real f32 segments, semantic
@@ -26,6 +26,21 @@
 //!   progress, so any scheduling order yields identical clocks — the old
 //!   rescan loop survives as `netsim::testing::run_rescan`, a
 //!   differential-testing oracle off the shipped surface.
+//! - **Execution mode.** The same ready-queue loop doubles as the
+//!   per-shard worker body of the sharded engine (`run_core_sharded`,
+//!   reached through [`run_indexed_scratch_sharded`] /
+//!   [`run_timing_indexed_scratch_sharded`]): ranks are partitioned by a
+//!   [`ShardMap`]'s top-level clusters, intra-cluster messages never
+//!   leave their worker, and boundary sends cross through per-shard
+//!   mailboxes under one mutex. Programs are blocking dataflow over
+//!   single-sender channels (see `netsim::shard` for why that implies
+//!   confluence), so any worker interleaving produces the same
+//!   per-channel FIFO order and the sharded result is **bitwise
+//!   identical** to the sequential engine's — which therefore stays the
+//!   differential oracle for the parallel path, exactly as the rescan
+//!   loop is for the ready queue. Traces are canonically sorted by a
+//!   total event key in both modes, so even tied timestamps merge
+//!   deterministically.
 //!
 //! The per-run working state (mailbox channels, wait slots, ready queue,
 //! per-rank cursors and clocks, accounting vectors) lives in a reusable
@@ -42,13 +57,14 @@ use crate::error::{Error, Result};
 use crate::model::NetworkParams;
 use crate::netsim::payload::{Combiner, GhostPayload, NativeCombiner, Payload, Rank, Register};
 use crate::netsim::program::{Action, ChannelIndex, Merge, Program, SendPart};
+use crate::netsim::shard::ShardMap;
 use crate::topology::Clustering;
 use crate::util::counters;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Condvar, Mutex, MutexGuard};
 
 /// One trace record (enabled via `SimConfig::trace`).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TraceEvent {
     pub t_us: f64,
     pub rank: Rank,
@@ -85,7 +101,12 @@ impl SimConfig {
 }
 
 /// Everything the simulation produces.
-#[derive(Clone, Debug)]
+///
+/// A default-constructed result is an empty shell whose buffers the
+/// `*_into` entry points fill in place — callers that hold one across
+/// runs (sessions, tuners, benches) recycle every vector's capacity
+/// instead of allocating a fresh result per probe.
+#[derive(Clone, Debug, Default)]
 pub struct SimResult {
     /// Per-rank local completion time (us).
     pub finish_us: Vec<f64>,
@@ -177,17 +198,84 @@ impl<R> Chan<R> {
     }
 }
 
-/// Everything the generic core produces; mode-specific wrappers shape it
-/// into a [`SimResult`].
-struct RunOutput<R> {
-    finish_us: Vec<f64>,
-    makespan_us: f64,
-    msgs_by_sep: Vec<u64>,
-    bytes_by_sep: Vec<u64>,
-    combines: u64,
-    registers: Vec<R>,
-    mark_times_us: Vec<(u64, f64)>,
-    trace: Vec<TraceEvent>,
+/// Canonical trace order: by timestamp (NaN-safe total order — clocks
+/// are finite, but a cost model handing back a NaN must not panic the
+/// sort), ties broken by the full event key. Sequential and sharded
+/// executions produce the same event *multiset*, so sorting by a total
+/// key makes the traces themselves bitwise comparable.
+fn sort_trace(trace: &mut [TraceEvent]) {
+    trace.sort_by(|a, b| {
+        a.t_us.total_cmp(&b.t_us).then_with(|| {
+            (a.rank, a.kind as u8, a.peer, a.tag, a.bytes, a.sep).cmp(&(
+                b.rank,
+                b.kind as u8,
+                b.peer,
+                b.tag,
+                b.bytes,
+                b.sep,
+            ))
+        })
+    });
+}
+
+/// Levels held inline by [`SepCounts`] — every clustering in the paper
+/// (site / machine / processor, plus the flat degenerate) fits.
+pub const SEP_INLINE_LEVELS: usize = 4;
+
+/// Small-vector accumulator for the per-separation-level counters
+/// (`msgs_by_sep` / `bytes_by_sep`): clusterings of up to
+/// [`SEP_INLINE_LEVELS`] levels accumulate entirely on the stack, so
+/// merging per-shard partial accounting allocates nothing; deeper
+/// hierarchies spill to a heap vector.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SepCounts {
+    inline: [u64; SEP_INLINE_LEVELS],
+    spill: Vec<u64>,
+    len: usize,
+}
+
+impl SepCounts {
+    /// A zeroed accumulator over `n_levels` separation levels.
+    pub fn new(n_levels: usize) -> Self {
+        let spill = if n_levels > SEP_INLINE_LEVELS { vec![0; n_levels] } else { Vec::new() };
+        SepCounts { inline: [0; SEP_INLINE_LEVELS], spill, len: n_levels }
+    }
+
+    /// Number of separation levels.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Add `v` at separation index `level` (0-based, i.e. `sep - 1`).
+    #[inline]
+    pub fn add(&mut self, level: usize, v: u64) {
+        if self.len <= SEP_INLINE_LEVELS {
+            self.inline[level] += v;
+        } else {
+            self.spill[level] += v;
+        }
+    }
+
+    /// Element-wise accumulate a full per-level slice.
+    pub fn add_slice(&mut self, counts: &[u64]) {
+        debug_assert_eq!(counts.len(), self.len);
+        for (i, &v) in counts.iter().enumerate() {
+            self.add(i, v);
+        }
+    }
+
+    /// The accumulated counts, `[sep-1]`-indexed like `SimResult`'s.
+    pub fn as_slice(&self) -> &[u64] {
+        if self.len <= SEP_INLINE_LEVELS {
+            &self.inline[..self.len]
+        } else {
+            &self.spill
+        }
+    }
 }
 
 /// No rank parked on this channel.
@@ -233,6 +321,20 @@ impl<R> EngineScratch<R> {
     /// separation levels, reusing existing capacity. Growth (a run
     /// larger than anything this arena has executed) is counted once.
     fn prepare(&mut self, n: usize, n_chan: usize, n_levels: usize) {
+        self.prepare_ranks(n, n_chan, n_levels, 0..n);
+    }
+
+    /// [`Self::prepare`] with an explicit initial ready set — the shard
+    /// workers seed only the ranks their shard owns. The ready queue is
+    /// still reserved to `n` so the capacity check (and therefore the
+    /// `scratch_allocs` counter) stabilizes after the first run.
+    fn prepare_ranks(
+        &mut self,
+        n: usize,
+        n_chan: usize,
+        n_levels: usize,
+        ready: impl IntoIterator<Item = Rank>,
+    ) {
         if self.mailbox.capacity() < n_chan
             || self.waiting.capacity() < n_chan
             || self.ready.capacity() < n
@@ -248,7 +350,8 @@ impl<R> EngineScratch<R> {
         self.waiting.clear();
         self.waiting.resize(n_chan, NO_WAITER);
         self.ready.clear();
-        self.ready.extend(0..n);
+        self.ready.reserve(n);
+        self.ready.extend(ready);
         self.clocks.clear();
         self.clocks.resize(n, 0.0);
         self.cursor.clear();
@@ -273,6 +376,10 @@ impl<R> Default for EngineScratch<R> {
 pub struct ExecScratch {
     full: Mutex<EngineScratch<Payload>>,
     ghost: Mutex<EngineScratch<GhostPayload>>,
+    /// Per-shard arena pools for the sharded engine, one per register
+    /// mode — sized on first sharded run, recycled thereafter.
+    full_shards: Mutex<ShardPool<Payload>>,
+    ghost_shards: Mutex<ShardPool<GhostPayload>>,
 }
 
 impl ExecScratch {
@@ -280,6 +387,8 @@ impl ExecScratch {
         ExecScratch {
             full: Mutex::new(EngineScratch::new()),
             ghost: Mutex::new(EngineScratch::new()),
+            full_shards: Mutex::new(ShardPool::new()),
+            ghost_shards: Mutex::new(ShardPool::new()),
         }
     }
 
@@ -300,19 +409,14 @@ impl Default for ExecScratch {
     }
 }
 
-/// The mode-generic ready-queue core shared by [`run`] and
-/// [`run_timing`]. `regs` doubles as the payload register file (rank r's
-/// register is `regs[r]`) and is returned as the run's final registers;
-/// everything else lives in the caller's `scratch` arena.
-fn run_core<R: Register>(
+/// Shared input validation for both execution modes. Error strings are
+/// part of the engines' observable behavior and must stay identical.
+fn validate_inputs(
     clustering: &Clustering,
     prog: &Program,
     index: &ChannelIndex,
-    mut regs: Vec<R>,
-    cfg: &SimConfig,
-    combiner: &dyn Combiner,
-    scratch: &mut EngineScratch<R>,
-) -> Result<RunOutput<R>> {
+    n_regs: usize,
+) -> Result<()> {
     let n = prog.n_ranks();
     if clustering.n_ranks() != n {
         return Err(Error::Sim(format!(
@@ -320,8 +424,8 @@ fn run_core<R: Register>(
             clustering.n_ranks()
         )));
     }
-    if regs.len() != n {
-        return Err(Error::Sim(format!("initial payloads: {} != {n}", regs.len())));
+    if n_regs != n {
+        return Err(Error::Sim(format!("initial payloads: {n_regs} != {n}")));
     }
     if !index.matches(prog) {
         return Err(Error::Sim("channel index does not match program shape".into()));
@@ -332,13 +436,37 @@ fn run_core<R: Register>(
         index.consistent_with(prog),
         "channel index was built for a different program of the same shape"
     );
-    counters::count_sim_run();
-    let n_levels = clustering.n_levels();
-    scratch.prepare(n, index.n_channels(), n_levels);
-    let mut combines = 0u64;
-    let mut trace = Vec::new();
-    let mut mark_times: BTreeMap<u64, f64> = BTreeMap::new();
+    Ok(())
+}
 
+/// The ready-queue inner loop shared **verbatim** by the sequential core
+/// and every shard worker — one implementation of the execution
+/// semantics, so the two modes cannot drift. Drains `scratch.ready`
+/// until every runnable rank has finished (`*live` reaches the count of
+/// unfinished ranks parked on empty channels) or parked.
+///
+/// `route` discriminates the modes: `None` delivers every send into the
+/// local mailbox (sequential); `Some((shard_of_chan, me))` diverts sends
+/// on channels owned by another shard into `outbox` as
+/// `(dest_shard, channel, arrival_us, message)` for the caller to flush
+/// across the shard boundary.
+#[allow(clippy::too_many_arguments)]
+fn drain_ready<R: Register>(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    regs: &mut [R],
+    cfg: &SimConfig,
+    combiner: &dyn Combiner,
+    scratch: &mut EngineScratch<R>,
+    route: Option<(&[u32], u32)>,
+    outbox: &mut Vec<(u32, u32, f64, R)>,
+    trace: &mut Vec<TraceEvent>,
+    marks: &mut BTreeMap<u64, f64>,
+    combines: &mut u64,
+    recvs: &mut u64,
+    live: &mut usize,
+) -> Result<()> {
     // Every unfinished rank is in exactly one place: the ready queue, a
     // wait slot, or currently executing — so each scheduling step costs
     // O(actions retired), never O(n_ranks).
@@ -349,7 +477,10 @@ fn run_core<R: Register>(
             // carries key vectors that are expensive to copy per
             // execution — §Perf L3 optimization #2).
             let action = match prog.actions[r].get(scratch.cursor[r]) {
-                None => break,
+                None => {
+                    *live -= 1;
+                    break;
+                }
                 Some(a) => a,
             };
             let chan = index.at(r, scratch.cursor[r]) as usize;
@@ -381,12 +512,22 @@ fn run_core<R: Register>(
                             sep,
                         });
                     }
-                    scratch.mailbox[chan].push(arrival, out);
-                    // Wake the receiver if it is parked on this channel.
-                    let w = scratch.waiting[chan];
-                    if w != NO_WAITER {
-                        scratch.waiting[chan] = NO_WAITER;
-                        scratch.ready.push_back(w);
+                    match route {
+                        Some((shard_of_chan, me)) if shard_of_chan[chan] != me => {
+                            // Boundary send: the receiver's mailbox lives
+                            // on another shard — hand it to the caller.
+                            outbox.push((shard_of_chan[chan], chan as u32, arrival, out));
+                        }
+                        _ => {
+                            scratch.mailbox[chan].push(arrival, out);
+                            // Wake the receiver if it is parked on this
+                            // channel.
+                            let w = scratch.waiting[chan];
+                            if w != NO_WAITER {
+                                scratch.waiting[chan] = NO_WAITER;
+                                scratch.ready.push_back(w);
+                            }
+                        }
                     }
                 }
                 Action::Recv { from, tag, merge } => {
@@ -398,6 +539,7 @@ fn run_core<R: Register>(
                             break;
                         }
                     };
+                    *recvs += 1;
                     let sep = clustering.sep(from, r);
                     let link = cfg.params.at_sep(sep);
                     let bytes = incoming.n_bytes();
@@ -408,7 +550,7 @@ fn run_core<R: Register>(
                         Merge::Union => regs[r].union(incoming).map_err(Error::Sim)?,
                         Merge::Combine(op) => {
                             scratch.clocks[r] += cfg.params.combine_us(bytes);
-                            combines += 1;
+                            *combines += 1;
                             regs[r].combine(&incoming, op, combiner).map_err(Error::Sim)?;
                         }
                     }
@@ -428,7 +570,7 @@ fn run_core<R: Register>(
                 Action::Mark { id } => {
                     let t = scratch.clocks[r];
                     scratch.cursor[r] += 1;
-                    let slot = mark_times.entry(id).or_insert(t);
+                    let slot = marks.entry(id).or_insert(t);
                     if t > *slot {
                         *slot = t;
                     }
@@ -436,59 +578,121 @@ fn run_core<R: Register>(
             }
         }
     }
+    Ok(())
+}
+
+/// Build the deadlock report both modes share: stuck ranks ascending,
+/// detail naming the first four blocked actions.
+fn deadlock_error(prog: &Program, stuck: Vec<usize>, cursor: &dyn Fn(Rank) -> usize) -> Error {
+    let detail = stuck
+        .iter()
+        .take(4)
+        .map(|&r| format!("rank {r} at action {:?}", prog.actions[r][cursor(r)]))
+        .collect::<Vec<_>>()
+        .join("; ");
+    Error::Deadlock { stuck_ranks: stuck, detail }
+}
+
+/// Build the undelivered-message report both modes share. The report is
+/// deterministic: channels are sorted by (from, to, tag), independent of
+/// scheduling, shard interleaving or map iteration order.
+fn undelivered_error(mut undelivered: Vec<((Rank, Rank, u64), usize)>) -> Error {
+    undelivered.sort_unstable();
+    let &((f, t, tag), count) = undelivered.first().expect("unbalanced ledger, empty scan");
+    let more = if undelivered.len() > 1 {
+        format!(" (+{} more channels)", undelivered.len() - 1)
+    } else {
+        String::new()
+    };
+    Error::Sim(format!("{count} undelivered message(s) on channel {f}->{t} tag {tag}{more}"))
+}
+
+/// The mode-generic sequential core shared by [`run`] and
+/// [`run_timing`]. `regs` doubles as the payload register file (rank r's
+/// register is `regs[r]`) and is returned as the run's final registers;
+/// timing and accounting land in the caller-owned `out` (whose buffers
+/// are recycled, not reallocated), and working state lives in the
+/// caller's `scratch` arena. On error, `out` is left in an unspecified
+/// partially-written state.
+#[allow(clippy::too_many_arguments)]
+fn run_core<R: Register>(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    mut regs: Vec<R>,
+    cfg: &SimConfig,
+    combiner: &dyn Combiner,
+    scratch: &mut EngineScratch<R>,
+    out: &mut SimResult,
+) -> Result<Vec<R>> {
+    validate_inputs(clustering, prog, index, regs.len())?;
+    counters::count_sim_run();
+    let n = prog.n_ranks();
+    let n_levels = clustering.n_levels();
+    scratch.prepare(n, index.n_channels(), n_levels);
+    out.trace.clear();
+    let mut marks: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut combines = 0u64;
+    let mut recvs = 0u64;
+    let mut live = n;
+    // Sequential routing never diverts a send, so this stays empty and
+    // never allocates.
+    let mut outbox: Vec<(u32, u32, f64, R)> = Vec::new();
+    drain_ready(
+        clustering,
+        prog,
+        index,
+        &mut regs,
+        cfg,
+        combiner,
+        scratch,
+        None,
+        &mut outbox,
+        &mut out.trace,
+        &mut marks,
+        &mut combines,
+        &mut recvs,
+        &mut live,
+    )?;
+    debug_assert!(outbox.is_empty(), "sequential sends never cross shards");
 
     // The queue drained: every rank either finished or is parked.
     let stuck: Vec<usize> =
         (0..n).filter(|&r| scratch.cursor[r] < prog.actions[r].len()).collect();
     if !stuck.is_empty() {
-        let detail = stuck
+        return Err(deadlock_error(prog, stuck, &|r| scratch.cursor[r]));
+    }
+
+    // Sent/received ledger: every send pushed exactly one message, every
+    // recv popped exactly one, so an undelivered message exists iff the
+    // totals disagree — the per-channel scan runs only on that error
+    // path, never on the hot one.
+    let sent: u64 = scratch.msgs_by_sep.iter().sum();
+    if sent != recvs {
+        let undelivered: Vec<((Rank, Rank, u64), usize)> = scratch
+            .mailbox
             .iter()
-            .take(4)
-            .map(|&r| format!("rank {r} at action {:?}", prog.actions[r][scratch.cursor[r]]))
-            .collect::<Vec<_>>()
-            .join("; ");
-        return Err(Error::Deadlock { stuck_ranks: stuck, detail });
+            .enumerate()
+            .filter_map(|(c, q)| match q.len() {
+                0 => None,
+                l => Some((index.key(c as u32), l)),
+            })
+            .collect();
+        return Err(undelivered_error(undelivered));
     }
 
-    // Undelivered messages indicate a send with no matching recv. The
-    // report is deterministic: channels are sorted by (from, to, tag),
-    // independent of scheduling or map iteration order.
-    let mut undelivered: Vec<((Rank, Rank, u64), usize)> = scratch
-        .mailbox
-        .iter()
-        .enumerate()
-        .filter_map(|(c, q)| match q.len() {
-            0 => None,
-            l => Some((index.key(c as u32), l)),
-        })
-        .collect();
-    undelivered.sort_unstable();
-    if let Some(&((f, t, tag), count)) = undelivered.first() {
-        let more = if undelivered.len() > 1 {
-            format!(" (+{} more channels)", undelivered.len() - 1)
-        } else {
-            String::new()
-        };
-        return Err(Error::Sim(format!(
-            "{count} undelivered message(s) on channel {f}->{t} tag {tag}{more}"
-        )));
-    }
-
-    let finish_us: Vec<f64> = scratch.clocks.clone();
-    let makespan_us = finish_us.iter().fold(0.0f64, |a, &b| a.max(b));
-    // NaN-safe total order; clocks are finite, but a cost model handing
-    // back a NaN must not panic the sort.
-    trace.sort_by(|a, b| a.t_us.total_cmp(&b.t_us));
-    Ok(RunOutput {
-        finish_us,
-        makespan_us,
-        msgs_by_sep: scratch.msgs_by_sep.clone(),
-        bytes_by_sep: scratch.bytes_by_sep.clone(),
-        combines,
-        registers: regs,
-        mark_times_us: mark_times.into_iter().collect(),
-        trace,
-    })
+    out.finish_us.clear();
+    out.finish_us.extend_from_slice(&scratch.clocks);
+    out.makespan_us = out.finish_us.iter().fold(0.0f64, |a, &b| a.max(b));
+    out.msgs_by_sep.clear();
+    out.msgs_by_sep.extend_from_slice(&scratch.msgs_by_sep);
+    out.bytes_by_sep.clear();
+    out.bytes_by_sep.extend_from_slice(&scratch.bytes_by_sep);
+    out.combines = combines;
+    out.mark_times_us.clear();
+    out.mark_times_us.extend(marks);
+    sort_trace(&mut out.trace);
+    Ok(regs)
 }
 
 /// Execute `prog` with the given initial payload registers (full mode:
@@ -535,17 +739,29 @@ pub fn run_indexed_scratch(
     combiner: &dyn Combiner,
     scratch: &mut EngineScratch<Payload>,
 ) -> Result<SimResult> {
-    let out = run_core(clustering, prog, index, initial, cfg, combiner, scratch)?;
-    Ok(SimResult {
-        finish_us: out.finish_us,
-        makespan_us: out.makespan_us,
-        msgs_by_sep: out.msgs_by_sep,
-        bytes_by_sep: out.bytes_by_sep,
-        combines: out.combines,
-        payloads: out.registers,
-        mark_times_us: out.mark_times_us,
-        trace: out.trace,
-    })
+    let mut out = SimResult::default();
+    run_indexed_scratch_into(clustering, prog, index, initial, cfg, combiner, scratch, &mut out)?;
+    Ok(out)
+}
+
+/// [`run_indexed_scratch`] writing into a caller-owned [`SimResult`] —
+/// the pooled entry point: a result held across runs recycles every
+/// output buffer's capacity, so a warm step allocates neither working
+/// state nor results. On error, `out` is left partially written.
+#[allow(clippy::too_many_arguments)]
+pub fn run_indexed_scratch_into(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    initial: Vec<Payload>,
+    cfg: &SimConfig,
+    combiner: &dyn Combiner,
+    scratch: &mut EngineScratch<Payload>,
+    out: &mut SimResult,
+) -> Result<()> {
+    let regs = run_core(clustering, prog, index, initial, cfg, combiner, scratch, out)?;
+    out.payloads = regs;
+    Ok(())
 }
 
 /// Execute `prog` in **ghost (timing-only) mode**: registers carry
@@ -587,19 +803,547 @@ pub fn run_timing_indexed_scratch(
     cfg: &SimConfig,
     scratch: &mut EngineScratch<GhostPayload>,
 ) -> Result<SimResult> {
+    let mut out = SimResult::default();
+    run_timing_indexed_scratch_into(clustering, prog, index, initial, cfg, scratch, &mut out)?;
+    Ok(out)
+}
+
+/// [`run_timing_indexed_scratch`] writing into a caller-owned
+/// [`SimResult`] — the fully pooled probe: cached program, cached
+/// channel index, recycled working state, recycled result buffers. On
+/// error, `out` is left partially written.
+pub fn run_timing_indexed_scratch_into(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    initial: Vec<GhostPayload>,
+    cfg: &SimConfig,
+    scratch: &mut EngineScratch<GhostPayload>,
+    out: &mut SimResult,
+) -> Result<()> {
     // Ghost combines never touch the combiner; any impl satisfies the
     // signature.
-    let out = run_core(clustering, prog, index, initial, cfg, &NativeCombiner, scratch)?;
-    Ok(SimResult {
-        finish_us: out.finish_us,
-        makespan_us: out.makespan_us,
-        msgs_by_sep: out.msgs_by_sep,
-        bytes_by_sep: out.bytes_by_sep,
-        combines: out.combines,
-        payloads: Vec::new(),
-        mark_times_us: out.mark_times_us,
-        trace: out.trace,
-    })
+    run_core(clustering, prog, index, initial, cfg, &NativeCombiner, scratch, out)?;
+    out.payloads.clear();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Sharded execution (see `netsim::shard` for the partition + the
+// determinism argument).
+// ---------------------------------------------------------------------
+
+/// Cross-shard state under the one shared mutex: per-shard boundary
+/// inboxes plus the termination-detection bookkeeping.
+struct ShardShared<R> {
+    /// `inboxes[s]` — boundary messages awaiting delivery on shard `s`,
+    /// as `(channel, arrival_us, message)`.
+    inboxes: Vec<VecDeque<(u32, f64, R)>>,
+    /// Shards whose every rank finished (their inboxes can no longer
+    /// unblock anything and are excluded from the quiescence check).
+    exited: Vec<bool>,
+    idle: usize,
+    n_done: usize,
+    /// Terminal flag: global quiescence (success or deadlock) or a shard
+    /// error. Once set, every worker returns at its next lock.
+    poisoned: bool,
+}
+
+impl<R> ShardShared<R> {
+    /// No boundary message is pending anywhere it could still be
+    /// consumed. Exited shards' inboxes are ignored: their ranks are
+    /// done, so anything addressed to them is undeliverable (the parent
+    /// reports it through the sent/received ledger).
+    fn quiescent(&self) -> bool {
+        self.inboxes.iter().zip(&self.exited).all(|(q, &gone)| gone || q.is_empty())
+    }
+}
+
+/// One shard worker's private state, recycled across runs like
+/// [`EngineScratch`] (whose capacity-check-then-count idiom
+/// `prepare` follows, so the `scratch_allocs` promise extends
+/// per-shard).
+struct ShardArena<R> {
+    scratch: EngineScratch<R>,
+    /// Full-length register file; only the slots of owned ranks are
+    /// populated.
+    regs: Vec<R>,
+    outbox: Vec<(u32, u32, f64, R)>,
+    trace: Vec<TraceEvent>,
+    marks: BTreeMap<u64, f64>,
+    combines: u64,
+    recvs: u64,
+    /// Owned ranks not yet finished.
+    live: usize,
+    error: Option<Error>,
+}
+
+impl<R: Register> ShardArena<R> {
+    fn new() -> Self {
+        ShardArena {
+            scratch: EngineScratch::new(),
+            regs: Vec::new(),
+            outbox: Vec::new(),
+            trace: Vec::new(),
+            marks: BTreeMap::new(),
+            combines: 0,
+            recvs: 0,
+            live: 0,
+            error: None,
+        }
+    }
+
+    fn prepare(
+        &mut self,
+        me: u32,
+        n: usize,
+        n_chan: usize,
+        n_levels: usize,
+        shard_of_rank: &[u32],
+    ) {
+        let owned = (0..n).filter(|&r| shard_of_rank[r] == me);
+        self.scratch.prepare_ranks(n, n_chan, n_levels, owned);
+        if self.regs.capacity() < n {
+            counters::count_scratch_alloc();
+        }
+        self.regs.clear();
+        self.regs.resize_with(n, R::empty);
+        self.outbox.clear();
+        self.trace.clear();
+        self.marks.clear();
+        self.combines = 0;
+        self.recvs = 0;
+        self.live = self.scratch.ready.len();
+        self.error = None;
+    }
+}
+
+/// The pooled state of the sharded engine: worker arenas, boundary
+/// inboxes and the rank/channel → shard routing tables. Held (per
+/// register mode) inside [`ExecScratch`], so warm sharded runs recycle
+/// everything.
+struct ShardPool<R> {
+    arenas: Vec<ShardArena<R>>,
+    inboxes: Vec<VecDeque<(u32, f64, R)>>,
+    shard_of_rank: Vec<u32>,
+    shard_of_chan: Vec<u32>,
+}
+
+impl<R: Register> ShardPool<R> {
+    fn new() -> Self {
+        ShardPool {
+            arenas: Vec::new(),
+            inboxes: Vec::new(),
+            shard_of_rank: Vec::new(),
+            shard_of_chan: Vec::new(),
+        }
+    }
+
+    fn prepare_tables(&mut self, n: usize, n_chan: usize) {
+        if self.shard_of_rank.capacity() < n || self.shard_of_chan.capacity() < n_chan {
+            counters::count_scratch_alloc();
+        }
+        self.shard_of_rank.clear();
+        self.shard_of_chan.clear();
+    }
+}
+
+/// One shard worker: drain the owned ranks, flush boundary sends, then
+/// under the shared lock either pick up delivered boundary messages, or
+/// park on the condvar, or detect termination. All state transitions
+/// happen under the one mutex, so no wakeup can be lost; workers return
+/// when `poisoned` is set (global quiescence — success or deadlock — or
+/// any shard error).
+#[allow(clippy::too_many_arguments)]
+fn run_shard_worker<R: Register + Send>(
+    me: u32,
+    n_shards: usize,
+    shard_of_chan: &[u32],
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    cfg: &SimConfig,
+    combiner: &(dyn Combiner + Sync),
+    arena: &mut ShardArena<R>,
+    shared: &Mutex<ShardShared<R>>,
+    wakeup: &Condvar,
+) {
+    loop {
+        let res = drain_ready(
+            clustering,
+            prog,
+            index,
+            &mut arena.regs,
+            cfg,
+            combiner,
+            &mut arena.scratch,
+            Some((shard_of_chan, me)),
+            &mut arena.outbox,
+            &mut arena.trace,
+            &mut arena.marks,
+            &mut arena.combines,
+            &mut arena.recvs,
+            &mut arena.live,
+        );
+        let mut g = shared.lock().unwrap();
+        if let Err(e) = res {
+            arena.error = Some(e);
+            g.poisoned = true;
+            wakeup.notify_all();
+            return;
+        }
+        if !arena.outbox.is_empty() {
+            for (dest, chan, arrival, msg) in arena.outbox.drain(..) {
+                g.inboxes[dest as usize].push_back((chan, arrival, msg));
+            }
+            wakeup.notify_all();
+        }
+        loop {
+            if g.poisoned {
+                return;
+            }
+            if !g.inboxes[me as usize].is_empty() {
+                // Deliver into the local mailbox, waking parked ranks,
+                // then go drain them.
+                while let Some((chan, arrival, msg)) = g.inboxes[me as usize].pop_front() {
+                    let c = chan as usize;
+                    arena.scratch.mailbox[c].push(arrival, msg);
+                    let w = arena.scratch.waiting[c];
+                    if w != NO_WAITER {
+                        arena.scratch.waiting[c] = NO_WAITER;
+                        arena.scratch.ready.push_back(w);
+                    }
+                }
+                break;
+            }
+            if arena.live == 0 {
+                g.exited[me as usize] = true;
+                g.n_done += 1;
+                if g.n_done + g.idle == n_shards && g.quiescent() {
+                    g.poisoned = true;
+                    wakeup.notify_all();
+                }
+                return;
+            }
+            g.idle += 1;
+            if g.n_done + g.idle == n_shards && g.quiescent() {
+                // Everyone is waiting and nothing is in flight: the
+                // remaining ranks are deadlocked. Release the other
+                // waiters; the parent builds the report from cursors.
+                g.poisoned = true;
+                wakeup.notify_all();
+                return;
+            }
+            g = wakeup.wait(g).unwrap();
+            g.idle -= 1;
+        }
+    }
+}
+
+/// The sharded counterpart of [`run_core`]: partition ranks by the
+/// [`ShardMap`]'s clusters (folded onto at most `threads` shards), run
+/// one worker thread per shard, and merge the per-shard partial results
+/// in deterministic shard order. Bitwise-identical to the sequential
+/// core by construction — see `netsim::shard`'s module docs.
+#[allow(clippy::too_many_arguments)]
+fn run_core_sharded<R: Register + Send>(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    shards: &ShardMap,
+    mut regs: Vec<R>,
+    cfg: &SimConfig,
+    combiner: &(dyn Combiner + Sync),
+    pool: &mut ShardPool<R>,
+    threads: usize,
+    out: &mut SimResult,
+) -> Result<Vec<R>> {
+    validate_inputs(clustering, prog, index, regs.len())?;
+    let n = prog.n_ranks();
+    if shards.n_ranks() != n || !shards.matches(index) {
+        return Err(Error::Sim("shard map does not match program shape".into()));
+    }
+    counters::count_sim_run();
+    let n_chan = index.n_channels();
+    let n_levels = clustering.n_levels();
+    let n_shards = threads.min(shards.n_clusters()).max(1);
+
+    pool.prepare_tables(n, n_chan);
+    for r in 0..n {
+        pool.shard_of_rank.push((shards.cluster_of(r) % n_shards) as u32);
+    }
+    for c in 0..n_chan {
+        pool.shard_of_chan.push((shards.chan_owner(c as u32) % n_shards) as u32);
+    }
+    while pool.arenas.len() < n_shards {
+        pool.arenas.push(ShardArena::new());
+    }
+    while pool.inboxes.len() < n_shards {
+        pool.inboxes.push(VecDeque::new());
+    }
+    let ShardPool { arenas, inboxes, shard_of_rank, shard_of_chan } = pool;
+    for (s, arena) in arenas.iter_mut().enumerate().take(n_shards) {
+        arena.prepare(s as u32, n, n_chan, n_levels, shard_of_rank);
+    }
+    for q in inboxes.iter_mut() {
+        q.clear();
+    }
+    // Seed each rank's register into its owner's register file; `regs`
+    // is drained in place and reused as the collection buffer below.
+    for (r, slot) in regs.iter_mut().enumerate() {
+        arenas[shard_of_rank[r] as usize].regs[r] = std::mem::replace(slot, R::empty());
+    }
+
+    let shared = Mutex::new(ShardShared {
+        inboxes: std::mem::take(inboxes),
+        exited: vec![false; n_shards],
+        idle: 0,
+        n_done: 0,
+        poisoned: false,
+    });
+    let wakeup = Condvar::new();
+    let routing: &[u32] = shard_of_chan.as_slice();
+    std::thread::scope(|scope| {
+        for (s, arena) in arenas.iter_mut().enumerate().take(n_shards) {
+            let shared = &shared;
+            let wakeup = &wakeup;
+            scope.spawn(move || {
+                run_shard_worker(
+                    s as u32,
+                    n_shards,
+                    routing,
+                    clustering,
+                    prog,
+                    index,
+                    cfg,
+                    combiner,
+                    arena,
+                    shared,
+                    wakeup,
+                );
+            });
+        }
+    });
+    let end = shared.into_inner().unwrap();
+    *inboxes = end.inboxes;
+
+    // Verdict, in deterministic order: first shard error, then deadlock
+    // (from the owner cursors), then the sent/received ledger.
+    if let Some(e) = arenas.iter_mut().take(n_shards).find_map(|a| a.error.take()) {
+        return Err(e);
+    }
+    let mut stuck: Vec<usize> = Vec::new();
+    for r in 0..n {
+        if arenas[shard_of_rank[r] as usize].scratch.cursor[r] < prog.actions[r].len() {
+            stuck.push(r);
+        }
+    }
+    if !stuck.is_empty() {
+        let cursor = |r: Rank| arenas[shard_of_rank[r] as usize].scratch.cursor[r];
+        return Err(deadlock_error(prog, stuck, &cursor));
+    }
+    let mut sent = 0u64;
+    let mut recvs = 0u64;
+    for arena in arenas.iter().take(n_shards) {
+        sent += arena.scratch.msgs_by_sep.iter().sum::<u64>();
+        recvs += arena.recvs;
+    }
+    if sent != recvs {
+        // Leftovers sit either in an owner's mailbox (delivered, never
+        // received) or still in a dead shard's inbox (never delivered).
+        let mut counts: BTreeMap<(Rank, Rank, u64), usize> = BTreeMap::new();
+        for arena in arenas.iter().take(n_shards) {
+            for (c, q) in arena.scratch.mailbox.iter().enumerate() {
+                match q.len() {
+                    0 => {}
+                    l => *counts.entry(index.key(c as u32)).or_insert(0) += l,
+                }
+            }
+        }
+        for q in inboxes.iter().take(n_shards) {
+            for (c, _, _) in q.iter() {
+                *counts.entry(index.key(*c)).or_insert(0) += 1;
+            }
+        }
+        return Err(undelivered_error(counts.into_iter().collect()));
+    }
+
+    // Merge per-shard partials in shard order. Sums and maxes are
+    // order-insensitive; the trace gets the canonical total-key sort, so
+    // every field is bitwise identical to the sequential result.
+    out.finish_us.clear();
+    out.finish_us.extend((0..n).map(|r| arenas[shard_of_rank[r] as usize].scratch.clocks[r]));
+    out.makespan_us = out.finish_us.iter().fold(0.0f64, |a, &b| a.max(b));
+    let mut msgs = SepCounts::new(n_levels);
+    let mut bytes = SepCounts::new(n_levels);
+    let mut combines = 0u64;
+    for arena in arenas.iter().take(n_shards) {
+        msgs.add_slice(&arena.scratch.msgs_by_sep);
+        bytes.add_slice(&arena.scratch.bytes_by_sep);
+        combines += arena.combines;
+    }
+    out.msgs_by_sep.clear();
+    out.msgs_by_sep.extend_from_slice(msgs.as_slice());
+    out.bytes_by_sep.clear();
+    out.bytes_by_sep.extend_from_slice(bytes.as_slice());
+    out.combines = combines;
+    let mut marks: BTreeMap<u64, f64> = BTreeMap::new();
+    for arena in arenas.iter().take(n_shards) {
+        for (&id, &t) in arena.marks.iter() {
+            let slot = marks.entry(id).or_insert(t);
+            if t > *slot {
+                *slot = t;
+            }
+        }
+    }
+    out.mark_times_us.clear();
+    out.mark_times_us.extend(marks);
+    out.trace.clear();
+    for arena in arenas.iter_mut().take(n_shards) {
+        out.trace.append(&mut arena.trace);
+    }
+    sort_trace(&mut out.trace);
+    for (r, slot) in regs.iter_mut().enumerate() {
+        *slot = std::mem::replace(&mut arenas[shard_of_rank[r] as usize].regs[r], R::empty());
+    }
+    Ok(regs)
+}
+
+/// Sharded full-payload execution against a precomputed [`ShardMap`].
+/// Results are **bitwise identical** to [`run_indexed_scratch`]'s;
+/// `threads <= 1` or a single-cluster map short-circuits to the
+/// sequential path (same arena the sequential entry points use). The
+/// combiner must be `Sync`: it is shared by every worker.
+#[allow(clippy::too_many_arguments)]
+pub fn run_indexed_scratch_sharded(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    shards: &ShardMap,
+    initial: Vec<Payload>,
+    cfg: &SimConfig,
+    combiner: &(dyn Combiner + Sync),
+    scratch: &ExecScratch,
+    threads: usize,
+) -> Result<SimResult> {
+    let mut out = SimResult::default();
+    run_indexed_scratch_sharded_into(
+        clustering,
+        prog,
+        index,
+        shards,
+        initial,
+        cfg,
+        combiner,
+        scratch,
+        threads,
+        &mut out,
+    )?;
+    Ok(out)
+}
+
+/// [`run_indexed_scratch_sharded`] writing into a caller-owned
+/// [`SimResult`]. On error, `out` is left partially written.
+#[allow(clippy::too_many_arguments)]
+pub fn run_indexed_scratch_sharded_into(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    shards: &ShardMap,
+    initial: Vec<Payload>,
+    cfg: &SimConfig,
+    combiner: &(dyn Combiner + Sync),
+    scratch: &ExecScratch,
+    threads: usize,
+    out: &mut SimResult,
+) -> Result<()> {
+    if threads <= 1 || shards.n_clusters() <= 1 {
+        let mut arena = scratch.full();
+        let regs = run_core(clustering, prog, index, initial, cfg, combiner, &mut arena, out)?;
+        out.payloads = regs;
+        return Ok(());
+    }
+    let mut pool = scratch.full_shards.lock().unwrap();
+    let regs = run_core_sharded(
+        clustering,
+        prog,
+        index,
+        shards,
+        initial,
+        cfg,
+        combiner,
+        &mut pool,
+        threads,
+        out,
+    )?;
+    out.payloads = regs;
+    Ok(())
+}
+
+/// Sharded ghost (timing-only) execution against a precomputed
+/// [`ShardMap`] — the parallel tuner probe. Bitwise identical to
+/// [`run_timing_indexed_scratch`]; warm runs against a shared
+/// [`ExecScratch`] allocate nothing in any shard.
+#[allow(clippy::too_many_arguments)]
+pub fn run_timing_indexed_scratch_sharded(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    shards: &ShardMap,
+    initial: Vec<GhostPayload>,
+    cfg: &SimConfig,
+    scratch: &ExecScratch,
+    threads: usize,
+) -> Result<SimResult> {
+    let mut out = SimResult::default();
+    run_timing_indexed_scratch_sharded_into(
+        clustering,
+        prog,
+        index,
+        shards,
+        initial,
+        cfg,
+        scratch,
+        threads,
+        &mut out,
+    )?;
+    Ok(out)
+}
+
+/// [`run_timing_indexed_scratch_sharded`] writing into a caller-owned
+/// [`SimResult`]. On error, `out` is left partially written.
+#[allow(clippy::too_many_arguments)]
+pub fn run_timing_indexed_scratch_sharded_into(
+    clustering: &Clustering,
+    prog: &Program,
+    index: &ChannelIndex,
+    shards: &ShardMap,
+    initial: Vec<GhostPayload>,
+    cfg: &SimConfig,
+    scratch: &ExecScratch,
+    threads: usize,
+    out: &mut SimResult,
+) -> Result<()> {
+    if threads <= 1 || shards.n_clusters() <= 1 {
+        let mut arena = scratch.ghost();
+        run_core(clustering, prog, index, initial, cfg, &NativeCombiner, &mut arena, out)?;
+    } else {
+        let mut pool = scratch.ghost_shards.lock().unwrap();
+        run_core_sharded(
+            clustering,
+            prog,
+            index,
+            shards,
+            initial,
+            cfg,
+            &NativeCombiner,
+            &mut pool,
+            threads,
+            out,
+        )?;
+    }
+    out.payloads.clear();
+    Ok(())
 }
 
 #[cfg(test)]
@@ -855,5 +1599,239 @@ mod tests {
         assert_eq!(r.trace.len(), 2);
         assert_eq!(r.trace[0].kind, TraceKind::SendStart);
         assert_eq!(r.trace[1].kind, TraceKind::RecvDone);
+    }
+
+    #[test]
+    fn sep_counts_stay_inline_then_spill() {
+        let mut c4 = SepCounts::new(4);
+        c4.add(0, 2);
+        c4.add_slice(&[1, 1, 1, 1]);
+        assert_eq!(c4.as_slice(), &[3, 1, 1, 1]);
+        assert_eq!(c4.len(), 4);
+        let mut c5 = SepCounts::new(5);
+        c5.add(4, 7);
+        c5.add_slice(&[1, 0, 0, 0, 1]);
+        assert_eq!(c5.as_slice(), &[1, 0, 0, 0, 8]);
+        assert!(!c5.is_empty());
+        assert!(SepCounts::new(0).is_empty());
+    }
+
+    /// 2 sites x 2 ranks running a miniature hybrid allreduce: local
+    /// reduce to each site leader, leaders exchange partials across the
+    /// boundary, broadcast down — with marks after each phase.
+    fn two_cluster() -> (Clustering, Program, Vec<Payload>) {
+        let c = Clustering::new(vec![vec![0; 4], vec![0, 0, 1, 1]]).unwrap();
+        let mut p = Program::new(4);
+        p.send(1, 0, 1, SendPart::All);
+        p.recv(0, 1, 1, Merge::Combine(ReduceOp::Sum));
+        p.send(3, 2, 2, SendPart::All);
+        p.recv(2, 3, 2, Merge::Combine(ReduceOp::Sum));
+        p.send(0, 2, 3, SendPart::All);
+        p.send(2, 0, 4, SendPart::All);
+        p.recv(0, 2, 4, Merge::Combine(ReduceOp::Sum));
+        p.recv(2, 0, 3, Merge::Combine(ReduceOp::Sum));
+        p.mark_all(0);
+        p.send(0, 1, 5, SendPart::All);
+        p.recv(1, 0, 5, Merge::Replace);
+        p.send(2, 3, 6, SendPart::All);
+        p.recv(3, 2, 6, Merge::Replace);
+        p.mark_all(1);
+        let init = (0..4).map(|r| Payload::single(0, vec![(r + 1) as f32; 8])).collect();
+        (c, p, init)
+    }
+
+    fn two_level_params() -> NetworkParams {
+        NetworkParams::new(vec![
+            LinkParams::new(500.0, 0.5).with_overheads(20.0, 10.0),
+            LinkParams::new(5.0, 10.0).with_overheads(1.0, 1.0),
+        ])
+        .with_combine_us_per_byte(0.25)
+    }
+
+    #[test]
+    fn sharded_matches_sequential_bitwise() {
+        let (c, p, init) = two_cluster();
+        let index = ChannelIndex::build(&p);
+        let shards = ShardMap::build(&c, &index);
+        assert_eq!(shards.n_clusters(), 2);
+        let cfg = SimConfig::new(two_level_params()).with_trace();
+        let seq = run_indexed(&c, &p, &index, init.clone(), &cfg, &NativeCombiner).unwrap();
+        let scratch = ExecScratch::new();
+        // More threads than clusters clamps to the cluster count.
+        for threads in [2usize, 3, 8] {
+            let mut out = SimResult::default();
+            run_indexed_scratch_sharded_into(
+                &c,
+                &p,
+                &index,
+                &shards,
+                init.clone(),
+                &cfg,
+                &NativeCombiner,
+                &scratch,
+                threads,
+                &mut out,
+            )
+            .unwrap();
+            assert_eq!(out.finish_us, seq.finish_us, "threads={threads}");
+            assert_eq!(out.makespan_us.to_bits(), seq.makespan_us.to_bits());
+            assert_eq!(out.msgs_by_sep, seq.msgs_by_sep);
+            assert_eq!(out.bytes_by_sep, seq.bytes_by_sep);
+            assert_eq!(out.combines, seq.combines);
+            assert_eq!(out.mark_times_us, seq.mark_times_us);
+            assert_eq!(out.payloads, seq.payloads);
+            assert_eq!(out.trace, seq.trace);
+        }
+        // Ghost mode through the sharded path: same timing, no payloads.
+        let ghost_init: Vec<GhostPayload> = init.iter().map(GhostPayload::of).collect();
+        let mut gout = SimResult::default();
+        run_timing_indexed_scratch_sharded_into(
+            &c,
+            &p,
+            &index,
+            &shards,
+            ghost_init,
+            &cfg,
+            &scratch,
+            2,
+            &mut gout,
+        )
+        .unwrap();
+        assert_eq!(gout.finish_us, seq.finish_us);
+        assert_eq!(gout.mark_times_us, seq.mark_times_us);
+        assert!(gout.payloads.is_empty());
+    }
+
+    #[test]
+    fn sharded_single_cluster_uses_sequential_path() {
+        let mut p = Program::new(2);
+        p.send(0, 1, 1, SendPart::All);
+        p.recv(1, 0, 1, Merge::Replace);
+        let index = ChannelIndex::build(&p);
+        let c = flat2();
+        let shards = ShardMap::build(&c, &index);
+        assert_eq!(shards.n_clusters(), 1);
+        let init = vec![Payload::single(0, vec![1.0; 25]), Payload::empty()];
+        let cfg = SimConfig::new(simple_params());
+        let seq = run(&c, &p, init.clone(), &cfg, &NativeCombiner).unwrap();
+        let scratch = ExecScratch::new();
+        let mut out = SimResult::default();
+        run_indexed_scratch_sharded_into(
+            &c,
+            &p,
+            &index,
+            &shards,
+            init,
+            &cfg,
+            &NativeCombiner,
+            &scratch,
+            4,
+            &mut out,
+        )
+        .unwrap();
+        assert_eq!(out.finish_us, seq.finish_us);
+        assert_eq!(out.payloads, seq.payloads);
+    }
+
+    #[test]
+    fn sharded_deadlock_and_undelivered_detected() {
+        let c = Clustering::new(vec![vec![0; 4], vec![0, 0, 1, 1]]).unwrap();
+        let cfg = SimConfig::new(simple_params());
+        let scratch = ExecScratch::new();
+        let mut out = SimResult::default();
+
+        // Cross-cluster recv/recv: both shards idle, no message in
+        // flight — the workers reach quiescence and the parent reports
+        // the stuck ranks exactly like the sequential engine.
+        let mut p = Program::new(4);
+        p.recv(0, 2, 1, Merge::Replace);
+        p.recv(2, 0, 1, Merge::Replace);
+        let index = ChannelIndex::build(&p);
+        let shards = ShardMap::build(&c, &index);
+        let res = run_indexed_scratch_sharded_into(
+            &c,
+            &p,
+            &index,
+            &shards,
+            vec![Payload::empty(); 4],
+            &cfg,
+            &NativeCombiner,
+            &scratch,
+            2,
+            &mut out,
+        );
+        match res {
+            Err(Error::Deadlock { stuck_ranks, .. }) => assert_eq!(stuck_ranks, vec![0, 2]),
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+
+        // A boundary send nobody receives: caught by the ledger whether
+        // the message died in the owner's mailbox or its inbox.
+        let mut p = Program::new(4);
+        p.send(0, 2, 9, SendPart::Empty);
+        let index = ChannelIndex::build(&p);
+        let shards = ShardMap::build(&c, &index);
+        let res = run_indexed_scratch_sharded_into(
+            &c,
+            &p,
+            &index,
+            &shards,
+            vec![Payload::empty(); 4],
+            &cfg,
+            &NativeCombiner,
+            &scratch,
+            2,
+            &mut out,
+        );
+        match res {
+            Err(Error::Sim(msg)) => {
+                assert!(msg.contains("1 undelivered message(s) on channel 0->2 tag 9"), "{msg}")
+            }
+            other => panic!("expected undelivered-message error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sharded_warm_reruns_are_stable_and_reuse_the_pool() {
+        let (c, p, init) = two_cluster();
+        let index = ChannelIndex::build(&p);
+        let shards = ShardMap::build(&c, &index);
+        let cfg = SimConfig::new(two_level_params());
+        let scratch = ExecScratch::new();
+        let ghost_init: Vec<GhostPayload> = init.iter().map(GhostPayload::of).collect();
+        let mut first = SimResult::default();
+        run_timing_indexed_scratch_sharded_into(
+            &c,
+            &p,
+            &index,
+            &shards,
+            ghost_init.clone(),
+            &cfg,
+            &scratch,
+            2,
+            &mut first,
+        )
+        .unwrap();
+        // Reuse the same result shell: every warm rerun must overwrite
+        // it to the identical values (exact-zero allocation deltas are
+        // enforced in the single-test counter binary).
+        let mut out = SimResult::default();
+        for _ in 0..3 {
+            run_timing_indexed_scratch_sharded_into(
+                &c,
+                &p,
+                &index,
+                &shards,
+                ghost_init.clone(),
+                &cfg,
+                &scratch,
+                2,
+                &mut out,
+            )
+            .unwrap();
+            assert_eq!(out.finish_us, first.finish_us);
+            assert_eq!(out.msgs_by_sep, first.msgs_by_sep);
+            assert_eq!(out.mark_times_us, first.mark_times_us);
+        }
     }
 }

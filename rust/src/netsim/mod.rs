@@ -5,18 +5,25 @@
 //! The engine runs in two register modes over one generic core: **full**
 //! ([`run`] — real f32 payloads, semantic verification) and **ghost**
 //! ([`run_timing`] — per-key lengths only, bit-identical timing with
-//! zero payload allocation). See [`payload::Register`].
+//! zero payload allocation). See [`payload::Register`]. Orthogonally, an
+//! [`ExecMode`] selects single-threaded execution or the cluster-sharded
+//! parallel engine (see [`shard`]) — both produce bitwise-identical
+//! [`SimResult`]s.
 
 pub mod engine;
 pub mod payload;
 pub mod program;
+pub mod shard;
 #[doc(hidden)]
 pub mod testing;
 
 pub use engine::{
-    run, run_indexed, run_indexed_scratch, run_timing, run_timing_indexed,
-    run_timing_indexed_scratch, EngineScratch, ExecScratch, SimConfig, SimResult, TraceEvent,
-    TraceKind,
+    run, run_indexed, run_indexed_scratch, run_indexed_scratch_into, run_indexed_scratch_sharded,
+    run_indexed_scratch_sharded_into, run_timing, run_timing_indexed, run_timing_indexed_scratch,
+    run_timing_indexed_scratch_into, run_timing_indexed_scratch_sharded,
+    run_timing_indexed_scratch_sharded_into, EngineScratch, ExecScratch, SepCounts, SimConfig,
+    SimResult, TraceEvent, TraceKind,
 };
 pub use payload::{Combiner, GhostPayload, GhostRun, NativeCombiner, Payload, ReduceOp, Register};
 pub use program::{Action, ChannelIndex, Merge, Program, SendPart};
+pub use shard::{ExecMode, ShardMap};

@@ -619,6 +619,17 @@ impl Register for GhostPayload {
     }
 }
 
+// The sharded engine moves registers between `std::thread` workers and
+// shares the native combiner across them; pin those auto traits at
+// compile time so a future `Rc`/`Cell` field fails here, not in a
+// distant `thread::scope` bound.
+const fn _assert_send_sync<T: Send + Sync>() {}
+const _: () = {
+    _assert_send_sync::<Payload>();
+    _assert_send_sync::<GhostPayload>();
+    _assert_send_sync::<NativeCombiner>();
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;

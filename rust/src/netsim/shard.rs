@@ -1,0 +1,257 @@
+//! Topology-keyed sharding of the execution engine.
+//!
+//! The paper's multilevel hierarchy is also a parallel-simulation
+//! opportunity: ranks of one top-level (level-1) cluster exchange the
+//! overwhelming majority of a collective's messages among themselves,
+//! and only tree edges that cross the WAN couple two clusters. The
+//! [`ShardMap`] precomputes that partition for a compiled program —
+//! which cluster owns each rank, which cluster owns each
+//! [`ChannelIndex`] channel (the receiver's), and which channels are
+//! **boundary** channels (sender and receiver in different clusters) —
+//! so the sharded engine (`netsim::engine::run_core_sharded`) can route
+//! every intra-cluster message without cross-thread coordination.
+//!
+//! Like the channel index, the map is a pure function of immutable
+//! inputs (clustering + program), so plans and schedules build it once
+//! and every warm run reuses it.
+//!
+//! ## Synchronization and determinism
+//!
+//! The classical conservative bound for this partition is the
+//! inter-cluster lookahead ([`ShardMap::lookahead_us`]): a shard may
+//! safely advance its local clock to `min(neighbor clocks) + L`, where
+//! `L` is the minimum inter-cluster link latency from
+//! [`NetworkParams`] — no cross-cluster message can arrive earlier than
+//! its sender's clock plus the WAN latency. The engine's programs are
+//! *blocking dataflow* (each rank is a sequential action list; a `Recv`
+//! waits for exactly one channel), which admits an even stronger rule:
+//! a shard can run arbitrarily far ahead and simply *block* on the
+//! first receive whose boundary channel is still empty. Every
+//! cross-shard dependency is an explicit message, never a clock
+//! comparison, so the blocking rule subsumes the lookahead horizon and
+//! is exact rather than conservative — and because every channel has a
+//! single sender whose sends occur in program order, per-channel FIFO
+//! delivery is deterministic regardless of worker interleaving. That is
+//! what makes sharded results **bitwise identical** to the sequential
+//! engine's.
+
+use crate::model::NetworkParams;
+use crate::netsim::payload::Rank;
+use crate::netsim::program::ChannelIndex;
+use crate::topology::Clustering;
+
+/// How an engine executes a program.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Single-threaded ready-queue loop (the differential oracle).
+    #[default]
+    Sequential,
+    /// Partition ranks by top-level cluster and run up to `threads`
+    /// shard workers on `std::thread`s. Results are bitwise identical
+    /// to [`ExecMode::Sequential`]; `threads <= 1` (or a single-cluster
+    /// topology) falls back to the sequential path.
+    Sharded { threads: usize },
+}
+
+impl ExecMode {
+    /// Short human-readable label for reports.
+    pub fn name(&self) -> String {
+        match self {
+            ExecMode::Sequential => "sequential".into(),
+            ExecMode::Sharded { threads } => format!("sharded:{threads}"),
+        }
+    }
+}
+
+/// The cluster partition of a compiled program: per-rank owner cluster,
+/// per-channel owner cluster (the receiver's), and the boundary-channel
+/// set. Built once per plan/schedule alongside the [`ChannelIndex`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    /// Dense level-1 cluster id of every rank (first-appearance order).
+    cluster_of_rank: Vec<u32>,
+    /// Owning cluster of every channel: the *receiver's* cluster, since
+    /// the receiver's mailbox slot and wait slot live on its shard.
+    owner_of_chan: Vec<u32>,
+    /// `boundary[c]` — sender and receiver clusters differ, so a send on
+    /// `c` must cross shards through the boundary mailboxes.
+    boundary: Vec<bool>,
+    n_clusters: usize,
+    n_boundary: usize,
+}
+
+impl ShardMap {
+    /// Partition `index`'s channels by `clustering`'s level-1 clusters.
+    /// Single-level clusterings (topology-unaware communicators) yield
+    /// one cluster — the sharded engine then degenerates to the
+    /// sequential fast path.
+    pub fn build(clustering: &Clustering, index: &ChannelIndex) -> ShardMap {
+        let n = clustering.n_ranks();
+        let mut cluster_of_rank = Vec::with_capacity(n);
+        let mut n_clusters = 0usize;
+        if clustering.n_levels() > 1 {
+            // Dense renumbering in first-appearance order: level-1 color
+            // ids are arbitrary, shard ids must be `0..n_clusters`.
+            let mut dense: std::collections::HashMap<u32, u32> = Default::default();
+            for r in 0..n {
+                let c = clustering.color(1, r);
+                let id = *dense.entry(c).or_insert_with(|| {
+                    let id = n_clusters as u32;
+                    n_clusters += 1;
+                    id
+                });
+                cluster_of_rank.push(id);
+            }
+        } else {
+            cluster_of_rank.resize(n, 0);
+            n_clusters = 1;
+        }
+        let n_chan = index.n_channels();
+        let mut owner_of_chan = Vec::with_capacity(n_chan);
+        let mut boundary = Vec::with_capacity(n_chan);
+        let mut n_boundary = 0usize;
+        for c in 0..n_chan {
+            let (from, to, _tag) = index.key(c as u32);
+            let cross = cluster_of_rank[from] != cluster_of_rank[to];
+            owner_of_chan.push(cluster_of_rank[to]);
+            boundary.push(cross);
+            n_boundary += cross as usize;
+        }
+        ShardMap { cluster_of_rank, owner_of_chan, boundary, n_clusters, n_boundary }
+    }
+
+    /// Number of level-1 clusters (= maximum useful shard count).
+    pub fn n_clusters(&self) -> usize {
+        self.n_clusters
+    }
+
+    /// Number of ranks this map was built for.
+    pub fn n_ranks(&self) -> usize {
+        self.cluster_of_rank.len()
+    }
+
+    /// Dense cluster id of rank `r`.
+    #[inline]
+    pub fn cluster_of(&self, r: Rank) -> usize {
+        self.cluster_of_rank[r] as usize
+    }
+
+    /// Owning cluster (the receiver's) of channel `c`.
+    #[inline]
+    pub fn chan_owner(&self, c: u32) -> usize {
+        self.owner_of_chan[c as usize] as usize
+    }
+
+    /// Whether channel `c` crosses clusters.
+    #[inline]
+    pub fn is_boundary(&self, c: u32) -> bool {
+        self.boundary[c as usize]
+    }
+
+    /// Number of boundary (cross-cluster) channels.
+    pub fn n_boundary(&self) -> usize {
+        self.n_boundary
+    }
+
+    /// Number of channels this map covers.
+    pub fn n_channels(&self) -> usize {
+        self.owner_of_chan.len()
+    }
+
+    /// Cheap shape guard, mirroring `ChannelIndex::matches`: was this
+    /// map built for an index with the same channel count?
+    pub fn matches(&self, index: &ChannelIndex) -> bool {
+        self.owner_of_chan.len() == index.n_channels()
+    }
+
+    /// The conservative lookahead horizon for this partition: the
+    /// minimum latency of any inter-cluster (separation-1) link. A shard
+    /// whose neighbors' clocks are at `t` can never observe a boundary
+    /// arrival before `t + lookahead`. The blocking-dataflow engine
+    /// (see the module docs) subsumes this bound exactly, but the
+    /// horizon remains the quantity that makes cluster-keyed sharding
+    /// profitable: WAN latency dwarfs intra-cluster event spacing.
+    pub fn lookahead_us(&self, params: &NetworkParams) -> f64 {
+        params.at_sep(1).latency_us
+    }
+
+    /// Approximate resident size (for plan footprint accounting).
+    pub fn approx_bytes(&self) -> usize {
+        self.cluster_of_rank.len() * 4
+            + self.owner_of_chan.len() * 4
+            + self.boundary.len()
+            + std::mem::size_of::<ShardMap>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{presets, LinkParams};
+    use crate::netsim::program::{Merge, Program, SendPart};
+
+    /// 2 sites x 2 ranks; channels: intra site 0, intra site 1, WAN.
+    fn two_site() -> (Clustering, Program) {
+        let c = Clustering::new(vec![vec![0; 4], vec![0, 0, 1, 1]]).unwrap();
+        let mut p = Program::new(4);
+        p.send(0, 1, 1, SendPart::Empty); // intra cluster 0
+        p.recv(1, 0, 1, Merge::Discard);
+        p.send(2, 3, 1, SendPart::Empty); // intra cluster 1
+        p.recv(3, 2, 1, Merge::Discard);
+        p.send(0, 2, 2, SendPart::Empty); // boundary
+        p.recv(2, 0, 2, Merge::Discard);
+        (c, p)
+    }
+
+    #[test]
+    fn partitions_ranks_and_channels() {
+        let (c, p) = two_site();
+        let index = ChannelIndex::build(&p);
+        let map = ShardMap::build(&c, &index);
+        assert_eq!(map.n_clusters(), 2);
+        assert_eq!(map.n_ranks(), 4);
+        assert_eq!(map.cluster_of(0), 0);
+        assert_eq!(map.cluster_of(3), 1);
+        assert_eq!(map.n_channels(), 3);
+        assert!(map.matches(&index));
+        // Channel owners follow the receiver.
+        for ch in 0..3u32 {
+            let (_, to, _) = index.key(ch);
+            assert_eq!(map.chan_owner(ch), map.cluster_of(to));
+        }
+        assert_eq!(map.n_boundary(), 1);
+        let wan: Vec<u32> = (0..3u32).filter(|&ch| map.is_boundary(ch)).collect();
+        assert_eq!(wan.len(), 1);
+        assert_eq!(index.key(wan[0]), (0, 2, 2));
+    }
+
+    #[test]
+    fn flat_clustering_is_one_cluster() {
+        let c = Clustering::flat(6);
+        let mut p = Program::new(6);
+        p.send(0, 5, 1, SendPart::Empty);
+        p.recv(5, 0, 1, Merge::Discard);
+        let map = ShardMap::build(&c, &ChannelIndex::build(&p));
+        assert_eq!(map.n_clusters(), 1);
+        assert_eq!(map.n_boundary(), 0);
+        assert!((0..6).all(|r| map.cluster_of(r) == 0));
+    }
+
+    #[test]
+    fn lookahead_is_the_wan_latency() {
+        let (c, p) = two_site();
+        let map = ShardMap::build(&c, &ChannelIndex::build(&p));
+        let params = presets::paper_grid();
+        assert_eq!(map.lookahead_us(&params), params.at_sep(1).latency_us);
+        let uniform =
+            crate::model::NetworkParams::new(vec![LinkParams::new(42.0, 1.0)]);
+        assert_eq!(map.lookahead_us(&uniform), 42.0);
+    }
+
+    #[test]
+    fn exec_mode_labels() {
+        assert_eq!(ExecMode::default(), ExecMode::Sequential);
+        assert_eq!(ExecMode::Sequential.name(), "sequential");
+        assert_eq!(ExecMode::Sharded { threads: 4 }.name(), "sharded:4");
+    }
+}

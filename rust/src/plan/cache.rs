@@ -261,9 +261,11 @@ impl PlanCache {
         };
         let meta = PlanMeta::compute(comm.clustering(), &tree, &program, key.op);
         // Resolve mailbox channels once, here on the cold path, so every
-        // warm execution of this plan is hash-free.
+        // warm execution of this plan is hash-free — and partition them
+        // by cluster so sharded execution is table-lookup-only too.
         let channels = crate::netsim::ChannelIndex::build(&program);
-        Ok(CollectivePlan { key, tree, program, meta, channels })
+        let shards = crate::netsim::ShardMap::build(comm.clustering(), &channels);
+        Ok(CollectivePlan { key, tree, program, meta, channels, shards })
     }
 }
 

@@ -35,7 +35,7 @@ pub use schedule::{Schedule, ScheduleBuilder, Segment};
 
 use crate::collectives::{extended, programs};
 use crate::error::Result;
-use crate::netsim::{Action, ChannelIndex, Program, ReduceOp, SendPart};
+use crate::netsim::{Action, ChannelIndex, Program, ReduceOp, SendPart, ShardMap};
 use crate::topology::{Clustering, Rank};
 use crate::tree::{LevelPolicy, Strategy, Tree};
 
@@ -372,6 +372,10 @@ pub struct CollectivePlan {
     /// `simulate_timing`) index a flat mailbox instead of hashing
     /// `(from, to, tag)` per message.
     pub channels: ChannelIndex,
+    /// Cluster partition of `channels`, precomputed like the index so the
+    /// sharded engine ([`crate::netsim::ExecMode::Sharded`]) routes warm
+    /// executions without rebuilding the rank/channel ownership tables.
+    pub shards: ShardMap,
 }
 
 impl CollectivePlan {
@@ -400,6 +404,7 @@ impl CollectivePlan {
         bytes += self.meta.msgs_by_sep.len() * std::mem::size_of::<u64>();
         bytes += self.meta.tree_edges_by_sep.len() * std::mem::size_of::<usize>();
         bytes += self.channels.approx_bytes();
+        bytes += self.shards.approx_bytes();
         bytes
     }
 }

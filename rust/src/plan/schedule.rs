@@ -31,7 +31,7 @@
 
 use super::{CollectivePlan, PlanMeta};
 use crate::error::{Error, Result};
-use crate::netsim::{ChannelIndex, Program, SimResult};
+use crate::netsim::{ChannelIndex, Program, ShardMap, SimResult};
 use crate::topology::{Clustering, Communicator};
 use crate::util::counters;
 
@@ -164,12 +164,14 @@ impl ScheduleBuilder {
         counters::count_schedule_build();
         let meta = aggregate_meta(self.clustering.n_levels(), &self.segments);
         let channels = ChannelIndex::build(&self.program);
+        let shards = ShardMap::build(&self.clustering, &channels);
         Ok(Schedule {
             comm_epoch: self.comm_epoch,
             program: self.program,
             segments: self.segments,
             meta,
             channels,
+            shards,
         })
     }
 }
@@ -211,6 +213,7 @@ pub struct Schedule {
     segments: Vec<Segment>,
     meta: PlanMeta,
     channels: ChannelIndex,
+    shards: ShardMap,
 }
 
 impl Schedule {
@@ -224,6 +227,12 @@ impl Schedule {
     /// engine's `*_indexed` entry points).
     pub fn channels(&self) -> &ChannelIndex {
         &self.channels
+    }
+
+    /// The fused program's cluster partition, for sharded execution
+    /// ([`crate::netsim::ExecMode::Sharded`]).
+    pub fn shards(&self) -> &ShardMap {
+        &self.shards
     }
 
     /// The appended segments, in execution order.

@@ -32,14 +32,14 @@ pub mod policy;
 pub mod table;
 
 pub use policy::{AutoTune, Fixed, OnMiss, PolicyProvider, Tuned};
-pub use table::{PolicyEntry, PolicyProvenance, PolicyTable, POLICY_TABLE_VERSION};
+pub use table::{PolicyEntry, PolicyProvenance, PolicyTable, SegmentEntry, POLICY_TABLE_VERSION};
 
 use crate::collectives::{request, CollectiveEngine, OpSpec, Outcome, ScheduleMemo};
 use crate::coordinator::tuning;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::model::NetworkParams;
 use crate::netsim::{
-    Combiner, ExecScratch, GhostPayload, NativeCombiner, Payload, ReduceOp, SimResult,
+    Combiner, ExecMode, ExecScratch, GhostPayload, NativeCombiner, Payload, ReduceOp, SimResult,
 };
 use crate::plan::{
     AlgoPolicy, AllreduceAlgo, CollectivePlan, OpKind, PlanCache, Schedule, ScheduleBuilder,
@@ -60,11 +60,16 @@ pub struct GridSession {
     strategy: Strategy,
     level_policy: LevelPolicy,
     combiner: Arc<dyn Combiner>,
+    /// The combiner again when it is known `Sync` (required to share it
+    /// across shard workers in full mode); `None` after
+    /// [`GridSession::with_combiner`].
+    sync_combiner: Option<Arc<dyn Combiner + Sync>>,
     cache: Arc<PlanCache>,
     scratch: Arc<ExecScratch>,
     schedules: ScheduleMemo,
     provider: Box<dyn PolicyProvider>,
     trace: bool,
+    exec_mode: ExecMode,
 }
 
 impl GridSession {
@@ -78,19 +83,47 @@ impl GridSession {
             strategy,
             level_policy: LevelPolicy::paper(),
             combiner: Arc::new(NativeCombiner),
+            sync_combiner: Some(Arc::new(NativeCombiner)),
             cache: Arc::new(PlanCache::new()),
             scratch: Arc::new(ExecScratch::new()),
             schedules: Arc::new(Mutex::new(HashMap::new())),
             provider: Box::new(Fixed(AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast))),
             trace: false,
+            exec_mode: ExecMode::Sequential,
         }
     }
 
     /// Route reduce arithmetic through a specific combiner (e.g. the
-    /// PJRT-backed `XlaCombiner`).
+    /// PJRT-backed `XlaCombiner`). Its thread-safety is unknown here, so
+    /// a sharded session's full-mode runs fall back to the sequential
+    /// engine; use [`GridSession::with_sync_combiner`] when the combiner
+    /// is `Sync`.
     pub fn with_combiner(mut self, combiner: Arc<dyn Combiner>) -> Self {
         self.combiner = combiner;
+        self.sync_combiner = None;
         self
+    }
+
+    /// Route reduce arithmetic through a thread-safe combiner that
+    /// sharded full-mode runs may share across workers.
+    pub fn with_sync_combiner(mut self, combiner: Arc<dyn Combiner + Sync>) -> Self {
+        self.combiner = combiner.clone();
+        self.sync_combiner = Some(combiner);
+        self
+    }
+
+    /// Select sequential or cluster-sharded execution for every run this
+    /// session performs. Sharded results are bitwise-identical to
+    /// sequential ones (see `netsim::shard`); single-cluster topologies
+    /// and `threads <= 1` degenerate to the sequential fast path.
+    pub fn with_exec_mode(mut self, mode: ExecMode) -> Self {
+        self.exec_mode = mode;
+        self
+    }
+
+    /// The session's execution mode.
+    pub fn exec_mode(&self) -> ExecMode {
+        self.exec_mode
     }
 
     /// Per-level tree shapes (default: the paper's flat-WAN policy).
@@ -201,11 +234,13 @@ impl GridSession {
             self.strategy,
             crate::collectives::EngineParts {
                 combiner: self.combiner.as_ref(),
+                combiner_sync: self.sync_combiner.as_deref(),
                 policy: self.level_policy.clone(),
                 cache: self.cache.clone(),
                 scratch: self.scratch.clone(),
                 schedules: self.schedules.clone(),
                 trace: self.trace,
+                exec_mode: self.exec_mode,
             },
         )
     }
@@ -232,6 +267,14 @@ impl GridSession {
     /// allocation, recycled scratch.
     pub fn simulate_timing(&self, request: &dyn OpSpec) -> Result<SimResult> {
         self.engine().simulate_timing(request)
+    }
+
+    /// Pooled ghost probe: [`GridSession::simulate_timing`] into a
+    /// caller-owned result buffer — a warm probe loop allocates nothing
+    /// for results either (≤ 4-level clusterings keep the per-separation
+    /// accounting inline).
+    pub fn simulate_timing_into(&self, request: &dyn OpSpec, out: &mut SimResult) -> Result<()> {
+        self.engine().simulate_timing_into(request, out)
     }
 
     /// Fetch (or build once) the cached plan for `(root, op, segments)`.
@@ -382,6 +425,22 @@ impl GridSession {
         self.run(&request::BcastSegmented { root, data, n_segments })
     }
 
+    /// Segmented broadcast with the chunk count **policy-resolved**: the
+    /// tuned count when the installed provider holds broadcast verdicts
+    /// covering this payload size ([`GridSession::tune_bcast_table`]),
+    /// otherwise one unsegmented send.
+    pub fn bcast_segmented_auto(&self, root: Rank, data: &[f32]) -> Result<Outcome> {
+        let segments = self.resolve_bcast_segments(data.len() * 4)?.unwrap_or(1);
+        self.bcast_segmented(root, data, segments)
+    }
+
+    /// The tuned segment count the installed provider holds for a
+    /// `bytes`-sized broadcast (`None` when it carries no broadcast
+    /// verdicts).
+    pub fn resolve_bcast_segments(&self, bytes: usize) -> Result<Option<usize>> {
+        self.provider.resolve_bcast_segments(self, bytes)
+    }
+
     /// Empirical segment-count tuning for the segmented broadcast.
     pub fn tune_bcast_segments(
         &self,
@@ -404,6 +463,55 @@ impl GridSession {
         let mut table = PolicyTable::new(self.provenance());
         for t in &tunings {
             table.record(t.op, t.bytes, t.best, t.best_us);
+        }
+        Ok((report, table))
+    }
+
+    /// Sweep pipelined-broadcast segment-count candidates for every
+    /// payload size via **ghost probes** (bitwise-identical timing to
+    /// the data path, zero payload allocation, one pooled result buffer)
+    /// and return a report table plus a provenance-stamped
+    /// [`PolicyTable`] whose verdicts
+    /// [`GridSession::bcast_segmented_auto`] consumes once installed.
+    pub fn tune_bcast_table(
+        &self,
+        root: Rank,
+        sizes: &[usize],
+        candidates: &[usize],
+    ) -> Result<(Table, PolicyTable)> {
+        if candidates.is_empty() {
+            return Err(Error::Comm("tune_bcast_table: empty candidate set".into()));
+        }
+        let mut report = Table::new(&["bytes", "best segments", "best time", "unsegmented"]);
+        let mut table = PolicyTable::new(self.provenance());
+        let mut probe = SimResult::default();
+        for &bytes in sizes {
+            let data = vec![0.0f32; bytes.div_ceil(4).max(1)];
+            let mut best = (1usize, f64::INFINITY);
+            let mut unsegmented = f64::INFINITY;
+            for &segments in candidates {
+                self.simulate_timing_into(
+                    &request::BcastSegmented { root, data: &data, n_segments: segments },
+                    &mut probe,
+                )?;
+                if segments <= 1 {
+                    unsegmented = probe.makespan_us;
+                }
+                if probe.makespan_us < best.1 {
+                    best = (segments, probe.makespan_us);
+                }
+            }
+            table.record_bcast_segments(bytes, best.0, best.1);
+            report.row(&[
+                crate::util::fmt::bytes(bytes),
+                best.0.to_string(),
+                crate::util::fmt::time_us(best.1),
+                if unsegmented.is_finite() {
+                    crate::util::fmt::time_us(unsegmented)
+                } else {
+                    "-".into()
+                },
+            ]);
         }
         Ok((report, table))
     }
@@ -518,5 +626,34 @@ mod tests {
         let err = GridSession::new(&comm, presets::paper_grid(), Strategy::Unaware)
             .with_policy_table(table);
         assert!(err.is_err(), "strategy mismatch must not install");
+    }
+
+    #[test]
+    fn bcast_segment_table_closes_the_bcast_tuning_loop() {
+        let s = session();
+        assert_eq!(s.resolve_bcast_segments(1 << 16).unwrap(), None, "default: no verdicts");
+        assert!(s.tune_bcast_table(0, &[4096], &[]).is_err(), "empty candidate set");
+        let (report, table) = s.tune_bcast_table(0, &[1 << 12, 1 << 16], &[1, 2, 4, 8]).unwrap();
+        assert_eq!(report.n_rows(), 2);
+        assert_eq!(table.bcast_segment_entries().len(), 2);
+        // The ghost verdict agrees bitwise with the engine's full-data
+        // sweep for the same candidates.
+        let data = vec![0.0f32; (1 << 16) / 4];
+        let (best, best_us) = s.tune_bcast_segments(0, &data, &[1, 2, 4, 8]).unwrap();
+        assert_eq!(table.best_segments_for(1 << 16), Some(best));
+        let entry = *table.bcast_segment_entries().iter().find(|e| e.bytes == 1 << 16).unwrap();
+        assert_eq!(entry.best_us.to_bits(), best_us.to_bits(), "ghost == full timing");
+        // Install and route: the auto path resolves the tuned count and
+        // delivers exactly what the explicit call delivers.
+        let comm = s.comm().clone();
+        let tuned = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+            .with_policy_table(table)
+            .unwrap();
+        assert_eq!(tuned.resolve_bcast_segments(1 << 16).unwrap(), Some(best));
+        let payload: Vec<f32> = (0..(1 << 16) / 4).map(|i| i as f32).collect();
+        let auto = tuned.bcast_segmented_auto(0, &payload).unwrap();
+        let explicit = tuned.bcast_segmented(0, &payload, best).unwrap();
+        assert_eq!(auto.sim.finish_us, explicit.sim.finish_us);
+        assert_eq!(auto.data, explicit.data);
     }
 }

@@ -34,6 +34,18 @@ pub trait PolicyProvider {
     /// session's (topology, network, strategy).
     fn resolve(&self, session: &GridSession, op: ReduceOp, bytes: usize) -> Result<AlgoPolicy>;
 
+    /// The tuned segment count for a pipelined broadcast of `bytes`, or
+    /// `None` when this provider holds no broadcast verdicts (the
+    /// session then falls back to an unsegmented send). Default: no
+    /// verdicts — only [`Tuned`] tables carry per-op broadcast entries.
+    fn resolve_bcast_segments(
+        &self,
+        _session: &GridSession,
+        _bytes: usize,
+    ) -> Result<Option<usize>> {
+        Ok(None)
+    }
+
     /// Display name for logs and reports.
     fn name(&self) -> String;
 }
@@ -72,6 +84,14 @@ impl PolicyProvider for Tuned {
                 op.name()
             ))
         })
+    }
+
+    fn resolve_bcast_segments(
+        &self,
+        _session: &GridSession,
+        bytes: usize,
+    ) -> Result<Option<usize>> {
+        Ok(self.0.best_segments_for(bytes))
     }
 
     fn name(&self) -> String {

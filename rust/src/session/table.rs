@@ -184,12 +184,26 @@ pub struct PolicyEntry {
     pub best_us: f64,
 }
 
-/// A persisted tuning table: provenance header + sorted verdict entries.
+/// One tuned pipelined-broadcast verdict: the winning
+/// `tune_bcast_segments` chunk count for a payload of `bytes`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SegmentEntry {
+    pub bytes: usize,
+    pub segments: usize,
+    /// Simulated makespan of the winner (us) — informational.
+    pub best_us: f64,
+}
+
+/// A persisted tuning table: provenance header + sorted verdict entries,
+/// one kind per tuned op family (allreduce composition policies,
+/// pipelined-broadcast segment counts).
 #[derive(Clone, Debug)]
 pub struct PolicyTable {
     provenance: PolicyProvenance,
     /// Sorted by `(op, bytes)`; at most one entry per key.
     entries: Vec<PolicyEntry>,
+    /// Sorted by `bytes`; at most one entry per size.
+    bcast_segments: Vec<SegmentEntry>,
 }
 
 fn op_rank(op: ReduceOp) -> u8 {
@@ -237,7 +251,7 @@ fn policy_from_token(token: &str) -> Result<AlgoPolicy> {
 impl PolicyTable {
     /// An empty table for the given tuning context.
     pub fn new(provenance: PolicyProvenance) -> Self {
-        PolicyTable { provenance, entries: Vec::new() }
+        PolicyTable { provenance, entries: Vec::new(), bcast_segments: Vec::new() }
     }
 
     pub fn provenance(&self) -> &PolicyProvenance {
@@ -274,6 +288,44 @@ impl PolicyTable {
             .binary_search_by_key(&key, |e| (op_rank(e.op), e.bytes))
             .ok()
             .map(|i| &self.entries[i])
+    }
+
+    /// Tuned pipelined-broadcast entries, sorted by payload size.
+    pub fn bcast_segment_entries(&self) -> &[SegmentEntry] {
+        &self.bcast_segments
+    }
+
+    /// Record (or replace) the tuned segment count for a `bytes`-sized
+    /// broadcast, keeping the entry list sorted.
+    pub fn record_bcast_segments(&mut self, bytes: usize, segments: usize, best_us: f64) {
+        let entry = SegmentEntry { bytes, segments, best_us };
+        match self.bcast_segments.binary_search_by_key(&bytes, |e| e.bytes) {
+            Ok(i) => self.bcast_segments[i] = entry,
+            Err(i) => self.bcast_segments.insert(i, entry),
+        }
+    }
+
+    /// The tuned segment count for a `bytes`-sized broadcast: the exact
+    /// entry if present, otherwise the entry whose tuned size is nearest
+    /// in log-space (ties break toward the smaller size). `None` when
+    /// the table holds no broadcast verdicts at all.
+    pub fn best_segments_for(&self, bytes: usize) -> Option<usize> {
+        let target = (bytes.max(1) as f64).ln();
+        let mut best: Option<(f64, usize)> = None;
+        for e in &self.bcast_segments {
+            if e.bytes == bytes {
+                return Some(e.segments);
+            }
+            let d = (target - (e.bytes.max(1) as f64).ln()).abs();
+            let closer = match best {
+                Some((bd, _)) => d < bd,
+                None => true,
+            };
+            if closer {
+                best = Some((d, e.segments));
+            }
+        }
+        best.map(|(_, s)| s)
     }
 
     /// Resolve `(op, bytes)` to a policy: the exact entry if present,
@@ -338,6 +390,17 @@ impl PolicyTable {
                 policy_to_token(e.policy),
                 Self::best_us_json(e.best_us),
                 if i + 1 < self.entries.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"bcast_segments\": [\n");
+        for (i, e) in self.bcast_segments.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"bytes\": {}, \"segments\": {}, \"best_us\": {}}}{}\n",
+                e.bytes,
+                e.segments,
+                Self::best_us_json(e.best_us),
+                if i + 1 < self.bcast_segments.len() { "," } else { "" }
             ));
         }
         s.push_str("  ]\n}\n");
@@ -424,6 +487,29 @@ impl PolicyTable {
                 })?,
             };
             table.record(op, bytes, policy, best_us);
+        }
+        // Absent in tables written before bcast tuning existed — treat a
+        // missing array as empty rather than rejecting old files.
+        if let Some(seg) = doc.get("bcast_segments") {
+            let items = seg.as_array().ok_or_else(|| {
+                Error::Config("policy table: 'bcast_segments' must be an array".into())
+            })?;
+            for item in items {
+                let bytes = u64_field(item, "bytes")? as usize;
+                let segments = u64_field(item, "segments")? as usize;
+                if segments == 0 {
+                    return Err(Error::Config(
+                        "policy table: 'segments' must be at least 1".into(),
+                    ));
+                }
+                let best_us = match field(item, "best_us")? {
+                    Value::Null => f64::NAN,
+                    v => v.as_f64().ok_or_else(|| {
+                        Error::Config("policy table: 'best_us' must be a number or null".into())
+                    })?,
+                };
+                table.record_bcast_segments(bytes, segments, best_us);
+            }
         }
         Ok(table)
     }
@@ -571,6 +657,46 @@ mod tests {
             let err = PolicyTable::from_json(&doc);
             assert!(err.is_err(), "{bad} must not load");
         }
+    }
+
+    #[test]
+    fn bcast_segment_entries_record_resolve_and_round_trip() {
+        let mut t = PolicyTable::new(provenance());
+        assert_eq!(t.best_segments_for(4096), None, "untuned table resolves nothing");
+        t.record_bcast_segments(1 << 20, 16, 250.0);
+        t.record_bcast_segments(4096, 2, 12.5);
+        assert_eq!(t.bcast_segment_entries()[0].bytes, 4096, "sorted by bytes");
+        t.record_bcast_segments(4096, 4, 10.0);
+        assert_eq!(t.bcast_segment_entries().len(), 2, "replaced, not duplicated");
+        // Exact, then nearest in log-space (64 KiB midpoint ties toward
+        // the smaller tuned size).
+        assert_eq!(t.best_segments_for(4096), Some(4));
+        assert_eq!(t.best_segments_for(8192), Some(4));
+        assert_eq!(t.best_segments_for(65536), Some(4));
+        assert_eq!(t.best_segments_for(1 << 19), Some(16));
+        let back = PolicyTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.bcast_segment_entries(), t.bcast_segment_entries());
+        assert_eq!(back.best_segments_for(1 << 20), Some(16));
+    }
+
+    #[test]
+    fn tables_without_bcast_segments_still_load() {
+        // Files written before broadcast tuning existed lack the array;
+        // they must keep loading (as "no broadcast verdicts").
+        let mut t = PolicyTable::new(provenance());
+        t.record(ReduceOp::Sum, 4096, AlgoPolicy::hybrid(1), 1.0);
+        t.record_bcast_segments(4096, 8, 3.0);
+        let json = t.to_json();
+        let start = json.find(",\n  \"bcast_segments\"").unwrap();
+        let end = json.rfind("  ]\n").unwrap() + 4;
+        let legacy = format!("{}\n{}", &json[..start], &json[end..]);
+        let back = PolicyTable::from_json(&legacy).unwrap();
+        assert_eq!(back.len(), 1);
+        assert!(back.bcast_segment_entries().is_empty());
+        assert!(
+            PolicyTable::from_json(&json.replace("\"segments\": 8", "\"segments\": 0")).is_err(),
+            "zero segment count must not load"
+        );
     }
 
     #[test]

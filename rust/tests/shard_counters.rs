@@ -1,0 +1,80 @@
+//! Acceptance test for the sharded engine's allocation discipline
+//! (ISSUE 6): after a cold prime, **warm sharded ghost probes are
+//! allocation-free** — zero tree builds, zero program compiles, zero
+//! plan-cache misses, zero payload allocations and zero scratch growth
+//! across every shard worker — and warm sharded data steps allocate
+//! only their own encoded inputs. The per-shard arenas, inbox rings and
+//! ownership tables all live in the session's recycled scratch pool.
+//!
+//! Single `#[test]` in its own binary: the counters are process-wide
+//! and exact-delta assertions must not race with other tests.
+
+use gridcollect::model::presets;
+use gridcollect::netsim::{ExecMode, NativeCombiner, ReduceOp};
+use gridcollect::session::GridSession;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::counters;
+use std::sync::Arc;
+
+#[test]
+fn warm_sharded_runs_build_and_allocate_nothing() {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let n = comm.size();
+    let elems = 65536 / 4;
+    let contributions: Vec<Vec<f32>> = (0..n).map(|r| vec![(r % 7) as f32; elems]).collect();
+
+    let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .with_sync_combiner(Arc::new(NativeCombiner))
+        .with_exec_mode(ExecMode::Sharded { threads: 4 });
+
+    // Prime: the first ghost step and first data step build the plan
+    // once and size both the sequential and per-shard arenas.
+    let before_cold = counters::snapshot();
+    session.allreduce_timing(ReduceOp::Sum, elems).unwrap();
+    let reference = session.allreduce(ReduceOp::Sum, &contributions).unwrap();
+    let cold = counters::snapshot().since(&before_cold);
+    assert!(cold.tree_builds >= 1, "cold steps build the plan");
+    assert!(cold.scratch_allocs >= 1, "cold steps size the shard arenas");
+
+    // Warm sharded ghost probes: pure engine runs, nothing allocated in
+    // any shard worker.
+    let before = counters::snapshot();
+    for _ in 0..5 {
+        let sim = session.allreduce_timing(ReduceOp::Sum, elems).unwrap();
+        assert!(sim.payloads.is_empty(), "ghost steps return no payloads");
+    }
+    let ghost = counters::snapshot().since(&before);
+    assert_eq!(ghost.tree_builds, 0, "warm sharded ghost steps build no trees");
+    assert_eq!(ghost.program_compiles, 0, "warm sharded ghost steps compile nothing");
+    assert_eq!(ghost.plan_cache_misses, 0, "plan served from cache");
+    assert_eq!(ghost.sim_runs, 5, "one engine run per step, not one per shard");
+    assert_eq!(ghost.payload_allocs, 0, "sharded ghost steps allocate no payload data");
+    assert_eq!(ghost.scratch_allocs, 0, "no shard arena grows once warm");
+    assert_eq!(ghost.schedule_builds, 0);
+
+    // Warm sharded data steps: the only allocations are the steps' own
+    // encoded input payloads, pinned outside the shard workers.
+    let before = counters::snapshot();
+    for _ in 0..5 {
+        let out = session.allreduce(ReduceOp::Sum, &contributions).unwrap();
+        assert_eq!(out.data, reference.data, "warm sharded results stay bitwise stable");
+    }
+    let data = counters::snapshot().since(&before);
+    assert_eq!(data.tree_builds, 0, "warm sharded data steps build no trees");
+    assert_eq!(data.program_compiles, 0, "warm sharded data steps compile nothing");
+    assert_eq!(data.plan_cache_misses, 0, "plan served from cache");
+    assert_eq!(data.sim_runs, 5, "one engine run per step");
+    assert_eq!(data.scratch_allocs, 0, "warm sharded data steps grow no scratch");
+    assert!(data.payload_allocs > 0, "data steps do materialize their inputs");
+
+    // The sharded session's answer is the sequential oracle's, bitwise.
+    let oracle = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let seq = oracle.allreduce(ReduceOp::Sum, &contributions).unwrap();
+    assert_eq!(seq.data, reference.data, "sharded == sequential, bitwise");
+    assert_eq!(
+        seq.sim.makespan_us.to_bits(),
+        reference.sim.makespan_us.to_bits(),
+        "sharded makespan == sequential makespan"
+    );
+}
