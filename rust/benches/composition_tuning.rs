@@ -1,0 +1,147 @@
+//! Bench E15 — per-level composition autotuning: beam-vs-oracle probe
+//! economy by clustering depth, the tuned-composition table on the
+//! paper grid, and sweep wall-clock cold (fresh engine) vs warm
+//! (long-lived plan cache).
+//!
+//! Run: `cargo bench --bench composition_tuning`
+//! Smoke (CI): `cargo bench --bench composition_tuning -- --smoke`
+//! Reports land in `target/bench-reports/` (md/csv + BENCH_*.json).
+
+use gridcollect::benchkit::{save_bench_json, save_report, section, Bench};
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::coordinator::tuning::{
+    composition_tuning_table, tune_allreduce_composition, CompositionTuning, SearchMode,
+    DEFAULT_BEAM_WIDTH,
+};
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::topology::{Communicator, GroupNode, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::fmt::Table;
+use std::time::Duration;
+
+/// 24 ranks over 4 separation levels (machine / LAN / site / WAN): the
+/// smallest topology where `SearchMode::Auto` resolves to beam search.
+fn deep_comm() -> Communicator {
+    let spec = TopologySpec::new(
+        "deep",
+        GroupNode::group(
+            "grid",
+            (0..2)
+                .map(|s| {
+                    GroupNode::group(
+                        format!("site{s}"),
+                        (0..2)
+                            .map(|l| {
+                                GroupNode::group(
+                                    format!("s{s}lan{l}"),
+                                    (0..2)
+                                        .map(|m| GroupNode::machine(format!("s{s}l{l}m{m}"), 3))
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        ),
+    )
+    .unwrap();
+    Communicator::world(&spec)
+}
+
+/// Sum-allreduce composition sweep at the bench's fixed 64 KiB point.
+fn tune(e: &CollectiveEngine, mode: SearchMode) -> CompositionTuning {
+    tune_allreduce_composition(e, ReduceOp::Sum, 65536, mode).unwrap()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let bench = if smoke {
+        // 1 sample: CI smoke mode only checks the harness runs end to end.
+        Bench { warmup_iters: 0, min_iters: 1, max_iters: 1, target: Duration::ZERO }
+    } else {
+        Bench::quick()
+    };
+    let sizes: Vec<usize> = if smoke { vec![65536] } else { vec![4096, 65536, 1 << 20] };
+
+    section("E15a — probe economy by clustering depth (64 KiB allreduce)");
+    let cases = [
+        ("paper_fig1", Communicator::world(&TopologySpec::paper_fig1()), presets::paper_grid()),
+        (
+            "paper_experiment",
+            Communicator::world(&TopologySpec::paper_experiment()),
+            presets::paper_grid(),
+        ),
+        ("deep-4level", deep_comm(), presets::deep_grid()),
+    ];
+    let mut economy = Table::new(&[
+        "topology", "levels", "space", "beam probes", "oracle probes", "beam best", "oracle best",
+    ]);
+    for (name, comm, params) in &cases {
+        let e = CollectiveEngine::new(comm, params.clone(), Strategy::Multilevel);
+        let beam = tune(&e, SearchMode::Beam { width: DEFAULT_BEAM_WIDTH });
+        let ex = tune(&e, SearchMode::Exhaustive);
+        if comm.clustering().n_levels() <= 3 {
+            // The differential-oracle contract, re-checked in bench context.
+            assert_eq!(beam.best, ex.best, "{name}: beam argmin == exhaustive argmin");
+        }
+        economy.row(&[
+            (*name).to_string(),
+            comm.clustering().n_levels().to_string(),
+            ex.exhaustive_space.to_string(),
+            beam.probes_issued.to_string(),
+            ex.probes_issued.to_string(),
+            beam.best.name(),
+            ex.best.name(),
+        ]);
+    }
+    print!("{}", economy.to_markdown());
+    save_report("composition_probe_economy", &economy);
+
+    section("E15b — tuned composition table (paper grid, ghost probes)");
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let engine = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let (table, tunings) =
+        composition_tuning_table(&engine, ReduceOp::Sum, &sizes, SearchMode::Auto).unwrap();
+    print!("{}", table.to_markdown());
+    assert_eq!(tunings.len(), sizes.len());
+    save_report("composition_tuned_table", &table);
+
+    section("E15c — sweep wall-clock: cold engine vs warm plan cache (64 KiB)");
+    let mut results = Vec::new();
+    tune(&engine, SearchMode::Exhaustive);
+    results.push(bench.run("sweep/warm/paper/exhaustive", || {
+        let t = tune(&engine, SearchMode::Exhaustive);
+        std::hint::black_box(t.best_us);
+    }));
+
+    let deep = deep_comm();
+    let warm = CollectiveEngine::new(&deep, presets::deep_grid(), Strategy::Multilevel);
+    tune(&warm, SearchMode::Auto);
+    results.push(bench.run("sweep/warm/deep/beam", || {
+        let t = tune(&warm, SearchMode::Auto);
+        std::hint::black_box(t.best_us);
+    }));
+    results.push(bench.run("sweep/warm/deep/exhaustive", || {
+        let t = tune(&warm, SearchMode::Exhaustive);
+        std::hint::black_box(t.best_us);
+    }));
+    results.push(bench.run("sweep/cold/deep/beam", || {
+        let e = CollectiveEngine::new(&deep, presets::deep_grid(), Strategy::Multilevel);
+        let t = tune(&e, SearchMode::Auto);
+        std::hint::black_box(t.best_us);
+    }));
+
+    let mut wall = Table::new(&["case", "median us", "mean us", "iters"]);
+    for r in &results {
+        wall.row(&[
+            r.name.clone(),
+            format!("{:.1}", r.median_us),
+            format!("{:.1}", r.mean_us),
+            r.iters.to_string(),
+        ]);
+    }
+    save_report("composition_tuning_wall", &wall);
+    save_bench_json("composition_tuning", &results);
+}

@@ -15,7 +15,7 @@ pub struct Args {
 pub const VALUE_FLAGS: &[&str] = &[
     "sizes", "size", "steps", "lr", "strategy", "root", "spec", "sites", "machines", "procs",
     "out", "artifacts", "seed", "shape", "params", "algo", "op", "boundary", "save",
-    "policy-file", "threads",
+    "policy-file", "threads", "chunks", "order", "mode",
 ];
 
 impl Args {
@@ -118,18 +118,23 @@ impl Args {
         }
     }
 
-    /// Parse `--algo` + `--boundary` into an allreduce [`AlgoPolicy`]:
-    /// `rb`/`rsag` are uniform compositions, `hybrid` pairs with
-    /// `--boundary N` (default 1 = reduce+bcast across the WAN only).
-    /// `--boundary` without `--algo hybrid` is rejected — silently
-    /// dropping it would run a different composition than requested.
+    /// Parse `--algo`, `--boundary`, `--chunks` and `--order` into an
+    /// allreduce [`AlgoPolicy`]: `rb`/`rsag` are uniform compositions,
+    /// `hybrid` pairs with `--boundary N` (default 1 = reduce+bcast
+    /// across the WAN only), and `comp:rb,halving,ring` assigns one
+    /// level algorithm per separation level, outermost (WAN) first, the
+    /// last entry repeating for any deeper levels. `--chunks K` splits
+    /// each delivery into `K` pipelined pieces per edge and `--order
+    /// fifo|scf` picks their schedule. Flags that would otherwise be
+    /// silently dropped are rejected instead: `--boundary` without
+    /// `--algo hybrid`, `--order` without `--chunks >= 2`.
     pub fn algo_policy(
         &self,
         default: crate::plan::AlgoPolicy,
     ) -> Result<crate::plan::AlgoPolicy> {
-        use crate::plan::{AlgoPolicy, AllreduceAlgo};
-        match self.get("algo") {
-            Some("hybrid") => Ok(AlgoPolicy::hybrid(self.get_usize("boundary", 1)?)),
+        use crate::plan::{AlgoPolicy, AllreduceAlgo, ChunkOrder, LevelAlgo, MAX_CHUNKS};
+        let structural = match self.get("algo") {
+            Some("hybrid") => AlgoPolicy::hybrid(self.get_usize("boundary", 1)?),
             algo => {
                 if self.get("boundary").is_some() {
                     return Err(Error::Cli(
@@ -137,34 +142,86 @@ impl Args {
                     ));
                 }
                 match algo {
-                    None => Ok(default),
+                    None => default,
                     Some("rb") | Some("reduce-bcast") | Some("reduce+bcast") => {
-                        Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast))
+                        AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)
                     }
                     Some("rsag") | Some("rs+ag") | Some("reduce-scatter-allgather") => {
-                        Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather))
+                        AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather)
                     }
-                    Some(other) => Err(Error::Cli(format!(
-                        "unknown allreduce algo '{other}' (use rb|rsag|hybrid)"
-                    ))),
+                    Some(spec) if spec.starts_with("comp:") => {
+                        let algos = spec["comp:".len()..]
+                            .split(',')
+                            .map(|name| {
+                                LevelAlgo::from_name(name.trim()).ok_or_else(|| {
+                                    Error::Cli(format!(
+                                        "unknown level algorithm '{name}' in '{spec}' \
+                                         (use rb|ring|halving|binomial|flat)"
+                                    ))
+                                })
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                        AlgoPolicy::composition(&algos)?
+                    }
+                    Some(other) => {
+                        return Err(Error::Cli(format!(
+                            "unknown allreduce algo '{other}' \
+                             (use rb|rsag|hybrid|comp:a,b,...)"
+                        )))
+                    }
                 }
             }
+        };
+        let chunks = self.get_usize("chunks", 1)?;
+        if chunks < 1 || chunks > MAX_CHUNKS {
+            return Err(Error::Cli(format!("--chunks must be in 1..={MAX_CHUNKS}, got {chunks}")));
         }
+        let order = match self.get("order") {
+            None => ChunkOrder::Fifo,
+            Some(name) => {
+                if chunks <= 1 {
+                    return Err(Error::Cli("--order only applies with --chunks >= 2".into()));
+                }
+                ChunkOrder::from_name(name).ok_or_else(|| {
+                    Error::Cli(format!("unknown chunk order '{name}' (use fifo|scf)"))
+                })?
+            }
+        };
+        Ok(structural.with_chunks(chunks).with_chunk_order(order))
     }
 
-    /// Parse `--algo`/`--boundary` into an *optional* policy pin:
-    /// `None` when neither flag is given (let the session's policy
-    /// provider resolve — the `--policy-file` path), `Some(policy)` when
-    /// the user pinned one explicitly. `--boundary` without
-    /// `--algo hybrid` is still rejected.
+    /// Parse `--algo`/`--boundary`/`--chunks`/`--order` into an
+    /// *optional* policy pin: `None` when none of the flags is given
+    /// (let the session's policy provider resolve — the `--policy-file`
+    /// path), `Some(policy)` when the user pinned one explicitly.
+    /// Invalid flag combinations are still rejected.
     pub fn algo_policy_opt(&self) -> Result<Option<crate::plan::AlgoPolicy>> {
-        if self.get("algo").is_none() && self.get("boundary").is_none() {
+        if ["algo", "boundary", "chunks", "order"].iter().all(|k| self.get(k).is_none()) {
             return Ok(None);
         }
         self.algo_policy(crate::plan::AlgoPolicy::uniform(
             crate::plan::AllreduceAlgo::ReduceBcast,
         ))
         .map(Some)
+    }
+
+    /// Parse `--mode auto|exhaustive|beam|beam:W` into a composition
+    /// tuner [`crate::coordinator::SearchMode`] (default `Auto`:
+    /// exhaustive up to 3 separation levels, beam search with the
+    /// default width beyond).
+    pub fn search_mode(&self) -> Result<crate::coordinator::SearchMode> {
+        use crate::coordinator::{SearchMode, DEFAULT_BEAM_WIDTH};
+        match self.get("mode") {
+            None | Some("auto") => Ok(SearchMode::Auto),
+            Some("exhaustive") | Some("full") => Ok(SearchMode::Exhaustive),
+            Some("beam") => Ok(SearchMode::Beam { width: DEFAULT_BEAM_WIDTH }),
+            Some(spec) => match spec.strip_prefix("beam:").map(str::parse::<usize>) {
+                Some(Ok(w)) if w >= 1 => Ok(SearchMode::Beam { width: w }),
+                _ => Err(Error::Cli(format!(
+                    "unknown search mode '{spec}' (use auto|exhaustive|beam|beam:W)"
+                ))),
+            },
+        }
     }
 
     /// Parse `--threads N` into an execution mode: absent or `<= 1`
@@ -308,6 +365,54 @@ mod tests {
         assert_eq!(a.get("save"), Some("t.json"));
         let a = args("train --policy-file t.json");
         assert_eq!(a.get("policy-file"), Some("t.json"));
+    }
+
+    #[test]
+    fn composition_algo_and_chunk_flags() {
+        use crate::plan::{AlgoPolicy, AllreduceAlgo, ChunkOrder, LevelAlgo};
+        let rb = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast);
+        assert_eq!(
+            args("--algo comp:rb,halving,ring").algo_policy(rb).unwrap(),
+            AlgoPolicy::composition(&[
+                LevelAlgo::ReduceBcast,
+                LevelAlgo::Halving,
+                LevelAlgo::RsAgRing
+            ])
+            .unwrap()
+        );
+        assert_eq!(
+            args("--algo comp:ring --chunks 4").algo_policy(rb).unwrap(),
+            AlgoPolicy::uniform_level(LevelAlgo::RsAgRing).with_chunks(4)
+        );
+        assert_eq!(
+            args("--algo rb --chunks 4 --order scf").algo_policy(rb).unwrap(),
+            rb.with_chunks(4).with_chunk_order(ChunkOrder::ShortestFirst)
+        );
+        // Chunking composes with the default policy too — and counts as
+        // an explicit pin for the optional form.
+        assert_eq!(args("--chunks 2").algo_policy(rb).unwrap(), rb.with_chunks(2));
+        assert_eq!(args("--chunks 2").algo_policy_opt().unwrap(), Some(rb.with_chunks(2)));
+        assert!(args("--algo comp:rb,bogus").algo_policy(rb).is_err());
+        assert!(args("--algo comp:").algo_policy(rb).is_err());
+        assert!(args("--chunks 0").algo_policy(rb).is_err());
+        assert!(args("--chunks 999").algo_policy(rb).is_err());
+        assert!(args("--order scf").algo_policy(rb).is_err(), "order without chunks");
+        assert!(args("--algo rb --chunks 4 --order bogus").algo_policy(rb).is_err());
+    }
+
+    #[test]
+    fn search_mode_names() {
+        use crate::coordinator::{SearchMode, DEFAULT_BEAM_WIDTH};
+        assert_eq!(args("").search_mode().unwrap(), SearchMode::Auto);
+        assert_eq!(args("--mode auto").search_mode().unwrap(), SearchMode::Auto);
+        assert_eq!(args("--mode exhaustive").search_mode().unwrap(), SearchMode::Exhaustive);
+        assert_eq!(
+            args("--mode beam").search_mode().unwrap(),
+            SearchMode::Beam { width: DEFAULT_BEAM_WIDTH }
+        );
+        assert_eq!(args("--mode beam:4").search_mode().unwrap(), SearchMode::Beam { width: 4 });
+        assert!(args("--mode beam:0").search_mode().is_err());
+        assert!(args("--mode bogus").search_mode().is_err());
     }
 
     #[test]

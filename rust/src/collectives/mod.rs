@@ -128,7 +128,7 @@ impl<'a> CollectiveEngine<'a> {
             exec_mode: ExecMode::Sequential,
             strategy,
             policy: LevelPolicy::paper(),
-            allreduce_policy: AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast),
+            allreduce_policy: AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
             cache: Arc::new(PlanCache::new()),
             scratch: Arc::new(ExecScratch::new()),
             schedules: Arc::new(Mutex::new(HashMap::new())),
@@ -154,7 +154,7 @@ impl<'a> CollectiveEngine<'a> {
             exec_mode: parts.exec_mode,
             strategy,
             policy: parts.policy,
-            allreduce_policy: AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast),
+            allreduce_policy: AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
             cache: parts.cache,
             scratch: parts.scratch,
             schedules: parts.schedules,

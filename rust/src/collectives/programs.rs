@@ -8,7 +8,7 @@
 
 use crate::error::Result;
 use crate::netsim::{Merge, Program, ReduceOp, SendPart};
-use crate::plan::AlgoPolicy;
+use crate::plan::{AlgoPolicy, ChunkOrder, LevelAlgo};
 use crate::topology::{Clustering, Rank};
 use crate::tree::Tree;
 use crate::util::counters::count_program_compile;
@@ -204,25 +204,91 @@ fn split_parts(
     }
 }
 
+/// How one tree edge delivers the reduced map in the down phase —
+/// derived per edge from the policy's [`LevelAlgo`] at the edge's
+/// separation level plus the chunked-pipelining knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EdgeStyle {
+    /// One full-map message at `tag` (reduce+bcast structure).
+    Full,
+    /// Subtree chunks at `tag` + complement at `tag + 1` (rs+ag ring).
+    Split,
+    /// The whole map in `k >= 2` interval pieces, piece `g` at
+    /// `tag + g`, emitted in the policy's chunk order (recursive-halving
+    /// / chunked-pipelining structure).
+    Pieces(usize),
+}
+
+fn edge_style(policy: AlgoPolicy, sep: usize, n_members: usize) -> EdgeStyle {
+    let chunks = policy.chunks_per_level();
+    let k = match policy.level_algo_at(sep) {
+        LevelAlgo::RsAgRing => return EdgeStyle::Split,
+        // Distance halving always splits the map at least in two.
+        LevelAlgo::Halving => chunks.max(2),
+        _ => chunks,
+    };
+    let k = k.min(n_members);
+    if k > 1 {
+        EdgeStyle::Pieces(k)
+    } else {
+        EdgeStyle::Full
+    }
+}
+
+/// The interval pieces a [`EdgeStyle::Pieces`] edge carries, shared by
+/// every edge of the plan with the same piece count. `parts[g]` is piece
+/// `g`'s key intervals; `order` is the emission schedule (FIFO index
+/// order or shortest piece first).
+struct PieceSet {
+    parts: Vec<SendPart>,
+    order: Vec<usize>,
+}
+
+fn piece_set(sorted_members: &[Rank], k: usize, order: ChunkOrder) -> PieceSet {
+    let m = sorted_members.len();
+    debug_assert!(k >= 2 && k <= m);
+    // Ceil-first contiguous partition of the member chunk keys: the
+    // first `m % k` pieces carry one extra key.
+    let base = m / k;
+    let extra = m % k;
+    let mut parts = Vec::with_capacity(k);
+    let mut sizes = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for g in 0..k {
+        let len = base + usize::from(g < extra);
+        parts.push(SendPart::Ranges(rank_runs(&sorted_members[start..start + len])));
+        sizes.push(len);
+        start += len;
+    }
+    let mut idx: Vec<usize> = (0..k).collect();
+    if order == ChunkOrder::ShortestFirst {
+        idx.sort_by_key(|&g| (sizes[g], g));
+    }
+    PieceSet { parts, order: idx }
+}
+
 /// Delivery (down) phase of the chunked multilevel allreduce, with a
-/// per-edge composition switch: tree edges at separation level
-/// `<= boundary_level` carry the whole reduced map in **one** full-map
-/// message (the reduce+bcast structure — 2 messages per edge across the
-/// whole allreduce); deeper edges split delivery into a subtree-chunks
-/// message and a complement message (the rs+ag structure — pipelined, 3
-/// messages per edge). `boundary_level == 0` is uniform rs+ag delivery;
-/// `usize::MAX` is uniform bcast delivery.
+/// per-edge composition switch driven by the policy's per-level
+/// vocabulary: full-structure levels carry the whole reduced map in
+/// **one** full-map message per edge (the reduce+bcast structure — 2
+/// messages per edge across the whole allreduce); [`LevelAlgo::RsAgRing`]
+/// levels split delivery into a subtree-chunks message and a complement
+/// message (the rs+ag structure — pipelined, 3 messages per edge);
+/// [`LevelAlgo::Halving`] levels (and any full-structure level under a
+/// `chunks_per_level() > 1` policy) deliver the map in `k` interval
+/// pieces per edge, streamed piece-by-piece through interior ranks in
+/// the policy's [`ChunkOrder`].
 ///
 /// Composed after the [`reduce`] up phase (see [`allreduce`]); every
 /// rank finishes holding every member's reduced chunk regardless of the
-/// boundary, so results are independent of the policy.
+/// policy, so results are independent of the composition.
 pub fn allreduce_down(
     tree: &Tree,
     clustering: &Clustering,
-    boundary_level: usize,
+    policy: AlgoPolicy,
     tag: u64,
 ) -> Result<Program> {
-    allreduce_down_with(tree, clustering, boundary_level, tag, ChunkParts::Intervals)
+    allreduce_down_with(tree, clustering, policy, tag, ChunkParts::Intervals)
 }
 
 /// [`allreduce_down`] with an explicit chunk-addressing mode (interval
@@ -230,7 +296,7 @@ pub fn allreduce_down(
 pub fn allreduce_down_with(
     tree: &Tree,
     clustering: &Clustering,
-    boundary_level: usize,
+    policy: AlgoPolicy,
     tag: u64,
     parts: ChunkParts,
 ) -> Result<Program> {
@@ -238,41 +304,114 @@ pub fn allreduce_down_with(
     let n = tree.capacity();
     let members: Vec<Rank> = tree.preorder();
     let member_runs = rank_runs(&members);
-    let full_map = |a: Rank, b: Rank| clustering.sep(a, b) <= boundary_level;
+    let mut sorted_members = members.clone();
+    sorted_members.sort_unstable();
+    let style_of = |a: Rank, b: Rank| edge_style(policy, clustering.sep(a, b), members.len());
+    // One piece table per distinct piece count in this plan (at most two:
+    // the chunk knob's k and halving's floor of 2).
+    let mut piece_sets: Vec<(usize, PieceSet)> = Vec::new();
+    for (pe, ce) in tree.edges() {
+        if let EdgeStyle::Pieces(k) = style_of(pe, ce) {
+            if !piece_sets.iter().any(|(kk, _)| *kk == k) {
+                piece_sets.push((k, piece_set(&sorted_members, k, policy.chunk_order())));
+            }
+        }
+    }
+    let pieces_for = |k: usize| -> &PieceSet {
+        &piece_sets.iter().find(|(kk, _)| *kk == k).expect("piece set precomputed").1
+    };
     let mut p = Program::new(n);
     for &r in &members {
-        // Full-map parent edges deliver everything right here; split
-        // parent edges deliver the subtree chunks (Replace drops the
-        // partial map kept from the up phase either way).
-        if let Some(parent) = tree.parent(r) {
-            p.recv(r, parent, tag, Merge::Replace);
+        let parent = tree.parent(r);
+        let parent_style = parent.map(|q| style_of(q, r));
+        // (A) The first parent delivery replaces the partial map kept
+        // from the up phase: the whole map (full edges), the subtree
+        // chunks (split edges), or the first scheduled piece (piece
+        // edges).
+        if let Some(q) = parent {
+            let first_tag = match parent_style {
+                Some(EdgeStyle::Pieces(k)) => tag + pieces_for(k).order[0] as u64,
+                _ => tag,
+            };
+            p.recv(r, q, first_tag, Merge::Replace);
         }
-        // Subtree chunks flow on to grandchildren before the complement
-        // arrives — the rs+ag pipelining, preserved per split edge. The
-        // complement part of each split edge is built here too (one
-        // subtree enumeration per edge) and sent after the Union recv.
-        let mut complements: Vec<SendPart> = Vec::new();
+        // After that first delivery, full- and split-delivered ranks
+        // (and the root) already hold their whole subtree's chunks;
+        // piece-delivered ranks hold one piece only, so their split-
+        // subtree forwarding must wait for phase (D).
+        let early_ok = !matches!(parent_style, Some(EdgeStyle::Pieces(_)));
+        // (B) Subtree chunks flow on to grandchildren before the
+        // complement arrives — the rs+ag pipelining, preserved per split
+        // edge. The complement part of each split edge is built here too
+        // (one subtree enumeration per edge) and sent after the
+        // completing recv.
+        let mut split_pending: Vec<(Option<SendPart>, SendPart)> = Vec::new();
         for &c in tree.children(r) {
-            if !full_map(r, c) {
+            if style_of(r, c) == EdgeStyle::Split {
                 let (sub, comp) = split_parts(tree, c, &members, &member_runs, parts);
-                p.send(r, c, tag, sub);
-                complements.push(comp);
+                if early_ok {
+                    p.send(r, c, tag, sub);
+                    split_pending.push((None, comp));
+                } else {
+                    split_pending.push((Some(sub), comp));
+                }
             }
         }
-        if let Some(parent) = tree.parent(r) {
-            if !full_map(parent, r) {
-                p.recv(r, parent, tag + 1, Merge::Union);
+        // (C) Complete the parent delivery. Split parents owe the
+        // complement; piece parents stream the remaining pieces, each
+        // forwarded to same-granularity children the moment it lands —
+        // the chunked-pipelining payoff.
+        match parent_style {
+            Some(EdgeStyle::Split) => {
+                let q = parent.expect("split parent");
+                p.recv(r, q, tag + 1, Merge::Union);
             }
+            Some(EdgeStyle::Pieces(k)) => {
+                let q = parent.expect("piece parent");
+                let set = pieces_for(k);
+                let matched: Vec<Rank> = tree
+                    .children(r)
+                    .iter()
+                    .copied()
+                    .filter(|&c| style_of(r, c) == EdgeStyle::Pieces(k))
+                    .collect();
+                for (j, &g) in set.order.iter().enumerate() {
+                    if j > 0 {
+                        p.recv(r, q, tag + g as u64, Merge::Union);
+                    }
+                    for &c in &matched {
+                        p.send(r, c, tag + g as u64, set.parts[g].clone());
+                    }
+                }
+            }
+            _ => {}
         }
-        // From here `r` holds every member's chunk: complement sends for
-        // split edges, single full-map sends for boundary edges.
-        let mut complements = complements.into_iter();
+        // (D) From here `r` holds every member's chunk: single full-map
+        // sends for full edges, deferred-subtree + complement sends for
+        // split edges, whole piece schedules for piece edges that could
+        // not be pipelined in (C).
+        let mut split_pending = split_pending.into_iter();
         for &c in tree.children(r) {
-            if full_map(r, c) {
-                p.send(r, c, tag, SendPart::All);
-            } else {
-                let comp = complements.next().expect("one complement per split child");
-                p.send(r, c, tag + 1, comp);
+            match style_of(r, c) {
+                EdgeStyle::Full => p.send(r, c, tag, SendPart::All),
+                EdgeStyle::Split => {
+                    let (sub, comp) =
+                        split_pending.next().expect("one entry per split child");
+                    if let Some(sub) = sub {
+                        p.send(r, c, tag, sub);
+                    }
+                    p.send(r, c, tag + 1, comp);
+                }
+                EdgeStyle::Pieces(k) => {
+                    let pipelined =
+                        matches!(parent_style, Some(EdgeStyle::Pieces(pk)) if pk == k);
+                    if !pipelined {
+                        let set = pieces_for(k);
+                        for &g in &set.order {
+                            p.send(r, c, tag + g as u64, set.parts[g].clone());
+                        }
+                    }
+                }
             }
         }
     }
@@ -291,18 +430,20 @@ pub fn allreduce_down_with(
 /// 1. **up**: full chunk maps combine toward the root in child order —
 ///    the exact [`reduce`] dataflow, so every policy's result is bitwise
 ///    identical (same tree, same combine association);
-/// 2. **down**: [`allreduce_down`] at the policy's boundary — full-map
-///    messages on the slow (WAN-side) edges, split subtree/complement
-///    messages below.
+/// 2. **down**: [`allreduce_down`] under the policy's per-level
+///    vocabulary — full-map messages on full-structure levels, split
+///    subtree/complement messages on ring levels, streamed interval
+///    pieces on halving/chunked levels.
 ///
 /// Total bytes per edge are policy-independent (the full vector crosses
 /// every edge once per direction either way); the policy only moves the
-/// split/full trade-off: splitting pipelines interior forwarding at the
-/// price of one extra message per edge — worth it on fast links, waste
-/// on high-latency WAN hops. The uniform reduce+bcast policy is *not*
-/// compiled here but composed from the cached reduce and bcast plans by
-/// `plan::PlanCache::build` (identical structure, zero recompiles); this
-/// function still accepts it for standalone use.
+/// structure trade-off: splitting or chunking pipelines interior
+/// forwarding at the price of extra messages per edge — worth it on
+/// fast links, waste on high-latency WAN hops. The plain uniform
+/// reduce+bcast policy is *not* compiled here but composed from the
+/// cached reduce and bcast plans by `plan::PlanCache::build` (identical
+/// structure, zero recompiles); this function still accepts it for
+/// standalone use.
 pub fn allreduce(
     tree: &Tree,
     clustering: &Clustering,
@@ -310,7 +451,7 @@ pub fn allreduce(
     policy: AlgoPolicy,
     tag: u64,
 ) -> Result<Program> {
-    compose_allreduce(tree, clustering, op, policy.boundary(), tag, ChunkParts::Intervals)
+    compose_allreduce(tree, clustering, op, policy, tag, ChunkParts::Intervals)
 }
 
 /// The one compose sequence both public allreduce compilers share:
@@ -319,12 +460,12 @@ fn compose_allreduce(
     tree: &Tree,
     clustering: &Clustering,
     op: ReduceOp,
-    boundary_level: usize,
+    policy: AlgoPolicy,
     tag: u64,
     parts: ChunkParts,
 ) -> Result<Program> {
     let mut p = reduce(tree, op, tag)?;
-    let down = allreduce_down_with(tree, clustering, boundary_level, tag, parts)?;
+    let down = allreduce_down_with(tree, clustering, policy, tag, parts)?;
     let delta = p.max_tag() + 1;
     p.then(down.rebased(delta))?;
     p.validate()?;
@@ -332,8 +473,7 @@ fn compose_allreduce(
 }
 
 /// All-reduce via reduce-scatter + allgather over one tree — uniform
-/// split delivery on every edge ([`AlgoPolicy::Uniform`] rs+ag),
-/// interval-addressed.
+/// split delivery on every edge (uniform rs+ag), interval-addressed.
 pub fn allreduce_rsag(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Program> {
     allreduce(
         tree,
@@ -352,7 +492,7 @@ pub fn allreduce_rsag_ranklist(tree: &Tree, op: ReduceOp, tag: u64) -> Result<Pr
         tree,
         &Clustering::flat(tree.capacity()),
         op,
-        0,
+        AlgoPolicy::uniform(crate::plan::AllreduceAlgo::ReduceScatterAllgather),
         tag,
         ChunkParts::RankList,
     )
@@ -643,6 +783,70 @@ mod tests {
         let hmax = allreduce(&t, &c, ReduceOp::Sum, AlgoPolicy::hybrid(9), 1).unwrap();
         let sim = sim_of(&hmax);
         assert_eq!(sim.msgs_by_sep.iter().sum::<u64>(), 2 * (n as u64 - 1));
+    }
+
+    #[test]
+    fn compositions_deliver_identically_to_the_uniform_reference() {
+        // Every per-level assignment and every chunking knob is a pure
+        // message-structure change: same tree, same combine association,
+        // so delivered payloads and total bytes match uniform rs+ag
+        // bitwise.
+        let spec = TopologySpec::paper_fig1();
+        let c = spec.clustering();
+        let t = crate::tree::build_multilevel(&c, 0, &crate::tree::LevelPolicy::paper()).unwrap();
+        let n = c.n_ranks();
+        let cfg = SimConfig::new(presets::paper_grid());
+        let reference = {
+            let p = allreduce_rsag(&t, ReduceOp::Sum, 9).unwrap();
+            run(&c, &p, chunked_init(n), &cfg, &NativeCombiner).unwrap()
+        };
+        let policies = [
+            AlgoPolicy::uniform_level(LevelAlgo::Halving),
+            AlgoPolicy::uniform(crate::plan::AllreduceAlgo::ReduceBcast).with_chunks(4),
+            AlgoPolicy::uniform(crate::plan::AllreduceAlgo::ReduceBcast)
+                .with_chunks(3)
+                .with_chunk_order(ChunkOrder::ShortestFirst),
+            AlgoPolicy::composition(&[
+                LevelAlgo::ReduceBcast,
+                LevelAlgo::Halving,
+                LevelAlgo::RsAgRing,
+            ])
+            .unwrap(),
+            AlgoPolicy::composition(&[LevelAlgo::RsAgRing, LevelAlgo::Halving])
+                .unwrap()
+                .with_chunks(2),
+        ];
+        for policy in policies {
+            let p = allreduce(&t, &c, ReduceOp::Sum, policy, 9).unwrap();
+            let r = run(&c, &p, chunked_init(n), &cfg, &NativeCombiner).unwrap();
+            assert_eq!(r.payloads, reference.payloads, "{}", policy.name());
+            assert_eq!(
+                r.bytes_by_sep.iter().sum::<u64>(),
+                reference.bytes_by_sep.iter().sum::<u64>(),
+                "{}",
+                policy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn piece_counts_follow_the_chunk_knob() {
+        let spec = TopologySpec::paper_fig1();
+        let c = spec.clustering();
+        let t = crate::tree::build_multilevel(&c, 0, &crate::tree::LevelPolicy::paper()).unwrap();
+        let n = c.n_ranks() as u64;
+        let cfg = SimConfig::new(presets::paper_grid());
+        let sim_of = |policy: AlgoPolicy| {
+            let p = allreduce(&t, &c, ReduceOp::Sum, policy, 1).unwrap();
+            run(&c, &p, chunked_init(n as usize), &cfg, &NativeCombiner).unwrap()
+        };
+        // Uniform halving: 1 up + 2 down pieces per edge.
+        let rh = sim_of(AlgoPolicy::uniform_level(LevelAlgo::Halving));
+        assert_eq!(rh.msgs_by_sep.iter().sum::<u64>(), 3 * (n - 1));
+        // Chunked reduce+bcast: 1 up + k down pieces per edge.
+        let r4 =
+            sim_of(AlgoPolicy::uniform(crate::plan::AllreduceAlgo::ReduceBcast).with_chunks(4));
+        assert_eq!(r4.msgs_by_sep.iter().sum::<u64>(), 5 * (n - 1));
     }
 
     #[test]

@@ -647,9 +647,32 @@ impl OpSpec for BcastSegmented<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::plan::{AllreduceAlgo, PlanCache, PlanKey, PLAN_BASE_TAG};
+    use crate::plan::{AllreduceAlgo, ChunkOrder, LevelAlgo, PlanCache, PlanKey, PLAN_BASE_TAG};
     use crate::topology::TopologySpec;
     use crate::tree::{LevelPolicy, Strategy};
+
+    /// The policy sweep shared by the equivalence tests: the three
+    /// legacy shapes plus per-level compositions exercising every
+    /// [`LevelAlgo`] and the chunked-pipelining knob.
+    fn sweep_policies() -> Vec<AlgoPolicy> {
+        vec![
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+            AlgoPolicy::hybrid(1),
+            AlgoPolicy::uniform_level(LevelAlgo::Halving),
+            AlgoPolicy::composition(&[
+                LevelAlgo::ReduceBcast,
+                LevelAlgo::Halving,
+                LevelAlgo::RsAgRing,
+            ])
+            .unwrap(),
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast).with_chunks(4),
+            AlgoPolicy::composition(&[LevelAlgo::RsAgRing, LevelAlgo::Halving])
+                .unwrap()
+                .with_chunks(2)
+                .with_chunk_order(ChunkOrder::ShortestFirst),
+        ]
+    }
 
     #[test]
     fn chunk_ranges_cover_and_partition() {
@@ -694,11 +717,7 @@ mod tests {
         // OpSpec::compile runs the standalone total compiler — the two
         // must stay action-identical for every policy.
         let contributions: Vec<Vec<f32>> = vec![vec![0.0; 4]; comm.size()];
-        for policy in [
-            AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
-            AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
-            AlgoPolicy::hybrid(1),
-        ] {
+        for policy in sweep_policies() {
             let spec = Allreduce {
                 root: 0,
                 op: ReduceOp::Sum,
@@ -745,11 +764,7 @@ mod tests {
             let full = spec.encode_init(&comm).unwrap();
             assert_eq!(spec.encode_ghost(&comm).unwrap(), shape_of(&full), "{}", spec.name());
         }
-        for policy in [
-            AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
-            AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
-            AlgoPolicy::hybrid(1),
-        ] {
+        for policy in sweep_policies() {
             let ar = Allreduce {
                 root: 0,
                 op: ReduceOp::Sum,

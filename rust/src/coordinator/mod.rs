@@ -14,6 +14,7 @@ pub use timing_app::{
 };
 pub use training::{train, StepLog, TrainConfig};
 pub use tuning::{
-    boundary_candidates, boundary_tuning_table, tune_allreduce_boundary, BoundaryProbe,
-    BoundaryTuning,
+    boundary_candidates, boundary_tuning_table, composition_tuning_table, tune_allreduce_boundary,
+    tune_allreduce_composition, BoundaryProbe, BoundaryTuning, CompositionTuning, SearchMode,
+    DEFAULT_BEAM_WIDTH,
 };

@@ -89,11 +89,10 @@ pub fn train(session: &GridSession, mlp: &MlpRuntime, cfg: &TrainConfig) -> Resu
     // payload-independent, so the hot path stays payload setup + one
     // simulation. Chunked policies (rs+ag, hybrid) run their single
     // fused plan through the generic request path instead.
-    let step_schedule = match policy {
-        AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast) => {
-            Some(engine.allreduce_schedule(0, ReduceOp::Sum)?)
-        }
-        _ => None,
+    let step_schedule = if policy == AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast) {
+        Some(engine.allreduce_schedule(0, ReduceOp::Sum)?)
+    } else {
+        None
     };
     let mut replicas: Vec<Vec<f32>> = vec![p0; n];
     let mut logs = Vec::with_capacity(cfg.steps);

@@ -21,10 +21,12 @@
 //! association), so the tuner's choice is purely a message-structure
 //! trade-off and needs no re-verification.
 
+use std::collections::HashMap;
+
 use crate::collectives::{request, CollectiveEngine};
 use crate::error::{Error, Result};
 use crate::netsim::{ReduceOp, SimResult};
-use crate::plan::{AlgoPolicy, AllreduceAlgo};
+use crate::plan::{AlgoPolicy, AllreduceAlgo, ChunkOrder, LevelAlgo, MAX_COMP_LEVELS};
 use crate::util::fmt::{self, Table};
 
 /// One candidate's ghost-probe measurement.
@@ -112,6 +114,230 @@ pub fn tune_allreduce_boundary(
     Ok(BoundaryTuning { bytes, op, probes, best: best_policy, best_us })
 }
 
+/// How [`tune_allreduce_composition`] explores the per-level assignment
+/// space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Exhaustive for clusterings of at most 3 separation levels
+    /// (27 structural assignments), beam search with
+    /// [`DEFAULT_BEAM_WIDTH`] beyond that.
+    Auto,
+    /// Probe every structural assignment (`|STRUCTURAL|^levels` probes).
+    /// The differential oracle for small level counts.
+    Exhaustive,
+    /// Level-by-level beam search (BEAN/TACOS-style): keep the `width`
+    /// best prefixes per level, extending each with every structural
+    /// algorithm. A prefix is scored by probing its canonical completion
+    /// (trailing levels repeat the last assigned algorithm — exactly
+    /// [`AlgoPolicy::composition`]'s fill rule), so prefix scores are
+    /// real makespans, not heuristics.
+    Beam { width: usize },
+}
+
+/// Default beam width. 9 = `|STRUCTURAL|^2`, which makes the beam carry
+/// every 2-level prefix — so for clusterings of <= 3 levels the beam
+/// degenerates to the exhaustive sweep and the two modes provably agree.
+pub const DEFAULT_BEAM_WIDTH: usize = 9;
+
+/// The composition tuner's verdict for one (topology, payload size)
+/// pair.
+#[derive(Clone, Debug)]
+pub struct CompositionTuning {
+    pub bytes: usize,
+    pub op: ReduceOp,
+    /// The mode that actually ran (`Auto` resolved).
+    pub mode: SearchMode,
+    /// Every *distinct* policy probed, in probe order (structural sweep
+    /// first, then the chunked refinement of the structural winner).
+    pub probes: Vec<BoundaryProbe>,
+    /// The makespan-minimizing policy over all probes (ties break by the
+    /// policy's `Ord`, so the verdict is deterministic).
+    pub best: AlgoPolicy,
+    pub best_us: f64,
+    /// Size of the full structural assignment space
+    /// (`|STRUCTURAL|^levels`) the sweep draws from.
+    pub exhaustive_space: usize,
+    /// Ghost probes actually issued (`== probes.len()`; strictly less
+    /// than `exhaustive_space + 4` under beam search on deep
+    /// clusterings).
+    pub probes_issued: usize,
+}
+
+/// Probe memo for one sweep: each distinct policy is simulated exactly
+/// once, so `probes.len()` is the true ghost-probe count however the
+/// search revisits candidates.
+struct ProbeSet<'a> {
+    engine: &'a CollectiveEngine<'a>,
+    op: ReduceOp,
+    elems: usize,
+    sim: SimResult,
+    probes: Vec<BoundaryProbe>,
+    scores: HashMap<AlgoPolicy, f64>,
+}
+
+impl ProbeSet<'_> {
+    fn score(&mut self, policy: AlgoPolicy) -> Result<f64> {
+        if let Some(&us) = self.scores.get(&policy) {
+            return Ok(us);
+        }
+        let probe = request::AllreduceProbe { root: 0, op: self.op, policy, elems: self.elems };
+        self.engine.simulate_timing_into(&probe, &mut self.sim)?;
+        self.probes.push(BoundaryProbe {
+            policy,
+            makespan_us: self.sim.makespan_us,
+            wan_msgs: self.sim.wan_messages(),
+            total_msgs: self.sim.msgs_by_sep.iter().sum(),
+        });
+        self.scores.insert(policy, self.sim.makespan_us);
+        Ok(self.sim.makespan_us)
+    }
+}
+
+/// Tune the full per-level composition for an allreduce of `bytes`:
+/// search the structural assignment space (every [`LevelAlgo`] in
+/// [`LevelAlgo::STRUCTURAL`] independently per separation level), then
+/// refine the structural winner with the chunked-pipelining knob
+/// (2 and 4 chunks per level, FIFO and shortest-chunk-first).
+///
+/// Probes are ghost probes exactly like [`tune_allreduce_boundary`]'s:
+/// on a warm plan cache a whole sweep is timing-only execution — zero
+/// tree builds, zero program compiles, zero payload allocations.
+pub fn tune_allreduce_composition(
+    engine: &CollectiveEngine,
+    op: ReduceOp,
+    bytes: usize,
+    mode: SearchMode,
+) -> Result<CompositionTuning> {
+    if bytes % 4 != 0 {
+        return Err(Error::Comm(format!(
+            "tune_allreduce_composition: payload size {bytes} is not f32-aligned"
+        )));
+    }
+    let levels = engine.comm().clustering().n_levels().clamp(1, MAX_COMP_LEVELS);
+    let mode = match mode {
+        SearchMode::Auto if levels <= 3 => SearchMode::Exhaustive,
+        SearchMode::Auto => SearchMode::Beam { width: DEFAULT_BEAM_WIDTH },
+        m => m,
+    };
+    let k = LevelAlgo::STRUCTURAL.len();
+    let exhaustive_space = k.pow(levels as u32);
+    let mut set = ProbeSet {
+        engine,
+        op,
+        elems: bytes / 4,
+        sim: SimResult::default(),
+        probes: Vec::new(),
+        scores: HashMap::new(),
+    };
+    match mode {
+        SearchMode::Exhaustive => {
+            // Mixed-radix odometer over the full assignment space.
+            for idx in 0..exhaustive_space {
+                let mut rest = idx;
+                let mut algos = Vec::with_capacity(levels);
+                for _ in 0..levels {
+                    algos.push(LevelAlgo::STRUCTURAL[rest % k]);
+                    rest /= k;
+                }
+                set.score(AlgoPolicy::composition(&algos)?)?;
+            }
+        }
+        SearchMode::Beam { width } => {
+            let width = width.max(1);
+            let mut frontier: Vec<Vec<LevelAlgo>> =
+                LevelAlgo::STRUCTURAL.iter().map(|&a| vec![a]).collect();
+            for depth in 1..=levels {
+                let mut scored = Vec::with_capacity(frontier.len());
+                for prefix in frontier.drain(..) {
+                    let policy = AlgoPolicy::composition(&prefix)?;
+                    let us = set.score(policy)?;
+                    scored.push((us, policy, prefix));
+                }
+                scored.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+                scored.truncate(width);
+                if depth == levels {
+                    break;
+                }
+                frontier = scored
+                    .iter()
+                    .flat_map(|(_, _, prefix)| {
+                        LevelAlgo::STRUCTURAL.iter().map(|&a| {
+                            let mut next = prefix.clone();
+                            next.push(a);
+                            next
+                        })
+                    })
+                    .collect();
+            }
+        }
+        SearchMode::Auto => unreachable!("Auto resolved above"),
+    }
+    let structural_best = set
+        .probes
+        .iter()
+        .min_by(|a, b| {
+            a.makespan_us.total_cmp(&b.makespan_us).then_with(|| a.policy.cmp(&b.policy))
+        })
+        .expect("structural sweep is never empty")
+        .policy;
+    // Chunked refinement of the structural winner: both modes run the
+    // identical pass, so beam-vs-exhaustive agreement is decided purely
+    // by the structural sweep.
+    for chunks in [2usize, 4] {
+        for order in [ChunkOrder::Fifo, ChunkOrder::ShortestFirst] {
+            set.score(structural_best.with_chunks(chunks).with_chunk_order(order))?;
+        }
+    }
+    let best = set
+        .probes
+        .iter()
+        .min_by(|a, b| {
+            a.makespan_us.total_cmp(&b.makespan_us).then_with(|| a.policy.cmp(&b.policy))
+        })
+        .expect("probe set is never empty");
+    let (best_policy, best_us) = (best.policy, best.makespan_us);
+    let probes_issued = set.probes.len();
+    Ok(CompositionTuning {
+        bytes,
+        op,
+        mode,
+        probes: set.probes,
+        best: best_policy,
+        best_us,
+        exhaustive_space,
+        probes_issued,
+    })
+}
+
+/// The composition-tuner analogue of [`boundary_tuning_table`]: every
+/// probed policy × every payload size, with the per-size winner marked.
+pub fn composition_tuning_table(
+    engine: &CollectiveEngine,
+    op: ReduceOp,
+    sizes: &[usize],
+    mode: SearchMode,
+) -> Result<(Table, Vec<CompositionTuning>)> {
+    let mut t = Table::new(&[
+        "msg size", "policy", "makespan", "WAN msgs", "total msgs", "winner",
+    ]);
+    let mut tunings = Vec::with_capacity(sizes.len());
+    for &bytes in sizes {
+        let tuning = tune_allreduce_composition(engine, op, bytes, mode)?;
+        for p in &tuning.probes {
+            t.row(&[
+                fmt::bytes(bytes),
+                p.policy.name(),
+                fmt::time_us(p.makespan_us),
+                p.wan_msgs.to_string(),
+                p.total_msgs.to_string(),
+                if p.policy == tuning.best { "<- best".into() } else { String::new() },
+            ]);
+        }
+        tunings.push(tuning);
+    }
+    Ok((t, tunings))
+}
+
 /// E14 — the winning-policy table: every candidate × every payload size,
 /// with the per-size winner marked. Returns the table plus the raw
 /// tunings (the policy table callers would install).
@@ -171,7 +397,7 @@ mod tests {
             assert_eq!(c[0], AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast));
             assert_eq!(c[1], AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather));
             assert!(
-                !c.iter().any(|p| matches!(p, AlgoPolicy::Hybrid { .. })),
+                !c.iter().any(|p| p.hybrid_boundary().is_some()),
                 "no hybrid candidates on a degenerate clustering"
             );
         }
@@ -181,7 +407,7 @@ mod tests {
             let c = boundary_candidates(n_levels);
             for (i, a) in c.iter().enumerate() {
                 assert!(!c[i + 1..].contains(a), "duplicate candidate {a:?}");
-                if let AlgoPolicy::Hybrid { boundary_level } = *a {
+                if let Some(boundary_level) = a.hybrid_boundary() {
                     assert!(
                         (1..n_levels).contains(&boundary_level),
                         "hybrid({boundary_level}) is not interior for {n_levels} levels"
@@ -213,6 +439,112 @@ mod tests {
         assert!(t.probes.iter().any(|p| p.policy == t.best));
         // Misaligned sizes are rejected, not rounded.
         assert!(tune_allreduce_boundary(&e, ReduceOp::Sum, 1001).is_err());
+    }
+
+    /// 24 ranks over 4 separation levels (machine / LAN / site / WAN):
+    /// the smallest topology where beam search actually prunes.
+    fn deep_comm() -> Communicator {
+        use crate::topology::GroupNode;
+        let spec = TopologySpec::new(
+            "deep",
+            GroupNode::group(
+                "grid",
+                (0..2)
+                    .map(|s| {
+                        GroupNode::group(
+                            format!("site{s}"),
+                            (0..2)
+                                .map(|l| {
+                                    GroupNode::group(
+                                        format!("s{s}lan{l}"),
+                                        (0..2)
+                                            .map(|m| {
+                                                GroupNode::machine(format!("s{s}l{l}m{m}"), 3)
+                                            })
+                                            .collect(),
+                                    )
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        )
+        .unwrap();
+        Communicator::world(&spec)
+    }
+
+    #[test]
+    fn composition_tuner_covers_the_space_and_refines_chunks() {
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        let t = tune_allreduce_composition(&e, ReduceOp::Sum, 65536, SearchMode::Auto).unwrap();
+        assert_eq!(t.mode, SearchMode::Exhaustive, "Auto resolves to exhaustive at 3 levels");
+        assert_eq!(t.exhaustive_space, 27, "3 structural algos over 3 levels");
+        assert_eq!(t.probes_issued, t.exhaustive_space + 4, "full space + chunk refinement");
+        assert_eq!(t.probes.len(), t.probes_issued, "every probe is distinct");
+        let min = t.probes.iter().map(|p| p.makespan_us).fold(f64::INFINITY, f64::min);
+        assert_eq!(t.best_us, min, "winner is the sweep minimum");
+        assert!(
+            t.probes.iter().any(|p| p.policy.chunks_per_level() == 4),
+            "chunk refinement probed the pipelined variants"
+        );
+        // The boundary tuner's candidates are a subset of the structural
+        // space, so the composition winner can never be worse.
+        let b = tune_allreduce_boundary(&e, ReduceOp::Sum, 65536).unwrap();
+        assert!(t.best_us <= b.best_us, "{} vs boundary {}", t.best_us, b.best_us);
+        // Misaligned sizes are rejected, not rounded.
+        assert!(tune_allreduce_composition(&e, ReduceOp::Sum, 1001, SearchMode::Auto).is_err());
+    }
+
+    #[test]
+    fn beam_matches_exhaustive_on_small_spaces() {
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        for bytes in [4096usize, 65536, 1 << 20] {
+            let ex =
+                tune_allreduce_composition(&e, ReduceOp::Sum, bytes, SearchMode::Exhaustive)
+                    .unwrap();
+            let width = DEFAULT_BEAM_WIDTH;
+            let beam =
+                tune_allreduce_composition(&e, ReduceOp::Sum, bytes, SearchMode::Beam { width })
+                    .unwrap();
+            // Width 9 carries every 2-level prefix, so on a <= 3-level
+            // clustering the beam probes the whole space and the argmin
+            // must coincide with the oracle's.
+            assert_eq!(beam.probes_issued, ex.probes_issued, "{bytes}B: beam == exhaustive");
+            assert_eq!(beam.best, ex.best, "{bytes}B: same argmin");
+            assert_eq!(beam.best_us, ex.best_us, "{bytes}B: same makespan");
+        }
+    }
+
+    #[test]
+    fn beam_prunes_the_deep_assignment_space() {
+        let comm = deep_comm();
+        assert_eq!(comm.clustering().n_levels(), 4);
+        let e = CollectiveEngine::new(&comm, presets::deep_grid(), Strategy::Multilevel);
+        let ex =
+            tune_allreduce_composition(&e, ReduceOp::Sum, 16384, SearchMode::Exhaustive).unwrap();
+        let beam = tune_allreduce_composition(&e, ReduceOp::Sum, 16384, SearchMode::Auto).unwrap();
+        assert_eq!(beam.mode, SearchMode::Beam { width: DEFAULT_BEAM_WIDTH });
+        assert_eq!(ex.exhaustive_space, 81, "3^4 structural assignments");
+        assert_eq!(ex.probes_issued, 81 + 4);
+        assert_eq!(beam.probes_issued, 45 + 4, "3+6+18+18 structural probes + 4 chunked");
+        assert!(beam.probes_issued < ex.probes_issued, "beam must prune on deep spaces");
+        // The beam explores a subset, so it can never beat the oracle.
+        assert!(beam.best_us >= ex.best_us);
+    }
+
+    #[test]
+    fn composition_table_rows_and_winner_marks() {
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        let sizes = [4096usize, 65536];
+        let (table, tunings) =
+            composition_tuning_table(&e, ReduceOp::Sum, &sizes, SearchMode::Auto).unwrap();
+        assert_eq!(table.n_rows(), tunings.iter().map(|t| t.probes_issued).sum::<usize>());
+        let md = table.to_markdown();
+        assert_eq!(md.matches("<- best").count(), sizes.len(), "one winner per size");
     }
 
     #[test]

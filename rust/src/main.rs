@@ -11,13 +11,14 @@
 //! gridcollect suite [--size 64k] [--xla]           # E8: 6 ops x 4 strategies
 //! gridcollect allreduce [--size 64k] [--op sum] [--boundary 1] [--policy-file t.json] [--xla]
 //! gridcollect tune-boundary [--sizes 4k,64k,1m] [--op sum] [--strategy s] [--spec fig1|experiment|SxMxP] [--save t.json] [--threads N]
+//! gridcollect tune-composition [--sizes 4k,64k,1m] [--op sum] [--mode auto|exhaustive|beam:W] [--strategy s] [--spec ...] [--save t.json] [--threads N]
 //! gridcollect cost-model [--size 64k]              # E2: §4 analytic vs sim
 //! gridcollect ablation [--sites 8] [--size 64k]    # E9: WAN tree shapes
 //! gridcollect scaling [--size 64k]                 # E10: site-count scaling
 //! gridcollect roots [--size 64k]                   # E7: root sensitivity
 //! gridcollect tree [--spec fig1|experiment] [--root 0]   # E3-E5: tree shapes
 //! gridcollect rsl <script.rsl> [--root 0]          # E6: RSL front-end
-//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--spec fig1|experiment|SxMxP] [--algo rb|rsag|hybrid] [--boundary 1] [--policy-file t.json] [--xla] [--threads N]
+//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--spec fig1|experiment|SxMxP] [--algo rb|rsag|hybrid|comp:a,b,...] [--boundary 1] [--chunks K] [--order fifo|scf] [--policy-file t.json] [--xla] [--threads N]
 //! gridcollect gantt [--size 64k] [--strategy s] [--params file.net]
 //! gridcollect calibrate [--out params.net]        # measure combine us/B
 //! ```
@@ -26,27 +27,30 @@
 //! combine kernels via PJRT (requires `make artifacts`); default is the
 //! native combiner.
 //!
-//! The tuner → workload loop: `tune-boundary --save t.json` persists the
-//! winning `AlgoPolicy` per payload size (with provenance); `train` /
-//! `allreduce` consume it via `--policy-file t.json` and transparently
-//! run the tuned composition. All of `tune-boundary`/`train`/`allreduce`
-//! default to the paper's experiment topology, so the two-command loop
-//! works as-is; tune and consume with the same `--spec`/`--strategy`
-//! otherwise — a provenance mismatch is a hard error by design.
+//! The tuner → workload loop: `tune-boundary --save t.json` (two-regime
+//! hybrids) or `tune-composition --save t.json` (the full per-level
+//! assignment space — exhaustive on shallow grids, beam search on deep
+//! ones) persists the winning `AlgoPolicy` per payload size (with
+//! provenance); `train` / `allreduce` consume it via `--policy-file
+//! t.json` and transparently run the tuned composition. All of the
+//! tuners/`train`/`allreduce` default to the paper's experiment
+//! topology, so the two-command loop works as-is; tune and consume with
+//! the same `--spec`/`--strategy` otherwise — a provenance mismatch is a
+//! hard error by design.
 
 use gridcollect::cli::Args;
-use gridcollect::coordinator::{experiment, timing_app, training};
+use gridcollect::coordinator::{experiment, timing_app, training, tuning};
 use gridcollect::error::{Error, Result};
 use gridcollect::model::presets;
 use gridcollect::netsim::{Combiner, NativeCombiner, ReduceOp};
 use gridcollect::runtime::{calibrate_us_per_byte, MlpRuntime, Runtime, XlaCombiner};
-use gridcollect::session::GridSession;
+use gridcollect::session::{GridSession, PolicyTable};
 use gridcollect::topology::{rsl, Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
 use std::sync::Arc;
 
-const USAGE: &str = "usage: gridcollect <fig8|suite|allreduce|tune-boundary|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
+const USAGE: &str = "usage: gridcollect <fig8|suite|allreduce|tune-boundary|tune-composition|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
 run `gridcollect help` or see rust/src/main.rs for flag details";
 
 fn main() {
@@ -199,6 +203,55 @@ fn run(raw: Vec<String>) -> Result<()> {
                 // actually matches this table's provenance; train and
                 // allreduce both default to the experiment spec, and
                 // both accept --spec to line up with a tuned table.
+                let spec_name = args.get_or("spec", "experiment");
+                let consumer = if spec_name == "experiment" {
+                    format!("`gridcollect train|allreduce --policy-file {path}`")
+                } else {
+                    format!("`gridcollect train --spec {spec_name} --policy-file {path}`")
+                };
+                println!(
+                    "\nwrote {path}: {} tuned entries (params hash {:#018x}); consume with \
+                     {consumer} (same --spec/--strategy — provenance is enforced)",
+                    policy_table.len(),
+                    policy_table.provenance().params_hash
+                );
+            }
+        }
+        "tune-composition" => {
+            let sizes = args.sizes(&[4096, 65536, 1 << 20])?;
+            let op = args.reduce_op(ReduceOp::Sum)?;
+            let strategy = args.strategy(Strategy::Multilevel)?;
+            let mode = args.search_mode()?;
+            let spec = parse_spec(&args, "experiment")?;
+            let comm = Communicator::world(&spec);
+            let session = GridSession::new(&comm, presets::paper_grid(), strategy)
+                .with_exec_mode(args.exec_mode()?);
+            println!(
+                "E15 — per-level composition autotuning ({} strategy, {} ranks, {} levels,",
+                strategy.name(),
+                comm.size(),
+                comm.clustering().n_levels()
+            );
+            println!("ghost probes: timing-only simulation, zero payload allocation):\n");
+            let engine = session.engine();
+            let (table, tunings) = tuning::composition_tuning_table(&engine, op, &sizes, mode)?;
+            print!("{}", table.to_markdown());
+            let mut policy_table = PolicyTable::new(session.provenance());
+            println!("\nwinning composition per payload size:");
+            for t in &tunings {
+                policy_table.record(t.op, t.bytes, t.best, t.best_us);
+                println!(
+                    "  {:>10}: {} ({}) — {} probes into a {}-assignment structural space [{:?}]",
+                    fmt::bytes(t.bytes),
+                    t.best.name(),
+                    fmt::time_us(t.best_us),
+                    t.probes_issued,
+                    t.exhaustive_space,
+                    t.mode
+                );
+            }
+            if let Some(path) = args.get("save") {
+                policy_table.save(path)?;
                 let spec_name = args.get_or("spec", "experiment");
                 let consumer = if spec_name == "experiment" {
                     format!("`gridcollect train|allreduce --policy-file {path}`")

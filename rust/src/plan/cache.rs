@@ -23,7 +23,7 @@
 //! Evicted plans stay alive for holders of their `Arc`; `evictions()`
 //! reports how many were dropped.
 
-use super::{AlgoPolicy, AllreduceAlgo, CollectivePlan, OpKind, PlanKey, PlanMeta, PLAN_BASE_TAG};
+use super::{CollectivePlan, OpKind, PlanKey, PlanMeta, PLAN_BASE_TAG};
 use crate::collectives::programs;
 use crate::error::{Error, Result};
 use crate::topology::Communicator;
@@ -217,7 +217,7 @@ impl PlanCache {
     fn build(&self, comm: &Communicator, key: PlanKey) -> Result<CollectivePlan> {
         let tag = PLAN_BASE_TAG;
         let (tree, program) = match key.op {
-            OpKind::Allreduce(op, AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast)) => {
+            OpKind::Allreduce(op, policy) if policy.is_plain_full() => {
                 // Compose the two cached phases instead of recompiling:
                 // the reduce and bcast plans share one tree build, and the
                 // bcast program is tag-rebased past the reduce's tags.
@@ -232,9 +232,10 @@ impl PlanCache {
                 program.validate()?;
                 (red.tree.clone(), program)
             }
-            OpKind::Allreduce(op, AlgoPolicy::Hybrid { boundary_level }) => {
-                // The per-level hybrid: the up phase IS the cached reduce
-                // plan (same tree, same program — the combine dataflow is
+            OpKind::Allreduce(op, policy) => {
+                // Every other composition (hybrid, ring, halving, chunked
+                // pipelining): the up phase IS the cached reduce plan
+                // (same tree, same program — the combine dataflow is
                 // payload-representation-agnostic); only the per-level
                 // delivery phase is compiled, then tag-rebased past it.
                 // Zero extra tree builds on this path.
@@ -242,12 +243,8 @@ impl PlanCache {
                     comm,
                     PlanKey { op: OpKind::Reduce(op), ..key.clone() },
                 )?;
-                let down = programs::allreduce_down(
-                    &red.tree,
-                    comm.clustering(),
-                    boundary_level,
-                    tag,
-                )?;
+                let down =
+                    programs::allreduce_down(&red.tree, comm.clustering(), policy, tag)?;
                 let mut program = red.program.clone();
                 program.then(down.rebased(red.program.max_tag() + 1))?;
                 program.validate()?;
@@ -273,6 +270,7 @@ impl PlanCache {
 mod tests {
     use super::*;
     use crate::netsim::ReduceOp;
+    use crate::plan::{AlgoPolicy, AllreduceAlgo};
     use crate::topology::TopologySpec;
     use crate::tree::{LevelPolicy, Strategy};
 
@@ -386,6 +384,37 @@ mod tests {
             )
             .unwrap();
         assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn allreduce_compositions_share_the_cached_reduce_plan() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let cache = PlanCache::new();
+        let red = cache.get_or_build(&comm, key(&comm, OpKind::Reduce(ReduceOp::Sum), 0)).unwrap();
+        let chunked = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast).with_chunks(4);
+        let plan = cache
+            .get_or_build(&comm, key(&comm, OpKind::Allreduce(ReduceOp::Sum, chunked), 0))
+            .unwrap();
+        assert_eq!(cache.misses(), 2, "reduce + composition");
+        assert_eq!(cache.hits(), 1, "reduce phase served warm");
+        assert_eq!(plan.tree, red.tree, "one tree shared by both phases");
+        plan.program.validate().unwrap();
+        // Uniform rs+ag rides the same shared-reduce path.
+        cache
+            .get_or_build(
+                &comm,
+                key(
+                    &comm,
+                    OpKind::Allreduce(
+                        ReduceOp::Sum,
+                        AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
+                    ),
+                    0,
+                ),
+            )
+            .unwrap();
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.hits(), 2);
     }
 
     #[test]

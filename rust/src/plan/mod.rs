@@ -34,7 +34,7 @@ pub use cache::PlanCache;
 pub use schedule::{Schedule, ScheduleBuilder, Segment};
 
 use crate::collectives::{extended, programs};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::netsim::{Action, ChannelIndex, Program, ReduceOp, SendPart, ShardMap};
 use crate::topology::{Clustering, Rank};
 use crate::tree::{LevelPolicy, Strategy, Tree};
@@ -66,87 +66,330 @@ impl AllreduceAlgo {
     }
 }
 
+/// Maximum number of separation levels an [`AlgoPolicy`] stores
+/// explicitly. Deeper levels clamp to the last slot, mirroring
+/// [`LevelPolicy::shape_at`]'s clamp-to-last rule; no grid clustering in
+/// this repo exceeds 4 levels, so 8 is pure headroom.
+pub const MAX_COMP_LEVELS: usize = 8;
+
+/// Upper bound for [`AlgoPolicy::with_chunks`].
+pub const MAX_CHUNKS: usize = 32;
+
+/// One entry of the per-level algorithm vocabulary: how allreduce
+/// traffic crossing a tree edge at one separation level is structured.
+///
+/// [`LevelAlgo::ReduceBcast`], [`LevelAlgo::Binomial`] and
+/// [`LevelAlgo::Flat`] are *full-structure* algorithms — one full-payload
+/// message per edge and phase. The tree *shape* itself is
+/// [`LevelPolicy`]'s axis, so the latter two are named aliases kept for
+/// vocabulary parity with astra-sim-style composition strings; they
+/// compile identically to `ReduceBcast`. [`LevelAlgo::RsAgRing`] splits
+/// delivery into subtree/complement interval messages (rs+ag ring);
+/// [`LevelAlgo::Halving`] delivers in recursive-halving pieces
+/// (Bine/Swing-style distance halving: at least two pipelined pieces per
+/// edge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LevelAlgo {
+    /// Single full-payload message per edge (the MPICH-G2 composition).
+    ReduceBcast,
+    /// Split subtree/complement interval delivery (rs+ag ring style).
+    RsAgRing,
+    /// Recursive-halving piece delivery (Bine/Swing distance halving).
+    Halving,
+    /// Full-structure alias of `ReduceBcast` (binomial is a tree shape).
+    Binomial,
+    /// Full-structure alias of `ReduceBcast` (flat/direct delivery).
+    Flat,
+}
+
+impl LevelAlgo {
+    /// Every vocabulary entry.
+    pub const ALL: [LevelAlgo; 5] = [
+        LevelAlgo::ReduceBcast,
+        LevelAlgo::RsAgRing,
+        LevelAlgo::Halving,
+        LevelAlgo::Binomial,
+        LevelAlgo::Flat,
+    ];
+
+    /// The structurally distinct entries — the tuner's per-level search
+    /// space. `Binomial`/`Flat` compile identically to `ReduceBcast`
+    /// (shape is [`LevelPolicy`]'s axis), so probing them would
+    /// re-measure the same program.
+    pub const STRUCTURAL: [LevelAlgo; 3] =
+        [LevelAlgo::ReduceBcast, LevelAlgo::RsAgRing, LevelAlgo::Halving];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LevelAlgo::ReduceBcast => "rb",
+            LevelAlgo::RsAgRing => "ring",
+            LevelAlgo::Halving => "halving",
+            LevelAlgo::Binomial => "binomial",
+            LevelAlgo::Flat => "flat",
+        }
+    }
+
+    /// Parse a vocabulary token (CLI `--algo comp:...`, policy-table
+    /// entries). Accepts the canonical names plus the aliases the
+    /// literature uses.
+    pub fn from_name(s: &str) -> Option<LevelAlgo> {
+        match s {
+            "rb" | "reduce+bcast" | "reduce-bcast" => Some(LevelAlgo::ReduceBcast),
+            "ring" | "rsag" | "rs+ag" => Some(LevelAlgo::RsAgRing),
+            "halving" | "bine" | "swing" | "distance-halving" => Some(LevelAlgo::Halving),
+            "binomial" => Some(LevelAlgo::Binomial),
+            "flat" | "direct" => Some(LevelAlgo::Flat),
+            _ => None,
+        }
+    }
+
+    /// Full-structure algorithms deliver one full-payload message per
+    /// edge and phase (no interval splitting).
+    pub fn is_full_structure(&self) -> bool {
+        matches!(self, LevelAlgo::ReduceBcast | LevelAlgo::Binomial | LevelAlgo::Flat)
+    }
+}
+
+/// Order in which a pipelined edge's chunk pieces are scheduled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ChunkOrder {
+    /// Pieces go out in index order (chunk 0 first).
+    Fifo,
+    /// Shortest piece first (SCF): fewest chunk keys first, index order
+    /// breaking ties — small pieces clear the wire before long ones.
+    ShortestFirst,
+}
+
+impl ChunkOrder {
+    pub const ALL: [ChunkOrder; 2] = [ChunkOrder::Fifo, ChunkOrder::ShortestFirst];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChunkOrder::Fifo => "fifo",
+            ChunkOrder::ShortestFirst => "scf",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ChunkOrder> {
+        match s {
+            "fifo" => Some(ChunkOrder::Fifo),
+            "scf" | "shortest" | "shortest-first" => Some(ChunkOrder::ShortestFirst),
+            _ => None,
+        }
+    }
+}
+
 /// Per-separation-level allreduce composition — the algorithmic analogue
 /// of [`LevelPolicy`]'s per-level shape table. A policy participates in
 /// [`PlanKey`], so each distinct policy compiles (once) to its own cached
-/// plan.
+/// plan, and ghost probing, sharded execution, and schedule fusion treat
+/// it like any other plan input.
 ///
-/// [`AlgoPolicy::Hybrid`] is the paper-§6 "exploit the network at every
-/// level" composition the uniform algorithms cannot express: reduce+bcast
-/// message structure across the slow (WAN-side) tree edges — two full-
-/// payload messages per edge — while edges below the boundary pipeline
-/// their delivery rs+ag style (split subtree/complement messages). All
-/// compositions are bitwise-identical in their results (same tree, same
-/// combine association); they differ only in message structure.
+/// A policy is a dense per-level assignment: slot `i` (0-based) holds the
+/// [`LevelAlgo`] for separation level `i + 1` (level 1 = WAN), with
+/// levels beyond [`MAX_COMP_LEVELS`] clamping to the last slot — the same
+/// clamp rule as [`LevelPolicy::shape_at`]. On top of the structural
+/// assignment sits a chunked-pipelining knob: [`AlgoPolicy::with_chunks`]
+/// splits full-structure deliveries into `k` interval pieces per edge,
+/// scheduled FIFO or shortest-first ([`AlgoPolicy::with_chunk_order`]).
+///
+/// The legacy two-regime policies survive as constructors over this
+/// type: [`AlgoPolicy::uniform`] and [`AlgoPolicy::hybrid`] build the
+/// corresponding compositions, compare equal to them, and keep their
+/// historical `name()`s, so tuned tables and call sites keep meaning.
+/// All compositions are bitwise-identical in their results (same tree,
+/// same combine association); they differ only in message structure.
 ///
 /// ```
-/// use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
+/// use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, LevelAlgo};
 /// let p = AlgoPolicy::hybrid(1);
 /// // level 1 = WAN: reduce+bcast; deeper levels: rs+ag.
 /// assert_eq!(p.algo_at(1), AllreduceAlgo::ReduceBcast);
 /// assert_eq!(p.algo_at(3), AllreduceAlgo::ReduceScatterAllgather);
+/// // Arbitrary per-level compositions with chunked pipelining:
+/// let c = AlgoPolicy::composition(&[LevelAlgo::ReduceBcast, LevelAlgo::Halving])
+///     .unwrap()
+///     .with_chunks(4);
+/// assert_eq!(c.level_algo_at(1), LevelAlgo::ReduceBcast);
+/// assert_eq!(c.level_algo_at(5), LevelAlgo::Halving); // clamps to last
+/// assert_eq!(c.chunks_per_level(), 4);
 /// ```
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum AlgoPolicy {
-    /// One composition for every tree edge.
-    Uniform(AllreduceAlgo),
-    /// Reduce+bcast (full-payload) delivery on edges at separation level
-    /// `<= boundary_level`; rs+ag (split, pipelined) delivery on deeper
-    /// edges. `hybrid(0)` degrades to uniform rs+ag, `hybrid(>= levels)`
-    /// to uniform reduce+bcast.
-    Hybrid { boundary_level: usize },
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AlgoPolicy {
+    /// Slot `i` = separation level `i + 1`; deeper levels clamp to the
+    /// last slot.
+    algos: [LevelAlgo; MAX_COMP_LEVELS],
+    /// Pieces each full-structure delivery is split into (1 = off).
+    chunks: u8,
+    /// Scheduling order for the pieces (canonically FIFO when
+    /// `chunks <= 1`, so equal-behavior policies compare equal).
+    order: ChunkOrder,
 }
 
 impl AlgoPolicy {
     /// The same composition at every level.
     pub fn uniform(algo: AllreduceAlgo) -> Self {
-        AlgoPolicy::Uniform(algo)
-    }
-
-    /// Reduce+bcast across levels `1..=boundary_level`, rs+ag below.
-    pub fn hybrid(boundary_level: usize) -> Self {
-        AlgoPolicy::Hybrid { boundary_level }
-    }
-
-    /// Which composition handles a tree edge at separation `level`
-    /// (level 1 = WAN) — mirrors [`LevelPolicy::shape_at`].
-    pub fn algo_at(&self, level: usize) -> AllreduceAlgo {
-        debug_assert!(level >= 1);
-        match *self {
-            AlgoPolicy::Uniform(algo) => algo,
-            AlgoPolicy::Hybrid { boundary_level } => {
-                if level <= boundary_level {
-                    AllreduceAlgo::ReduceBcast
-                } else {
-                    AllreduceAlgo::ReduceScatterAllgather
-                }
-            }
+        match algo {
+            AllreduceAlgo::ReduceBcast => Self::uniform_level(LevelAlgo::ReduceBcast),
+            AllreduceAlgo::ReduceScatterAllgather => Self::uniform_level(LevelAlgo::RsAgRing),
         }
     }
 
-    /// Effective boundary for the down-phase compiler: edges at
-    /// separation `<= boundary()` carry a single full-map message, deeper
-    /// edges the split subtree/complement pair.
+    /// The same vocabulary entry at every level.
+    pub fn uniform_level(algo: LevelAlgo) -> Self {
+        AlgoPolicy { algos: [algo; MAX_COMP_LEVELS], chunks: 1, order: ChunkOrder::Fifo }
+    }
+
+    /// Reduce+bcast across levels `1..=boundary_level`, rs+ag below —
+    /// the historical two-regime hybrid. `hybrid(0)` is (and compares
+    /// equal to) uniform rs+ag; `hybrid(>= MAX_COMP_LEVELS)` uniform
+    /// reduce+bcast.
+    pub fn hybrid(boundary_level: usize) -> Self {
+        let mut algos = [LevelAlgo::RsAgRing; MAX_COMP_LEVELS];
+        for slot in algos.iter_mut().take(boundary_level.min(MAX_COMP_LEVELS)) {
+            *slot = LevelAlgo::ReduceBcast;
+        }
+        AlgoPolicy { algos, chunks: 1, order: ChunkOrder::Fifo }
+    }
+
+    /// An explicit per-level assignment: `algos[i]` handles separation
+    /// level `i + 1`; levels beyond the slice repeat its last entry.
+    /// Errors on an empty slice or more than [`MAX_COMP_LEVELS`]
+    /// entries.
+    pub fn composition(algos: &[LevelAlgo]) -> Result<Self> {
+        if algos.is_empty() {
+            return Err(Error::Config("composition needs at least one level algorithm".into()));
+        }
+        if algos.len() > MAX_COMP_LEVELS {
+            return Err(Error::Config(format!(
+                "composition has {} levels; max is {MAX_COMP_LEVELS}",
+                algos.len()
+            )));
+        }
+        let mut slots = [*algos.last().expect("non-empty"); MAX_COMP_LEVELS];
+        slots[..algos.len()].copy_from_slice(algos);
+        Ok(AlgoPolicy { algos: slots, chunks: 1, order: ChunkOrder::Fifo })
+    }
+
+    /// Split every full-structure delivery into `chunks` pipelined
+    /// interval pieces per edge (clamped to `1..=MAX_CHUNKS`). `1`
+    /// switches pipelining off; the chunk order canonicalizes to FIFO
+    /// then, so behaviorally identical policies compare (and cache)
+    /// equal.
+    pub fn with_chunks(self, chunks: usize) -> Self {
+        let chunks = chunks.clamp(1, MAX_CHUNKS) as u8;
+        let order = if chunks <= 1 { ChunkOrder::Fifo } else { self.order };
+        AlgoPolicy { chunks, order, ..self }
+    }
+
+    /// Scheduling order for pipelined pieces. No effect (canonicalized
+    /// to FIFO) while `chunks_per_level() <= 1` — set chunks first.
+    pub fn with_chunk_order(self, order: ChunkOrder) -> Self {
+        let order = if self.chunks <= 1 { ChunkOrder::Fifo } else { order };
+        AlgoPolicy { order, ..self }
+    }
+
+    /// The vocabulary entry handling tree edges at separation `level`
+    /// (level 1 = WAN) — mirrors [`LevelPolicy::shape_at`]'s clamp.
+    pub fn level_algo_at(&self, level: usize) -> LevelAlgo {
+        debug_assert!(level >= 1);
+        self.algos[level.saturating_sub(1).min(MAX_COMP_LEVELS - 1)]
+    }
+
+    /// Legacy two-regime view of [`AlgoPolicy::level_algo_at`]:
+    /// full-structure entries read as reduce+bcast, splitting entries as
+    /// rs+ag.
+    pub fn algo_at(&self, level: usize) -> AllreduceAlgo {
+        if self.level_algo_at(level).is_full_structure() {
+            AllreduceAlgo::ReduceBcast
+        } else {
+            AllreduceAlgo::ReduceScatterAllgather
+        }
+    }
+
+    /// The explicit per-level assignment with trailing repeats collapsed
+    /// (never empty; the last entry repeats for all deeper levels).
+    pub fn level_algos(&self) -> &[LevelAlgo] {
+        let mut len = MAX_COMP_LEVELS;
+        while len > 1 && self.algos[len - 1] == self.algos[len - 2] {
+            len -= 1;
+        }
+        &self.algos[..len]
+    }
+
+    /// Pieces each full-structure delivery is pipelined into (1 = off).
+    pub fn chunks_per_level(&self) -> usize {
+        self.chunks as usize
+    }
+
+    pub fn chunk_order(&self) -> ChunkOrder {
+        self.order
+    }
+
+    /// Whether every delivery is a single full-payload message — the
+    /// only case where the plain cached reduce;bcast composition and the
+    /// [`BytesModel::FullPayloadPerSend`] model apply.
+    pub fn is_plain_full(&self) -> bool {
+        self.chunks <= 1 && self.algos.iter().all(|a| a.is_full_structure())
+    }
+
+    /// Effective boundary for the down-phase compiler: the leading run
+    /// of full-structure levels (`usize::MAX` when every delivery is a
+    /// single full-payload message).
     pub fn boundary(&self) -> usize {
-        match *self {
-            AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast) => usize::MAX,
-            AlgoPolicy::Uniform(AllreduceAlgo::ReduceScatterAllgather) => 0,
-            AlgoPolicy::Hybrid { boundary_level } => boundary_level,
+        if self.is_plain_full() {
+            usize::MAX
+        } else {
+            self.algos.iter().take_while(|a| a.is_full_structure()).count()
+        }
+    }
+
+    /// `Some(b)` iff this is exactly the historical `hybrid(b)` with an
+    /// interior boundary: an unchunked ReduceBcast prefix over a
+    /// RsAgRing suffix.
+    pub fn hybrid_boundary(&self) -> Option<usize> {
+        if self.chunks > 1 {
+            return None;
+        }
+        let b = self.algos.iter().take_while(|a| **a == LevelAlgo::ReduceBcast).count();
+        if b == 0 || b == MAX_COMP_LEVELS {
+            return None;
+        }
+        if self.algos[b..].iter().all(|a| *a == LevelAlgo::RsAgRing) {
+            Some(b)
+        } else {
+            None
         }
     }
 
     /// Whether calls under this policy move rank-chunked payload maps
-    /// (rs+ag convention) rather than a single key-0 vector. Uniform
-    /// reduce+bcast is the only single-vector policy.
+    /// (interval convention) rather than a single key-0 vector. Plain
+    /// full-structure policies are the only single-vector case.
     pub fn is_chunked(&self) -> bool {
-        !matches!(self, AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast))
+        !self.is_plain_full()
     }
 
     pub fn name(&self) -> String {
-        match *self {
-            AlgoPolicy::Uniform(algo) => algo.name().to_string(),
-            AlgoPolicy::Hybrid { boundary_level } => format!("hybrid(b={boundary_level})"),
+        if self.chunks <= 1 {
+            if self.algos == [LevelAlgo::ReduceBcast; MAX_COMP_LEVELS] {
+                return AllreduceAlgo::ReduceBcast.name().to_string();
+            }
+            if self.algos == [LevelAlgo::RsAgRing; MAX_COMP_LEVELS] {
+                return AllreduceAlgo::ReduceScatterAllgather.name().to_string();
+            }
+            if let Some(b) = self.hybrid_boundary() {
+                return format!("hybrid(b={b})");
+            }
         }
+        let slots: Vec<&str> = self.level_algos().iter().map(|a| a.name()).collect();
+        let mut s = format!("comp:{}", slots.join(","));
+        if self.chunks > 1 {
+            s.push_str(&format!(";chunks={}", self.chunks));
+            if self.order == ChunkOrder::ShortestFirst {
+                s.push_str(";order=scf");
+            }
+        }
+        s
     }
 }
 
@@ -214,9 +457,8 @@ impl OpKind {
     /// Static byte-prediction model for this op (see [`BytesModel`]).
     pub fn bytes_model(&self) -> BytesModel {
         match self {
-            OpKind::Bcast
-            | OpKind::Reduce(_)
-            | OpKind::Allreduce(_, AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast)) => {
+            OpKind::Bcast | OpKind::Reduce(_) => BytesModel::FullPayloadPerSend,
+            OpKind::Allreduce(_, policy) if policy.is_plain_full() => {
                 BytesModel::FullPayloadPerSend
             }
             OpKind::Barrier => BytesModel::Zero,
@@ -512,6 +754,88 @@ mod tests {
         assert!(h.is_chunked());
         assert_eq!(h.name(), "hybrid(b=2)");
         assert_eq!(rb.name(), "reduce+bcast");
+    }
+
+    #[test]
+    fn compositions_generalize_the_legacy_policies() {
+        // Legacy constructors are canonical compositions: extremes
+        // compare equal to the uniforms they degrade to.
+        assert_eq!(
+            AlgoPolicy::hybrid(0),
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather)
+        );
+        assert_eq!(AlgoPolicy::hybrid(99), AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast));
+        assert_eq!(
+            AlgoPolicy::composition(&[LevelAlgo::ReduceBcast]).unwrap(),
+            AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)
+        );
+        assert_eq!(
+            AlgoPolicy::composition(&[LevelAlgo::ReduceBcast, LevelAlgo::RsAgRing]).unwrap(),
+            AlgoPolicy::hybrid(1)
+        );
+        // hybrid_boundary is the exact inverse of hybrid() on interior b.
+        for b in 1..MAX_COMP_LEVELS {
+            assert_eq!(AlgoPolicy::hybrid(b).hybrid_boundary(), Some(b));
+        }
+        assert_eq!(AlgoPolicy::hybrid(0).hybrid_boundary(), None);
+        assert_eq!(AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast).hybrid_boundary(), None);
+
+        let comp = AlgoPolicy::composition(&[
+            LevelAlgo::ReduceBcast,
+            LevelAlgo::Halving,
+            LevelAlgo::RsAgRing,
+        ])
+        .unwrap();
+        assert_eq!(comp.level_algo_at(1), LevelAlgo::ReduceBcast);
+        assert_eq!(comp.level_algo_at(2), LevelAlgo::Halving);
+        // Deeper levels clamp to the last explicit entry.
+        assert_eq!(comp.level_algo_at(7), LevelAlgo::RsAgRing);
+        assert_eq!(
+            comp.level_algos(),
+            &[LevelAlgo::ReduceBcast, LevelAlgo::Halving, LevelAlgo::RsAgRing]
+        );
+        assert_eq!(comp.name(), "comp:rb,halving,ring");
+        assert!(comp.is_chunked());
+        assert!(!comp.is_plain_full());
+        assert_eq!(comp.boundary(), 1);
+        assert_eq!(comp.hybrid_boundary(), None);
+
+        // Binomial/Flat are full-structure aliases: plain-full but not
+        // the canonical reduce+bcast composition.
+        let binom = AlgoPolicy::uniform_level(LevelAlgo::Binomial);
+        assert!(binom.is_plain_full());
+        assert_eq!(binom.boundary(), usize::MAX);
+        assert_eq!(binom.name(), "comp:binomial");
+
+        // Errors: empty and oversized assignments.
+        assert!(AlgoPolicy::composition(&[]).is_err());
+        assert!(AlgoPolicy::composition(&[LevelAlgo::Flat; MAX_COMP_LEVELS + 1]).is_err());
+    }
+
+    #[test]
+    fn chunking_knob_canonicalizes_and_names() {
+        let rb = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast);
+        let rb4 = rb.with_chunks(4);
+        assert_eq!(rb4.chunks_per_level(), 4);
+        assert!(rb4.is_chunked());
+        assert!(!rb4.is_plain_full());
+        assert_eq!(rb4.name(), "comp:rb;chunks=4");
+        let scf = rb4.with_chunk_order(ChunkOrder::ShortestFirst);
+        assert_eq!(scf.chunk_order(), ChunkOrder::ShortestFirst);
+        assert_eq!(scf.name(), "comp:rb;chunks=4;order=scf");
+        // chunks=1 switches pipelining off and canonicalizes the order,
+        // so behaviorally identical policies compare (and cache) equal.
+        assert_eq!(scf.with_chunks(1), rb);
+        assert_eq!(rb.with_chunk_order(ChunkOrder::ShortestFirst), rb);
+        assert_eq!(rb.with_chunks(0), rb);
+        assert_eq!(rb.with_chunks(MAX_CHUNKS + 10).chunks_per_level(), MAX_CHUNKS);
+        // Vocabulary tokens round-trip.
+        for a in LevelAlgo::ALL {
+            assert_eq!(LevelAlgo::from_name(a.name()), Some(a));
+        }
+        for o in ChunkOrder::ALL {
+            assert_eq!(ChunkOrder::from_name(o.name()), Some(o));
+        }
     }
 
     #[test]

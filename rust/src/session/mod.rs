@@ -32,7 +32,9 @@ pub mod policy;
 pub mod table;
 
 pub use policy::{AutoTune, Fixed, OnMiss, PolicyProvider, Tuned};
-pub use table::{PolicyEntry, PolicyProvenance, PolicyTable, SegmentEntry, POLICY_TABLE_VERSION};
+pub use table::{
+    PolicyEntry, PolicyProvenance, PolicyTable, SegmentEntry, ShapeEntry, POLICY_TABLE_VERSION,
+};
 
 use crate::collectives::{request, CollectiveEngine, OpSpec, Outcome, ScheduleMemo};
 use crate::coordinator::tuning;
@@ -45,7 +47,7 @@ use crate::plan::{
     AlgoPolicy, AllreduceAlgo, CollectivePlan, OpKind, PlanCache, Schedule, ScheduleBuilder,
 };
 use crate::topology::{Communicator, Rank};
-use crate::tree::{LevelPolicy, Strategy};
+use crate::tree::{LevelPolicy, Strategy, TreeShape};
 use crate::util::fmt::Table;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -451,6 +453,46 @@ impl GridSession {
         self.engine().tune_bcast_segments(root, data, candidates)
     }
 
+    /// The tuned WAN tree shape the installed provider holds for a
+    /// `bytes`-sized payload (`None` when it carries no WAN-shape
+    /// verdicts).
+    pub fn resolve_wan_shape(&self, bytes: usize) -> Result<Option<TreeShape>> {
+        self.provider.resolve_wan_shape(self, bytes)
+    }
+
+    /// The session's [`LevelPolicy`] with the provider's tuned WAN shape
+    /// for `bytes` applied at the root level — `None` when no WAN-shape
+    /// verdict exists. Trees depend on the level policy, so the caller
+    /// applies this by opening a session with
+    /// [`GridSession::with_level_policy`] (a new plan-cache context; the
+    /// shapes change the plans themselves).
+    pub fn wan_level_policy(&self, bytes: usize) -> Result<Option<LevelPolicy>> {
+        let Some(shape) = self.resolve_wan_shape(bytes)? else {
+            return Ok(None);
+        };
+        let mut lp = self.level_policy.clone();
+        if lp.shapes.is_empty() {
+            lp.shapes.push(shape);
+        } else {
+            lp.shapes[0] = shape;
+        }
+        Ok(Some(lp))
+    }
+
+    /// Snapshot the installed provider's allreduce verdicts into a
+    /// provenance-stamped [`PolicyTable`] and write it to `path` — how
+    /// an [`AutoTune`] provider with a persist path leaves a
+    /// `--policy-file`-loadable table behind, and how any workload can
+    /// persist what its provider accumulated.
+    pub fn save_policy_table(&self, path: &str) -> Result<PolicyTable> {
+        let mut table = PolicyTable::new(self.provenance());
+        for e in self.provider.verdict_entries() {
+            table.record(e.op, e.bytes, e.policy, e.best_us);
+        }
+        table.save(path)?;
+        Ok(table)
+    }
+
     // ---- tuning ----------------------------------------------------
 
     /// Sweep the composition candidates for every payload size via ghost
@@ -463,6 +505,84 @@ impl GridSession {
         let mut table = PolicyTable::new(self.provenance());
         for t in &tunings {
             table.record(t.op, t.bytes, t.best, t.best_us);
+        }
+        Ok((report, table))
+    }
+
+    /// The composition tuner's analogue of
+    /// [`GridSession::tune_boundary`]: search the full per-level
+    /// assignment space (exhaustively, or with beam search on deep
+    /// clusterings — see [`tuning::SearchMode`]) plus the chunked
+    /// refinement, and return the report table and a provenance-stamped
+    /// [`PolicyTable`].
+    pub fn tune_composition(
+        &self,
+        op: ReduceOp,
+        sizes: &[usize],
+        mode: tuning::SearchMode,
+    ) -> Result<(Table, PolicyTable)> {
+        let engine = self.engine();
+        let (report, tunings) = tuning::composition_tuning_table(&engine, op, sizes, mode)?;
+        let mut table = PolicyTable::new(self.provenance());
+        for t in &tunings {
+            table.record(t.op, t.bytes, t.best, t.best_us);
+        }
+        Ok((report, table))
+    }
+
+    /// Sweep candidate WAN tree shapes per payload size and return a
+    /// report table plus a provenance-stamped [`PolicyTable`] carrying
+    /// per-size [`ShapeEntry`] verdicts
+    /// ([`GridSession::resolve_wan_shape`] consumes them once the table
+    /// is installed).
+    ///
+    /// Unlike composition probes, a candidate shape changes the trees
+    /// themselves, so each candidate runs on a **private** session (its
+    /// own plan cache): the session's shared cache must never hold
+    /// foreign-shape plans.
+    pub fn tune_wan_shapes(
+        &self,
+        op: ReduceOp,
+        sizes: &[usize],
+        candidates: &[TreeShape],
+    ) -> Result<(Table, PolicyTable)> {
+        if candidates.is_empty() {
+            return Err(Error::Comm("tune_wan_shapes: empty candidate set".into()));
+        }
+        let mut report = Table::new(&["bytes", "WAN shape", "makespan", "winner"]);
+        let mut table = PolicyTable::new(self.provenance());
+        for &bytes in sizes {
+            if bytes % 4 != 0 {
+                return Err(Error::Comm(format!(
+                    "tune_wan_shapes: payload size {bytes} is not f32-aligned"
+                )));
+            }
+            let mut probes = Vec::with_capacity(candidates.len());
+            for &shape in candidates {
+                let mut lp = self.level_policy.clone();
+                if lp.shapes.is_empty() {
+                    lp.shapes.push(shape);
+                } else {
+                    lp.shapes[0] = shape;
+                }
+                let probe = GridSession::new(&self.comm, self.params.clone(), self.strategy)
+                    .with_level_policy(lp);
+                let sim = probe.allreduce_timing(op, bytes / 4)?;
+                probes.push((shape, sim.makespan_us));
+            }
+            let &(best_shape, best_us) = probes
+                .iter()
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .expect("candidate set is non-empty");
+            table.record_wan_shape(bytes, best_shape, best_us);
+            for (shape, us) in probes {
+                report.row(&[
+                    crate::util::fmt::bytes(bytes),
+                    shape.name(),
+                    crate::util::fmt::time_us(us),
+                    if shape == best_shape { "<- best".into() } else { String::new() },
+                ]);
+            }
         }
         Ok((report, table))
     }
@@ -626,6 +746,84 @@ mod tests {
         let err = GridSession::new(&comm, presets::paper_grid(), Strategy::Unaware)
             .with_policy_table(table);
         assert!(err.is_err(), "strategy mismatch must not install");
+    }
+
+    #[test]
+    fn autotune_persists_verdicts_through_save_policy_table() {
+        let path = std::env::temp_dir()
+            .join(format!("gridcollect_autotune_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        let s = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+            .with_policy_provider(Box::new(AutoTune::new().with_persist_path(&path)));
+        let p1 = s.resolve_policy(ReduceOp::Sum, 65536).unwrap();
+        let p2 = s.resolve_policy(ReduceOp::Sum, 4096).unwrap();
+        // Every miss rewrote the full table: the file now holds both
+        // verdicts under this session's provenance, so a fresh session
+        // can install it as its policy file.
+        let loaded = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+            .with_policy_file(&path)
+            .unwrap();
+        assert_eq!(loaded.resolve_policy(ReduceOp::Sum, 65536).unwrap(), p1);
+        assert_eq!(loaded.resolve_policy(ReduceOp::Sum, 4096).unwrap(), p2);
+        // Explicit save of the same provider state is identical.
+        let table = s.save_policy_table(&path).unwrap();
+        assert_eq!(table.len(), 2);
+        assert_eq!(table.best_for(ReduceOp::Sum, 65536), Some(p1));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn composition_tuning_closes_the_session_loop() {
+        let comm = Communicator::world(&TopologySpec::paper_experiment());
+        let s = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        let (report, table) =
+            s.tune_composition(ReduceOp::Sum, &[4096, 65536], tuning::SearchMode::Auto).unwrap();
+        assert!(report.n_rows() > 0);
+        assert_eq!(table.len(), 2);
+        // The tuned table installs and resolves to the tuner's argmin.
+        let tuned = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+            .with_policy_table(table.clone())
+            .unwrap();
+        let mode = tuning::SearchMode::Auto;
+        let want =
+            tuning::tune_allreduce_composition(&s.engine(), ReduceOp::Sum, 65536, mode).unwrap();
+        assert_eq!(tuned.resolve_policy(ReduceOp::Sum, 65536).unwrap(), want.best);
+        // And the resolved composition actually runs through the session.
+        let n = s.comm().size();
+        let contributions: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0f32; 16]).collect();
+        let out = tuned.allreduce(ReduceOp::Sum, &contributions).unwrap();
+        for r in 0..n {
+            assert_eq!(out.data[r], vec![n as f32; 16], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn wan_shape_table_resolves_like_bcast_segments() {
+        let s = session();
+        assert_eq!(s.resolve_wan_shape(4096).unwrap(), None, "default: no verdicts");
+        assert!(s.tune_wan_shapes(ReduceOp::Sum, &[4096], &[]).is_err(), "empty candidates");
+        let candidates =
+            [TreeShape::Flat, TreeShape::Binomial, TreeShape::Chain, TreeShape::Fibonacci(2)];
+        let (report, table) =
+            s.tune_wan_shapes(ReduceOp::Sum, &[4096, 65536], &candidates).unwrap();
+        assert_eq!(report.n_rows(), 2 * candidates.len());
+        assert_eq!(table.wan_shape_entries().len(), 2);
+        // Install and resolve through the provider, like bcast segments.
+        let comm = s.comm().clone();
+        let tuned = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+            .with_policy_table(table.clone())
+            .unwrap();
+        let best = table.best_wan_shape_for(65536).unwrap();
+        assert_eq!(tuned.resolve_wan_shape(65536).unwrap(), Some(best));
+        // The applied level policy carries the winner at the WAN slot.
+        let lp = tuned.wan_level_policy(65536).unwrap().unwrap();
+        assert_eq!(lp.shape_at(1), best);
+        assert_eq!(lp.shape_at(2), s.level_policy().shape_at(2), "deeper levels untouched");
+        // The shape table survives the JSON round trip with everything
+        // else in place.
+        let back = PolicyTable::from_json(&table.to_json()).unwrap();
+        assert_eq!(back.wan_shape_entries(), table.wan_shape_entries());
     }
 
     #[test]

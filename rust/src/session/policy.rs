@@ -24,6 +24,7 @@ use crate::netsim::ReduceOp;
 use crate::plan::AlgoPolicy;
 use crate::session::table::{PolicyEntry, PolicyTable};
 use crate::session::GridSession;
+use crate::tree::TreeShape;
 use std::sync::Mutex;
 
 /// Resolves the allreduce composition for one call. Implementations may
@@ -44,6 +45,25 @@ pub trait PolicyProvider {
         _bytes: usize,
     ) -> Result<Option<usize>> {
         Ok(None)
+    }
+
+    /// The tuned WAN tree shape for a `bytes`-sized payload, or `None`
+    /// when this provider holds no WAN-shape verdicts (the session then
+    /// keeps its configured [`crate::tree::LevelPolicy`]). Default: no
+    /// verdicts — only [`Tuned`] tables carry per-size shape entries.
+    fn resolve_wan_shape(
+        &self,
+        _session: &GridSession,
+        _bytes: usize,
+    ) -> Result<Option<TreeShape>> {
+        Ok(None)
+    }
+
+    /// Snapshot of the allreduce verdicts this provider holds, for
+    /// persisting via [`GridSession::save_policy_table`]. Default: none
+    /// (a [`Fixed`] provider has nothing worth writing back).
+    fn verdict_entries(&self) -> Vec<PolicyEntry> {
+        Vec::new()
     }
 
     /// Display name for logs and reports.
@@ -94,6 +114,18 @@ impl PolicyProvider for Tuned {
         Ok(self.0.best_segments_for(bytes))
     }
 
+    fn resolve_wan_shape(
+        &self,
+        _session: &GridSession,
+        bytes: usize,
+    ) -> Result<Option<TreeShape>> {
+        Ok(self.0.best_wan_shape_for(bytes))
+    }
+
+    fn verdict_entries(&self) -> Vec<PolicyEntry> {
+        self.0.entries().to_vec()
+    }
+
     fn name(&self) -> String {
         format!("tuned({} entries)", self.0.len())
     }
@@ -114,27 +146,40 @@ pub enum OnMiss {
 
 /// Tune-on-miss provider: an in-memory verdict table that fills itself
 /// via [`tuning::tune_allreduce_boundary`] as sizes are first seen.
+/// With a persist path installed, every *newly tuned* verdict is also
+/// written back to the session's policy file
+/// ([`GridSession::save_policy_table`]) — so a workload that warmed the
+/// autotuner leaves a `--policy-file`-loadable table behind.
 pub struct AutoTune {
     verdicts: Mutex<Vec<PolicyEntry>>,
     on_miss: OnMiss,
+    persist_path: Option<String>,
 }
 
 impl AutoTune {
     /// Empty table, [`OnMiss::Tune`] on miss.
     pub fn new() -> Self {
-        AutoTune { verdicts: Mutex::new(Vec::new()), on_miss: OnMiss::Tune }
+        AutoTune { verdicts: Mutex::new(Vec::new()), on_miss: OnMiss::Tune, persist_path: None }
     }
 
     /// Empty table with an explicit miss behavior.
     pub fn with_on_miss(on_miss: OnMiss) -> Self {
-        AutoTune { verdicts: Mutex::new(Vec::new()), on_miss }
+        AutoTune { verdicts: Mutex::new(Vec::new()), on_miss, persist_path: None }
     }
 
     /// Seed the in-memory table with a saved table's entries (provenance
     /// is the caller's concern — typically `GridSession::with_policy_table`
     /// already validated the file this came from).
     pub fn seeded(table: &PolicyTable, on_miss: OnMiss) -> Self {
-        AutoTune { verdicts: Mutex::new(table.entries().to_vec()), on_miss }
+        AutoTune { verdicts: Mutex::new(table.entries().to_vec()), on_miss, persist_path: None }
+    }
+
+    /// Write every newly tuned verdict back to `path` as a provenance-
+    /// stamped policy table (the full verdict set is rewritten on each
+    /// miss — the file is always a complete, loadable table).
+    pub fn with_persist_path(mut self, path: impl Into<String>) -> Self {
+        self.persist_path = Some(path.into());
+        self
     }
 
     /// Snapshot the memoized verdicts (e.g. to persist what a workload
@@ -165,13 +210,24 @@ impl PolicyProvider for AutoTune {
                 // (verdicts are deterministic, so both agree).
                 let tuning = tuning::tune_allreduce_boundary(&session.engine(), op, bytes)?;
                 let entry = PolicyEntry { op, bytes, policy: tuning.best, best_us: tuning.best_us };
-                let mut verdicts = self.verdicts.lock().unwrap();
-                if !verdicts.iter().any(|e| e.op == op && e.bytes == bytes) {
-                    verdicts.push(entry);
+                {
+                    let mut verdicts = self.verdicts.lock().unwrap();
+                    if !verdicts.iter().any(|e| e.op == op && e.bytes == bytes) {
+                        verdicts.push(entry);
+                    }
+                }
+                // Write-back outside the lock (save_policy_table reads
+                // the verdicts through `verdict_entries`, which locks).
+                if let Some(path) = &self.persist_path {
+                    session.save_policy_table(path)?;
                 }
                 Ok(tuning.best)
             }
         }
+    }
+
+    fn verdict_entries(&self) -> Vec<PolicyEntry> {
+        self.verdicts.lock().unwrap().clone()
     }
 
     fn name(&self) -> String {

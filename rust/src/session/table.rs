@@ -20,17 +20,31 @@
 use crate::error::{Error, Result};
 use crate::model::NetworkParams;
 use crate::netsim::ReduceOp;
-use crate::plan::{AlgoPolicy, AllreduceAlgo};
+use crate::plan::{AlgoPolicy, AllreduceAlgo, ChunkOrder, LevelAlgo, MAX_CHUNKS};
 use crate::topology::Communicator;
-use crate::tree::{LevelPolicy, Strategy};
+use crate::tree::{LevelPolicy, Strategy, TreeShape};
 use crate::util::json::{self, Value};
 
-/// Current on-disk format version. Bump on any incompatible change;
-/// loading a different version is a hard error (tables are cheap to
-/// regenerate with `gridcollect tune-boundary --save <table.json>`).
-pub const POLICY_TABLE_VERSION: u64 = 1;
+/// Current on-disk format version. Version 2 added per-level policy
+/// compositions (`comp:` tokens), the vocabulary provenance field and
+/// the optional `wan_shapes` section. Readers accept any version in
+/// `1..=POLICY_TABLE_VERSION` (older files simply lack the newer
+/// optional sections); versions from the future are hard errors
+/// (tables are cheap to regenerate with `gridcollect tune-composition
+/// --save <table.json>`).
+pub const POLICY_TABLE_VERSION: u64 = 2;
 
 const FORMAT_TAG: &str = "gridcollect-policy-table";
+
+/// The policy vocabulary this build can express, rendered as a stable
+/// string and stored in the provenance header: a table tuned under a
+/// smaller (or different) vocabulary must not silently resolve in a
+/// session whose tuner would have searched a different space.
+pub fn vocabulary_string() -> String {
+    let algos: Vec<&str> = LevelAlgo::ALL.iter().map(|a| a.name()).collect();
+    let orders: Vec<&str> = ChunkOrder::ALL.iter().map(|o| o.name()).collect();
+    format!("algos={};orders={};max_chunks={}", algos.join(","), orders.join(","), MAX_CHUNKS)
+}
 
 /// 64-bit FNV-1a. Used for the provenance hashes because it is stable
 /// across Rust releases and platforms (`DefaultHasher` is neither).
@@ -98,6 +112,11 @@ pub struct PolicyProvenance {
     pub level_policy: String,
     /// How the probes were executed (`"ghost"` for the timing engine).
     pub probe_mode: String,
+    /// [`vocabulary_string`] of the policy vocabulary the tuner searched
+    /// over. Version-1 files predate the field and read back as the
+    /// current vocabulary (their `rb`/`rsag`/`hybrid:N` tokens mean the
+    /// same compositions under it).
+    pub vocabulary: String,
 }
 
 impl PolicyProvenance {
@@ -118,6 +137,7 @@ impl PolicyProvenance {
             strategy: strategy.name().to_string(),
             level_policy: format!("{level_policy:?}"),
             probe_mode: "ghost".to_string(),
+            vocabulary: vocabulary_string(),
         }
     }
 
@@ -131,10 +151,13 @@ impl PolicyProvenance {
             Err(Error::Config(format!(
                 "policy table provenance mismatch: {what} was '{got}' when tuned \
                  but this session has '{want}' — retune with `gridcollect \
-                 tune-boundary --save <table.json>` under the current configuration"
+                 tune-composition --save <table.json>` under the current configuration"
             )))
         };
-        if self.version != current.version {
+        // Older supported versions are compatible by construction (their
+        // token vocabulary is a subset); only a table from the *future*
+        // is a mismatch here (from_json already rejects those on read).
+        if self.version > current.version {
             let (got, want) = (self.version.to_string(), current.version.to_string());
             return mismatch("format version", &got, &want);
         }
@@ -170,6 +193,9 @@ impl PolicyProvenance {
         if self.probe_mode != current.probe_mode {
             return mismatch("probe mode", &self.probe_mode, &current.probe_mode);
         }
+        if self.vocabulary != current.vocabulary {
+            return mismatch("policy vocabulary", &self.vocabulary, &current.vocabulary);
+        }
         Ok(())
     }
 }
@@ -194,9 +220,20 @@ pub struct SegmentEntry {
     pub best_us: f64,
 }
 
+/// One tuned WAN tree-shape verdict: the winning root-level
+/// [`TreeShape`] for a payload of `bytes` (resolved through the
+/// session's policy provider like broadcast segment counts).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShapeEntry {
+    pub bytes: usize,
+    pub shape: TreeShape,
+    /// Simulated makespan of the winner (us) — informational.
+    pub best_us: f64,
+}
+
 /// A persisted tuning table: provenance header + sorted verdict entries,
 /// one kind per tuned op family (allreduce composition policies,
-/// pipelined-broadcast segment counts).
+/// pipelined-broadcast segment counts, per-size WAN tree shapes).
 #[derive(Clone, Debug)]
 pub struct PolicyTable {
     provenance: PolicyProvenance,
@@ -204,6 +241,8 @@ pub struct PolicyTable {
     entries: Vec<PolicyEntry>,
     /// Sorted by `bytes`; at most one entry per size.
     bcast_segments: Vec<SegmentEntry>,
+    /// Sorted by `bytes`; at most one entry per size.
+    wan_shapes: Vec<ShapeEntry>,
 }
 
 fn op_rank(op: ReduceOp) -> u8 {
@@ -225,25 +264,92 @@ fn op_from_name(name: &str) -> Result<ReduceOp> {
     }
 }
 
-/// Compact, grep-able policy token: `rb`, `rsag`, or `hybrid:N`.
+/// Compact, grep-able policy token. The three legacy shapes keep their
+/// version-1 spellings (`rb`, `rsag`, `hybrid:N`) so old files and
+/// grep habits survive the composition refactor; everything else gets
+/// the general form `comp:a,b,c[;chunks=K][;order=scf]` with the level
+/// names of [`LevelAlgo::name`] (trailing repeats collapsed).
 fn policy_to_token(p: AlgoPolicy) -> String {
-    match p {
-        AlgoPolicy::Uniform(AllreduceAlgo::ReduceBcast) => "rb".to_string(),
-        AlgoPolicy::Uniform(AllreduceAlgo::ReduceScatterAllgather) => "rsag".to_string(),
-        AlgoPolicy::Hybrid { boundary_level } => format!("hybrid:{boundary_level}"),
+    if p == AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast) {
+        return "rb".to_string();
     }
+    if p == AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather) {
+        return "rsag".to_string();
+    }
+    if let Some(b) = p.hybrid_boundary() {
+        return format!("hybrid:{b}");
+    }
+    let names: Vec<&str> = p.level_algos().iter().map(|a| a.name()).collect();
+    let mut token = format!("comp:{}", names.join(","));
+    if p.chunks_per_level() > 1 {
+        token.push_str(&format!(";chunks={}", p.chunks_per_level()));
+        if p.chunk_order() == ChunkOrder::ShortestFirst {
+            token.push_str(";order=scf");
+        }
+    }
+    token
 }
 
 fn policy_from_token(token: &str) -> Result<AlgoPolicy> {
+    let bad = || Error::Config(format!("policy table: bad policy token '{token}'"));
     match token {
-        "rb" => Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)),
-        "rsag" => Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather)),
-        other => match other.strip_prefix("hybrid:") {
-            Some(b) => b
-                .parse::<usize>()
-                .map(AlgoPolicy::hybrid)
-                .map_err(|_| Error::Config(format!("policy table: bad policy token '{other}'"))),
-            None => Err(Error::Config(format!("policy table: bad policy token '{other}'"))),
+        "rb" => return Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)),
+        "rsag" => return Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather)),
+        _ => {}
+    }
+    if let Some(b) = token.strip_prefix("hybrid:") {
+        return b.parse::<usize>().map(AlgoPolicy::hybrid).map_err(|_| bad());
+    }
+    let body = token.strip_prefix("comp:").ok_or_else(bad)?;
+    let mut sections = body.split(';');
+    let mut algos = Vec::new();
+    for name in sections.next().ok_or_else(bad)?.split(',') {
+        algos.push(LevelAlgo::from_name(name).ok_or_else(bad)?);
+    }
+    let (mut chunks, mut order) = (1usize, ChunkOrder::Fifo);
+    for section in sections {
+        if let Some(k) = section.strip_prefix("chunks=") {
+            chunks = k.parse().map_err(|_| bad())?;
+            if chunks == 0 || chunks > MAX_CHUNKS {
+                return Err(bad());
+            }
+        } else if let Some(o) = section.strip_prefix("order=") {
+            order = ChunkOrder::from_name(o).ok_or_else(bad)?;
+        } else {
+            return Err(bad());
+        }
+    }
+    Ok(AlgoPolicy::composition(&algos)?.with_chunks(chunks).with_chunk_order(order))
+}
+
+/// Compact WAN tree-shape token: [`TreeShape::name`] spellings with the
+/// Fibonacci latency parameter rendered as `fibonacci:N`.
+fn shape_to_token(s: TreeShape) -> String {
+    match s {
+        TreeShape::Binomial => "binomial".to_string(),
+        TreeShape::Flat => "flat".to_string(),
+        TreeShape::Chain => "chain".to_string(),
+        TreeShape::DistanceHalving => "distance-halving".to_string(),
+        TreeShape::Fibonacci(l) => format!("fibonacci:{l}"),
+    }
+}
+
+fn shape_from_token(token: &str) -> Result<TreeShape> {
+    let bad = || Error::Config(format!("policy table: bad tree-shape token '{token}'"));
+    match token {
+        "binomial" => Ok(TreeShape::Binomial),
+        "flat" => Ok(TreeShape::Flat),
+        "chain" => Ok(TreeShape::Chain),
+        "distance-halving" => Ok(TreeShape::DistanceHalving),
+        other => match other.strip_prefix("fibonacci:") {
+            Some(l) => {
+                let l: u32 = l.parse().map_err(|_| bad())?;
+                if l == 0 {
+                    return Err(bad());
+                }
+                Ok(TreeShape::Fibonacci(l))
+            }
+            None => Err(bad()),
         },
     }
 }
@@ -251,7 +357,12 @@ fn policy_from_token(token: &str) -> Result<AlgoPolicy> {
 impl PolicyTable {
     /// An empty table for the given tuning context.
     pub fn new(provenance: PolicyProvenance) -> Self {
-        PolicyTable { provenance, entries: Vec::new(), bcast_segments: Vec::new() }
+        PolicyTable {
+            provenance,
+            entries: Vec::new(),
+            bcast_segments: Vec::new(),
+            wan_shapes: Vec::new(),
+        }
     }
 
     pub fn provenance(&self) -> &PolicyProvenance {
@@ -328,6 +439,44 @@ impl PolicyTable {
         best.map(|(_, s)| s)
     }
 
+    /// Tuned per-size WAN tree-shape entries, sorted by payload size.
+    pub fn wan_shape_entries(&self) -> &[ShapeEntry] {
+        &self.wan_shapes
+    }
+
+    /// Record (or replace) the tuned WAN tree shape for a `bytes`-sized
+    /// payload, keeping the entry list sorted.
+    pub fn record_wan_shape(&mut self, bytes: usize, shape: TreeShape, best_us: f64) {
+        let entry = ShapeEntry { bytes, shape, best_us };
+        match self.wan_shapes.binary_search_by_key(&bytes, |e| e.bytes) {
+            Ok(i) => self.wan_shapes[i] = entry,
+            Err(i) => self.wan_shapes.insert(i, entry),
+        }
+    }
+
+    /// The tuned WAN tree shape for a `bytes`-sized payload: the exact
+    /// entry if present, otherwise the entry whose tuned size is nearest
+    /// in log-space (ties break toward the smaller size). `None` when
+    /// the table holds no WAN-shape verdicts at all.
+    pub fn best_wan_shape_for(&self, bytes: usize) -> Option<TreeShape> {
+        let target = (bytes.max(1) as f64).ln();
+        let mut best: Option<(f64, TreeShape)> = None;
+        for e in &self.wan_shapes {
+            if e.bytes == bytes {
+                return Some(e.shape);
+            }
+            let d = (target - (e.bytes.max(1) as f64).ln()).abs();
+            let closer = match best {
+                Some((bd, _)) => d < bd,
+                None => true,
+            };
+            if closer {
+                best = Some((d, e.shape));
+            }
+        }
+        best.map(|(_, s)| s)
+    }
+
     /// Resolve `(op, bytes)` to a policy: the exact entry if present,
     /// otherwise the entry whose tuned size is nearest in log-space
     /// (ties break toward the smaller size — deterministic). `None` only
@@ -379,7 +528,8 @@ impl PolicyTable {
         s.push_str(&format!("    \"n_levels\": {},\n", p.n_levels));
         s.push_str(&format!("    \"strategy\": \"{}\",\n", json::escape(&p.strategy)));
         s.push_str(&format!("    \"level_policy\": \"{}\",\n", json::escape(&p.level_policy)));
-        s.push_str(&format!("    \"probe_mode\": \"{}\"\n", json::escape(&p.probe_mode)));
+        s.push_str(&format!("    \"probe_mode\": \"{}\",\n", json::escape(&p.probe_mode)));
+        s.push_str(&format!("    \"vocabulary\": \"{}\"\n", json::escape(&p.vocabulary)));
         s.push_str("  },\n");
         s.push_str("  \"entries\": [\n");
         for (i, e) in self.entries.iter().enumerate() {
@@ -403,7 +553,24 @@ impl PolicyTable {
                 if i + 1 < self.bcast_segments.len() { "," } else { "" }
             ));
         }
-        s.push_str("  ]\n}\n");
+        s.push_str("  ]");
+        // Optional section: omitted entirely when untuned, so files stay
+        // byte-compatible with version-1 readers' expectations and the
+        // common case stays small.
+        if !self.wan_shapes.is_empty() {
+            s.push_str(",\n  \"wan_shapes\": [\n");
+            for (i, e) in self.wan_shapes.iter().enumerate() {
+                s.push_str(&format!(
+                    "    {{\"bytes\": {}, \"shape\": \"{}\", \"best_us\": {}}}{}\n",
+                    e.bytes,
+                    shape_to_token(e.shape),
+                    Self::best_us_json(e.best_us),
+                    if i + 1 < self.wan_shapes.len() { "," } else { "" }
+                ));
+            }
+            s.push_str("  ]");
+        }
+        s.push_str("\n}\n");
         s
     }
 
@@ -439,14 +606,23 @@ impl PolicyTable {
             )));
         }
         let version = u64_field(&doc, "version")?;
-        if version != POLICY_TABLE_VERSION {
+        if version == 0 || version > POLICY_TABLE_VERSION {
             return Err(Error::Config(format!(
-                "policy table: format version {version} is not the supported \
-                 {POLICY_TABLE_VERSION} — regenerate with `gridcollect tune-boundary --save \
-                 <table.json>`"
+                "policy table: format version {version} is not in the supported range \
+                 1..={POLICY_TABLE_VERSION} — regenerate with `gridcollect tune-composition \
+                 --save <table.json>`"
             )));
         }
         let prov = field(&doc, "provenance")?;
+        // Version-1 files predate the vocabulary field; their tokens are
+        // a strict subset of the current vocabulary, so defaulting keeps
+        // them installable.
+        let vocabulary = match prov.get("vocabulary") {
+            Some(v) => v.as_str().map(str::to_string).ok_or_else(|| {
+                Error::Config("policy table: 'vocabulary' must be a string".into())
+            })?,
+            None => vocabulary_string(),
+        };
         let provenance = PolicyProvenance {
             version,
             params_hash: hash_field(&prov, "params_hash")?,
@@ -456,6 +632,7 @@ impl PolicyTable {
             strategy: str_field(&prov, "strategy")?,
             level_policy: str_field(&prov, "level_policy")?,
             probe_mode: str_field(&prov, "probe_mode")?,
+            vocabulary,
         };
         let mut table = PolicyTable::new(provenance);
         let entries = field(&doc, "entries")?;
@@ -465,18 +642,34 @@ impl PolicyTable {
         for item in items {
             let op = op_from_name(&str_field(item, "op")?)?;
             let bytes = u64_field(item, "bytes")? as usize;
-            let policy = policy_from_token(&str_field(item, "policy")?)?;
+            let token = str_field(item, "policy")?;
+            let policy = policy_from_token(&token)?;
             // A non-interior hybrid boundary is a structural alias of a
             // uniform policy the tuner never emits: a hand-edited table
             // claiming one would *run* a uniform composition while
             // *reporting* a hybrid — reject it rather than silently
-            // misreporting what executes.
-            if let AlgoPolicy::Hybrid { boundary_level } = policy {
-                if boundary_level == 0 || boundary_level >= table.provenance.n_levels {
+            // misreporting what executes. The check is token-level
+            // because `hybrid:0` canonicalizes away during parsing.
+            if let Some(b) = token.strip_prefix("hybrid:") {
+                let b: usize = b.parse().unwrap_or(0);
+                if b == 0 || b >= table.provenance.n_levels {
                     return Err(Error::Config(format!(
-                        "policy table: hybrid:{boundary_level} is not an interior boundary \
+                        "policy table: hybrid:{b} is not an interior boundary \
                          for a {}-level clustering (valid: 1..{})",
                         table.provenance.n_levels, table.provenance.n_levels
+                    )));
+                }
+            }
+            // Likewise a composition naming more explicit levels than
+            // the clustering has can only come from a hand edit under a
+            // different topology.
+            if let Some(body) = token.strip_prefix("comp:") {
+                let named = body.split(';').next().unwrap_or("").split(',').count();
+                if named > table.provenance.n_levels {
+                    return Err(Error::Config(format!(
+                        "policy table: '{token}' names {named} levels but the \
+                         clustering has only {}",
+                        table.provenance.n_levels
                     )));
                 }
             }
@@ -509,6 +702,27 @@ impl PolicyTable {
                     })?,
                 };
                 table.record_bcast_segments(bytes, segments, best_us);
+            }
+        }
+        // Optional since version 2; earlier files (and tables with no
+        // WAN-shape verdicts) simply lack it. Unknown *other* top-level
+        // sections are skipped by construction — the parser keeps them
+        // and this reader only consults the keys it knows, so files from
+        // newer minor revisions stay loadable.
+        if let Some(shapes) = doc.get("wan_shapes") {
+            let items = shapes.as_array().ok_or_else(|| {
+                Error::Config("policy table: 'wan_shapes' must be an array".into())
+            })?;
+            for item in items {
+                let bytes = u64_field(item, "bytes")? as usize;
+                let shape = shape_from_token(&str_field(item, "shape")?)?;
+                let best_us = match field(item, "best_us")? {
+                    Value::Null => f64::NAN,
+                    v => v.as_f64().ok_or_else(|| {
+                        Error::Config("policy table: 'best_us' must be a number or null".into())
+                    })?,
+                };
+                table.record_wan_shape(bytes, shape, best_us);
             }
         }
         Ok(table)
@@ -619,13 +833,16 @@ mod tests {
             "wrong format tag"
         );
         assert!(
-            PolicyTable::from_json(&good.replace("\"version\": 1", "\"version\": 99")).is_err(),
+            PolicyTable::from_json(&good.replace("\"version\": 2", "\"version\": 99")).is_err(),
             "unknown version"
         );
         let mut t = PolicyTable::new(provenance());
         t.record(ReduceOp::Sum, 4096, AlgoPolicy::hybrid(1), 1.0);
-        let doc = t.to_json().replace("hybrid:1", "hybrid:x");
-        assert!(PolicyTable::from_json(&doc).is_err(), "bad policy token");
+        let doc = t.to_json();
+        for bad in ["hybrid:x", "comp:", "comp:bogus", "comp:rb;chunks=0", "comp:rb;order=up"] {
+            let broken = doc.replace("hybrid:1", bad);
+            assert!(PolicyTable::from_json(&broken).is_err(), "'{bad}' must not parse");
+        }
     }
 
     #[test]
@@ -700,6 +917,98 @@ mod tests {
     }
 
     #[test]
+    fn composition_tokens_round_trip_with_chunking() {
+        let mut t = PolicyTable::new(provenance()); // fig1: 3 levels
+        let comp = AlgoPolicy::composition(&[
+            LevelAlgo::ReduceBcast,
+            LevelAlgo::Halving,
+            LevelAlgo::RsAgRing,
+        ])
+        .unwrap();
+        let chunked = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)
+            .with_chunks(4)
+            .with_chunk_order(ChunkOrder::ShortestFirst);
+        t.record(ReduceOp::Sum, 4096, comp, 1.0);
+        t.record(ReduceOp::Sum, 65536, chunked, 2.0);
+        let json = t.to_json();
+        assert!(json.contains("comp:rb,halving,ring"), "comp token serialized: {json}");
+        assert!(json.contains("comp:rb;chunks=4;order=scf"), "chunk knobs serialized: {json}");
+        let back = PolicyTable::from_json(&json).unwrap();
+        assert_eq!(back.entries(), t.entries());
+        assert_eq!(back.exact(ReduceOp::Sum, 4096).unwrap().policy, comp);
+        assert_eq!(back.exact(ReduceOp::Sum, 65536).unwrap().policy, chunked);
+        // A composition naming more explicit levels than the clustering
+        // has can only come from a hand edit under a different topology.
+        let too_deep = json.replace("comp:rb,halving,ring", "comp:rb,rb,halving,ring");
+        assert!(PolicyTable::from_json(&too_deep).is_err(), "4 named levels on 3-level grid");
+    }
+
+    #[test]
+    fn wan_shape_entries_record_resolve_and_round_trip() {
+        let mut t = PolicyTable::new(provenance());
+        assert_eq!(t.best_wan_shape_for(4096), None, "untuned table resolves nothing");
+        let json = t.to_json();
+        assert!(!json.contains("wan_shapes"), "empty section omitted: {json}");
+        t.record_wan_shape(1 << 20, TreeShape::Fibonacci(3), 250.0);
+        t.record_wan_shape(4096, TreeShape::Binomial, 12.5);
+        assert_eq!(t.wan_shape_entries()[0].bytes, 4096, "sorted by bytes");
+        t.record_wan_shape(4096, TreeShape::Flat, 10.0);
+        assert_eq!(t.wan_shape_entries().len(), 2, "replaced, not duplicated");
+        // Exact, then nearest in log-space (64 KiB midpoint ties toward
+        // the smaller tuned size).
+        assert_eq!(t.best_wan_shape_for(4096), Some(TreeShape::Flat));
+        assert_eq!(t.best_wan_shape_for(8192), Some(TreeShape::Flat));
+        assert_eq!(t.best_wan_shape_for(65536), Some(TreeShape::Flat));
+        assert_eq!(t.best_wan_shape_for(1 << 19), Some(TreeShape::Fibonacci(3)));
+        let json = t.to_json();
+        assert!(json.contains("fibonacci:3"), "parametric shape token: {json}");
+        let back = PolicyTable::from_json(&json).unwrap();
+        assert_eq!(back.wan_shape_entries(), t.wan_shape_entries());
+        for bad in ["fibonacci:0", "fibonacci:x", "star"] {
+            let broken = json.replace("fibonacci:3", bad);
+            assert!(PolicyTable::from_json(&broken).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn version_1_documents_still_load_and_install() {
+        // The version bump must not brick existing tables: a version-1
+        // file (no vocabulary field, no wan_shapes) loads, defaults its
+        // vocabulary, and passes the provenance check against a current
+        // session.
+        let mut t = PolicyTable::new(provenance());
+        t.record(ReduceOp::Sum, 4096, AlgoPolicy::hybrid(1), 1.0);
+        t.record_bcast_segments(4096, 8, 3.0);
+        let vocab_line = format!(",\n    \"vocabulary\": \"{}\"", vocabulary_string());
+        let v1 = t
+            .to_json()
+            .replace("\"version\": 2", "\"version\": 1")
+            .replace(&vocab_line, "");
+        assert!(!v1.contains("vocabulary"), "surgery removed the field: {v1}");
+        let back = PolicyTable::from_json(&v1).unwrap();
+        assert_eq!(back.provenance().version, 1);
+        assert_eq!(back.provenance().vocabulary, vocabulary_string(), "defaulted");
+        assert_eq!(back.entries(), t.entries());
+        assert!(back.provenance().check_matches(&provenance()).is_ok());
+    }
+
+    #[test]
+    fn unknown_optional_sections_are_skipped() {
+        // Forward compatibility: a file from a newer minor revision may
+        // carry sections this build has never heard of — they must be
+        // skipped, not rejected (the version gate handles real breaks).
+        let mut t = PolicyTable::new(provenance());
+        t.record(ReduceOp::Sum, 4096, AlgoPolicy::hybrid(1), 1.0);
+        let json = t.to_json().replacen(
+            "  \"entries\":",
+            "  \"future_section\": [{\"x\": 1}, 2, \"three\"],\n  \"entries\":",
+            1,
+        );
+        let back = PolicyTable::from_json(&json).unwrap();
+        assert_eq!(back.entries(), t.entries());
+    }
+
+    #[test]
     fn provenance_mismatches_are_hard_errors() {
         let current = provenance();
         let mut other = current.clone();
@@ -717,6 +1026,15 @@ mod tests {
         let mut other = current.clone();
         other.probe_mode = "full".into();
         assert!(other.check_matches(&current).is_err(), "probe mode");
+        let mut other = current.clone();
+        other.vocabulary = "algos=rb".into();
+        assert!(other.check_matches(&current).is_err(), "vocabulary");
+        let mut other = current.clone();
+        other.version = POLICY_TABLE_VERSION + 1;
+        assert!(other.check_matches(&current).is_err(), "future version");
+        let mut other = current.clone();
+        other.version = 1;
+        assert!(other.check_matches(&current).is_ok(), "older supported version");
         assert!(current.check_matches(&current).is_ok());
     }
 }

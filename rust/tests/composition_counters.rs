@@ -1,0 +1,127 @@
+//! Acceptance test for the composition tuner's probe economy on a deep
+//! (4-level) clustering, enforced by the global stage counters:
+//!
+//! - a **cold beam** sweep issues exactly one ghost engine run per
+//!   distinct probe, and strictly fewer probes than the exhaustive
+//!   assignment space (the pruning claim, counter-asserted);
+//! - a **warm** sweep at the same size performs zero tree builds, zero
+//!   program compiles, zero plan-cache misses, zero payload-data
+//!   allocations and zero scratch-arena growth — every probe is one
+//!   ghost run on a cached plan over recycled working state;
+//! - the **exhaustive oracle** run is counter-checked too, so the
+//!   beam-vs-oracle probe comparison rests on observed engine runs, not
+//!   on the tuner's own bookkeeping.
+//!
+//! Single `#[test]` in its own binary: the counters are process-wide
+//! and exact-delta assertions must not race with other tests.
+
+use gridcollect::collectives::CollectiveEngine;
+use gridcollect::coordinator::tuning::{
+    tune_allreduce_composition, SearchMode, DEFAULT_BEAM_WIDTH,
+};
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::topology::{Communicator, GroupNode, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::counters;
+
+/// 24 ranks over 4 separation levels (machine / LAN / site / WAN): the
+/// smallest topology where `SearchMode::Auto` resolves to beam search.
+fn deep_comm() -> Communicator {
+    let spec = TopologySpec::new(
+        "deep",
+        GroupNode::group(
+            "grid",
+            (0..2)
+                .map(|s| {
+                    GroupNode::group(
+                        format!("site{s}"),
+                        (0..2)
+                            .map(|l| {
+                                GroupNode::group(
+                                    format!("s{s}lan{l}"),
+                                    (0..2)
+                                        .map(|m| GroupNode::machine(format!("s{s}l{l}m{m}"), 3))
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        ),
+    )
+    .unwrap();
+    Communicator::world(&spec)
+}
+
+#[test]
+fn beam_probes_are_counted_and_warm_sweeps_allocate_nothing() {
+    let comm = deep_comm();
+    assert_eq!(comm.clustering().n_levels(), 4, "beam premise: deep clustering");
+    let e = CollectiveEngine::new(&comm, presets::deep_grid(), Strategy::Multilevel);
+
+    // Cold beam sweep (Auto resolves to beam at 4 levels): one ghost
+    // engine run per distinct probe, zero payload allocations even cold,
+    // and strictly fewer probes than the structural space.
+    let before = counters::snapshot();
+    let cold = tune_allreduce_composition(&e, ReduceOp::Sum, 65536, SearchMode::Auto).unwrap();
+    let cold_delta = counters::snapshot().since(&before);
+    assert_eq!(cold.mode, SearchMode::Beam { width: DEFAULT_BEAM_WIDTH });
+    assert_eq!(cold_delta.sim_runs as usize, cold.probes_issued, "one engine run per probe");
+    assert!(
+        cold.probes_issued < cold.exhaustive_space,
+        "beam must prune: {} probes vs {} assignments",
+        cold.probes_issued,
+        cold.exhaustive_space
+    );
+    assert_eq!(cold_delta.payload_allocs, 0, "probes never materialize payload data");
+    assert_eq!(cold_delta.schedule_builds, 0, "plans, not schedules");
+    // Only the shared reduce and bcast phase plans build trees; every
+    // composition rebases its delivery program onto the cached reduce
+    // tree.
+    assert_eq!(cold_delta.tree_builds, 2, "reduce + bcast trees only");
+    assert_eq!(
+        cold_delta.plan_cache_misses as usize,
+        cold.probes_issued + 2,
+        "one plan per probe, plus the shared reduce and bcast phases"
+    );
+
+    // Warm sweep at the same size: scores are deterministic, so the beam
+    // revisits the identical candidate set — every probe is one cache
+    // hit and one ghost run over recycled scratch, nothing more.
+    let before = counters::snapshot();
+    let warm = tune_allreduce_composition(&e, ReduceOp::Sum, 65536, SearchMode::Auto).unwrap();
+    let warm_delta = counters::snapshot().since(&before);
+    assert_eq!(warm.best, cold.best, "warm verdict identical");
+    assert_eq!(warm.best_us.to_bits(), cold.best_us.to_bits());
+    assert_eq!(warm.probes_issued, cold.probes_issued);
+    assert_eq!(warm_delta.tree_builds, 0, "warm probes must not build trees");
+    assert_eq!(warm_delta.program_compiles, 0, "warm probes must not compile");
+    assert_eq!(warm_delta.plan_cache_misses, 0, "every candidate plan served warm");
+    assert_eq!(warm_delta.plan_cache_hits as usize, warm.probes_issued, "one hit per probe");
+    assert_eq!(warm_delta.sim_runs as usize, warm.probes_issued, "one engine run per probe");
+    assert_eq!(warm_delta.payload_allocs, 0, "zero payload allocations per probe");
+    assert_eq!(warm_delta.schedule_builds, 0);
+    assert_eq!(
+        warm_delta.scratch_allocs,
+        0,
+        "warm ghost probes must not grow mailbox/wait-vector storage"
+    );
+
+    // The exhaustive oracle, counter-checked: observed engine runs agree
+    // with its probe count, and the beam's pruning claim holds against
+    // observed runs, not just the tuner's bookkeeping.
+    let before = counters::snapshot();
+    let ex = tune_allreduce_composition(&e, ReduceOp::Sum, 65536, SearchMode::Exhaustive).unwrap();
+    let ex_delta = counters::snapshot().since(&before);
+    assert_eq!(ex.exhaustive_space, 81, "3^4 structural assignments");
+    assert_eq!(ex_delta.sim_runs as usize, ex.probes_issued, "one engine run per probe");
+    assert_eq!(ex_delta.payload_allocs, 0);
+    assert!(
+        (cold_delta.sim_runs as usize) < (ex_delta.sim_runs as usize),
+        "beam issued fewer observed engine runs than the oracle"
+    );
+    // The beam explores a subset, so it can never beat the oracle.
+    assert!(cold.best_us >= ex.best_us);
+}

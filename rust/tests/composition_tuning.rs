@@ -1,0 +1,135 @@
+//! Acceptance suite for the per-level composition tuner: on every
+//! small (≤ 3 separation levels) topology the beam search must pick the
+//! **same argmin as the exhaustive sweep** (the differential oracle),
+//! the exhaustive verdict must minimize the *full-mode* simulated
+//! makespan, and the composition space — a strict superset of the
+//! boundary-hybrid family — must never lose to the boundary tuner.
+//!
+//! Everything here is result-local (no global stage counters), so the
+//! tests run concurrently; the probe-economy counter contract lives in
+//! `composition_counters.rs`, the single-test race-free binary.
+
+use gridcollect::collectives::{request, CollectiveEngine};
+use gridcollect::coordinator::tuning::{
+    tune_allreduce_boundary, tune_allreduce_composition, CompositionTuning, SearchMode,
+    DEFAULT_BEAM_WIDTH,
+};
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+
+fn tune(e: &CollectiveEngine, bytes: usize, mode: SearchMode) -> CompositionTuning {
+    tune_allreduce_composition(e, ReduceOp::Sum, bytes, mode).unwrap()
+}
+
+#[test]
+fn beam_argmin_equals_exhaustive_argmin_on_small_topologies() {
+    for spec in [
+        TopologySpec::paper_fig1(),
+        TopologySpec::paper_experiment(),
+        TopologySpec::uniform(2, 2, 2).unwrap(),
+    ] {
+        let comm = Communicator::world(&spec);
+        let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+        assert!(comm.clustering().n_levels() <= 3, "{}: small-topology premise", comm.name());
+        for bytes in [4096usize, 65536, 1 << 20] {
+            let ex = tune(&e, bytes, SearchMode::Exhaustive);
+            let beam = tune(&e, bytes, SearchMode::Beam { width: DEFAULT_BEAM_WIDTH });
+            let auto = tune(&e, bytes, SearchMode::Auto);
+            let ctx = format!("{} {bytes}B", comm.name());
+            assert_eq!(ex.best, beam.best, "{ctx}: beam argmin == exhaustive argmin");
+            assert_eq!(ex.best_us.to_bits(), beam.best_us.to_bits(), "{ctx}: same makespan");
+            assert_eq!(auto.mode, SearchMode::Exhaustive, "{ctx}: Auto is exhaustive at <= 3");
+            assert_eq!(auto.best, ex.best, "{ctx}: Auto == exhaustive");
+            // Width 9 carries every 2-level prefix, so the two sweeps
+            // probe the identical candidate set — not just agree on the
+            // winner.
+            assert_eq!(ex.probes_issued, beam.probes_issued, "{ctx}: identical probe sets");
+        }
+    }
+}
+
+#[test]
+fn exhaustive_verdict_minimizes_full_mode_makespan() {
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let n = comm.size();
+    for bytes in [4096usize, 262144] {
+        let tuning = tune(&e, bytes, SearchMode::Exhaustive);
+        let data: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; bytes / 4]).collect();
+        let mut best_full = f64::INFINITY;
+        let mut argmin = tuning.probes[0].policy;
+        for p in &tuning.probes {
+            let full = e
+                .run_sim(&request::Allreduce {
+                    root: 0,
+                    op: ReduceOp::Sum,
+                    policy: p.policy,
+                    contributions: &data,
+                })
+                .unwrap();
+            assert_eq!(
+                full.makespan_us.to_bits(),
+                p.makespan_us.to_bits(),
+                "{} ghost probe == full makespan",
+                p.policy.name()
+            );
+            if full.makespan_us < best_full {
+                best_full = full.makespan_us;
+                argmin = p.policy;
+            }
+        }
+        assert_eq!(tuning.best, argmin, "{bytes}: tuner picked the true argmin");
+        assert_eq!(tuning.best_us.to_bits(), best_full.to_bits(), "{bytes}");
+    }
+}
+
+#[test]
+fn composition_space_never_loses_to_the_boundary_tuner() {
+    // Every boundary candidate (two uniforms + the hybrid family) is a
+    // point in the structural composition space, so the exhaustive
+    // composition sweep's minimum can only match or beat the boundary
+    // tuner's — at every size.
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    for bytes in [4096usize, 65536, 1 << 20] {
+        let boundary = tune_allreduce_boundary(&e, ReduceOp::Sum, bytes).unwrap();
+        let comp = tune(&e, bytes, SearchMode::Exhaustive);
+        assert!(
+            comp.best_us <= boundary.best_us,
+            "{bytes}: composition {} us must not lose to boundary {} us",
+            comp.best_us,
+            boundary.best_us
+        );
+    }
+}
+
+#[test]
+fn tuned_composition_survives_the_policy_file_round_trip() {
+    // The CLI loop in miniature: tune-composition --save, then resolve
+    // through the loaded file and get the identical policy back.
+    use gridcollect::session::{GridSession, PolicyTable};
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let sizes = [4096usize, 65536];
+    let (_report, table) = session
+        .tune_composition(ReduceOp::Sum, &sizes, SearchMode::Auto)
+        .unwrap();
+    let file = format!("gridcollect_comp_tuning_{}.json", std::process::id());
+    let path = std::env::temp_dir().join(file);
+    let path = path.to_str().unwrap().to_string();
+    table.save(&path).unwrap();
+    let loaded = PolicyTable::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let tuned = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel)
+        .with_policy_table(loaded)
+        .unwrap();
+    for &bytes in &sizes {
+        assert_eq!(
+            tuned.resolve_policy(ReduceOp::Sum, bytes).unwrap(),
+            table.best_for(ReduceOp::Sum, bytes).unwrap(),
+            "{bytes}: file round-trip preserves the tuned composition"
+        );
+    }
+}

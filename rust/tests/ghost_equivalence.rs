@@ -19,7 +19,7 @@ use gridcollect::collectives::{request, CollectiveEngine};
 use gridcollect::coordinator::{rotation_schedule_memo, tuning};
 use gridcollect::model::presets;
 use gridcollect::netsim::{GhostPayload, Payload, ReduceOp, SimResult};
-use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, ChunkOrder, LevelAlgo};
 use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
@@ -66,6 +66,13 @@ fn ghost_equals_full_across_strategies_ops_roots_and_policies() {
         AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
         AlgoPolicy::hybrid(1),
         AlgoPolicy::hybrid(2),
+        AlgoPolicy::uniform_level(LevelAlgo::Halving),
+        AlgoPolicy::composition(&[LevelAlgo::Halving, LevelAlgo::RsAgRing, LevelAlgo::ReduceBcast])
+            .unwrap(),
+        AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather)
+            .with_chunks(4)
+            .with_chunk_order(ChunkOrder::ShortestFirst),
+        AlgoPolicy::uniform_level(LevelAlgo::Halving).with_chunks(2),
     ];
     for s in Strategy::ALL {
         let e = CollectiveEngine::new(&comm, presets::paper_grid(), s);

@@ -1,6 +1,7 @@
-//! Acceptance tests for the per-level hybrid allreduce
-//! (`AlgoPolicy::hybrid`): bitwise equivalence against the serial
-//! reference for every strategy × root × boundary level, the WAN
+//! Acceptance tests for per-level allreduce compositions
+//! (`AlgoPolicy::hybrid` and the full `LevelAlgo` vocabulary): bitwise
+//! equivalence against the serial reference for every strategy × root ×
+//! boundary level and for the whole composition cross product, the WAN
 //! message-count claim (reduce+bcast's 2 per WAN edge, not rs+ag's 3),
 //! and warm-path plan reuse via cache-local stats. (The exact global
 //! zero-build/zero-compile counter assertions live in
@@ -9,7 +10,9 @@
 use gridcollect::collectives::{verify, CollectiveEngine};
 use gridcollect::model::presets;
 use gridcollect::netsim::ReduceOp;
-use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, OpKind, PlanCache, PlanKey};
+use gridcollect::plan::{
+    AlgoPolicy, AllreduceAlgo, ChunkOrder, LevelAlgo, OpKind, PlanCache, PlanKey,
+};
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::{LevelPolicy, Strategy};
 
@@ -60,6 +63,42 @@ fn hybrid_bitwise_equals_reference_for_all_strategies_roots_and_boundaries() {
                     assert_eq!(hybrid.data[r], rsag.data[r], "vs rs+ag");
                 }
             }
+        }
+    }
+}
+
+#[test]
+fn every_level_algo_composition_bitwise_equals_the_reference() {
+    // The full 5^3 vocabulary cross product on the 3-level paper grid:
+    // every per-level assignment must deliver the exact uniform-reference
+    // vector on every rank — plus chunked-pipelining variants under both
+    // schedules, with chunk counts that do not divide the payload evenly.
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let n = comm.size();
+    let contributions = int_contributions(n, 37);
+    let expect = verify::ref_reduce(&contributions, ReduceOp::Sum);
+    let e = CollectiveEngine::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let mut policies: Vec<AlgoPolicy> = Vec::new();
+    for a in LevelAlgo::ALL {
+        for b in LevelAlgo::ALL {
+            for c in LevelAlgo::ALL {
+                policies.push(AlgoPolicy::composition(&[a, b, c]).unwrap());
+            }
+        }
+    }
+    for algo in LevelAlgo::ALL {
+        for chunks in [2usize, 3, 5] {
+            for order in ChunkOrder::ALL {
+                policies.push(
+                    AlgoPolicy::uniform_level(algo).with_chunks(chunks).with_chunk_order(order),
+                );
+            }
+        }
+    }
+    for policy in policies {
+        let out = e.allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions).unwrap();
+        for r in 0..n {
+            assert_eq!(out.data[r], expect, "{} rank {r}", policy.name());
         }
     }
 }

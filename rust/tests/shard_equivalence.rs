@@ -12,7 +12,7 @@ use gridcollect::collectives::request;
 use gridcollect::coordinator::timing_app;
 use gridcollect::model::presets;
 use gridcollect::netsim::{ExecMode, GhostPayload, NativeCombiner, ReduceOp, SimResult};
-use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, ChunkOrder, LevelAlgo};
 use gridcollect::session::GridSession;
 use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
@@ -85,6 +85,12 @@ fn battery(comm: &Communicator, strategy: Strategy, threads: usize) {
         AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast),
         AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather),
         AlgoPolicy::hybrid(1),
+        AlgoPolicy::uniform_level(LevelAlgo::Halving),
+        AlgoPolicy::composition(&[LevelAlgo::ReduceBcast, LevelAlgo::Halving, LevelAlgo::RsAgRing])
+            .unwrap(),
+        AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)
+            .with_chunks(3)
+            .with_chunk_order(ChunkOrder::ShortestFirst),
     ] {
         let pctx = format!("{ctx}/allreduce[{}]", policy.name());
         let a = seq.allreduce_with_policy(policy, 0, ReduceOp::Sum, &contributions).unwrap();
