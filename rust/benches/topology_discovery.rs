@@ -1,0 +1,79 @@
+//! Bench E16 — topology discovery: inference wall-clock vs rank count.
+//! Each case synthesizes a noiseless N×N cost matrix from a uniform
+//! SxMxP ground truth and times `infer_clustering` (edge sort + two
+//! Kruskal passes — the O(N² log N) front half of the pipeline), with
+//! matrix synthesis timed separately. Recovery is asserted exact before
+//! timing, so the bench doubles as a scale test.
+//!
+//! Run: `cargo bench --bench topology_discovery`
+//! Smoke (CI): `cargo bench --bench topology_discovery -- --smoke`
+//! Reports land in `target/bench-reports/` (md/csv + BENCH_*.json).
+
+use gridcollect::benchkit::{save_bench_json, save_report, section, Bench};
+use gridcollect::model::presets;
+use gridcollect::topology::discover::{
+    infer_clustering, synthesize_from_spec, DEFAULT_PROBE_BYTES,
+};
+use gridcollect::topology::TopologySpec;
+use gridcollect::util::fmt::Table;
+use std::time::Duration;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let bench = if smoke {
+        // 1 sample: CI smoke mode only checks the harness runs end to end.
+        Bench { warmup_iters: 0, min_iters: 1, max_iters: 1, target: Duration::ZERO }
+    } else {
+        Bench::quick()
+    };
+    // 64 / 512 / 4096 ranks; smoke stays at 64 (the 4096-rank matrix
+    // alone is ~16.7M entries).
+    let grids: &[(usize, usize, usize)] = if smoke {
+        &[(4, 4, 4)]
+    } else {
+        &[(4, 4, 4), (8, 8, 8), (16, 16, 16)]
+    };
+
+    section("E16 — discovery wall-clock vs rank count (noiseless uniform grids)");
+    let mut results = Vec::new();
+    let mut shape = Table::new(&["ranks", "levels", "clusters/level", "merge pts", "cuts"]);
+    for &(s, machines, p) in grids {
+        let spec = TopologySpec::uniform(s, machines, p).unwrap();
+        let n = spec.n_procs();
+        let m = synthesize_from_spec(&spec, &presets::paper_grid(), 0.0, 1);
+        let d = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+        assert_eq!(d.clustering, spec.clustering(), "{n} ranks: recovery must be exact");
+        let per_level: Vec<String> = (0..d.clustering.n_levels())
+            .map(|l| d.clustering.clusters_at(l).len().to_string())
+            .collect();
+        shape.row(&[
+            n.to_string(),
+            d.clustering.n_levels().to_string(),
+            per_level.join("/"),
+            d.merge_costs_us.len().to_string(),
+            d.cut_costs_us.len().to_string(),
+        ]);
+        results.push(bench.run(&format!("synthesize/{n}"), || {
+            let m = synthesize_from_spec(&spec, &presets::paper_grid(), 0.0, 1);
+            std::hint::black_box(m.n_ranks());
+        }));
+        results.push(bench.run(&format!("infer/{n}"), || {
+            let d = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+            std::hint::black_box(d.clustering.n_levels());
+        }));
+    }
+    print!("{}", shape.to_markdown());
+    save_report("topology_discovery_shape", &shape);
+
+    let mut wall = Table::new(&["case", "median us", "mean us", "iters"]);
+    for r in &results {
+        wall.row(&[
+            r.name.clone(),
+            format!("{:.1}", r.median_us),
+            format!("{:.1}", r.mean_us),
+            r.iters.to_string(),
+        ]);
+    }
+    save_report("topology_discovery_wall", &wall);
+    save_bench_json("topology_discovery", &results);
+}

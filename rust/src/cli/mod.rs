@@ -15,7 +15,7 @@ pub struct Args {
 pub const VALUE_FLAGS: &[&str] = &[
     "sizes", "size", "steps", "lr", "strategy", "root", "spec", "sites", "machines", "procs",
     "out", "artifacts", "seed", "shape", "params", "algo", "op", "boundary", "save",
-    "policy-file", "threads", "chunks", "order", "mode",
+    "policy-file", "threads", "chunks", "order", "mode", "matrix", "noise", "probe",
 ];
 
 impl Args {
@@ -125,7 +125,7 @@ impl Args {
     /// level algorithm per separation level, outermost (WAN) first, the
     /// last entry repeating for any deeper levels. `--chunks K` splits
     /// each delivery into `K` pipelined pieces per edge and `--order
-    /// fifo|scf` picks their schedule. Flags that would otherwise be
+    /// fifo|scf|ll` picks their schedule. Flags that would otherwise be
     /// silently dropped are rejected instead: `--boundary` without
     /// `--algo hybrid`, `--order` without `--chunks >= 2`.
     pub fn algo_policy(
@@ -183,7 +183,7 @@ impl Args {
                     return Err(Error::Cli("--order only applies with --chunks >= 2".into()));
                 }
                 ChunkOrder::from_name(name).ok_or_else(|| {
-                    Error::Cli(format!("unknown chunk order '{name}' (use fifo|scf)"))
+                    Error::Cli(format!("unknown chunk order '{name}' (use fifo|scf|ll)"))
                 })?
             }
         };
@@ -387,6 +387,10 @@ mod tests {
         assert_eq!(
             args("--algo rb --chunks 4 --order scf").algo_policy(rb).unwrap(),
             rb.with_chunks(4).with_chunk_order(ChunkOrder::ShortestFirst)
+        );
+        assert_eq!(
+            args("--algo rb --chunks 4 --order ll").algo_policy(rb).unwrap(),
+            rb.with_chunks(4).with_chunk_order(ChunkOrder::LeastLoaded)
         );
         // Chunking composes with the default policy too — and counts as
         // an explicit pin for the optional form.

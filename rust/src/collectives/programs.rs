@@ -204,6 +204,27 @@ fn split_parts(
     }
 }
 
+/// Index of the unfinished least-loaded piece train: the queue entry
+/// with the fewest chunk keys sent so far among those with pieces left
+/// (ties toward the earliest entry — child order), or `None` when every
+/// train is drained.
+fn next_least_loaded(queue: &[(Rank, &PieceSet, usize, usize)]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &(_, set, next, load)) in queue.iter().enumerate() {
+        if next >= set.order.len() {
+            continue;
+        }
+        let better = match best {
+            Some(b) => load < queue[b].3,
+            None => true,
+        };
+        if better {
+            best = Some(i);
+        }
+    }
+    best
+}
+
 /// How one tree edge delivers the reduced map in the down phase —
 /// derived per edge from the policy's [`LevelAlgo`] at the edge's
 /// separation level plus the chunked-pipelining knob.
@@ -237,11 +258,14 @@ fn edge_style(policy: AlgoPolicy, sep: usize, n_members: usize) -> EdgeStyle {
 
 /// The interval pieces a [`EdgeStyle::Pieces`] edge carries, shared by
 /// every edge of the plan with the same piece count. `parts[g]` is piece
-/// `g`'s key intervals; `order` is the emission schedule (FIFO index
-/// order or shortest piece first).
+/// `g`'s key intervals; `order` is the per-child emission schedule (FIFO
+/// index order, shortest piece first; least-loaded keeps index order per
+/// child — its effect is the cross-child interleave in phase (D));
+/// `sizes[g]` is piece `g`'s key count (the least-loaded load unit).
 struct PieceSet {
     parts: Vec<SendPart>,
     order: Vec<usize>,
+    sizes: Vec<usize>,
 }
 
 fn piece_set(sorted_members: &[Rank], k: usize, order: ChunkOrder) -> PieceSet {
@@ -264,7 +288,7 @@ fn piece_set(sorted_members: &[Rank], k: usize, order: ChunkOrder) -> PieceSet {
     if order == ChunkOrder::ShortestFirst {
         idx.sort_by_key(|&g| (sizes[g], g));
     }
-    PieceSet { parts, order: idx }
+    PieceSet { parts, order: idx, sizes }
 }
 
 /// Delivery (down) phase of the chunked multilevel allreduce, with a
@@ -389,7 +413,27 @@ pub fn allreduce_down_with(
         // (D) From here `r` holds every member's chunk: single full-map
         // sends for full edges, deferred-subtree + complement sends for
         // split edges, whole piece schedules for piece edges that could
-        // not be pipelined in (C).
+        // not be pipelined in (C). Under [`ChunkOrder::LeastLoaded`] the
+        // deferred piece edges are not emitted child-major: the parent
+        // interleaves sibling piece trains, always serving the child
+        // with the fewest chunk keys sent so far (ties by child order).
+        // Per-child piece order stays FIFO, so every channel still
+        // carries its pieces in index order and receivers match tags
+        // unchanged — delivery is bitwise identical, only the sender's
+        // serialization order moves.
+        let ll = policy.chunk_order() == ChunkOrder::LeastLoaded;
+        let mut ll_queue: Vec<(Rank, &PieceSet, usize, usize)> = Vec::new();
+        if ll {
+            for &c in tree.children(r) {
+                if let EdgeStyle::Pieces(k) = style_of(r, c) {
+                    let pipelined =
+                        matches!(parent_style, Some(EdgeStyle::Pieces(pk)) if pk == k);
+                    if !pipelined {
+                        ll_queue.push((c, pieces_for(k), 0, 0));
+                    }
+                }
+            }
+        }
         let mut split_pending = split_pending.into_iter();
         for &c in tree.children(r) {
             match style_of(r, c) {
@@ -405,7 +449,19 @@ pub fn allreduce_down_with(
                 EdgeStyle::Pieces(k) => {
                     let pipelined =
                         matches!(parent_style, Some(EdgeStyle::Pieces(pk)) if pk == k);
-                    if !pipelined {
+                    if pipelined {
+                        // Streamed in (C).
+                    } else if ll {
+                        // Drain the whole interleave at the first piece
+                        // child's slot; the queue is empty for the rest.
+                        while let Some(i) = next_least_loaded(&ll_queue) {
+                            let (child, set, next, load) = &mut ll_queue[i];
+                            let g = set.order[*next];
+                            p.send(r, *child, tag + g as u64, set.parts[g].clone());
+                            *load += set.sizes[g];
+                            *next += 1;
+                        }
+                    } else {
                         let set = pieces_for(k);
                         for &g in &set.order {
                             p.send(r, c, tag + g as u64, set.parts[g].clone());
@@ -806,6 +862,9 @@ mod tests {
             AlgoPolicy::uniform(crate::plan::AllreduceAlgo::ReduceBcast)
                 .with_chunks(3)
                 .with_chunk_order(ChunkOrder::ShortestFirst),
+            AlgoPolicy::uniform(crate::plan::AllreduceAlgo::ReduceBcast)
+                .with_chunks(4)
+                .with_chunk_order(ChunkOrder::LeastLoaded),
             AlgoPolicy::composition(&[
                 LevelAlgo::ReduceBcast,
                 LevelAlgo::Halving,
@@ -827,6 +886,41 @@ mod tests {
                 policy.name()
             );
         }
+    }
+
+    #[test]
+    fn least_loaded_interleaves_sibling_piece_trains() {
+        // Flat tree: root 0 with 4 piece children, chunks=2 (piece key
+        // counts 3+2 over 5 members). FIFO emits child-major; LL serves
+        // the least-loaded child next, so every child's first piece
+        // leaves the root before any second piece does. Per-channel
+        // piece order is index order either way.
+        let ids: Vec<Rank> = (0..5).collect();
+        let t = TreeShape::Flat.build(5, &ids, 0).unwrap();
+        let c = Clustering::flat(5);
+        let sends = |order: ChunkOrder| -> Vec<(Rank, u64)> {
+            let policy = AlgoPolicy::uniform(crate::plan::AllreduceAlgo::ReduceBcast)
+                .with_chunks(2)
+                .with_chunk_order(order);
+            let p = allreduce_down(&t, &c, policy, 10).unwrap();
+            p.actions[0]
+                .iter()
+                .filter_map(|a| match a {
+                    crate::netsim::Action::Send { to, tag, .. } => Some((*to, *tag)),
+                    _ => None,
+                })
+                .collect()
+        };
+        let fifo = sends(ChunkOrder::Fifo);
+        let ll = sends(ChunkOrder::LeastLoaded);
+        assert_eq!(
+            fifo,
+            vec![(1, 10), (1, 11), (2, 10), (2, 11), (3, 10), (3, 11), (4, 10), (4, 11)]
+        );
+        assert_eq!(
+            ll,
+            vec![(1, 10), (2, 10), (3, 10), (4, 10), (1, 11), (2, 11), (3, 11), (4, 11)]
+        );
     }
 
     #[test]

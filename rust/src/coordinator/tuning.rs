@@ -158,7 +158,7 @@ pub struct CompositionTuning {
     /// (`|STRUCTURAL|^levels`) the sweep draws from.
     pub exhaustive_space: usize,
     /// Ghost probes actually issued (`== probes.len()`; strictly less
-    /// than `exhaustive_space + 4` under beam search on deep
+    /// than `exhaustive_space + 6` under beam search on deep
     /// clusterings).
     pub probes_issued: usize,
 }
@@ -197,7 +197,8 @@ impl ProbeSet<'_> {
 /// search the structural assignment space (every [`LevelAlgo`] in
 /// [`LevelAlgo::STRUCTURAL`] independently per separation level), then
 /// refine the structural winner with the chunked-pipelining knob
-/// (2 and 4 chunks per level, FIFO and shortest-chunk-first).
+/// (2 and 4 chunks per level under every [`ChunkOrder`]: FIFO,
+/// shortest-chunk-first, least-loaded).
 ///
 /// Probes are ghost probes exactly like [`tune_allreduce_boundary`]'s:
 /// on a warm plan cache a whole sweep is timing-only execution — zero
@@ -284,7 +285,7 @@ pub fn tune_allreduce_composition(
     // identical pass, so beam-vs-exhaustive agreement is decided purely
     // by the structural sweep.
     for chunks in [2usize, 4] {
-        for order in [ChunkOrder::Fifo, ChunkOrder::ShortestFirst] {
+        for order in ChunkOrder::ALL {
             set.score(structural_best.with_chunks(chunks).with_chunk_order(order))?;
         }
     }
@@ -481,7 +482,7 @@ mod tests {
         let t = tune_allreduce_composition(&e, ReduceOp::Sum, 65536, SearchMode::Auto).unwrap();
         assert_eq!(t.mode, SearchMode::Exhaustive, "Auto resolves to exhaustive at 3 levels");
         assert_eq!(t.exhaustive_space, 27, "3 structural algos over 3 levels");
-        assert_eq!(t.probes_issued, t.exhaustive_space + 4, "full space + chunk refinement");
+        assert_eq!(t.probes_issued, t.exhaustive_space + 6, "full space + chunk refinement");
         assert_eq!(t.probes.len(), t.probes_issued, "every probe is distinct");
         let min = t.probes.iter().map(|p| p.makespan_us).fold(f64::INFINITY, f64::min);
         assert_eq!(t.best_us, min, "winner is the sweep minimum");
@@ -528,8 +529,8 @@ mod tests {
         let beam = tune_allreduce_composition(&e, ReduceOp::Sum, 16384, SearchMode::Auto).unwrap();
         assert_eq!(beam.mode, SearchMode::Beam { width: DEFAULT_BEAM_WIDTH });
         assert_eq!(ex.exhaustive_space, 81, "3^4 structural assignments");
-        assert_eq!(ex.probes_issued, 81 + 4);
-        assert_eq!(beam.probes_issued, 45 + 4, "3+6+18+18 structural probes + 4 chunked");
+        assert_eq!(ex.probes_issued, 81 + 6);
+        assert_eq!(beam.probes_issued, 45 + 6, "3+6+18+18 structural probes + 6 chunked");
         assert!(beam.probes_issued < ex.probes_issued, "beam must prune on deep spaces");
         // The beam explores a subset, so it can never beat the oracle.
         assert!(beam.best_us >= ex.best_us);

@@ -9,16 +9,17 @@
 //!                                  #  --threads N > 1 runs the cluster-sharded engine —
 //!                                  #  identical numbers, parallel wall-clock)
 //! gridcollect suite [--size 64k] [--xla]           # E8: 6 ops x 4 strategies
-//! gridcollect allreduce [--size 64k] [--op sum] [--boundary 1] [--policy-file t.json] [--xla]
-//! gridcollect tune-boundary [--sizes 4k,64k,1m] [--op sum] [--strategy s] [--spec fig1|experiment|SxMxP] [--save t.json] [--threads N]
-//! gridcollect tune-composition [--sizes 4k,64k,1m] [--op sum] [--mode auto|exhaustive|beam:W] [--strategy s] [--spec ...] [--save t.json] [--threads N]
+//! gridcollect allreduce [--size 64k] [--op sum] [--boundary 1] [--policy-file t.json] [--matrix m.csv] [--xla]
+//! gridcollect tune-boundary [--sizes 4k,64k,1m] [--op sum] [--strategy s] [--spec fig1|experiment|SxMxP] [--matrix m.csv] [--save t.json] [--threads N]
+//! gridcollect tune-composition [--sizes 4k,64k,1m] [--op sum] [--mode auto|exhaustive|beam:W] [--strategy s] [--spec ...] [--matrix m.csv] [--save t.json] [--threads N]
+//! gridcollect discover [--matrix m.csv | --spec ... [--noise 0.1] [--seed 1]] [--probe 1k] [--out m.csv] [--emit-spec]
 //! gridcollect cost-model [--size 64k]              # E2: §4 analytic vs sim
 //! gridcollect ablation [--sites 8] [--size 64k]    # E9: WAN tree shapes
 //! gridcollect scaling [--size 64k]                 # E10: site-count scaling
 //! gridcollect roots [--size 64k]                   # E7: root sensitivity
 //! gridcollect tree [--spec fig1|experiment] [--root 0]   # E3-E5: tree shapes
 //! gridcollect rsl <script.rsl> [--root 0]          # E6: RSL front-end
-//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--spec fig1|experiment|SxMxP] [--algo rb|rsag|hybrid|comp:a,b,...] [--boundary 1] [--chunks K] [--order fifo|scf] [--policy-file t.json] [--xla] [--threads N]
+//! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--spec fig1|experiment|SxMxP] [--matrix m.csv] [--algo rb|rsag|hybrid|comp:a,b,...] [--boundary 1] [--chunks K] [--order fifo|scf|ll] [--policy-file t.json] [--xla] [--threads N]
 //! gridcollect gantt [--size 64k] [--strategy s] [--params file.net]
 //! gridcollect calibrate [--out params.net]        # measure combine us/B
 //! ```
@@ -37,6 +38,13 @@
 //! topology, so the two-command loop works as-is; tune and consume with
 //! the same `--spec`/`--strategy` otherwise — a provenance mismatch is a
 //! hard error by design.
+//!
+//! `discover` closes the measurement loop: it infers the multilevel
+//! clustering from a measured cost matrix (TACOS-style CSV edge list)
+//! instead of a hand-written spec, and every topology-taking subcommand
+//! accepts `--matrix m.csv` to run on the discovered hierarchy. On a
+//! noiseless matrix the inferred clustering fingerprints identically to
+//! the spec it was measured from, so tables tuned either way interoperate.
 
 use gridcollect::cli::Args;
 use gridcollect::coordinator::{experiment, timing_app, training, tuning};
@@ -45,12 +53,12 @@ use gridcollect::model::presets;
 use gridcollect::netsim::{Combiner, NativeCombiner, ReduceOp};
 use gridcollect::runtime::{calibrate_us_per_byte, MlpRuntime, Runtime, XlaCombiner};
 use gridcollect::session::{GridSession, PolicyTable};
-use gridcollect::topology::{rsl, Communicator, TopologySpec};
+use gridcollect::topology::{discover, rsl, Communicator, CostMatrix, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
 use std::sync::Arc;
 
-const USAGE: &str = "usage: gridcollect <fig8|suite|allreduce|tune-boundary|tune-composition|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
+const USAGE: &str = "usage: gridcollect <fig8|suite|allreduce|tune-boundary|tune-composition|discover|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
 run `gridcollect help` or see rust/src/main.rs for flag details";
 
 fn main() {
@@ -73,8 +81,8 @@ fn maybe_xla(args: &Args) -> Result<Option<(Runtime, XlaCombiner)>> {
     Ok(Some((rt, c)))
 }
 
-/// Parse `--spec fig1|experiment|SxMxP` (shared by `tree` and
-/// `tune-boundary`).
+/// Parse `--spec fig1|experiment|SxMxP` (shared by every
+/// topology-taking subcommand).
 fn parse_spec(args: &Args, default: &str) -> Result<TopologySpec> {
     match args.get_or("spec", default) {
         "fig1" => Ok(TopologySpec::paper_fig1()),
@@ -89,6 +97,33 @@ fn parse_spec(args: &Args, default: &str) -> Result<TopologySpec> {
             }
             TopologySpec::uniform(parts[0], parts[1], parts[2])
         }
+    }
+}
+
+/// Resolve the workload communicator: `--matrix m.csv` measures it —
+/// the multilevel clustering is inferred from the cost matrix via
+/// [`Communicator::from_matrix`] — otherwise `--spec` hand-specifies it
+/// (falling back to `default`).
+fn resolve_comm(args: &Args, default: &str) -> Result<Communicator> {
+    match args.get("matrix") {
+        Some(path) => Communicator::from_matrix(&CostMatrix::load_tacos_csv(path)?),
+        None => Ok(Communicator::world(&parse_spec(args, default)?)),
+    }
+}
+
+/// The `--save` consume hint: name commands whose topology actually
+/// matches this table's provenance at install time. A discovered
+/// clustering fingerprints structurally, so a table tuned through
+/// `--matrix` also installs on the matching hand-specified `--spec`.
+fn consume_hint(args: &Args, path: &str) -> String {
+    if let Some(m) = args.get("matrix") {
+        return format!("`gridcollect train|allreduce --matrix {m} --policy-file {path}`");
+    }
+    let spec_name = args.get_or("spec", "experiment");
+    if spec_name == "experiment" {
+        format!("`gridcollect train|allreduce --policy-file {path}`")
+    } else {
+        format!("`gridcollect train --spec {spec_name} --policy-file {path}`")
     }
 }
 
@@ -145,11 +180,11 @@ fn run(raw: Vec<String>) -> Result<()> {
             if let Some(path) = args.get("policy-file") {
                 // The tuner → workload loop: resolve this size through
                 // the persisted table and run the winning policy. The
-                // session honors --spec (default: the experiment grid,
-                // matching tune-boundary's default) so any tuned
-                // topology can be consumed.
-                let spec = parse_spec(&args, "experiment")?;
-                let comm = Communicator::world(&spec);
+                // session honors --spec / --matrix (default: the
+                // experiment grid, matching tune-boundary's default) so
+                // any tuned topology — hand-written or discovered — can
+                // be consumed.
+                let comm = resolve_comm(&args, "experiment")?;
                 let strategy = args.strategy(Strategy::Multilevel)?;
                 let session = GridSession::new(&comm, presets::paper_grid(), strategy)
                     .with_combiner(combiner)
@@ -176,8 +211,7 @@ fn run(raw: Vec<String>) -> Result<()> {
             let sizes = args.sizes(&[4096, 65536, 1 << 20])?;
             let op = args.reduce_op(ReduceOp::Sum)?;
             let strategy = args.strategy(Strategy::Multilevel)?;
-            let spec = parse_spec(&args, "experiment")?;
-            let comm = Communicator::world(&spec);
+            let comm = resolve_comm(&args, "experiment")?;
             let session = GridSession::new(&comm, presets::paper_grid(), strategy)
                 .with_exec_mode(args.exec_mode()?);
             println!(
@@ -199,16 +233,7 @@ fn run(raw: Vec<String>) -> Result<()> {
             }
             if let Some(path) = args.get("save") {
                 policy_table.save(path)?;
-                // The consume hint must name commands whose topology
-                // actually matches this table's provenance; train and
-                // allreduce both default to the experiment spec, and
-                // both accept --spec to line up with a tuned table.
-                let spec_name = args.get_or("spec", "experiment");
-                let consumer = if spec_name == "experiment" {
-                    format!("`gridcollect train|allreduce --policy-file {path}`")
-                } else {
-                    format!("`gridcollect train --spec {spec_name} --policy-file {path}`")
-                };
+                let consumer = consume_hint(&args, path);
                 println!(
                     "\nwrote {path}: {} tuned entries (params hash {:#018x}); consume with \
                      {consumer} (same --spec/--strategy — provenance is enforced)",
@@ -222,8 +247,7 @@ fn run(raw: Vec<String>) -> Result<()> {
             let op = args.reduce_op(ReduceOp::Sum)?;
             let strategy = args.strategy(Strategy::Multilevel)?;
             let mode = args.search_mode()?;
-            let spec = parse_spec(&args, "experiment")?;
-            let comm = Communicator::world(&spec);
+            let comm = resolve_comm(&args, "experiment")?;
             let session = GridSession::new(&comm, presets::paper_grid(), strategy)
                 .with_exec_mode(args.exec_mode()?);
             println!(
@@ -252,18 +276,66 @@ fn run(raw: Vec<String>) -> Result<()> {
             }
             if let Some(path) = args.get("save") {
                 policy_table.save(path)?;
-                let spec_name = args.get_or("spec", "experiment");
-                let consumer = if spec_name == "experiment" {
-                    format!("`gridcollect train|allreduce --policy-file {path}`")
-                } else {
-                    format!("`gridcollect train --spec {spec_name} --policy-file {path}`")
-                };
+                let consumer = consume_hint(&args, path);
                 println!(
                     "\nwrote {path}: {} tuned entries (params hash {:#018x}); consume with \
                      {consumer} (same --spec/--strategy — provenance is enforced)",
                     policy_table.len(),
                     policy_table.provenance().params_hash
                 );
+            }
+        }
+        "discover" => {
+            // The paper's §3.1 front half: measured pair costs →
+            // inferred multilevel clustering. `--matrix m.csv` loads a
+            // TACOS-style edge list; without it the matrix is
+            // synthesized from `--spec` through the paper-grid cost
+            // model (`--noise` relative jitter, `--seed` for
+            // reproducibility) — the self-test path.
+            let m = match args.get("matrix") {
+                Some(path) => CostMatrix::load_tacos_csv(path)?,
+                None => {
+                    let spec = parse_spec(&args, "experiment")?;
+                    let noise = args.get_f32("noise", 0.0)? as f64;
+                    let seed = args.get_usize("seed", 1)? as u64;
+                    discover::synthesize_from_spec(&spec, &presets::paper_grid(), noise, seed)
+                }
+            };
+            if let Some(path) = args.get("out") {
+                m.save_tacos_csv(path)?;
+                println!("wrote {path}: {}-rank cost matrix '{}'\n", m.n_ranks(), m.name());
+            }
+            let probe = args.get_size("probe", discover::DEFAULT_PROBE_BYTES)?;
+            let d = discover::infer_clustering(&m, probe)?;
+            let c = &d.clustering;
+            println!(
+                "inferred hierarchy for '{}': {} ranks, {} levels ({} probes):",
+                m.name(),
+                c.n_ranks(),
+                c.n_levels(),
+                fmt::bytes(probe)
+            );
+            for l in 0..c.n_levels() {
+                let n_clusters = c.clusters_at(l).len();
+                // Bands ascend by cost (cheapest merges form the
+                // deepest level), so level l was glued by band
+                // n_levels - 1 - l; a 1-rank matrix has no merges.
+                match d.band_mean_cost_us.get(c.n_levels() - 1 - l) {
+                    Some(&cost) => println!(
+                        "  level {l}: {n_clusters:>3} cluster(s), glued by links ~{}",
+                        fmt::time_us(cost)
+                    ),
+                    None => println!("  level {l}: {n_clusters:>3} cluster(s)"),
+                }
+            }
+            if !d.cut_costs_us.is_empty() {
+                let cuts: Vec<String> = d.cut_costs_us.iter().map(|&t| fmt::time_us(t)).collect();
+                println!("merge-curve cuts at: {}", cuts.join(", "));
+            }
+            if args.has("emit-spec") {
+                let spec = discover::spec_from_clustering(m.name(), c)?;
+                println!("\nround-tripped TopologySpec:");
+                print!("{}", discover::render_spec_tree(&spec));
             }
         }
         "cost-model" => {
@@ -326,10 +398,10 @@ fn run(raw: Vec<String>) -> Result<()> {
             // same default as tune-boundary/fig8/suite/allreduce, so
             // `tune-boundary --save t.json && train --policy-file
             // t.json` works as-is; `--spec fig1` selects the small
-            // Fig. 1 grid (tune with the same `--spec` so a
-            // `--policy-file`'s provenance matches).
-            let spec = parse_spec(&args, "experiment")?;
-            let comm = Communicator::world(&spec);
+            // Fig. 1 grid and `--matrix m.csv` a discovered one (tune
+            // with the same topology so a `--policy-file`'s provenance
+            // matches).
+            let comm = resolve_comm(&args, "experiment")?;
             let strategy = args.strategy(Strategy::Multilevel)?;
             let mut session = GridSession::new(&comm, presets::paper_grid(), strategy)
                 .with_exec_mode(args.exec_mode()?);

@@ -153,20 +153,28 @@ impl LevelAlgo {
 /// Order in which a pipelined edge's chunk pieces are scheduled.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ChunkOrder {
-    /// Pieces go out in index order (chunk 0 first).
+    /// Pieces go out in index order (chunk 0 first), child by child.
     Fifo,
     /// Shortest piece first (SCF): fewest chunk keys first, index order
     /// breaking ties — small pieces clear the wire before long ones.
     ShortestFirst,
+    /// Least-loaded interleave (LL): each piece is sent in index order
+    /// per child, but a parent with several piece children alternates
+    /// between them, always serving the child that has received the
+    /// fewest chunk keys so far (ties by child order) — no sibling
+    /// starves behind another's full piece train.
+    LeastLoaded,
 }
 
 impl ChunkOrder {
-    pub const ALL: [ChunkOrder; 2] = [ChunkOrder::Fifo, ChunkOrder::ShortestFirst];
+    pub const ALL: [ChunkOrder; 3] =
+        [ChunkOrder::Fifo, ChunkOrder::ShortestFirst, ChunkOrder::LeastLoaded];
 
     pub fn name(&self) -> &'static str {
         match self {
             ChunkOrder::Fifo => "fifo",
             ChunkOrder::ShortestFirst => "scf",
+            ChunkOrder::LeastLoaded => "ll",
         }
     }
 
@@ -174,6 +182,7 @@ impl ChunkOrder {
         match s {
             "fifo" => Some(ChunkOrder::Fifo),
             "scf" | "shortest" | "shortest-first" => Some(ChunkOrder::ShortestFirst),
+            "ll" | "least-loaded" | "least_loaded" => Some(ChunkOrder::LeastLoaded),
             _ => None,
         }
     }
@@ -191,7 +200,8 @@ impl ChunkOrder {
 /// clamp rule as [`LevelPolicy::shape_at`]. On top of the structural
 /// assignment sits a chunked-pipelining knob: [`AlgoPolicy::with_chunks`]
 /// splits full-structure deliveries into `k` interval pieces per edge,
-/// scheduled FIFO or shortest-first ([`AlgoPolicy::with_chunk_order`]).
+/// scheduled FIFO, shortest-first, or least-loaded
+/// ([`AlgoPolicy::with_chunk_order`]).
 ///
 /// The legacy two-regime policies survive as constructors over this
 /// type: [`AlgoPolicy::uniform`] and [`AlgoPolicy::hybrid`] build the
@@ -385,8 +395,8 @@ impl AlgoPolicy {
         let mut s = format!("comp:{}", slots.join(","));
         if self.chunks > 1 {
             s.push_str(&format!(";chunks={}", self.chunks));
-            if self.order == ChunkOrder::ShortestFirst {
-                s.push_str(";order=scf");
+            if self.order != ChunkOrder::Fifo {
+                s.push_str(&format!(";order={}", self.order.name()));
             }
         }
         s
@@ -823,6 +833,10 @@ mod tests {
         let scf = rb4.with_chunk_order(ChunkOrder::ShortestFirst);
         assert_eq!(scf.chunk_order(), ChunkOrder::ShortestFirst);
         assert_eq!(scf.name(), "comp:rb;chunks=4;order=scf");
+        let ll = rb4.with_chunk_order(ChunkOrder::LeastLoaded);
+        assert_eq!(ll.chunk_order(), ChunkOrder::LeastLoaded);
+        assert_eq!(ll.name(), "comp:rb;chunks=4;order=ll");
+        assert_eq!(ll.with_chunks(1), rb, "LL canonicalizes away without chunks");
         // chunks=1 switches pipelining off and canonicalizes the order,
         // so behaviorally identical policies compare (and cache) equal.
         assert_eq!(scf.with_chunks(1), rb);

@@ -267,8 +267,8 @@ fn op_from_name(name: &str) -> Result<ReduceOp> {
 /// Compact, grep-able policy token. The three legacy shapes keep their
 /// version-1 spellings (`rb`, `rsag`, `hybrid:N`) so old files and
 /// grep habits survive the composition refactor; everything else gets
-/// the general form `comp:a,b,c[;chunks=K][;order=scf]` with the level
-/// names of [`LevelAlgo::name`] (trailing repeats collapsed).
+/// the general form `comp:a,b,c[;chunks=K][;order=scf|ll]` with the
+/// level names of [`LevelAlgo::name`] (trailing repeats collapsed).
 fn policy_to_token(p: AlgoPolicy) -> String {
     if p == AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast) {
         return "rb".to_string();
@@ -283,8 +283,8 @@ fn policy_to_token(p: AlgoPolicy) -> String {
     let mut token = format!("comp:{}", names.join(","));
     if p.chunks_per_level() > 1 {
         token.push_str(&format!(";chunks={}", p.chunks_per_level()));
-        if p.chunk_order() == ChunkOrder::ShortestFirst {
-            token.push_str(";order=scf");
+        if p.chunk_order() != ChunkOrder::Fifo {
+            token.push_str(&format!(";order={}", p.chunk_order().name()));
         }
     }
     token
@@ -928,15 +928,21 @@ mod tests {
         let chunked = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)
             .with_chunks(4)
             .with_chunk_order(ChunkOrder::ShortestFirst);
+        let balanced = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)
+            .with_chunks(2)
+            .with_chunk_order(ChunkOrder::LeastLoaded);
         t.record(ReduceOp::Sum, 4096, comp, 1.0);
         t.record(ReduceOp::Sum, 65536, chunked, 2.0);
+        t.record(ReduceOp::Sum, 1 << 20, balanced, 3.0);
         let json = t.to_json();
         assert!(json.contains("comp:rb,halving,ring"), "comp token serialized: {json}");
         assert!(json.contains("comp:rb;chunks=4;order=scf"), "chunk knobs serialized: {json}");
+        assert!(json.contains("comp:rb;chunks=2;order=ll"), "LL order serialized: {json}");
         let back = PolicyTable::from_json(&json).unwrap();
         assert_eq!(back.entries(), t.entries());
         assert_eq!(back.exact(ReduceOp::Sum, 4096).unwrap().policy, comp);
         assert_eq!(back.exact(ReduceOp::Sum, 65536).unwrap().policy, chunked);
+        assert_eq!(back.exact(ReduceOp::Sum, 1 << 20).unwrap().policy, balanced);
         // A composition naming more explicit levels than the clustering
         // has can only come from a hand edit under a different topology.
         let too_deep = json.replace("comp:rb,halving,ring", "comp:rb,rb,halving,ring");

@@ -53,19 +53,29 @@ impl Clustering {
                 )));
             }
         }
-        // Nestedness: same color at level l+1 implies same color at level l.
+        // Nestedness: same color at level l+1 implies same color at level
+        // l. Violations name the offending rank pair — discovery emits
+        // machine-generated tables, so "which ranks disagree" is the
+        // actionable part of the diagnostic.
         for l in 1..self.colors.len() {
-            let mut parent_of: std::collections::HashMap<u32, u32> = Default::default();
+            let mut parent_of: std::collections::HashMap<u32, (u32, usize)> = Default::default();
             for r in 0..n {
                 let child = self.colors[l][r];
                 let parent = self.colors[l - 1][r];
-                match parent_of.insert(child, parent) {
-                    Some(prev) if prev != parent => {
-                        return Err(Error::TopologySpec(format!(
-                            "level {l} cluster {child} spans parent clusters {prev} and {parent}"
-                        )));
+                match parent_of.entry(child) {
+                    std::collections::hash_map::Entry::Vacant(v) => {
+                        v.insert((parent, r));
                     }
-                    _ => {}
+                    std::collections::hash_map::Entry::Occupied(o) => {
+                        let &(prev, first) = o.get();
+                        if prev != parent {
+                            return Err(Error::TopologySpec(format!(
+                                "non-hierarchical clustering: level-{l} cluster {child} spans \
+                                 level-{} clusters {prev} and {parent} (ranks {first} and {r})",
+                                l - 1
+                            )));
+                        }
+                    }
                 }
             }
         }
@@ -248,6 +258,19 @@ mod tests {
         let site = vec![0, 1];
         let machine = vec![0, 0];
         assert!(Clustering::new(vec![world, site, machine]).is_err());
+    }
+
+    #[test]
+    fn nestedness_violation_names_the_offending_rank_pair() {
+        // Ranks 1 and 3 share machine cluster 1 but sit in different
+        // sites — the error must name exactly that pair.
+        let world = vec![0; 4];
+        let site = vec![0, 0, 1, 1];
+        let machine = vec![0, 1, 2, 1];
+        let err = Clustering::new(vec![world, site, machine]).unwrap_err().to_string();
+        assert!(err.contains("non-hierarchical"), "got: {err}");
+        assert!(err.contains("ranks 1 and 3"), "got: {err}");
+        assert!(err.contains("cluster 1"), "got: {err}");
     }
 
     #[test]

@@ -59,6 +59,33 @@ impl Communicator {
         }
     }
 
+    /// Bootstrap from a clustering inferred at runtime (see
+    /// [`crate::topology::discover`]): same group semantics as
+    /// [`Communicator::world`], but the colors table came from
+    /// measurements instead of a spec. The `topology_fingerprint` in
+    /// policy-table provenance covers only `(n_ranks, n_levels, colors)`,
+    /// so a discovered communicator interoperates with tables tuned on
+    /// the equivalent hand-written spec.
+    pub fn discovered(clustering: Clustering, name: impl Into<String>) -> Self {
+        let n = clustering.n_ranks();
+        Communicator {
+            world_ranks: Arc::new((0..n).collect()),
+            clustering: Arc::new(clustering),
+            name: format!("discovered[{}]", name.into()),
+            epoch: fresh_epoch(),
+        }
+    }
+
+    /// Infer the multilevel clustering from a measured cost matrix (at
+    /// the default probe size) and wrap it as a communicator.
+    pub fn from_matrix(m: &crate::topology::discover::CostMatrix) -> Result<Self> {
+        let d = crate::topology::discover::infer_clustering(
+            m,
+            crate::topology::discover::DEFAULT_PROBE_BYTES,
+        )?;
+        Ok(Communicator::discovered(d.clustering, m.name()))
+    }
+
     pub fn size(&self) -> usize {
         self.world_ranks.len()
     }
@@ -216,6 +243,21 @@ mod tests {
         let c = Communicator::unaware(8);
         assert_eq!(c.clustering().n_levels(), 1);
         assert_eq!(c.size(), 8);
+    }
+
+    #[test]
+    fn discovered_communicator_matches_the_spec_world() {
+        let spec = TopologySpec::paper_fig1();
+        let m = crate::topology::discover::synthesize_from_spec(
+            &spec,
+            &crate::model::presets::paper_grid(),
+            0.0,
+            5,
+        );
+        let c = Communicator::from_matrix(&m).unwrap();
+        assert_eq!(c.size(), 20);
+        assert_eq!(c.clustering(), Communicator::world(&spec).clustering());
+        assert!(c.name().starts_with("discovered["));
     }
 
     #[test]

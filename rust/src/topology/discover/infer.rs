@@ -1,0 +1,289 @@
+//! Agglomerative clustering inference with an automatic level-count cut.
+//!
+//! The algorithm is the logical-homogeneous-clusters idea specialized to
+//! the multilevel colors table:
+//!
+//! 1. Symmetrize the measured matrix into one scalar cost per unordered
+//!    rank pair (probe cost at [`super::DEFAULT_PROBE_BYTES`] by default).
+//! 2. Single-linkage agglomerative merge (Kruskal over ascending pair
+//!    costs): the sequence of costs at which two clusters first join is
+//!    the **merge-cost curve** — `n - 1` points, non-decreasing.
+//! 3. Gap heuristic: every consecutive ratio `>= MIN_GAP_RATIO` on the
+//!    curve is a level boundary; the cut threshold is the geometric mean
+//!    of the flanking merge costs. The number of gaps picks the level
+//!    count — nothing is configured up front.
+//! 4. For each cut (ascending), the connected components over edges
+//!    cheaper than the threshold are one level's clusters, numbered
+//!    densely in first-appearance (rank) order — exactly the numbering
+//!    [`TopologySpec::clustering`] emits, so noiseless recovery is
+//!    bit-identical (same `topology_fingerprint`).
+//!
+//! Nestedness is structural: the edge sets under increasing thresholds
+//! are themselves nested, so deeper levels always refine shallower ones
+//! and the emitted colors table passes [`Clustering::new`] validation by
+//! construction (which still checks — discovery depends on that invariant
+//! being enforced, not assumed).
+
+use crate::error::{Error, Result};
+use crate::topology::cluster::{Clustering, Rank};
+use crate::topology::discover::matrix::CostMatrix;
+use crate::topology::spec::{GroupNode, TopologySpec};
+
+/// Two consecutive merge costs whose ratio reaches this value mark a
+/// level boundary. Within one channel class, ±10% measurement jitter
+/// spreads costs by at most 1.1/0.9 ≈ 1.22×; across classes every
+/// calibrated preset separates by ≥ 3× — 2.0 sits safely between.
+pub const MIN_GAP_RATIO: f64 = 2.0;
+
+/// The result of [`infer_clustering`]: the clustering plus the evidence
+/// it was cut from.
+#[derive(Clone, Debug)]
+pub struct Discovery {
+    /// The inferred multilevel clustering (validated).
+    pub clustering: Clustering,
+    /// Single-linkage merge-cost curve, ascending (`n - 1` points).
+    pub merge_costs_us: Vec<f64>,
+    /// Chosen cut thresholds, ascending; `len() == n_levels() - 1`.
+    pub cut_costs_us: Vec<f64>,
+    /// Mean merge cost per band, ascending (innermost level first).
+    pub band_mean_cost_us: Vec<f64>,
+}
+
+/// Infer the multilevel clustering behind a measured cost matrix. The
+/// scalar pair cost is the symmetrized probe cost at `probe_bytes`.
+pub fn infer_clustering(m: &CostMatrix, probe_bytes: usize) -> Result<Discovery> {
+    let n = m.n_ranks();
+    // Symmetrized pair costs, ascending.
+    let mut edges: Vec<(f64, u32, u32)> = Vec::with_capacity(n * (n - 1) / 2);
+    for a in 0..n {
+        for b in (a + 1)..n {
+            let c = m.pair_cost_us(a, b, probe_bytes);
+            if !c.is_finite() || c <= 0.0 {
+                return Err(Error::TopologySpec(format!(
+                    "cannot infer clustering: pair ({a},{b}) has non-positive cost {c}"
+                )));
+            }
+            edges.push((c, a as u32, b as u32));
+        }
+    }
+    edges.sort_by(|x, y| x.0.total_cmp(&y.0));
+
+    // Pass 1 — the merge-cost curve (Kruskal: each edge that joins two
+    // components is one agglomerative merge).
+    let mut uf = UnionFind::new(n);
+    let mut merge_costs_us = Vec::with_capacity(n.saturating_sub(1));
+    for &(c, a, b) in &edges {
+        if uf.union(a as usize, b as usize) {
+            merge_costs_us.push(c);
+            if merge_costs_us.len() == n - 1 {
+                break;
+            }
+        }
+    }
+
+    // Gap heuristic: cut between consecutive merges whose ratio jumps.
+    let mut cut_costs_us = Vec::new();
+    for w in merge_costs_us.windows(2) {
+        if w[1] / w[0] >= MIN_GAP_RATIO {
+            cut_costs_us.push((w[0] * w[1]).sqrt());
+        }
+    }
+
+    // Pass 2 — component snapshot per cut (ascending thresholds), then
+    // reverse: the coarsest snapshot is level 1, the finest the deepest.
+    let mut uf = UnionFind::new(n);
+    let mut snapshots: Vec<Vec<u32>> = Vec::with_capacity(cut_costs_us.len());
+    let mut next_edge = 0;
+    for &t in &cut_costs_us {
+        while next_edge < edges.len() && edges[next_edge].0 < t {
+            let (_, a, b) = edges[next_edge];
+            uf.union(a as usize, b as usize);
+            next_edge += 1;
+        }
+        snapshots.push(uf.dense_labels());
+    }
+    let mut colors = vec![vec![0u32; n]];
+    colors.extend(snapshots.into_iter().rev());
+    let clustering = Clustering::new(colors)?;
+
+    // Mean merge cost per band, for reporting.
+    let mut band_mean_cost_us = Vec::with_capacity(cut_costs_us.len() + 1);
+    let mut band: Vec<f64> = Vec::new();
+    let mut cuts = cut_costs_us.iter().peekable();
+    for &c in &merge_costs_us {
+        if cuts.peek().is_some_and(|&&t| c > t) {
+            cuts.next();
+            band_mean_cost_us.push(mean(&band));
+            band.clear();
+        }
+        band.push(c);
+    }
+    if !band.is_empty() {
+        band_mean_cost_us.push(mean(&band));
+    }
+
+    Ok(Discovery { clustering, merge_costs_us, cut_costs_us, band_mean_cost_us })
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Round-trip a discovered clustering into a [`TopologySpec`] (`gridcollect
+/// discover --emit-spec`): level-`l` clusters become nested groups, the
+/// innermost level the machines. Requires every cluster to cover a
+/// contiguous rank range (always true of spec-sampled matrices; a
+/// permuted measurement cannot be expressed as a spec, whose DFS assigns
+/// ranks contiguously). A 1-level (flat) clustering becomes a single
+/// machine holding every rank — the spec form adds the machine level, so
+/// only clusterings with `n_levels() >= 2` round-trip exactly.
+pub fn spec_from_clustering(name: impl Into<String>, c: &Clustering) -> Result<TopologySpec> {
+    let n = c.n_ranks();
+    for l in 1..c.n_levels() {
+        for cluster in c.clusters_at(l) {
+            let members = c.members(l, cluster);
+            let (first, last) = (members[0], *members.last().unwrap());
+            if last - first + 1 != members.len() {
+                return Err(Error::TopologySpec(format!(
+                    "cluster {cluster} at level {l} is not rank-contiguous \
+                     (ranks {first}..={last} with gaps); cannot express as a spec"
+                )));
+            }
+        }
+    }
+    let all: Vec<Rank> = (0..n).collect();
+    let children = if c.n_levels() == 1 {
+        vec![GroupNode::machine("m0", n)]
+    } else {
+        group_nodes(c, 1, &all)
+    };
+    TopologySpec::new(name, GroupNode::group("discovered", children))
+}
+
+fn group_nodes(c: &Clustering, level: usize, members: &[Rank]) -> Vec<GroupNode> {
+    c.partition(members, level)
+        .into_iter()
+        .map(|group| {
+            let name = format!("l{level}c{}", c.color(level, group[0]));
+            if level + 1 == c.n_levels() {
+                GroupNode::machine(name, group.len())
+            } else {
+                GroupNode::group(name, group_nodes(c, level + 1, &group))
+            }
+        })
+        .collect()
+}
+
+/// Disjoint-set forest with path halving; `dense_labels` renumbers roots
+/// in first-appearance (rank) order, matching the colors-table numbering.
+struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n as u32).collect() }
+    }
+
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] as usize != x {
+            let grand = self.parent[self.parent[x] as usize];
+            self.parent[x] = grand;
+            x = grand as usize;
+        }
+        x
+    }
+
+    /// Join the sets of `a` and `b`; true if they were distinct.
+    fn union(&mut self, a: usize, b: usize) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        // Deterministic: smaller root wins (no rank balancing — the
+        // labels pass renumbers anyway, and paths stay short via halving).
+        let (lo, hi) = (ra.min(rb), ra.max(rb));
+        self.parent[hi] = lo as u32;
+        true
+    }
+
+    fn dense_labels(&mut self) -> Vec<u32> {
+        let n = self.parent.len();
+        let mut label: std::collections::HashMap<usize, u32> = Default::default();
+        let mut out = Vec::with_capacity(n);
+        for r in 0..n {
+            let root = self.find(r);
+            let next = label.len() as u32;
+            out.push(*label.entry(root).or_insert(next));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use crate::topology::discover::synth::synthesize_from_spec;
+    use crate::topology::discover::DEFAULT_PROBE_BYTES;
+
+    #[test]
+    fn recovers_fig1_exactly_from_a_noiseless_matrix() {
+        let spec = TopologySpec::paper_fig1();
+        let m = synthesize_from_spec(&spec, &presets::paper_grid(), 0.0, 1);
+        let d = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+        assert_eq!(d.clustering, spec.clustering());
+        assert_eq!(d.cut_costs_us.len(), 2, "3 levels -> 2 cuts");
+        assert_eq!(d.band_mean_cost_us.len(), 3);
+        assert_eq!(d.merge_costs_us.len(), 19);
+    }
+
+    #[test]
+    fn uniform_costs_infer_a_flat_clustering() {
+        let spec = TopologySpec::uniform(2, 2, 2).unwrap();
+        // Uniform network: every pair identical -> no gaps -> one level.
+        let m = synthesize_from_spec(&spec, &presets::uniform_lan(3), 0.0, 1);
+        let d = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+        assert_eq!(d.clustering, Clustering::flat(8));
+        assert!(d.cut_costs_us.is_empty());
+    }
+
+    #[test]
+    fn single_rank_matrix_is_flat() {
+        let m = CostMatrix::new("one", 1, vec![0.0], vec![f64::INFINITY]).unwrap();
+        let d = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+        assert_eq!(d.clustering, Clustering::flat(1));
+    }
+
+    #[test]
+    fn merge_curve_is_sorted_and_cuts_sit_in_gaps() {
+        let spec = TopologySpec::paper_experiment();
+        let m = synthesize_from_spec(&spec, &presets::paper_grid(), 0.05, 3);
+        let d = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+        for w in d.merge_costs_us.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        for &t in &d.cut_costs_us {
+            assert!(d.merge_costs_us.iter().all(|&c| c != t), "cut strictly between merges");
+        }
+        assert_eq!(d.clustering, spec.clustering(), "±5% jitter still recovers");
+    }
+
+    #[test]
+    fn spec_round_trip_preserves_the_clustering() {
+        let spec = TopologySpec::paper_fig1();
+        let c = spec.clustering();
+        let back = spec_from_clustering("rt", &c).unwrap();
+        assert_eq!(back.clustering(), c);
+        assert_eq!(back.n_procs(), 20);
+    }
+
+    #[test]
+    fn spec_round_trip_rejects_non_contiguous_clusters() {
+        // Ranks 0 and 2 share a machine, 1 sits in another: valid
+        // clustering, but no spec's DFS rank order can produce it.
+        let c = Clustering::new(vec![vec![0, 0, 0], vec![0, 1, 0]]).unwrap();
+        let err = spec_from_clustering("bad", &c).unwrap_err().to_string();
+        assert!(err.contains("not rank-contiguous"), "got: {err}");
+    }
+}

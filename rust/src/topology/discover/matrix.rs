@@ -1,0 +1,295 @@
+//! Measured inter-process cost matrices — the ingestion side of topology
+//! discovery.
+//!
+//! A [`CostMatrix`] holds one `(latency, bandwidth)` observation per
+//! ordered rank pair, the output of an N×N probe sweep (every process
+//! pings every other). The on-disk form is the TACOS-style CSV edge list:
+//!
+//! ```text
+//! 4                                    # rank count
+//! Src,Dest,Latency (ns),Bandwidth (GB/s)
+//! 0,1,30000000,0.002
+//! 0,2,500000,0.01
+//! ...
+//! ```
+//!
+//! Latencies are nanoseconds and bandwidths GB/s on disk (the TACOS
+//! convention); in memory everything is microseconds and MB/s (== bytes
+//! per microsecond), matching [`crate::model::LinkParams`]. Missing
+//! reverse directions are mirrored; a pair measured in neither direction
+//! is an error.
+
+use crate::error::{Error, Result};
+
+/// Probe payload used to collapse a `(latency, bandwidth)` measurement
+/// into one scalar cost during inference: small enough to stay
+/// latency-dominated (where level boundaries are sharpest), large enough
+/// that bandwidth still separates links with degenerate latencies.
+pub const DEFAULT_PROBE_BYTES: usize = 1024;
+
+/// An N×N matrix of measured point-to-point channel parameters.
+#[derive(Clone, Debug)]
+pub struct CostMatrix {
+    n: usize,
+    name: String,
+    /// Row-major `[src * n + dst]`, microseconds; diagonal 0.
+    latency_us: Vec<f64>,
+    /// Row-major, MB/s; diagonal +inf (a rank reaches itself for free).
+    bandwidth_mb_s: Vec<f64>,
+}
+
+impl CostMatrix {
+    /// Build from dense row-major tables. Validates shape and that every
+    /// off-diagonal entry is a usable measurement.
+    pub fn new(
+        name: impl Into<String>,
+        n: usize,
+        latency_us: Vec<f64>,
+        bandwidth_mb_s: Vec<f64>,
+    ) -> Result<CostMatrix> {
+        if n == 0 {
+            return Err(Error::Config("cost matrix needs >= 1 rank".into()));
+        }
+        if latency_us.len() != n * n || bandwidth_mb_s.len() != n * n {
+            return Err(Error::Config(format!(
+                "cost matrix tables must be {n}x{n} ({} entries), got {} latencies and {} bandwidths",
+                n * n,
+                latency_us.len(),
+                bandwidth_mb_s.len()
+            )));
+        }
+        for src in 0..n {
+            for dst in 0..n {
+                if src == dst {
+                    continue;
+                }
+                let lat = latency_us[src * n + dst];
+                let bw = bandwidth_mb_s[src * n + dst];
+                if !lat.is_finite() || lat < 0.0 {
+                    return Err(Error::Config(format!(
+                        "cost matrix ({src},{dst}): bad latency {lat}"
+                    )));
+                }
+                if bw <= 0.0 || bw.is_nan() {
+                    return Err(Error::Config(format!(
+                        "cost matrix ({src},{dst}): bad bandwidth {bw}"
+                    )));
+                }
+            }
+        }
+        Ok(CostMatrix { n, name: name.into(), latency_us, bandwidth_mb_s })
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn latency_us(&self, src: usize, dst: usize) -> f64 {
+        self.latency_us[src * self.n + dst]
+    }
+
+    pub fn bandwidth_mb_s(&self, src: usize, dst: usize) -> f64 {
+        self.bandwidth_mb_s[src * self.n + dst]
+    }
+
+    /// Directed probe cost (the `l + N/b` of §4) for a payload of
+    /// `probe_bytes`.
+    pub fn cost_us(&self, src: usize, dst: usize, probe_bytes: usize) -> f64 {
+        self.latency_us(src, dst) + probe_bytes as f64 / self.bandwidth_mb_s(src, dst)
+    }
+
+    /// Symmetrized pair cost: the mean of the two directions (real probe
+    /// sweeps are never perfectly symmetric; inference works on the
+    /// undirected view).
+    pub fn pair_cost_us(&self, a: usize, b: usize, probe_bytes: usize) -> f64 {
+        0.5 * (self.cost_us(a, b, probe_bytes) + self.cost_us(b, a, probe_bytes))
+    }
+
+    /// Serialize as a TACOS-style CSV edge list (diagonal omitted).
+    pub fn to_tacos_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.n));
+        out.push_str("Src,Dest,Latency (ns),Bandwidth (GB/s)\n");
+        for src in 0..self.n {
+            for dst in 0..self.n {
+                if src == dst {
+                    continue;
+                }
+                let lat_ns = self.latency_us(src, dst) * 1000.0;
+                let bw_gb_s = self.bandwidth_mb_s(src, dst) / 1000.0;
+                out.push_str(&format!("{src},{dst},{lat_ns},{bw_gb_s}\n"));
+            }
+        }
+        out
+    }
+
+    /// Parse a TACOS-style CSV edge list. Pairs measured in only one
+    /// direction are mirrored; pairs measured in neither are an error
+    /// naming the first missing one.
+    pub fn from_tacos_csv(name: impl Into<String>, text: &str) -> Result<CostMatrix> {
+        let mut lines = text
+            .lines()
+            .enumerate()
+            .map(|(i, l)| (i + 1, l.trim()))
+            .filter(|&(_, l)| !l.is_empty() && !l.starts_with('#'));
+        let (_, first) = lines
+            .next()
+            .ok_or_else(|| Error::Config("matrix csv: empty file".into()))?;
+        let n: usize = first
+            .parse()
+            .map_err(|_| Error::Config(format!("matrix csv: bad rank count '{first}'")))?;
+        if n == 0 {
+            return Err(Error::Config("matrix csv: rank count must be >= 1".into()));
+        }
+        let mut latency_us = vec![0.0f64; n * n];
+        let mut bandwidth_mb_s = vec![f64::INFINITY; n * n];
+        let mut seen = vec![false; n * n];
+        for (lineno, line) in lines {
+            // Header row(s): anything whose first field is not a rank id.
+            if line.split(',').next().is_some_and(|f| f.trim().parse::<usize>().is_err()) {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+            if fields.len() != 4 {
+                return Err(Error::Config(format!(
+                    "matrix csv line {lineno}: expected 'src,dest,latency_ns,bandwidth_gb_s', got '{line}'"
+                )));
+            }
+            let src: usize = parse_field(fields[0], "src rank", lineno)?;
+            let dst: usize = parse_field(fields[1], "dest rank", lineno)?;
+            if src >= n || dst >= n {
+                return Err(Error::Config(format!(
+                    "matrix csv line {lineno}: rank pair ({src},{dst}) out of range for {n} ranks"
+                )));
+            }
+            if src == dst {
+                continue; // self-edges carry no information
+            }
+            let lat_ns: f64 = parse_field(fields[2], "latency", lineno)?;
+            let bw_gb_s: f64 = parse_field(fields[3], "bandwidth", lineno)?;
+            latency_us[src * n + dst] = lat_ns / 1000.0;
+            bandwidth_mb_s[src * n + dst] = bw_gb_s * 1000.0;
+            seen[src * n + dst] = true;
+        }
+        for a in 0..n {
+            for b in 0..n {
+                if a == b || seen[a * n + b] {
+                    continue;
+                }
+                if seen[b * n + a] {
+                    latency_us[a * n + b] = latency_us[b * n + a];
+                    bandwidth_mb_s[a * n + b] = bandwidth_mb_s[b * n + a];
+                } else {
+                    return Err(Error::Config(format!(
+                        "matrix csv: no measurement for rank pair ({a},{b}) in either direction"
+                    )));
+                }
+            }
+        }
+        CostMatrix::new(name, n, latency_us, bandwidth_mb_s)
+    }
+
+    /// Load a TACOS-style CSV from disk; the matrix is named after the
+    /// file.
+    pub fn load_tacos_csv(path: &str) -> Result<CostMatrix> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        CostMatrix::from_tacos_csv(path, &text)
+    }
+
+    /// Write the TACOS-style CSV form to disk.
+    pub fn save_tacos_csv(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_tacos_csv()).map_err(|e| Error::io(path, e))
+    }
+}
+
+fn parse_field<T: std::str::FromStr>(field: &str, what: &str, lineno: usize) -> Result<T> {
+    field
+        .parse()
+        .map_err(|_| Error::Config(format!("matrix csv line {lineno}: bad {what} '{field}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_rank() -> CostMatrix {
+        CostMatrix::new(
+            "t",
+            2,
+            vec![0.0, 500.0, 500.0, 0.0],
+            vec![f64::INFINITY, 10.0, 10.0, f64::INFINITY],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn costs_follow_the_postal_model() {
+        let m = two_rank();
+        // 500us + 1024B / 10 MB/s = 602.4us
+        assert!((m.cost_us(0, 1, 1024) - 602.4).abs() < 1e-9);
+        assert_eq!(m.cost_us(0, 0, 1024), 0.0, "diagonal is free");
+        assert!((m.pair_cost_us(0, 1, 1024) - 602.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_round_trip_is_exact() {
+        let m = two_rank();
+        let csv = m.to_tacos_csv();
+        let back = CostMatrix::from_tacos_csv("t", &csv).unwrap();
+        assert_eq!(back.n_ranks(), 2);
+        assert_eq!(back.latency_us(0, 1), m.latency_us(0, 1));
+        assert_eq!(back.bandwidth_mb_s(1, 0), m.bandwidth_mb_s(1, 0));
+    }
+
+    #[test]
+    fn csv_units_are_tacos_conventions() {
+        // 30ms / 2 MB/s on the wire: 30_000_000 ns and 0.002 GB/s on disk.
+        let m = CostMatrix::new(
+            "t",
+            2,
+            vec![0.0, 30_000.0, 30_000.0, 0.0],
+            vec![f64::INFINITY, 2.0, 2.0, f64::INFINITY],
+        )
+        .unwrap();
+        let csv = m.to_tacos_csv();
+        assert!(csv.contains("0,1,30000000,0.002"), "csv:\n{csv}");
+    }
+
+    #[test]
+    fn one_directional_measurements_are_mirrored() {
+        let csv = "2\nSrc,Dest,Latency (ns),Bandwidth (GB/s)\n0,1,1000,1\n";
+        let m = CostMatrix::from_tacos_csv("t", csv).unwrap();
+        assert_eq!(m.latency_us(1, 0), 1.0);
+        assert_eq!(m.bandwidth_mb_s(1, 0), 1000.0);
+    }
+
+    #[test]
+    fn missing_pair_is_an_error_naming_it() {
+        let csv = "3\nSrc,Dest,Latency (ns),Bandwidth (GB/s)\n0,1,1000,1\n0,2,1000,1\n";
+        let err = CostMatrix::from_tacos_csv("t", csv).unwrap_err().to_string();
+        assert!(err.contains("(1,2)"), "got: {err}");
+    }
+
+    #[test]
+    fn malformed_rows_are_rejected_with_line_numbers() {
+        assert!(CostMatrix::from_tacos_csv("t", "").is_err());
+        assert!(CostMatrix::from_tacos_csv("t", "x\n").is_err());
+        let bad_fields = "2\nheader\n0,1,1000\n";
+        assert!(CostMatrix::from_tacos_csv("t", bad_fields).is_err());
+        let bad_rank = "2\nheader\n0,5,1000,1\n";
+        assert!(CostMatrix::from_tacos_csv("t", bad_rank).is_err());
+        let bad_bw = "2\nheader\n0,1,1000,0\n1,0,1000,1\n";
+        assert!(CostMatrix::from_tacos_csv("t", bad_bw).is_err());
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(CostMatrix::new("t", 0, vec![], vec![]).is_err());
+        assert!(CostMatrix::new("t", 2, vec![0.0; 3], vec![1.0; 4]).is_err());
+        assert!(CostMatrix::new("t", 2, vec![0.0, -1.0, 0.0, 0.0], vec![1.0; 4]).is_err());
+    }
+}

@@ -1,0 +1,65 @@
+//! Automatic topology discovery — the missing front half of the paper's
+//! pipeline (§3.1 promises clusterings "constructed automatically during
+//! execution"; everything upstream of this module hand-specifies them).
+//!
+//! The flow is measurement-driven: a [`CostMatrix`] of per-pair latency /
+//! bandwidth observations (loaded from a TACOS-style CSV edge list, or
+//! synthesized from a ground-truth [`crate::topology::TopologySpec`]
+//! through the [`crate::model::NetworkParams`] cost model) is fed to
+//! [`infer_clustering`], which runs a single-linkage agglomerative merge
+//! on link-cost similarity and cuts the merge-cost curve at its large
+//! gaps (the automatic level-count choice). The result is a validated
+//! multilevel [`crate::topology::Clustering`] that the rest of the stack
+//! — tree builders, tuners, policy tables — consumes exactly as if it had
+//! been hand-written: on a noiseless synthetic matrix the inferred
+//! clustering fingerprints identically to the spec it was sampled from,
+//! so a `PolicyTable` tuned on a discovered communicator installs on the
+//! hand-specified one without a provenance mismatch.
+
+mod infer;
+mod matrix;
+mod synth;
+
+pub use infer::{infer_clustering, spec_from_clustering, Discovery, MIN_GAP_RATIO};
+pub use matrix::{CostMatrix, DEFAULT_PROBE_BYTES};
+pub use synth::{synthesize_from_clustering, synthesize_from_spec};
+
+use crate::topology::spec::{GroupNode, NodeKind, TopologySpec};
+
+/// Render a spec as an indented tree (the `gridcollect discover
+/// --emit-spec` output): one line per group/machine, machines with their
+/// process counts.
+pub fn render_spec_tree(spec: &TopologySpec) -> String {
+    fn rec(node: &GroupNode, depth: usize, out: &mut String) {
+        let indent = "  ".repeat(depth);
+        match &node.kind {
+            NodeKind::Machine { procs } => {
+                out.push_str(&format!("{indent}{} ({procs} procs)\n", node.name));
+            }
+            NodeKind::Group(children) => {
+                out.push_str(&format!("{indent}{}/\n", node.name));
+                for c in children {
+                    rec(c, depth + 1, out);
+                }
+            }
+        }
+    }
+    let mut out = String::new();
+    rec(spec.root(), 0, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_lists_every_machine() {
+        let spec = TopologySpec::paper_fig1();
+        let r = render_spec_tree(&spec);
+        for m in spec.machines() {
+            assert!(r.contains(&m.name), "missing machine {} in:\n{r}", m.name);
+        }
+        assert!(r.contains("(10 procs)"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Synthetic measurement generation: sample a ground-truth clustering
+//! through the [`NetworkParams`] cost model to produce the matrix a real
+//! N×N probe sweep would have measured on that grid.
+//!
+//! The generator is the test bed for inference: with `noise == 0` the
+//! matrix is exactly the model's per-separation channel table, so
+//! [`super::infer_clustering`] must reproduce the ground-truth clustering
+//! bit-for-bit (same `topology_fingerprint`); with jitter it exercises
+//! the gap heuristic's tolerance.
+
+use crate::model::NetworkParams;
+use crate::topology::cluster::Clustering;
+use crate::topology::discover::matrix::CostMatrix;
+use crate::topology::spec::TopologySpec;
+use crate::util::rng::Rng;
+
+/// Sample a measured matrix from a ground-truth clustering: each ordered
+/// pair `(a, b)` reports the latency/bandwidth of the channel class at
+/// their separation level, independently jittered by up to
+/// `±noise` (relative; `0.0` is exact, `0.1` is ±10%). Deterministic in
+/// `seed`.
+pub fn synthesize_from_clustering(
+    clustering: &Clustering,
+    params: &NetworkParams,
+    name: impl Into<String>,
+    noise: f64,
+    seed: u64,
+) -> CostMatrix {
+    assert!((0.0..1.0).contains(&noise), "noise must be in [0, 1), got {noise}");
+    let n = clustering.n_ranks();
+    let mut rng = Rng::new(seed);
+    let mut latency_us = vec![0.0f64; n * n];
+    let mut bandwidth_mb_s = vec![f64::INFINITY; n * n];
+    for src in 0..n {
+        for dst in 0..n {
+            if src == dst {
+                continue;
+            }
+            let link = params.at_sep(clustering.sep(src, dst));
+            latency_us[src * n + dst] = link.latency_us * jitter(&mut rng, noise);
+            bandwidth_mb_s[src * n + dst] = link.bandwidth_mb_s * jitter(&mut rng, noise);
+        }
+    }
+    CostMatrix::new(name, n, latency_us, bandwidth_mb_s)
+        .expect("synthesized matrix is valid by construction")
+}
+
+/// [`synthesize_from_clustering`] on a spec's derived clustering; the
+/// matrix is named after the spec.
+pub fn synthesize_from_spec(
+    spec: &TopologySpec,
+    params: &NetworkParams,
+    noise: f64,
+    seed: u64,
+) -> CostMatrix {
+    synthesize_from_clustering(&spec.clustering(), params, spec.name.clone(), noise, seed)
+}
+
+fn jitter(rng: &mut Rng, noise: f64) -> f64 {
+    if noise == 0.0 {
+        1.0
+    } else {
+        1.0 + (rng.f64() * 2.0 - 1.0) * noise
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+
+    #[test]
+    fn noiseless_matrix_is_exactly_the_model_table() {
+        let spec = TopologySpec::paper_fig1();
+        let params = presets::paper_grid();
+        let m = synthesize_from_spec(&spec, &params, 0.0, 7);
+        let c = spec.clustering();
+        // Same machine (ranks 0,5): intra link, exactly.
+        assert_eq!(m.latency_us(0, 5), params.at_sep(c.sep(0, 5)).latency_us);
+        // WAN pair (0, 10).
+        assert_eq!(m.latency_us(0, 10), 30_000.0);
+        assert_eq!(m.bandwidth_mb_s(0, 10), 2.0);
+    }
+
+    #[test]
+    fn noise_is_bounded_and_deterministic() {
+        let spec = TopologySpec::paper_fig1();
+        let params = presets::paper_grid();
+        let a = synthesize_from_spec(&spec, &params, 0.1, 42);
+        let b = synthesize_from_spec(&spec, &params, 0.1, 42);
+        let other = synthesize_from_spec(&spec, &params, 0.1, 43);
+        let mut any_differs = false;
+        for src in 0..20 {
+            for dst in 0..20 {
+                if src == dst {
+                    continue;
+                }
+                assert_eq!(a.latency_us(src, dst), b.latency_us(src, dst), "same seed");
+                let truth = params.at_sep(spec.clustering().sep(src, dst)).latency_us;
+                let rel = (a.latency_us(src, dst) - truth).abs() / truth;
+                assert!(rel <= 0.1 + 1e-12, "jitter bound at ({src},{dst}): {rel}");
+                any_differs |= a.latency_us(src, dst) != other.latency_us(src, dst);
+            }
+        }
+        assert!(any_differs, "different seeds must differ somewhere");
+    }
+}

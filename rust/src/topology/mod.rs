@@ -1,11 +1,14 @@
 //! Grid topology: declarative specs, the RSL front-end (Fig. 5/6), the
-//! multilevel clustering table (§3.1), and topology-carrying communicators.
+//! multilevel clustering table (§3.1), topology-carrying communicators,
+//! and measurement-driven clustering discovery.
 
 pub mod cluster;
 pub mod comm;
+pub mod discover;
 pub mod rsl;
 pub mod spec;
 
 pub use cluster::{Clustering, Rank};
 pub use comm::Communicator;
+pub use discover::{CostMatrix, Discovery};
 pub use spec::{GroupNode, MachineInfo, NodeKind, TopologySpec};

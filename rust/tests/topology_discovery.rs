@@ -1,0 +1,175 @@
+//! Tier-2 property tests: topology discovery end to end.
+//!
+//! Inference on noiseless synthetic matrices must reproduce the exact
+//! ground-truth clustering (same `topology_fingerprint`) across hierarchy
+//! shapes — flat, 2-level, 3-level asymmetric, 4-level deep — stay robust
+//! to ±10% measurement jitter, survive the TACOS CSV round trip, and
+//! close the loop: a `PolicyTable` tuned on a *discovered* communicator
+//! installs on the matching *hand-specified* session without a
+//! provenance mismatch.
+
+use gridcollect::model::{presets, NetworkParams};
+use gridcollect::netsim::ReduceOp;
+use gridcollect::session::table::topology_fingerprint;
+use gridcollect::session::GridSession;
+use gridcollect::topology::discover::{
+    infer_clustering, spec_from_clustering, synthesize_from_clustering, synthesize_from_spec,
+    CostMatrix, DEFAULT_PROBE_BYTES,
+};
+use gridcollect::topology::{Clustering, Communicator, GroupNode, TopologySpec};
+use gridcollect::tree::Strategy;
+
+/// 4-level ground truth: 2 sites x 2 LANs x 2 machines x 3 procs.
+fn deep_spec() -> TopologySpec {
+    TopologySpec::new(
+        "deep",
+        GroupNode::group(
+            "grid",
+            (0..2)
+                .map(|s| {
+                    GroupNode::group(
+                        format!("site{s}"),
+                        (0..2)
+                            .map(|l| {
+                                GroupNode::group(
+                                    format!("s{s}lan{l}"),
+                                    (0..2)
+                                        .map(|m| GroupNode::machine(format!("s{s}l{l}m{m}"), 3))
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        ),
+    )
+    .unwrap()
+}
+
+/// 2-level asymmetric ground truth: one interconnect, three SMPs of
+/// different widths.
+fn smp_spec() -> TopologySpec {
+    TopologySpec::new(
+        "smps",
+        GroupNode::group(
+            "interconnect",
+            vec![
+                GroupNode::machine("smp0", 6),
+                GroupNode::machine("smp1", 4),
+                GroupNode::machine("smp2", 2),
+            ],
+        ),
+    )
+    .unwrap()
+}
+
+/// Every ground truth: (tag, clustering, params it is sampled through).
+/// The flat case must come from [`Clustering::flat`] directly — a spec
+/// always carries the machine level, so no spec is ever 1-level.
+fn ground_truths() -> Vec<(&'static str, Clustering, NetworkParams)> {
+    vec![
+        ("flat", Clustering::flat(12), presets::uniform_lan(1)),
+        ("2-level-smps", smp_spec().clustering(), presets::cluster_of_smps()),
+        ("3-level-fig1", TopologySpec::paper_fig1().clustering(), presets::paper_grid()),
+        ("3-level-exp", TopologySpec::paper_experiment().clustering(), presets::paper_grid()),
+        ("4-level-deep", deep_spec().clustering(), presets::deep_grid()),
+    ]
+}
+
+#[test]
+fn noiseless_inference_reproduces_every_ground_truth_exactly() {
+    for (tag, truth, params) in ground_truths() {
+        let m = synthesize_from_clustering(&truth, &params, tag, 0.0, 1);
+        let d = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+        assert_eq!(d.clustering, truth, "{tag}: clustering mismatch");
+        assert_eq!(
+            topology_fingerprint(&Communicator::discovered(d.clustering, tag)),
+            topology_fingerprint(&Communicator::discovered(truth, "truth")),
+            "{tag}: fingerprint mismatch"
+        );
+    }
+}
+
+#[test]
+fn discovered_communicator_fingerprints_like_the_spec_world() {
+    for spec in [TopologySpec::paper_fig1(), TopologySpec::paper_experiment(), deep_spec()] {
+        let params = if spec.n_levels() == 4 {
+            presets::deep_grid()
+        } else {
+            presets::paper_grid()
+        };
+        let m = synthesize_from_spec(&spec, &params, 0.0, 2);
+        let disc = Communicator::from_matrix(&m).unwrap();
+        let hand = Communicator::world(&spec);
+        assert_eq!(
+            topology_fingerprint(&disc),
+            topology_fingerprint(&hand),
+            "{}: discovered vs hand-specified fingerprint",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn ten_percent_jitter_still_recovers_every_hierarchy() {
+    for (tag, truth, params) in ground_truths() {
+        for seed in 1..=5u64 {
+            let m = synthesize_from_clustering(&truth, &params, tag, 0.10, seed);
+            let d = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+            assert_eq!(d.clustering, truth, "{tag} seed {seed}: jitter broke recovery");
+        }
+    }
+}
+
+#[test]
+fn tacos_csv_round_trip_preserves_inference() {
+    let spec = TopologySpec::paper_experiment();
+    let m = synthesize_from_spec(&spec, &presets::paper_grid(), 0.05, 9);
+    let path = std::env::temp_dir().join(format!("gridcollect_matrix_{}.csv", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    m.save_tacos_csv(&path).unwrap();
+    let loaded = CostMatrix::load_tacos_csv(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let a = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+    let b = infer_clustering(&loaded, DEFAULT_PROBE_BYTES).unwrap();
+    assert_eq!(a.clustering, b.clustering, "CSV round trip changed the inference");
+    assert_eq!(b.clustering, spec.clustering());
+}
+
+#[test]
+fn emitted_spec_reproduces_the_discovered_clustering() {
+    let m = synthesize_from_spec(&deep_spec(), &presets::deep_grid(), 0.0, 1);
+    let d = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+    let spec = spec_from_clustering("rt", &d.clustering).unwrap();
+    assert_eq!(spec.clustering(), d.clustering, "--emit-spec round trip");
+    assert_eq!(spec.n_procs(), 24);
+}
+
+#[test]
+fn table_tuned_on_a_discovered_communicator_installs_on_the_hand_specified_one() {
+    let spec = TopologySpec::paper_fig1();
+    let m = synthesize_from_spec(&spec, &presets::paper_grid(), 0.0, 1);
+    let disc = Communicator::from_matrix(&m).unwrap();
+    let tuned = GridSession::new(&disc, presets::paper_grid(), Strategy::Multilevel);
+    let sizes = [4096usize, 65536];
+    let (_, table) = tuned.tune_boundary(ReduceOp::Sum, &sizes).unwrap();
+
+    let path =
+        std::env::temp_dir().join(format!("gridcollect_disc_policy_{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    table.save(&path).unwrap();
+
+    let hand = Communicator::world(&spec);
+    let installed = GridSession::new(&hand, presets::paper_grid(), Strategy::Multilevel)
+        .with_policy_file(&path);
+    let _ = std::fs::remove_file(&path);
+    let session = installed.expect("discovered provenance must match the hand-specified session");
+    for &bytes in &sizes {
+        assert_eq!(
+            session.resolve_policy(ReduceOp::Sum, bytes).unwrap(),
+            table.best_for(ReduceOp::Sum, bytes).unwrap(),
+            "argmin at {bytes} bytes"
+        );
+    }
+}
