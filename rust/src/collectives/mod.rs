@@ -534,6 +534,25 @@ impl<'a> CollectiveEngine<'a> {
         self.execute_timing_into(&plan.program, &plan.channels, &plan.shards, init, out)
     }
 
+    /// A `Send + Sync` ghost-probing view of this engine for the
+    /// parallel driver layer (tuner fan-out, sweep points): same
+    /// communicator, cost model, strategy, policy and shared plan
+    /// cache / scratch, none of the engine's `!Sync` combiner borrows.
+    /// Probes through it are bit-identical to
+    /// [`CollectiveEngine::simulate_timing_into`] on a sequential
+    /// engine. Borrows the communicator at `'a`, so the prober may
+    /// outlive a temporary engine view (the `GridSession` pattern).
+    pub fn ghost_prober(&self) -> GhostProber<'a> {
+        GhostProber {
+            comm: self.comm,
+            cfg: self.cfg.clone(),
+            strategy: self.strategy,
+            policy: self.policy.clone(),
+            cache: self.cache.clone(),
+            scratch: self.scratch.clone(),
+        }
+    }
+
     /// MPI_Bcast: `data` flows from `root` to every rank.
     /// `Outcome::data[r]` = the buffer received at rank `r`.
     #[doc(hidden)] // migrating: use `GridSession` (see README migration table)
@@ -693,6 +712,117 @@ impl<'a> CollectiveEngine<'a> {
             }
         }
         Ok(best)
+    }
+}
+
+/// A thread-shareable **ghost-probing view** of an engine, built by
+/// [`CollectiveEngine::ghost_prober`]. The engine itself borrows a
+/// `&dyn Combiner` that is not necessarily `Sync`, so it cannot cross
+/// threads; ghost probes never combine data, so the prober drops the
+/// combiner and keeps only the communicator borrow, the cost model and
+/// the shared plan cache / scratch pool. The parallel driver layer
+/// (`util::par`) hands one prober to every worker.
+///
+/// Probes run the **sequential** ghost engine: each worker simulates
+/// whole probes independently (the fan-out parallelism is across probes,
+/// not within one), which keeps every `SimResult` bit-identical to a
+/// serial probe on a sequential engine. Warm probes pop a recycled ghost
+/// arena from the shared [`ExecScratch`] pool, so a lone caller
+/// allocates nothing at all and `k` concurrent workers settle on `k`
+/// pooled arenas.
+pub struct GhostProber<'a> {
+    comm: &'a Communicator,
+    cfg: SimConfig,
+    strategy: Strategy,
+    policy: LevelPolicy,
+    cache: Arc<PlanCache>,
+    scratch: Arc<ExecScratch>,
+}
+
+// The whole point of the prober: it must cross scoped-thread spawns.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<GhostProber<'static>>();
+};
+
+impl<'a> GhostProber<'a> {
+    pub fn comm(&self) -> &'a Communicator {
+        self.comm
+    }
+
+    /// Mirror of [`CollectiveEngine::plan_for`]: identical validation,
+    /// identical [`PlanKey`], same shared cache — a probe warms the
+    /// cache for the engine and vice versa.
+    pub fn plan_for(
+        &self,
+        root: Rank,
+        op: OpKind,
+        segments: usize,
+    ) -> Result<Arc<CollectivePlan>> {
+        if root >= self.comm.size() {
+            return Err(Error::Comm(format!(
+                "root {root} out of range for {}-rank communicator",
+                self.comm.size()
+            )));
+        }
+        self.cache.get_or_build(
+            self.comm,
+            PlanKey {
+                comm_epoch: self.comm.epoch(),
+                strategy: self.strategy,
+                policy: self.policy.clone(),
+                root,
+                op,
+                segments,
+            },
+        )
+    }
+
+    /// Mirror of [`CollectiveEngine::simulate_timing_into`] on a
+    /// sequential engine: plan (warm: cache hit), encode ghost shapes,
+    /// run the timing-only simulator into `out`. On error, `out` is left
+    /// in an unspecified partially-written state.
+    pub fn simulate_timing_into(&self, request: &dyn OpSpec, out: &mut SimResult) -> Result<()> {
+        let plan = self.plan_for(request.root(), request.op_kind(), request.segments())?;
+        let init = request.encode_ghost(self.comm)?;
+        let mut scratch = self.scratch.ghost();
+        run_timing_indexed_scratch_into(
+            self.comm.clustering(),
+            &plan.program,
+            &plan.channels,
+            init,
+            &self.cfg,
+            &mut scratch,
+            out,
+        )
+    }
+
+    /// Mirror of [`CollectiveEngine::run_schedule_timing`] on a
+    /// sequential engine, into a caller-owned buffer: one timing-only
+    /// simulation of a fused schedule's whole program.
+    pub fn run_schedule_timing_into(
+        &self,
+        schedule: &Schedule,
+        init: Vec<GhostPayload>,
+        out: &mut SimResult,
+    ) -> Result<()> {
+        if schedule.comm_epoch() != self.comm.epoch() {
+            return Err(Error::Comm(format!(
+                "schedule epoch {} does not match communicator epoch {}",
+                schedule.comm_epoch(),
+                self.comm.epoch()
+            )));
+        }
+        let mut scratch = self.scratch.ghost();
+        run_timing_indexed_scratch_into(
+            self.comm.clustering(),
+            schedule.program(),
+            schedule.channels(),
+            init,
+            &self.cfg,
+            &mut scratch,
+            out,
+        )
     }
 }
 

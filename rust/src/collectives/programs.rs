@@ -241,7 +241,7 @@ enum EdgeStyle {
 }
 
 fn edge_style(policy: AlgoPolicy, sep: usize, n_members: usize) -> EdgeStyle {
-    let chunks = policy.chunks_per_level();
+    let chunks = policy.chunks_at(sep);
     let k = match policy.level_algo_at(sep) {
         LevelAlgo::RsAgRing => return EdgeStyle::Split,
         // Distance halving always splits the map at least in two.

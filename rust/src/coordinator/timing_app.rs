@@ -26,13 +26,17 @@
 //! exactly one engine invocation (asserted in
 //! `rust/tests/fused_timing.rs`).
 
+use crate::collectives::GhostProber;
 use crate::error::Result;
 use crate::model::NetworkParams;
-use crate::netsim::{run, ExecMode, GhostPayload, Merge, Payload, Program, SendPart, SimConfig};
+use crate::netsim::{
+    run, ExecMode, GhostPayload, Merge, Payload, Program, SendPart, SimConfig, SimResult,
+};
 use crate::plan::{OpKind, PlanCache, Schedule};
 use crate::session::GridSession;
 use crate::topology::Communicator;
 use crate::tree::Strategy;
+use crate::util::par;
 use std::sync::Arc;
 
 /// One sweep point of the Fig. 8 curve.
@@ -113,8 +117,40 @@ pub fn run_point_with(session: &GridSession, bytes: usize) -> Result<TimingPoint
     let mut init = vec![GhostPayload::empty(); n];
     init[0] = GhostPayload::single(0, bytes / 4);
     let sim = session.run_schedule_timing(&schedule, init)?;
-    let durations = schedule.segment_durations(&sim)?;
+    point_from_segments(&schedule, &sim, session.strategy(), bytes, n)
+}
 
+/// The ghost-run core of [`run_point_with`], driven through a
+/// [`GhostProber`] so independent sweep points can fan out across worker
+/// threads ([`fig8_sweep_with_mode`]): one timing-only run of the fused
+/// rotation into the caller's pooled result buffer, then the per-segment
+/// decomposition. Bit-identical to [`run_point_with`] on the same
+/// (strategy, size) point.
+fn run_point_ghost(
+    prober: &GhostProber<'_>,
+    schedule: &Schedule,
+    strategy: Strategy,
+    bytes: usize,
+    sim: &mut SimResult,
+) -> Result<TimingPoint> {
+    assert_eq!(bytes % 4, 0, "message size must be f32-aligned");
+    let n = prober.comm().size();
+    let mut init = vec![GhostPayload::empty(); n];
+    init[0] = GhostPayload::single(0, bytes / 4);
+    prober.run_schedule_timing_into(schedule, init, sim)?;
+    point_from_segments(schedule, sim, strategy, bytes, n)
+}
+
+/// Decompose one fused-rotation result into the Fig. 8 point (total,
+/// per-phase means, broadcast message accounting).
+fn point_from_segments(
+    schedule: &Schedule,
+    sim: &SimResult,
+    strategy: Strategy,
+    bytes: usize,
+    n: usize,
+) -> Result<TimingPoint> {
+    let durations = schedule.segment_durations(sim)?;
     let mut bcast_us_sum = 0.0;
     let mut ack_us_sum = 0.0;
     let mut wan_msgs = 0;
@@ -131,7 +167,7 @@ pub fn run_point_with(session: &GridSession, bytes: usize) -> Result<TimingPoint
     }
     Ok(TimingPoint {
         bytes,
-        strategy: session.strategy(),
+        strategy,
         total_us: sim.makespan_us,
         mean_bcast_us: bcast_us_sum / n as f64,
         mean_ack_us: ack_us_sum / n as f64,
@@ -221,9 +257,11 @@ pub fn fig8_sweep(
 }
 
 /// [`fig8_sweep`] under an explicit execution mode — the `--threads`
-/// CLI flag routes here. Every point is a ghost run, so sharded mode
-/// engages the cluster-parallel engine directly (timing is
-/// bitwise-identical to sequential by construction).
+/// CLI flag routes here. Sweep points are independent ghost runs, so
+/// `ExecMode::Sharded { threads }` fans the whole size × strategy point
+/// grid across `threads` workers (each point simulated sequentially by
+/// one worker through a [`GhostProber`]); results merge back in
+/// size-major order, bitwise-identical to the sequential sweep.
 pub fn fig8_sweep_with_mode(
     comm: &Communicator,
     params: &NetworkParams,
@@ -242,11 +280,36 @@ pub fn fig8_sweep_with_mode(
                 .with_exec_mode(mode)
         })
         .collect();
-    let mut out = Vec::with_capacity(sizes.len() * strategies.len());
-    for &bytes in sizes {
-        for session in &sessions {
-            out.push(run_point_with(session, bytes)?);
+    let threads = match mode {
+        ExecMode::Sharded { threads } => threads,
+        ExecMode::Sequential => 1,
+    };
+    if threads <= 1 || sessions.is_empty() {
+        let mut out = Vec::with_capacity(sizes.len() * strategies.len());
+        for &bytes in sizes {
+            for session in &sessions {
+                out.push(run_point_with(session, bytes)?);
+            }
         }
+        return Ok(out);
+    }
+    // Assemble each strategy's rotation schedule serially first (plan
+    // building and schedule assembly stay single-threaded and memoized),
+    // then fan the embarrassingly-parallel point grid out across the
+    // worker pool.
+    let prepared = sessions
+        .iter()
+        .map(|s| Ok((s.ghost_prober(), rotation_schedule_memo(s)?)))
+        .collect::<Result<Vec<_>>>()?;
+    let n_points = sizes.len() * prepared.len();
+    let results = par::map_pooled(threads, n_points, SimResult::default, |sim, i| {
+        let bytes = sizes[i / prepared.len()];
+        let (prober, schedule) = &prepared[i % prepared.len()];
+        run_point_ghost(prober, schedule, strategies[i % prepared.len()], bytes, sim)
+    });
+    let mut out = Vec::with_capacity(n_points);
+    for r in results {
+        out.push(r?);
     }
     Ok(out)
 }

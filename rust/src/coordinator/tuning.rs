@@ -25,9 +25,10 @@ use std::collections::HashMap;
 
 use crate::collectives::{request, CollectiveEngine};
 use crate::error::{Error, Result};
-use crate::netsim::{ReduceOp, SimResult};
+use crate::netsim::{ExecMode, ReduceOp, SimResult};
 use crate::plan::{AlgoPolicy, AllreduceAlgo, ChunkOrder, LevelAlgo, MAX_COMP_LEVELS};
 use crate::util::fmt::{self, Table};
+use crate::util::par;
 
 /// One candidate's ghost-probe measurement.
 #[derive(Clone, Copy, Debug)]
@@ -71,6 +72,66 @@ pub fn boundary_candidates(n_levels: usize) -> Vec<AlgoPolicy> {
     c
 }
 
+/// Ghost-probe a batch of **independent** candidate policies and append
+/// one [`BoundaryProbe`] per candidate, in candidate order.
+///
+/// On a [`ExecMode::Sequential`] engine this is the classic pooled
+/// serial loop (one recycled [`SimResult`], exact stage-counter deltas —
+/// see `rust/tests/tuning_counters.rs`). On a sharded engine the batch
+/// fans out across `threads` workers via a [`CollectiveEngine::ghost_prober`]
+/// — each worker simulates whole probes sequentially with its own pooled
+/// result buffer, so every probe's `SimResult` is bit-identical to the
+/// serial loop's and the merged output (candidate order; on failure, the
+/// lowest-index error) is byte-for-byte the serial output.
+fn probe_policies(
+    engine: &CollectiveEngine,
+    op: ReduceOp,
+    elems: usize,
+    policies: &[AlgoPolicy],
+    sim: &mut SimResult,
+    out: &mut Vec<BoundaryProbe>,
+) -> Result<()> {
+    let threads = match engine.exec_mode() {
+        ExecMode::Sharded { threads } => threads,
+        ExecMode::Sequential => 1,
+    };
+    out.reserve(policies.len());
+    if threads <= 1 || policies.len() <= 1 {
+        for &policy in policies {
+            let probe = request::AllreduceProbe { root: 0, op, policy, elems };
+            engine.simulate_timing_into(&probe, sim)?;
+            out.push(BoundaryProbe {
+                policy,
+                makespan_us: sim.makespan_us,
+                wan_msgs: sim.wan_messages(),
+                total_msgs: sim.msgs_by_sep.iter().sum(),
+            });
+        }
+        return Ok(());
+    }
+    let prober = engine.ghost_prober();
+    let results = par::map_pooled(
+        threads,
+        policies.len(),
+        SimResult::default,
+        |sim, i| -> Result<BoundaryProbe> {
+            let policy = policies[i];
+            let probe = request::AllreduceProbe { root: 0, op, policy, elems };
+            prober.simulate_timing_into(&probe, sim)?;
+            Ok(BoundaryProbe {
+                policy,
+                makespan_us: sim.makespan_us,
+                wan_msgs: sim.wan_messages(),
+                total_msgs: sim.msgs_by_sep.iter().sum(),
+            })
+        },
+    );
+    for r in results {
+        out.push(r?);
+    }
+    Ok(())
+}
+
 /// Sweep every composition candidate for an allreduce of `bytes` on
 /// `engine`'s topology via ghost probes, and return the winner.
 ///
@@ -78,7 +139,9 @@ pub fn boundary_candidates(n_levels: usize) -> Vec<AlgoPolicy> {
 /// data-free [`request::AllreduceProbe`], so a warm sweep is pure
 /// timing-only execution. Plans are cached per policy: the first sweep
 /// compiles each candidate once, every later sweep (any payload size —
-/// plans are size-independent) compiles nothing.
+/// plans are size-independent) compiles nothing. On a sharded engine the
+/// candidates probe in parallel (see [`probe_policies`]) with an
+/// unchanged verdict.
 pub fn tune_allreduce_boundary(
     engine: &CollectiveEngine,
     op: ReduceOp,
@@ -96,16 +159,7 @@ pub fn tune_allreduce_boundary(
     // allocates nothing for results either (inline per-separation
     // accounting for <= 4-level clusterings).
     let mut sim = SimResult::default();
-    for policy in candidates {
-        let probe = request::AllreduceProbe { root: 0, op, policy, elems };
-        engine.simulate_timing_into(&probe, &mut sim)?;
-        probes.push(BoundaryProbe {
-            policy,
-            makespan_us: sim.makespan_us,
-            wan_msgs: sim.wan_messages(),
-            total_msgs: sim.msgs_by_sep.iter().sum(),
-        });
-    }
+    probe_policies(engine, op, elems, &candidates, &mut sim, &mut probes)?;
     let best = probes
         .iter()
         .min_by(|a, b| a.makespan_us.total_cmp(&b.makespan_us))
@@ -157,9 +211,11 @@ pub struct CompositionTuning {
     /// Size of the full structural assignment space
     /// (`|STRUCTURAL|^levels`) the sweep draws from.
     pub exhaustive_space: usize,
-    /// Ghost probes actually issued (`== probes.len()`; strictly less
-    /// than `exhaustive_space + 6` under beam search on deep
-    /// clusterings).
+    /// Ghost probes actually issued (`== probes.len()`). Bounded by the
+    /// structural sweep (the full space, or the beam's strictly smaller
+    /// subset on deep clusterings) plus the 6 uniform-chunk refinements
+    /// plus at most `2 * levels` per-level chunk refinements; memo hits
+    /// make the exact count data-dependent.
     pub probes_issued: usize,
 }
 
@@ -176,33 +232,48 @@ struct ProbeSet<'a> {
 }
 
 impl ProbeSet<'_> {
-    fn score(&mut self, policy: AlgoPolicy) -> Result<f64> {
-        if let Some(&us) = self.scores.get(&policy) {
-            return Ok(us);
+    /// Score a batch of candidates: drop duplicates (within the batch
+    /// and against the memo), fan the fresh ones out through
+    /// [`probe_policies`] (parallel on a sharded engine), record their
+    /// probes in candidate order. Batching is what the parallel driver
+    /// layer feeds on — every independent group of probes arrives here
+    /// as one batch.
+    fn score_batch(&mut self, candidates: &[AlgoPolicy]) -> Result<()> {
+        let mut fresh = Vec::with_capacity(candidates.len());
+        for &policy in candidates {
+            if !self.scores.contains_key(&policy) && !fresh.contains(&policy) {
+                fresh.push(policy);
+            }
         }
-        let probe = request::AllreduceProbe { root: 0, op: self.op, policy, elems: self.elems };
-        self.engine.simulate_timing_into(&probe, &mut self.sim)?;
-        self.probes.push(BoundaryProbe {
-            policy,
-            makespan_us: self.sim.makespan_us,
-            wan_msgs: self.sim.wan_messages(),
-            total_msgs: self.sim.msgs_by_sep.iter().sum(),
-        });
-        self.scores.insert(policy, self.sim.makespan_us);
-        Ok(self.sim.makespan_us)
+        let start = self.probes.len();
+        probe_policies(self.engine, self.op, self.elems, &fresh, &mut self.sim, &mut self.probes)?;
+        for p in &self.probes[start..] {
+            self.scores.insert(p.policy, p.makespan_us);
+        }
+        Ok(())
+    }
+
+    /// Memoized score of an already-batched candidate.
+    fn cached(&self, policy: &AlgoPolicy) -> f64 {
+        self.scores[policy]
     }
 }
 
 /// Tune the full per-level composition for an allreduce of `bytes`:
 /// search the structural assignment space (every [`LevelAlgo`] in
-/// [`LevelAlgo::STRUCTURAL`] independently per separation level), then
-/// refine the structural winner with the chunked-pipelining knob
+/// [`LevelAlgo::STRUCTURAL`] independently per separation level), refine
+/// the structural winner with the uniform chunked-pipelining knob
 /// (2 and 4 chunks per level under every [`ChunkOrder`]: FIFO,
-/// shortest-chunk-first, least-loaded).
+/// shortest-chunk-first, least-loaded), then coordinate-descend the
+/// **per-level** chunk counts of the incumbent (each separation level
+/// independently tries the other counts in {1, 2, 4}).
 ///
 /// Probes are ghost probes exactly like [`tune_allreduce_boundary`]'s:
 /// on a warm plan cache a whole sweep is timing-only execution — zero
-/// tree builds, zero program compiles, zero payload allocations.
+/// tree builds, zero program compiles, zero payload allocations. On a
+/// sharded engine every independent probe batch (one odometer sweep, one
+/// beam depth, one refinement round) fans out in parallel with an
+/// unchanged verdict (see [`probe_policies`]).
 pub fn tune_allreduce_composition(
     engine: &CollectiveEngine,
     op: ReduceOp,
@@ -232,7 +303,9 @@ pub fn tune_allreduce_composition(
     };
     match mode {
         SearchMode::Exhaustive => {
-            // Mixed-radix odometer over the full assignment space.
+            // Mixed-radix odometer over the full assignment space — one
+            // batch, every assignment independent.
+            let mut all = Vec::with_capacity(exhaustive_space);
             for idx in 0..exhaustive_space {
                 let mut rest = idx;
                 let mut algos = Vec::with_capacity(levels);
@@ -240,20 +313,27 @@ pub fn tune_allreduce_composition(
                     algos.push(LevelAlgo::STRUCTURAL[rest % k]);
                     rest /= k;
                 }
-                set.score(AlgoPolicy::composition(&algos)?)?;
+                all.push(AlgoPolicy::composition(&algos)?);
             }
+            set.score_batch(&all)?;
         }
         SearchMode::Beam { width } => {
             let width = width.max(1);
             let mut frontier: Vec<Vec<LevelAlgo>> =
                 LevelAlgo::STRUCTURAL.iter().map(|&a| vec![a]).collect();
             for depth in 1..=levels {
-                let mut scored = Vec::with_capacity(frontier.len());
-                for prefix in frontier.drain(..) {
-                    let policy = AlgoPolicy::composition(&prefix)?;
-                    let us = set.score(policy)?;
-                    scored.push((us, policy, prefix));
-                }
+                // The prefixes of one depth are independent: batch them
+                // (the parallel fan-out unit), then rank from the memo.
+                let policies = frontier
+                    .iter()
+                    .map(|prefix| AlgoPolicy::composition(prefix))
+                    .collect::<Result<Vec<_>>>()?;
+                set.score_batch(&policies)?;
+                let mut scored: Vec<(f64, AlgoPolicy, Vec<LevelAlgo>)> = policies
+                    .into_iter()
+                    .zip(frontier.drain(..))
+                    .map(|(policy, prefix)| (set.cached(&policy), policy, prefix))
+                    .collect();
                 scored.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
                 scored.truncate(width);
                 if depth == levels {
@@ -284,9 +364,49 @@ pub fn tune_allreduce_composition(
     // Chunked refinement of the structural winner: both modes run the
     // identical pass, so beam-vs-exhaustive agreement is decided purely
     // by the structural sweep.
+    let mut refine = Vec::with_capacity(6);
     for chunks in [2usize, 4] {
         for order in ChunkOrder::ALL {
-            set.score(structural_best.with_chunks(chunks).with_chunk_order(order))?;
+            refine.push(structural_best.with_chunks(chunks).with_chunk_order(order));
+        }
+    }
+    set.score_batch(&refine)?;
+    // Per-level chunk refinement: coordinate descent over the chunk
+    // count of each separation level of the best policy so far —
+    // chunking only the levels that profit (typically the WAN) beats the
+    // uniform knob when level costs are skewed. Each level tries the two
+    // other counts in {1, 2, 4}; the incumbent moves only on a strict
+    // improvement, so the descent is deterministic and the final argmin
+    // can only get better.
+    if levels > 1 {
+        let seed = set
+            .probes
+            .iter()
+            .min_by(|a, b| {
+                a.makespan_us.total_cmp(&b.makespan_us).then_with(|| a.policy.cmp(&b.policy))
+            })
+            .expect("probe set is never empty");
+        let (mut best, mut best_us) = (seed.policy, seed.makespan_us);
+        for level in 1..=levels {
+            let profile: Vec<usize> = (1..=levels).map(|l| best.chunks_at(l)).collect();
+            let cur = profile[level - 1];
+            let cands: Vec<AlgoPolicy> = [1usize, 2, 4]
+                .into_iter()
+                .filter(|&c| c != cur)
+                .map(|c| {
+                    let mut prof = profile.clone();
+                    prof[level - 1] = c;
+                    best.with_chunk_profile(&prof)
+                })
+                .collect();
+            set.score_batch(&cands)?;
+            for p in cands {
+                let us = set.cached(&p);
+                if us < best_us {
+                    best = p;
+                    best_us = us;
+                }
+            }
         }
     }
     let best = set
@@ -482,7 +602,16 @@ mod tests {
         let t = tune_allreduce_composition(&e, ReduceOp::Sum, 65536, SearchMode::Auto).unwrap();
         assert_eq!(t.mode, SearchMode::Exhaustive, "Auto resolves to exhaustive at 3 levels");
         assert_eq!(t.exhaustive_space, 27, "3 structural algos over 3 levels");
-        assert_eq!(t.probes_issued, t.exhaustive_space + 6, "full space + chunk refinement");
+        assert!(
+            t.probes_issued >= t.exhaustive_space + 6,
+            "full space + uniform chunk refinement: {} probes",
+            t.probes_issued
+        );
+        assert!(
+            t.probes_issued <= t.exhaustive_space + 6 + 2 * 3,
+            "at most 2 per-level chunk probes per level: {} probes",
+            t.probes_issued
+        );
         assert_eq!(t.probes.len(), t.probes_issued, "every probe is distinct");
         let min = t.probes.iter().map(|p| p.makespan_us).fold(f64::INFINITY, f64::min);
         assert_eq!(t.best_us, min, "winner is the sweep minimum");
@@ -529,11 +658,49 @@ mod tests {
         let beam = tune_allreduce_composition(&e, ReduceOp::Sum, 16384, SearchMode::Auto).unwrap();
         assert_eq!(beam.mode, SearchMode::Beam { width: DEFAULT_BEAM_WIDTH });
         assert_eq!(ex.exhaustive_space, 81, "3^4 structural assignments");
-        assert_eq!(ex.probes_issued, 81 + 6);
-        assert_eq!(beam.probes_issued, 45 + 6, "3+6+18+18 structural probes + 6 chunked");
+        assert!(
+            (81 + 6..=81 + 6 + 8).contains(&ex.probes_issued),
+            "full space + chunk refinements: {} probes",
+            ex.probes_issued
+        );
+        assert!(
+            (45 + 6..=45 + 6 + 8).contains(&beam.probes_issued),
+            "3+6+18+18 structural probes + chunk refinements: {} probes",
+            beam.probes_issued
+        );
         assert!(beam.probes_issued < ex.probes_issued, "beam must prune on deep spaces");
         // The beam explores a subset, so it can never beat the oracle.
         assert!(beam.best_us >= ex.best_us);
+    }
+
+    #[test]
+    fn parallel_probe_fanout_matches_serial() {
+        use crate::netsim::ExecMode;
+        // The differential oracle for the parallel driver layer: a
+        // sharded engine fans each probe batch across 4 workers, yet the
+        // probe sequence (policies, bitwise makespans, accounting) and
+        // the argmin must be byte-identical to the serial sweep's.
+        let comm = deep_comm();
+        let serial = CollectiveEngine::new(&comm, presets::deep_grid(), Strategy::Multilevel);
+        let par4 = CollectiveEngine::new(&comm, presets::deep_grid(), Strategy::Multilevel)
+            .with_exec_mode(ExecMode::Sharded { threads: 4 });
+        for mode in [SearchMode::Auto, SearchMode::Exhaustive] {
+            let s = tune_allreduce_composition(&serial, ReduceOp::Sum, 16384, mode).unwrap();
+            let p = tune_allreduce_composition(&par4, ReduceOp::Sum, 16384, mode).unwrap();
+            assert_eq!(s.probes_issued, p.probes_issued, "{mode:?}: same probe count");
+            assert_eq!(s.best, p.best, "{mode:?}: same argmin");
+            assert_eq!(s.best_us.to_bits(), p.best_us.to_bits(), "{mode:?}: same makespan");
+            for (a, b) in s.probes.iter().zip(&p.probes) {
+                assert_eq!(a.policy, b.policy, "identical probe sequence");
+                assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits());
+                assert_eq!((a.wan_msgs, a.total_msgs), (b.wan_msgs, b.total_msgs));
+            }
+        }
+        let s = tune_allreduce_boundary(&serial, ReduceOp::Sum, 65536).unwrap();
+        let p = tune_allreduce_boundary(&par4, ReduceOp::Sum, 65536).unwrap();
+        assert_eq!(s.best, p.best, "boundary tuner: same argmin");
+        assert_eq!(s.best_us.to_bits(), p.best_us.to_bits());
+        assert_eq!(s.probes.len(), p.probes.len());
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! gridcollect train [--steps 50] [--lr 0.1] [--strategy multilevel] [--spec fig1|experiment|SxMxP] [--matrix m.csv] [--algo rb|rsag|hybrid|comp:a,b,...] [--boundary 1] [--chunks K] [--order fifo|scf|ll] [--policy-file t.json] [--xla] [--threads N]
 //! gridcollect gantt [--size 64k] [--strategy s] [--params file.net]
 //! gridcollect calibrate [--out params.net]        # measure combine us/B
+//! gridcollect bench-diff <baseline> <current> [--threshold 0.25]   # soft perf gate over BENCH_*.json
 //! ```
 //!
 //! `--xla` routes reduce arithmetic through the AOT-compiled Pallas
@@ -58,7 +59,7 @@ use gridcollect::tree::Strategy;
 use gridcollect::util::fmt;
 use std::sync::Arc;
 
-const USAGE: &str = "usage: gridcollect <fig8|suite|allreduce|tune-boundary|tune-composition|discover|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate> [flags]
+const USAGE: &str = "usage: gridcollect <fig8|suite|allreduce|tune-boundary|tune-composition|discover|cost-model|ablation|scaling|roots|tree|rsl|train|calibrate|bench-diff> [flags]
 run `gridcollect help` or see rust/src/main.rs for flag details";
 
 fn main() {
@@ -125,6 +126,52 @@ fn consume_hint(args: &Args, path: &str) -> String {
     } else {
         format!("`gridcollect train --spec {spec_name} --policy-file {path}`")
     }
+}
+
+/// Read one benchkit `BENCH_*.json` back as `(case name, median_us)`
+/// rows (file order preserved; written by `benchkit::save_bench_json`).
+fn load_bench_cases(path: &std::path::Path) -> Result<Vec<(String, f64)>> {
+    let label = path.display().to_string();
+    let text = std::fs::read_to_string(path).map_err(|e| Error::io(label.clone(), e))?;
+    let doc = gridcollect::util::json::parse(&text)?;
+    let results = doc
+        .get("results")
+        .and_then(|r| r.as_array())
+        .ok_or_else(|| Error::Config(format!("{label}: no \"results\" array")))?;
+    let mut cases = Vec::with_capacity(results.len());
+    for r in results {
+        let name = r.get("name").and_then(|v| v.as_str());
+        let median_us = r.get("median_us").and_then(|v| v.as_f64());
+        match (name, median_us) {
+            (Some(name), Some(median_us)) => cases.push((name.to_string(), median_us)),
+            _ => {
+                return Err(Error::Config(format!(
+                    "{label}: result entries need a string \"name\" and numeric \"median_us\""
+                )))
+            }
+        }
+    }
+    Ok(cases)
+}
+
+/// The `BENCH_*.json` files under `path` (sorted by file name), or
+/// `path` itself when it names a single file.
+fn bench_json_files(path: &str) -> Result<Vec<std::path::PathBuf>> {
+    let p = std::path::Path::new(path);
+    if !p.is_dir() {
+        return Ok(vec![p.to_path_buf()]);
+    }
+    let entries = std::fs::read_dir(p).map_err(|e| Error::io(path.to_string(), e))?;
+    let mut files: Vec<std::path::PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|f| {
+            f.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        })
+        .collect();
+    files.sort();
+    Ok(files)
 }
 
 fn run(raw: Vec<String>) -> Result<()> {
@@ -503,6 +550,76 @@ fn run(raw: Vec<String>) -> Result<()> {
                 std::fs::write(path, text).map_err(|e| Error::io(path, e))?;
                 println!("wrote {path} (paper_grid preset with calibrated combine cost)");
             }
+        }
+        "bench-diff" => {
+            // The perf-trajectory gate: committed baseline snapshots
+            // (bench-reports/baseline/) vs a fresh run's BENCH_*.json.
+            // Soft by design — regressions are printed, the exit status
+            // stays 0 — because shared-CI-runner wall-clock noise would
+            // make a hard gate flaky; the log line is the signal.
+            let base_root = args
+                .positional
+                .get(1)
+                .ok_or_else(|| Error::Cli("bench-diff: need <baseline> <current> paths".into()))?;
+            let new_root = args
+                .positional
+                .get(2)
+                .ok_or_else(|| Error::Cli("bench-diff: need <baseline> <current> paths".into()))?;
+            let threshold = args.get_f32("threshold", 0.25)? as f64;
+            let new_files = bench_json_files(new_root)?;
+            let file_name = |p: &std::path::Path| {
+                p.file_name().and_then(|n| n.to_str()).unwrap_or_default().to_string()
+            };
+            let (mut compared, mut regressions, mut improvements) = (0usize, 0usize, 0usize);
+            println!(
+                "bench trajectory diff: {base_root} (baseline) vs {new_root} \
+                 (threshold ±{:.0}% on median_us)\n",
+                threshold * 100.0
+            );
+            for base_path in bench_json_files(base_root)? {
+                let name = file_name(&base_path);
+                let Some(new_path) = new_files.iter().find(|p| file_name(p) == name) else {
+                    println!("{name}: missing from {new_root} — no current run to compare");
+                    continue;
+                };
+                println!("{name}:");
+                let base_cases = load_bench_cases(&base_path)?;
+                let new_cases = load_bench_cases(new_path)?;
+                for (case, base_us) in &base_cases {
+                    let Some((_, new_us)) = new_cases.iter().find(|(n, _)| n == case) else {
+                        println!("  {case:<44} dropped (in baseline only)");
+                        continue;
+                    };
+                    compared += 1;
+                    let delta = (new_us - base_us) / base_us.max(1e-9);
+                    let marker = if delta >= threshold {
+                        regressions += 1;
+                        "  <-- slower than baseline"
+                    } else if delta <= -threshold {
+                        improvements += 1;
+                        "  (faster than baseline)"
+                    } else {
+                        ""
+                    };
+                    println!(
+                        "  {case:<44} {:>12} -> {:>12}  {:+6.1}%{marker}",
+                        fmt::time_us(*base_us),
+                        fmt::time_us(*new_us),
+                        delta * 100.0
+                    );
+                }
+                for (case, _) in &new_cases {
+                    if !base_cases.iter().any(|(n, _)| n == case) {
+                        println!("  {case:<44} new (no baseline; refresh the snapshots)");
+                    }
+                }
+            }
+            println!(
+                "\n{compared} case(s) compared: {regressions} beyond +{:.0}%, \
+                 {improvements} beyond -{:.0}% (soft gate — always exit 0)",
+                threshold * 100.0,
+                threshold * 100.0
+            );
         }
         "help" | _ => {
             println!("{USAGE}");

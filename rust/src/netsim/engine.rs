@@ -27,15 +27,19 @@
 //!   rescan loop survives as `netsim::testing::run_rescan`, a
 //!   differential-testing oracle off the shipped surface.
 //! - **Execution mode.** The same ready-queue loop doubles as the
-//!   per-shard worker body of the sharded engine (`run_core_sharded`,
-//!   reached through [`run_indexed_scratch_sharded`] /
-//!   [`run_timing_indexed_scratch_sharded`]): ranks are partitioned by a
-//!   [`ShardMap`]'s top-level clusters, intra-cluster messages never
-//!   leave their worker, and boundary sends cross through per-shard
-//!   mailboxes under one mutex. Programs are blocking dataflow over
-//!   single-sender channels (see `netsim::shard` for why that implies
-//!   confluence), so any worker interleaving produces the same
-//!   per-channel FIFO order and the sharded result is **bitwise
+//!   per-shard body of the sharded engine (`run_core_sharded`, reached
+//!   through [`run_indexed_scratch_sharded`] /
+//!   [`run_timing_indexed_scratch_sharded`]): a [`ShardMap`]'s cluster
+//!   *tree* is carved into shards by [`ShardMap::cut`] — recursively
+//!   splitting the largest shard along its shallowest branching level,
+//!   so a deep single-site topology shards as well as a multi-site
+//!   grid — and a pool of interchangeable workers pulls runnable shards
+//!   off a shared run queue (sibling work-stealing). Intra-shard
+//!   messages never leave their shard's arena; boundary sends cross
+//!   through per-shard inboxes under one mutex. Programs are blocking
+//!   dataflow over single-sender channels (see `netsim::shard` for why
+//!   that implies confluence), so any worker interleaving produces the
+//!   same per-channel FIFO order and the sharded result is **bitwise
 //!   identical** to the sequential engine's — which therefore stays the
 //!   differential oracle for the parallel path, exactly as the rescan
 //!   loop is for the ready queue. Traces are canonically sorted by a
@@ -57,10 +61,11 @@ use crate::error::{Error, Result};
 use crate::model::NetworkParams;
 use crate::netsim::payload::{Combiner, GhostPayload, NativeCombiner, Payload, Rank, Register};
 use crate::netsim::program::{Action, ChannelIndex, Merge, Program, SendPart};
-use crate::netsim::shard::ShardMap;
+use crate::netsim::shard::{ShardCut, ShardMap, DEFAULT_MIN_SHARD_RANKS};
 use crate::topology::Clustering;
 use crate::util::counters;
 use std::collections::{BTreeMap, VecDeque};
+use std::ops::{Deref, DerefMut};
 use std::sync::{Condvar, Mutex, MutexGuard};
 
 /// One trace record (enabled via `SimConfig::trace`).
@@ -375,7 +380,11 @@ impl<R> Default for EngineScratch<R> {
 /// recycle their own arena.
 pub struct ExecScratch {
     full: Mutex<EngineScratch<Payload>>,
-    ghost: Mutex<EngineScratch<GhostPayload>>,
+    /// LIFO pool of ghost arenas: a single-threaded caller always gets
+    /// the same (fully sized) arena back, keeping warm probes
+    /// allocation-free, while parallel tuner fan-out checks out one
+    /// arena per concurrent probe instead of serializing on a mutex.
+    ghost: Mutex<Vec<EngineScratch<GhostPayload>>>,
     /// Per-shard arena pools for the sharded engine, one per register
     /// mode — sized on first sharded run, recycled thereafter.
     full_shards: Mutex<ShardPool<Payload>>,
@@ -386,7 +395,7 @@ impl ExecScratch {
     pub fn new() -> Self {
         ExecScratch {
             full: Mutex::new(EngineScratch::new()),
-            ghost: Mutex::new(EngineScratch::new()),
+            ghost: Mutex::new(Vec::new()),
             full_shards: Mutex::new(ShardPool::new()),
             ghost_shards: Mutex::new(ShardPool::new()),
         }
@@ -397,9 +406,40 @@ impl ExecScratch {
         self.full.lock().unwrap()
     }
 
-    /// Lock the ghost (timing-only) arena.
-    pub fn ghost(&self) -> MutexGuard<'_, EngineScratch<GhostPayload>> {
-        self.ghost.lock().unwrap()
+    /// Check a ghost (timing-only) arena out of the pool; it returns on
+    /// drop. The pool is LIFO, so a lone caller recycles one arena
+    /// forever and concurrent callers each get their own.
+    pub fn ghost(&self) -> GhostArena<'_> {
+        let arena = self.ghost.lock().unwrap().pop().unwrap_or_default();
+        GhostArena { pool: &self.ghost, arena: Some(arena) }
+    }
+}
+
+/// A ghost arena checked out of [`ExecScratch::ghost`]'s pool; derefs
+/// to the [`EngineScratch`] and returns itself to the pool on drop.
+pub struct GhostArena<'a> {
+    pool: &'a Mutex<Vec<EngineScratch<GhostPayload>>>,
+    arena: Option<EngineScratch<GhostPayload>>,
+}
+
+impl Deref for GhostArena<'_> {
+    type Target = EngineScratch<GhostPayload>;
+    fn deref(&self) -> &Self::Target {
+        self.arena.as_ref().expect("arena present until drop")
+    }
+}
+
+impl DerefMut for GhostArena<'_> {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        self.arena.as_mut().expect("arena present until drop")
+    }
+}
+
+impl Drop for GhostArena<'_> {
+    fn drop(&mut self) {
+        if let Some(arena) = self.arena.take() {
+            self.pool.lock().unwrap().push(arena);
+        }
     }
 }
 
@@ -833,30 +873,38 @@ pub fn run_timing_indexed_scratch_into(
 // determinism argument).
 // ---------------------------------------------------------------------
 
+/// Scheduler state of one shard in the work-stealing pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ShardState {
+    /// Not queued and not running: parked (empty inbox) or exited.
+    Idle,
+    /// In the run queue, awaiting a worker.
+    Queued,
+    /// A worker currently holds its arena.
+    Running,
+}
+
 /// Cross-shard state under the one shared mutex: per-shard boundary
-/// inboxes plus the termination-detection bookkeeping.
+/// inboxes plus the work-stealing scheduler's bookkeeping.
 struct ShardShared<R> {
     /// `inboxes[s]` — boundary messages awaiting delivery on shard `s`,
     /// as `(channel, arrival_us, message)`.
     inboxes: Vec<VecDeque<(u32, f64, R)>>,
-    /// Shards whose every rank finished (their inboxes can no longer
-    /// unblock anything and are excluded from the quiescence check).
+    state: Vec<ShardState>,
+    /// Runnable shards, FIFO. Workers are interchangeable: whichever
+    /// worker gets to a shard first runs it — that shared queue is what
+    /// lets fewer workers than shards (and sibling work-stealing among
+    /// shards of one parent cluster) keep every core busy.
+    runq: VecDeque<u32>,
+    /// Shards whose every rank finished. Messages addressed to an
+    /// exited shard never requeue it; they rot in its inbox and the
+    /// parent reports them through the sent/received ledger.
     exited: Vec<bool>,
-    idle: usize,
-    n_done: usize,
+    /// Workers parked on the condvar.
+    waiting: usize,
     /// Terminal flag: global quiescence (success or deadlock) or a shard
     /// error. Once set, every worker returns at its next lock.
     poisoned: bool,
-}
-
-impl<R> ShardShared<R> {
-    /// No boundary message is pending anywhere it could still be
-    /// consumed. Exited shards' inboxes are ignored: their ranks are
-    /// done, so anything addressed to them is undeliverable (the parent
-    /// reports it through the sent/received ledger).
-    fn quiescent(&self) -> bool {
-        self.inboxes.iter().zip(&self.exited).all(|(q, &gone)| gone || q.is_empty())
-    }
 }
 
 /// One shard worker's private state, recycled across runs like
@@ -918,15 +966,22 @@ impl<R: Register> ShardArena<R> {
     }
 }
 
-/// The pooled state of the sharded engine: worker arenas, boundary
-/// inboxes and the rank/channel → shard routing tables. Held (per
-/// register mode) inside [`ExecScratch`], so warm sharded runs recycle
-/// everything.
+/// The pooled state of the sharded engine: per-shard arenas, boundary
+/// inboxes and the cached tree carving. Held (per register mode) inside
+/// [`ExecScratch`], so warm sharded runs recycle everything — including
+/// the cut itself, recomputed only when the map fingerprint or the
+/// worker target changes.
 struct ShardPool<R> {
-    arenas: Vec<ShardArena<R>>,
+    /// Arenas behind per-shard mutexes: workers outnumbered by shards
+    /// take whichever shard the run queue hands them. The scheduler
+    /// guarantees one runner per shard, so these locks are uncontended
+    /// (`try_lock` asserts it).
+    arenas: Vec<Mutex<ShardArena<R>>>,
     inboxes: Vec<VecDeque<(u32, f64, R)>>,
-    shard_of_rank: Vec<u32>,
-    shard_of_chan: Vec<u32>,
+    cut: ShardCut,
+    /// `(map fingerprint, worker target, min-ranks floor)` the cached
+    /// cut was computed for.
+    cut_key: Option<(u64, usize, usize)>,
 }
 
 impl<R: Register> ShardPool<R> {
@@ -934,41 +989,73 @@ impl<R: Register> ShardPool<R> {
         ShardPool {
             arenas: Vec::new(),
             inboxes: Vec::new(),
-            shard_of_rank: Vec::new(),
-            shard_of_chan: Vec::new(),
+            cut: ShardCut::default(),
+            cut_key: None,
         }
-    }
-
-    fn prepare_tables(&mut self, n: usize, n_chan: usize) {
-        if self.shard_of_rank.capacity() < n || self.shard_of_chan.capacity() < n_chan {
-            counters::count_scratch_alloc();
-        }
-        self.shard_of_rank.clear();
-        self.shard_of_chan.clear();
     }
 }
 
-/// One shard worker: drain the owned ranks, flush boundary sends, then
-/// under the shared lock either pick up delivered boundary messages, or
-/// park on the condvar, or detect termination. All state transitions
-/// happen under the one mutex, so no wakeup can be lost; workers return
-/// when `poisoned` is set (global quiescence — success or deadlock — or
-/// any shard error).
+/// One pool worker: repeatedly pop a runnable shard off the shared run
+/// queue, deliver its pending boundary messages, drain its ready ranks
+/// (outside the lock), flush its boundary sends into sibling inboxes
+/// and requeue whoever became runnable. All scheduler transitions
+/// happen under the one mutex, so no wakeup can be lost.
+///
+/// Termination is detected when every worker parks on an empty run
+/// queue: no shard is running, none is queued, and — by the invariant
+/// that a live shard with a non-empty inbox is always queued or running
+/// — every pending message belongs to an exited shard. That is global
+/// quiescence (success or deadlock; the parent decides from the
+/// cursors and the ledger). Any shard error also poisons the pool.
 #[allow(clippy::too_many_arguments)]
 fn run_shard_worker<R: Register + Send>(
-    me: u32,
-    n_shards: usize,
-    shard_of_chan: &[u32],
+    n_workers: usize,
+    cut: &ShardCut,
     clustering: &Clustering,
     prog: &Program,
     index: &ChannelIndex,
     cfg: &SimConfig,
     combiner: &(dyn Combiner + Sync),
-    arena: &mut ShardArena<R>,
+    arenas: &[Mutex<ShardArena<R>>],
     shared: &Mutex<ShardShared<R>>,
     wakeup: &Condvar,
 ) {
+    let mut g = shared.lock().unwrap();
     loop {
+        if g.poisoned {
+            return;
+        }
+        let Some(s) = g.runq.pop_front() else {
+            g.waiting += 1;
+            if g.waiting == n_workers {
+                // Nothing runnable and nobody running: quiescent.
+                g.poisoned = true;
+                wakeup.notify_all();
+                return;
+            }
+            g = wakeup.wait(g).unwrap();
+            g.waiting -= 1;
+            continue;
+        };
+        let me = s as usize;
+        g.state[me] = ShardState::Running;
+        // A shard enters the run queue at most once (state-guarded) and
+        // is requeued only after its arena is released below, so this
+        // lock is never contended.
+        let mut guard = arenas[me].try_lock().expect("one runner per shard");
+        let arena = &mut *guard;
+        // Deliver pending boundary messages into the local mailbox,
+        // waking parked ranks, before draining.
+        while let Some((chan, arrival, msg)) = g.inboxes[me].pop_front() {
+            let c = chan as usize;
+            arena.scratch.mailbox[c].push(arrival, msg);
+            let w = arena.scratch.waiting[c];
+            if w != NO_WAITER {
+                arena.scratch.waiting[c] = NO_WAITER;
+                arena.scratch.ready.push_back(w);
+            }
+        }
+        drop(g);
         let res = drain_ready(
             clustering,
             prog,
@@ -977,7 +1064,7 @@ fn run_shard_worker<R: Register + Send>(
             cfg,
             combiner,
             &mut arena.scratch,
-            Some((shard_of_chan, me)),
+            Some((cut.chan_shards(), s)),
             &mut arena.outbox,
             &mut arena.trace,
             &mut arena.marks,
@@ -985,66 +1072,53 @@ fn run_shard_worker<R: Register + Send>(
             &mut arena.recvs,
             &mut arena.live,
         );
-        let mut g = shared.lock().unwrap();
+        g = shared.lock().unwrap();
         if let Err(e) = res {
             arena.error = Some(e);
             g.poisoned = true;
             wakeup.notify_all();
             return;
         }
-        if !arena.outbox.is_empty() {
-            for (dest, chan, arrival, msg) in arena.outbox.drain(..) {
-                g.inboxes[dest as usize].push_back((chan, arrival, msg));
+        // Flush boundary sends, queueing idle live destinations.
+        let mut queued_any = false;
+        for (dest, chan, arrival, msg) in arena.outbox.drain(..) {
+            let d = dest as usize;
+            g.inboxes[d].push_back((chan, arrival, msg));
+            if g.state[d] == ShardState::Idle && !g.exited[d] {
+                g.state[d] = ShardState::Queued;
+                g.runq.push_back(dest);
+                queued_any = true;
             }
-            wakeup.notify_all();
         }
-        loop {
-            if g.poisoned {
-                return;
+        let refilled = !g.inboxes[me].is_empty();
+        let finished = arena.live == 0;
+        // Release the arena *before* the shard becomes poppable again,
+        // upholding the one-runner-per-shard invariant.
+        drop(guard);
+        if refilled {
+            // A sibling refilled our inbox while we drained: requeue
+            // (any worker may run it next round).
+            g.state[me] = ShardState::Queued;
+            g.runq.push_back(s);
+            queued_any = true;
+        } else {
+            if finished {
+                g.exited[me] = true;
             }
-            if !g.inboxes[me as usize].is_empty() {
-                // Deliver into the local mailbox, waking parked ranks,
-                // then go drain them.
-                while let Some((chan, arrival, msg)) = g.inboxes[me as usize].pop_front() {
-                    let c = chan as usize;
-                    arena.scratch.mailbox[c].push(arrival, msg);
-                    let w = arena.scratch.waiting[c];
-                    if w != NO_WAITER {
-                        arena.scratch.waiting[c] = NO_WAITER;
-                        arena.scratch.ready.push_back(w);
-                    }
-                }
-                break;
-            }
-            if arena.live == 0 {
-                g.exited[me as usize] = true;
-                g.n_done += 1;
-                if g.n_done + g.idle == n_shards && g.quiescent() {
-                    g.poisoned = true;
-                    wakeup.notify_all();
-                }
-                return;
-            }
-            g.idle += 1;
-            if g.n_done + g.idle == n_shards && g.quiescent() {
-                // Everyone is waiting and nothing is in flight: the
-                // remaining ranks are deadlocked. Release the other
-                // waiters; the parent builds the report from cursors.
-                g.poisoned = true;
-                wakeup.notify_all();
-                return;
-            }
-            g = wakeup.wait(g).unwrap();
-            g.idle -= 1;
+            g.state[me] = ShardState::Idle;
+        }
+        if queued_any {
+            wakeup.notify_all();
         }
     }
 }
 
-/// The sharded counterpart of [`run_core`]: partition ranks by the
-/// [`ShardMap`]'s clusters (folded onto at most `threads` shards), run
-/// one worker thread per shard, and merge the per-shard partial results
-/// in deterministic shard order. Bitwise-identical to the sequential
-/// core by construction — see `netsim::shard`'s module docs.
+/// The sharded counterpart of [`run_core`]: carve the [`ShardMap`]'s
+/// cluster tree into up to `threads` shards ([`ShardMap::cut`], cached
+/// in the pool), run a work-stealing worker pool over them, and merge
+/// the per-shard partial results in deterministic shard order.
+/// Bitwise-identical to the sequential core by construction — see
+/// `netsim::shard`'s module docs.
 #[allow(clippy::too_many_arguments)]
 fn run_core_sharded<R: Register + Send>(
     clustering: &Clustering,
@@ -1066,24 +1140,27 @@ fn run_core_sharded<R: Register + Send>(
     counters::count_sim_run();
     let n_chan = index.n_channels();
     let n_levels = clustering.n_levels();
-    let n_shards = threads.min(shards.n_clusters()).max(1);
+    let target = threads.max(1);
 
-    pool.prepare_tables(n, n_chan);
-    for r in 0..n {
-        pool.shard_of_rank.push((shards.cluster_of(r) % n_shards) as u32);
+    // Recompute the carving only when the tree or the worker target
+    // changed; every warm run reuses the cached cut.
+    let key = (shards.fingerprint(), target, DEFAULT_MIN_SHARD_RANKS);
+    if pool.cut_key != Some(key) {
+        shards.cut_into(target, DEFAULT_MIN_SHARD_RANKS, &mut pool.cut);
+        pool.cut_key = Some(key);
     }
-    for c in 0..n_chan {
-        pool.shard_of_chan.push((shards.chan_owner(c as u32) % n_shards) as u32);
-    }
+    let n_shards = pool.cut.n_shards().max(1);
+    let n_workers = threads.min(n_shards).max(1);
+
     while pool.arenas.len() < n_shards {
-        pool.arenas.push(ShardArena::new());
+        pool.arenas.push(Mutex::new(ShardArena::new()));
     }
     while pool.inboxes.len() < n_shards {
         pool.inboxes.push(VecDeque::new());
     }
-    let ShardPool { arenas, inboxes, shard_of_rank, shard_of_chan } = pool;
+    let ShardPool { arenas, inboxes, cut, .. } = pool;
     for (s, arena) in arenas.iter_mut().enumerate().take(n_shards) {
-        arena.prepare(s as u32, n, n_chan, n_levels, shard_of_rank);
+        arena.get_mut().unwrap().prepare(s as u32, n, n_chan, n_levels, cut.rank_shards());
     }
     for q in inboxes.iter_mut() {
         q.clear();
@@ -1091,33 +1168,35 @@ fn run_core_sharded<R: Register + Send>(
     // Seed each rank's register into its owner's register file; `regs`
     // is drained in place and reused as the collection buffer below.
     for (r, slot) in regs.iter_mut().enumerate() {
-        arenas[shard_of_rank[r] as usize].regs[r] = std::mem::replace(slot, R::empty());
+        arenas[cut.shard_of(r)].get_mut().unwrap().regs[r] =
+            std::mem::replace(slot, R::empty());
     }
 
     let shared = Mutex::new(ShardShared {
         inboxes: std::mem::take(inboxes),
+        state: vec![ShardState::Queued; n_shards],
+        runq: (0..n_shards as u32).collect(),
         exited: vec![false; n_shards],
-        idle: 0,
-        n_done: 0,
+        waiting: 0,
         poisoned: false,
     });
     let wakeup = Condvar::new();
-    let routing: &[u32] = shard_of_chan.as_slice();
+    let worker_arenas: &[Mutex<ShardArena<R>>] = &arenas[..n_shards];
+    let worker_cut: &ShardCut = cut;
     std::thread::scope(|scope| {
-        for (s, arena) in arenas.iter_mut().enumerate().take(n_shards) {
+        for _ in 0..n_workers {
             let shared = &shared;
             let wakeup = &wakeup;
             scope.spawn(move || {
                 run_shard_worker(
-                    s as u32,
-                    n_shards,
-                    routing,
+                    n_workers,
+                    worker_cut,
                     clustering,
                     prog,
                     index,
                     cfg,
                     combiner,
-                    arena,
+                    worker_arenas,
                     shared,
                     wakeup,
                 );
@@ -1127,24 +1206,28 @@ fn run_core_sharded<R: Register + Send>(
     let end = shared.into_inner().unwrap();
     *inboxes = end.inboxes;
 
+    // Workers are gone: reclaim direct access to every shard arena.
+    let mut ars: Vec<&mut ShardArena<R>> =
+        arenas.iter_mut().take(n_shards).map(|m| m.get_mut().unwrap()).collect();
+
     // Verdict, in deterministic order: first shard error, then deadlock
     // (from the owner cursors), then the sent/received ledger.
-    if let Some(e) = arenas.iter_mut().take(n_shards).find_map(|a| a.error.take()) {
+    if let Some(e) = ars.iter_mut().find_map(|a| a.error.take()) {
         return Err(e);
     }
     let mut stuck: Vec<usize> = Vec::new();
     for r in 0..n {
-        if arenas[shard_of_rank[r] as usize].scratch.cursor[r] < prog.actions[r].len() {
+        if ars[cut.shard_of(r)].scratch.cursor[r] < prog.actions[r].len() {
             stuck.push(r);
         }
     }
     if !stuck.is_empty() {
-        let cursor = |r: Rank| arenas[shard_of_rank[r] as usize].scratch.cursor[r];
+        let cursor = |r: Rank| ars[cut.shard_of(r)].scratch.cursor[r];
         return Err(deadlock_error(prog, stuck, &cursor));
     }
     let mut sent = 0u64;
     let mut recvs = 0u64;
-    for arena in arenas.iter().take(n_shards) {
+    for arena in ars.iter() {
         sent += arena.scratch.msgs_by_sep.iter().sum::<u64>();
         recvs += arena.recvs;
     }
@@ -1152,7 +1235,7 @@ fn run_core_sharded<R: Register + Send>(
         // Leftovers sit either in an owner's mailbox (delivered, never
         // received) or still in a dead shard's inbox (never delivered).
         let mut counts: BTreeMap<(Rank, Rank, u64), usize> = BTreeMap::new();
-        for arena in arenas.iter().take(n_shards) {
+        for arena in ars.iter() {
             for (c, q) in arena.scratch.mailbox.iter().enumerate() {
                 match q.len() {
                     0 => {}
@@ -1172,12 +1255,12 @@ fn run_core_sharded<R: Register + Send>(
     // order-insensitive; the trace gets the canonical total-key sort, so
     // every field is bitwise identical to the sequential result.
     out.finish_us.clear();
-    out.finish_us.extend((0..n).map(|r| arenas[shard_of_rank[r] as usize].scratch.clocks[r]));
+    out.finish_us.extend((0..n).map(|r| ars[cut.shard_of(r)].scratch.clocks[r]));
     out.makespan_us = out.finish_us.iter().fold(0.0f64, |a, &b| a.max(b));
     let mut msgs = SepCounts::new(n_levels);
     let mut bytes = SepCounts::new(n_levels);
     let mut combines = 0u64;
-    for arena in arenas.iter().take(n_shards) {
+    for arena in ars.iter() {
         msgs.add_slice(&arena.scratch.msgs_by_sep);
         bytes.add_slice(&arena.scratch.bytes_by_sep);
         combines += arena.combines;
@@ -1188,7 +1271,7 @@ fn run_core_sharded<R: Register + Send>(
     out.bytes_by_sep.extend_from_slice(bytes.as_slice());
     out.combines = combines;
     let mut marks: BTreeMap<u64, f64> = BTreeMap::new();
-    for arena in arenas.iter().take(n_shards) {
+    for arena in ars.iter() {
         for (&id, &t) in arena.marks.iter() {
             let slot = marks.entry(id).or_insert(t);
             if t > *slot {
@@ -1199,12 +1282,12 @@ fn run_core_sharded<R: Register + Send>(
     out.mark_times_us.clear();
     out.mark_times_us.extend(marks);
     out.trace.clear();
-    for arena in arenas.iter_mut().take(n_shards) {
+    for arena in ars.iter_mut() {
         out.trace.append(&mut arena.trace);
     }
     sort_trace(&mut out.trace);
     for (r, slot) in regs.iter_mut().enumerate() {
-        *slot = std::mem::replace(&mut arenas[shard_of_rank[r] as usize].regs[r], R::empty());
+        *slot = std::mem::replace(&mut ars[cut.shard_of(r)].regs[r], R::empty());
     }
     Ok(regs)
 }

@@ -26,4 +26,4 @@ pub use engine::{
 };
 pub use payload::{Combiner, GhostPayload, GhostRun, NativeCombiner, Payload, ReduceOp, Register};
 pub use program::{Action, ChannelIndex, Merge, Program, SendPart};
-pub use shard::{ExecMode, ShardMap};
+pub use shard::{ExecMode, ShardCut, ShardMap, DEFAULT_MIN_SHARD_RANKS};

@@ -1,39 +1,47 @@
-//! Topology-keyed sharding of the execution engine.
+//! Topology-keyed hierarchical sharding of the execution engine.
 //!
 //! The paper's multilevel hierarchy is also a parallel-simulation
-//! opportunity: ranks of one top-level (level-1) cluster exchange the
-//! overwhelming majority of a collective's messages among themselves,
-//! and only tree edges that cross the WAN couple two clusters. The
-//! [`ShardMap`] precomputes that partition for a compiled program —
-//! which cluster owns each rank, which cluster owns each
-//! [`ChannelIndex`] channel (the receiver's), and which channels are
-//! **boundary** channels (sender and receiver in different clusters) —
-//! so the sharded engine (`netsim::engine::run_core_sharded`) can route
-//! every intra-cluster message without cross-thread coordination.
+//! opportunity: ranks of one cluster exchange the overwhelming majority
+//! of a collective's messages among themselves, and only tree edges
+//! that cross a separation boundary couple two clusters. The
+//! [`ShardMap`] precomputes the *whole* cluster tree for a compiled
+//! program — the dense cluster id of every rank at every level, the
+//! parent links between levels, the receiver of every [`ChannelIndex`]
+//! channel and its separation level — so the sharded engine
+//! (`netsim::engine::run_core_sharded`) can carve the tree into any
+//! number of shards ([`ShardMap::cut`]) and route every intra-shard
+//! message without cross-thread coordination.
 //!
-//! Like the channel index, the map is a pure function of immutable
-//! inputs (clustering + program), so plans and schedules build it once
-//! and every warm run reuses it.
+//! Unlike the PR-6 map, which partitioned by the *top-level* cluster
+//! only (capping a 2-site grid at 2 workers), the cut recursively
+//! splits the largest shard along its shallowest branching level until
+//! the worker target (or a min-ranks-per-shard floor) is met: a deep
+//! single-site topology now yields as many shards as its deepest level
+//! has clusters. Like the channel index, map and cut are pure functions
+//! of immutable inputs (clustering + program + target), so plans and
+//! schedules build the map once and every warm run reuses the cut.
 //!
 //! ## Synchronization and determinism
 //!
-//! The classical conservative bound for this partition is the
-//! inter-cluster lookahead ([`ShardMap::lookahead_us`]): a shard may
-//! safely advance its local clock to `min(neighbor clocks) + L`, where
-//! `L` is the minimum inter-cluster link latency from
-//! [`NetworkParams`] — no cross-cluster message can arrive earlier than
-//! its sender's clock plus the WAN latency. The engine's programs are
-//! *blocking dataflow* (each rank is a sequential action list; a `Recv`
-//! waits for exactly one channel), which admits an even stronger rule:
-//! a shard can run arbitrarily far ahead and simply *block* on the
-//! first receive whose boundary channel is still empty. Every
-//! cross-shard dependency is an explicit message, never a clock
-//! comparison, so the blocking rule subsumes the lookahead horizon and
-//! is exact rather than conservative — and because every channel has a
-//! single sender whose sends occur in program order, per-channel FIFO
-//! delivery is deterministic regardless of worker interleaving. That is
-//! what makes sharded results **bitwise identical** to the sequential
-//! engine's.
+//! The classical conservative bound for a partition is its lookahead
+//! horizon: a shard may safely advance its local clock to
+//! `min(neighbor clocks) + L`, where `L` is the minimum latency of any
+//! link crossing the shard boundary. With hierarchical cuts that bound
+//! is *per tree edge* ([`ShardMap::lookahead_at`] keyed by a channel's
+//! separation level, [`ShardMap::chan_sep`]) — siblings separated only
+//! at a deep level have a much smaller horizon than WAN-separated
+//! shards. The engine's programs are *blocking dataflow* (each rank is
+//! a sequential action list; a `Recv` waits for exactly one channel),
+//! which admits an even stronger rule: a shard can run arbitrarily far
+//! ahead and simply *block* on the first receive whose boundary channel
+//! is still empty. Every cross-shard dependency is an explicit message,
+//! never a clock comparison, so the blocking rule subsumes every
+//! lookahead horizon and is exact rather than conservative — and
+//! because every channel has a single sender whose sends occur in
+//! program order, per-channel FIFO delivery is deterministic regardless
+//! of worker interleaving or how the tree was cut. That is what makes
+//! sharded results **bitwise identical** to the sequential engine's for
+//! *any* cut.
 
 use crate::model::NetworkParams;
 use crate::netsim::payload::Rank;
@@ -46,10 +54,11 @@ pub enum ExecMode {
     /// Single-threaded ready-queue loop (the differential oracle).
     #[default]
     Sequential,
-    /// Partition ranks by top-level cluster and run up to `threads`
-    /// shard workers on `std::thread`s. Results are bitwise identical
-    /// to [`ExecMode::Sequential`]; `threads <= 1` (or a single-cluster
-    /// topology) falls back to the sequential path.
+    /// Cut the cluster tree into up to `threads` shards and run them on
+    /// `std::thread` workers with sibling work-stealing. Results are
+    /// bitwise identical to [`ExecMode::Sequential`]; `threads <= 1`
+    /// (or a topology whose tree never branches) falls back to the
+    /// sequential path.
     Sharded { threads: usize },
 }
 
@@ -63,124 +72,406 @@ impl ExecMode {
     }
 }
 
-/// The cluster partition of a compiled program: per-rank owner cluster,
-/// per-channel owner cluster (the receiver's), and the boundary-channel
-/// set. Built once per plan/schedule alongside the [`ChannelIndex`].
+/// Default floor on ranks per shard for [`ShardMap::cut`]: by default
+/// the cut is limited only by the tree's branching. Raise it (e.g. to
+/// a few thousand) when per-shard fixed costs dominate tiny shards.
+pub const DEFAULT_MIN_SHARD_RANKS: usize = 1;
+
+const NONE: u32 = u32::MAX;
+
+/// The cluster tree of a compiled program: dense per-level cluster ids
+/// for every rank, parent links between levels, and per-channel
+/// receiver + separation level. Built once per plan/schedule alongside
+/// the [`ChannelIndex`]; carved into worker shards by [`ShardMap::cut`].
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardMap {
-    /// Dense level-1 cluster id of every rank (first-appearance order).
-    cluster_of_rank: Vec<u32>,
-    /// Owning cluster of every channel: the *receiver's* cluster, since
-    /// the receiver's mailbox slot and wait slot live on its shard.
-    owner_of_chan: Vec<u32>,
-    /// `boundary[c]` — sender and receiver clusters differ, so a send on
-    /// `c` must cross shards through the boundary mailboxes.
-    boundary: Vec<bool>,
-    n_clusters: usize,
-    n_boundary: usize,
+    /// `level_of_rank[t][r]` — dense (first-appearance order) cluster id
+    /// of rank `r` at clustering level `t + 1`. Level 0 (the world) is
+    /// implicit: every rank is in cluster 0.
+    level_of_rank: Vec<Vec<u32>>,
+    /// Clusters per tree level (same indexing as `level_of_rank`).
+    n_clusters: Vec<usize>,
+    /// `parent[t][c]` — dense id at level `t - 1` containing cluster `c`
+    /// of level `t`; `parent[0][*] == 0` (the world root).
+    parent: Vec<Vec<u32>>,
+    /// `size[t][c]` — ranks inside cluster `c` of tree level `t`.
+    size: Vec<Vec<u32>>,
+    /// Receiver rank of every channel (its mailbox's home shard).
+    recv_of_chan: Vec<u32>,
+    /// Separation level of every channel's endpoint pair.
+    sep_of_chan: Vec<u8>,
+    n_ranks: usize,
+    /// FNV-1a digest of the tree + channel shape, for cut caching.
+    fingerprint: u64,
+}
+
+/// One concrete carving of a [`ShardMap`] into worker shards: the dense
+/// shard id of every rank and of every channel (its receiver's). Owned
+/// by the engine's shard pool and recomputed only when the map
+/// fingerprint or the worker target changes.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardCut {
+    shard_of_rank: Vec<u32>,
+    shard_of_chan: Vec<u32>,
+    n_shards: usize,
+}
+
+impl ShardCut {
+    /// Number of shards in this cut (>= 1 once computed).
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Dense shard id of rank `r`.
+    #[inline]
+    pub fn shard_of(&self, r: Rank) -> usize {
+        self.shard_of_rank[r] as usize
+    }
+
+    /// Owning shard (the receiver's) of channel `c`.
+    #[inline]
+    pub fn chan_shard(&self, c: u32) -> usize {
+        self.shard_of_chan[c as usize] as usize
+    }
+
+    /// Per-rank shard table, for the engine's routing hot path.
+    pub fn rank_shards(&self) -> &[u32] {
+        &self.shard_of_rank
+    }
+
+    /// Per-channel shard table, for the engine's routing hot path.
+    pub fn chan_shards(&self) -> &[u32] {
+        &self.shard_of_chan
+    }
 }
 
 impl ShardMap {
-    /// Partition `index`'s channels by `clustering`'s level-1 clusters.
-    /// Single-level clusterings (topology-unaware communicators) yield
-    /// one cluster — the sharded engine then degenerates to the
+    /// Build the cluster tree of `clustering` over `index`'s channels.
+    /// Single-level clusterings (topology-unaware communicators) yield a
+    /// depth-0 tree — the sharded engine then degenerates to the
     /// sequential fast path.
     pub fn build(clustering: &Clustering, index: &ChannelIndex) -> ShardMap {
         let n = clustering.n_ranks();
-        let mut cluster_of_rank = Vec::with_capacity(n);
-        let mut n_clusters = 0usize;
-        if clustering.n_levels() > 1 {
-            // Dense renumbering in first-appearance order: level-1 color
-            // ids are arbitrary, shard ids must be `0..n_clusters`.
+        let depth = clustering.n_levels().saturating_sub(1);
+        let mut level_of_rank: Vec<Vec<u32>> = Vec::with_capacity(depth);
+        let mut n_clusters: Vec<usize> = Vec::with_capacity(depth);
+        let mut parent: Vec<Vec<u32>> = Vec::with_capacity(depth);
+        let mut size: Vec<Vec<u32>> = Vec::with_capacity(depth);
+        for t in 0..depth {
+            // Dense renumbering in first-appearance order: raw color ids
+            // are arbitrary, tree ids must be `0..n_clusters[t]`.
             let mut dense: std::collections::HashMap<u32, u32> = Default::default();
+            let mut row = Vec::with_capacity(n);
+            let mut par: Vec<u32> = Vec::new();
+            let mut sz: Vec<u32> = Vec::new();
             for r in 0..n {
-                let c = clustering.color(1, r);
+                let c = clustering.color(t + 1, r);
+                let next = par.len() as u32;
                 let id = *dense.entry(c).or_insert_with(|| {
-                    let id = n_clusters as u32;
-                    n_clusters += 1;
-                    id
+                    // Hierarchy validity (enforced by `Clustering::new`)
+                    // makes the first member's parent *the* parent.
+                    par.push(if t == 0 { 0 } else { level_of_rank[t - 1][r] });
+                    sz.push(0);
+                    next
                 });
-                cluster_of_rank.push(id);
+                sz[id as usize] += 1;
+                row.push(id);
             }
-        } else {
-            cluster_of_rank.resize(n, 0);
-            n_clusters = 1;
+            n_clusters.push(par.len());
+            level_of_rank.push(row);
+            parent.push(par);
+            size.push(sz);
         }
         let n_chan = index.n_channels();
-        let mut owner_of_chan = Vec::with_capacity(n_chan);
-        let mut boundary = Vec::with_capacity(n_chan);
-        let mut n_boundary = 0usize;
-        for c in 0..n_chan {
-            let (from, to, _tag) = index.key(c as u32);
-            let cross = cluster_of_rank[from] != cluster_of_rank[to];
-            owner_of_chan.push(cluster_of_rank[to]);
-            boundary.push(cross);
-            n_boundary += cross as usize;
+        let mut recv_of_chan = Vec::with_capacity(n_chan);
+        let mut sep_of_chan = Vec::with_capacity(n_chan);
+        for ch in 0..n_chan {
+            let (from, to, _tag) = index.key(ch as u32);
+            recv_of_chan.push(to as u32);
+            sep_of_chan.push(clustering.sep(from, to).min(u8::MAX as usize) as u8);
         }
-        ShardMap { cluster_of_rank, owner_of_chan, boundary, n_clusters, n_boundary }
+        let fingerprint =
+            Self::digest(n, &n_clusters, &level_of_rank, &recv_of_chan);
+        ShardMap {
+            level_of_rank,
+            n_clusters,
+            parent,
+            size,
+            recv_of_chan,
+            sep_of_chan,
+            n_ranks: n,
+            fingerprint,
+        }
     }
 
-    /// Number of level-1 clusters (= maximum useful shard count).
+    fn digest(
+        n: usize,
+        n_clusters: &[usize],
+        level_of_rank: &[Vec<u32>],
+        recv_of_chan: &[u32],
+    ) -> u64 {
+        fn fnv(mut h: u64, v: u64) -> u64 {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+            h
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        h = fnv(h, n as u64);
+        h = fnv(h, level_of_rank.len() as u64);
+        for (t, row) in level_of_rank.iter().enumerate() {
+            h = fnv(h, n_clusters[t] as u64);
+            for &id in row {
+                h = fnv(h, id as u64);
+            }
+        }
+        h = fnv(h, recv_of_chan.len() as u64);
+        for &r in recv_of_chan {
+            h = fnv(h, r as u64);
+        }
+        h
+    }
+
+    /// Number of clusters at the *deepest* level (= maximum useful shard
+    /// count of any cut).
     pub fn n_clusters(&self) -> usize {
-        self.n_clusters
+        self.n_clusters.last().copied().unwrap_or(1).max(1)
+    }
+
+    /// Tree depth: clustering levels below the world root.
+    pub fn depth(&self) -> usize {
+        self.level_of_rank.len()
     }
 
     /// Number of ranks this map was built for.
     pub fn n_ranks(&self) -> usize {
-        self.cluster_of_rank.len()
-    }
-
-    /// Dense cluster id of rank `r`.
-    #[inline]
-    pub fn cluster_of(&self, r: Rank) -> usize {
-        self.cluster_of_rank[r] as usize
-    }
-
-    /// Owning cluster (the receiver's) of channel `c`.
-    #[inline]
-    pub fn chan_owner(&self, c: u32) -> usize {
-        self.owner_of_chan[c as usize] as usize
-    }
-
-    /// Whether channel `c` crosses clusters.
-    #[inline]
-    pub fn is_boundary(&self, c: u32) -> bool {
-        self.boundary[c as usize]
-    }
-
-    /// Number of boundary (cross-cluster) channels.
-    pub fn n_boundary(&self) -> usize {
-        self.n_boundary
+        self.n_ranks
     }
 
     /// Number of channels this map covers.
     pub fn n_channels(&self) -> usize {
-        self.owner_of_chan.len()
+        self.recv_of_chan.len()
     }
 
     /// Cheap shape guard, mirroring `ChannelIndex::matches`: was this
     /// map built for an index with the same channel count?
     pub fn matches(&self, index: &ChannelIndex) -> bool {
-        self.owner_of_chan.len() == index.n_channels()
+        self.recv_of_chan.len() == index.n_channels()
     }
 
-    /// The conservative lookahead horizon for this partition: the
-    /// minimum latency of any inter-cluster (separation-1) link. A shard
-    /// whose neighbors' clocks are at `t` can never observe a boundary
-    /// arrival before `t + lookahead`. The blocking-dataflow engine
-    /// (see the module docs) subsumes this bound exactly, but the
+    /// Separation level of channel `c`'s endpoint pair (1 = WAN,
+    /// `n_levels` = same deepest cluster).
+    #[inline]
+    pub fn chan_sep(&self, c: u32) -> usize {
+        self.sep_of_chan[c as usize] as usize
+    }
+
+    /// FNV-1a digest of the tree + channel shape; two maps with equal
+    /// fingerprints produce identical cuts, so the engine keys its
+    /// cached [`ShardCut`] on it.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// The conservative lookahead horizon for a *top-level* partition:
+    /// the minimum latency of any inter-cluster (separation-1) link. A
+    /// shard whose neighbors' clocks are at `t` can never observe a
+    /// boundary arrival before `t + lookahead`. The blocking-dataflow
+    /// engine (see the module docs) subsumes this bound exactly, but the
     /// horizon remains the quantity that makes cluster-keyed sharding
     /// profitable: WAN latency dwarfs intra-cluster event spacing.
     pub fn lookahead_us(&self, params: &NetworkParams) -> f64 {
         params.at_sep(1).latency_us
     }
 
+    /// Per-tree-edge lookahead: the horizon of a boundary at separation
+    /// level `sep`. Shards split at a deep level have a much smaller
+    /// horizon than WAN-separated shards — pair with [`Self::chan_sep`]
+    /// for optimistic per-channel bounds.
+    pub fn lookahead_at(&self, params: &NetworkParams, sep: usize) -> f64 {
+        params.at_sep(sep).latency_us
+    }
+
     /// Approximate resident size (for plan footprint accounting).
     pub fn approx_bytes(&self) -> usize {
-        self.cluster_of_rank.len() * 4
-            + self.owner_of_chan.len() * 4
-            + self.boundary.len()
+        self.level_of_rank.iter().map(|row| row.len() * 4).sum::<usize>()
+            + self.parent.iter().map(|p| p.len() * 4).sum::<usize>()
+            + self.size.iter().map(|s| s.len() * 4).sum::<usize>()
+            + self.recv_of_chan.len() * 4
+            + self.sep_of_chan.len()
             + std::mem::size_of::<ShardMap>()
+    }
+
+    /// Ranks inside tree node `(lvl, c)`; node-level 0 is the world.
+    fn node_size(&self, nd: (u32, u32)) -> u64 {
+        let (lvl, c) = nd;
+        if lvl == 0 {
+            self.n_ranks as u64
+        } else {
+            self.size[lvl as usize - 1][c as usize] as u64
+        }
+    }
+
+    /// The shallowest branching refinement of a shard: its own nodes
+    /// when it already holds several, otherwise the children found by
+    /// descending the single node through non-branching levels. `None`
+    /// when the shard bottoms out at the deepest level without ever
+    /// branching — such a shard can never be split.
+    fn split_candidates(&self, nodes: &[(u32, u32)]) -> Option<Vec<(u32, u32)>> {
+        if nodes.len() > 1 {
+            return Some(nodes.to_vec());
+        }
+        let (mut lvl, mut c) = nodes[0];
+        let depth = self.level_of_rank.len() as u32;
+        loop {
+            if lvl >= depth {
+                return None;
+            }
+            let kids: Vec<(u32, u32)> = (0..self.n_clusters[lvl as usize] as u32)
+                .filter(|&d| self.parent[lvl as usize][d as usize] == c)
+                .map(|d| (lvl + 1, d))
+                .collect();
+            match kids.len() {
+                0 => return None,
+                1 => {
+                    lvl += 1;
+                    c = kids[0].1;
+                }
+                _ => return Some(kids),
+            }
+        }
+    }
+
+    /// Carve the tree into up to `target` shards, never cutting a shard
+    /// below `min_ranks` ranks (pass [`DEFAULT_MIN_SHARD_RANKS`] for
+    /// branching-limited cuts). See [`Self::cut_into`].
+    pub fn cut(&self, target: usize, min_ranks: usize) -> ShardCut {
+        let mut out = ShardCut::default();
+        self.cut_into(target, min_ranks, &mut out);
+        out
+    }
+
+    /// [`Self::cut`] into a caller-owned buffer (the engine's pooled
+    /// cut), reusing its allocations.
+    ///
+    /// The cut grows a shard forest from the world root: repeatedly pick
+    /// the largest still-splittable shard, refine it at its shallowest
+    /// branching level, and LPT-pack the child clusters (largest first,
+    /// each into the lightest bucket) into as many buckets as the
+    /// remaining worker budget and the `min_ranks` floor allow. A pure
+    /// function of `(tree, target, min_ranks)` — deterministic no
+    /// matter how many workers later run the shards.
+    pub fn cut_into(&self, target: usize, min_ranks: usize, out: &mut ShardCut) {
+        let n = self.n_ranks;
+        let depth = self.level_of_rank.len();
+        let target = target.max(1);
+        let mr = min_ranks.max(1);
+
+        // Node = (node-level, cluster id): node-level 0 is the world
+        // root, node-level k >= 1 indexes the tree arrays at k - 1.
+        let mut shards: Vec<Vec<(u32, u32)>> = vec![vec![(0, 0)]];
+        let mut open: Vec<bool> = vec![true];
+        while shards.len() < target {
+            // Largest open shard; strict `>` keeps the first on ties.
+            let mut pick: Option<(usize, u64)> = None;
+            for (i, nodes) in shards.iter().enumerate() {
+                if !open[i] {
+                    continue;
+                }
+                let total: u64 = nodes.iter().map(|&nd| self.node_size(nd)).sum();
+                if total < 2 * mr as u64 {
+                    open[i] = false;
+                    continue;
+                }
+                match pick {
+                    Some((_, best)) if total <= best => {}
+                    _ => pick = Some((i, total)),
+                }
+            }
+            let Some((i, total)) = pick else { break };
+            let mut cands = match self.split_candidates(&shards[i]) {
+                Some(c) => c,
+                None => {
+                    open[i] = false;
+                    continue;
+                }
+            };
+            let groups = cands
+                .len()
+                .min(target - shards.len() + 1)
+                .min((total as usize / mr).max(1));
+            if groups < 2 {
+                open[i] = false;
+                continue;
+            }
+            // LPT packing: largest candidate first into the lightest
+            // bucket; ties break toward the lower node / bucket index.
+            cands.sort_by(|&a, &b| {
+                self.node_size(b).cmp(&self.node_size(a)).then(a.cmp(&b))
+            });
+            let mut buckets: Vec<(u64, Vec<(u32, u32)>)> = vec![(0, Vec::new()); groups];
+            for nd in cands {
+                let mut j = 0;
+                for k in 1..groups {
+                    if buckets[k].0 < buckets[j].0 {
+                        j = k;
+                    }
+                }
+                buckets[j].0 += self.node_size(nd);
+                buckets[j].1.push(nd);
+            }
+            let mut it = buckets.into_iter();
+            shards[i] = it.next().expect("groups >= 2").1;
+            for (_, nodes) in it {
+                shards.push(nodes);
+                open.push(true);
+            }
+        }
+
+        // Materialize: per-level assignment tables, then walk each rank
+        // shallow -> deep. The shards' nodes partition the world (every
+        // split replaces a node set by a refinement), so each rank has
+        // exactly one assigned ancestor.
+        let mut assign: Vec<Vec<u32>> =
+            self.n_clusters.iter().map(|&k| vec![NONE; k]).collect();
+        let mut root_shard = NONE;
+        for (s, nodes) in shards.iter().enumerate() {
+            for &(lvl, c) in nodes {
+                if lvl == 0 {
+                    root_shard = s as u32;
+                } else {
+                    assign[lvl as usize - 1][c as usize] = s as u32;
+                }
+            }
+        }
+        out.shard_of_rank.clear();
+        out.shard_of_rank.reserve(n);
+        // Dense shard ids in first-appearance order over ranks, so the
+        // numbering is canonical regardless of split order.
+        let mut remap: Vec<u32> = vec![NONE; shards.len()];
+        let mut n_shards = 0usize;
+        for r in 0..n {
+            let mut s = root_shard;
+            for (t, row) in assign.iter().enumerate().take(depth) {
+                let a = row[self.level_of_rank[t][r] as usize];
+                if a != NONE {
+                    s = a;
+                    break;
+                }
+            }
+            debug_assert_ne!(s, NONE, "rank {r} has no assigned ancestor");
+            let m = &mut remap[s as usize];
+            if *m == NONE {
+                *m = n_shards as u32;
+                n_shards += 1;
+            }
+            out.shard_of_rank.push(*m);
+        }
+        out.n_shards = n_shards.max(1);
+        out.shard_of_chan.clear();
+        out.shard_of_chan
+            .extend(self.recv_of_chan.iter().map(|&r| out.shard_of_rank[r as usize]));
     }
 }
 
@@ -203,26 +494,58 @@ mod tests {
         (c, p)
     }
 
+    /// 1 site, 2 LANs x 2 machines x 2 ranks: the deep single-site
+    /// topology the old top-level split could not parallelize at all.
+    fn deep_single_site() -> (Clustering, Program) {
+        let c = Clustering::new(vec![
+            vec![0; 8],
+            vec![0; 8],
+            vec![0, 0, 0, 0, 1, 1, 1, 1],
+            vec![0, 0, 1, 1, 2, 2, 3, 3],
+        ])
+        .unwrap();
+        let mut p = Program::new(8);
+        p.send(0, 4, 1, SendPart::Empty);
+        p.recv(4, 0, 1, Merge::Discard);
+        (c, p)
+    }
+
     #[test]
     fn partitions_ranks_and_channels() {
         let (c, p) = two_site();
         let index = ChannelIndex::build(&p);
         let map = ShardMap::build(&c, &index);
         assert_eq!(map.n_clusters(), 2);
+        assert_eq!(map.depth(), 1);
         assert_eq!(map.n_ranks(), 4);
-        assert_eq!(map.cluster_of(0), 0);
-        assert_eq!(map.cluster_of(3), 1);
         assert_eq!(map.n_channels(), 3);
         assert!(map.matches(&index));
-        // Channel owners follow the receiver.
-        for ch in 0..3u32 {
-            let (_, to, _) = index.key(ch);
-            assert_eq!(map.chan_owner(ch), map.cluster_of(to));
-        }
-        assert_eq!(map.n_boundary(), 1);
-        let wan: Vec<u32> = (0..3u32).filter(|&ch| map.is_boundary(ch)).collect();
+        // Channel separations follow the clustering: exactly one WAN
+        // channel, the rest intra-site.
+        let wan: Vec<u32> = (0..3u32).filter(|&ch| map.chan_sep(ch) == 1).collect();
         assert_eq!(wan.len(), 1);
         assert_eq!(index.key(wan[0]), (0, 2, 2));
+        assert!((0..3u32).filter(|&ch| ch != wan[0]).all(|ch| map.chan_sep(ch) == 2));
+    }
+
+    #[test]
+    fn cut_splits_along_the_top_level() {
+        let (c, p) = two_site();
+        let index = ChannelIndex::build(&p);
+        let map = ShardMap::build(&c, &index);
+        let cut = map.cut(2, DEFAULT_MIN_SHARD_RANKS);
+        assert_eq!(cut.n_shards(), 2);
+        assert_eq!(cut.shard_of(0), 0);
+        assert_eq!(cut.shard_of(1), 0);
+        assert_eq!(cut.shard_of(2), 1);
+        assert_eq!(cut.shard_of(3), 1);
+        // Channel shards follow the receiver.
+        for ch in 0..3u32 {
+            let (_, to, _) = index.key(ch);
+            assert_eq!(cut.chan_shard(ch), cut.shard_of(to));
+        }
+        // A 1-shard cut keeps everything together.
+        assert_eq!(map.cut(1, DEFAULT_MIN_SHARD_RANKS).n_shards(), 1);
     }
 
     #[test]
@@ -233,8 +556,86 @@ mod tests {
         p.recv(5, 0, 1, Merge::Discard);
         let map = ShardMap::build(&c, &ChannelIndex::build(&p));
         assert_eq!(map.n_clusters(), 1);
-        assert_eq!(map.n_boundary(), 0);
-        assert!((0..6).all(|r| map.cluster_of(r) == 0));
+        assert_eq!(map.depth(), 0);
+        let cut = map.cut(8, DEFAULT_MIN_SHARD_RANKS);
+        assert_eq!(cut.n_shards(), 1);
+        assert!((0..6).all(|r| cut.shard_of(r) == 0));
+    }
+
+    #[test]
+    fn deep_single_site_splits_below_the_top_level() {
+        let (c, p) = deep_single_site();
+        let map = ShardMap::build(&c, &ChannelIndex::build(&p));
+        // The top level has a single cluster, but the deepest has 4:
+        // the cut descends the non-branching site level and keeps
+        // splitting down the LAN and machine levels.
+        assert_eq!(map.n_clusters(), 4);
+        assert_eq!(map.depth(), 3);
+        assert_eq!(map.cut(2, 1).n_shards(), 2);
+        assert_eq!(map.cut(4, 1).n_shards(), 4);
+        // The deepest level has 4 machines: the cut saturates there.
+        assert_eq!(map.cut(8, 1).n_shards(), 4);
+        // Every shard of the 4-way cut is one machine (2 ranks).
+        let cut = map.cut(4, 1);
+        let mut per = vec![0usize; cut.n_shards()];
+        for r in 0..map.n_ranks() {
+            per[cut.shard_of(r)] += 1;
+        }
+        assert_eq!(per, vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn min_ranks_floor_caps_the_cut() {
+        let (c, p) = deep_single_site();
+        let map = ShardMap::build(&c, &ChannelIndex::build(&p));
+        // 8 ranks with a floor of 4: at most 2 shards, each >= 4 ranks.
+        let cut = map.cut(8, 4);
+        assert_eq!(cut.n_shards(), 2);
+        let mut per = vec![0usize; cut.n_shards()];
+        for r in 0..map.n_ranks() {
+            per[cut.shard_of(r)] += 1;
+        }
+        assert!(per.iter().all(|&k| k >= 4));
+        // A floor above half the ranks forbids any split.
+        assert_eq!(map.cut(8, 5).n_shards(), 1);
+    }
+
+    #[test]
+    fn lpt_grouping_balances_uneven_clusters() {
+        // Clusters of 4, 2, 2 ranks into two shards: LPT packs the two
+        // small clusters together, balancing 4 + 4.
+        let c =
+            Clustering::new(vec![vec![0; 8], vec![0, 0, 0, 0, 1, 1, 2, 2]]).unwrap();
+        let mut p = Program::new(8);
+        p.send(0, 7, 1, SendPart::Empty);
+        p.recv(7, 0, 1, Merge::Discard);
+        let map = ShardMap::build(&c, &ChannelIndex::build(&p));
+        let cut = map.cut(2, 1);
+        assert_eq!(cut.n_shards(), 2);
+        let mut per = vec![0usize; 2];
+        for r in 0..8 {
+            per[cut.shard_of(r)] += 1;
+        }
+        assert_eq!(per, vec![4, 4]);
+    }
+
+    #[test]
+    fn cuts_are_deterministic_and_fingerprinted() {
+        let (c, p) = deep_single_site();
+        let index = ChannelIndex::build(&p);
+        let a = ShardMap::build(&c, &index);
+        let b = ShardMap::build(&c, &index);
+        assert_eq!(a, b);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // The cut is a pure function of (tree, target, floor): repeated
+        // cuts are identical, whatever worker count later runs them.
+        for target in [1usize, 2, 3, 4, 8, 16] {
+            assert_eq!(a.cut(target, 1), b.cut(target, 1));
+            assert_eq!(a.cut(target, 1), a.cut(target, 1));
+        }
+        let (c2, p2) = two_site();
+        let other = ShardMap::build(&c2, &ChannelIndex::build(&p2));
+        assert_ne!(a.fingerprint(), other.fingerprint());
     }
 
     #[test]
@@ -243,6 +644,8 @@ mod tests {
         let map = ShardMap::build(&c, &ChannelIndex::build(&p));
         let params = presets::paper_grid();
         assert_eq!(map.lookahead_us(&params), params.at_sep(1).latency_us);
+        assert_eq!(map.lookahead_at(&params, 1), map.lookahead_us(&params));
+        assert_eq!(map.lookahead_at(&params, 2), params.at_sep(2).latency_us);
         let uniform =
             crate::model::NetworkParams::new(vec![LinkParams::new(42.0, 1.0)]);
         assert_eq!(map.lookahead_us(&uniform), 42.0);

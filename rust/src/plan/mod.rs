@@ -229,10 +229,13 @@ pub struct AlgoPolicy {
     /// Slot `i` = separation level `i + 1`; deeper levels clamp to the
     /// last slot.
     algos: [LevelAlgo; MAX_COMP_LEVELS],
-    /// Pieces each full-structure delivery is split into (1 = off).
-    chunks: u8,
-    /// Scheduling order for the pieces (canonically FIFO when
-    /// `chunks <= 1`, so equal-behavior policies compare equal).
+    /// Pieces a full-structure delivery at separation level `i + 1` is
+    /// split into (1 = off); deeper levels clamp to the last slot, like
+    /// `algos`. [`AlgoPolicy::with_chunks`] sets every slot (the uniform
+    /// knob); [`AlgoPolicy::with_chunk_profile`] sets them per level.
+    chunks: [u8; MAX_COMP_LEVELS],
+    /// Scheduling order for the pieces (canonically FIFO when no level
+    /// pipelines, so equal-behavior policies compare equal).
     order: ChunkOrder,
 }
 
@@ -247,7 +250,11 @@ impl AlgoPolicy {
 
     /// The same vocabulary entry at every level.
     pub fn uniform_level(algo: LevelAlgo) -> Self {
-        AlgoPolicy { algos: [algo; MAX_COMP_LEVELS], chunks: 1, order: ChunkOrder::Fifo }
+        AlgoPolicy {
+            algos: [algo; MAX_COMP_LEVELS],
+            chunks: [1; MAX_COMP_LEVELS],
+            order: ChunkOrder::Fifo,
+        }
     }
 
     /// Reduce+bcast across levels `1..=boundary_level`, rs+ag below —
@@ -259,7 +266,7 @@ impl AlgoPolicy {
         for slot in algos.iter_mut().take(boundary_level.min(MAX_COMP_LEVELS)) {
             *slot = LevelAlgo::ReduceBcast;
         }
-        AlgoPolicy { algos, chunks: 1, order: ChunkOrder::Fifo }
+        AlgoPolicy { algos, chunks: [1; MAX_COMP_LEVELS], order: ChunkOrder::Fifo }
     }
 
     /// An explicit per-level assignment: `algos[i]` handles separation
@@ -278,24 +285,41 @@ impl AlgoPolicy {
         }
         let mut slots = [*algos.last().expect("non-empty"); MAX_COMP_LEVELS];
         slots[..algos.len()].copy_from_slice(algos);
-        Ok(AlgoPolicy { algos: slots, chunks: 1, order: ChunkOrder::Fifo })
+        Ok(AlgoPolicy { algos: slots, chunks: [1; MAX_COMP_LEVELS], order: ChunkOrder::Fifo })
     }
 
     /// Split every full-structure delivery into `chunks` pipelined
-    /// interval pieces per edge (clamped to `1..=MAX_CHUNKS`). `1`
-    /// switches pipelining off; the chunk order canonicalizes to FIFO
-    /// then, so behaviorally identical policies compare (and cache)
-    /// equal.
+    /// interval pieces per edge (clamped to `1..=MAX_CHUNKS`), at every
+    /// separation level uniformly. `1` switches pipelining off; the
+    /// chunk order canonicalizes to FIFO then, so behaviorally identical
+    /// policies compare (and cache) equal.
     pub fn with_chunks(self, chunks: usize) -> Self {
-        let chunks = chunks.clamp(1, MAX_CHUNKS) as u8;
-        let order = if chunks <= 1 { ChunkOrder::Fifo } else { self.order };
+        let k = chunks.clamp(1, MAX_CHUNKS) as u8;
+        let order = if k <= 1 { ChunkOrder::Fifo } else { self.order };
+        AlgoPolicy { chunks: [k; MAX_COMP_LEVELS], order, ..self }
+    }
+
+    /// An explicit **per-level** chunk profile: `profile[i]` pipelines
+    /// deliveries at separation level `i + 1` (each entry clamped to
+    /// `1..=MAX_CHUNKS`); levels beyond the slice repeat its last entry
+    /// — the same fill rule as [`AlgoPolicy::composition`] — and an
+    /// empty slice switches pipelining off everywhere. The chunk order
+    /// canonicalizes to FIFO when no level pipelines.
+    pub fn with_chunk_profile(self, profile: &[usize]) -> Self {
+        let mut chunks = [1u8; MAX_COMP_LEVELS];
+        if !profile.is_empty() {
+            for (i, slot) in chunks.iter_mut().enumerate() {
+                *slot = profile[i.min(profile.len() - 1)].clamp(1, MAX_CHUNKS) as u8;
+            }
+        }
+        let order = if chunks.iter().all(|&c| c <= 1) { ChunkOrder::Fifo } else { self.order };
         AlgoPolicy { chunks, order, ..self }
     }
 
     /// Scheduling order for pipelined pieces. No effect (canonicalized
     /// to FIFO) while `chunks_per_level() <= 1` — set chunks first.
     pub fn with_chunk_order(self, order: ChunkOrder) -> Self {
-        let order = if self.chunks <= 1 { ChunkOrder::Fifo } else { order };
+        let order = if self.chunks_per_level() <= 1 { ChunkOrder::Fifo } else { order };
         AlgoPolicy { order, ..self }
     }
 
@@ -327,9 +351,29 @@ impl AlgoPolicy {
         &self.algos[..len]
     }
 
-    /// Pieces each full-structure delivery is pipelined into (1 = off).
+    /// The largest per-level chunk count (1 = pipelining off
+    /// everywhere). Uniform policies — the [`AlgoPolicy::with_chunks`]
+    /// knob — read this as *the* chunk count.
     pub fn chunks_per_level(&self) -> usize {
-        self.chunks as usize
+        *self.chunks.iter().max().expect("MAX_COMP_LEVELS > 0") as usize
+    }
+
+    /// Pieces a delivery at separation `level` (level 1 = WAN) is
+    /// pipelined into — mirrors [`AlgoPolicy::level_algo_at`]'s clamp.
+    pub fn chunks_at(&self, level: usize) -> usize {
+        debug_assert!(level >= 1);
+        self.chunks[level.saturating_sub(1).min(MAX_COMP_LEVELS - 1)] as usize
+    }
+
+    /// The explicit per-level chunk counts with trailing repeats
+    /// collapsed (never empty; the last entry repeats for all deeper
+    /// levels) — the chunk analogue of [`AlgoPolicy::level_algos`].
+    pub fn chunk_profile(&self) -> &[u8] {
+        let mut len = MAX_COMP_LEVELS;
+        while len > 1 && self.chunks[len - 1] == self.chunks[len - 2] {
+            len -= 1;
+        }
+        &self.chunks[..len]
     }
 
     pub fn chunk_order(&self) -> ChunkOrder {
@@ -340,7 +384,7 @@ impl AlgoPolicy {
     /// only case where the plain cached reduce;bcast composition and the
     /// [`BytesModel::FullPayloadPerSend`] model apply.
     pub fn is_plain_full(&self) -> bool {
-        self.chunks <= 1 && self.algos.iter().all(|a| a.is_full_structure())
+        self.chunks_per_level() <= 1 && self.algos.iter().all(|a| a.is_full_structure())
     }
 
     /// Effective boundary for the down-phase compiler: the leading run
@@ -358,7 +402,7 @@ impl AlgoPolicy {
     /// interior boundary: an unchunked ReduceBcast prefix over a
     /// RsAgRing suffix.
     pub fn hybrid_boundary(&self) -> Option<usize> {
-        if self.chunks > 1 {
+        if self.chunks_per_level() > 1 {
             return None;
         }
         let b = self.algos.iter().take_while(|a| **a == LevelAlgo::ReduceBcast).count();
@@ -380,7 +424,7 @@ impl AlgoPolicy {
     }
 
     pub fn name(&self) -> String {
-        if self.chunks <= 1 {
+        if self.chunks_per_level() <= 1 {
             if self.algos == [LevelAlgo::ReduceBcast; MAX_COMP_LEVELS] {
                 return AllreduceAlgo::ReduceBcast.name().to_string();
             }
@@ -393,8 +437,12 @@ impl AlgoPolicy {
         }
         let slots: Vec<&str> = self.level_algos().iter().map(|a| a.name()).collect();
         let mut s = format!("comp:{}", slots.join(","));
-        if self.chunks > 1 {
-            s.push_str(&format!(";chunks={}", self.chunks));
+        if self.chunks_per_level() > 1 {
+            // Uniform profiles collapse to the historical single-count
+            // spelling; per-level profiles list one count per level
+            // (trailing repeats collapsed, like the algo list).
+            let prof: Vec<String> = self.chunk_profile().iter().map(|c| c.to_string()).collect();
+            s.push_str(&format!(";chunks={}", prof.join(",")));
             if self.order != ChunkOrder::Fifo {
                 s.push_str(&format!(";order={}", self.order.name()));
             }
@@ -850,6 +898,35 @@ mod tests {
         for o in ChunkOrder::ALL {
             assert_eq!(ChunkOrder::from_name(o.name()), Some(o));
         }
+    }
+
+    #[test]
+    fn per_level_chunk_profiles() {
+        let rb = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast);
+        // Fill-last: the slice's last entry repeats for deeper levels.
+        let p = rb.with_chunk_profile(&[4, 2]);
+        assert_eq!(p.chunks_at(1), 4, "level 1 = WAN");
+        assert_eq!(p.chunks_at(2), 2);
+        assert_eq!(p.chunks_at(7), 2, "deeper levels repeat the last entry");
+        assert_eq!(p.chunks_per_level(), 4, "the uniform view reads the max");
+        assert_eq!(p.chunk_profile(), &[4, 2]);
+        assert_eq!(p.name(), "comp:rb;chunks=4,2");
+        assert!(p.is_chunked() && !p.is_plain_full());
+        // A uniform profile is exactly the with_chunks knob.
+        assert_eq!(rb.with_chunk_profile(&[4]), rb.with_chunks(4));
+        assert_eq!(rb.with_chunks(4).chunk_profile(), &[4]);
+        // Empty / all-ones profiles switch pipelining off and
+        // canonicalize the order away.
+        assert_eq!(rb.with_chunks(4).with_chunk_profile(&[]), rb);
+        let scf = p.with_chunk_order(ChunkOrder::ShortestFirst);
+        assert_eq!(scf.name(), "comp:rb;chunks=4,2;order=scf");
+        assert_eq!(scf.with_chunk_profile(&[1, 1]), rb);
+        // Entries clamp like the uniform knob.
+        let clamped = rb.with_chunk_profile(&[0, MAX_CHUNKS + 9]);
+        assert_eq!(clamped.chunk_profile(), &[1, MAX_CHUNKS as u8]);
+        // Only the pipelined level pays pieces: chunks=1 at a level is
+        // full-structure delivery there.
+        assert_eq!(rb.with_chunk_profile(&[2, 1]).chunks_at(3), 1);
     }
 
     #[test]

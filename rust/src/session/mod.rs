@@ -36,7 +36,7 @@ pub use table::{
     PolicyEntry, PolicyProvenance, PolicyTable, SegmentEntry, ShapeEntry, POLICY_TABLE_VERSION,
 };
 
-use crate::collectives::{request, CollectiveEngine, OpSpec, Outcome, ScheduleMemo};
+use crate::collectives::{request, CollectiveEngine, GhostProber, OpSpec, Outcome, ScheduleMemo};
 use crate::coordinator::tuning;
 use crate::error::{Error, Result};
 use crate::model::NetworkParams;
@@ -277,6 +277,12 @@ impl GridSession {
     /// accounting inline).
     pub fn simulate_timing_into(&self, request: &dyn OpSpec, out: &mut SimResult) -> Result<()> {
         self.engine().simulate_timing_into(request, out)
+    }
+
+    /// A `Send + Sync` ghost-probing view of this session's engine for
+    /// parallel driver fan-out (see [`CollectiveEngine::ghost_prober`]).
+    pub fn ghost_prober(&self) -> GhostProber<'_> {
+        self.engine().ghost_prober()
     }
 
     /// Fetch (or build once) the cached plan for `(root, op, segments)`.

@@ -267,8 +267,10 @@ fn op_from_name(name: &str) -> Result<ReduceOp> {
 /// Compact, grep-able policy token. The three legacy shapes keep their
 /// version-1 spellings (`rb`, `rsag`, `hybrid:N`) so old files and
 /// grep habits survive the composition refactor; everything else gets
-/// the general form `comp:a,b,c[;chunks=K][;order=scf|ll]` with the
-/// level names of [`LevelAlgo::name`] (trailing repeats collapsed).
+/// the general form `comp:a,b,c[;chunks=k1,k2,...][;order=scf|ll]` with
+/// the level names of [`LevelAlgo::name`] (trailing repeats collapsed,
+/// for the chunk counts too — a uniform profile keeps the version-2
+/// single-count `chunks=K` spelling).
 fn policy_to_token(p: AlgoPolicy) -> String {
     if p == AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast) {
         return "rb".to_string();
@@ -282,7 +284,8 @@ fn policy_to_token(p: AlgoPolicy) -> String {
     let names: Vec<&str> = p.level_algos().iter().map(|a| a.name()).collect();
     let mut token = format!("comp:{}", names.join(","));
     if p.chunks_per_level() > 1 {
-        token.push_str(&format!(";chunks={}", p.chunks_per_level()));
+        let prof: Vec<String> = p.chunk_profile().iter().map(|c| c.to_string()).collect();
+        token.push_str(&format!(";chunks={}", prof.join(",")));
         if p.chunk_order() != ChunkOrder::Fifo {
             token.push_str(&format!(";order={}", p.chunk_order().name()));
         }
@@ -306,12 +309,18 @@ fn policy_from_token(token: &str) -> Result<AlgoPolicy> {
     for name in sections.next().ok_or_else(bad)?.split(',') {
         algos.push(LevelAlgo::from_name(name).ok_or_else(bad)?);
     }
-    let (mut chunks, mut order) = (1usize, ChunkOrder::Fifo);
+    let (mut chunks, mut order) = (vec![1usize], ChunkOrder::Fifo);
     for section in sections {
         if let Some(k) = section.strip_prefix("chunks=") {
-            chunks = k.parse().map_err(|_| bad())?;
-            if chunks == 0 || chunks > MAX_CHUNKS {
-                return Err(bad());
+            // One count per level (fill-last); the version-2 single
+            // count parses as the uniform profile it always meant.
+            chunks.clear();
+            for part in k.split(',') {
+                let c: usize = part.parse().map_err(|_| bad())?;
+                if c == 0 || c > MAX_CHUNKS {
+                    return Err(bad());
+                }
+                chunks.push(c);
             }
         } else if let Some(o) = section.strip_prefix("order=") {
             order = ChunkOrder::from_name(o).ok_or_else(bad)?;
@@ -319,7 +328,7 @@ fn policy_from_token(token: &str) -> Result<AlgoPolicy> {
             return Err(bad());
         }
     }
-    Ok(AlgoPolicy::composition(&algos)?.with_chunks(chunks).with_chunk_order(order))
+    Ok(AlgoPolicy::composition(&algos)?.with_chunk_profile(&chunks).with_chunk_order(order))
 }
 
 /// Compact WAN tree-shape token: [`TreeShape::name`] spellings with the
@@ -931,18 +940,22 @@ mod tests {
         let balanced = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)
             .with_chunks(2)
             .with_chunk_order(ChunkOrder::LeastLoaded);
+        let profiled = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast).with_chunk_profile(&[4, 2]);
         t.record(ReduceOp::Sum, 4096, comp, 1.0);
         t.record(ReduceOp::Sum, 65536, chunked, 2.0);
         t.record(ReduceOp::Sum, 1 << 20, balanced, 3.0);
+        t.record(ReduceOp::Sum, 1 << 22, profiled, 4.0);
         let json = t.to_json();
         assert!(json.contains("comp:rb,halving,ring"), "comp token serialized: {json}");
         assert!(json.contains("comp:rb;chunks=4;order=scf"), "chunk knobs serialized: {json}");
         assert!(json.contains("comp:rb;chunks=2;order=ll"), "LL order serialized: {json}");
+        assert!(json.contains("comp:rb;chunks=4,2"), "per-level chunk profile serialized: {json}");
         let back = PolicyTable::from_json(&json).unwrap();
         assert_eq!(back.entries(), t.entries());
         assert_eq!(back.exact(ReduceOp::Sum, 4096).unwrap().policy, comp);
         assert_eq!(back.exact(ReduceOp::Sum, 65536).unwrap().policy, chunked);
         assert_eq!(back.exact(ReduceOp::Sum, 1 << 20).unwrap().policy, balanced);
+        assert_eq!(back.exact(ReduceOp::Sum, 1 << 22).unwrap().policy, profiled);
         // A composition naming more explicit levels than the clustering
         // has can only come from a hand edit under a different topology.
         let too_deep = json.replace("comp:rb,halving,ring", "comp:rb,rb,halving,ring");

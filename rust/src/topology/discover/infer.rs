@@ -144,9 +144,18 @@ pub fn spec_from_clustering(name: impl Into<String>, c: &Clustering) -> Result<T
             let members = c.members(l, cluster);
             let (first, last) = (members[0], *members.last().unwrap());
             if last - first + 1 != members.len() {
+                // Name the first hole so a permuted measurement is
+                // diagnosable from the message alone.
+                let hole = (first..=last)
+                    .find(|r| !members.contains(r))
+                    .expect("non-contiguous span has a hole");
                 return Err(Error::TopologySpec(format!(
-                    "cluster {cluster} at level {l} is not rank-contiguous \
-                     (ranks {first}..={last} with gaps); cannot express as a spec"
+                    "cannot emit a spec: cluster {cluster} at level {l} is not rank-contiguous \
+                     — it spans ranks {first}..={last} but holds only {} of them (rank {hole} \
+                     belongs to cluster {} at that level); a TopologySpec numbers ranks \
+                     depth-first, so renumber the measurement or consume the clustering directly",
+                    members.len(),
+                    c.color(l, hole),
                 )));
             }
         }
@@ -285,5 +294,8 @@ mod tests {
         let c = Clustering::new(vec![vec![0, 0, 0], vec![0, 1, 0]]).unwrap();
         let err = spec_from_clustering("bad", &c).unwrap_err().to_string();
         assert!(err.contains("not rank-contiguous"), "got: {err}");
+        assert!(err.contains("cluster 0 at level 1"), "names the offender: {err}");
+        assert!(err.contains("ranks 0..=2"), "names the span: {err}");
+        assert!(err.contains("rank 1 belongs to cluster 1"), "names the hole: {err}");
     }
 }

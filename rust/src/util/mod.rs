@@ -5,6 +5,7 @@
 pub mod counters;
 pub mod fmt;
 pub mod json;
+pub mod par;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,105 @@
+//! Minimal scoped-thread fan-out for the driver layer (tuner probes,
+//! sweep points). No work-stealing, no channels: `n` independent tasks
+//! are claimed off an atomic counter by up to `threads` workers, each
+//! holding one worker-local state (a pooled `SimResult`, a ghost
+//! prober, ...) for its whole run — so per-task allocations stay as
+//! pooled as the serial loop's. Results land in index order, making the
+//! fan-out's output byte-identical to the serial loop's.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(state, i)` for every `i in 0..n` and collect the results in
+/// index order. `mk` builds one worker-local state per worker (called
+/// once per worker, not per task). `threads <= 1` or `n <= 1` runs the
+/// serial loop inline — same closures, no thread machinery — so serial
+/// and parallel callers share one code path for the work itself.
+pub fn map_pooled<S, T, G, F>(threads: usize, n: usize, mk: G, f: F) -> Vec<T>
+where
+    S: Send,
+    T: Send,
+    G: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        let mut state = mk();
+        return (0..n).map(|i| f(&mut state, i)).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = threads.min(n);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let slots = &slots;
+            let next = &next;
+            let mk = &mk;
+            let f = &f;
+            scope.spawn(move || {
+                let mut state = mk();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        return;
+                    }
+                    *slots[i].lock().unwrap() = Some(f(&mut state, i));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every index claimed exactly once"))
+        .collect()
+}
+
+/// [`map_pooled`] without worker-local state.
+pub fn map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    map_pooled(threads, n, || (), |(), i| f(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_land_in_index_order() {
+        for threads in [1usize, 2, 4, 8] {
+            let got = map(threads, 17, |i| i * i);
+            assert_eq!(got, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn worker_state_is_reused_across_tasks() {
+        // Each worker's state counts the tasks it ran; the total over
+        // all workers must be n, and with one thread a single state
+        // sees every task.
+        let n = 23;
+        let got = map_pooled(
+            1,
+            n,
+            || 0usize,
+            |seen, i| {
+                *seen += 1;
+                (*seen, i)
+            },
+        );
+        assert_eq!(got.len(), n);
+        assert_eq!(got.last().unwrap().0, n, "one state served every task");
+        let par = map_pooled(4, n, || 0usize, |seen, _| {
+            *seen += 1;
+            1usize
+        });
+        assert_eq!(par.iter().sum::<usize>(), n);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        assert!(map(8, 0, |i| i).is_empty());
+        assert_eq!(map(8, 1, |i| i + 1), vec![1]);
+    }
+}

@@ -10,11 +10,14 @@
 
 use gridcollect::collectives::request;
 use gridcollect::coordinator::timing_app;
-use gridcollect::model::presets;
-use gridcollect::netsim::{ExecMode, GhostPayload, NativeCombiner, ReduceOp, SimResult};
-use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, ChunkOrder, LevelAlgo};
+use gridcollect::model::{presets, NetworkParams};
+use gridcollect::netsim::{
+    ExecMode, GhostPayload, NativeCombiner, ReduceOp, ShardMap, SimResult,
+    DEFAULT_MIN_SHARD_RANKS,
+};
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo, ChunkOrder, LevelAlgo, OpKind};
 use gridcollect::session::GridSession;
-use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::topology::{Communicator, GroupNode, TopologySpec};
 use gridcollect::tree::Strategy;
 use std::sync::Arc;
 
@@ -37,19 +40,25 @@ fn assert_bitwise(a: &SimResult, b: &SimResult, ctx: &str) {
 
 fn session_pair(
     comm: &Communicator,
+    params: NetworkParams,
     strategy: Strategy,
     threads: usize,
 ) -> (GridSession, GridSession) {
-    let seq = GridSession::new(comm, presets::paper_grid(), strategy);
-    let sh = GridSession::new(comm, presets::paper_grid(), strategy)
-        .with_exec_mode(ExecMode::Sharded { threads });
+    let seq = GridSession::new(comm, params.clone(), strategy);
+    let sharded = ExecMode::Sharded { threads };
+    let sh = GridSession::new(comm, params, strategy).with_exec_mode(sharded);
     (seq, sh)
 }
 
-/// Run every collective family under both engines and compare bitwise.
+/// [`battery_on`] with the paper-grid network parameters.
 fn battery(comm: &Communicator, strategy: Strategy, threads: usize) {
+    battery_on(comm, presets::paper_grid(), strategy, threads);
+}
+
+/// Run every collective family under both engines and compare bitwise.
+fn battery_on(comm: &Communicator, params: NetworkParams, strategy: Strategy, threads: usize) {
     let ctx = format!("{}/t{threads}", strategy.name());
-    let (seq, sh) = session_pair(comm, strategy, threads);
+    let (seq, sh) = session_pair(comm, params, strategy, threads);
     let n = comm.size();
     let elems = 33;
     let data: Vec<f32> = (0..elems).map(|i| i as f32 * 0.5).collect();
@@ -134,7 +143,7 @@ fn fused_schedules_with_marks_match_bitwise() {
     let comm = Communicator::world(&TopologySpec::paper_fig1());
     let n = comm.size();
     for threads in [2usize, 8] {
-        let (seq, sh) = session_pair(&comm, Strategy::Multilevel, threads);
+        let (seq, sh) = session_pair(&comm, presets::paper_grid(), Strategy::Multilevel, threads);
         let sched = timing_app::rotation_schedule(&seq).unwrap();
         let mut init = vec![GhostPayload::empty(); n];
         init[0] = GhostPayload::single(0, 1024);
@@ -142,6 +151,118 @@ fn fused_schedules_with_marks_match_bitwise() {
         let b = sh.run_schedule_timing(&sched, init).unwrap();
         assert!(!a.mark_times_us.is_empty(), "rotation schedule carries markers");
         assert_bitwise(&a, &b, &format!("rotation/t{threads}"));
+    }
+}
+
+/// 24 ranks over 4 clustering levels (site / LAN / machine below the
+/// world): 2 sites x 2 LANs x 2 machines x 3 procs.
+fn deep_spec() -> TopologySpec {
+    TopologySpec::new(
+        "deep",
+        GroupNode::group(
+            "grid",
+            (0..2)
+                .map(|s| {
+                    GroupNode::group(
+                        format!("site{s}"),
+                        (0..2)
+                            .map(|l| {
+                                GroupNode::group(
+                                    format!("s{s}lan{l}"),
+                                    (0..2)
+                                        .map(|m| GroupNode::machine(format!("s{s}l{l}m{m}"), 3))
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        ),
+    )
+    .unwrap()
+}
+
+/// Same depth, one site: the top-level partition is trivial (a single
+/// cluster), so only the hierarchical cut can expose parallelism.
+fn single_site_spec() -> TopologySpec {
+    TopologySpec::new(
+        "single-site-deep",
+        GroupNode::group(
+            "grid",
+            vec![GroupNode::group(
+                "site0",
+                (0..3)
+                    .map(|l| {
+                        GroupNode::group(
+                            format!("lan{l}"),
+                            (0..2).map(|m| GroupNode::machine(format!("l{l}m{m}"), 4)).collect(),
+                        )
+                    })
+                    .collect(),
+            )],
+        ),
+    )
+    .unwrap()
+}
+
+#[test]
+fn deep_clusterings_match_sequential_at_2_to_16_threads() {
+    // 3-level (site/machine below the world) and 4-level grids, each at
+    // every power-of-two thread count up to 16: the hierarchical shard
+    // tree must stay exact however deep the recursion goes and however
+    // many workers steal from each other.
+    let three = Communicator::world(&TopologySpec::uniform(3, 2, 2).unwrap());
+    assert_eq!(three.clustering().n_levels(), 3);
+    let four = Communicator::world(&deep_spec());
+    assert_eq!(four.clustering().n_levels(), 4);
+    for threads in [2usize, 4, 8, 16] {
+        battery(&three, Strategy::Multilevel, threads);
+        battery_on(&four, presets::deep_grid(), Strategy::Multilevel, threads);
+    }
+}
+
+#[test]
+fn single_site_deep_topology_still_shards() {
+    let comm = Communicator::world(&single_site_spec());
+    let c = comm.clustering();
+    assert_eq!(c.n_levels(), 4);
+    assert_eq!(c.clusters_at(1).len(), 1, "one top-level cluster");
+    // A top-level-only partition would collapse to 1 shard here; the
+    // hierarchical cut must recurse below the trivial site level and
+    // find > 1 effective worker.
+    let session = GridSession::new(&comm, presets::deep_grid(), Strategy::Multilevel);
+    let plan = session.plan_for(0, OpKind::Bcast, 1).unwrap();
+    let map = ShardMap::build(c, &plan.channels);
+    let cut = map.cut(8, DEFAULT_MIN_SHARD_RANKS);
+    assert!(cut.n_shards() > 1, "deep single-site cut found {} shard(s)", cut.n_shards());
+    for threads in [2usize, 4, 8, 16] {
+        battery_on(&comm, presets::deep_grid(), Strategy::Multilevel, threads);
+    }
+}
+
+#[test]
+fn shard_cuts_are_deterministic() {
+    // ShardMap::cut is a pure function of (tree, target, min_ranks):
+    // two independently built maps over the same clustering must agree
+    // on the digest and on every cut — the sharded engine's replay
+    // stability (and its cut cache) depend on it.
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let plan = session.plan_for(0, OpKind::Bcast, 1).unwrap();
+    let a = ShardMap::build(comm.clustering(), &plan.channels);
+    let b = ShardMap::build(comm.clustering(), &plan.channels);
+    assert_eq!(a.fingerprint(), b.fingerprint(), "map digests agree");
+    for target in [1usize, 2, 3, 4, 8, 16, 64] {
+        for min_ranks in [1usize, 2, 8] {
+            let ca = a.cut(target, min_ranks);
+            let cb = b.cut(target, min_ranks);
+            let ctx = format!("target {target} / min_ranks {min_ranks}");
+            assert_eq!(ca.n_shards(), cb.n_shards(), "{ctx}: shard count");
+            assert_eq!(ca.rank_shards(), cb.rank_shards(), "{ctx}: rank assignment");
+            assert_eq!(ca.chan_shards(), cb.chan_shards(), "{ctx}: channel assignment");
+            assert!(ca.n_shards() <= target.max(1), "{ctx}: never exceeds the budget");
+        }
     }
 }
 
