@@ -1,0 +1,124 @@
+//! Bench E16 — `gridd` daemon throughput: cold tune sweeps, warm
+//! resolve/allreduce service rates on one connection, and contended
+//! resolve QPS with 8 concurrent clients. The warm phase re-asserts the
+//! zero-build / zero-allocation counters in bench context (this binary
+//! is its own process, so exact deltas are safe).
+//!
+//! Run: `cargo bench --bench gridd_qps`
+//! Smoke (CI): `cargo bench --bench gridd_qps -- --smoke`
+//! Reports land in `target/bench-reports/` (md/csv + BENCH_*.json).
+
+use gridcollect::benchkit::{save_bench_json, save_report, section, Bench};
+use gridcollect::service::{proto::JsonObj, Client, Gridd, GriddConfig, Target};
+use gridcollect::util::counters;
+use gridcollect::util::fmt::Table;
+use std::time::Duration;
+
+const CONTENDED_CLIENTS: usize = 8;
+const REQUESTS_PER_CLIENT: usize = 20;
+
+fn connect(socket: &str) -> Client {
+    Client::connect(&Target::parse(socket)).unwrap()
+}
+
+fn tune_request(bytes: usize) -> String {
+    JsonObj::new().str("cmd", "tune").num_usize("bytes", bytes).render()
+}
+
+fn resolve_request(bytes: usize) -> String {
+    JsonObj::new().str("cmd", "resolve").num_usize("bytes", bytes).render()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let bench = if smoke {
+        // 1 sample: CI smoke mode only checks the harness runs end to end.
+        Bench { warmup_iters: 0, min_iters: 1, max_iters: 1, target: Duration::ZERO }
+    } else {
+        Bench::quick()
+    };
+
+    let socket = std::env::temp_dir()
+        .join(format!("gridd_qps_{}.sock", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let cfg = GriddConfig {
+        socket: Some(socket.clone()),
+        tcp: None,
+        threads: CONTENDED_CLIENTS,
+        policy_dir: None,
+    };
+    let handle = Gridd::new(cfg).unwrap().spawn();
+    let mut results = Vec::new();
+
+    section("E16a — cold tune: one full boundary sweep per request");
+    // Every iteration asks a size the daemon has never seen, so each
+    // request is a fresh singleflight leader running a real sweep.
+    let mut c = connect(&socket);
+    let mut next_cold = 1 << 22;
+    results.push(bench.run("gridd/tune_cold", || {
+        next_cold += 4;
+        let doc = c.request(&tune_request(next_cold)).unwrap();
+        assert_eq!(doc.get("source").and_then(|v| v.as_str()), Some("tuned"));
+    }));
+
+    section("E16b — warm service rates on one connection");
+    let warm_bytes = 65536;
+    c.request(&tune_request(warm_bytes)).unwrap();
+    let allreduce = JsonObj::new().str("cmd", "allreduce").num_usize("bytes", warm_bytes).render();
+    c.request(&allreduce).unwrap(); // prime this worker's scratch arena
+    let before = counters::snapshot();
+    results.push(bench.run("gridd/resolve_warm", || {
+        let doc = c.request(&resolve_request(warm_bytes)).unwrap();
+        assert_eq!(doc.get("exact").and_then(|v| v.as_bool()), Some(true));
+    }));
+    results.push(bench.run("gridd/allreduce_warm", || {
+        c.request(&allreduce).unwrap();
+    }));
+    let warm = counters::snapshot().since(&before);
+    assert_eq!(warm.tree_builds, 0, "warm daemon requests build no trees");
+    assert_eq!(warm.program_compiles, 0, "warm daemon requests compile nothing");
+    assert_eq!(warm.plan_cache_misses, 0, "the tuned plan stays cached");
+    assert_eq!(warm.payload_allocs, 0, "ghost timing allocates no payload data");
+    assert_eq!(warm.scratch_allocs, 0, "the worker's scratch arena is already sized");
+    drop(c);
+
+    section("E16c — contended resolve: 8 clients per iteration");
+    let batch = CONTENDED_CLIENTS * REQUESTS_PER_CLIENT;
+    results.push(bench.run("gridd/resolve_contended_8x", || {
+        let workers: Vec<_> = (0..CONTENDED_CLIENTS)
+            .map(|_| {
+                let socket = socket.clone();
+                std::thread::spawn(move || {
+                    let mut c = connect(&socket);
+                    for _ in 0..REQUESTS_PER_CLIENT {
+                        c.request(&resolve_request(warm_bytes)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }));
+
+    connect(&socket).request(&JsonObj::new().str("cmd", "shutdown").render()).unwrap();
+    handle.join().unwrap();
+
+    let mut table = Table::new(&["case", "median us", "mean us", "iters", "QPS"]);
+    for r in &results {
+        // The contended case runs a whole batch per iteration; the
+        // others are one request per iteration.
+        let per_iter = if r.name.contains("contended") { batch as f64 } else { 1.0 };
+        table.row(&[
+            r.name.clone(),
+            format!("{:.1}", r.median_us),
+            format!("{:.1}", r.mean_us),
+            r.iters.to_string(),
+            format!("{:.0}", per_iter * 1e6 / r.mean_us),
+        ]);
+    }
+    print!("{}", table.to_markdown());
+    save_report("gridd_qps", &table);
+    save_bench_json("gridd_qps", &results);
+}

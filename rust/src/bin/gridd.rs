@@ -1,0 +1,106 @@
+//! `gridd` — the long-running tuning/planning daemon plus a thin
+//! admin client.
+//!
+//! ```text
+//! gridd serve [--socket /tmp/gridd.sock] [--tcp 127.0.0.1:7070] [--threads 8] [--policy-dir D]
+//! gridd ping --connect <socket-or-addr>
+//! gridd stats --connect <socket-or-addr>
+//! gridd shutdown --connect <socket-or-addr>
+//! ```
+//!
+//! `serve` defaults to a Unix socket at `/tmp/gridd.sock` when neither
+//! listener flag is given. With `--policy-dir`, every tuned verdict is
+//! written back as an atomic provenance-stamped policy table, and a
+//! restarted daemon starts warm from it. The workload-facing client
+//! paths live in `gridcollect` (`allreduce --connect`,
+//! `tune-composition --connect`); this binary only carries the admin
+//! verbs.
+
+use gridcollect::cli::Args;
+use gridcollect::error::{Error, Result};
+use gridcollect::service::{proto, Client, Gridd, GriddConfig, Target};
+
+const USAGE: &str = "usage: gridd <serve|ping|stats|shutdown> [flags]
+  serve     [--socket PATH] [--tcp HOST:PORT] [--threads N] [--policy-dir DIR]
+  ping      --connect <socket-or-addr>
+  stats     --connect <socket-or-addr>
+  shutdown  --connect <socket-or-addr>";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn client(args: &Args) -> Result<Client> {
+    let target = args
+        .get("connect")
+        .map(Target::parse)
+        .ok_or_else(|| Error::Cli("need --connect <socket-or-addr>".into()))?;
+    Client::connect(&target)
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw)?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "serve" => {
+            let mut cfg = GriddConfig {
+                socket: args.get("socket").map(str::to_string),
+                tcp: args.get("tcp").map(str::to_string),
+                threads: args.get_usize("threads", 8)?,
+                policy_dir: args.get("policy-dir").map(str::to_string),
+            };
+            if cfg.socket.is_none() && cfg.tcp.is_none() {
+                cfg.socket = Some("/tmp/gridd.sock".to_string());
+            }
+            let daemon = Gridd::new(cfg)?;
+            if let Some(path) = daemon.socket_path() {
+                println!("gridd: listening on unix:{path}");
+            }
+            if let Some(addr) = daemon.tcp_addr() {
+                println!("gridd: listening on tcp:{addr}");
+            }
+            daemon.run()?;
+            println!("gridd: shut down cleanly");
+        }
+        "ping" => {
+            let doc = client(&args)?.request(&proto::JsonObj::new().str("cmd", "ping").render())?;
+            println!("gridd: {}", doc.get("service").and_then(|v| v.as_str()).unwrap_or("?"));
+        }
+        "stats" => {
+            let doc =
+                client(&args)?.request(&proto::JsonObj::new().str("cmd", "stats").render())?;
+            for key in [
+                "requests",
+                "contexts",
+                "policy_entries",
+                "plan_hits",
+                "plan_misses",
+                "plan_evictions",
+                "plans_cached",
+                "plan_footprint_bytes",
+                "shards_per_cache",
+                "singleflight_leaders",
+                "singleflight_followers",
+                "threads",
+                "ghost_arenas_pooled",
+            ] {
+                if let Some(v) = doc.get(key).and_then(|v| v.as_u64()) {
+                    println!("{key:>24}: {v}");
+                }
+            }
+        }
+        "shutdown" => {
+            let doc =
+                client(&args)?.request(&proto::JsonObj::new().str("cmd", "shutdown").render())?;
+            if doc.get("stopping").and_then(|v| v.as_bool()) == Some(true) {
+                println!("gridd: stopping");
+            }
+        }
+        _ => println!("{USAGE}"),
+    }
+    Ok(())
+}

@@ -15,7 +15,8 @@ pub struct Args {
 pub const VALUE_FLAGS: &[&str] = &[
     "sizes", "size", "steps", "lr", "strategy", "root", "spec", "sites", "machines", "procs",
     "out", "artifacts", "seed", "shape", "params", "algo", "op", "boundary", "save",
-    "policy-file", "threads", "chunks", "order", "mode", "matrix", "noise", "probe",
+    "policy-file", "threads", "chunks", "order", "mode", "matrix", "noise", "probe", "connect",
+    "socket", "tcp", "policy-dir", "kind",
 ];
 
 impl Args {

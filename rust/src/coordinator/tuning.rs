@@ -54,6 +54,15 @@ pub struct BoundaryTuning {
     pub best_us: f64,
 }
 
+impl BoundaryTuning {
+    /// Ghost sweeps this tuning actually ran — one per candidate probed.
+    /// The `gridd` singleflight path reports it so clients can see a
+    /// coalesced (or table-served) request cost zero probes.
+    pub fn probes_issued(&self) -> usize {
+        self.probes.len()
+    }
+}
+
 /// The composition candidates for a clustering of `n_levels` separation
 /// levels: both uniforms, plus `hybrid(b)` for every **interior**
 /// boundary `1 <= b < n_levels`. `hybrid(0)` and `hybrid(>= n_levels)`

@@ -38,6 +38,9 @@ pub enum Error {
     Io { path: String, source: std::io::Error },
     /// Numeric verification failed (expected vs got summary).
     Verify(String),
+    /// `gridd` service failure: a protocol violation, an `ok: false`
+    /// response relayed to a client, or a transport fault.
+    Service(String),
 }
 
 impl fmt::Display for Error {
@@ -60,6 +63,7 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Io { path, source } => write!(f, "I/O error on {path}: {source}"),
             Error::Verify(m) => write!(f, "verification failure: {m}"),
+            Error::Service(m) => write!(f, "gridd service error: {m}"),
         }
     }
 }

@@ -29,6 +29,7 @@ pub mod error;
 pub mod model;
 pub mod plan;
 pub mod runtime;
+pub mod service;
 pub mod session;
 pub mod tree;
 pub mod netsim;

@@ -9,9 +9,9 @@
 //!                                  #  --threads N > 1 runs the cluster-sharded engine —
 //!                                  #  identical numbers, parallel wall-clock)
 //! gridcollect suite [--size 64k] [--xla]           # E8: 6 ops x 4 strategies
-//! gridcollect allreduce [--size 64k] [--op sum] [--boundary 1] [--policy-file t.json] [--matrix m.csv] [--xla]
+//! gridcollect allreduce [--size 64k] [--op sum] [--boundary 1] [--policy-file t.json] [--matrix m.csv] [--connect T] [--xla]
 //! gridcollect tune-boundary [--sizes 4k,64k,1m] [--op sum] [--strategy s] [--spec fig1|experiment|SxMxP] [--matrix m.csv] [--save t.json] [--threads N]
-//! gridcollect tune-composition [--sizes 4k,64k,1m] [--op sum] [--mode auto|exhaustive|beam:W] [--strategy s] [--spec ...] [--matrix m.csv] [--save t.json] [--threads N]
+//! gridcollect tune-composition [--sizes 4k,64k,1m] [--op sum] [--mode auto|exhaustive|beam:W] [--strategy s] [--spec ...] [--matrix m.csv] [--save t.json] [--connect T] [--threads N]
 //! gridcollect discover [--matrix m.csv | --spec ... [--noise 0.1] [--seed 1]] [--probe 1k] [--out m.csv] [--emit-spec]
 //! gridcollect cost-model [--size 64k]              # E2: §4 analytic vs sim
 //! gridcollect ablation [--sites 8] [--size 64k]    # E9: WAN tree shapes
@@ -46,6 +46,13 @@
 //! accepts `--matrix m.csv` to run on the discovered hierarchy. On a
 //! noiseless matrix the inferred clustering fingerprints identically to
 //! the spec it was measured from, so tables tuned either way interoperate.
+//!
+//! `--connect <socket-or-host:port>` routes `allreduce` and
+//! `tune-composition` through a running `gridd` daemon instead of
+//! executing in-process: concurrent tuners share the daemon's plan cache
+//! and policy store, identical in-flight tune requests coalesce into one
+//! ghost sweep, and (with the daemon's `--policy-dir`) every verdict
+//! persists across daemon restarts.
 
 use gridcollect::cli::Args;
 use gridcollect::coordinator::{experiment, timing_app, training, tuning};
@@ -53,6 +60,7 @@ use gridcollect::error::{Error, Result};
 use gridcollect::model::presets;
 use gridcollect::netsim::{Combiner, NativeCombiner, ReduceOp};
 use gridcollect::runtime::{calibrate_us_per_byte, MlpRuntime, Runtime, XlaCombiner};
+use gridcollect::service::{proto::JsonObj, Client, Target};
 use gridcollect::session::{GridSession, PolicyTable};
 use gridcollect::topology::{discover, rsl, Communicator, CostMatrix, TopologySpec};
 use gridcollect::tree::Strategy;
@@ -126,6 +134,89 @@ fn consume_hint(args: &Args, path: &str) -> String {
     } else {
         format!("`gridcollect train --spec {spec_name} --policy-file {path}`")
     }
+}
+
+/// Attach the request's topology parameters for a daemon-routed
+/// command: an inline cost matrix when `--matrix` is given (the daemon
+/// infers the clustering just like the in-process path), otherwise the
+/// `--spec` name, plus the strategy token either way.
+fn daemon_topology(args: &Args, req: JsonObj) -> Result<JsonObj> {
+    let req = req.str("strategy", args.get_or("strategy", "multilevel"));
+    Ok(match args.get("matrix") {
+        Some(path) => {
+            let csv = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+            req.str("matrix_csv", &csv)
+        }
+        None => req.str("spec", args.get_or("spec", "experiment")),
+    })
+}
+
+/// `allreduce --connect`: ghost-time the collective on a running
+/// `gridd` daemon. The daemon resolves the policy from its verdict
+/// store (falling back to uniform reduce+bcast when the point was never
+/// tuned), so a `tune-composition --connect` earlier in the session
+/// changes what runs here — same loop as `--policy-file`, minus the
+/// file.
+fn allreduce_via_daemon(args: &Args, target: &str) -> Result<()> {
+    let op = args.reduce_op(ReduceOp::Sum)?;
+    let size = args.get_size("size", 65536)?;
+    let req = JsonObj::new()
+        .str("cmd", "allreduce")
+        .str("op", op.name())
+        .num_usize("bytes", size)
+        .num_usize("root", args.get_usize("root", 0)?);
+    let req = daemon_topology(args, req)?;
+    let mut client = Client::connect(&Target::parse(target))?;
+    let doc = client.request(&req.render())?;
+    let policy = doc.get("policy").and_then(|v| v.as_str()).unwrap_or("?");
+    let makespan = doc.get("makespan_us").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    let wan = doc.get("wan_msgs").and_then(|v| v.as_u64()).unwrap_or(0);
+    println!(
+        "gridd {} allreduce ({}) of {}: policy {policy} — makespan {}, WAN msgs {wan}",
+        Target::parse(target),
+        op.name(),
+        fmt::bytes(size),
+        fmt::time_us(makespan)
+    );
+    Ok(())
+}
+
+/// `tune-composition --connect`: one daemon-side tune request per
+/// payload size. Identical requests racing from other clients coalesce
+/// into a single ghost sweep on the daemon (`source` says whether this
+/// reply was tuned fresh, coalesced onto someone else's flight, or
+/// served from the persistent verdict store).
+fn tune_via_daemon(args: &Args, target: &str) -> Result<()> {
+    let sizes = args.sizes(&[4096, 65536, 1 << 20])?;
+    let op = args.reduce_op(ReduceOp::Sum)?;
+    args.search_mode()?; // validate --mode locally for early errors
+    let mut client = Client::connect(&Target::parse(target))?;
+    println!(
+        "E15 via gridd at {} — per-level composition autotuning ({}):\n",
+        Target::parse(target),
+        op.name()
+    );
+    for &bytes in &sizes {
+        let req = JsonObj::new()
+            .str("cmd", "tune")
+            .str("kind", "composition")
+            .str("op", op.name())
+            .num_usize("bytes", bytes)
+            .str("mode", args.get_or("mode", "auto"));
+        let req = daemon_topology(args, req)?;
+        let doc = client.request(&req.render())?;
+        let policy = doc.get("policy").and_then(|v| v.as_str()).unwrap_or("?");
+        let best_us = doc.get("best_us").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let probes = doc.get("probes").and_then(|v| v.as_u64()).unwrap_or(0);
+        let source = doc.get("source").and_then(|v| v.as_str()).unwrap_or("?");
+        println!(
+            "  {:>10}: {policy} ({}) — {probes} probes [{source}]",
+            fmt::bytes(bytes),
+            fmt::time_us(best_us)
+        );
+    }
+    println!("\nverdicts live in the daemon's policy store (and its --policy-dir, when set).");
+    Ok(())
 }
 
 /// Read one benchkit `BENCH_*.json` back as `(case name, median_us)`
@@ -207,6 +298,9 @@ fn run(raw: Vec<String>) -> Result<()> {
             print!("{}", experiment::collectives_suite_table(size, combiner)?.to_markdown());
         }
         "allreduce" => {
+            if let Some(target) = args.get("connect") {
+                return allreduce_via_daemon(&args, target);
+            }
             let size = args.get_size("size", 65536)?;
             let xla = maybe_xla(&args)?;
             let (_rt, combiner): (Option<Runtime>, Arc<dyn Combiner>) = match xla {
@@ -290,6 +384,9 @@ fn run(raw: Vec<String>) -> Result<()> {
             }
         }
         "tune-composition" => {
+            if let Some(target) = args.get("connect") {
+                return tune_via_daemon(&args, target);
+            }
             let sizes = args.sizes(&[4096, 65536, 1 << 20])?;
             let op = args.reduce_op(ReduceOp::Sum)?;
             let strategy = args.strategy(Strategy::Multilevel)?;

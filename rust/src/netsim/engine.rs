@@ -413,6 +413,13 @@ impl ExecScratch {
         let arena = self.ghost.lock().unwrap().pop().unwrap_or_default();
         GhostArena { pool: &self.ghost, arena: Some(arena) }
     }
+
+    /// Ghost arenas currently parked in the pool (none checked out):
+    /// the high-water mark of concurrent ghost probes this scratch has
+    /// served — `gridd stats` reports it per worker.
+    pub fn ghost_pool_size(&self) -> usize {
+        self.ghost.lock().unwrap().len()
+    }
 }
 
 /// A ghost arena checked out of [`ExecScratch::ghost`]'s pool; derefs

@@ -22,6 +22,17 @@
 //! so it always survives while anything older can be dropped first).
 //! Evicted plans stay alive for holders of their `Arc`; `evictions()`
 //! reports how many were dropped.
+//!
+//! Sharding: an unbounded cache spreads its map over
+//! [`DEFAULT_SHARDS`] independently locked shards (key-hash addressed)
+//! so a daemon's worker threads don't serialize on one mutex. Every
+//! invariant above is per-key, and a key always maps to the same shard,
+//! so first-insert-wins identity and the counter identities
+//! (`hits() + misses()` == lookups, `misses() == len()` race-free
+//! eviction-free) hold globally — the hit/miss/eviction counters stay
+//! cache-global atomics. A *bounded* cache uses a single shard: LRU
+//! eviction needs one recency order over the whole resident set, and
+//! capacity-bounded caches are sized for sweeps, not daemon QPS.
 
 use super::{CollectivePlan, OpKind, PlanKey, PlanMeta, PLAN_BASE_TAG};
 use crate::collectives::programs;
@@ -30,8 +41,13 @@ use crate::topology::Communicator;
 use crate::tree::build_strategy_tree;
 use crate::util::counters;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Shard count for unbounded caches (power of two, modest: plans are
+/// few and large, contention comes from lookups, not resident count).
+pub const DEFAULT_SHARDS: usize = 8;
 
 #[derive(Debug)]
 struct Entry {
@@ -52,9 +68,11 @@ struct Inner {
 }
 
 /// Memoizing store of compiled collective plans.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct PlanCache {
-    inner: Mutex<Inner>,
+    /// Key-hash-addressed shards; bounded caches always hold exactly one
+    /// (global LRU needs a single recency order).
+    shards: Box<[Mutex<Inner>]>,
     /// Footprint budget in bytes; `None` = unbounded.
     capacity: Option<usize>,
     hits: AtomicU64,
@@ -62,15 +80,34 @@ pub struct PlanCache {
     evictions: AtomicU64,
 }
 
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new()
+    }
+}
+
 impl PlanCache {
     pub fn new() -> Self {
-        PlanCache::default()
+        PlanCache::sharded(DEFAULT_SHARDS, None)
     }
 
     /// A cache bounded to `capacity_bytes` of plan footprint, evicting
-    /// least-recently-used plans on overflow.
+    /// least-recently-used plans on overflow. Single-sharded: eviction
+    /// ranks recency across the entire resident set.
     pub fn with_capacity(capacity_bytes: usize) -> Self {
-        PlanCache { capacity: Some(capacity_bytes), ..PlanCache::default() }
+        PlanCache::sharded(1, Some(capacity_bytes))
+    }
+
+    fn sharded(n_shards: usize, capacity: Option<usize>) -> Self {
+        let shards =
+            (0..n_shards.max(1)).map(|_| Mutex::new(Inner::default())).collect::<Vec<_>>();
+        PlanCache {
+            shards: shards.into_boxed_slice(),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
     }
 
     /// The footprint budget (`None` = unbounded).
@@ -78,25 +115,40 @@ impl PlanCache {
         self.capacity
     }
 
-    /// Number of cached plans.
+    /// Number of independently locked shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning `key` — stable for the cache's lifetime, so all
+    /// racers for one key serialize on the same lock.
+    fn shard(&self, key: &PlanKey) -> &Mutex<Inner> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Number of cached plans (summed over shards).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Current resident footprint in bytes.
+    /// Current resident footprint in bytes (summed over shards).
     pub fn footprint_bytes(&self) -> usize {
-        self.inner.lock().unwrap().footprint
+        self.shards.iter().map(|s| s.lock().unwrap().footprint).sum()
     }
 
     /// Drop every cached plan (counters keep running).
     pub fn clear(&self) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.map.clear();
-        inner.footprint = 0;
+        for shard in self.shards.iter() {
+            let mut inner = shard.lock().unwrap();
+            inner.map.clear();
+            inner.footprint = 0;
+        }
     }
 
     /// Warm-path lookups served without building, over this cache's
@@ -148,9 +200,9 @@ impl PlanCache {
         Ok(self.insert_or_adopt(key, plan))
     }
 
-    /// Warm path: bump recency and hit counters under the lock.
+    /// Warm path: bump recency and hit counters under the shard lock.
     fn lookup(&self, key: &PlanKey) -> Option<Arc<CollectivePlan>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(key).lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
         let entry = inner.map.get_mut(key)?;
@@ -171,7 +223,7 @@ impl PlanCache {
         plan: Arc<CollectivePlan>,
     ) -> Arc<CollectivePlan> {
         let footprint = plan.footprint_bytes();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(&key).lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(existing) = inner.map.get_mut(&key) {
@@ -486,6 +538,25 @@ mod tests {
         cache.get_or_build(&comm, key(&comm, OpKind::Bcast, 1)).unwrap();
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn sharding_defaults_and_aggregate_views() {
+        let comm = Communicator::world(&TopologySpec::paper_fig1());
+        let cache = PlanCache::new();
+        assert_eq!(cache.n_shards(), DEFAULT_SHARDS);
+        assert_eq!(PlanCache::with_capacity(1024).n_shards(), 1, "bounded => global LRU");
+        // Populate enough distinct keys to land in more than one shard;
+        // len()/footprint_bytes() must aggregate across all of them.
+        for root in 0..comm.size() {
+            cache.get_or_build(&comm, key(&comm, OpKind::Bcast, root)).unwrap();
+        }
+        assert_eq!(cache.len(), comm.size());
+        assert_eq!(cache.misses() as usize, cache.len(), "misses() == len() across shards");
+        assert!(cache.footprint_bytes() > 0);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.footprint_bytes(), 0);
     }
 
     #[test]

@@ -1,0 +1,126 @@
+//! Blocking `gridd` client: one connection, line-per-request, used by
+//! the `gridcollect --connect` CLI paths, the e2e tests and the QPS
+//! bench. Std-only, like the daemon.
+
+use crate::error::{Error, Result};
+use crate::service::proto;
+use crate::util::json::Value;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+
+/// Where a `gridd` daemon listens. Parsed from the `--connect` flag:
+/// anything with a `/` (or a `.sock` suffix) is a Unix socket path,
+/// `host:port` is TCP.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Target {
+    Unix(String),
+    Tcp(String),
+}
+
+impl Target {
+    pub fn parse(s: &str) -> Target {
+        if s.contains('/') || s.ends_with(".sock") {
+            Target::Unix(s.to_string())
+        } else if s.contains(':') {
+            Target::Tcp(s.to_string())
+        } else {
+            Target::Unix(s.to_string())
+        }
+    }
+}
+
+impl std::fmt::Display for Target {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Target::Unix(p) => write!(f, "unix:{p}"),
+            Target::Tcp(a) => write!(f, "tcp:{a}"),
+        }
+    }
+}
+
+enum Conn {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+/// One open connection to a daemon. Requests are serialized on the
+/// connection in order; responses to failed commands surface as
+/// [`Error::Service`] carrying the daemon's message.
+pub struct Client {
+    conn: Conn,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    pub fn connect(target: &Target) -> Result<Client> {
+        let conn = match target {
+            Target::Unix(path) => {
+                Conn::Unix(UnixStream::connect(path).map_err(|e| Error::io(path, e))?)
+            }
+            Target::Tcp(addr) => {
+                Conn::Tcp(TcpStream::connect(addr).map_err(|e| Error::io(addr, e))?)
+            }
+        };
+        Ok(Client { conn, buf: Vec::new() })
+    }
+
+    fn write_all(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        match &mut self.conn {
+            Conn::Unix(s) => s.write_all(bytes),
+            Conn::Tcp(s) => s.write_all(bytes),
+        }
+    }
+
+    fn read_some(&mut self, chunk: &mut [u8]) -> std::io::Result<usize> {
+        match &mut self.conn {
+            Conn::Unix(s) => s.read(chunk),
+            Conn::Tcp(s) => s.read(chunk),
+        }
+    }
+
+    /// Send one request line (no trailing newline) and block for the
+    /// response. `ok: false` responses become [`Error::Service`].
+    pub fn request(&mut self, line: &str) -> Result<Value> {
+        let mut framed = String::with_capacity(line.len() + 1);
+        framed.push_str(line);
+        framed.push('\n');
+        self.write_all(framed.as_bytes())
+            .map_err(|e| Error::Service(format!("write failed: {e}")))?;
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = self.buf.drain(..=pos).collect();
+                let text = std::str::from_utf8(&line[..line.len() - 1])
+                    .map_err(|_| Error::Service("response is not UTF-8".into()))?;
+                let doc = crate::util::json::parse(text)?;
+                if doc.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+                    let msg = proto::opt_str(&doc, "error").unwrap_or("unspecified failure");
+                    return Err(Error::Service(msg.to_string()));
+                }
+                return Ok(doc);
+            }
+            let n = self
+                .read_some(&mut chunk)
+                .map_err(|e| Error::Service(format!("read failed: {e}")))?;
+            if n == 0 {
+                return Err(Error::Service("connection closed before a response".into()));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_parsing() {
+        assert_eq!(Target::parse("/tmp/gridd.sock"), Target::Unix("/tmp/gridd.sock".into()));
+        assert_eq!(Target::parse("gridd.sock"), Target::Unix("gridd.sock".into()));
+        assert_eq!(Target::parse("127.0.0.1:7070"), Target::Tcp("127.0.0.1:7070".into()));
+        assert_eq!(Target::parse("plain"), Target::Unix("plain".into()));
+        assert_eq!(Target::parse("127.0.0.1:7070").to_string(), "tcp:127.0.0.1:7070");
+    }
+}

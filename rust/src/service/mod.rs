@@ -1,0 +1,746 @@
+//! `gridd` — the long-running tuning/planning service.
+//!
+//! [`GridSession`] answers one caller at a time; `gridd` promotes it to
+//! a daemon serving **concurrent** clients over newline-delimited JSON
+//! (Unix socket and/or TCP — see [`proto`] for the wire format). All
+//! requests targeting the same `(topology, strategy)` route through one
+//! shared [`Context`]: a sharded [`PlanCache`], a [`PolicyTable`] verdict
+//! store, and — the headline mechanism — a [`Singleflight`] table that
+//! coalesces `K` concurrent identical tune requests into exactly **one**
+//! ghost sweep (latecomers block on the in-flight entry and share the
+//! verdict; counter-enforced in `rust/tests/gridd_singleflight.rs`).
+//!
+//! Connections are handled by a bounded [`TaskPool`] whose workers each
+//! own an [`ExecScratch`] arena for their whole lifetime, so scratch
+//! reuse works exactly like the library's pooled probe loops — per
+//! worker, not per request.
+//!
+//! With `--policy-dir` set, tuned verdicts write back to disk through
+//! the atomic [`PolicyTable::save`] (merge-on-write, newest verdict
+//! wins), and a restarted daemon seeds each context's store from the
+//! persisted table: the second life of the daemon starts warm, serving
+//! `tune` requests for already-tuned points from the table with zero
+//! probes.
+
+pub mod client;
+pub mod proto;
+pub mod singleflight;
+
+pub use client::{Client, Target};
+pub use singleflight::Singleflight;
+
+use crate::collectives::request;
+use crate::coordinator::tuning::{self, SearchMode, DEFAULT_BEAM_WIDTH};
+use crate::error::{Error, Result};
+use crate::model::{presets, NetworkParams};
+use crate::netsim::{ExecScratch, ReduceOp};
+use crate::plan::{AlgoPolicy, AllreduceAlgo, PlanCache};
+use crate::session::{
+    policy_from_token, policy_to_token, topology_fingerprint, GridSession, PolicyProvenance,
+    PolicyTable,
+};
+use crate::topology::{discover, Communicator, CostMatrix, TopologySpec};
+use crate::tree::{LevelPolicy, Strategy};
+use crate::util::json::Value;
+use crate::util::par::TaskPool;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How a daemon is configured: at least one listener is required.
+#[derive(Clone, Debug, Default)]
+pub struct GriddConfig {
+    /// Unix socket path to listen on (removed and rebound if stale).
+    pub socket: Option<String>,
+    /// TCP address to listen on, e.g. `127.0.0.1:0`.
+    pub tcp: Option<String>,
+    /// Worker threads (each owning one scratch arena); 0 means 1.
+    pub threads: usize,
+    /// Directory for persisted per-context policy tables; `None`
+    /// disables write-back.
+    pub policy_dir: Option<String>,
+}
+
+/// One tune verdict as it travels through the singleflight table —
+/// cloneable so followers share the leader's copy.
+#[derive(Clone, Debug)]
+struct TuneVerdict {
+    token: String,
+    best_us: f64,
+    probes: usize,
+    /// Served from the policy store (zero probes) rather than tuned now.
+    from_table: bool,
+}
+
+/// `(topology fingerprint, op name, bytes, tuner kind)` — what makes two
+/// tune requests "the same question".
+type FlightKey = (u64, String, usize, String);
+
+/// Shared per-`(topology, strategy)` state: every request against the
+/// same context hits the same plan cache and policy store.
+struct Context {
+    comm: Communicator,
+    params: NetworkParams,
+    strategy: Strategy,
+    fingerprint: u64,
+    cache: Arc<PlanCache>,
+    store: Mutex<PolicyTable>,
+    persist_path: Option<String>,
+}
+
+impl Context {
+    /// A per-request session view over this context's shared state,
+    /// executing on the calling worker's scratch arena.
+    fn session(&self, scratch: &Arc<ExecScratch>) -> GridSession {
+        GridSession::new(&self.comm, self.params.clone(), self.strategy)
+            .with_plan_cache(Arc::clone(&self.cache))
+            .with_scratch(Arc::clone(scratch))
+    }
+
+    /// Write the store back to `persist_path` (no-op without one):
+    /// load-merge-save so a concurrently written file keeps its other
+    /// verdicts, with this store's entries winning collisions. The save
+    /// itself is atomic (temp file + rename).
+    fn persist(&self) -> Result<()> {
+        let Some(path) = &self.persist_path else {
+            return Ok(());
+        };
+        let snapshot = self.store.lock().unwrap().clone();
+        let merged = if std::path::Path::new(path).exists() {
+            match PolicyTable::load(path) {
+                Ok(mut disk) => {
+                    disk.merge(&snapshot)?;
+                    disk
+                }
+                Err(_) => snapshot,
+            }
+        } else {
+            snapshot
+        };
+        merged.save(path)?;
+        Ok(())
+    }
+}
+
+struct ServerState {
+    params: NetworkParams,
+    policy_dir: Option<String>,
+    contexts: Mutex<HashMap<String, Arc<Context>>>,
+    flights: Singleflight<FlightKey, TuneVerdict>,
+    /// One scratch arena per pool worker, indexed by worker id (also
+    /// readable here so `stats` can report pool depths).
+    scratches: Vec<Arc<ExecScratch>>,
+    requests: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl ServerState {
+    /// The shared context for the request's `spec`/`matrix_csv` +
+    /// `strategy` parameters, created (and disk-seeded) on first use.
+    fn context(&self, doc: &Value) -> Result<Arc<Context>> {
+        let strategy = parse_strategy(proto::opt_str(doc, "strategy").unwrap_or("multilevel"))?;
+        let (key, comm) = match proto::opt_str(doc, "matrix_csv") {
+            Some(csv) => {
+                let m = CostMatrix::from_tacos_csv("wire", csv)?;
+                let comm = Communicator::from_matrix(&m)?;
+                let key =
+                    format!("matrix:{:016x}|{}", topology_fingerprint(&comm), strategy.name());
+                (key, Some(comm))
+            }
+            None => {
+                let spec_name = proto::opt_str(doc, "spec").unwrap_or("experiment");
+                (format!("spec:{spec_name}|{}", strategy.name()), None)
+            }
+        };
+        if let Some(ctx) = self.contexts.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(ctx));
+        }
+        // Build outside the lock (tree construction is not free); if two
+        // requests race, the first insert wins and the loser's context is
+        // dropped before serving anything.
+        let comm = match comm {
+            Some(c) => c,
+            None => {
+                let spec = parse_spec_text(proto::opt_str(doc, "spec").unwrap_or("experiment"))?;
+                Communicator::world(&spec)
+            }
+        };
+        let fingerprint = topology_fingerprint(&comm);
+        let prov = PolicyProvenance::of(&comm, &self.params, strategy, &LevelPolicy::paper());
+        let persist_path = self
+            .policy_dir
+            .as_ref()
+            .map(|d| format!("{d}/policy_{fingerprint:016x}_{}.json", strategy.name()));
+        let store = match persist_path.as_deref().filter(|p| std::path::Path::new(p).exists()) {
+            Some(p) => {
+                let table = PolicyTable::load(p)?;
+                table.provenance().check_matches(&prov)?;
+                table
+            }
+            None => PolicyTable::new(prov),
+        };
+        let ctx = Arc::new(Context {
+            comm,
+            params: self.params.clone(),
+            strategy,
+            fingerprint,
+            cache: Arc::new(PlanCache::new()),
+            store: Mutex::new(store),
+            persist_path,
+        });
+        let mut map = self.contexts.lock().unwrap();
+        Ok(Arc::clone(map.entry(key).or_insert(ctx)))
+    }
+}
+
+fn parse_strategy(name: &str) -> Result<Strategy> {
+    match name {
+        "unaware" | "mpich-binomial" | "binomial" => Ok(Strategy::Unaware),
+        "machine" | "magpie-machine" => Ok(Strategy::TwoLevelMachine),
+        "site" | "magpie-site" => Ok(Strategy::TwoLevelSite),
+        "multilevel" => Ok(Strategy::Multilevel),
+        other => Err(Error::Service(format!(
+            "unknown strategy '{other}' (use unaware|machine|site|multilevel)"
+        ))),
+    }
+}
+
+fn parse_spec_text(name: &str) -> Result<TopologySpec> {
+    match name {
+        "fig1" => Ok(TopologySpec::paper_fig1()),
+        "experiment" => Ok(TopologySpec::paper_experiment()),
+        other => {
+            let parts: Vec<usize> = other.split('x').filter_map(|p| p.parse().ok()).collect();
+            if parts.len() != 3 {
+                return Err(Error::Service(format!(
+                    "\"spec\" must be fig1|experiment|SxMxP, got '{other}'"
+                )));
+            }
+            TopologySpec::uniform(parts[0], parts[1], parts[2])
+        }
+    }
+}
+
+fn parse_op(name: &str) -> Result<ReduceOp> {
+    match name {
+        "sum" => Ok(ReduceOp::Sum),
+        "max" => Ok(ReduceOp::Max),
+        "min" => Ok(ReduceOp::Min),
+        "prod" => Ok(ReduceOp::Prod),
+        other => {
+            Err(Error::Service(format!("unknown reduce op '{other}' (use sum|max|min|prod)")))
+        }
+    }
+}
+
+fn parse_mode(name: &str) -> Result<SearchMode> {
+    match name {
+        "auto" => Ok(SearchMode::Auto),
+        "exhaustive" | "full" => Ok(SearchMode::Exhaustive),
+        "beam" => Ok(SearchMode::Beam { width: DEFAULT_BEAM_WIDTH }),
+        other => match other.strip_prefix("beam:").map(str::parse::<usize>) {
+            Some(Ok(w)) if w >= 1 => Ok(SearchMode::Beam { width: w }),
+            _ => Err(Error::Service(format!(
+                "unknown search mode '{other}' (use auto|exhaustive|beam|beam:W)"
+            ))),
+        },
+    }
+}
+
+/// f32-aligned payload size from the request's `bytes` field.
+fn want_elems(doc: &Value) -> Result<(usize, usize)> {
+    let bytes = proto::want_u64(doc, "bytes")? as usize;
+    if bytes == 0 || bytes % 4 != 0 {
+        return Err(Error::Service(format!(
+            "\"bytes\" must be a positive multiple of 4 (f32 payloads), got {bytes}"
+        )));
+    }
+    Ok((bytes, bytes / 4))
+}
+
+// ---- request handlers ----------------------------------------------
+
+fn handle_tune(
+    state: &ServerState,
+    scratch: &Arc<ExecScratch>,
+    id: Option<u64>,
+    doc: &Value,
+) -> Result<String> {
+    let ctx = state.context(doc)?;
+    let op = parse_op(proto::opt_str(doc, "op").unwrap_or("sum"))?;
+    let (bytes, _) = want_elems(doc)?;
+    let kind = proto::opt_str(doc, "kind").unwrap_or("boundary").to_string();
+    let mode = match kind.as_str() {
+        "boundary" => None,
+        "composition" => Some(parse_mode(proto::opt_str(doc, "mode").unwrap_or("auto"))?),
+        other => {
+            return Err(Error::Service(format!(
+                "unknown tune kind '{other}' (use boundary|composition)"
+            )))
+        }
+    };
+    let respond = |v: &TuneVerdict, source: &str| {
+        Ok(proto::ok_response(id)
+            .str("cmd", "tune")
+            .str("op", op.name())
+            .num_usize("bytes", bytes)
+            .str("kind", &kind)
+            .str("policy", &v.token)
+            .f64("best_us", v.best_us)
+            .num_usize("probes", v.probes)
+            .str("source", source)
+            .str("fingerprint", &format!("{:016x}", ctx.fingerprint))
+            .render())
+    };
+    // Warm path: an already-tuned point never flies (this is also what
+    // makes a restarted daemon with a seeded store answer with zero
+    // probes).
+    if let Some(e) = ctx.store.lock().unwrap().exact(op, bytes) {
+        let v = TuneVerdict {
+            token: policy_to_token(e.policy),
+            best_us: e.best_us,
+            probes: 0,
+            from_table: true,
+        };
+        return respond(&v, "table");
+    }
+    let key: FlightKey = (ctx.fingerprint, op.name().to_string(), bytes, kind.clone());
+    let flight_ctx = Arc::clone(&ctx);
+    let flight_scratch = Arc::clone(scratch);
+    let (outcome, led) = state.flights.run(key, move || {
+        // Double-check inside the flight: a leader that finished between
+        // our store check and this flight's start already recorded the
+        // verdict — serve it instead of re-sweeping.
+        if let Some(e) = flight_ctx.store.lock().unwrap().exact(op, bytes) {
+            return Ok(TuneVerdict {
+                token: policy_to_token(e.policy),
+                best_us: e.best_us,
+                probes: 0,
+                from_table: true,
+            });
+        }
+        let session = flight_ctx.session(&flight_scratch);
+        let engine = session.engine();
+        let (best, best_us, probes) = match mode {
+            None => {
+                let t = tuning::tune_allreduce_boundary(&engine, op, bytes)
+                    .map_err(|e| e.to_string())?;
+                (t.best, t.best_us, t.probes_issued())
+            }
+            Some(m) => {
+                let t = tuning::tune_allreduce_composition(&engine, op, bytes, m)
+                    .map_err(|e| e.to_string())?;
+                (t.best, t.best_us, t.probes_issued)
+            }
+        };
+        flight_ctx.store.lock().unwrap().record(op, bytes, best, best_us);
+        flight_ctx.persist().map_err(|e| e.to_string())?;
+        Ok(TuneVerdict { token: policy_to_token(best), best_us, probes, from_table: false })
+    });
+    let v = outcome.map_err(Error::Service)?;
+    let source = if v.from_table {
+        "table"
+    } else if led {
+        "tuned"
+    } else {
+        "coalesced"
+    };
+    respond(&v, source)
+}
+
+fn handle_resolve(state: &ServerState, id: Option<u64>, doc: &Value) -> Result<String> {
+    let ctx = state.context(doc)?;
+    let op = parse_op(proto::opt_str(doc, "op").unwrap_or("sum"))?;
+    let (bytes, _) = want_elems(doc)?;
+    let store = ctx.store.lock().unwrap();
+    let Some(policy) = store.best_for(op, bytes) else {
+        return Err(Error::Service(format!(
+            "no tuned verdict for op '{}' on this topology — send a \"tune\" request first",
+            op.name()
+        )));
+    };
+    let exact = store.exact(op, bytes).is_some();
+    drop(store);
+    Ok(proto::ok_response(id)
+        .str("cmd", "resolve")
+        .str("op", op.name())
+        .num_usize("bytes", bytes)
+        .str("policy", &policy_to_token(policy))
+        .bool("exact", exact)
+        .str("fingerprint", &format!("{:016x}", ctx.fingerprint))
+        .render())
+}
+
+/// `allreduce` (policy defaults to the store's verdict, then uniform
+/// reduce+bcast) and `simulate` (explicit policy token required) share
+/// one ghost-timing path.
+fn handle_timing(
+    state: &ServerState,
+    scratch: &Arc<ExecScratch>,
+    id: Option<u64>,
+    cmd: &str,
+    doc: &Value,
+) -> Result<String> {
+    let ctx = state.context(doc)?;
+    let op = parse_op(proto::opt_str(doc, "op").unwrap_or("sum"))?;
+    let (bytes, elems) = want_elems(doc)?;
+    let root = proto::opt_u64(doc, "root").unwrap_or(0) as usize;
+    if root >= ctx.comm.size() {
+        return Err(Error::Service(format!(
+            "root {root} out of range for a {}-rank topology",
+            ctx.comm.size()
+        )));
+    }
+    let policy = match proto::opt_str(doc, "policy") {
+        Some(token) => policy_from_token(token)?,
+        None if cmd == "allreduce" => ctx
+            .store
+            .lock()
+            .unwrap()
+            .best_for(op, bytes)
+            .unwrap_or(AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)),
+        None => {
+            return Err(Error::Service(
+                "\"simulate\" needs an explicit \"policy\" token (use \"allreduce\" for \
+                 store-resolved timing)"
+                    .into(),
+            ))
+        }
+    };
+    let session = ctx.session(scratch);
+    let sim = session.simulate_timing(&request::AllreduceProbe { root, op, policy, elems })?;
+    Ok(proto::ok_response(id)
+        .str("cmd", cmd)
+        .str("op", op.name())
+        .num_usize("bytes", bytes)
+        .num_usize("root", root)
+        .str("policy", &policy_to_token(policy))
+        .f64("makespan_us", sim.makespan_us)
+        .num_u64("wan_msgs", sim.wan_messages())
+        .str("fingerprint", &format!("{:016x}", ctx.fingerprint))
+        .render())
+}
+
+fn handle_discover(id: Option<u64>, doc: &Value) -> Result<String> {
+    let csv = proto::want_str(doc, "matrix_csv")?;
+    let m = CostMatrix::from_tacos_csv("wire", csv)?;
+    let probe =
+        proto::opt_u64(doc, "probe_bytes").unwrap_or(discover::DEFAULT_PROBE_BYTES as u64) as usize;
+    let d = discover::infer_clustering(&m, probe)?;
+    let comm = Communicator::from_matrix(&m)?;
+    let c = &d.clustering;
+    let clusters: Vec<String> =
+        (0..c.n_levels()).map(|l| c.clusters_at(l).len().to_string()).collect();
+    Ok(proto::ok_response(id)
+        .str("cmd", "discover")
+        .num_usize("n_ranks", c.n_ranks())
+        .num_usize("n_levels", c.n_levels())
+        .raw("clusters_per_level", &format!("[{}]", clusters.join(",")))
+        .num_usize("probe_bytes", probe)
+        .str("fingerprint", &format!("{:016x}", topology_fingerprint(&comm)))
+        .render())
+}
+
+fn handle_stats(state: &ServerState, id: Option<u64>) -> Result<String> {
+    let contexts = state.contexts.lock().unwrap();
+    let (mut hits, mut misses, mut evictions) = (0u64, 0u64, 0u64);
+    let (mut plans, mut footprint, mut entries) = (0usize, 0usize, 0usize);
+    for ctx in contexts.values() {
+        hits += ctx.cache.hits();
+        misses += ctx.cache.misses();
+        evictions += ctx.cache.evictions();
+        plans += ctx.cache.len();
+        footprint += ctx.cache.footprint_bytes();
+        entries += ctx.store.lock().unwrap().len();
+    }
+    let n_contexts = contexts.len();
+    drop(contexts);
+    let ghost_pooled: usize = state.scratches.iter().map(|s| s.ghost_pool_size()).sum();
+    Ok(proto::ok_response(id)
+        .str("cmd", "stats")
+        .num_u64("requests", state.requests.load(Ordering::Relaxed))
+        .num_usize("contexts", n_contexts)
+        .num_usize("policy_entries", entries)
+        .num_u64("plan_hits", hits)
+        .num_u64("plan_misses", misses)
+        .num_u64("plan_evictions", evictions)
+        .num_usize("plans_cached", plans)
+        .num_usize("plan_footprint_bytes", footprint)
+        .num_usize("shards_per_cache", crate::plan::cache::DEFAULT_SHARDS)
+        .num_u64("singleflight_leaders", state.flights.leaders())
+        .num_u64("singleflight_followers", state.flights.followers())
+        .num_usize("threads", state.scratches.len())
+        .num_usize("ghost_arenas_pooled", ghost_pooled)
+        .render())
+}
+
+fn dispatch_cmd(
+    state: &ServerState,
+    worker: usize,
+    id: Option<u64>,
+    cmd: &str,
+    doc: &Value,
+) -> Result<String> {
+    let scratch = &state.scratches[worker];
+    match cmd {
+        "ping" => Ok(proto::ok_response(id).str("cmd", "ping").str("service", "gridd").render()),
+        "tune" => handle_tune(state, scratch, id, doc),
+        "resolve" => handle_resolve(state, id, doc),
+        "allreduce" | "simulate" => handle_timing(state, scratch, id, cmd, doc),
+        "discover" => handle_discover(id, doc),
+        "stats" => handle_stats(state, id),
+        "shutdown" => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            Ok(proto::ok_response(id).str("cmd", "shutdown").bool("stopping", true).render())
+        }
+        other => Err(Error::Service(format!(
+            "unknown command '{other}' (use \
+             ping|tune|resolve|allreduce|simulate|discover|stats|shutdown)"
+        ))),
+    }
+}
+
+fn handle_line(state: &ServerState, worker: usize, line: &str) -> String {
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    match proto::parse_request(line) {
+        Err(e) => proto::err_response(None, &e.to_string()),
+        Ok((id, cmd, doc)) => match dispatch_cmd(state, worker, id, &cmd, &doc) {
+            Ok(response) => response,
+            Err(e) => proto::err_response(id, &e.to_string()),
+        },
+    }
+}
+
+// ---- transport ------------------------------------------------------
+
+enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    fn configure(&self) -> std::io::Result<()> {
+        // Accepted sockets must be blocking with a finite read timeout:
+        // the per-connection loop wakes every 250ms to notice shutdown.
+        match self {
+            Stream::Unix(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(Duration::from_millis(250)))
+            }
+            Stream::Tcp(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(Duration::from_millis(250)))
+            }
+        }
+    }
+
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+
+    fn write_line(&mut self, line: &str) -> std::io::Result<()> {
+        let mut framed = Vec::with_capacity(line.len() + 1);
+        framed.extend_from_slice(line.as_bytes());
+        framed.push(b'\n');
+        match self {
+            Stream::Unix(s) => s.write_all(&framed),
+            Stream::Tcp(s) => s.write_all(&framed),
+        }
+    }
+}
+
+fn handle_conn(state: &ServerState, worker: usize, mut stream: Stream) {
+    if stream.configure().is_err() {
+        return;
+    }
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = buf.drain(..=pos).collect();
+            let text = String::from_utf8_lossy(&line[..line.len() - 1]);
+            let trimmed = text.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let response = handle_line(state, worker, trimmed);
+            if stream.write_line(&response).is_err() {
+                return;
+            }
+        }
+        if state.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// The daemon: listeners are bound by [`Gridd::new`] (so a caller knows
+/// the OS-assigned TCP port before serving), the accept loop runs in
+/// [`Gridd::run`] (or on a background thread via [`Gridd::spawn`]), and
+/// connections are drained by the worker pool. Dropping the daemon
+/// joins the pool after every accepted connection finishes.
+pub struct Gridd {
+    state: Arc<ServerState>,
+    unix: Option<(UnixListener, String)>,
+    tcp: Option<TcpListener>,
+    pool: TaskPool<usize>,
+}
+
+impl Gridd {
+    pub fn new(cfg: GriddConfig) -> Result<Gridd> {
+        if cfg.socket.is_none() && cfg.tcp.is_none() {
+            return Err(Error::Service(
+                "gridd needs at least one listener (--socket and/or --tcp)".into(),
+            ));
+        }
+        let threads = cfg.threads.max(1);
+        let state = Arc::new(ServerState {
+            params: presets::paper_grid(),
+            policy_dir: cfg.policy_dir,
+            contexts: Mutex::new(HashMap::new()),
+            flights: Singleflight::new(),
+            scratches: (0..threads).map(|_| Arc::new(ExecScratch::new())).collect(),
+            requests: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        if let Some(dir) = &state.policy_dir {
+            std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.clone(), e))?;
+        }
+        let unix = match cfg.socket {
+            Some(path) => {
+                // A stale socket file from a dead daemon blocks bind.
+                let _ = std::fs::remove_file(&path);
+                let listener =
+                    UnixListener::bind(&path).map_err(|e| Error::io(path.clone(), e))?;
+                listener.set_nonblocking(true).map_err(|e| Error::io(path.clone(), e))?;
+                Some((listener, path))
+            }
+            None => None,
+        };
+        let tcp = match cfg.tcp {
+            Some(addr) => {
+                let listener = TcpListener::bind(&addr).map_err(|e| Error::io(addr.clone(), e))?;
+                listener.set_nonblocking(true).map_err(|e| Error::io(addr, e))?;
+                Some(listener)
+            }
+            None => None,
+        };
+        let pool = TaskPool::new(threads, |w| w);
+        Ok(Gridd { state, unix, tcp, pool })
+    }
+
+    /// The bound TCP address (e.g. to learn an OS-assigned port).
+    pub fn tcp_addr(&self) -> Option<std::net::SocketAddr> {
+        self.tcp.as_ref().and_then(|l| l.local_addr().ok())
+    }
+
+    /// The bound Unix socket path.
+    pub fn socket_path(&self) -> Option<&str> {
+        self.unix.as_ref().map(|(_, p)| p.as_str())
+    }
+
+    fn dispatch(&self, stream: Stream) {
+        let state = Arc::clone(&self.state);
+        self.pool.submit(move |w| handle_conn(&state, *w, stream));
+    }
+
+    /// Accept connections until a `shutdown` request lands, then drain
+    /// in-flight connections and remove the socket file.
+    pub fn run(self) -> Result<()> {
+        loop {
+            if self.state.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            let mut accepted = false;
+            if let Some((listener, _)) = &self.unix {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        accepted = true;
+                        self.dispatch(Stream::Unix(stream));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                    Err(_) => {}
+                }
+            }
+            if let Some(listener) = &self.tcp {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        accepted = true;
+                        self.dispatch(Stream::Tcp(stream));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                    Err(_) => {}
+                }
+            }
+            if !accepted {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        if let Some((_, path)) = &self.unix {
+            let _ = std::fs::remove_file(path);
+        }
+        // Dropping `self` closes the pool queue and joins the workers —
+        // every accepted connection drains before this returns.
+        Ok(())
+    }
+
+    /// Run the accept loop on a background thread (tests, benches).
+    pub fn spawn(self) -> GriddHandle {
+        GriddHandle { thread: std::thread::spawn(move || self.run()) }
+    }
+}
+
+/// Join handle for a daemon spawned with [`Gridd::spawn`].
+pub struct GriddHandle {
+    thread: std::thread::JoinHandle<Result<()>>,
+}
+
+impl GriddHandle {
+    pub fn join(self) -> Result<()> {
+        self.thread
+            .join()
+            .map_err(|_| Error::Service("gridd server thread panicked".into()))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_parsers_accept_the_cli_vocabulary() {
+        assert_eq!(parse_strategy("multilevel").unwrap(), Strategy::Multilevel);
+        assert_eq!(parse_strategy("mpich-binomial").unwrap(), Strategy::Unaware);
+        assert!(parse_strategy("bogus").is_err());
+        assert!(parse_spec_text("fig1").is_ok());
+        assert!(parse_spec_text("2x2x2").is_ok());
+        assert!(parse_spec_text("2x2").is_err());
+        assert_eq!(parse_op("max").unwrap(), ReduceOp::Max);
+        assert!(parse_op("bogus").is_err());
+        assert_eq!(parse_mode("beam:4").unwrap(), SearchMode::Beam { width: 4 });
+        assert_eq!(parse_mode("beam").unwrap(), SearchMode::Beam { width: DEFAULT_BEAM_WIDTH });
+        assert!(parse_mode("beam:0").is_err());
+    }
+
+    #[test]
+    fn config_requires_a_listener() {
+        assert!(Gridd::new(GriddConfig::default()).is_err());
+    }
+}

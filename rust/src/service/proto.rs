@@ -1,0 +1,193 @@
+//! The `gridd` wire protocol: newline-delimited JSON objects, one
+//! request and one response per line, symmetric over Unix sockets and
+//! TCP.
+//!
+//! Every request is `{"cmd": "<name>", ...params}` with an optional
+//! numeric `"id"` the response echoes back. Every response carries
+//! `"ok": true|false`; failures add `"error": "<message>"` and
+//! successes the command's payload fields. Timing fields are written
+//! with Rust's `{:?}` float formatting, which the in-tree JSON parser
+//! round-trips **bit-exactly** — the daemon's verdicts compare bitwise
+//! against the library path (`rust/tests/gridd_service.rs`).
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Incremental JSON-object writer shared by both wire directions: keys
+/// land in insertion order, strings are escaped, floats rendered via
+/// `{:?}` (non-finite values become `null` — JSON has no spelling for
+/// them, and the parser must never see one).
+#[derive(Default)]
+pub struct JsonObj {
+    body: String,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        JsonObj::default()
+    }
+
+    fn key(&mut self, k: &str) -> &mut String {
+        if !self.body.is_empty() {
+            self.body.push(',');
+        }
+        self.body.push('"');
+        self.body.push_str(&json::escape(k));
+        self.body.push_str("\":");
+        &mut self.body
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        let escaped = json::escape(v);
+        let body = self.key(k);
+        body.push('"');
+        body.push_str(&escaped);
+        body.push('"');
+        self
+    }
+
+    pub fn num_u64(mut self, k: &str, v: u64) -> Self {
+        let rendered = v.to_string();
+        self.key(k).push_str(&rendered);
+        self
+    }
+
+    pub fn num_usize(self, k: &str, v: usize) -> Self {
+        self.num_u64(k, v as u64)
+    }
+
+    pub fn f64(mut self, k: &str, v: f64) -> Self {
+        let rendered = if v.is_finite() { format!("{v:?}") } else { "null".to_string() };
+        self.key(k).push_str(&rendered);
+        self
+    }
+
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.key(k).push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Insert pre-rendered JSON (an array or nested object) verbatim.
+    pub fn raw(mut self, k: &str, rendered: &str) -> Self {
+        self.key(k).push_str(rendered);
+        self
+    }
+
+    pub fn render(self) -> String {
+        format!("{{{}}}", self.body)
+    }
+}
+
+/// Parse one request line into `(id, cmd, whole document)`.
+pub fn parse_request(line: &str) -> Result<(Option<u64>, String, Value)> {
+    let doc = json::parse(line)
+        .map_err(|e| Error::Service(format!("request is not valid JSON: {e}")))?;
+    let id = doc.get("id").and_then(|v| v.as_u64());
+    let cmd = doc
+        .get("cmd")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| Error::Service("request needs a string \"cmd\" field".into()))?
+        .to_string();
+    Ok((id, cmd, doc))
+}
+
+/// Required string parameter.
+pub fn want_str<'a>(doc: &'a Value, key: &str) -> Result<&'a str> {
+    doc.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| Error::Service(format!("request needs a string \"{key}\" field")))
+}
+
+/// Required integral parameter.
+pub fn want_u64(doc: &Value, key: &str) -> Result<u64> {
+    doc.get(key)
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| Error::Service(format!("request needs an integer \"{key}\" field")))
+}
+
+/// Optional string parameter.
+pub fn opt_str<'a>(doc: &'a Value, key: &str) -> Option<&'a str> {
+    doc.get(key).and_then(|v| v.as_str())
+}
+
+/// Optional integral parameter.
+pub fn opt_u64(doc: &Value, key: &str) -> Option<u64> {
+    doc.get(key).and_then(|v| v.as_u64())
+}
+
+/// Start a success response (the `id`, when present, is echoed first).
+pub fn ok_response(id: Option<u64>) -> JsonObj {
+    let obj = match id {
+        Some(id) => JsonObj::new().num_u64("id", id),
+        None => JsonObj::new(),
+    };
+    obj.bool("ok", true)
+}
+
+/// Render a failure response.
+pub fn err_response(id: Option<u64>, message: &str) -> String {
+    let obj = match id {
+        Some(id) => JsonObj::new().num_u64("id", id),
+        None => JsonObj::new(),
+    };
+    obj.bool("ok", false).str("error", message).render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objects_render_and_round_trip() {
+        let line = JsonObj::new()
+            .str("cmd", "tune")
+            .num_u64("id", 7)
+            .f64("best_us", 1234.5678901234567)
+            .bool("warm", true)
+            .raw("sizes", "[1,2,3]")
+            .render();
+        let doc = json::parse(&line).unwrap();
+        assert_eq!(doc.get("cmd").unwrap().as_str(), Some("tune"));
+        assert_eq!(doc.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(
+            doc.get("best_us").unwrap().as_f64().unwrap().to_bits(),
+            1234.5678901234567f64.to_bits(),
+            "floats survive the wire bit-exactly"
+        );
+        assert_eq!(doc.get("warm").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("sizes").unwrap().as_array().map(<[Value]>::len), Some(3));
+    }
+
+    #[test]
+    fn non_finite_floats_become_null() {
+        let line = JsonObj::new().f64("x", f64::INFINITY).render();
+        let doc = json::parse(&line).unwrap();
+        assert_eq!(doc.get("x"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn strings_are_escaped() {
+        let line = JsonObj::new().str("msg", "a \"quoted\"\nline").render();
+        let doc = json::parse(&line).unwrap();
+        assert_eq!(doc.get("msg").unwrap().as_str(), Some("a \"quoted\"\nline"));
+    }
+
+    #[test]
+    fn request_parsing_and_errors() {
+        let (id, cmd, doc) = parse_request(r#"{"cmd":"tune","id":3,"bytes":65536}"#).unwrap();
+        assert_eq!(id, Some(3));
+        assert_eq!(cmd, "tune");
+        assert_eq!(want_u64(&doc, "bytes").unwrap(), 65536);
+        assert!(want_str(&doc, "op").is_err());
+        assert_eq!(opt_str(&doc, "op"), None);
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"id":1}"#).is_err(), "cmd is required");
+        let err = err_response(Some(1), "boom");
+        let doc = json::parse(&err).unwrap();
+        assert_eq!(doc.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(doc.get("error").unwrap().as_str(), Some("boom"));
+        let ok = ok_response(None).str("status", "ready").render();
+        let doc = json::parse(&ok).unwrap();
+        assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true));
+    }
+}

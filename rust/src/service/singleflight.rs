@@ -1,0 +1,191 @@
+//! Singleflight probe deduplication: `K` concurrent callers asking the
+//! same question get exactly **one** execution of the answer-producing
+//! work, with the other `K - 1` blocking on the in-flight entry and
+//! sharing its verdict.
+//!
+//! The `gridd` service keys flights by `(topology fingerprint, op,
+//! bytes, tuner kind)`: a burst of identical `tune` requests then costs
+//! one ghost sweep total — counter-enforced in
+//! `rust/tests/gridd_singleflight.rs` (`sim_runs` rises by exactly one
+//! sweep's worth, not `K` of them).
+//!
+//! The work's outcome is `Result<V, String>` rather than the crate's
+//! [`crate::error::Error`] (which is deliberately not `Clone`):
+//! followers receive a cloned copy of whatever the leader produced,
+//! including its failure.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// What a flight's work produced — cloneable so every waiter gets it.
+pub type Outcome<V> = std::result::Result<V, String>;
+
+struct Flight<V> {
+    done: Mutex<Option<Outcome<V>>>,
+    cv: Condvar,
+}
+
+/// In-flight call table: one entry per distinct key currently being
+/// computed. See the module docs for semantics.
+pub struct Singleflight<K, V> {
+    inflight: Mutex<HashMap<K, Arc<Flight<V>>>>,
+    leaders: AtomicU64,
+    followers: AtomicU64,
+}
+
+impl<K: std::hash::Hash + Eq + Clone, V: Clone> Singleflight<K, V> {
+    pub fn new() -> Self {
+        Singleflight {
+            inflight: Mutex::new(HashMap::new()),
+            leaders: AtomicU64::new(0),
+            followers: AtomicU64::new(0),
+        }
+    }
+
+    /// Run `work` under `key`, deduplicated: the first caller for a key
+    /// becomes the **leader** and executes `work`; callers arriving
+    /// while that execution is in flight become **followers**, block,
+    /// and receive a clone of the leader's outcome. Returns the outcome
+    /// plus whether this caller led.
+    ///
+    /// Once a flight completes its entry is removed, so a *later* call
+    /// with the same key runs the work again — memoization across
+    /// flights is the caller's job (the service checks its policy store
+    /// before flying, and the leader re-checks inside `work`).
+    pub fn run(&self, key: K, work: impl FnOnce() -> Outcome<V>) -> (Outcome<V>, bool) {
+        let (flight, leading) = {
+            let mut map = self.inflight.lock().unwrap();
+            if let Some(f) = map.get(&key) {
+                self.followers.fetch_add(1, Ordering::Relaxed);
+                (Arc::clone(f), false)
+            } else {
+                let f = Arc::new(Flight { done: Mutex::new(None), cv: Condvar::new() });
+                map.insert(key.clone(), Arc::clone(&f));
+                self.leaders.fetch_add(1, Ordering::Relaxed);
+                (f, true)
+            }
+        };
+        if !leading {
+            let mut done = flight.done.lock().unwrap();
+            while done.is_none() {
+                done = flight.cv.wait(done).unwrap();
+            }
+            return (done.clone().expect("flight completed"), false);
+        }
+        let outcome = work();
+        *flight.done.lock().unwrap() = Some(outcome.clone());
+        flight.cv.notify_all();
+        self.inflight.lock().unwrap().remove(&key);
+        (outcome, true)
+    }
+
+    /// How many calls led a flight (executed the work).
+    pub fn leaders(&self) -> u64 {
+        self.leaders.load(Ordering::Relaxed)
+    }
+
+    /// How many calls joined an in-flight computation instead.
+    pub fn followers(&self) -> u64 {
+        self.followers.load(Ordering::Relaxed)
+    }
+}
+
+impl<K: std::hash::Hash + Eq + Clone, V: Clone> Default for Singleflight<K, V> {
+    fn default() -> Self {
+        Singleflight::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Barrier;
+
+    #[test]
+    fn concurrent_identical_keys_execute_once() {
+        let sf = Arc::new(Singleflight::<&'static str, usize>::new());
+        let executions = Arc::new(AtomicUsize::new(0));
+        let k = 8;
+        let barrier = Arc::new(Barrier::new(k));
+        let handles: Vec<_> = (0..k)
+            .map(|_| {
+                let sf = Arc::clone(&sf);
+                let executions = Arc::clone(&executions);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    sf.run("tune", || {
+                        executions.fetch_add(1, Ordering::Relaxed);
+                        // Hold the flight open long enough that the
+                        // other threads join it as followers.
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                        Ok(42usize)
+                    })
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(executions.load(Ordering::Relaxed), 1, "exactly one execution");
+        assert_eq!(sf.leaders(), 1);
+        assert_eq!(sf.followers(), (k - 1) as u64);
+        assert_eq!(results.iter().filter(|(_, led)| *led).count(), 1);
+        for (outcome, _) in results {
+            assert_eq!(outcome.unwrap(), 42);
+        }
+    }
+
+    #[test]
+    fn sequential_calls_re_execute() {
+        // No memoization across completed flights — that is the policy
+        // store's job, by design.
+        let sf = Singleflight::<u32, u32>::new();
+        let executions = AtomicUsize::new(0);
+        for _ in 0..3 {
+            let (out, led) = sf.run(7, || {
+                executions.fetch_add(1, Ordering::Relaxed);
+                Ok(1)
+            });
+            assert!(led);
+            assert_eq!(out.unwrap(), 1);
+        }
+        assert_eq!(executions.load(Ordering::Relaxed), 3);
+        assert_eq!(sf.leaders(), 3);
+        assert_eq!(sf.followers(), 0);
+    }
+
+    #[test]
+    fn distinct_keys_fly_independently() {
+        let sf = Singleflight::<u32, u32>::new();
+        let (a, _) = sf.run(1, || Ok(10));
+        let (b, _) = sf.run(2, || Ok(20));
+        assert_eq!(a.unwrap(), 10);
+        assert_eq!(b.unwrap(), 20);
+        assert_eq!(sf.leaders(), 2);
+    }
+
+    #[test]
+    fn leader_errors_propagate_to_followers() {
+        let sf = Arc::new(Singleflight::<u8, u8>::new());
+        let barrier = Arc::new(Barrier::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let sf = Arc::clone(&sf);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    sf.run(0, || {
+                        std::thread::sleep(std::time::Duration::from_millis(30));
+                        Err("sweep failed".to_string())
+                    })
+                })
+            })
+            .collect();
+        for h in handles {
+            let (outcome, _) = h.join().unwrap();
+            assert_eq!(outcome.unwrap_err(), "sweep failed");
+        }
+        assert_eq!(sf.leaders() + sf.followers(), 4);
+    }
+}

@@ -33,7 +33,8 @@ pub mod table;
 
 pub use policy::{AutoTune, Fixed, OnMiss, PolicyProvider, Tuned};
 pub use table::{
-    PolicyEntry, PolicyProvenance, PolicyTable, SegmentEntry, ShapeEntry, POLICY_TABLE_VERSION,
+    policy_from_token, policy_to_token, topology_fingerprint, PolicyEntry, PolicyProvenance,
+    PolicyTable, SegmentEntry, ShapeEntry, POLICY_TABLE_VERSION,
 };
 
 use crate::collectives::{request, CollectiveEngine, GhostProber, OpSpec, Outcome, ScheduleMemo};

@@ -29,8 +29,11 @@ use std::sync::Mutex;
 
 /// Resolves the allreduce composition for one call. Implementations may
 /// consult the session (topology, engine, caches) — [`AutoTune`] runs
-/// ghost probes through it.
-pub trait PolicyProvider {
+/// ghost probes through it. `Send + Sync` so sessions can be shared by
+/// the `gridd` service's worker threads (all in-tree providers already
+/// were: [`Fixed`] is `Copy`, [`Tuned`] owns its table, [`AutoTune`]
+/// locks its verdicts).
+pub trait PolicyProvider: Send + Sync {
     /// The policy to run for an allreduce of `bytes` under `op` on this
     /// session's (topology, network, strategy).
     fn resolve(&self, session: &GridSession, op: ReduceOp, bytes: usize) -> Result<AlgoPolicy>;

@@ -270,8 +270,9 @@ fn op_from_name(name: &str) -> Result<ReduceOp> {
 /// the general form `comp:a,b,c[;chunks=k1,k2,...][;order=scf|ll]` with
 /// the level names of [`LevelAlgo::name`] (trailing repeats collapsed,
 /// for the chunk counts too — a uniform profile keeps the version-2
-/// single-count `chunks=K` spelling).
-fn policy_to_token(p: AlgoPolicy) -> String {
+/// single-count `chunks=K` spelling). Public because the `gridd` wire
+/// protocol speaks the same tokens as the table files.
+pub fn policy_to_token(p: AlgoPolicy) -> String {
     if p == AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast) {
         return "rb".to_string();
     }
@@ -293,7 +294,9 @@ fn policy_to_token(p: AlgoPolicy) -> String {
     token
 }
 
-fn policy_from_token(token: &str) -> Result<AlgoPolicy> {
+/// Inverse of [`policy_to_token`] (strict; used by both the file reader
+/// and the `gridd` wire protocol).
+pub fn policy_from_token(token: &str) -> Result<AlgoPolicy> {
     let bad = || Error::Config(format!("policy table: bad policy token '{token}'"));
     match token {
         "rb" => return Ok(AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast)),
@@ -737,10 +740,57 @@ impl PolicyTable {
         Ok(table)
     }
 
-    /// Write the table to `path` (JSON, atomic enough for our use:
-    /// single `fs::write`).
+    /// Fold `other`'s verdicts into this table, `other` winning on key
+    /// collisions (the daemon merges its in-memory verdicts — the newer
+    /// tuning — over whatever an earlier run left on disk). Hard error
+    /// when the two tables' provenance differs: verdicts tuned under
+    /// different topologies/params/strategies must never mix in one
+    /// file. Returns the number of verdicts folded in.
+    pub fn merge(&mut self, other: &PolicyTable) -> Result<usize> {
+        other.provenance.check_matches(&self.provenance)?;
+        for e in &other.entries {
+            self.record(e.op, e.bytes, e.policy, e.best_us);
+        }
+        for e in &other.bcast_segments {
+            self.record_bcast_segments(e.bytes, e.segments, e.best_us);
+        }
+        for e in &other.wan_shapes {
+            self.record_wan_shape(e.bytes, e.shape, e.best_us);
+        }
+        Ok(other.entries.len() + other.bcast_segments.len() + other.wan_shapes.len())
+    }
+
+    /// Write the table to `path` **atomically**: the JSON goes to a
+    /// uniquely named temp file in the same directory (same filesystem,
+    /// so rename is atomic), is fsynced, then renamed over `path`. A
+    /// reader — or a concurrent writer racing this one — therefore only
+    /// ever observes some complete table, never a torn prefix; a crash
+    /// mid-write leaves at worst a stray `.tmp.` file next to an intact
+    /// previous table.
     pub fn save(&self, path: &str) -> Result<()> {
-        std::fs::write(path, self.to_json()).map_err(|e| Error::io(path, e))
+        use std::io::Write as _;
+        static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = format!("{path}.tmp.{}.{seq}", std::process::id());
+        let write = |tmp: &str| -> std::io::Result<()> {
+            let mut f = std::fs::File::create(tmp)?;
+            f.write_all(self.to_json().as_bytes())?;
+            f.sync_all()?;
+            std::fs::rename(tmp, path)
+        };
+        if let Err(e) = write(&tmp) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(Error::io(path, e));
+        }
+        // Durability of the rename itself: fsync the directory entry
+        // (best effort — the atomicity guarantee above does not need it).
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let dir = if dir.as_os_str().is_empty() { std::path::Path::new(".") } else { dir };
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
     }
 
     /// Load a table from `path`. Loading does **not** validate
@@ -1025,6 +1075,95 @@ mod tests {
         );
         let back = PolicyTable::from_json(&json).unwrap();
         assert_eq!(back.entries(), t.entries());
+    }
+
+    #[test]
+    fn merge_folds_newer_verdicts_over_older() {
+        let rb = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast);
+        let rsag = AlgoPolicy::uniform(AllreduceAlgo::ReduceScatterAllgather);
+        let mut disk = PolicyTable::new(provenance());
+        disk.record(ReduceOp::Sum, 4096, rb, 5.0);
+        disk.record(ReduceOp::Sum, 65536, rb, 6.0);
+        disk.record_bcast_segments(4096, 2, 3.0);
+        let mut fresh = PolicyTable::new(provenance());
+        fresh.record(ReduceOp::Sum, 65536, rsag, 4.0); // collision: newer wins
+        fresh.record(ReduceOp::Max, 4096, rb, 7.0); // new key
+        fresh.record_wan_shape(4096, TreeShape::Flat, 2.0);
+        assert_eq!(disk.merge(&fresh).unwrap(), 3);
+        assert_eq!(disk.len(), 3);
+        assert_eq!(disk.exact(ReduceOp::Sum, 4096).unwrap().policy, rb, "untouched");
+        let merged = disk.exact(ReduceOp::Sum, 65536).unwrap();
+        assert_eq!(merged.policy, rsag, "newer verdict won the collision");
+        assert_eq!(merged.best_us, 4.0);
+        assert_eq!(disk.exact(ReduceOp::Max, 4096).unwrap().policy, rb);
+        assert_eq!(disk.best_segments_for(4096), Some(2), "disjoint section kept");
+        assert_eq!(disk.best_wan_shape_for(4096), Some(TreeShape::Flat));
+        // save -> merge -> load round trip: what a daemon restart reads
+        // back is exactly the merged table.
+        let path = format!(
+            "{}/gridcollect_merge_{}.json",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        disk.save(&path).unwrap();
+        let back = PolicyTable::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.entries(), disk.entries());
+        assert_eq!(back.bcast_segment_entries(), disk.bcast_segment_entries());
+        assert_eq!(back.wan_shape_entries(), disk.wan_shape_entries());
+    }
+
+    #[test]
+    fn merge_rejects_incompatible_provenance() {
+        let mut a = PolicyTable::new(provenance());
+        let mut p = provenance();
+        p.topology_fingerprint ^= 1;
+        let b = PolicyTable::new(p);
+        assert!(a.merge(&b).is_err(), "fingerprint mismatch is a hard error");
+        let mut p = provenance();
+        p.params_hash ^= 1;
+        let c = PolicyTable::new(p);
+        assert!(a.merge(&c).is_err(), "params mismatch is a hard error");
+        assert_eq!(a.len(), 0, "a failed merge folds nothing in");
+    }
+
+    #[test]
+    fn save_is_atomic_under_crash_window_and_concurrent_writers() {
+        let path = format!(
+            "{}/gridcollect_atomic_{}.json",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        let rb = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast);
+        let mut t = PolicyTable::new(provenance());
+        t.record(ReduceOp::Sum, 4096, rb, 1.0);
+        t.save(&path).unwrap();
+        // Crash window: a writer that died mid-write leaves only a
+        // garbage temp file; the published table must stay intact.
+        let stale_tmp = format!("{path}.tmp.{}.99999", std::process::id());
+        std::fs::write(&stale_tmp, "{\"torn\": tru").unwrap();
+        assert_eq!(PolicyTable::load(&path).unwrap().len(), 1, "table untouched by torn temp");
+        std::fs::remove_file(&stale_tmp).unwrap();
+        // Concurrent writers racing distinct verdict sets: every
+        // interleaving publishes via rename, so the survivor is some
+        // writer's *complete* table — load() must always parse.
+        std::thread::scope(|s| {
+            for w in 0..4u32 {
+                let path = &path;
+                s.spawn(move || {
+                    let mut t = PolicyTable::new(provenance());
+                    t.record(ReduceOp::Sum, 4096 << w, rb, w as f64);
+                    for _ in 0..8 {
+                        t.save(path).unwrap();
+                        let back = PolicyTable::load(path).unwrap();
+                        assert_eq!(back.len(), 1, "never a torn read");
+                    }
+                });
+            }
+        });
+        let survivor = PolicyTable::load(&path).unwrap();
+        assert_eq!(survivor.len(), 1);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! pooled as the serial loop's. Results land in index order, making the
 //! fan-out's output byte-identical to the serial loop's.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Run `f(state, i)` for every `i in 0..n` and collect the results in
 /// index order. `mk` builds one worker-local state per worker (called
@@ -61,6 +62,108 @@ where
     map_pooled(threads, n, || (), |(), i| f(i))
 }
 
+type Job<S> = Box<dyn FnOnce(&mut S) + Send>;
+
+struct PoolQueue<S> {
+    jobs: VecDeque<Job<S>>,
+    closing: bool,
+}
+
+struct PoolShared<S> {
+    queue: Mutex<PoolQueue<S>>,
+    cv: Condvar,
+}
+
+/// The long-lived sibling of [`map_pooled`]: a bounded pool of workers,
+/// each holding one worker-local state for its whole lifetime (the
+/// `gridd` service hands every worker its own `ExecScratch` arena),
+/// draining submitted jobs from one FIFO queue. Dropping the pool (or
+/// calling [`TaskPool::join`]) closes the queue, drains every job
+/// already submitted, and joins the workers — nothing accepted is ever
+/// silently dropped.
+pub struct TaskPool<S: Send + 'static> {
+    shared: Arc<PoolShared<S>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<S: Send + 'static> TaskPool<S> {
+    /// Spawn `threads` workers (at least one), worker `w` owning the
+    /// state `mk(w)` — called once per worker, on that worker's thread,
+    /// exactly like [`map_pooled`]'s `mk`.
+    pub fn new<G>(threads: usize, mk: G) -> Self
+    where
+        G: Fn(usize) -> S + Send + Sync + 'static,
+    {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolQueue { jobs: VecDeque::new(), closing: false }),
+            cv: Condvar::new(),
+        });
+        let mk = Arc::new(mk);
+        let workers = (0..threads.max(1))
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                let mk = Arc::clone(&mk);
+                std::thread::spawn(move || {
+                    let mut state = mk(w);
+                    loop {
+                        let job = {
+                            let mut q = shared.queue.lock().unwrap();
+                            loop {
+                                if let Some(job) = q.jobs.pop_front() {
+                                    break Some(job);
+                                }
+                                if q.closing {
+                                    break None;
+                                }
+                                q = shared.cv.wait(q).unwrap();
+                            }
+                        };
+                        match job {
+                            Some(job) => job(&mut state),
+                            None => return,
+                        }
+                    }
+                })
+            })
+            .collect();
+        TaskPool { shared, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job for the next idle worker. Jobs submitted after the
+    /// pool started closing are rejected (returns `false`) rather than
+    /// queued where no worker will ever claim them.
+    pub fn submit(&self, job: impl FnOnce(&mut S) + Send + 'static) -> bool {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.closing {
+            return false;
+        }
+        q.jobs.push_back(Box::new(job));
+        drop(q);
+        self.shared.cv.notify_one();
+        true
+    }
+
+    /// Close the queue, drain every already-submitted job, and join the
+    /// workers (also what dropping the pool does).
+    pub fn join(self) {
+        drop(self);
+    }
+}
+
+impl<S: Send + 'static> Drop for TaskPool<S> {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().closing = true;
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +204,61 @@ mod tests {
     fn empty_and_singleton_inputs() {
         assert!(map(8, 0, |i| i).is_empty());
         assert_eq!(map(8, 1, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn task_pool_drains_every_submitted_job_on_join() {
+        use std::sync::atomic::AtomicUsize;
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = TaskPool::new(4, |_w| ());
+        assert_eq!(pool.threads(), 4);
+        for _ in 0..100 {
+            let done = Arc::clone(&done);
+            assert!(pool.submit(move |()| {
+                done.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.join();
+        assert_eq!(done.load(Ordering::Relaxed), 100, "join drains the queue");
+    }
+
+    #[test]
+    fn task_pool_worker_state_is_reused_across_jobs() {
+        // Worker-local state survives between jobs (the whole point:
+        // scratch arenas warm up once per worker, not once per job).
+        let totals = Arc::new(Mutex::new(Vec::new()));
+        let pool = {
+            let totals = Arc::clone(&totals);
+            TaskPool::new(2, move |w| (w, 0usize, Arc::clone(&totals)))
+        };
+        for _ in 0..40 {
+            pool.submit(|state: &mut (usize, usize, Arc<Mutex<Vec<(usize, usize)>>>)| {
+                state.1 += 1;
+                let count = state.1;
+                state.2.lock().unwrap().push((state.0, count));
+            });
+        }
+        pool.join();
+        let log = totals.lock().unwrap();
+        assert_eq!(log.len(), 40);
+        // Per-worker counts are cumulative — proof the state persisted.
+        let max_per_worker: usize =
+            (0..2).map(|w| log.iter().filter(|(lw, _)| *lw == w).count()).max().unwrap();
+        assert!(log.iter().any(|&(_, c)| c == max_per_worker));
+        let sum: usize = (0..2)
+            .map(|w| log.iter().filter(|(lw, _)| *lw == w).map(|&(_, c)| c).max().unwrap_or(0))
+            .sum();
+        assert_eq!(sum, 40, "every job ran on exactly one worker's state");
+    }
+
+    #[test]
+    fn task_pool_spawns_at_least_one_worker() {
+        let pool = TaskPool::new(0, |_w| ());
+        assert_eq!(pool.threads(), 1);
+        let ran = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag = Arc::clone(&ran);
+        pool.submit(move |()| flag.store(true, Ordering::Relaxed));
+        pool.join();
+        assert!(ran.load(Ordering::Relaxed));
     }
 }

@@ -1,0 +1,283 @@
+//! Protocol-level tests for the `gridd` daemon (ISSUE 10): wire
+//! behaviour over Unix sockets and TCP — request validation, library
+//! bit-equivalence, the tune → resolve round trip, wire-matrix
+//! discovery, and provenance-stamped policy write-back.
+//!
+//! Each test spawns its own daemon on a unique socket; global stage
+//! counters are never asserted exactly here (that lives in the
+//! single-test `gridd_singleflight` binary).
+
+use gridcollect::collectives::request::AllreduceProbe;
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::plan::{AlgoPolicy, AllreduceAlgo};
+use gridcollect::service::{proto::JsonObj, Client, Gridd, GriddConfig, GriddHandle, Target};
+use gridcollect::session::{GridSession, PolicyTable};
+use gridcollect::topology::discover::{infer_clustering, synthesize_from_spec, DEFAULT_PROBE_BYTES};
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::json::Value;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static NEXT_SOCK: AtomicUsize = AtomicUsize::new(0);
+
+fn sock_path() -> String {
+    let n = NEXT_SOCK.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir()
+        .join(format!("gridd_svc_{}_{n}.sock", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn spawn_daemon(socket: &str, policy_dir: Option<String>) -> GriddHandle {
+    let cfg = GriddConfig {
+        socket: Some(socket.to_string()),
+        tcp: None,
+        threads: 4,
+        policy_dir,
+    };
+    Gridd::new(cfg).unwrap().spawn()
+}
+
+fn connect(socket: &str) -> Client {
+    Client::connect(&Target::parse(socket)).unwrap()
+}
+
+fn shutdown(socket: &str, handle: GriddHandle) {
+    let doc = connect(socket).request(&JsonObj::new().str("cmd", "shutdown").render()).unwrap();
+    assert_eq!(doc.get("stopping").and_then(|v| v.as_bool()), Some(true));
+    handle.join().unwrap();
+}
+
+fn str_field<'a>(doc: &'a Value, key: &str) -> &'a str {
+    doc.get(key).and_then(|v| v.as_str()).unwrap_or_else(|| panic!("missing '{key}': {doc:?}"))
+}
+
+fn u64_field(doc: &Value, key: &str) -> u64 {
+    doc.get(key).and_then(|v| v.as_u64()).unwrap_or_else(|| panic!("missing '{key}': {doc:?}"))
+}
+
+#[test]
+fn ping_ids_and_unknown_commands() {
+    let socket = sock_path();
+    let handle = spawn_daemon(&socket, None);
+    let mut c = connect(&socket);
+
+    let doc = c.request(r#"{"cmd":"ping","id":41}"#).unwrap();
+    assert_eq!(str_field(&doc, "service"), "gridd");
+    assert_eq!(u64_field(&doc, "id"), 41, "the request id is echoed back");
+
+    let err = c.request(r#"{"cmd":"frobnicate"}"#).unwrap_err().to_string();
+    assert!(err.contains("unknown command"), "got: {err}");
+    let err = c.request("this is not json").unwrap_err().to_string();
+    assert!(err.contains("not valid JSON"), "got: {err}");
+    let err = c.request(r#"{"id":1}"#).unwrap_err().to_string();
+    assert!(err.contains("\"cmd\""), "got: {err}");
+
+    // The connection survives failed requests.
+    let doc = c.request(r#"{"cmd":"ping"}"#).unwrap();
+    assert_eq!(str_field(&doc, "service"), "gridd");
+    drop(c);
+    shutdown(&socket, handle);
+}
+
+#[test]
+fn simulate_matches_the_library_bitwise() {
+    let socket = sock_path();
+    let handle = spawn_daemon(&socket, None);
+    let mut c = connect(&socket);
+
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let policy = AlgoPolicy::uniform(AllreduceAlgo::ReduceBcast);
+    let probe = AllreduceProbe { root: 1, op: ReduceOp::Max, policy, elems: 16384 / 4 };
+    let sim = session.simulate_timing(&probe).unwrap();
+
+    let req = JsonObj::new()
+        .str("cmd", "simulate")
+        .str("spec", "fig1")
+        .str("op", "max")
+        .num_usize("bytes", 16384)
+        .num_usize("root", 1)
+        .str("policy", "rb")
+        .render();
+    let doc = c.request(&req).unwrap();
+    let wire_bits = doc.get("makespan_us").and_then(|v| v.as_f64()).unwrap().to_bits();
+    assert_eq!(wire_bits, sim.makespan_us.to_bits(), "daemon == library, bit for bit");
+    assert_eq!(u64_field(&doc, "wan_msgs"), sim.wan_messages());
+    assert_eq!(str_field(&doc, "policy"), "rb");
+    drop(c);
+    shutdown(&socket, handle);
+}
+
+#[test]
+fn tune_then_resolve_round_trip() {
+    let socket = sock_path();
+    let handle = spawn_daemon(&socket, None);
+    let mut c = connect(&socket);
+
+    let tune = JsonObj::new()
+        .str("cmd", "tune")
+        .str("spec", "fig1")
+        .str("kind", "composition")
+        .str("mode", "exhaustive")
+        .num_usize("bytes", 65536)
+        .render();
+    let verdict = c.request(&tune).unwrap();
+    assert_eq!(str_field(&verdict, "source"), "tuned");
+    assert!(u64_field(&verdict, "probes") >= 2, "a composition sweep probes candidates");
+
+    let resolve =
+        JsonObj::new().str("cmd", "resolve").str("spec", "fig1").num_usize("bytes", 65536);
+    let doc = c.request(&resolve.render()).unwrap();
+    assert_eq!(str_field(&doc, "policy"), str_field(&verdict, "policy"));
+    assert_eq!(doc.get("exact").and_then(|v| v.as_bool()), Some(true));
+
+    // A size the tuner never saw resolves inexactly (nearest verdict).
+    let near = JsonObj::new().str("cmd", "resolve").str("spec", "fig1").num_usize("bytes", 128);
+    let doc = c.request(&near.render()).unwrap();
+    assert_eq!(doc.get("exact").and_then(|v| v.as_bool()), Some(false));
+
+    // The store's verdict also backs `allreduce` timing requests.
+    let all =
+        JsonObj::new().str("cmd", "allreduce").str("spec", "fig1").num_usize("bytes", 65536);
+    let doc = c.request(&all.render()).unwrap();
+    assert_eq!(str_field(&doc, "policy"), str_field(&verdict, "policy"));
+
+    // Stats reflect the shared context the requests routed through.
+    let stats = c.request(&JsonObj::new().str("cmd", "stats").render()).unwrap();
+    assert_eq!(u64_field(&stats, "contexts"), 1);
+    assert_eq!(u64_field(&stats, "policy_entries"), 1);
+    assert!(u64_field(&stats, "plan_misses") >= 1);
+    assert!(u64_field(&stats, "requests") >= 5);
+    assert_eq!(u64_field(&stats, "threads"), 4);
+    assert!(u64_field(&stats, "shards_per_cache") >= 1);
+    drop(c);
+    shutdown(&socket, handle);
+}
+
+#[test]
+fn request_validation_errors() {
+    let socket = sock_path();
+    let handle = spawn_daemon(&socket, None);
+    let mut c = connect(&socket);
+
+    let cases: &[(&str, &str)] = &[
+        (r#"{"cmd":"resolve","bytes":65536}"#, "no tuned verdict"),
+        (r#"{"cmd":"simulate","bytes":65536}"#, "explicit \"policy\""),
+        (r#"{"cmd":"tune","bytes":0}"#, "positive multiple of 4"),
+        (r#"{"cmd":"tune","bytes":6}"#, "positive multiple of 4"),
+        (r#"{"cmd":"tune"}"#, "integer \"bytes\""),
+        (r#"{"cmd":"tune","bytes":65536,"kind":"bogus"}"#, "unknown tune kind"),
+        (r#"{"cmd":"tune","bytes":65536,"strategy":"bogus"}"#, "unknown strategy"),
+        (r#"{"cmd":"tune","bytes":65536,"spec":"bogus"}"#, "fig1|experiment"),
+        (r#"{"cmd":"allreduce","bytes":65536,"op":"xor"}"#, "unknown reduce op"),
+        (r#"{"cmd":"allreduce","bytes":65536,"root":999}"#, "out of range"),
+        (r#"{"cmd":"allreduce","bytes":65536,"policy":"bogus"}"#, "bogus"),
+        (r#"{"cmd":"discover"}"#, "matrix_csv"),
+    ];
+    for (req, needle) in cases {
+        let err = c.request(req).unwrap_err().to_string();
+        assert!(err.contains(needle), "{req} -> {err}");
+    }
+    drop(c);
+    shutdown(&socket, handle);
+}
+
+#[test]
+fn tcp_transport_serves_the_same_protocol() {
+    let daemon = Gridd::new(GriddConfig {
+        socket: None,
+        tcp: Some("127.0.0.1:0".to_string()),
+        threads: 2,
+        policy_dir: None,
+    })
+    .unwrap();
+    let addr = daemon.tcp_addr().expect("bound TCP listener").to_string();
+    let handle = daemon.spawn();
+    let target = Target::parse(&addr);
+    assert!(matches!(target, Target::Tcp(_)), "host:port parses as TCP");
+    let mut c = Client::connect(&target).unwrap();
+    let doc = c.request(&JsonObj::new().str("cmd", "ping").render()).unwrap();
+    assert_eq!(str_field(&doc, "service"), "gridd");
+    let doc = c.request(&JsonObj::new().str("cmd", "shutdown").render()).unwrap();
+    assert_eq!(doc.get("stopping").and_then(|v| v.as_bool()), Some(true));
+    drop(c);
+    handle.join().unwrap();
+}
+
+#[test]
+fn discover_and_tune_on_a_wire_matrix() {
+    let socket = sock_path();
+    let handle = spawn_daemon(&socket, None);
+    let mut c = connect(&socket);
+
+    let m = synthesize_from_spec(&TopologySpec::paper_fig1(), &presets::paper_grid(), 0.0, 1);
+    let local = infer_clustering(&m, DEFAULT_PROBE_BYTES).unwrap();
+    let csv = m.to_tacos_csv();
+
+    let doc = c
+        .request(&JsonObj::new().str("cmd", "discover").str("matrix_csv", &csv).render())
+        .unwrap();
+    assert_eq!(u64_field(&doc, "n_ranks") as usize, local.clustering.n_ranks());
+    assert_eq!(u64_field(&doc, "n_levels") as usize, local.clustering.n_levels());
+    let per_level = doc.get("clusters_per_level").and_then(|v| v.as_array()).unwrap();
+    assert_eq!(per_level.len(), local.clustering.n_levels());
+    for (l, v) in per_level.iter().enumerate() {
+        assert_eq!(v.as_u64().unwrap() as usize, local.clustering.clusters_at(l).len());
+    }
+
+    // The same matrix then names a tuning context: tune + resolve route
+    // through a `matrix:<fingerprint>` context, not a named spec.
+    let tune = JsonObj::new()
+        .str("cmd", "tune")
+        .str("matrix_csv", &csv)
+        .num_usize("bytes", 65536)
+        .render();
+    let verdict = c.request(&tune).unwrap();
+    assert_eq!(str_field(&verdict, "source"), "tuned");
+    let resolve = JsonObj::new()
+        .str("cmd", "resolve")
+        .str("matrix_csv", &csv)
+        .num_usize("bytes", 65536)
+        .render();
+    let doc = c.request(&resolve).unwrap();
+    assert_eq!(str_field(&doc, "policy"), str_field(&verdict, "policy"));
+    assert_eq!(str_field(&doc, "fingerprint"), str_field(&verdict, "fingerprint"));
+    drop(c);
+    shutdown(&socket, handle);
+}
+
+#[test]
+fn persisted_tables_carry_checkable_provenance() {
+    let dir = std::env::temp_dir().join(format!("gridd_svc_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir = dir.to_string_lossy().into_owned();
+    let socket = sock_path();
+    let handle = spawn_daemon(&socket, Some(dir.clone()));
+    let mut c = connect(&socket);
+
+    let tune = JsonObj::new()
+        .str("cmd", "tune")
+        .str("spec", "fig1")
+        .num_usize("bytes", 4096)
+        .render();
+    let verdict = c.request(&tune).unwrap();
+    let fp = str_field(&verdict, "fingerprint").to_string();
+    drop(c);
+    shutdown(&socket, handle);
+
+    let path = format!("{dir}/policy_{fp}_multilevel.json");
+    let table = PolicyTable::load(&path).expect("write-back landed");
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    table.provenance().check_matches(&session.provenance()).unwrap();
+    assert_eq!(table.len(), 1);
+    let best = table.best_for(ReduceOp::Sum, 4096).expect("the tuned point is present");
+    assert_eq!(
+        gridcollect::session::policy_to_token(best),
+        str_field(&verdict, "policy"),
+        "the persisted verdict is the wire verdict"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

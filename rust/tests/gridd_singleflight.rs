@@ -1,0 +1,196 @@
+//! Acceptance test for the `gridd` daemon's headline mechanism (ISSUE
+//! 10): K concurrent identical tune requests coalesce into exactly
+//! **one** ghost sweep (singleflight), warm requests run build- and
+//! allocation-free, and a restarted daemon starts warm from the
+//! persisted policy table (second life answers with zero probes).
+//!
+//! Single `#[test]` in its own binary: the assertions compare global
+//! stage-counter deltas *exactly* against the library tuner, which
+//! would race with any other test in the same process.
+
+use gridcollect::coordinator::tuning;
+use gridcollect::model::presets;
+use gridcollect::netsim::ReduceOp;
+use gridcollect::service::{proto::JsonObj, Client, Gridd, GriddConfig, GriddHandle, Target};
+use gridcollect::session::{policy_to_token, topology_fingerprint, GridSession, PolicyTable};
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::Strategy;
+use gridcollect::util::counters;
+use gridcollect::util::json::Value;
+use std::sync::{Arc, Barrier};
+
+const BYTES: usize = 65536;
+const K: usize = 6;
+
+fn scratch_dir(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("gridd_sf_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+fn spawn(socket: &str, policy_dir: &str) -> GriddHandle {
+    let cfg = GriddConfig {
+        socket: Some(socket.to_string()),
+        tcp: None,
+        threads: 8,
+        policy_dir: Some(policy_dir.to_string()),
+    };
+    // `Gridd::new` binds before `spawn`, so clients can connect (into
+    // the listen backlog) as soon as this returns.
+    Gridd::new(cfg).unwrap().spawn()
+}
+
+fn connect(socket: &str) -> Client {
+    Client::connect(&Target::parse(socket)).unwrap()
+}
+
+fn tune_request() -> String {
+    JsonObj::new().str("cmd", "tune").str("op", "sum").num_usize("bytes", BYTES).render()
+}
+
+fn field<'a>(doc: &'a Value, key: &str) -> &'a str {
+    doc.get(key).and_then(|v| v.as_str()).unwrap_or_else(|| panic!("missing '{key}' in {doc:?}"))
+}
+
+fn shutdown(socket: &str, handle: GriddHandle) {
+    let doc = connect(socket).request(&JsonObj::new().str("cmd", "shutdown").render()).unwrap();
+    assert_eq!(doc.get("stopping").and_then(|v| v.as_bool()), Some(true));
+    handle.join().unwrap();
+}
+
+#[test]
+fn concurrent_tunes_coalesce_and_restarts_start_warm() {
+    // ---- library reference: the exact cost of one boundary sweep ----
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let session = GridSession::new(&comm, presets::paper_grid(), Strategy::Multilevel);
+    let before = counters::snapshot();
+    let reference = tuning::tune_allreduce_boundary(&session.engine(), ReduceOp::Sum, BYTES)
+        .unwrap();
+    let lib = counters::snapshot().since(&before);
+    assert!(lib.sim_runs >= 2, "a boundary sweep probes several candidates");
+    let ref_token = policy_to_token(reference.best);
+    let ref_bits = reference.best_us.to_bits();
+    let fp_hex = format!("{:016x}", topology_fingerprint(&comm));
+
+    // ---- K concurrent identical tunes = exactly one sweep ----
+    let dir = scratch_dir("policies");
+    let socket = format!("{dir}/gridd.sock");
+    let handle = spawn(&socket, &dir);
+    let barrier = Arc::new(Barrier::new(K));
+    let before = counters::snapshot();
+    let clients: Vec<_> = (0..K)
+        .map(|_| {
+            let socket = socket.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut c = connect(&socket);
+                barrier.wait();
+                c.request(&tune_request()).unwrap()
+            })
+        })
+        .collect();
+    let docs: Vec<Value> = clients.into_iter().map(|t| t.join().unwrap()).collect();
+    let flight = counters::snapshot().since(&before);
+
+    // The counter-enforced singleflight contract: the daemon spent
+    // exactly one library sweep on K identical questions.
+    assert_eq!(flight.sim_runs, lib.sim_runs, "K concurrent tunes ran exactly one sweep");
+    assert_eq!(flight.tree_builds, lib.tree_builds);
+    assert_eq!(flight.program_compiles, lib.program_compiles);
+    assert_eq!(flight.schedule_builds, lib.schedule_builds);
+    assert_eq!(flight.payload_allocs, 0, "ghost sweeps allocate no payload data");
+
+    // Exactly one response was tuned live; the rest shared the verdict
+    // (in-flight followers) or read the just-written store.
+    let sources: Vec<&str> = docs.iter().map(|d| field(d, "source")).collect();
+    assert_eq!(sources.iter().filter(|s| **s == "tuned").count(), 1, "sources: {sources:?}");
+    assert!(
+        sources.iter().all(|s| matches!(*s, "tuned" | "coalesced" | "table")),
+        "sources: {sources:?}"
+    );
+    for doc in &docs {
+        assert_eq!(field(doc, "policy"), ref_token, "daemon verdict == library argmin");
+        let bits = doc.get("best_us").and_then(|v| v.as_f64()).unwrap().to_bits();
+        assert_eq!(bits, ref_bits, "verdict timing survives the wire bit-exactly");
+        assert_eq!(field(doc, "fingerprint"), fp_hex);
+        let probes = doc.get("probes").and_then(|v| v.as_u64()).unwrap() as usize;
+        match field(doc, "source") {
+            "table" => assert_eq!(probes, 0),
+            _ => assert_eq!(probes, reference.probes_issued()),
+        }
+    }
+
+    // ---- an already-tuned point never flies again ----
+    let mut warm = connect(&socket);
+    let before = counters::snapshot();
+    let doc = warm.request(&tune_request()).unwrap();
+    let repeat = counters::snapshot().since(&before);
+    assert_eq!(field(&doc, "source"), "table");
+    assert_eq!(doc.get("probes").and_then(|v| v.as_u64()), Some(0));
+    assert_eq!(repeat.sim_runs, 0, "repeat tune runs zero probes");
+
+    // ---- warm timing path: zero builds, zero allocations ----
+    // Prime once on this connection (one connection = one pool worker =
+    // one scratch arena), then the steady state must be pure engine
+    // runs: the tuned plan is already in the context's shared cache.
+    let all_req = JsonObj::new().str("cmd", "allreduce").num_usize("bytes", BYTES).render();
+    let resolve_req = JsonObj::new().str("cmd", "resolve").num_usize("bytes", BYTES).render();
+    let first = warm.request(&all_req).unwrap();
+    let first_bits = first.get("makespan_us").and_then(|v| v.as_f64()).unwrap().to_bits();
+    assert_eq!(field(&first, "policy"), ref_token, "allreduce resolves the tuned policy");
+    let before = counters::snapshot();
+    for _ in 0..5 {
+        let doc = warm.request(&all_req).unwrap();
+        let bits = doc.get("makespan_us").and_then(|v| v.as_f64()).unwrap().to_bits();
+        assert_eq!(bits, first_bits, "warm timings stay bitwise stable");
+    }
+    for _ in 0..3 {
+        let doc = warm.request(&resolve_req).unwrap();
+        assert_eq!(field(&doc, "policy"), ref_token);
+        assert_eq!(doc.get("exact").and_then(|v| v.as_bool()), Some(true));
+    }
+    let steady = counters::snapshot().since(&before);
+    assert_eq!(steady.tree_builds, 0, "warm daemon requests build no trees");
+    assert_eq!(steady.program_compiles, 0, "warm daemon requests compile nothing");
+    assert_eq!(steady.plan_cache_misses, 0, "the tuned plan is served from the shared cache");
+    assert_eq!(steady.payload_allocs, 0, "ghost timing allocates no payload data");
+    assert_eq!(steady.scratch_allocs, 0, "the worker's scratch arena is already sized");
+    assert_eq!(steady.schedule_builds, 0);
+    assert_eq!(steady.sim_runs, 5, "one engine run per allreduce, zero per resolve");
+    drop(warm);
+
+    // The library path agrees bitwise with what the daemon served.
+    let probe = gridcollect::collectives::request::AllreduceProbe {
+        root: 0,
+        op: ReduceOp::Sum,
+        policy: reference.best,
+        elems: BYTES / 4,
+    };
+    let sim = session.simulate_timing(&probe).unwrap();
+    assert_eq!(sim.makespan_us.to_bits(), first_bits, "daemon == library, bit for bit");
+
+    shutdown(&socket, handle);
+
+    // ---- write-back landed as a loadable provenance-stamped table ----
+    let persisted = format!("{dir}/policy_{fp_hex}_multilevel.json");
+    let table = PolicyTable::load(&persisted).unwrap();
+    table.provenance().check_matches(&session.provenance()).unwrap();
+    assert_eq!(table.best_for(ReduceOp::Sum, BYTES), Some(reference.best));
+
+    // ---- second life: a restarted daemon starts warm ----
+    let socket2 = format!("{dir}/gridd2.sock");
+    let handle2 = spawn(&socket2, &dir);
+    let mut c = connect(&socket2);
+    let before = counters::snapshot();
+    let doc = c.request(&tune_request()).unwrap();
+    let restarted = counters::snapshot().since(&before);
+    assert_eq!(field(&doc, "source"), "table", "restarted daemon serves the persisted verdict");
+    assert_eq!(doc.get("probes").and_then(|v| v.as_u64()), Some(0));
+    assert_eq!(field(&doc, "policy"), ref_token);
+    assert_eq!(doc.get("best_us").and_then(|v| v.as_f64()).unwrap().to_bits(), ref_bits);
+    assert_eq!(restarted.sim_runs, 0, "warm restart re-runs zero probes");
+    drop(c);
+    shutdown(&socket2, handle2);
+    let _ = std::fs::remove_dir_all(&dir);
+}

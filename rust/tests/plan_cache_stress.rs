@@ -1,0 +1,131 @@
+//! Contention stress for the sharded [`PlanCache`] (ISSUE 10 satellite):
+//! N threads hammering overlapping keys must agree on `Arc` identity
+//! (one plan instance per key, ever) and leave the cache-local counters
+//! exactly consistent — `hits + misses == lookups` and `misses == len`
+//! even when builders race, because the miss is counted on the actual
+//! insert. Cache-local counters are asserted exactly; the *global*
+//! stage counters are never asserted here (other tests share them).
+
+use gridcollect::netsim::ReduceOp;
+use gridcollect::plan::cache::DEFAULT_SHARDS;
+use gridcollect::plan::{OpKind, PlanCache, PlanKey};
+use gridcollect::topology::{Communicator, TopologySpec};
+use gridcollect::tree::{LevelPolicy, Strategy};
+use std::sync::{Arc, Barrier};
+
+fn key(comm: &Communicator, op: OpKind, root: usize) -> PlanKey {
+    PlanKey {
+        comm_epoch: comm.epoch(),
+        strategy: Strategy::Multilevel,
+        policy: LevelPolicy::paper(),
+        root,
+        op,
+        segments: 1,
+    }
+}
+
+#[test]
+fn contended_lookups_share_one_plan_per_key_with_exact_counters() {
+    const THREADS: usize = 8;
+    const ROUNDS: usize = 10;
+    let comm = Communicator::world(&TopologySpec::paper_experiment());
+    let roots = comm.size().min(4);
+    let cache = Arc::new(PlanCache::new());
+    assert_eq!(cache.n_shards(), DEFAULT_SHARDS);
+
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let workers: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let cache = Arc::clone(&cache);
+            let comm = comm.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let mut witness = None;
+                for _ in 0..ROUNDS {
+                    for root in 0..roots {
+                        let plan =
+                            cache.get_or_build(&comm, key(&comm, OpKind::Bcast, root)).unwrap();
+                        if root == 0 {
+                            witness = Some(plan);
+                        }
+                    }
+                }
+                witness.unwrap()
+            })
+        })
+        .collect();
+    let witnesses: Vec<_> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+
+    // Every thread holds the *same* allocation for the root-0 plan —
+    // racing builders adopted the first insert instead of keeping their
+    // own build.
+    for w in &witnesses[1..] {
+        assert!(Arc::ptr_eq(&witnesses[0], w), "all threads share one plan instance");
+    }
+
+    let lookups = (THREADS * ROUNDS * roots) as u64;
+    assert_eq!(cache.hits() + cache.misses(), lookups, "every lookup is a hit or a miss");
+    assert_eq!(cache.misses(), roots as u64, "one counted miss per distinct key");
+    assert_eq!(cache.len(), roots, "one resident plan per distinct key");
+    assert_eq!(cache.evictions(), 0, "unbounded caches never evict");
+    assert!(cache.footprint_bytes() > 0);
+}
+
+#[test]
+fn bounded_cache_keeps_the_footprint_within_budget() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let ops = [
+        OpKind::Bcast,
+        OpKind::Barrier,
+        OpKind::Gather,
+        OpKind::Scatter,
+        OpKind::Reduce(ReduceOp::Sum),
+        OpKind::Allgather,
+    ];
+
+    // Size the budget from real plans: roomy enough for the largest two,
+    // far too small for all six.
+    let probe = PlanCache::new();
+    let largest = ops
+        .iter()
+        .map(|&op| probe.get_or_build(&comm, key(&comm, op, 0)).unwrap().footprint_bytes())
+        .max()
+        .unwrap();
+    let cap = largest * 2;
+
+    let cache = PlanCache::with_capacity(cap);
+    assert_eq!(cache.capacity(), Some(cap));
+    assert_eq!(cache.n_shards(), 1, "LRU needs one recency order");
+    for &op in &ops {
+        cache.get_or_build(&comm, key(&comm, op, 0)).unwrap();
+        assert!(
+            cache.footprint_bytes() <= cap || cache.len() == 1,
+            "over budget with {} plans resident",
+            cache.len()
+        );
+    }
+    assert_eq!(cache.misses(), ops.len() as u64, "every distinct key built once");
+    assert_eq!(cache.len() as u64 + cache.evictions(), ops.len() as u64);
+    assert!(cache.evictions() >= 1, "six plans cannot fit a two-plan budget");
+    assert_eq!(cache.hits(), 0);
+
+    // The just-inserted plan is the MRU and always survives eviction.
+    cache.get_or_build(&comm, key(&comm, OpKind::Allgather, 0)).unwrap();
+    assert_eq!(cache.hits(), 1, "the MRU plan is still resident");
+}
+
+#[test]
+fn clear_drops_plans_but_counters_keep_running() {
+    let comm = Communicator::world(&TopologySpec::paper_fig1());
+    let cache = PlanCache::new();
+    cache.get_or_build(&comm, key(&comm, OpKind::Bcast, 0)).unwrap();
+    cache.get_or_build(&comm, key(&comm, OpKind::Bcast, 0)).unwrap();
+    assert_eq!((cache.hits(), cache.misses()), (1u64, 1u64));
+    cache.clear();
+    assert!(cache.is_empty());
+    assert_eq!(cache.footprint_bytes(), 0);
+    assert_eq!((cache.hits(), cache.misses()), (1u64, 1u64), "counters survive clear");
+    cache.get_or_build(&comm, key(&comm, OpKind::Bcast, 0)).unwrap();
+    assert_eq!(cache.misses(), 2, "a cleared key rebuilds");
+}
