@@ -76,13 +76,20 @@ struct TuneVerdict {
     from_table: bool,
 }
 
-/// `(topology fingerprint, op name, bytes, tuner kind)` — what makes two
-/// tune requests "the same question".
-type FlightKey = (u64, String, usize, String);
+/// `(context key, op name, bytes, tuner kind, search mode)` — what
+/// makes two tune requests "the same question". The context key (not
+/// just the topology fingerprint) matters: the same topology under a
+/// different strategy, or reached via spec vs. matrix, is a *different*
+/// context with its own policy store, and coalescing across contexts
+/// would hand followers a verdict their own store never recorded.
+type FlightKey = (String, String, usize, String, String);
 
 /// Shared per-`(topology, strategy)` state: every request against the
 /// same context hits the same plan cache and policy store.
 struct Context {
+    /// The `ServerState::contexts` map key this context lives under —
+    /// also the flight-key prefix, so flights never cross contexts.
+    key: String,
     comm: Communicator,
     params: NetworkParams,
     strategy: Strategy,
@@ -184,6 +191,7 @@ impl ServerState {
             None => PolicyTable::new(prov),
         };
         let ctx = Arc::new(Context {
+            key: key.clone(),
             comm,
             params: self.params.clone(),
             strategy,
@@ -308,7 +316,13 @@ fn handle_tune(
         };
         return respond(&v, "table");
     }
-    let key: FlightKey = (ctx.fingerprint, op.name().to_string(), bytes, kind.clone());
+    let mode_token = match mode {
+        None => String::new(),
+        Some(SearchMode::Auto) => "auto".to_string(),
+        Some(SearchMode::Exhaustive) => "exhaustive".to_string(),
+        Some(SearchMode::Beam { width }) => format!("beam:{width}"),
+    };
+    let key: FlightKey = (ctx.key.clone(), op.name().to_string(), bytes, kind.clone(), mode_token);
     let flight_ctx = Arc::clone(&ctx);
     let flight_scratch = Arc::clone(scratch);
     let (outcome, led) = state.flights.run(key, move || {
@@ -338,7 +352,15 @@ fn handle_tune(
             }
         };
         flight_ctx.store.lock().unwrap().record(op, bytes, best, best_us);
-        flight_ctx.persist().map_err(|e| e.to_string())?;
+        // The verdict is already recorded in the in-memory store — a
+        // failed disk write-back must not turn a successful tune into
+        // an error for the leader and every coalesced follower.
+        if let Err(e) = flight_ctx.persist() {
+            eprintln!(
+                "gridd: policy write-back failed for context '{}': {e}",
+                flight_ctx.key
+            );
+        }
         Ok(TuneVerdict { token: policy_to_token(best), best_us, probes, from_table: false })
     });
     let v = outcome.map_err(Error::Service)?;
@@ -556,12 +578,22 @@ impl Stream {
     }
 }
 
+/// A request line (including large inline cost matrices) may be long,
+/// but a client streaming bytes with no newline must not grow the
+/// connection buffer without bound.
+const MAX_LINE_BYTES: usize = 4 << 20;
+
+/// A connection with no traffic for this long is closed so long-lived
+/// idle clients cannot pin pool workers and starve queued connections.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(300);
+
 fn handle_conn(state: &ServerState, worker: usize, mut stream: Stream) {
     if stream.configure().is_err() {
         return;
     }
     let mut buf: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 4096];
+    let mut last_activity = std::time::Instant::now();
     loop {
         while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
             let line: Vec<u8> = buf.drain(..=pos).collect();
@@ -575,12 +607,26 @@ fn handle_conn(state: &ServerState, worker: usize, mut stream: Stream) {
                 return;
             }
         }
+        if buf.len() > MAX_LINE_BYTES {
+            let msg = proto::err_response(
+                None,
+                &format!("request line exceeds {MAX_LINE_BYTES} bytes without a newline"),
+            );
+            let _ = stream.write_line(&msg);
+            return;
+        }
         if state.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        if last_activity.elapsed() >= IDLE_TIMEOUT {
             return;
         }
         match stream.read(&mut chunk) {
             Ok(0) => return,
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                last_activity = std::time::Instant::now();
+            }
             Err(e)
                 if matches!(
                     e.kind(),

@@ -3,8 +3,8 @@
 //! work, with the other `K - 1` blocking on the in-flight entry and
 //! sharing its verdict.
 //!
-//! The `gridd` service keys flights by `(topology fingerprint, op,
-//! bytes, tuner kind)`: a burst of identical `tune` requests then costs
+//! The `gridd` service keys flights by `(context key, op, bytes, tuner
+//! kind, search mode)`: a burst of identical `tune` requests then costs
 //! one ghost sweep total — counter-enforced in
 //! `rust/tests/gridd_singleflight.rs` (`sim_runs` rises by exactly one
 //! sweep's worth, not `K` of them).
@@ -24,6 +24,38 @@ pub type Outcome<V> = std::result::Result<V, String>;
 struct Flight<V> {
     done: Mutex<Option<Outcome<V>>>,
     cv: Condvar,
+}
+
+/// Publishes a flight's outcome on drop — including the unwind path.
+/// Without this, a panicking leader would leave `done` forever unset
+/// (followers block on the condvar for good) and the inflight entry in
+/// the map (every future caller joins the dead flight): one panic would
+/// permanently wedge that tune key in a long-running daemon.
+struct LeaderGuard<'a, K: std::hash::Hash + Eq + Clone, V: Clone> {
+    table: &'a Singleflight<K, V>,
+    flight: &'a Arc<Flight<V>>,
+    key: &'a K,
+    outcome: Option<Outcome<V>>,
+}
+
+impl<K: std::hash::Hash + Eq + Clone, V: Clone> Drop for LeaderGuard<'_, K, V> {
+    fn drop(&mut self) {
+        let outcome = self
+            .outcome
+            .take()
+            .unwrap_or_else(|| Err("singleflight leader panicked mid-flight".to_string()));
+        // Ignore mutex poisoning here: this drop may already be running
+        // on an unwinding thread, and waiters only need the value.
+        let mut done = self.flight.done.lock().unwrap_or_else(|e| e.into_inner());
+        *done = Some(outcome);
+        drop(done);
+        self.flight.cv.notify_all();
+        self.table
+            .inflight
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(self.key);
+    }
 }
 
 /// In-flight call table: one entry per distinct key currently being
@@ -73,10 +105,10 @@ impl<K: std::hash::Hash + Eq + Clone, V: Clone> Singleflight<K, V> {
             }
             return (done.clone().expect("flight completed"), false);
         }
+        let mut guard = LeaderGuard { table: self, flight: &flight, key: &key, outcome: None };
         let outcome = work();
-        *flight.done.lock().unwrap() = Some(outcome.clone());
-        flight.cv.notify_all();
-        self.inflight.lock().unwrap().remove(&key);
+        guard.outcome = Some(outcome.clone());
+        drop(guard);
         (outcome, true)
     }
 
@@ -163,6 +195,52 @@ mod tests {
         assert_eq!(a.unwrap(), 10);
         assert_eq!(b.unwrap(), 20);
         assert_eq!(sf.leaders(), 2);
+    }
+
+    #[test]
+    fn panicking_leader_releases_followers_and_clears_the_key() {
+        let sf = Arc::new(Singleflight::<u8, u8>::new());
+        let barrier = Arc::new(Barrier::new(3));
+        let leader = {
+            let sf = Arc::clone(&sf);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    sf.run(9, || {
+                        barrier.wait();
+                        std::thread::sleep(std::time::Duration::from_millis(30));
+                        panic!("sweep blew up");
+                    })
+                }));
+            })
+        };
+        let followers: Vec<_> = (0..2)
+            .map(|_| {
+                let sf = Arc::clone(&sf);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    sf.run(9, || Ok(1))
+                })
+            })
+            .collect();
+        leader.join().unwrap();
+        for h in followers {
+            let (outcome, led) = h.join().unwrap();
+            // A follower that joined the doomed flight gets the panic
+            // error; one that arrived after cleanup led its own flight.
+            match outcome {
+                Err(msg) => assert!(msg.contains("panicked"), "got: {msg}"),
+                Ok(v) => {
+                    assert!(led);
+                    assert_eq!(v, 1);
+                }
+            }
+        }
+        // The dead flight's entry is gone: a fresh call runs the work.
+        let (out, led) = sf.run(9, || Ok(7));
+        assert!(led);
+        assert_eq!(out.unwrap(), 7);
     }
 
     #[test]

@@ -119,7 +119,19 @@ impl<S: Send + 'static> TaskPool<S> {
                             }
                         };
                         match job {
-                            Some(job) => job(&mut state),
+                            // A panicking job must not kill the worker:
+                            // in a long-lived pool (the gridd service's
+                            // connection pool) each dead worker would
+                            // silently shrink capacity until nothing is
+                            // served. States are worker-owned, so
+                            // AssertUnwindSafe is sound — the next job
+                            // sees whatever the panicked one left, same
+                            // as any other shared scratch.
+                            Some(job) => {
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| job(&mut state)),
+                                );
+                            }
                             None => return,
                         }
                     }
@@ -249,6 +261,23 @@ mod tests {
             .map(|w| log.iter().filter(|(lw, _)| *lw == w).map(|&(_, c)| c).max().unwrap_or(0))
             .sum();
         assert_eq!(sum, 40, "every job ran on exactly one worker's state");
+    }
+
+    #[test]
+    fn task_pool_survives_panicking_jobs() {
+        // A single worker that hits a panicking job must keep serving
+        // the jobs behind it — the pool must not shrink to zero.
+        let done = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let pool = TaskPool::new(1, |_w| ());
+        assert!(pool.submit(|()| panic!("job blew up")));
+        for _ in 0..5 {
+            let done = Arc::clone(&done);
+            assert!(pool.submit(move |()| {
+                done.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.join();
+        assert_eq!(done.load(Ordering::Relaxed), 5, "worker survived the panic");
     }
 
     #[test]

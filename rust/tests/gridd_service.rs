@@ -18,6 +18,7 @@ use gridcollect::topology::{Communicator, TopologySpec};
 use gridcollect::tree::Strategy;
 use gridcollect::util::json::Value;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
 
 static NEXT_SOCK: AtomicUsize = AtomicUsize::new(0);
 
@@ -152,6 +153,66 @@ fn tune_then_resolve_round_trip() {
     assert!(u64_field(&stats, "requests") >= 5);
     assert_eq!(u64_field(&stats, "threads"), 4);
     assert!(u64_field(&stats, "shards_per_cache") >= 1);
+    drop(c);
+    shutdown(&socket, handle);
+}
+
+#[test]
+fn concurrent_tunes_for_distinct_strategies_do_not_coalesce() {
+    let socket = sock_path();
+    let handle = spawn_daemon(&socket, None);
+
+    // Same topology — same fingerprint — but different strategies name
+    // *distinct* contexts with distinct policy stores. A concurrent
+    // burst must not coalesce across them: flight keys carry the full
+    // context key, so each request leads its own flight and records the
+    // verdict in its own store (a fingerprint-only key would hand one
+    // strategy a verdict tuned under the other, and leave the
+    // follower's store empty — a later resolve would then error).
+    let strategies = ["multilevel", "machine"];
+    let barrier = Arc::new(Barrier::new(strategies.len()));
+    let verdicts: Vec<Value> = strategies
+        .iter()
+        .map(|s| {
+            let socket = socket.clone();
+            let barrier = Arc::clone(&barrier);
+            let strategy = s.to_string();
+            std::thread::spawn(move || {
+                let mut c = connect(&socket);
+                let req = JsonObj::new()
+                    .str("cmd", "tune")
+                    .str("spec", "fig1")
+                    .str("strategy", &strategy)
+                    .num_usize("bytes", 65536)
+                    .render();
+                barrier.wait();
+                c.request(&req).unwrap()
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|t| t.join().unwrap())
+        .collect();
+    for v in &verdicts {
+        assert_eq!(str_field(v, "source"), "tuned", "no cross-context coalescing: {v:?}");
+    }
+
+    // Each context holds its own verdict: resolve succeeds on both and
+    // returns what that strategy's tune produced.
+    let mut c = connect(&socket);
+    for (s, verdict) in strategies.iter().zip(&verdicts) {
+        let resolve = JsonObj::new()
+            .str("cmd", "resolve")
+            .str("spec", "fig1")
+            .str("strategy", s)
+            .num_usize("bytes", 65536)
+            .render();
+        let doc = c.request(&resolve).unwrap();
+        assert_eq!(str_field(&doc, "policy"), str_field(verdict, "policy"));
+        assert_eq!(doc.get("exact").and_then(|v| v.as_bool()), Some(true));
+    }
+    let stats = c.request(&JsonObj::new().str("cmd", "stats").render()).unwrap();
+    assert_eq!(u64_field(&stats, "contexts"), 2, "one context per strategy");
     drop(c);
     shutdown(&socket, handle);
 }
